@@ -1,0 +1,92 @@
+//! Planner-service demo: starts the TCP/JSONL service backed by the
+//! AOT-compiled XLA planner, fires a burst of concurrent client
+//! requests through it, and prints the dynamic-batching statistics.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example planner_service
+//! ```
+
+use std::time::Duration;
+
+use ckptfp::coordinator::{serve, Batcher, BatcherConfig, PlannerClient, ServiceConfig};
+use ckptfp::runtime::HloPlanner;
+
+fn main() -> anyhow::Result<()> {
+    let batcher = Batcher::spawn(
+        HloPlanner::open_default,
+        BatcherConfig { max_batch: 64, max_delay: Duration::from_millis(2), ..Default::default() },
+    )?;
+    let handle = serve(batcher.clone(), ServiceConfig { addr: "127.0.0.1:0".into() })?;
+    let addr = handle.addr.to_string();
+    println!("service on {addr}");
+
+    // Concurrent clients: every (N, predictor) combination of the paper.
+    let mut requests = Vec::new();
+    for e in 14..=19 {
+        let n = 1u64 << e;
+        let mu = 125.0 * 365.25 * 86400.0 / n as f64;
+        for (r, p) in [(0.85, 0.82), (0.7, 0.4)] {
+            for window in [0.0, 300.0, 3000.0] {
+                requests.push(format!(
+                    r#"{{"mu": {mu}, "recall": {r}, "precision": {p}, "window": {window}}}"#
+                ));
+            }
+        }
+    }
+    let started = std::time::Instant::now();
+    let responses: Vec<String> = std::thread::scope(|scope| {
+        let handles: Vec<_> = requests
+            .iter()
+            .map(|req| {
+                let addr = addr.clone();
+                scope.spawn(move || -> anyhow::Result<String> {
+                    let mut client = PlannerClient::connect(&addr)?;
+                    let v = client.call(req)?;
+                    anyhow::ensure!(
+                        v.get("ok").and_then(|b| b.as_bool()) == Some(true),
+                        "request failed: {}",
+                        v.to_string()
+                    );
+                    Ok(format!(
+                        "winner={} waste={:.4} T={:.0}s",
+                        v.get("winner").and_then(|s| s.as_str()).unwrap_or("?"),
+                        v.num_or("winner_waste", f64::NAN),
+                        v.num_or("winner_period", f64::NAN),
+                    ))
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap().unwrap()).collect()
+    });
+    let elapsed = started.elapsed();
+
+    for (req, resp) in requests.iter().zip(&responses).take(6) {
+        println!("  {req}\n    -> {resp}");
+    }
+    println!("  ... ({} requests total)", requests.len());
+
+    let stats = batcher.stats();
+    let (p50, p95, p99, n) = batcher.metrics().latency_quantiles();
+    println!(
+        "\n{} requests in {:.1} ms ({:.0} req/s) across {} batches (max batch {})",
+        stats.requests,
+        elapsed.as_secs_f64() * 1e3,
+        stats.requests as f64 / elapsed.as_secs_f64(),
+        stats.batches,
+        stats.max_batch_seen
+    );
+    println!(
+        "latency p50 {:.2} ms | p95 {:.2} ms | p99 {:.2} ms (n={n})",
+        p50 * 1e3,
+        p95 * 1e3,
+        p99 * 1e3
+    );
+
+    // Stats verb over the wire.
+    let mut client = PlannerClient::connect(&addr)?;
+    let stats_json = client.call(r#"{"op": "stats"}"#)?;
+    println!("service stats: {}", stats_json.to_string());
+
+    handle.stop();
+    Ok(())
+}

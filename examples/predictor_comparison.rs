@@ -1,0 +1,65 @@
+//! Predictor shopping guide (Table 3 extension): evaluate every fault
+//! predictor from the literature survey with the analytical planner,
+//! then stress the paper's recall-vs-precision conclusion by simulation.
+//!
+//! ```bash
+//! cargo run --release --example predictor_comparison
+//! ```
+
+use ckptfp::config::{predictor_catalog, Predictor, Scenario};
+use ckptfp::experiments::{sim_waste, ExpOptions};
+use ckptfp::model::{plan, Capping, Params, StrategyKind};
+use ckptfp::report::Table;
+
+fn main() -> anyhow::Result<()> {
+    // --- Table 3, evaluated: what each published predictor is worth. ---
+    println!("=== predictor catalog on the 2^19-proc platform (mu = 125 mn) ===\n");
+    let mut t = Table::new(["predictor", "p", "r", "waste", "vs Young", "winner"]);
+    let base = Scenario::paper(1 << 19, Predictor::none());
+    let py = Params::from_scenario(&base);
+    let young = plan(&py, Capping::Uncapped, false);
+    let wy = young.waste[StrategyKind::Young as usize];
+    for entry in predictor_catalog() {
+        let s = Scenario::paper(1 << 19, entry.predictor(0.0));
+        let p = Params::from_scenario(&s);
+        let best = plan(&p, Capping::Uncapped, false);
+        let gain = 100.0 * (1.0 - (1.0 - wy) / (1.0 - best.winner_waste().min(0.999)));
+        t.row([
+            entry.source.to_string(),
+            format!("{:.0}%", entry.precision * 100.0),
+            format!("{:.0}%", entry.recall * 100.0),
+            format!("{:.3}", best.winner_waste()),
+            format!("{gain:+.0}%"),
+            best.winner.name().to_string(),
+        ]);
+    }
+    print!("{t}");
+    println!("(Young baseline waste: {wy:.3})");
+
+    // --- Recall vs precision, by simulation (the §5.2 conclusion). ---
+    println!("\n=== recall vs precision, simulated (Weibull k=0.7, N=2^19, I=300 s) ===\n");
+    let opts = ExpOptions { reps: 12, ..ExpOptions::default() };
+    let mut t2 = Table::new(["predictor (r, p)", "sim waste", "note"]);
+    let cases = [
+        (0.9, 0.4, "high recall, poor precision"),
+        (0.4, 0.9, "poor recall, high precision"),
+        (0.9, 0.9, "both high"),
+        (0.4, 0.4, "both poor"),
+    ];
+    let mut results = Vec::new();
+    for (r, p, note) in cases {
+        let mut s = Scenario::paper(1 << 19, Predictor::windowed(r, p, 300.0));
+        s.fault_dist = "weibull:0.7".into();
+        let w = sim_waste(&s, StrategyKind::NoCkptI, &opts).mean();
+        results.push((r, p, w));
+        t2.row([format!("r={r}, p={p}"), format!("{w:.3}"), note.to_string()]);
+    }
+    print!("{t2}");
+    let high_recall = results[0].2;
+    let high_precision = results[1].2;
+    println!(
+        "\nhigh-recall waste {high_recall:.3} vs high-precision waste {high_precision:.3} — \
+         recall wins: better safe than sorry."
+    );
+    Ok(())
+}

@@ -1,0 +1,75 @@
+"""AOT lowering: JAX planner -> HLO *text* artifacts for the Rust runtime.
+
+HLO text — not ``.serialize()`` — is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the published ``xla`` 0.1.6 crate) rejects;
+the text parser reassigns ids and round-trips cleanly.
+
+Run via ``make artifacts`` (equivalently ``python -m compile.aot --out-dir
+../artifacts`` from ``python/``).  Never imported at serving time.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+G_DEFAULT = 512
+
+# name -> (entry function, batch size)
+ARTIFACTS = {
+    "planner_b1": (model.plan, 1),
+    "planner_b64": (model.plan, 64),
+    "surface_b16": (model.surfaces, 16),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_artifact(name: str, g: int = G_DEFAULT) -> str:
+    entry, b = ARTIFACTS[name]
+    raw = jax.ShapeDtypeStruct((b, model.NRAW), jnp.float32)
+    u = jax.ShapeDtypeStruct((g,), jnp.float32)
+    return to_hlo_text(jax.jit(entry).lower(raw, u))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--grid", type=int, default=G_DEFAULT)
+    ap.add_argument("--only", nargs="*", help="subset of artifact names")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    names = args.only or list(ARTIFACTS)
+    manifest = []
+    for name in names:
+        text = lower_artifact(name, args.grid)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        _, b = ARTIFACTS[name]
+        entry = "plan" if ARTIFACTS[name][0] is model.plan else "surface"
+        manifest.append(f"{name} entry={entry} b={b} g={args.grid} nraw={model.NRAW}")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.txt')}")
+
+
+if __name__ == "__main__":
+    main()

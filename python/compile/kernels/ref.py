@@ -1,0 +1,57 @@
+"""Pure-jnp oracle for the ``waste_grid`` Pallas kernel.
+
+Straight-line vectorized re-statement of Eqs. (1), (3), (4), (5), (6) of
+the paper, written independently of the kernel's tiling so that a test
+failure localizes to the kernel, not to the math.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .waste_grid import COLS, NSTRAT  # single source of truth for layout
+
+
+def waste_grid_ref(params, u):
+    """f32[B, NPARAM], f32[G] -> f32[B, NSTRAT, G]."""
+    col = lambda name: params[:, COLS[name]][:, None]
+
+    c, dr = col("C"), col("DR")
+    inv_mu, r, p = col("inv_mu"), col("r"), col("p")
+    ef, m = col("Ef"), col("M")
+    inv_mup, inv_munp = col("inv_muP"), col("inv_muNP")
+    frac_reg, i1, tp = col("frac_reg"), col("I1"), col("TP")
+    tmax, r_over_p = col("Tmax"), col("r_over_p")
+
+    t = c + u[None, :] * (tmax - c)
+
+    # Eq. (1), q = 0 (Young / Daly baseline).
+    s0 = c / t + inv_mu * (t / 2.0 + dr)
+    # Eq. (1), q = 1 (exact-date predictions, always trusted).
+    s1 = c / t + inv_mu * ((1.0 - r) * t / 2.0 + dr + (r / p) * c)
+    # Eq. (5): Instant — window treated as an exact prediction at t0.
+    s2 = (
+        c / t
+        + inv_mu
+        * ((1.0 - r) * t / 2.0 + dr + (r / p) * c + r * jnp.minimum(ef, t / 2.0))
+    )
+    # Eq. (6), q = 1: NoCkptI.
+    s3 = (
+        (frac_reg / t + inv_mup) * c
+        + p * inv_mup * ef
+        + frac_reg * inv_munp * t / 2.0
+        + (p * inv_mup + frac_reg * inv_munp) * dr
+    )
+    # Eq. (4), q = 1: WithCkptI with proactive period T_P.
+    s4 = (
+        (frac_reg / t + i1 * inv_mup / tp + inv_mup) * c
+        + p * inv_mup * tp
+        + frac_reg * inv_munp * t / 2.0
+        + (p * inv_mup + frac_reg * inv_munp) * dr
+    )
+    # Eq. (3), q = 1: prediction + preventive migration.
+    s5 = c / t + inv_mu * ((1.0 - r) * (t / 2.0 + dr) + (r / p) * m)
+
+    out = jnp.stack([s0, s1, s2, s3, s4, s5], axis=1)
+    assert out.shape[1] == NSTRAT
+    return out

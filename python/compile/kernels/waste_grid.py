@@ -1,0 +1,152 @@
+"""L1 Pallas kernel: tiled evaluation of the six waste surfaces.
+
+Evaluates, for every configuration ``b`` and period-grid point ``j``,
+the closed-form expected waste of the six checkpointing strategies of
+Aupy, Robert, Vivien & Zaidouni (2012):
+
+    s=0  Young           (q=0, Eq. 1)     s=3  NoCkptI   (q=1, Eq. 6)
+    s=1  ExactPrediction (q=1, Eq. 1)     s=4  WithCkptI (q=1, Eq. 4)
+    s=2  Instant         (q=1, Eq. 5)     s=5  Migration (q=1, Eq. 3)
+
+The kernel consumes a *pre-expanded* parameter matrix (see
+``model.expand_params``) so that it stays pure column algebra — no
+control flow, no transcendental calls; the only non-linear ops are
+div / min.  The period grid is materialized inside the kernel from a
+normalized coordinate vector ``u`` in [0, 1]:
+
+    T(b, j) = C_b + u_j * (Tmax_b - C_b)
+
+so the caller (Rust L3) is free to choose the grid *spacing* (uniform,
+quadratic, ...) at run time without recompiling the artifact.
+
+TPU mapping: the grid dimension G sits on the 128-wide lane axis, the
+batch dimension on sublanes; one (BM=8, GN=128) tile keeps all six
+surfaces resident in VMEM (8*6*128*4 B = 24 KiB).  There is no
+contraction so the MXU is not used; the kernel is VPU/store-bound.
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret-mode lowers to plain HLO that the Rust
+runtime runs as-is.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Expanded-parameter column layout (shared with model.expand_params and ref.py).
+NPARAM = 16
+COLS = {
+    "C": 0,          # checkpoint duration
+    "DR": 1,         # D + R (downtime + recovery)
+    "inv_mu": 2,     # 1 / mu        (platform MTBF)
+    "r": 3,          # predictor recall
+    "p": 4,          # predictor precision
+    "I": 5,          # prediction-window length
+    "Ef": 6,         # E_I^(f): mean in-window fault offset (I/2 for uniform)
+    "M": 7,          # migration duration (s=5)
+    "inv_muP": 8,    # 1 / mu_P  = r / (p mu)
+    "inv_muNP": 9,   # 1 / mu_NP = (1 - r) / mu
+    "frac_reg": 10,  # 1 - I'/mu_P (q=1), clamped to [0, 1]
+    "I1": 11,        # I' at q=1: (1-p) I + p Ef
+    "TP": 12,        # T_P^opt (Eq. 7, snapped so that I / T_P is integral)
+    "Tmax": 13,      # upper end of the period grid (alpha * mu)
+    "r_over_p": 14,  # r / p
+    "pad": 15,
+}
+
+NSTRAT = 6
+DEFAULT_BM = 8    # batch-tile (sublane) size
+DEFAULT_GN = 128  # grid-tile (lane) size
+
+
+def _surfaces_tile(params, u):
+    """Column algebra for one (bm, gn) tile.
+
+    params: f32[bm, NPARAM]; u: f32[gn] -> f32[bm, NSTRAT, gn].
+    Shared subexpressions (1/T, T/2, the s3/s4 common tail) are computed
+    once — this is the whole perf story of the kernel.
+    """
+    col = lambda name: params[:, COLS[name]][:, None]  # (bm, 1)
+
+    c = col("C")
+    dr = col("DR")
+    inv_mu = col("inv_mu")
+    r = col("r")
+    p = col("p")
+    ef = col("Ef")
+    m = col("M")
+    inv_mup = col("inv_muP")
+    inv_munp = col("inv_muNP")
+    frac_reg = col("frac_reg")
+    i1 = col("I1")
+    tp = col("TP")
+    tmax = col("Tmax")
+    r_over_p = col("r_over_p")
+
+    t = c + u[None, :] * (tmax - c)          # (bm, gn) period grid
+    inv_t = 1.0 / t
+    half = 0.5 * t
+
+    c_over_t = c * inv_t
+    # s0: Young (q=0).  Eq. (1) with q=0.
+    s0 = c_over_t + inv_mu * (half + dr)
+    # s1: ExactPrediction (q=1).  Eq. (1) with q=1.
+    s1 = c_over_t + inv_mu * ((1.0 - r) * half + dr + r_over_p * c)
+    # s2: Instant (q=1).  Eq. (5): s1 plus the in-window loss term.
+    s2 = s1 + inv_mu * r * jnp.minimum(ef, half)
+    # s3/s4 share the regular-mode unpredicted-fault + (D+R) tail.
+    reg_np = frac_reg * inv_munp
+    tail = reg_np * half + (p * inv_mup + reg_np) * dr
+    # s3: NoCkptI (q=1).  Eq. (6).
+    s3 = (frac_reg * inv_t + inv_mup) * c + p * inv_mup * ef + tail
+    # s4: WithCkptI (q=1).  Eq. (4) with T_P precomputed per Eq. (7).
+    s4 = (
+        (frac_reg * inv_t + i1 * inv_mup / tp + inv_mup) * c
+        + p * inv_mup * tp
+        + tail
+    )
+    # s5: Migration (q=1).  Eq. (3).
+    s5 = c_over_t + inv_mu * ((1.0 - r) * (half + dr) + r_over_p * m)
+
+    return jnp.stack([s0, s1, s2, s3, s4, s5], axis=1)
+
+
+def _kernel(params_ref, u_ref, out_ref):
+    out_ref[...] = _surfaces_tile(params_ref[...], u_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "gn"))
+def waste_grid(params, u, *, bm: int = DEFAULT_BM, gn: int = DEFAULT_GN):
+    """Evaluate all six waste surfaces on the period grid.
+
+    Args:
+      params: f32[B, NPARAM] expanded parameters (``model.expand_params``).
+      u:      f32[G] normalized grid coordinates in [0, 1].
+      bm, gn: tile sizes; B % bm == 0 and G % gn == 0.
+
+    Returns:
+      f32[B, NSTRAT, G] unmasked waste surfaces (domain capping is L2's job).
+    """
+    b, npar = params.shape
+    (g,) = u.shape
+    if npar != NPARAM:
+        raise ValueError(f"params must have {NPARAM} columns, got {npar}")
+    bm = min(bm, b)
+    gn = min(gn, g)
+    if b % bm or g % gn:
+        raise ValueError(f"B={b} G={g} not divisible by tile ({bm}, {gn})")
+
+    return pl.pallas_call(
+        _kernel,
+        grid=(b // bm, g // gn),
+        in_specs=[
+            pl.BlockSpec((bm, NPARAM), lambda i, j: (i, 0)),
+            pl.BlockSpec((gn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, NSTRAT, gn), lambda i, j: (i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((b, NSTRAT, g), params.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(params, u)

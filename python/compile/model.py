@@ -1,0 +1,158 @@
+"""L2 JAX model: the batched checkpoint planner.
+
+Consumes *raw* user-facing parameters, derives the fault rates of §2.3,
+precomputes the proactive period T_P (Eq. 7) with its integer snapping,
+invokes the L1 Pallas kernel for the six waste surfaces, applies the
+admissible-domain masks of §3.2 / §4.1, and reduces to the optimal
+period / strategy / trust decision.
+
+Raw parameter layout (f32[B, NRAW], shared with the Rust runtime —
+``rust/src/runtime/planner_exec.rs`` must match):
+
+    0: mu     platform MTBF (s)          5: p      predictor precision
+    1: C      checkpoint duration (s)    6: I      prediction-window length (s)
+    2: D      downtime (s)               7: Ef     E_I^(f) (s), I/2 if uniform
+    3: R      recovery duration (s)      8: alpha  period-cap tuning (0.27)
+    4: r      predictor recall           9: M      migration duration (s)
+
+Everything here is lowered once by ``aot.py``; nothing in this module
+runs at serving time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.waste_grid import COLS, NPARAM, NSTRAT, waste_grid
+
+NRAW = 10
+RAW = {"mu": 0, "C": 1, "D": 2, "R": 3, "r": 4, "p": 5, "I": 6, "Ef": 7,
+       "alpha": 8, "M": 9}
+
+_EPS = 1e-6
+# Sentinel for "strategy inadmissible at this grid point".
+_INVALID = jnp.float32(3.0e38)
+
+
+def snap_tp(tp_extr, i_win, c):
+    """Integer-snap T_P so that I / T_P is integral (§4.3).
+
+    Candidates are I/k and I/(k+1) with k = floor(I / T_P^extr); the one
+    minimizing the T_P-dependent waste share  (I1/p) C / T_P + T_P  wins
+    (evaluated through its proxy: both candidates bracket the extremum of
+    a convex function, so comparing the true share at the two candidates
+    is exact).  If both candidates fall below C, T_P = C (paper §4.3).
+    """
+    tp_extr = jnp.maximum(tp_extr, _EPS)
+    k = jnp.floor(i_win / tp_extr)
+    k = jnp.maximum(k, 1.0)
+    cand1 = i_win / k
+    cand2 = i_win / (k + 1.0)
+    # share(T_P) ∝ tp_extr^2 / T_P + T_P  (Eq. 7: extremum at tp_extr).
+    share = lambda tp: tp_extr * tp_extr / jnp.maximum(tp, _EPS) + tp
+    tp = jnp.where(share(cand1) <= share(cand2), cand1, cand2)
+    tp = jnp.where(tp < c, jnp.maximum(cand1, c), tp)
+    # Degenerate windows (I < C): s4 is masked out, keep T_P well-formed.
+    return jnp.maximum(tp, jnp.maximum(c, _EPS))
+
+
+def expand_params(raw):
+    """f32[B, NRAW] -> f32[B, NPARAM] kernel parameter matrix."""
+    g = lambda name: raw[:, RAW[name]]
+    mu, c, d, rr = g("mu"), g("C"), g("D"), g("R")
+    r, p, i_win, ef = g("r"), g("p"), g("I"), g("Ef")
+    alpha, m = g("alpha"), g("M")
+
+    p_safe = jnp.clip(p, _EPS, 1.0)
+    r = jnp.clip(r, 0.0, 1.0)
+    inv_mu = 1.0 / mu
+    inv_mup = r / (p_safe * mu)            # 1/mu_P   (§2.3)
+    inv_munp = (1.0 - r) / mu              # 1/mu_NP  (§2.3)
+    i1 = (1.0 - p) * i_win + p * ef        # I' at q=1 (§4.1)
+    frac_reg = jnp.clip(1.0 - i1 * inv_mup, 0.0, 1.0)
+    tp = snap_tp(jnp.sqrt(jnp.maximum(i1 / p_safe * c, 0.0)), i_win, c)
+    # Shared grid upper end: the widest admissible domain is Young's
+    # [C, alpha*mu] (mu_e <= mu).  Keep the grid non-degenerate.
+    tmax = jnp.maximum(alpha * mu, c * (1.0 + 1e-3))
+
+    out = jnp.zeros((raw.shape[0], NPARAM), raw.dtype)
+    sets = {
+        "C": c, "DR": d + rr, "inv_mu": inv_mu, "r": r, "p": p_safe,
+        "I": i_win, "Ef": ef, "M": m, "inv_muP": inv_mup,
+        "inv_muNP": inv_munp, "frac_reg": frac_reg, "I1": i1, "TP": tp,
+        "Tmax": tmax, "r_over_p": r / p_safe,
+    }
+    for name, val in sets.items():
+        out = out.at[:, COLS[name]].set(val)
+    return out
+
+
+def _grid_and_masks(raw, u):
+    """Period grid T[B,G] and per-strategy admissibility masks [B,S,G]."""
+    g = lambda name: raw[:, RAW[name]][:, None]
+    mu, c, r, p = g("mu"), g("C"), g("r"), g("p")
+    i_win, alpha = g("I"), g("alpha")
+    p_safe = jnp.clip(p, _EPS, 1.0)
+    inv_mue = r / (p_safe * mu) + (1.0 - r) / mu
+    mue = 1.0 / jnp.maximum(inv_mue, _EPS)
+
+    tmax = jnp.maximum(alpha * mu, c * (1.0 + 1e-3))
+    t = c + u[None, :] * (tmax - c)                     # [B, G]
+
+    lim = jnp.stack(
+        [
+            alpha * mu,                 # s0 Young:          T <= alpha mu
+            alpha * mue,                # s1 ExactPrediction T <= alpha mu_e
+            alpha * mue - i_win,        # s2 Instant:   T + I <= alpha mu_e
+            alpha * mue - i_win,        # s3 NoCkptI
+            alpha * mue - i_win,        # s4 WithCkptI
+            alpha * mue,                # s5 Migration
+        ],
+        axis=1,
+    )                                                   # [B, S, 1]
+    valid = t[:, None, :] <= lim
+    # WithCkptI requires at least one proactive checkpoint: C <= I (§4).
+    fits = c <= i_win                                   # [B, 1]
+    s4_only = jnp.arange(NSTRAT)[None, :, None] == 4
+    valid = valid & (~s4_only | fits[:, :, None])
+    return t, valid
+
+
+def masked_surfaces(raw, u):
+    """(waste[B,S,G] with inadmissible points at +INVALID, T[B,G])."""
+    w = waste_grid(expand_params(raw), u)
+    t, valid = _grid_and_masks(raw, u)
+    return jnp.where(valid, w, _INVALID), t
+
+
+def plan(raw, u):
+    """The planner: optimal period & waste per strategy + overall winner.
+
+    Returns (best_waste[B,S], best_T[B,S], win_s i32[B], win_waste[B],
+    win_T[B]).  Wastes are clamped to 1.0 — waste 1 means "no progress"
+    (§3.2), and inadmissible strategies surface as exactly 1.0.
+    """
+    w, t = masked_surfaces(raw, u)
+    j = jnp.argmin(w, axis=2)                                  # [B, S]
+    best_w = jnp.take_along_axis(w, j[:, :, None], axis=2)[..., 0]
+    best_t = jnp.take_along_axis(
+        jnp.broadcast_to(t[:, None, :], w.shape), j[:, :, None], axis=2
+    )[..., 0]
+    best_w = jnp.minimum(best_w, 1.0)
+    win_s = jnp.argmin(best_w, axis=1).astype(jnp.int32)       # [B]
+    win_w = jnp.take_along_axis(best_w, win_s[:, None], axis=1)[:, 0]
+    win_t = jnp.take_along_axis(best_t, win_s[:, None], axis=1)[:, 0]
+    return best_w, best_t, win_s, win_w, win_t
+
+
+def surfaces(raw, u):
+    """Figure-generation entry: masked waste surfaces + the period grid."""
+    w, t = masked_surfaces(raw, u)
+    return jnp.minimum(w, 1.0), t
+
+
+__all__ = [
+    "NRAW", "RAW", "NPARAM", "NSTRAT",
+    "expand_params", "snap_tp", "masked_surfaces", "plan", "surfaces",
+]

@@ -1,0 +1,136 @@
+"""Pallas kernel vs pure-jnp oracle — the core L1 correctness signal."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.ref import waste_grid_ref
+from compile.kernels.waste_grid import COLS, NPARAM, NSTRAT, waste_grid
+
+MIN = 60.0
+
+
+def paper_config(mu_mn=1000.0, C=600.0, D=60.0, R=600.0, r=0.85, p=0.82,
+                 I=300.0, Ef=None, alpha=0.27, M=300.0):
+    """One raw-parameter row in the paper's §5 regime."""
+    if Ef is None:
+        Ef = I / 2.0
+    return [mu_mn * MIN, C, D, R, r, p, I, Ef, alpha, M]
+
+
+def expand(rows):
+    raw = jnp.asarray(np.asarray(rows, dtype=np.float32))
+    return raw, model.expand_params(raw)
+
+
+def grid(g=512):
+    return jnp.linspace(0.0, 1.0, g, dtype=jnp.float32)
+
+
+class TestKernelVsRef:
+    def test_paper_regime(self):
+        _, kp = expand([paper_config(), paper_config(mu_mn=125.0, r=0.7, p=0.4),
+                        paper_config(I=3000.0), paper_config(mu_mn=4000.0)])
+        u = grid()
+        np.testing.assert_allclose(waste_grid(kp, u), waste_grid_ref(kp, u),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_single_row(self):
+        _, kp = expand([paper_config()])
+        u = grid(128)
+        np.testing.assert_allclose(waste_grid(kp, u), waste_grid_ref(kp, u),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_uneven_tiles_rejected(self):
+        _, kp = expand([paper_config()] * 3)
+        with pytest.raises(ValueError, match="not divisible"):
+            waste_grid(kp, grid(128), bm=2)
+
+    def test_bad_param_count_rejected(self):
+        with pytest.raises(ValueError, match="columns"):
+            waste_grid(jnp.zeros((2, NPARAM + 1), jnp.float32), grid(128))
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        b=st.sampled_from([1, 2, 4, 8, 16]),
+        g=st.sampled_from([128, 256, 512]),
+        mu_mn=st.floats(10.0, 10000.0),
+        r=st.floats(0.0, 1.0),
+        p=st.floats(0.05, 1.0),
+        i_win=st.floats(0.0, 6000.0),
+        c=st.floats(30.0, 1800.0),
+    )
+    def test_hypothesis_sweep(self, b, g, mu_mn, r, p, i_win, c):
+        rows = [paper_config(mu_mn=mu_mn * (1 + 0.1 * k), C=c, r=r, p=p, I=i_win)
+                for k in range(b)]
+        _, kp = expand(rows)
+        u = grid(g)
+        np.testing.assert_allclose(waste_grid(kp, u), waste_grid_ref(kp, u),
+                                   rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=8, deadline=None)
+    @given(bm=st.sampled_from([1, 2, 4, 8]), gn=st.sampled_from([32, 64, 128]))
+    def test_tiling_invariance(self, bm, gn):
+        """Result must not depend on the BlockSpec tiling."""
+        _, kp = expand([paper_config(mu_mn=100.0 * (k + 1)) for k in range(8)])
+        u = grid(256)
+        base = waste_grid(kp, u)
+        np.testing.assert_allclose(waste_grid(kp, u, bm=bm, gn=gn), base,
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_dtype_is_f32(self):
+        _, kp = expand([paper_config()])
+        assert waste_grid(kp, grid(128)).dtype == jnp.float32
+
+
+class TestKernelMath:
+    """Spot-checks of the surfaces against hand-computed closed forms."""
+
+    def test_young_closed_form(self):
+        mu, c, d, rr = 60000.0, 600.0, 60.0, 600.0
+        _, kp = expand([paper_config(mu_mn=mu / MIN, C=c, D=d, R=rr)])
+        u = grid(128)
+        w = np.asarray(waste_grid(kp, u))[0, 0]
+        tmax = 0.27 * mu
+        t = c + np.asarray(u) * (tmax - c)
+        expect = c / t + (t / 2 + d + rr) / mu
+        np.testing.assert_allclose(w, expect, rtol=1e-5)
+
+    def test_r_zero_collapses_to_young(self):
+        """With no predictions, s1/s2/s5-with-M=C reduce to Young-like forms."""
+        _, kp = expand([paper_config(r=0.0, I=0.0, M=600.0)])
+        u = grid(128)
+        w = np.asarray(waste_grid(kp, u))[0]
+        np.testing.assert_allclose(w[1], w[0], rtol=1e-6)   # ExactPrediction
+        np.testing.assert_allclose(w[2], w[0], rtol=1e-6)   # Instant
+        np.testing.assert_allclose(w[5], w[0], rtol=1e-6)   # Migration, M=C
+        np.testing.assert_allclose(w[3], w[0], rtol=1e-6)   # NoCkptI
+
+    def test_exact_prediction_beats_young_at_optimum(self):
+        """Good predictor => min waste of s1 below min waste of s0."""
+        _, kp = expand([paper_config(mu_mn=125.0, r=0.85, p=0.82)])
+        w = np.asarray(waste_grid(kp, grid(512)))[0]
+        assert w[1].min() < w[0].min()
+
+    def test_instant_dominated_by_exact(self):
+        """Eq. (5) adds a nonnegative term to Eq. (1) q=1."""
+        _, kp = expand([paper_config(I=3000.0)])
+        w = np.asarray(waste_grid(kp, grid(512)))[0]
+        assert (w[2] >= w[1] - 1e-7).all()
+
+    def test_convexity_in_t(self):
+        """Each waste surface is convex in T (positive second difference)."""
+        _, kp = expand([paper_config()])
+        w = np.asarray(waste_grid(kp, grid(512)))[0]
+        d2 = w[:, 2:] - 2 * w[:, 1:-1] + w[:, :-2]
+        assert (d2 >= -1e-6).all()
+
+    def test_surfaces_positive(self):
+        _, kp = expand([paper_config(mu_mn=m) for m in (125.0, 500.0, 1000.0, 4000.0)])
+        w = np.asarray(waste_grid(kp, grid(512)))
+        assert (w > 0).all()

@@ -1,0 +1,163 @@
+"""L2 planner tests: derived rates, T_P snapping, masking, argmin."""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.waste_grid import COLS
+
+from .test_kernel import MIN, expand, grid, paper_config
+
+
+class TestExpandParams:
+    def test_derived_rates(self):
+        raw, kp = expand([paper_config(mu_mn=1000.0, r=0.7, p=0.4)])
+        mu = 1000.0 * MIN
+        kp = np.asarray(kp)[0]
+        assert math.isclose(kp[COLS["inv_mu"]], 1 / mu, rel_tol=1e-6)
+        assert math.isclose(kp[COLS["inv_muP"]], 0.7 / (0.4 * mu), rel_tol=1e-6)
+        assert math.isclose(kp[COLS["inv_muNP"]], 0.3 / mu, rel_tol=1e-6)
+
+    def test_i1_and_frac_reg(self):
+        raw, kp = expand([paper_config(r=0.85, p=0.82, I=3000.0)])
+        kp = np.asarray(kp)[0]
+        i1 = (1 - 0.82) * 3000 + 0.82 * 1500
+        assert math.isclose(kp[COLS["I1"]], i1, rel_tol=1e-6)
+        assert 0.0 <= kp[COLS["frac_reg"]] <= 1.0
+
+    def test_r_zero_guards(self):
+        _, kp = expand([paper_config(r=0.0)])
+        kp = np.asarray(kp)[0]
+        assert kp[COLS["inv_muP"]] == 0.0
+        assert kp[COLS["frac_reg"]] == 1.0
+
+    def test_tp_divides_window(self):
+        """T_P must partition I into an integer number of periods (§4.3)."""
+        for i_win in (1200.0, 3000.0, 6000.0):
+            _, kp = expand([paper_config(I=i_win, Ef=i_win / 2)])
+            tp = float(np.asarray(kp)[0, COLS["TP"]])
+            k = i_win / tp
+            assert abs(k - round(k)) < 1e-3, (i_win, tp, k)
+            assert tp >= 600.0 - 1e-3  # >= C
+
+    def test_tp_at_least_c_for_small_window(self):
+        _, kp = expand([paper_config(I=300.0)])
+        assert float(np.asarray(kp)[0, COLS["TP"]]) >= 600.0 - 1e-3
+
+    @settings(max_examples=40, deadline=None)
+    @given(i_win=st.floats(700.0, 20000.0), p=st.floats(0.1, 1.0),
+           ef_frac=st.floats(0.1, 1.0))
+    def test_tp_snapping_optimal_among_divisors(self, i_win, p, ef_frac):
+        """Snapped T_P beats every other divisor of I on the Eq.-7 share."""
+        c = 600.0
+        _, kp = expand([paper_config(I=i_win, Ef=i_win * ef_frac, p=p)])
+        kp0 = np.asarray(kp)[0]
+        i1, tp = kp0[COLS["I1"]], kp0[COLS["TP"]]
+        share = lambda t: (i1 / p) * c / t + t
+        best = min(
+            (share(i_win / k) for k in range(1, 64) if i_win / k >= c),
+            default=share(max(i_win, c)),
+        )
+        assert share(tp) <= best * (1 + 1e-4)
+
+
+class TestPlan:
+    def test_young_matches_closed_form(self):
+        """Planner's s0 period ≈ min(alpha*mu, sqrt(2 mu C)) (§3.3)."""
+        for mu_mn in (125.0, 500.0, 1000.0, 4000.0):
+            raw = jnp.asarray([paper_config(mu_mn=mu_mn)], jnp.float32)
+            _, bt, *_ = model.plan(raw, grid(2048))
+            mu = mu_mn * MIN
+            t_y = min(0.27 * mu, max(math.sqrt(2 * mu * 600.0), 600.0))
+            assert abs(float(bt[0, 0]) - t_y) / t_y < 5e-3, (mu_mn, float(bt[0, 0]), t_y)
+
+    def test_exact_matches_case_analysis(self):
+        """s1 period ≈ min(alpha*mu_e, max(sqrt(2 mu C/(1-r)), C))."""
+        for mu_mn, r, p in [(125.0, 0.85, 0.82), (1000.0, 0.7, 0.4), (4000.0, 0.5, 0.5)]:
+            raw = jnp.asarray([paper_config(mu_mn=mu_mn, r=r, p=p)], jnp.float32)
+            _, bt, *_ = model.plan(raw, grid(2048))
+            mu = mu_mn * MIN
+            mue = mu / ((1 - r) + r / p)
+            t_1 = min(0.27 * mue, max(math.sqrt(2 * mu * 600.0 / (1 - r)), 600.0))
+            assert abs(float(bt[0, 1]) - t_1) / t_1 < 5e-3
+
+    def test_prediction_reduces_waste(self):
+        # mu = 1000 mn: the capped domain [C, alpha*mu_e] still contains the
+        # s1 extremum, so trusting a good predictor must beat Young.  (At
+        # mu = 125 mn the cap makes Young win — the paper's §5.1 remark that
+        # the capped model overestimates waste at scale; see test below.)
+        raw = jnp.asarray([paper_config(mu_mn=1000.0)], jnp.float32)
+        bw, *_ = model.plan(raw, grid(512))
+        assert float(bw[0, 1]) < float(bw[0, 0])
+
+    def test_capped_model_overestimates_at_scale(self):
+        """Paper §5.1: at mu = 125 mn the cap alpha*mu_e binds and capped
+        ExactPrediction can exceed capped Young; the planner must therefore
+        report Young (q=0) as the winner among s0/s1."""
+        raw = jnp.asarray([paper_config(mu_mn=125.0)], jnp.float32)
+        bw, *_ = model.plan(raw, grid(512))
+        assert float(bw[0, 1]) > float(bw[0, 0])
+
+    def test_winner_consistency(self):
+        raw = jnp.asarray([paper_config(), paper_config(r=0.0)], jnp.float32)
+        bw, bt, ws, ww, wt = model.plan(raw, grid(512))
+        bw = np.asarray(bw)
+        for b in range(2):
+            s = int(ws[b])
+            assert math.isclose(float(ww[b]), bw[b].min(), rel_tol=1e-6)
+            assert math.isclose(float(ww[b]), bw[b, s], rel_tol=1e-6)
+
+    def test_waste_capped_at_one(self):
+        # Hopeless platform: MTBF shorter than the checkpoint itself.
+        raw = jnp.asarray([paper_config(mu_mn=5.0)], jnp.float32)
+        bw, *_ = model.plan(raw, grid(512))
+        assert (np.asarray(bw) <= 1.0 + 1e-6).all()
+
+    def test_withckpt_masked_when_window_small(self):
+        raw = jnp.asarray([paper_config(I=300.0)], jnp.float32)  # I < C
+        bw, *_ = model.plan(raw, grid(512))
+        assert float(bw[0, 4]) == 1.0
+
+    def test_batch_order_independence(self):
+        rows = [paper_config(mu_mn=m) for m in (125.0, 250.0, 500.0, 1000.0)]
+        u = grid(512)
+        fwd = model.plan(jnp.asarray(rows, jnp.float32), u)
+        rev = model.plan(jnp.asarray(rows[::-1], jnp.float32), u)
+        np.testing.assert_allclose(np.asarray(fwd[0]), np.asarray(rev[0])[::-1],
+                                   rtol=1e-6)
+
+    @settings(max_examples=20, deadline=None)
+    @given(mu_mn=st.floats(50.0, 8000.0), r=st.floats(0.0, 0.99),
+           p=st.floats(0.1, 0.99))
+    def test_q_choice_endpoint(self, mu_mn, r, p):
+        """WASTE(q) is affine in q (§3.3) => trusted (q=1) strategies either
+        beat Young or Young wins; no interior q can beat both endpoints."""
+        raw = jnp.asarray([paper_config(mu_mn=mu_mn, r=r, p=p)], jnp.float32)
+        bw, *_ = model.plan(raw, grid(512))
+        bw = np.asarray(bw)[0]
+        # Winner is one of the endpoints by construction; sanity: all wastes
+        # well-formed.
+        assert (bw > 0).all() and (bw <= 1.0 + 1e-6).all()
+
+
+class TestSurfaces:
+    def test_masking_applied(self):
+        raw = jnp.asarray([paper_config(mu_mn=125.0, I=3000.0)], jnp.float32)
+        w, t = model.surfaces(raw, grid(512))
+        w, t = np.asarray(w), np.asarray(t)
+        mu = 125.0 * MIN
+        mue = mu / ((1 - 0.85) + 0.85 / 0.82)
+        lim = 0.27 * mue - 3000.0
+        over = t[0] > lim
+        # Window strategies are clamped to 1.0 beyond their domain.
+        assert (w[0, 2, over] == 1.0).all()
+
+    def test_grid_endpoints(self):
+        raw = jnp.asarray([paper_config(mu_mn=1000.0)], jnp.float32)
+        _, t = model.surfaces(raw, grid(512))
+        t = np.asarray(t)[0]
+        assert math.isclose(t[0], 600.0, rel_tol=1e-6)
+        assert math.isclose(t[-1], 0.27 * 1000.0 * MIN, rel_tol=1e-5)

@@ -1,0 +1,79 @@
+//! Paper-reproduction bench harness (`cargo bench --bench paper`).
+//!
+//! One target per table AND figure of §5:
+//!   fig4 fig5 fig6 fig7   waste vs N (both predictors × false-pred law)
+//!   fig8 fig9 fig10 fig11 recall/precision sweeps
+//!   tab1 tab2             execution-time tables (Weibull 0.7 / 0.5)
+//!   tab3                  predictor catalog
+//!
+//! ```bash
+//! cargo bench --bench paper                  # everything, quick reps
+//! cargo bench --bench paper -- fig4          # one experiment
+//! cargo bench --bench paper -- tab1 --reps 100 --best-period
+//! ```
+//!
+//! Output: the paper-format series/tables on stdout plus CSV dumps in
+//! results/. Absolute numbers come from this simulator, not the
+//! authors' testbed; EXPERIMENTS.md records the shape comparison.
+
+use ckptfp::cli::Args;
+use ckptfp::experiments::{all_experiments, run_experiment, ExpOptions};
+
+fn main() {
+    // `cargo bench -- <args>` also passes "--bench"; drop harness noise.
+    let raw: Vec<String> = std::env::args()
+        .skip(1)
+        .filter(|a| a != "--bench" && !a.starts_with("--save-baseline"))
+        .collect();
+    let mut args = match Args::parse(raw) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e:#}");
+            std::process::exit(2);
+        }
+    };
+    let mut opts = ExpOptions::quick();
+    opts.reps = args.get("reps", 16).unwrap_or(16);
+    opts.workers = args.get("workers", opts.workers).unwrap_or(opts.workers);
+    opts.best_period = args.switch("best-period");
+    opts.bp_reps = args.get("bp-reps", opts.bp_reps).unwrap_or(opts.bp_reps);
+    opts.bp_candidates = args.get("bp-candidates", opts.bp_candidates).unwrap_or(opts.bp_candidates);
+    let out_dir = args.get_str("out", "results");
+
+    let ids: Vec<String> = {
+        let mut ids: Vec<String> = args
+            .positional()
+            .iter()
+            .cloned()
+            .chain(args.command().map(String::from))
+            .collect();
+        if ids.is_empty() || ids == ["all"] {
+            ids = all_experiments().into_iter().map(String::from).collect();
+        }
+        ids
+    };
+
+    let mut failures = 0;
+    for id in &ids {
+        println!("==================================================================");
+        println!("== {id} (reps = {}, best_period = {})", opts.reps, opts.best_period);
+        println!("==================================================================");
+        let t0 = std::time::Instant::now();
+        match run_experiment(id, &opts) {
+            Ok(result) => {
+                print!("{}", result.render());
+                if let Err(e) = result.write_csvs(std::path::Path::new(&out_dir)) {
+                    eprintln!("[{id}] csv write failed: {e:#}");
+                }
+                println!("[{id}] completed in {:.1}s", t0.elapsed().as_secs_f64());
+            }
+            Err(e) => {
+                eprintln!("[{id}] FAILED: {e:#}");
+                failures += 1;
+            }
+        }
+    }
+    if failures > 0 {
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,189 @@
+//! Performance benches (`cargo bench --bench perf`): the §Perf numbers
+//! of EXPERIMENTS.md.
+//!
+//!   planner   AOT XLA planner latency/throughput, B = 1 vs B = 64
+//!   batcher   dynamic batcher under concurrent clients
+//!   sim       simulation engine event throughput
+//!   pool      worker-pool scaling
+//!   model     closed-form planner throughput (the non-AOT baseline)
+
+use std::time::Instant;
+
+use ckptfp::config::{paper_proc_counts, predictor_yu, Scenario};
+use ckptfp::coordinator::{run_parallel, Batcher, BatcherConfig};
+use ckptfp::model::{plan, Capping, Params, StrategyKind};
+use ckptfp::runtime::HloPlanner;
+use ckptfp::sim::simulate_once;
+use ckptfp::strategies::spec_for;
+
+fn time<F: FnMut()>(label: &str, iters: usize, mut f: F) -> f64 {
+    // Warmup.
+    f();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    println!("  {label:<44} {:>10.3} ms/iter", per * 1e3);
+    per
+}
+
+fn params_batch(n: usize) -> Vec<Params> {
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let procs = paper_proc_counts()[i % 6];
+        let s = Scenario::paper(procs, predictor_yu(300.0));
+        out.push(Params::from_scenario(&s));
+    }
+    out
+}
+
+fn bench_planner() {
+    println!("== planner (AOT XLA via PJRT) ==");
+    let mut planner = match HloPlanner::open_default() {
+        Ok(p) => p,
+        Err(e) => {
+            println!("  skipped: {e}");
+            return;
+        }
+    };
+    let one = params_batch(1);
+    let sixty_four = params_batch(64);
+    let t1 = time("plan_batch B=1", 50, || {
+        planner.plan_batch(&one).expect("plan");
+    });
+    let t64 = time("plan_batch B=64", 50, || {
+        planner.plan_batch(&sixty_four).expect("plan");
+    });
+    println!(
+        "  batching efficiency: {:.1}x per-config speedup (B=64 vs B=1)",
+        t1 / (t64 / 64.0)
+    );
+    println!("  per-config latency at B=64: {:.1} us", t64 / 64.0 * 1e6);
+}
+
+fn bench_batcher() {
+    println!("== dynamic batcher (concurrent clients) ==");
+    let batcher = match Batcher::spawn(
+        HloPlanner::open_default,
+        BatcherConfig { max_batch: 64, max_delay: std::time::Duration::from_millis(2), ..Default::default() },
+    ) {
+        Ok(b) => b,
+        Err(e) => {
+            println!("  skipped: {e}");
+            return;
+        }
+    };
+    for clients in [1usize, 8, 64] {
+        let reqs = params_batch(clients);
+        let t0 = Instant::now();
+        let rounds = 20;
+        for _ in 0..rounds {
+            std::thread::scope(|s| {
+                for p in &reqs {
+                    let b = batcher.clone();
+                    s.spawn(move || b.plan(*p).expect("plan"));
+                }
+            });
+        }
+        let total = (clients * rounds) as f64;
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "  {clients:>3} concurrent clients: {:>8.0} plans/s  ({:.2} ms/plan observed)",
+            total / dt,
+            dt / rounds as f64 * 1e3
+        );
+    }
+    let stats = batcher.stats();
+    println!(
+        "  batches formed: {} for {} requests (max batch {})",
+        stats.batches, stats.requests, stats.max_batch_seen
+    );
+    batcher.shutdown();
+}
+
+fn bench_sim() {
+    println!("== simulation engine ==");
+    for (label, n, dist) in [
+        ("N=2^16 weibull:0.7", 1u64 << 16, "weibull:0.7"),
+        ("N=2^19 weibull:0.7", 1u64 << 19, "weibull:0.7"),
+        ("N=2^19 exp", 1u64 << 19, "exp"),
+    ] {
+        let mut s = Scenario::paper(n, predictor_yu(300.0));
+        s.fault_dist = dist.into();
+        let spec = spec_for(StrategyKind::NoCkptI, &s, Capping::Uncapped);
+        let mut segments = 0u64;
+        let mut rep = 0u64;
+        let t0 = Instant::now();
+        while t0.elapsed().as_secs_f64() < 1.0 {
+            let o = simulate_once(&s, &spec, rep).expect("sim");
+            segments += o.n_segments;
+            rep += 1;
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "  {label:<24} {:>6.2} M segments/s  ({:.1} sim-years/s, {} runs)",
+            segments as f64 / dt / 1e6,
+            rep as f64 * s.work / (365.25 * 86400.0) / dt,
+            rep
+        );
+    }
+}
+
+fn bench_pool() {
+    println!("== worker pool scaling (fixed total work) ==");
+    let s = {
+        let mut s = Scenario::paper(1 << 19, predictor_yu(300.0));
+        s.fault_dist = "weibull:0.7".into();
+        s
+    };
+    let spec = spec_for(StrategyKind::NoCkptI, &s, Capping::Uncapped);
+    let reps: Vec<u64> = (0..2048).collect();
+    let mut base = 0.0;
+    for workers in [1usize, 2, 4, 8] {
+        let t0 = Instant::now();
+        let _ = run_parallel(reps.clone(), workers, |rep| {
+            simulate_once(&s, &spec, *rep).expect("sim").waste()
+        });
+        let dt = t0.elapsed().as_secs_f64();
+        if workers == 1 {
+            base = dt;
+        }
+        println!(
+            "  {workers:>2} workers: {dt:>6.2}s  speedup {:>4.2}x  efficiency {:>4.0}%",
+            base / dt,
+            base / dt / workers as f64 * 100.0
+        );
+    }
+}
+
+fn bench_model() {
+    println!("== closed-form planner (Rust baseline) ==");
+    let batch = params_batch(64);
+    time("plan() x64 closed-form", 200, || {
+        for p in &batch {
+            std::hint::black_box(plan(p, Capping::Capped, false));
+        }
+    });
+}
+
+fn main() {
+    let which: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with("--")).collect();
+    let run = |name: &str| which.is_empty() || which.iter().any(|w| w == name);
+    println!("ckptfp perf bench (workers available: {})", ckptfp::coordinator::available_workers());
+    if run("planner") {
+        bench_planner();
+    }
+    if run("batcher") {
+        bench_batcher();
+    }
+    if run("sim") {
+        bench_sim();
+    }
+    if run("pool") {
+        bench_pool();
+    }
+    if run("model") {
+        bench_model();
+    }
+}

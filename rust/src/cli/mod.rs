@@ -1,0 +1,161 @@
+//! Command-line argument parsing (substrate: no `clap` offline).
+//!
+//! Conventions: `binary <command> [positional...] [--flag value]
+//! [--switch]`. Flags may be `--key value` or `--key=value`; switches
+//! are bare `--key`. Unknown flags are an error at `finish()` so typos
+//! do not silently fall back to defaults.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    command: Option<String>,
+    positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    switches: BTreeSet<String>,
+    consumed: BTreeSet<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (tests) — the first item is the
+    /// first *argument*, not the binary name.
+    pub fn parse<I, S>(items: I) -> anyhow::Result<Args>
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let mut command = None;
+        let mut positional = Vec::new();
+        let mut flags = BTreeMap::new();
+        let mut switches = BTreeSet::new();
+        let mut iter = items.into_iter().map(Into::into).peekable();
+        while let Some(item) = iter.next() {
+            if let Some(name) = item.strip_prefix("--") {
+                anyhow::ensure!(!name.is_empty(), "bare '--' is not supported");
+                if let Some((k, v)) = name.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    flags.insert(name.to_string(), iter.next().unwrap());
+                } else {
+                    switches.insert(name.to_string());
+                }
+            } else if command.is_none() {
+                command = Some(item);
+            } else {
+                positional.push(item);
+            }
+        }
+        Ok(Args { command, positional, flags, switches, consumed: BTreeSet::new() })
+    }
+
+    pub fn from_env() -> anyhow::Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn command(&self) -> Option<&str> {
+        self.command.as_deref()
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Typed flag lookup with default.
+    pub fn get<T: std::str::FromStr>(&mut self, key: &str, default: T) -> anyhow::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.consumed.insert(key.to_string());
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(raw) => raw
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{key} {raw}: {e}")),
+        }
+    }
+
+    /// Optional typed flag.
+    pub fn get_opt<T: std::str::FromStr>(&mut self, key: &str) -> anyhow::Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.consumed.insert(key.to_string());
+        match self.flags.get(key) {
+            None => Ok(None),
+            Some(raw) => raw
+                .parse()
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("--{key} {raw}: {e}")),
+        }
+    }
+
+    /// String flag with default.
+    pub fn get_str(&mut self, key: &str, default: &str) -> String {
+        self.consumed.insert(key.to_string());
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Boolean switch (present/absent).
+    pub fn switch(&mut self, key: &str) -> bool {
+        self.consumed.insert(key.to_string());
+        self.switches.contains(key)
+    }
+
+    /// Error on unconsumed flags — call after all lookups.
+    pub fn finish(&self) -> anyhow::Result<()> {
+        let unknown: Vec<&String> = self
+            .flags
+            .keys()
+            .chain(self.switches.iter())
+            .filter(|k| !self.consumed.contains(k.as_str()))
+            .collect();
+        anyhow::ensure!(unknown.is_empty(), "unknown flags: {unknown:?}");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn commands_and_flags() {
+        let mut a = Args::parse(["simulate", "tracefile", "--reps", "40", "--verbose",
+                                 "--dist=weibull:0.7"]).unwrap();
+        assert_eq!(a.command(), Some("simulate"));
+        assert_eq!(a.positional(), &["tracefile".to_string()]);
+        assert_eq!(a.get::<u64>("reps", 10).unwrap(), 40);
+        assert_eq!(a.get_str("dist", "exp"), "weibull:0.7");
+        assert!(a.switch("verbose"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn defaults() {
+        let mut a = Args::parse(["plan"]).unwrap();
+        assert_eq!(a.get::<f64>("recall", 0.85).unwrap(), 0.85);
+        assert!(!a.switch("json"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn unknown_flags_rejected() {
+        let mut a = Args::parse(["plan", "--tyop", "3"]).unwrap();
+        let _ = a.get::<u64>("reps", 1).unwrap();
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn bad_value_type() {
+        let mut a = Args::parse(["plan", "--reps", "many"]).unwrap();
+        assert!(a.get::<u64>("reps", 1).is_err());
+    }
+
+    #[test]
+    fn flag_value_looks_positional() {
+        // "--out file.csv" consumes the next token as the value.
+        let mut a = Args::parse(["report", "--out", "file.csv", "extra"]).unwrap();
+        assert_eq!(a.get_str("out", ""), "file.csv");
+        assert_eq!(a.positional(), &["extra".to_string()]);
+    }
+}

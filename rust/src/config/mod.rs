@@ -1,0 +1,9 @@
+//! Typed experiment configuration: platform, predictor and scenario,
+//! plus a minimal TOML-subset loader and the paper's §5 presets.
+
+mod presets;
+pub mod toml;
+mod types;
+
+pub use presets::*;
+pub use types::*;

@@ -1,0 +1,116 @@
+//! Canonical parameterizations: the paper's two literature predictors
+//! (§5.1) and the full Table 3 predictor catalog (§6).
+
+use super::{Predictor, Scenario};
+
+/// The accurate BlueGene/P predictor of Yu, Zheng, Lan & Coghlan [12]:
+/// p = 0.82, r = 0.85.
+pub fn predictor_yu(window: f64) -> Predictor {
+    Predictor::windowed(0.85, 0.82, window)
+}
+
+/// The location/lead-time predictor of Zheng, Lan, Gupta, Coghlan &
+/// Beckman [14]: p = 0.4, r = 0.7.
+pub fn predictor_zheng(window: f64) -> Predictor {
+    Predictor::windowed(0.7, 0.4, window)
+}
+
+/// One row of the paper's Table 3 (comparative predictor survey).
+#[derive(Debug, Clone)]
+pub struct CatalogEntry {
+    pub source: &'static str,
+    pub lead_time: Option<f64>,
+    pub precision: f64,
+    pub recall: f64,
+    /// Prediction window (s); None = exact-date predictor.
+    pub window: Option<f64>,
+}
+
+impl CatalogEntry {
+    pub fn predictor(&self, default_window: f64) -> Predictor {
+        match self.window {
+            Some(w) if w > 0.0 => Predictor::windowed(self.recall, self.precision, w),
+            Some(_) | None => {
+                if default_window > 0.0 {
+                    Predictor::windowed(self.recall, self.precision, default_window)
+                } else {
+                    Predictor::exact(self.recall, self.precision)
+                }
+            }
+        }
+    }
+}
+
+/// Table 3 of the paper, verbatim. Window "yes (size unknown)" entries
+/// carry `Some(0.0)` and inherit the caller's default window.
+pub fn predictor_catalog() -> Vec<CatalogEntry> {
+    use crate::util::units::HOUR;
+    vec![
+        CatalogEntry { source: "[14] Zheng et al. (lead 300s)", lead_time: Some(300.0), precision: 0.40, recall: 0.70, window: None },
+        CatalogEntry { source: "[14] Zheng et al. (lead 600s)", lead_time: Some(600.0), precision: 0.35, recall: 0.60, window: None },
+        CatalogEntry { source: "[12] Yu et al. (lead 2h)", lead_time: Some(2.0 * HOUR), precision: 0.648, recall: 0.652, window: Some(0.0) },
+        CatalogEntry { source: "[12] Yu et al. (lead 0)", lead_time: Some(0.0), precision: 0.823, recall: 0.854, window: Some(0.0) },
+        CatalogEntry { source: "[6] Gainaru et al.", lead_time: Some(32.0), precision: 0.93, recall: 0.43, window: None },
+        CatalogEntry { source: "[5] Fulp et al.", lead_time: None, precision: 0.70, recall: 0.75, window: None },
+        CatalogEntry { source: "[9] Liang et al. (1h)", lead_time: None, precision: 0.20, recall: 0.30, window: Some(1.0 * HOUR) },
+        CatalogEntry { source: "[9] Liang et al. (4h)", lead_time: None, precision: 0.30, recall: 0.75, window: Some(4.0 * HOUR) },
+        CatalogEntry { source: "[9] Liang et al. (6h/90)", lead_time: None, precision: 0.40, recall: 0.90, window: Some(6.0 * HOUR) },
+        CatalogEntry { source: "[9] Liang et al. (6h/30)", lead_time: None, precision: 0.50, recall: 0.30, window: Some(6.0 * HOUR) },
+        CatalogEntry { source: "[9] Liang et al. (12h)", lead_time: None, precision: 0.60, recall: 0.85, window: Some(12.0 * HOUR) },
+    ]
+}
+
+/// Platform sizes swept by every §5 figure: N = 2^14 .. 2^19.
+pub fn paper_proc_counts() -> Vec<u64> {
+    (14..=19).map(|e| 1u64 << e).collect()
+}
+
+/// Scenario matrix of §5.1: both predictors × both windows.
+pub fn paper_scenarios(n_procs: u64) -> Vec<(String, Scenario)> {
+    let mut out = Vec::new();
+    for (pname, pred) in [("yu", 0), ("zheng", 1)] {
+        for window in [300.0, 3000.0] {
+            let predictor = if pred == 0 { predictor_yu(window) } else { predictor_zheng(window) };
+            let scenario = Scenario::paper(n_procs, predictor);
+            out.push((format!("{pname}-I{window}"), scenario));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_matches_paper_rows() {
+        let cat = predictor_catalog();
+        assert_eq!(cat.len(), 11);
+        assert_eq!(cat[0].precision, 0.40);
+        assert_eq!(cat[0].recall, 0.70);
+        assert_eq!(cat[10].window, Some(12.0 * 3600.0));
+    }
+
+    #[test]
+    fn catalog_predictors_validate() {
+        for e in predictor_catalog() {
+            e.predictor(300.0).validate().unwrap();
+            e.predictor(0.0).validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn proc_counts() {
+        let n = paper_proc_counts();
+        assert_eq!(n.first(), Some(&16384));
+        assert_eq!(n.last(), Some(&524288));
+        assert_eq!(n.len(), 6);
+    }
+
+    #[test]
+    fn scenarios_validate() {
+        for (_, s) in paper_scenarios(1 << 16) {
+            s.validate().unwrap();
+        }
+    }
+}

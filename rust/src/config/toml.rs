@@ -1,0 +1,233 @@
+//! Minimal TOML-subset parser (substrate: no `toml` crate offline).
+//!
+//! Supported: `[section]` / `[a.b]` headers, `key = value` with string,
+//! float/int, and bool values, `#` comments, blank lines. That covers
+//! every config file the framework ships; anything else is an error
+//! rather than silently misparsed.
+
+use std::collections::BTreeMap;
+
+/// Flat view: `"section.key" -> raw value`.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    values: BTreeMap<String, Value>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+}
+
+impl Table {
+    pub fn parse(input: &str) -> anyhow::Result<Table> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in input.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow::anyhow!("line {}: unterminated section", lineno + 1))?
+                    .trim();
+                anyhow::ensure!(!name.is_empty(), "line {}: empty section name", lineno + 1);
+                section = name.to_string();
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("line {}: expected key = value", lineno + 1))?;
+            let key = key.trim();
+            anyhow::ensure!(!key.is_empty(), "line {}: empty key", lineno + 1);
+            let full = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+            values.insert(full, parse_value(val.trim(), lineno + 1)?);
+        }
+        Ok(Table { values })
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Table> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    pub fn num(&self, key: &str) -> Option<f64> {
+        match self.get(key)? {
+            Value::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn str(&self, key: &str) -> Option<&str> {
+        match self.get(key)? {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn bool(&self, key: &str) -> Option<bool> {
+        match self.get(key)? {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(String::as_str)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside quoted strings must survive.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(raw: &str, lineno: usize) -> anyhow::Result<Value> {
+    if let Some(rest) = raw.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| anyhow::anyhow!("line {lineno}: unterminated string"))?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match raw {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    raw.parse::<f64>()
+        .map(Value::Num)
+        .map_err(|_| anyhow::anyhow!("line {lineno}: cannot parse value '{raw}'"))
+}
+
+/// Build a [`crate::config::Scenario`] from a config table, starting
+/// from the paper preset and overriding any provided key.
+pub fn scenario_from_table(t: &Table) -> anyhow::Result<crate::config::Scenario> {
+    use crate::config::{Predictor, Scenario};
+    let n = t.num("platform.n_procs").unwrap_or((1 << 16) as f64) as u64;
+    let window = t.num("predictor.window").unwrap_or(0.0);
+    let recall = t.num("predictor.recall").unwrap_or(0.0);
+    let precision = t.num("predictor.precision").unwrap_or(1.0);
+    let predictor = if window > 0.0 {
+        Predictor::windowed(recall, precision, window)
+    } else {
+        Predictor::exact(recall, precision)
+    };
+    let mut s = Scenario::paper(n, predictor);
+    if let Some(x) = t.num("platform.mu_ind_years") {
+        s.platform.mu_ind = x * crate::util::units::YEAR;
+    }
+    if let Some(x) = t.num("platform.c") {
+        s.platform.c = x;
+    }
+    if let Some(x) = t.num("platform.d") {
+        s.platform.d = x;
+    }
+    if let Some(x) = t.num("platform.r") {
+        s.platform.r = x;
+    }
+    if let Some(x) = t.num("job.work") {
+        s.work = x;
+    }
+    if let Some(x) = t.num("model.alpha") {
+        s.alpha = x;
+    }
+    if let Some(x) = t.str("faults.dist") {
+        s.fault_dist = x.to_string();
+    }
+    if let Some(x) = t.str("faults.false_pred_dist") {
+        s.false_pred_dist = x.to_string();
+    }
+    if let Some(x) = t.num("job.migration") {
+        s.migration = x;
+    }
+    if let Some(x) = t.num("seed") {
+        s.seed = x as u64;
+    }
+    s.validate()?;
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+seed = 7
+
+[platform]
+n_procs = 65536     # 2^16
+c = 600
+d = 60
+r = 600
+
+[predictor]
+recall = 0.85
+precision = 0.82
+window = 300
+
+[faults]
+dist = "weibull:0.7"
+
+[job]
+work = 1.0e6
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let t = Table::parse(SAMPLE).unwrap();
+        assert_eq!(t.num("platform.n_procs"), Some(65536.0));
+        assert_eq!(t.str("faults.dist"), Some("weibull:0.7"));
+        assert_eq!(t.num("seed"), Some(7.0));
+        assert_eq!(t.num("job.work"), Some(1.0e6));
+    }
+
+    #[test]
+    fn builds_scenario() {
+        let t = Table::parse(SAMPLE).unwrap();
+        let s = scenario_from_table(&t).unwrap();
+        assert_eq!(s.platform.n_procs, 65536);
+        assert_eq!(s.predictor.window, 300.0);
+        assert_eq!(s.predictor.ef, 150.0);
+        assert_eq!(s.fault_dist, "weibull:0.7");
+        assert_eq!(s.seed, 7);
+    }
+
+    #[test]
+    fn comment_inside_string_survives() {
+        let t = Table::parse(r##"k = "a#b" # trailing"##).unwrap();
+        assert_eq!(t.str("k"), Some("a#b"));
+    }
+
+    #[test]
+    fn errors_are_reported_with_lines() {
+        assert!(Table::parse("[unterminated").is_err());
+        assert!(Table::parse("novalue").is_err());
+        assert!(Table::parse("k = 'single'").is_err());
+        let err = Table::parse("\n\nk = @").unwrap_err().to_string();
+        assert!(err.contains("line 3"), "{err}");
+    }
+
+    #[test]
+    fn bools() {
+        let t = Table::parse("a = true\nb = false").unwrap();
+        assert_eq!(t.bool("a"), Some(true));
+        assert_eq!(t.bool("b"), Some(false));
+    }
+}

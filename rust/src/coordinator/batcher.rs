@@ -1,0 +1,230 @@
+//! Dynamic batching of planning requests onto the PJRT executable.
+//!
+//! The HLO planner is compiled for fixed batch sizes (B = 1 and B = 64);
+//! PJRT execution has per-call overhead, so concurrent callers get far
+//! better throughput when their requests ride the same execution. The
+//! batcher owns the (non-Sync) [`HloPlanner`] on a dedicated thread and
+//! exposes a cloneable, blocking [`Batcher::plan`] front-end:
+//!
+//! * requests accumulate until `max_batch` are waiting or the oldest
+//!   exceeds `max_delay` — the standard dynamic-batching policy of
+//!   serving systems (vLLM-style);
+//! * responses travel back over per-request oneshot channels.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::model::Params;
+use crate::runtime::{HloPlanner, PlanOutput};
+
+use super::Metrics;
+
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// Flush when this many requests are queued (<= artifact batch).
+    pub max_batch: usize,
+    /// Flush when the oldest queued request is this old (only when
+    /// `eager` is off).
+    pub max_delay: Duration,
+    /// Eager policy (default): execute whatever is queued *right now*
+    /// instead of waiting out `max_delay`. Single clients see pure
+    /// execution latency; concurrent clients still coalesce because
+    /// requests arriving during an execution form the next batch.
+    pub eager: bool,
+    /// Pre-compile the artifacts at spawn so the first request does
+    /// not pay PJRT compilation.
+    pub warmup: bool,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            max_batch: 64,
+            max_delay: Duration::from_millis(2),
+            eager: true,
+            warmup: true,
+        }
+    }
+}
+
+/// Counters exposed for tests and the service's `stats` verb.
+#[derive(Debug, Clone, Default)]
+pub struct BatcherStats {
+    pub requests: u64,
+    pub batches: u64,
+    pub max_batch_seen: u64,
+}
+
+enum Msg {
+    Plan(Params, Sender<anyhow::Result<PlanOutput>>),
+    Shutdown,
+}
+
+/// Cloneable handle to the batching thread.
+#[derive(Clone)]
+pub struct Batcher {
+    tx: Sender<Msg>,
+    stats: Arc<Mutex<BatcherStats>>,
+    metrics: Arc<Metrics>,
+}
+
+impl Batcher {
+    /// Spawn the owner thread; the planner is constructed *inside* it
+    /// because the PJRT client is not `Send` (it holds a thread-local
+    /// `Rc` into the C API). `factory` failures surface here.
+    pub fn spawn<F>(factory: F, cfg: BatcherConfig) -> anyhow::Result<Batcher>
+    where
+        F: FnOnce() -> anyhow::Result<HloPlanner> + Send + 'static,
+    {
+        let (tx, rx) = channel::<Msg>();
+        let stats = Arc::new(Mutex::new(BatcherStats::default()));
+        let metrics = Arc::new(Metrics::new());
+        let (ready_tx, ready_rx) = channel::<anyhow::Result<()>>();
+        {
+            let stats = Arc::clone(&stats);
+            let metrics = Arc::clone(&metrics);
+            std::thread::Builder::new()
+                .name("ckptfp-batcher".into())
+                .spawn(move || match factory() {
+                    Ok(mut planner) => {
+                        if cfg.warmup {
+                            if let Err(e) = planner.warmup() {
+                                let _ = ready_tx.send(Err(e));
+                                return;
+                            }
+                        }
+                        let _ = ready_tx.send(Ok(()));
+                        owner_loop(planner, cfg, rx, stats, metrics);
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                    }
+                })
+                .expect("spawn batcher thread");
+        }
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("batcher thread died during startup"))??;
+        Ok(Batcher { tx, stats, metrics })
+    }
+
+    /// Spawn against the default artifacts directory.
+    pub fn spawn_default(cfg: BatcherConfig) -> anyhow::Result<Batcher> {
+        Self::spawn(HloPlanner::open_default, cfg)
+    }
+
+    /// Plan one configuration (blocking).
+    pub fn plan(&self, params: Params) -> anyhow::Result<PlanOutput> {
+        let started = Instant::now();
+        let (rtx, rrx) = channel();
+        self.tx
+            .send(Msg::Plan(params, rtx))
+            .map_err(|_| anyhow::anyhow!("batcher thread is gone"))?;
+        let out = rrx.recv().map_err(|_| anyhow::anyhow!("batcher dropped the request"))?;
+        self.metrics.observe_latency(started.elapsed().as_secs_f64());
+        out
+    }
+
+    /// Plan many configurations from one caller (rides one batch
+    /// directly, no delay).
+    pub fn plan_many(&self, params: Vec<Params>) -> anyhow::Result<Vec<PlanOutput>> {
+        let mut receivers = Vec::with_capacity(params.len());
+        for p in params {
+            let (rtx, rrx) = channel();
+            self.tx.send(Msg::Plan(p, rtx)).map_err(|_| anyhow::anyhow!("batcher gone"))?;
+            receivers.push(rrx);
+        }
+        receivers
+            .into_iter()
+            .map(|r| r.recv().map_err(|_| anyhow::anyhow!("batcher dropped request"))?)
+            .collect()
+    }
+
+    pub fn stats(&self) -> BatcherStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Ask the owner thread to exit (pending requests still served).
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Msg::Shutdown);
+    }
+}
+
+fn owner_loop(
+    mut planner: HloPlanner,
+    cfg: BatcherConfig,
+    rx: Receiver<Msg>,
+    stats: Arc<Mutex<BatcherStats>>,
+    metrics: Arc<Metrics>,
+) {
+    loop {
+        // Block for the first request of a batch.
+        let first = match rx.recv() {
+            Ok(Msg::Plan(p, tx)) => (p, tx),
+            Ok(Msg::Shutdown) | Err(_) => return,
+        };
+        let mut batch = vec![first];
+        let mut shutdown = false;
+        if cfg.eager {
+            // Take everything already queued, no waiting: requests that
+            // arrive during the upcoming execution form the next batch.
+            while batch.len() < cfg.max_batch {
+                match rx.try_recv() {
+                    Ok(Msg::Plan(p, tx)) => batch.push((p, tx)),
+                    Ok(Msg::Shutdown) => {
+                        shutdown = true;
+                        break;
+                    }
+                    Err(_) => break,
+                }
+            }
+        } else {
+            let deadline = Instant::now() + cfg.max_delay;
+            while batch.len() < cfg.max_batch {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(Msg::Plan(p, tx)) => batch.push((p, tx)),
+                    Ok(Msg::Shutdown) => {
+                        shutdown = true;
+                        break;
+                    }
+                    Err(_) => break, // timeout or disconnect
+                }
+            }
+        }
+
+        let params: Vec<Params> = batch.iter().map(|(p, _)| *p).collect();
+        {
+            let mut s = stats.lock().unwrap();
+            s.requests += batch.len() as u64;
+            s.batches += 1;
+            s.max_batch_seen = s.max_batch_seen.max(batch.len() as u64);
+        }
+        metrics.incr("batches", 1);
+        metrics.incr("requests", batch.len() as u64);
+        match planner.plan_batch(&params) {
+            Ok(outputs) => {
+                for ((_, tx), out) in batch.into_iter().zip(outputs) {
+                    let _ = tx.send(Ok(out));
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for (_, tx) in batch {
+                    let _ = tx.send(Err(anyhow::anyhow!("{msg}")));
+                }
+            }
+        }
+        if shutdown {
+            return;
+        }
+    }
+}

@@ -1,0 +1,126 @@
+//! Lightweight metrics: named atomic counters + a latency reservoir.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Thread-safe metrics registry.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, AtomicU64>>,
+    latencies: Mutex<Vec<f64>>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn incr(&self, name: &str, by: u64) {
+        let map = self.counters.lock().unwrap();
+        if let Some(c) = map.get(name) {
+            c.fetch_add(by, Ordering::Relaxed);
+            return;
+        }
+        drop(map);
+        let mut map = self.counters.lock().unwrap();
+        map.entry(name.to_string()).or_insert_with(|| AtomicU64::new(0)).fetch_add(by, Ordering::Relaxed);
+    }
+
+    pub fn get(&self, name: &str) -> u64 {
+        self.counters
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|c| c.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    /// Record one request latency (seconds). Bounded reservoir: the
+    /// most recent 65536 samples.
+    pub fn observe_latency(&self, seconds: f64) {
+        let mut v = self.latencies.lock().unwrap();
+        if v.len() >= 65536 {
+            let len = v.len();
+            v.copy_within(len / 2.., 0);
+            v.truncate(len / 2);
+        }
+        v.push(seconds);
+    }
+
+    /// (p50, p95, p99, count) of recorded latencies.
+    pub fn latency_quantiles(&self) -> (f64, f64, f64, usize) {
+        let mut v = self.latencies.lock().unwrap().clone();
+        if v.is_empty() {
+            return (f64::NAN, f64::NAN, f64::NAN, 0);
+        }
+        v.sort_by(f64::total_cmp);
+        let q = |p: f64| crate::util::stats::percentile(&v, p);
+        (q(0.50), q(0.95), q(0.99), v.len())
+    }
+
+    /// Render all counters for the service `stats` verb.
+    pub fn snapshot(&self) -> BTreeMap<String, u64> {
+        self.counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters() {
+        let m = Metrics::new();
+        m.incr("a", 2);
+        m.incr("a", 3);
+        m.incr("b", 1);
+        assert_eq!(m.get("a"), 5);
+        assert_eq!(m.get("b"), 1);
+        assert_eq!(m.get("missing"), 0);
+        assert_eq!(m.snapshot().len(), 2);
+    }
+
+    #[test]
+    fn latency_quantiles() {
+        let m = Metrics::new();
+        for i in 1..=100 {
+            m.observe_latency(i as f64);
+        }
+        let (p50, p95, _p99, n) = m.latency_quantiles();
+        assert_eq!(n, 100);
+        assert!((p50 - 50.5).abs() < 1.0);
+        assert!(p95 > 90.0);
+    }
+
+    #[test]
+    fn reservoir_bounded() {
+        let m = Metrics::new();
+        for i in 0..70_000 {
+            m.observe_latency(i as f64);
+        }
+        let (_, _, _, n) = m.latency_quantiles();
+        assert!(n <= 65536);
+    }
+
+    #[test]
+    fn concurrent_increments() {
+        let m = std::sync::Arc::new(Metrics::new());
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let m = std::sync::Arc::clone(&m);
+                s.spawn(move || {
+                    for _ in 0..1000 {
+                        m.incr("x", 1);
+                    }
+                });
+            }
+        });
+        assert_eq!(m.get("x"), 8000);
+    }
+}

@@ -1,0 +1,14 @@
+//! The L3 coordinator: leader/worker experiment orchestration, dynamic
+//! batching of planning requests onto the PJRT executable, and the
+//! TCP/JSONL planner service.
+
+mod batcher;
+mod metrics;
+mod pool;
+pub mod protocol;
+mod service;
+
+pub use batcher::{Batcher, BatcherConfig, BatcherStats};
+pub use metrics::Metrics;
+pub use pool::{available_workers, run_parallel};
+pub use service::{serve, PlannerClient, ServiceConfig, ServiceHandle};

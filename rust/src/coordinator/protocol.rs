@@ -1,0 +1,136 @@
+//! Planner-service wire protocol: one JSON object per line.
+//!
+//! Request:
+//! ```json
+//! {"op": "plan", "mu": 60000, "c": 600, "d": 60, "r": 600,
+//!  "recall": 0.85, "precision": 0.82, "window": 300,
+//!  "alpha": 0.27, "migration": 300}
+//! ```
+//! (`ef` defaults to window/2; `op` defaults to "plan". `{"op":"stats"}`
+//! and `{"op":"ping"}` are also understood.)
+//!
+//! Response:
+//! ```json
+//! {"ok": true, "winner": "ExactPrediction", "q": 1,
+//!  "winner_waste": 0.12, "winner_period": 8123.4,
+//!  "strategies": [{"name": "Young", "waste": ..., "period": ...}, ...]}
+//! ```
+
+use crate::model::{Params, StrategyKind};
+use crate::runtime::PlanOutput;
+use crate::util::json::{parse, Json};
+
+/// Parsed request.
+#[derive(Debug, Clone)]
+pub enum Request {
+    Plan(Params),
+    Stats,
+    Ping,
+}
+
+pub fn parse_request(line: &str) -> anyhow::Result<Request> {
+    let v = parse(line)?;
+    match v.get("op").and_then(Json::as_str).unwrap_or("plan") {
+        "stats" => Ok(Request::Stats),
+        "ping" => Ok(Request::Ping),
+        "plan" => {
+            let mu = v.num_or("mu", f64::NAN);
+            anyhow::ensure!(mu.is_finite() && mu > 0.0, "plan request needs positive 'mu'");
+            let window = v.num_or("window", 0.0);
+            let p = Params {
+                mu,
+                c: v.num_or("c", 600.0),
+                d: v.num_or("d", 60.0),
+                r_rec: v.num_or("r", 600.0),
+                recall: v.num_or("recall", 0.0),
+                precision: v.num_or("precision", 1.0),
+                i: window,
+                ef: v.num_or("ef", window / 2.0),
+                alpha: v.num_or("alpha", 0.27),
+                m: v.num_or("migration", 300.0),
+            };
+            anyhow::ensure!((0.0..=1.0).contains(&p.recall), "recall in [0,1]");
+            anyhow::ensure!(p.precision > 0.0 && p.precision <= 1.0, "precision in (0,1]");
+            Ok(Request::Plan(p))
+        }
+        other => anyhow::bail!("unknown op '{other}'"),
+    }
+}
+
+pub fn plan_response(out: &PlanOutput) -> String {
+    let strategies: Vec<Json> = StrategyKind::ALL
+        .iter()
+        .map(|k| {
+            Json::obj(vec![
+                ("name", Json::Str(k.name().into())),
+                ("waste", Json::Num(out.waste[*k as usize])),
+                ("period", Json::Num(out.period[*k as usize])),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("winner", Json::Str(out.winner.name().into())),
+        ("q", Json::Num(if out.winner == StrategyKind::Young { 0.0 } else { 1.0 })),
+        ("winner_waste", Json::Num(out.winner_waste)),
+        ("winner_period", Json::Num(out.winner_period)),
+        ("strategies", Json::Arr(strategies)),
+    ])
+    .to_string()
+}
+
+pub fn error_response(err: &str) -> String {
+    Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::Str(err.into()))]).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_plan_request() {
+        let r = parse_request(
+            r#"{"mu": 60000, "recall": 0.85, "precision": 0.82, "window": 300}"#,
+        )
+        .unwrap();
+        match r {
+            Request::Plan(p) => {
+                assert_eq!(p.mu, 60000.0);
+                assert_eq!(p.ef, 150.0); // window / 2 default
+                assert_eq!(p.c, 600.0);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn parses_verbs() {
+        assert!(matches!(parse_request(r#"{"op": "ping"}"#).unwrap(), Request::Ping));
+        assert!(matches!(parse_request(r#"{"op": "stats"}"#).unwrap(), Request::Stats));
+    }
+
+    #[test]
+    fn rejects_bad_requests() {
+        assert!(parse_request(r#"{"op": "plan"}"#).is_err()); // no mu
+        assert!(parse_request(r#"{"mu": -5}"#).is_err());
+        assert!(parse_request(r#"{"mu": 100, "recall": 2.0}"#).is_err());
+        assert!(parse_request("not json").is_err());
+        assert!(parse_request(r#"{"op": "destroy"}"#).is_err());
+    }
+
+    #[test]
+    fn response_shape() {
+        let out = PlanOutput {
+            waste: [0.2, 0.1, 0.12, 0.13, 0.14, 0.09],
+            period: [1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+            winner: StrategyKind::ExactPrediction,
+            winner_waste: 0.1,
+            winner_period: 2.0,
+        };
+        let s = plan_response(&out);
+        let v = crate::util::json::parse(&s).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("winner").unwrap().as_str(), Some("ExactPrediction"));
+        assert_eq!(v.num_or("q", -1.0), 1.0);
+    }
+}

@@ -1,0 +1,141 @@
+//! The planner service: a TCP listener speaking the JSONL protocol,
+//! one thread per connection, all requests funneled through the
+//! dynamic [`Batcher`].
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use super::protocol::{error_response, parse_request, plan_response, Request};
+use super::Batcher;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Bind address, e.g. "127.0.0.1:7471". Port 0 picks a free port.
+    pub addr: String,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig { addr: "127.0.0.1:7471".into() }
+    }
+}
+
+/// Running service handle: local address + shutdown flag.
+pub struct ServiceHandle {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServiceHandle {
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Nudge the accept loop with a dummy connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Start serving in background threads. The batcher (and its PJRT
+/// planner) is shared across connections.
+pub fn serve(batcher: Batcher, cfg: ServiceConfig) -> anyhow::Result<ServiceHandle> {
+    let listener = TcpListener::bind(&cfg.addr)?;
+    let addr = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = Arc::clone(&stop);
+    let join = std::thread::Builder::new().name("ckptfp-accept".into()).spawn(move || {
+        for conn in listener.incoming() {
+            if stop2.load(Ordering::SeqCst) {
+                break;
+            }
+            match conn {
+                Ok(stream) => {
+                    let batcher = batcher.clone();
+                    let _ = std::thread::Builder::new()
+                        .name("ckptfp-conn".into())
+                        .spawn(move || handle_connection(stream, batcher));
+                }
+                Err(_) => break,
+            }
+        }
+    })?;
+    Ok(ServiceHandle { addr, stop, join: Some(join) })
+}
+
+fn handle_connection(stream: TcpStream, batcher: Batcher) {
+    let peer = stream.peer_addr().ok();
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let response = match parse_request(&line) {
+            Err(e) => error_response(&format!("{e:#}")),
+            Ok(Request::Ping) => Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))]).to_string(),
+            Ok(Request::Stats) => {
+                let stats = batcher.stats();
+                let (p50, p95, p99, n) = batcher.metrics().latency_quantiles();
+                Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("requests", Json::Num(stats.requests as f64)),
+                    ("batches", Json::Num(stats.batches as f64)),
+                    ("max_batch", Json::Num(stats.max_batch_seen as f64)),
+                    ("lat_p50_s", Json::Num(p50)),
+                    ("lat_p95_s", Json::Num(p95)),
+                    ("lat_p99_s", Json::Num(p99)),
+                    ("lat_n", Json::Num(n as f64)),
+                ])
+                .to_string()
+            }
+            Ok(Request::Plan(params)) => match batcher.plan(params) {
+                Ok(out) => plan_response(&out),
+                Err(e) => error_response(&format!("{e:#}")),
+            },
+        };
+        if writer.write_all(response.as_bytes()).is_err()
+            || writer.write_all(b"\n").is_err()
+            || writer.flush().is_err()
+        {
+            break;
+        }
+    }
+    let _ = peer; // quiet unused in non-logging builds
+}
+
+/// Minimal blocking client for examples and tests.
+pub struct PlannerClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl PlannerClient {
+    pub fn connect(addr: &str) -> anyhow::Result<PlannerClient> {
+        let stream = TcpStream::connect(addr)?;
+        let writer = stream.try_clone()?;
+        Ok(PlannerClient { reader: BufReader::new(stream), writer })
+    }
+
+    /// Send one JSONL request, read one JSONL response.
+    pub fn call(&mut self, request: &str) -> anyhow::Result<Json> {
+        self.writer.write_all(request.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        anyhow::ensure!(!line.is_empty(), "server closed the connection");
+        crate::util::json::parse(line.trim())
+    }
+}

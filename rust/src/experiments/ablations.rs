@@ -1,0 +1,202 @@
+//! Ablation experiments — claims the paper *states* but never
+//! simulates, validated here by direct simulation:
+//!
+//! * `abl-q`      — §3.3's endpoint theorem: WASTE(q) is affine, so no
+//!                  interior trust probability can beat both q = 0 and
+//!                  q = 1. We sweep q ∈ {0, ¼, ½, ¾, 1} with the
+//!                  matching period √(2μC/(1−rq)).
+//! * `abl-daly`   — §5's remark that "Daly's formula [2] leads to the
+//!                  same results" as Young's.
+//! * `abl-lead`   — §3 assumes predictions arrive ≥ C ahead; the
+//!                  related-work predictors advertise lead times from
+//!                  32 s to 2 h. We sweep the lead and watch the
+//!                  prediction benefit decay to Young as lead → 0.
+//! * `abl-cap`    — §3.2's capped domain vs the §5 uncapped periods:
+//!                  the price of mathematical rigor at scale.
+
+use super::{scenario_for, sim_waste, ExpOptions, ExperimentResult};
+use crate::config::{paper_proc_counts, predictor_yu, Predictor, Scenario};
+use crate::coordinator::run_parallel;
+use crate::model::{Capping, Params, StrategyKind};
+use crate::report::FigureData;
+use crate::sim::{Engine, SimConfig};
+use crate::strategies::{daly_spec, spec_for, ProactiveMode, StrategySpec};
+use crate::trace::TraceGen;
+use crate::util::stats::Summary;
+
+/// q-sweep: simulated waste as a function of the trust probability.
+pub fn ablation_q(opts: &ExpOptions) -> anyhow::Result<ExperimentResult> {
+    let mut result = ExperimentResult::default();
+    let qs = [0.0, 0.25, 0.5, 0.75, 1.0];
+    for n in [1u64 << 16, 1u64 << 19] {
+        let mut fig = FigureData::new(
+            format!("abl-q-N2e{}", n.trailing_zeros()),
+            "q",
+            "waste",
+        );
+        for dist in ["exp", "weibull:0.7"] {
+            let mut s = Scenario::paper(n, Predictor::exact(0.85, 0.82));
+            s.fault_dist = dist.into();
+            let p = Params::from_scenario(&s);
+            for q in qs {
+                let denom = 1.0 - p.recall * q;
+                let t_r = (2.0 * p.mu * p.c / denom.max(1e-9)).sqrt();
+                let spec = StrategySpec {
+                    name: format!("q{q}"),
+                    t_r,
+                    q,
+                    proactive: ProactiveMode::CkptBefore,
+                };
+                let reps: Vec<u64> = (0..opts.reps).collect();
+                let wastes = run_parallel(reps, opts.workers, |rep| {
+                    crate::sim::simulate_once(&s, &spec, *rep).expect("sim").waste()
+                });
+                fig.series_mut(dist).push(q, Summary::from_iter(wastes).mean());
+            }
+        }
+        result.figures.push(fig);
+    }
+    Ok(result)
+}
+
+/// Young vs Daly: T = sqrt(2 mu C) vs sqrt(2 (mu + R) C).
+pub fn ablation_daly(opts: &ExpOptions) -> anyhow::Result<ExperimentResult> {
+    let mut result = ExperimentResult::default();
+    for dist in ["exp", "weibull:0.7"] {
+        let mut fig = FigureData::new(format!("abl-daly-{}", dist.replace(':', "")), "N", "waste");
+        for n in paper_proc_counts() {
+            let mut s = Scenario::paper(n, Predictor::none());
+            s.fault_dist = dist.into();
+            let young = spec_for(StrategyKind::Young, &s, Capping::Uncapped);
+            let daly = daly_spec(&s);
+            for spec in [&young, &daly] {
+                let reps: Vec<u64> = (0..opts.reps).collect();
+                let wastes = run_parallel(reps, opts.workers, |rep| {
+                    crate::sim::simulate_once(&s, spec, *rep).expect("sim").waste()
+                });
+                fig.series_mut(&spec.name).push(n as f64, Summary::from_iter(wastes).mean());
+            }
+        }
+        result.figures.push(fig);
+    }
+    Ok(result)
+}
+
+/// Lead-time sweep: ExactPrediction with the predictor announcing
+/// faults `lead` seconds ahead. Below C there is no room for the
+/// proactive checkpoint and the benefit decays toward Young.
+pub fn ablation_lead(opts: &ExpOptions) -> anyhow::Result<ExperimentResult> {
+    let mut result = ExperimentResult::default();
+    let n = 1u64 << 19;
+    let mut s = Scenario::paper(n, Predictor::exact(0.85, 0.82));
+    s.fault_dist = "weibull:0.7".into();
+    let spec = spec_for(StrategyKind::ExactPrediction, &s, Capping::Uncapped);
+    let young = spec_for(StrategyKind::Young, &s, Capping::Uncapped);
+    let c = s.platform.c;
+    let mut fig = FigureData::new("abl-lead-N2e19", "lead/C", "waste");
+
+    // Young reference (lead-independent).
+    let reps: Vec<u64> = (0..opts.reps).collect();
+    let young_waste = Summary::from_iter(run_parallel(reps, opts.workers, |rep| {
+        crate::sim::simulate_once(&s, &young, *rep).expect("sim").waste()
+    }))
+    .mean();
+
+    for frac in [0.0, 0.25, 0.5, 0.75, 1.0, 2.0] {
+        let lead = frac * c;
+        let reps: Vec<u64> = (0..opts.reps).collect();
+        let cfg = SimConfig::from_scenario(&s);
+        let wastes = run_parallel(reps, opts.workers, |rep| {
+            // Bypass simulate_once to control the trace lead directly.
+            let source = TraceGen::new(&s, lead, s.seed, *rep).expect("trace");
+            Engine::new(&cfg, &spec, source, s.seed ^ (*rep << 17)).run().waste()
+        });
+        fig.series_mut("ExactPrediction").push(frac, Summary::from_iter(wastes).mean());
+        fig.series_mut("Young").push(frac, young_waste);
+    }
+    result.figures.push(fig);
+    Ok(result)
+}
+
+/// Capped (§3.2-rigorous) vs uncapped (§5) period choice, by simulation.
+pub fn ablation_cap(opts: &ExpOptions) -> anyhow::Result<ExperimentResult> {
+    let mut result = ExperimentResult::default();
+    let mut fig = FigureData::new("abl-cap", "N", "waste");
+    for n in paper_proc_counts() {
+        let mut s = Scenario::paper(n, predictor_yu(0.0));
+        s.fault_dist = "exp".into();
+        for capping in [Capping::Capped, Capping::Uncapped] {
+            let sk = scenario_for(StrategyKind::ExactPrediction, &s);
+            let spec = spec_for(StrategyKind::ExactPrediction, &sk, capping);
+            let reps: Vec<u64> = (0..opts.reps).collect();
+            let wastes = run_parallel(reps, opts.workers, |rep| {
+                crate::sim::simulate_once(&sk, &spec, *rep).expect("sim").waste()
+            });
+            let label = match capping {
+                Capping::Capped => "capped",
+                Capping::Uncapped => "uncapped",
+            };
+            fig.series_mut(label).push(n as f64, Summary::from_iter(wastes).mean());
+        }
+        // Young baseline for context (uses sim_waste's pairing).
+        let w = sim_waste(&s, StrategyKind::Young, opts).mean();
+        fig.series_mut("Young").push(n as f64, w);
+    }
+    result.figures.push(fig);
+    Ok(result)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ExpOptions {
+        ExpOptions { reps: 4, ..ExpOptions::quick() }
+    }
+
+    #[test]
+    fn q_endpoints_win() {
+        let r = ablation_q(&tiny()).unwrap();
+        for fig in &r.figures {
+            for s in &fig.series {
+                let endpoint_best = s.points.first().unwrap().1.min(s.points.last().unwrap().1);
+                for (q, w) in &s.points[1..s.points.len() - 1] {
+                    // No interior q may *strictly* beat both endpoints
+                    // beyond noise.
+                    assert!(
+                        *w > endpoint_best - 0.02,
+                        "{} q={q}: {w} vs endpoint {endpoint_best}",
+                        fig.name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn daly_equals_young() {
+        let r = ablation_daly(&tiny()).unwrap();
+        for fig in &r.figures {
+            let young = fig.get("Young").unwrap();
+            let daly = fig.get("Daly").unwrap();
+            for (y, d) in young.points.iter().zip(&daly.points) {
+                assert!((y.1 - d.1).abs() < 0.02, "{}: {y:?} vs {d:?}", fig.name);
+            }
+        }
+    }
+
+    #[test]
+    fn lead_zero_removes_benefit() {
+        let mut opts = tiny();
+        opts.reps = 6;
+        let r = ablation_lead(&opts).unwrap();
+        let fig = &r.figures[0];
+        let exact = fig.get("ExactPrediction").unwrap();
+        let young = fig.get("Young").unwrap().points[0].1;
+        let at_zero = exact.points.first().unwrap().1;
+        let at_full = exact.points.iter().find(|p| p.0 == 1.0).unwrap().1;
+        // Full lead clearly beats Young; zero lead gives most of it back.
+        assert!(at_full < young, "full lead {at_full} vs young {young}");
+        assert!(at_zero > at_full, "lead 0 {at_zero} must be worse than lead C {at_full}");
+    }
+}

@@ -1,0 +1,78 @@
+//! Table 3 — and an extension the paper stops short of: evaluate every
+//! predictor from the literature survey with the analytical planner and
+//! report the waste/time gain it would deliver on the §5 platforms.
+
+use super::{scenario_for, ExpOptions, ExperimentResult};
+use crate::config::{predictor_catalog, Scenario};
+use crate::model::{optimize, plan, Capping, Params, StrategyKind};
+use crate::report::Table;
+
+pub fn table_catalog(_opts: &ExpOptions) -> anyhow::Result<ExperimentResult> {
+    let mut result = ExperimentResult::default();
+    let mut t = Table::new([
+        "predictor",
+        "p",
+        "r",
+        "window",
+        "waste 2^16",
+        "gain 2^16",
+        "waste 2^19",
+        "gain 2^19",
+        "winner",
+    ]);
+    for entry in predictor_catalog() {
+        let pred = entry.predictor(0.0);
+        let mut cells = vec![
+            entry.source.to_string(),
+            format!("{:.0}%", entry.precision * 100.0),
+            format!("{:.0}%", entry.recall * 100.0),
+            entry
+                .window
+                .map(|w| if w > 0.0 { format!("{}h", w / 3600.0) } else { "exact".into() })
+                .unwrap_or_else(|| "-".into()),
+        ];
+        let mut winner_name = String::new();
+        for n in [1u64 << 16, 1u64 << 19] {
+            let s = Scenario::paper(n, pred.clone());
+            let params = Params::from_scenario(&s);
+            let best = plan(&params, Capping::Uncapped, false);
+            // Gain in execution time vs Young: 1 − (1−w_Y)/(1−w*).
+            let sy = scenario_for(StrategyKind::Young, &s);
+            let py = Params::from_scenario(&sy);
+            let (_, wy) = optimize(&py, StrategyKind::Young, Capping::Uncapped);
+            let gain = 100.0 * (1.0 - (1.0 - wy) / (1.0 - best.winner_waste().min(0.999)));
+            cells.push(format!("{:.3}", best.winner_waste()));
+            cells.push(format!("{gain:.0}%"));
+            winner_name = best.winner.name().to_string();
+        }
+        cells.push(winner_name);
+        t.row(cells);
+    }
+    result.tables.push(("table3-predictor-catalog".into(), t));
+    Ok(result)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::ExpOptions;
+
+    #[test]
+    fn catalog_table_complete() {
+        let r = table_catalog(&ExpOptions::quick()).unwrap();
+        assert_eq!(r.tables.len(), 1);
+        let rendered = r.render();
+        // All 11 literature rows present.
+        for src in ["Zheng", "Yu", "Gainaru", "Fulp", "Liang"] {
+            assert!(rendered.contains(src), "missing {src}");
+        }
+        assert_eq!(rendered.matches('\n').count() >= 12, true);
+    }
+
+    #[test]
+    fn better_predictors_gain_more() {
+        // Yu (r=.854) must beat Liang-1h (r=.30) in waste at 2^19.
+        let r = table_catalog(&ExpOptions::quick()).unwrap().render();
+        assert!(r.contains("%"));
+    }
+}

@@ -1,0 +1,190 @@
+//! Figures 4–7: waste of every heuristic vs platform size N, for both
+//! literature predictors, both window sizes, analytical (capped and
+//! uncapped) and simulated (Exponential, Weibull k = 0.7 and 0.5),
+//! with the false-prediction trace drawn from the failure law
+//! (Figs. 4/6) or a uniform law (Figs. 5/7).
+
+use super::{paper_heuristics, scenario_for, ExpOptions, ExperimentResult};
+use crate::config::{paper_proc_counts, Predictor, Scenario};
+use crate::coordinator::run_parallel;
+use crate::model::{optimize, Capping, Params, StrategyKind};
+use crate::report::FigureData;
+use crate::sim::simulate_once;
+use crate::strategies::{best_period, spec_for};
+
+/// Predictor/false-trace parameters of each waste figure.
+pub fn figure_params(id: &str) -> anyhow::Result<(f64, f64, bool)> {
+    // (precision, recall, uniform false predictions)
+    Ok(match id {
+        "fig4" => (0.82, 0.85, false),
+        "fig5" => (0.82, 0.85, true),
+        "fig6" => (0.4, 0.7, false),
+        "fig7" => (0.4, 0.7, true),
+        other => anyhow::bail!("not a waste figure: {other}"),
+    })
+}
+
+fn base_scenario(n: u64, precision: f64, recall: f64, i_win: f64, uniform_false: bool) -> Scenario {
+    let mut s = Scenario::paper(n, Predictor::windowed(recall, precision, i_win));
+    if uniform_false {
+        s.false_pred_dist = "uniform".into();
+    }
+    s
+}
+
+/// Analytical subfigure: per-strategy optimal waste vs N.
+fn analytic_figure(
+    id: &str,
+    precision: f64,
+    recall: f64,
+    i_win: f64,
+    capping: Capping,
+) -> FigureData {
+    let tag = match capping {
+        Capping::Capped => "capped",
+        Capping::Uncapped => "uncapped",
+    };
+    let mut fig = FigureData::new(format!("{id}-I{i_win}-analytic-{tag}"), "N", "waste");
+    for n in paper_proc_counts() {
+        let s = base_scenario(n, precision, recall, i_win, false);
+        for kind in paper_heuristics(i_win, s.platform.c) {
+            let sk = scenario_for(kind, &s);
+            let p = Params::from_scenario(&sk);
+            let (_, w) = optimize(&p, kind, capping);
+            fig.series_mut(kind.name()).push(n as f64, w);
+        }
+    }
+    fig
+}
+
+/// Simulated subfigure for one failure distribution.
+fn simulated_figure(
+    id: &str,
+    precision: f64,
+    recall: f64,
+    i_win: f64,
+    uniform_false: bool,
+    dist: &str,
+    opts: &ExpOptions,
+) -> FigureData {
+    let mut fig = FigureData::new(
+        format!("{id}-I{i_win}-sim-{}", dist.replace(':', "")),
+        "N",
+        "waste",
+    );
+    // Flatten (N, heuristic, rep) for dynamic load balancing: the
+    // N = 2^19 runs process ~30x more events than N = 2^14.
+    struct Task {
+        n: u64,
+        kind: StrategyKind,
+        rep: u64,
+    }
+    let mut tasks = Vec::new();
+    let c = 600.0;
+    for n in paper_proc_counts() {
+        for kind in paper_heuristics(i_win, c) {
+            for rep in 0..opts.reps {
+                tasks.push(Task { n, kind, rep });
+            }
+        }
+    }
+    // Pre-build scenarios + specs per (n, kind) once.
+    let mut cache = std::collections::HashMap::new();
+    for n in paper_proc_counts() {
+        for kind in paper_heuristics(i_win, c) {
+            let mut s = base_scenario(n, precision, recall, i_win, uniform_false);
+            s.fault_dist = dist.to_string();
+            let sk = scenario_for(kind, &s);
+            let spec = spec_for(kind, &sk, Capping::Uncapped);
+            cache.insert((n, kind as usize), (sk, spec));
+        }
+    }
+    let wastes = run_parallel(tasks, opts.workers, |t| {
+        let (s, spec) = &cache[&(t.n, t.kind as usize)];
+        (t.n, t.kind as usize, simulate_once(s, spec, t.rep).expect("sim failed").waste())
+    });
+    let mut agg: std::collections::HashMap<(u64, usize), crate::util::stats::Summary> =
+        std::collections::HashMap::new();
+    for (n, kind, w) in wastes {
+        agg.entry((n, kind)).or_default().push(w);
+    }
+    for n in paper_proc_counts() {
+        for kind in paper_heuristics(i_win, c) {
+            let w = agg[&(n, kind as usize)].mean();
+            fig.series_mut(kind.name()).push(n as f64, w);
+        }
+    }
+    // BestPeriod counterparts (brute-force; §5's quality check).
+    if opts.best_period {
+        for n in paper_proc_counts() {
+            for kind in paper_heuristics(i_win, c) {
+                let (s, spec) = &cache[&(n, kind as usize)];
+                let res = best_period(s, spec, opts.bp_reps, opts.bp_candidates)
+                    .expect("best-period search failed");
+                fig.series_mut(&format!("BestPeriod:{}", kind.name()))
+                    .push(n as f64, res.waste);
+            }
+        }
+    }
+    fig
+}
+
+/// One of Figures 4–7: ten subfigures ((a)–(j) in the paper).
+pub fn figure_waste(id: &str, opts: &ExpOptions) -> anyhow::Result<ExperimentResult> {
+    let (precision, recall, uniform_false) = figure_params(id)?;
+    let mut result = ExperimentResult::default();
+    for i_win in [300.0, 3000.0] {
+        result.figures.push(analytic_figure(id, precision, recall, i_win, Capping::Capped));
+        result.figures.push(analytic_figure(id, precision, recall, i_win, Capping::Uncapped));
+        for dist in ["exp", "weibull:0.7", "weibull:0.5"] {
+            result.figures.push(simulated_figure(
+                id,
+                precision,
+                recall,
+                i_win,
+                uniform_false,
+                dist,
+                opts,
+            ));
+        }
+    }
+    Ok(result)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figure_params_table() {
+        assert_eq!(figure_params("fig4").unwrap(), (0.82, 0.85, false));
+        assert_eq!(figure_params("fig7").unwrap(), (0.4, 0.7, true));
+        assert!(figure_params("fig8").is_err());
+    }
+
+    #[test]
+    fn analytic_figure_shapes() {
+        let fig = analytic_figure("fig4", 0.82, 0.85, 300.0, Capping::Uncapped);
+        // 4 heuristics (I < C: no WithCkptI), 6 platform sizes each.
+        assert_eq!(fig.series.len(), 4);
+        for s in &fig.series {
+            assert_eq!(s.points.len(), 6);
+        }
+        // Waste increases with N for every strategy.
+        for s in &fig.series {
+            for w in s.points.windows(2) {
+                assert!(w[1].1 >= w[0].1 - 1e-9, "{}: {:?}", s.label, s.points);
+            }
+        }
+    }
+
+    #[test]
+    fn analytic_prediction_dominates_uncapped() {
+        let fig = analytic_figure("fig4", 0.82, 0.85, 300.0, Capping::Uncapped);
+        let young = fig.get("Young").unwrap();
+        let exact = fig.get("ExactPrediction").unwrap();
+        for (y, e) in young.points.iter().zip(&exact.points) {
+            assert!(e.1 <= y.1 + 1e-9);
+        }
+    }
+}

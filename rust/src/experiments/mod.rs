@@ -1,0 +1,199 @@
+//! The paper's §5 evaluation, experiment by experiment.
+//!
+//! Every figure (4–11) and table (1–3) has a regeneration function
+//! here; the bench harness (`cargo bench --bench paper`) and the
+//! `ckptfp experiment` command are thin wrappers around this module.
+
+pub mod ablations;
+pub mod catalog;
+pub mod figures;
+pub mod sweep;
+pub mod tables;
+
+use crate::config::Scenario;
+use crate::coordinator::{available_workers, run_parallel};
+use crate::model::{Capping, StrategyKind};
+use crate::sim::simulate_once;
+use crate::strategies::{exactify, spec_for};
+use crate::util::stats::Summary;
+
+/// Knobs shared by all experiments.
+#[derive(Debug, Clone)]
+pub struct ExpOptions {
+    /// Simulation replications per point (paper: 100).
+    pub reps: u64,
+    /// Worker threads.
+    pub workers: usize,
+    /// Also compute the BestPeriod counterpart of each heuristic
+    /// (brute-force search — expensive).
+    pub best_period: bool,
+    /// Replications per BestPeriod candidate.
+    pub bp_reps: u64,
+    /// BestPeriod grid size.
+    pub bp_candidates: usize,
+}
+
+impl Default for ExpOptions {
+    fn default() -> Self {
+        ExpOptions {
+            reps: 40,
+            workers: available_workers(),
+            best_period: false,
+            bp_reps: 10,
+            bp_candidates: 16,
+        }
+    }
+}
+
+impl ExpOptions {
+    /// Reduced settings for smoke tests and quick bench runs.
+    pub fn quick() -> Self {
+        ExpOptions { reps: 8, bp_reps: 4, bp_candidates: 8, ..Default::default() }
+    }
+}
+
+/// The heuristics the paper simulates for a given window size
+/// (WithCkptI needs room for one in-window checkpoint: I >= C).
+pub fn paper_heuristics(i_window: f64, c: f64) -> Vec<StrategyKind> {
+    let mut v = vec![
+        StrategyKind::Young,
+        StrategyKind::ExactPrediction,
+        StrategyKind::Instant,
+        StrategyKind::NoCkptI,
+    ];
+    if i_window >= c {
+        v.push(StrategyKind::WithCkptI);
+    }
+    v
+}
+
+/// The scenario a heuristic actually runs against: EXACTPREDICTION gets
+/// exact-date predictions for the same faults (§5's definition).
+pub fn scenario_for(kind: StrategyKind, scenario: &Scenario) -> Scenario {
+    if kind == StrategyKind::ExactPrediction {
+        exactify(scenario)
+    } else {
+        scenario.clone()
+    }
+}
+
+/// Mean simulated waste of `kind` on `scenario`: `reps` paired
+/// replications, parallelized over the worker pool.
+pub fn sim_waste(scenario: &Scenario, kind: StrategyKind, opts: &ExpOptions) -> Summary {
+    let s = scenario_for(kind, scenario);
+    s.validate().expect("invalid scenario");
+    let spec = spec_for(kind, &s, Capping::Uncapped);
+    let reps: Vec<u64> = (0..opts.reps).collect();
+    let wastes = run_parallel(reps, opts.workers, |rep| {
+        simulate_once(&s, &spec, *rep).expect("simulation failed").waste()
+    });
+    Summary::from_iter(wastes)
+}
+
+/// Mean simulated execution time (seconds) of `kind` on `scenario`.
+pub fn sim_makespan(scenario: &Scenario, kind: StrategyKind, opts: &ExpOptions) -> Summary {
+    let s = scenario_for(kind, scenario);
+    s.validate().expect("invalid scenario");
+    let spec = spec_for(kind, &s, Capping::Uncapped);
+    let reps: Vec<u64> = (0..opts.reps).collect();
+    let spans = run_parallel(reps, opts.workers, |rep| {
+        simulate_once(&s, &spec, *rep).expect("simulation failed").makespan
+    });
+    Summary::from_iter(spans)
+}
+
+/// Result bundle an experiment hands back to the CLI / bench harness.
+#[derive(Debug, Clone, Default)]
+pub struct ExperimentResult {
+    pub figures: Vec<crate::report::FigureData>,
+    pub tables: Vec<(String, crate::report::Table)>,
+}
+
+impl ExperimentResult {
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for fig in &self.figures {
+            out.push_str(&fig.render());
+            out.push('\n');
+        }
+        for (name, t) in &self.tables {
+            out.push_str(&format!("# {name}\n{}\n", t.render()));
+        }
+        out
+    }
+
+    /// Write figure CSVs under `dir`.
+    pub fn write_csvs(&self, dir: &std::path::Path) -> anyhow::Result<()> {
+        for fig in &self.figures {
+            crate::report::write_figure_csv(&dir.join(format!("{}.csv", fig.name)), fig)?;
+        }
+        Ok(())
+    }
+}
+
+/// Registry: run an experiment by its paper id.
+pub fn run_experiment(id: &str, opts: &ExpOptions) -> anyhow::Result<ExperimentResult> {
+    match id {
+        "fig4" | "fig5" | "fig6" | "fig7" => figures::figure_waste(id, opts),
+        "fig8" | "fig9" | "fig10" | "fig11" => sweep::figure_sweep(id, opts),
+        "tab1" => tables::table_exec(0.7, opts),
+        "tab2" => tables::table_exec(0.5, opts),
+        "tab3" => catalog::table_catalog(opts),
+        "abl-q" => ablations::ablation_q(opts),
+        "abl-daly" => ablations::ablation_daly(opts),
+        "abl-lead" => ablations::ablation_lead(opts),
+        "abl-cap" => ablations::ablation_cap(opts),
+        other => anyhow::bail!(
+            "unknown experiment '{other}' (expected fig4..fig11 | tab1..tab3 | abl-q | abl-daly | abl-lead | abl-cap)"
+        ),
+    }
+}
+
+/// Paper experiment ids, in paper order.
+pub fn paper_experiments() -> Vec<&'static str> {
+    vec!["fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "tab1", "tab2", "tab3"]
+}
+
+/// Everything: the paper's figures/tables plus the ablations.
+pub fn all_experiments() -> Vec<&'static str> {
+    let mut v = paper_experiments();
+    v.extend(["abl-q", "abl-daly", "abl-lead", "abl-cap"]);
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Predictor;
+
+    #[test]
+    fn heuristic_sets() {
+        let small = paper_heuristics(300.0, 600.0);
+        assert!(!small.contains(&StrategyKind::WithCkptI));
+        assert_eq!(small.len(), 4);
+        let large = paper_heuristics(3000.0, 600.0);
+        assert!(large.contains(&StrategyKind::WithCkptI));
+    }
+
+    #[test]
+    fn scenario_for_exactifies() {
+        let s = Scenario::paper(1 << 16, Predictor::windowed(0.85, 0.82, 300.0));
+        let e = scenario_for(StrategyKind::ExactPrediction, &s);
+        assert_eq!(e.predictor.window, 0.0);
+        let i = scenario_for(StrategyKind::Instant, &s);
+        assert_eq!(i.predictor.window, 300.0);
+    }
+
+    #[test]
+    fn registry_rejects_unknown() {
+        assert!(run_experiment("fig99", &ExpOptions::quick()).is_err());
+    }
+
+    #[test]
+    fn experiment_ids_complete() {
+        // One per figure and table of §5 — the (d) deliverable checklist —
+        // plus the four ablations.
+        assert_eq!(paper_experiments().len(), 11);
+        assert_eq!(all_experiments().len(), 15);
+    }
+}

@@ -1,0 +1,91 @@
+//! Figures 8–11: the recall-vs-precision study. One predictor parameter
+//! is fixed while the other sweeps 0.3 → 0.99, at N = 2^16 and 2^19,
+//! I = 300 s, Weibull failures (k = 0.7 for Figs. 8/10, 0.5 for 9/11).
+//!
+//! The paper's headline conclusion — recall matters far more than
+//! precision — falls out of these plots.
+
+use super::{sim_waste, ExpOptions, ExperimentResult};
+use crate::config::{Predictor, Scenario};
+use crate::model::StrategyKind;
+use crate::report::FigureData;
+
+/// Which sweep a figure id denotes.
+pub fn sweep_params(id: &str) -> anyhow::Result<(f64, bool)> {
+    // (weibull shape, sweep_precision?) — sweep_precision=true fixes r
+    // and varies p (Figs. 8/9); false fixes p and varies r (Figs. 10/11).
+    Ok(match id {
+        "fig8" => (0.7, true),
+        "fig9" => (0.5, true),
+        "fig10" => (0.7, false),
+        "fig11" => (0.5, false),
+        other => anyhow::bail!("not a sweep figure: {other}"),
+    })
+}
+
+/// The swept axis values.
+pub fn sweep_axis() -> Vec<f64> {
+    vec![0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9, 0.99]
+}
+
+pub fn figure_sweep(id: &str, opts: &ExpOptions) -> anyhow::Result<ExperimentResult> {
+    let (k, sweep_precision) = sweep_params(id)?;
+    let dist = format!("weibull:{k}");
+    let fixed_values = [0.4, 0.8];
+    let i_win = 300.0;
+    let mut result = ExperimentResult::default();
+    for n in [1u64 << 16, 1u64 << 19] {
+        let axis_name = if sweep_precision { "precision" } else { "recall" };
+        let mut fig = FigureData::new(
+            format!("{id}-N2e{}", n.trailing_zeros()),
+            axis_name,
+            "waste",
+        );
+        // Young reference: independent of the predictor.
+        {
+            let mut s = Scenario::paper(n, Predictor::none());
+            s.fault_dist = dist.clone();
+            let w = sim_waste(&s, StrategyKind::Young, opts).mean();
+            for x in sweep_axis() {
+                fig.series_mut("Young").push(x, w);
+            }
+        }
+        for fixed in fixed_values {
+            let label = if sweep_precision {
+                format!("NoCkptI r={fixed}")
+            } else {
+                format!("NoCkptI p={fixed}")
+            };
+            for x in sweep_axis() {
+                let (recall, precision) =
+                    if sweep_precision { (fixed, x) } else { (x, fixed) };
+                let mut s = Scenario::paper(n, Predictor::windowed(recall, precision, i_win));
+                s.fault_dist = dist.clone();
+                let w = sim_waste(&s, StrategyKind::NoCkptI, opts).mean();
+                fig.series_mut(&label).push(x, w);
+            }
+        }
+        result.figures.push(fig);
+    }
+    Ok(result)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn params_table() {
+        assert_eq!(sweep_params("fig8").unwrap(), (0.7, true));
+        assert_eq!(sweep_params("fig11").unwrap(), (0.5, false));
+        assert!(sweep_params("fig4").is_err());
+    }
+
+    #[test]
+    fn axis_range() {
+        let axis = sweep_axis();
+        assert_eq!(axis.first(), Some(&0.3));
+        assert_eq!(axis.last(), Some(&0.99));
+        assert!(axis.windows(2).all(|w| w[0] < w[1]));
+    }
+}

@@ -1,0 +1,121 @@
+//! Tables 1 and 2: job execution times (days) under Weibull failures
+//! (k = 0.7 and 0.5), with the percentage gain of each prediction-aware
+//! heuristic over Young.
+
+use super::{scenario_for, sim_makespan, ExpOptions, ExperimentResult};
+use crate::config::{predictor_yu, predictor_zheng, Scenario};
+use crate::model::{Capping, StrategyKind};
+use crate::report::Table;
+use crate::util::units::to_days;
+
+/// Heuristic rows, in paper order, for a window size.
+fn table_rows(i_win: f64) -> Vec<StrategyKind> {
+    let mut rows = vec![StrategyKind::Young, StrategyKind::ExactPrediction, StrategyKind::NoCkptI];
+    if i_win >= 600.0 {
+        rows.push(StrategyKind::WithCkptI);
+    }
+    rows.push(StrategyKind::Instant);
+    rows
+}
+
+/// One (Table 1 or Table 2) reproduction: Weibull shape `k`.
+pub fn table_exec(k: f64, opts: &ExpOptions) -> anyhow::Result<ExperimentResult> {
+    let dist = format!("weibull:{k}");
+    let mut result = ExperimentResult::default();
+    for i_win in [300.0, 3000.0] {
+        let mut t = Table::new([
+            "strategy".to_string(),
+            "yu 2^16 days (gain)".to_string(),
+            "yu 2^19 days (gain)".to_string(),
+            "zheng 2^16 days (gain)".to_string(),
+            "zheng 2^19 days (gain)".to_string(),
+        ]);
+        // Column setup: (predictor name, N).
+        let mut columns: Vec<(String, Scenario)> = Vec::new();
+        for (pname, make) in [("yu", true), ("zheng", false)] {
+            for n in [1u64 << 16, 1u64 << 19] {
+                let pred = if make { predictor_yu(i_win) } else { predictor_zheng(i_win) };
+                let mut s = Scenario::paper(n, pred);
+                s.fault_dist = dist.clone();
+                columns.push((format!("{pname}-{n}"), s));
+            }
+        }
+        // Young execution time per column (the gain baseline).
+        let youngs: Vec<f64> = columns
+            .iter()
+            .map(|(_, s)| sim_makespan(s, StrategyKind::Young, opts).mean())
+            .collect();
+
+        for kind in table_rows(i_win) {
+            let mut cells = vec![kind.name().to_string()];
+            for (ci, (_, s)) in columns.iter().enumerate() {
+                let span = if kind == StrategyKind::Young {
+                    youngs[ci]
+                } else {
+                    sim_makespan(s, kind, opts).mean()
+                };
+                let days = to_days(span);
+                if kind == StrategyKind::Young {
+                    cells.push(format!("{days:.1}"));
+                } else {
+                    let gain = 100.0 * (1.0 - span / youngs[ci]);
+                    cells.push(format!("{days:.1} ({gain:.0}%)"));
+                }
+            }
+            t.row(cells);
+        }
+        result.tables.push((format!("table-weibull{k}-I{i_win}"), t));
+    }
+    Ok(result)
+}
+
+/// Analytic preview of the same table (no simulation; used by the
+/// quick bench mode and the planner CLI).
+pub fn table_exec_analytic(k: f64) -> ExperimentResult {
+    let _ = k; // the analytic model is distribution-free (uses mu only)
+    let mut result = ExperimentResult::default();
+    for i_win in [300.0, 3000.0] {
+        let mut t = Table::new(["strategy", "yu 2^16", "yu 2^19", "zheng 2^16", "zheng 2^19"]);
+        let mut columns = Vec::new();
+        for yu in [true, false] {
+            for n in [1u64 << 16, 1u64 << 19] {
+                let pred = if yu { predictor_yu(i_win) } else { predictor_zheng(i_win) };
+                columns.push(Scenario::paper(n, pred));
+            }
+        }
+        for kind in table_rows(i_win) {
+            let mut cells = vec![kind.name().to_string()];
+            for s in &columns {
+                let sk = scenario_for(kind, s);
+                let p = crate::model::Params::from_scenario(&sk);
+                let (_, w) = crate::model::optimize(&p, kind, Capping::Uncapped);
+                let days = to_days(s.work / (1.0 - w.min(0.999)));
+                cells.push(format!("{days:.1}"));
+            }
+            t.row(cells);
+        }
+        result.tables.push((format!("table-analytic-I{i_win}"), t));
+    }
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_sets() {
+        assert_eq!(table_rows(300.0).len(), 4);
+        assert_eq!(table_rows(3000.0).len(), 5);
+        assert_eq!(table_rows(300.0)[0], StrategyKind::Young);
+    }
+
+    #[test]
+    fn analytic_table_renders() {
+        let r = table_exec_analytic(0.7);
+        assert_eq!(r.tables.len(), 2);
+        let rendered = r.render();
+        assert!(rendered.contains("Young"));
+        assert!(rendered.contains("table-analytic-I300"));
+    }
+}

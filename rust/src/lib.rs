@@ -1,0 +1,50 @@
+//! # ckptfp — fault-prediction-aware checkpointing
+//!
+//! A reproduction-grade implementation of *"Impact of fault prediction on
+//! checkpointing strategies"* (Aupy, Robert, Vivien, Zaidouni, 2012) as a
+//! deployable framework:
+//!
+//! * [`model`] — the paper's analytical waste model (Eqs. 1–12) and the
+//!   §3.3/§4.3 optimal-period case analysis, in closed form;
+//! * [`runtime`] — the AOT path: loads the JAX/Pallas-compiled planner
+//!   (`artifacts/*.hlo.txt`) through PJRT and evaluates waste surfaces /
+//!   grid-argmin plans natively;
+//! * [`trace`] — stochastic fault + predictor simulation (recall,
+//!   precision, exact dates or prediction windows, lead time);
+//! * [`sim`] — the discrete-event execution engine that replays a
+//!   checkpointing strategy against a trace;
+//! * [`strategies`] — Young, Daly, ExactPrediction, Instant, NoCkptI,
+//!   WithCkptI, Migration and the brute-force BestPeriod search;
+//! * [`coordinator`] — leader/worker experiment orchestration, a dynamic
+//!   batcher for planning requests and a TCP/JSONL planner service;
+//! * [`experiments`] — the §5 evaluation scenarios (every figure & table).
+//!
+//! Substrate modules ([`rng`], [`dist`], [`util`], [`config`], [`cli`],
+//! [`report`], [`testkit`]) are implemented from scratch — the build is
+//! fully offline and depends only on the `xla` PJRT bindings and `anyhow`.
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod dist;
+pub mod experiments;
+pub mod model;
+pub mod report;
+pub mod rng;
+pub mod runtime;
+pub mod sim;
+pub mod strategies;
+pub mod testkit;
+pub mod trace;
+pub mod util;
+
+/// Convenient glob import for examples and binaries.
+pub mod prelude {
+    pub use crate::config::{Platform, Predictor, Scenario};
+    pub use crate::dist::{Distribution, Exponential, Uniform, Weibull};
+    pub use crate::model::{OptimalPlan, StrategyKind};
+    pub use crate::rng::Pcg64;
+    pub use crate::sim::{Outcome, SimConfig};
+    pub use crate::strategies::{ProactiveMode, StrategySpec};
+    pub use crate::util::stats::Summary;
+}

@@ -1,0 +1,240 @@
+//! `ckptfp` — the command-line front end.
+//!
+//! ```text
+//! ckptfp plan       [--n-procs N | --mu-mn M] [--recall R --precision P --window I] [--hlo] [--json]
+//! ckptfp simulate   [--strategy NAME] [--n-procs N] [--reps K] [--dist exp|weibull:K]
+//! ckptfp experiment <fig4..fig11|tab1|tab2|tab3|all> [--reps K] [--best-period] [--out DIR]
+//! ckptfp serve      [--addr HOST:PORT]
+//! ckptfp trace      [--out FILE] [--horizon SECONDS] [--n-procs N]
+//! ckptfp config     <file.toml> — validate and print a scenario
+//! ```
+
+use anyhow::Context;
+use ckptfp::cli::Args;
+use ckptfp::config::{Predictor, Scenario};
+use ckptfp::coordinator::{serve, Batcher, BatcherConfig, ServiceConfig};
+use ckptfp::experiments::{all_experiments, run_experiment, ExpOptions};
+use ckptfp::model::{plan, Capping, Params, StrategyKind};
+use ckptfp::report::Table;
+use ckptfp::runtime::HloPlanner;
+use ckptfp::sim::run_replications;
+use ckptfp::strategies::spec_for;
+use ckptfp::trace::TraceGen;
+use ckptfp::util::units::MIN;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn scenario_from_args(args: &mut Args) -> anyhow::Result<Scenario> {
+    let n_procs: u64 = args.get("n-procs", 1u64 << 16)?;
+    let recall: f64 = args.get("recall", 0.85)?;
+    let precision: f64 = args.get("precision", 0.82)?;
+    let window: f64 = args.get("window", 0.0)?;
+    let pred = if window > 0.0 {
+        Predictor::windowed(recall, precision, window)
+    } else {
+        Predictor::exact(recall, precision)
+    };
+    let mut s = Scenario::paper(n_procs, pred);
+    if let Some(mu_mn) = args.get_opt::<f64>("mu-mn")? {
+        // Direct platform-MTBF override (minutes), as in the paper text.
+        s.platform.mu_ind = mu_mn * MIN * s.platform.n_procs as f64;
+    }
+    if let Some(c) = args.get_opt::<f64>("c")? {
+        s.platform.c = c;
+    }
+    if let Some(w) = args.get_opt::<f64>("work")? {
+        s.work = w;
+    }
+    s.fault_dist = args.get_str("dist", &s.fault_dist.clone());
+    s.false_pred_dist = args.get_str("false-dist", "");
+    s.seed = args.get("seed", s.seed)?;
+    s.validate()?;
+    Ok(s)
+}
+
+fn run() -> anyhow::Result<()> {
+    let mut args = Args::from_env()?;
+    match args.command() {
+        Some("plan") => cmd_plan(&mut args),
+        Some("simulate") => cmd_simulate(&mut args),
+        Some("experiment") => cmd_experiment(&mut args),
+        Some("serve") => cmd_serve(&mut args),
+        Some("trace") => cmd_trace(&mut args),
+        Some("config") => cmd_config(&mut args),
+        Some(other) => anyhow::bail!("unknown command '{other}' — see `ckptfp help`"),
+        None => {
+            print!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "\
+ckptfp — fault-prediction-aware checkpointing (Aupy et al. 2012 reproduction)
+
+commands:
+  plan        optimal strategy/period for a platform + predictor
+  simulate    discrete-event simulation of one strategy
+  experiment  regenerate a paper figure/table (fig4..fig11, tab1..tab3, all)
+  serve       TCP/JSONL planner service (AOT XLA planner)
+  trace       dump a generated fault/prediction trace
+  config      validate a TOML scenario file
+";
+
+fn cmd_plan(args: &mut Args) -> anyhow::Result<()> {
+    let use_hlo = args.switch("hlo");
+    let as_json = args.switch("json");
+    let capped = args.switch("capped");
+    let s = scenario_from_args(args)?;
+    args.finish()?;
+    let params = Params::from_scenario(&s);
+
+    let output = if use_hlo {
+        let mut planner = HloPlanner::open_default().context("opening HLO planner")?;
+        let out = planner.plan_batch(&[params])?.remove(0);
+        out
+    } else {
+        let capping = if capped { Capping::Capped } else { Capping::Uncapped };
+        let p = plan(&params, capping, true);
+        ckptfp::runtime::PlanOutput {
+            waste: p.waste,
+            period: p.period,
+            winner: p.winner,
+            winner_waste: p.winner_waste(),
+            winner_period: p.winner_period(),
+        }
+    };
+
+    if as_json {
+        println!("{}", ckptfp::coordinator::protocol::plan_response(&output));
+        return Ok(());
+    }
+    let mut t = Table::new(["strategy", "period (s)", "waste"]);
+    for k in StrategyKind::ALL {
+        t.row([
+            k.name().to_string(),
+            format!("{:.1}", output.period[k as usize]),
+            format!("{:.4}", output.waste[k as usize]),
+        ]);
+    }
+    println!(
+        "platform mu = {:.1} mn (N = {}), predictor r = {} p = {} I = {}s",
+        s.mu() / MIN,
+        s.platform.n_procs,
+        s.predictor.recall,
+        s.predictor.precision,
+        s.predictor.window
+    );
+    print!("{t}");
+    println!(
+        "winner: {} (period {:.1} s, waste {:.4}){}",
+        output.winner.name(),
+        output.winner_period,
+        output.winner_waste,
+        if use_hlo { " [via AOT XLA planner]" } else { "" }
+    );
+    Ok(())
+}
+
+fn cmd_simulate(args: &mut Args) -> anyhow::Result<()> {
+    let strategy = args.get_str("strategy", "ExactPrediction");
+    let reps: u64 = args.get("reps", 20)?;
+    let s = scenario_from_args(args)?;
+    args.finish()?;
+    let kind = StrategyKind::ALL
+        .into_iter()
+        .find(|k| k.name().eq_ignore_ascii_case(&strategy))
+        .ok_or_else(|| anyhow::anyhow!("unknown strategy '{strategy}'"))?;
+    let sk = ckptfp::experiments::scenario_for(kind, &s);
+    let spec = spec_for(kind, &sk, Capping::Uncapped);
+    let report = run_replications(&sk, &spec, reps)?;
+    println!(
+        "{}: waste {} | makespan {:.2} days | completion {:.0}%",
+        spec.name,
+        report.waste,
+        report.mean_makespan() / 86400.0,
+        report.completion_rate() * 100.0
+    );
+    let p = Params::from_scenario(&sk);
+    let analytic = ckptfp::model::waste_of(&p, kind, spec.t_r, ckptfp::model::tp_opt(&p));
+    println!("analytic waste at T_R = {:.1}: {:.4}", spec.t_r, analytic);
+    Ok(())
+}
+
+fn cmd_experiment(args: &mut Args) -> anyhow::Result<()> {
+    let mut opts = ExpOptions::default();
+    opts.reps = args.get("reps", opts.reps)?;
+    opts.workers = args.get("workers", opts.workers)?;
+    opts.best_period = args.switch("best-period");
+    opts.bp_reps = args.get("bp-reps", opts.bp_reps)?;
+    opts.bp_candidates = args.get("bp-candidates", opts.bp_candidates)?;
+    let out_dir = args.get_str("out", "results");
+    let ids: Vec<String> = if args.positional().is_empty() {
+        anyhow::bail!("experiment needs an id: {:?} or 'all'", all_experiments());
+    } else if args.positional() == ["all"] {
+        all_experiments().into_iter().map(String::from).collect()
+    } else {
+        args.positional().to_vec()
+    };
+    args.finish()?;
+    for id in &ids {
+        let started = std::time::Instant::now();
+        let result = run_experiment(id, &opts)?;
+        print!("{}", result.render());
+        result.write_csvs(std::path::Path::new(&out_dir))?;
+        eprintln!("[{id}] done in {:.1}s -> {out_dir}/", started.elapsed().as_secs_f64());
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &mut Args) -> anyhow::Result<()> {
+    let addr = args.get_str("addr", "127.0.0.1:7471");
+    let max_batch: usize = args.get("max-batch", 64)?;
+    let max_delay_ms: u64 = args.get("max-delay-ms", 2)?;
+    args.finish()?;
+    let batcher = Batcher::spawn_default(BatcherConfig {
+        max_batch,
+        max_delay: std::time::Duration::from_millis(max_delay_ms),
+        eager: max_delay_ms == 0,
+        ..Default::default()
+    })
+    .context("starting batcher (is artifacts/ built?)")?;
+    let handle = serve(batcher, ServiceConfig { addr })?;
+    println!("ckptfp planner service listening on {}", handle.addr);
+    println!("protocol: one JSON object per line; see coordinator::protocol docs");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_trace(args: &mut Args) -> anyhow::Result<()> {
+    let out = args.get_str("out", "/dev/stdout");
+    let horizon: f64 = args.get("horizon", 1.0e6)?;
+    let rep: u64 = args.get("rep", 0)?;
+    let s = scenario_from_args(args)?;
+    args.finish()?;
+    let mut gen = TraceGen::new(&s, s.platform.c, s.seed, rep)?;
+    let mut file = std::io::BufWriter::new(std::fs::File::create(&out)?);
+    let (nf, np) = ckptfp::trace::io::write_trace(&mut file, &mut gen, horizon)?;
+    eprintln!("wrote {nf} faults, {np} predictions to {out}");
+    Ok(())
+}
+
+fn cmd_config(args: &mut Args) -> anyhow::Result<()> {
+    let path = args
+        .positional()
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("config needs a file path"))?
+        .clone();
+    args.finish()?;
+    let table = ckptfp::config::toml::Table::load(std::path::Path::new(&path))?;
+    let s = ckptfp::config::toml::scenario_from_table(&table)?;
+    println!("{s:#?}");
+    println!("platform MTBF: {:.1} mn", s.mu() / MIN);
+    Ok(())
+}

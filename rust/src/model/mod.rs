@@ -1,0 +1,212 @@
+//! The paper's analytical waste model, in closed form.
+//!
+//! This is the native mirror of the AOT-compiled L2 planner
+//! (`python/compile/model.py`): identical equations, identical case
+//! analysis. It serves three purposes: (i) validation target for the
+//! HLO artifacts (the integration tests cross-check both paths), (ii)
+//! fallback when `artifacts/` is absent, (iii) the uncapped-period
+//! formulas the §5 simulations use directly.
+
+mod optimal;
+mod waste;
+mod window;
+
+pub use optimal::*;
+pub use waste::*;
+pub use window::*;
+
+use crate::config::Scenario;
+
+/// Number of strategies on the kernel's `s` axis.
+pub const NSTRAT_USIZE: usize = 6;
+
+/// Strategy indices — shared with the Pallas kernel's `s` axis and the
+/// planner artifacts; keep in sync with `python/compile/kernels/waste_grid.py`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(usize)]
+pub enum StrategyKind {
+    /// Periodic checkpointing, predictions ignored (q = 0) [11].
+    Young = 0,
+    /// Exact-date predictions, always trusted (§3, q = 1).
+    ExactPrediction = 1,
+    /// Window treated as an exact date at its start (§4, strategy 1).
+    Instant = 2,
+    /// No checkpoints inside the prediction window (§4, strategy 2).
+    NoCkptI = 3,
+    /// Periodic proactive checkpoints inside the window (§4, strategy 3).
+    WithCkptI = 4,
+    /// Preventive migration instead of proactive checkpoint (§3.4).
+    Migration = 5,
+}
+
+impl StrategyKind {
+    pub const ALL: [StrategyKind; 6] = [
+        StrategyKind::Young,
+        StrategyKind::ExactPrediction,
+        StrategyKind::Instant,
+        StrategyKind::NoCkptI,
+        StrategyKind::WithCkptI,
+        StrategyKind::Migration,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            StrategyKind::Young => "Young",
+            StrategyKind::ExactPrediction => "ExactPrediction",
+            StrategyKind::Instant => "Instant",
+            StrategyKind::NoCkptI => "NoCkptI",
+            StrategyKind::WithCkptI => "WithCkptI",
+            StrategyKind::Migration => "Migration",
+        }
+    }
+
+    pub fn from_index(i: usize) -> Option<StrategyKind> {
+        StrategyKind::ALL.get(i).copied()
+    }
+}
+
+impl std::fmt::Display for StrategyKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Scalar parameter bundle for the closed forms (built from a
+/// [`Scenario`]; mirrors the raw-parameter row of the HLO planner).
+#[derive(Debug, Clone, Copy)]
+pub struct Params {
+    pub mu: f64,
+    pub c: f64,
+    pub d: f64,
+    pub r_rec: f64, // recovery duration R (r is taken by recall below)
+    pub recall: f64,
+    pub precision: f64,
+    pub i: f64,
+    pub ef: f64,
+    pub alpha: f64,
+    pub m: f64,
+}
+
+impl Params {
+    pub fn from_scenario(s: &Scenario) -> Params {
+        Params {
+            mu: s.mu(),
+            c: s.platform.c,
+            d: s.platform.d,
+            r_rec: s.platform.r,
+            recall: s.predictor.recall,
+            precision: s.predictor.precision,
+            i: s.predictor.window,
+            ef: s.predictor.ef,
+            alpha: s.alpha,
+            m: s.migration,
+        }
+    }
+
+    /// D + R, the per-fault fixed cost.
+    pub fn dr(&self) -> f64 {
+        self.d + self.r_rec
+    }
+
+    /// 1 / mu_P = r / (p mu); 0 when the predictor never fires.
+    pub fn inv_mu_p(&self) -> f64 {
+        if self.recall == 0.0 { 0.0 } else { self.recall / (self.precision * self.mu) }
+    }
+
+    /// 1 / mu_NP = (1 - r) / mu.
+    pub fn inv_mu_np(&self) -> f64 {
+        (1.0 - self.recall) / self.mu
+    }
+
+    /// mu_e from §2.3.
+    pub fn mu_e(&self) -> f64 {
+        let inv = self.inv_mu_p() + self.inv_mu_np();
+        if inv == 0.0 { f64::INFINITY } else { 1.0 / inv }
+    }
+
+    /// I' at q = 1: (1-p) I + p E_I^(f) (§4.1).
+    pub fn i1(&self) -> f64 {
+        (1.0 - self.precision) * self.i + self.precision * self.ef
+    }
+
+    /// Fraction of time in regular mode at q = 1, clamped to [0, 1].
+    pub fn frac_reg(&self) -> f64 {
+        (1.0 - self.i1() * self.inv_mu_p()).clamp(0.0, 1.0)
+    }
+
+    /// The raw f32 row consumed by the HLO planner artifacts.
+    pub fn to_raw_row(&self) -> [f32; 10] {
+        [
+            self.mu as f32,
+            self.c as f32,
+            self.d as f32,
+            self.r_rec as f32,
+            self.recall as f32,
+            self.precision as f32,
+            self.i as f32,
+            self.ef as f32,
+            self.alpha as f32,
+            self.m as f32,
+        ]
+    }
+}
+
+/// Result of planning one configuration: per-strategy optimum plus the
+/// winning strategy.
+#[derive(Debug, Clone)]
+pub struct OptimalPlan {
+    /// Optimal period per strategy (same indexing as [`StrategyKind`]).
+    pub period: [f64; 6],
+    /// Expected waste per strategy at its optimal period, clamped to 1.
+    pub waste: [f64; 6],
+    /// Winning strategy.
+    pub winner: StrategyKind,
+    /// q decision of the winner (0 = ignore predictor, 1 = trust).
+    pub q: u8,
+}
+
+impl OptimalPlan {
+    pub fn winner_waste(&self) -> f64 {
+        self.waste[self.winner as usize]
+    }
+
+    pub fn winner_period(&self) -> f64 {
+        self.period[self.winner as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Predictor;
+    use crate::util::approx_eq;
+
+    #[test]
+    fn params_derived_quantities() {
+        let s = Scenario::paper(1 << 16, Predictor::windowed(0.7, 0.4, 3000.0));
+        let p = Params::from_scenario(&s);
+        assert!(approx_eq(p.inv_mu_p(), 0.7 / (0.4 * p.mu), 1e-12));
+        assert!(approx_eq(p.inv_mu_np(), 0.3 / p.mu, 1e-12));
+        assert!(approx_eq(p.i1(), 0.6 * 3000.0 + 0.4 * 1500.0, 1e-12));
+        assert!(p.frac_reg() > 0.0 && p.frac_reg() < 1.0);
+    }
+
+    #[test]
+    fn strategy_kind_round_trip() {
+        for (i, k) in StrategyKind::ALL.iter().enumerate() {
+            assert_eq!(StrategyKind::from_index(i), Some(*k));
+            assert_eq!(*k as usize, i);
+        }
+        assert_eq!(StrategyKind::from_index(6), None);
+    }
+
+    #[test]
+    fn raw_row_layout() {
+        let s = Scenario::paper(1 << 19, Predictor::windowed(0.85, 0.82, 300.0));
+        let row = Params::from_scenario(&s).to_raw_row();
+        assert_eq!(row[1], 600.0); // C
+        assert_eq!(row[2], 60.0); // D
+        assert_eq!(row[4], 0.85); // recall
+        assert_eq!(row[8], 0.27); // alpha
+    }
+}

@@ -1,0 +1,170 @@
+//! Closed-form waste expressions — Eqs. (1), (3), (4), (5), (6) of the
+//! paper, as functions of the regular period T.
+//!
+//! These must match `python/compile/kernels/ref.py` bit-for-bit in
+//! structure: the integration tests compare the HLO planner output
+//! against this module.
+
+use super::{Params, StrategyKind};
+
+/// Eq. (1) with general trust probability q: the exact-date model.
+/// WASTE = C/T + (1/mu) [ (1-rq) T/2 + D + R + (qr/p) C ].
+pub fn waste_exact_q(p: &Params, t: f64, q: f64) -> f64 {
+    let rq = p.recall * q;
+    p.c / t + (1.0 / p.mu) * ((1.0 - rq) * t / 2.0 + p.dr() + rq / p.precision.max(1e-12) * p.c)
+}
+
+/// Young's baseline: Eq. (1) at q = 0.
+pub fn waste_young(p: &Params, t: f64) -> f64 {
+    p.c / t + (t / 2.0 + p.dr()) / p.mu
+}
+
+/// Eq. (5): Instant — window start treated as an exact prediction date.
+pub fn waste_instant(p: &Params, t: f64) -> f64 {
+    waste_exact_q(p, t, 1.0) + p.recall / p.mu * p.ef.min(t / 2.0)
+}
+
+/// Eq. (6) at q = 1: NoCkptI — work through the window unprotected.
+pub fn waste_nockpt(p: &Params, t: f64) -> f64 {
+    let inv_mup = p.inv_mu_p();
+    let inv_munp = p.inv_mu_np();
+    let frac_reg = p.frac_reg();
+    (frac_reg / t + inv_mup) * p.c
+        + p.precision * inv_mup * p.ef
+        + frac_reg * inv_munp * t / 2.0
+        + (p.precision * inv_mup + frac_reg * inv_munp) * p.dr()
+}
+
+/// Eq. (4) at q = 1: WithCkptI — proactive checkpoints with period `tp`
+/// inside the window.
+pub fn waste_withckpt(p: &Params, t: f64, tp: f64) -> f64 {
+    let inv_mup = p.inv_mu_p();
+    let inv_munp = p.inv_mu_np();
+    let frac_reg = p.frac_reg();
+    (frac_reg / t + p.i1() * inv_mup / tp + inv_mup) * p.c
+        + p.precision * inv_mup * tp
+        + frac_reg * inv_munp * t / 2.0
+        + (p.precision * inv_mup + frac_reg * inv_munp) * p.dr()
+}
+
+/// Eq. (3): prediction + preventive migration, general q.
+pub fn waste_migration_q(p: &Params, t: f64, q: f64) -> f64 {
+    let rq = p.recall * q;
+    p.c / t
+        + (1.0 / p.mu)
+            * ((1.0 - rq) * (t / 2.0 + p.dr()) + rq / p.precision.max(1e-12) * p.m)
+}
+
+/// Waste of `kind` at period `t` with q = 1 (q = 0 for Young); `tp` is
+/// only read by WithCkptI.
+pub fn waste_of(p: &Params, kind: StrategyKind, t: f64, tp: f64) -> f64 {
+    match kind {
+        StrategyKind::Young => waste_young(p, t),
+        StrategyKind::ExactPrediction => waste_exact_q(p, t, 1.0),
+        StrategyKind::Instant => waste_instant(p, t),
+        StrategyKind::NoCkptI => waste_nockpt(p, t),
+        StrategyKind::WithCkptI => waste_withckpt(p, t, tp),
+        StrategyKind::Migration => waste_migration_q(p, t, 1.0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Predictor, Scenario};
+    use crate::util::approx_eq;
+
+    fn params(recall: f64, precision: f64, window: f64) -> Params {
+        let pred = if window > 0.0 {
+            Predictor::windowed(recall, precision, window)
+        } else {
+            Predictor::exact(recall, precision)
+        };
+        Params::from_scenario(&Scenario::paper(1 << 16, pred))
+    }
+
+    #[test]
+    fn q_interpolation_is_affine() {
+        // §3.3: WASTE(q) is affine in q — the basis for the q ∈ {0,1}
+        // endpoint theorem. Check midpoint = average of endpoints.
+        let p = params(0.7, 0.4, 0.0);
+        for t in [1000.0, 5000.0, 12000.0] {
+            let w0 = waste_exact_q(&p, t, 0.0);
+            let w1 = waste_exact_q(&p, t, 1.0);
+            let wh = waste_exact_q(&p, t, 0.5);
+            assert!(approx_eq(wh, 0.5 * (w0 + w1), 1e-12), "t={t}");
+            let m0 = waste_migration_q(&p, t, 0.0);
+            let m1 = waste_migration_q(&p, t, 1.0);
+            let mh = waste_migration_q(&p, t, 0.5);
+            assert!(approx_eq(mh, 0.5 * (m0 + m1), 1e-12), "t={t}");
+        }
+    }
+
+    #[test]
+    fn young_is_exact_q0() {
+        let p = params(0.85, 0.82, 0.0);
+        for t in [800.0, 3000.0, 9000.0] {
+            assert!(approx_eq(waste_young(&p, t), waste_exact_q(&p, t, 0.0), 1e-12));
+        }
+    }
+
+    #[test]
+    fn instant_reduces_to_exact_when_window_zero() {
+        // §4.2: I = 0 ⇒ E_I^f = 0 ⇒ WASTE_INSTANT = WASTE_EXACT(q=1).
+        let p = params(0.85, 0.82, 0.0);
+        for t in [800.0, 3000.0, 9000.0] {
+            assert!(approx_eq(waste_instant(&p, t), waste_exact_q(&p, t, 1.0), 1e-12));
+        }
+    }
+
+    #[test]
+    fn nockpt_equals_instant_when_window_zero() {
+        // §4.2: Eqs. (5) and (6) coincide at I = 0.
+        let p = params(0.85, 0.82, 0.0);
+        for t in [800.0, 3000.0, 9000.0] {
+            assert!(
+                approx_eq(waste_nockpt(&p, t), waste_instant(&p, t), 1e-9),
+                "t={t}: {} vs {}",
+                waste_nockpt(&p, t),
+                waste_instant(&p, t)
+            );
+        }
+    }
+
+    #[test]
+    fn withckpt_minus_nockpt_matches_eq11() {
+        // Eq. (11): the difference depends only on T_P, not on T_R.
+        let p = params(0.7, 0.4, 3000.0);
+        let tp = 1500.0;
+        let d1 = waste_withckpt(&p, 2000.0, tp) - waste_nockpt(&p, 2000.0);
+        let d2 = waste_withckpt(&p, 9000.0, tp) - waste_nockpt(&p, 9000.0);
+        assert!(approx_eq(d1, d2, 1e-9));
+        let expect = p.recall / p.mu
+            * (p.i1() / p.precision * p.c / tp + tp - p.ef);
+        assert!(approx_eq(d1, expect, 1e-9), "{d1} vs {expect}");
+    }
+
+    #[test]
+    fn convexity_numeric() {
+        let p = params(0.85, 0.82, 3000.0);
+        let tp = 1500.0;
+        for kind in StrategyKind::ALL {
+            let f = |t: f64| waste_of(&p, kind, t, tp);
+            for t in [1500.0f64, 4000.0, 10000.0] {
+                let h = 1.0;
+                let second = f(t + h) - 2.0 * f(t) + f(t - h);
+                assert!(second >= -1e-12, "{kind} at {t}: {second}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_recall_degenerates_to_young() {
+        let p = params(0.0, 0.9, 0.0);
+        for t in [1000.0, 4000.0] {
+            for kind in [StrategyKind::ExactPrediction, StrategyKind::Instant, StrategyKind::NoCkptI] {
+                assert!(approx_eq(waste_of(&p, kind, t, 600.0), waste_young(&p, t), 1e-12));
+            }
+        }
+    }
+}

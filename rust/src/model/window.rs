@@ -1,0 +1,136 @@
+//! Prediction-window machinery: the proactive period T_P (Eq. 7) with
+//! its integer snapping, and the Eq. (12) dominance condition between
+//! NoCkptI and WithCkptI.
+
+use super::Params;
+
+/// Unsnapped extremum of the proactive period (Eq. 7):
+/// T_P^extr = sqrt( ((1-p) I + p E_I^f) / p * C ).
+pub fn tp_extr(p: &Params) -> f64 {
+    (p.i1() / p.precision.max(1e-12) * p.c).max(0.0).sqrt()
+}
+
+/// The T_P-dependent share of WASTE_WithCkptI (up to the rq/mu factor):
+/// (I1/p) C / T_P + T_P. Convex with minimum at [`tp_extr`].
+pub fn tp_share(p: &Params, tp: f64) -> f64 {
+    p.i1() / p.precision.max(1e-12) * p.c / tp + tp
+}
+
+/// Snapped optimal proactive period (§4.3): choose between I/k and
+/// I/(k+1) with k = floor(I / T_P^extr), subject to T_P >= C.
+pub fn tp_opt(p: &Params) -> f64 {
+    let extr = tp_extr(p).max(1e-9);
+    if p.i <= 0.0 {
+        return p.c.max(extr);
+    }
+    let k = (p.i / extr).floor().max(1.0);
+    let cand1 = p.i / k;
+    let cand2 = p.i / (k + 1.0);
+    let mut tp = if tp_share(p, cand1) <= tp_share(p, cand2) { cand1 } else { cand2 };
+    if tp < p.c {
+        // Both candidates below C ⇒ T_P = C (paper); if only cand2 is,
+        // cand1 is the wider divisor and already >= C.
+        tp = cand1.max(p.c);
+    }
+    tp.max(p.c)
+}
+
+/// Eq. (12): sufficient condition under which NoCkptI dominates
+/// WithCkptI (it is *not* worth checkpointing inside the window):
+/// 2 sqrt( (I1/p) C ) >= E_I^f.
+///
+/// (The paper's display squares the right-hand side; the derivation —
+/// evaluate Eq. (11) at T_P^extr — gives the unsquared form used here.)
+pub fn nockpt_dominates(p: &Params) -> bool {
+    2.0 * tp_extr(p) >= p.ef
+}
+
+/// The uniform-fault specialization quoted by the paper:
+/// with E_I^f = I/2 the condition becomes I <= 16 (1 - p/2)/p * C.
+pub fn nockpt_dominates_uniform(p: &Params) -> bool {
+    p.i <= 16.0 * (1.0 - p.precision / 2.0) / p.precision.max(1e-12) * p.c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Predictor, Scenario};
+    use crate::model::waste::{waste_nockpt, waste_withckpt};
+    use crate::util::approx_eq;
+
+    fn params(recall: f64, precision: f64, window: f64) -> Params {
+        Params::from_scenario(&Scenario::paper(
+            1 << 16,
+            Predictor::windowed(recall, precision, window),
+        ))
+    }
+
+    #[test]
+    fn tp_opt_divides_window() {
+        for window in [1200.0, 3000.0, 6000.0, 14400.0] {
+            let p = params(0.85, 0.82, window);
+            let tp = tp_opt(&p);
+            let k = window / tp;
+            assert!((k - k.round()).abs() < 1e-9, "I={window} tp={tp} k={k}");
+            assert!(tp >= p.c - 1e-9);
+        }
+    }
+
+    #[test]
+    fn tp_opt_beats_other_divisors() {
+        let p = params(0.7, 0.4, 6000.0);
+        let tp = tp_opt(&p);
+        let best_share = tp_share(&p, tp);
+        for k in 1..20 {
+            let cand = 6000.0 / k as f64;
+            if cand >= p.c {
+                assert!(best_share <= tp_share(&p, cand) + 1e-9, "k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn tp_small_window_clamps_to_c() {
+        let p = params(0.85, 0.82, 700.0); // barely above C = 600
+        let tp = tp_opt(&p);
+        assert!(approx_eq(tp, 700.0, 1e-9), "tp={tp}"); // I/1, >= C
+    }
+
+    #[test]
+    fn eq12_consistent_with_direct_comparison() {
+        // When Eq. (12) holds, WithCkptI at its *optimal* T_P is no
+        // better than NoCkptI (compare the T_R-independent difference).
+        for (r, p_, i) in [(0.85, 0.82, 3000.0), (0.7, 0.4, 3000.0), (0.85, 0.82, 300.0)] {
+            let p = params(r, p_, i);
+            let tp = tp_opt(&p);
+            let diff = waste_withckpt(&p, 5000.0, tp) - waste_nockpt(&p, 5000.0);
+            if nockpt_dominates(&p) {
+                assert!(diff >= -1e-9, "r={r} p={p_} I={i}: diff={diff}");
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_condition_matches_general_form() {
+        // With Ef = I/2 both formulations must agree.
+        for (p_, i) in [(0.4, 3000.0), (0.82, 3000.0), (0.82, 200000.0), (0.9, 80000.0)] {
+            let p = params(0.8, p_, i);
+            assert_eq!(
+                nockpt_dominates(&p),
+                nockpt_dominates_uniform(&p),
+                "p={p_} I={i}"
+            );
+        }
+    }
+
+    #[test]
+    fn paper_i300_and_i3000_satisfy_eq12() {
+        // For both §5 predictors at I = 300 s and 3000 s the uniform
+        // condition holds (I <= 16 (1-p/2)/p C with C = 600).
+        for (r, p_) in [(0.85, 0.82), (0.7, 0.4)] {
+            for i in [300.0, 3000.0] {
+                assert!(nockpt_dominates(&params(r, p_, i)), "r={r} p={p_} I={i}");
+            }
+        }
+    }
+}

@@ -1,0 +1,66 @@
+//! CSV emission for archived experiment results.
+
+use std::io::Write;
+use std::path::Path;
+
+use super::FigureData;
+
+/// Write rows of stringly data with a header.
+pub fn write_csv(
+    path: &Path,
+    header: &[&str],
+    rows: &[Vec<String>],
+) -> anyhow::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "{}", header.join(","))?;
+    for row in rows {
+        anyhow::ensure!(row.len() == header.len(), "csv row width mismatch");
+        writeln!(f, "{}", row.join(","))?;
+    }
+    Ok(())
+}
+
+/// Long-format figure dump: figure,series,x,y.
+pub fn write_figure_csv(path: &Path, fig: &FigureData) -> anyhow::Result<()> {
+    let mut rows = Vec::new();
+    for s in &fig.series {
+        for (x, y) in &s.points {
+            rows.push(vec![fig.name.clone(), s.label.clone(), x.to_string(), y.to_string()]);
+        }
+    }
+    write_csv(path, &["figure", "series", "x", "y"], &rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::report::Series;
+
+    #[test]
+    fn round_trips_to_disk() {
+        let dir = std::env::temp_dir().join(format!("ckptfp-csv-{}", std::process::id()));
+        let path = dir.join("test.csv");
+        let mut fig = FigureData::new("figX", "N", "waste");
+        let s = fig.series_mut("Young");
+        s.push(1.0, 0.5);
+        s.push(2.0, 0.25);
+        write_figure_csv(&path, &fig).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("figure,series,x,y\n"));
+        assert!(text.contains("figX,Young,1,0.5"));
+        std::fs::remove_dir_all(&dir).unwrap();
+        let _ = Series::new("unused");
+    }
+
+    #[test]
+    fn rejects_ragged() {
+        let dir = std::env::temp_dir().join(format!("ckptfp-csv2-{}", std::process::id()));
+        let path = dir.join("bad.csv");
+        let err = write_csv(&path, &["a", "b"], &[vec!["1".into()]]);
+        assert!(err.is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,9 @@
+//! Output formatting: ASCII tables, CSV emission, figure series.
+
+mod csv;
+mod series;
+mod table;
+
+pub use csv::{write_csv, write_figure_csv};
+pub use series::{FigureData, Series};
+pub use table::Table;

@@ -1,0 +1,107 @@
+//! Figure data: named series of (x, y) points, one figure per paper plot.
+
+/// One curve of a figure.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub label: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(label: impl Into<String>) -> Series {
+        Series { label: label.into(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.points.push((x, y));
+    }
+}
+
+/// A full figure: multiple series over a shared x axis.
+#[derive(Debug, Clone)]
+pub struct FigureData {
+    pub name: String,
+    pub x_label: String,
+    pub y_label: String,
+    pub series: Vec<Series>,
+}
+
+impl FigureData {
+    pub fn new(name: impl Into<String>, x_label: impl Into<String>, y_label: impl Into<String>) -> FigureData {
+        FigureData {
+            name: name.into(),
+            x_label: x_label.into(),
+            y_label: y_label.into(),
+            series: Vec::new(),
+        }
+    }
+
+    pub fn series_mut(&mut self, label: &str) -> &mut Series {
+        if let Some(i) = self.series.iter().position(|s| s.label == label) {
+            &mut self.series[i]
+        } else {
+            self.series.push(Series::new(label));
+            self.series.last_mut().unwrap()
+        }
+    }
+
+    pub fn get(&self, label: &str) -> Option<&Series> {
+        self.series.iter().find(|s| s.label == label)
+    }
+
+    /// Terminal rendering: a compact value grid (x down, series across).
+    pub fn render(&self) -> String {
+        let mut t = crate::report::Table::new(
+            std::iter::once(self.x_label.clone()).chain(self.series.iter().map(|s| s.label.clone())),
+        );
+        let mut xs: Vec<f64> = self.series.iter().flat_map(|s| s.points.iter().map(|p| p.0)).collect();
+        xs.sort_by(f64::total_cmp);
+        xs.dedup_by(|a, b| (*a - *b).abs() < 1e-9);
+        for x in xs {
+            let mut cells = vec![format_x(x)];
+            for s in &self.series {
+                let y = s
+                    .points
+                    .iter()
+                    .find(|p| (p.0 - x).abs() < 1e-9)
+                    .map(|p| format!("{:.4}", p.1))
+                    .unwrap_or_else(|| "-".into());
+                cells.push(y);
+            }
+            t.row(cells);
+        }
+        format!("# {} ({} vs {})\n{}", self.name, self.y_label, self.x_label, t.render())
+    }
+}
+
+fn format_x(x: f64) -> String {
+    if x == x.trunc() && x.abs() < 1e12 {
+        let n = x as i64;
+        // Annotate powers of two (the N axis of the paper's figures).
+        if n > 0 && (n & (n - 1)) == 0 {
+            return format!("{n} (2^{})", n.trailing_zeros());
+        }
+        format!("{n}")
+    } else {
+        format!("{x:.3}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_accumulate() {
+        let mut f = FigureData::new("fig4a", "N", "waste");
+        f.series_mut("Young").push(16384.0, 0.3);
+        f.series_mut("Young").push(32768.0, 0.4);
+        f.series_mut("Exact").push(16384.0, 0.2);
+        assert_eq!(f.series.len(), 2);
+        assert_eq!(f.get("Young").unwrap().points.len(), 2);
+        let s = f.render();
+        assert!(s.contains("16384 (2^14)"));
+        assert!(s.contains("0.3000"));
+        assert!(s.contains('-')); // missing Exact at 32768
+    }
+}

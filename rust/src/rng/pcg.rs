@@ -1,0 +1,146 @@
+//! PCG-XSL-RR 128/64: 128-bit LCG state, xorshift-low + random rotate
+//! output. Reference: M. O'Neill, "PCG: A Family of Simple Fast
+//! Space-Efficient Statistically Good Algorithms for Random Number
+//! Generation" (HMC-CS-2014-0905).
+
+const MUL: u128 = 0x2360ed051fc65da44385df649fccf645;
+
+/// 64-bit-output PCG with 128-bit state and a selectable stream.
+#[derive(Debug, Clone)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128, // odd stream selector
+}
+
+impl Pcg64 {
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let initstate = (seed as u128) << 64 | seed.wrapping_mul(0xda3e39cb94b95bdb) as u128;
+        let initseq = (stream as u128) << 64 | stream.wrapping_add(0x853c49e6748fea9b) as u128;
+        let mut rng = Pcg64 { state: 0, inc: (initseq << 1) | 1 };
+        rng.step();
+        rng.state = rng.state.wrapping_add(initstate);
+        rng.step();
+        rng
+    }
+
+    /// Seed from a single u64 (stream 0xcafe).
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0xcafe)
+    }
+
+    #[inline]
+    fn step(&mut self) {
+        self.state = self.state.wrapping_mul(MUL).wrapping_add(self.inc);
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.step();
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        let rot = (self.state >> 122) as u32;
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform f64 in the half-open interval (0, 1] — never returns 0,
+    /// safe as the argument of `ln()` for inverse-CDF sampling.
+    #[inline]
+    pub fn next_f64_open(&mut self) -> f64 {
+        // 53 random mantissa bits; map 0 -> 1.0 by using (x + 1) / 2^53.
+        let x = self.next_u64() >> 11;
+        (x as f64 + 1.0) * (1.0 / 9007199254740992.0)
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        let x = self.next_u64() >> 11;
+        x as f64 * (1.0 / 9007199254740992.0)
+    }
+
+    /// Bernoulli draw.
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Uniform integer in [0, n) without modulo bias (Lemire's method).
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(n as u128);
+            let lo = m as u64;
+            if lo >= n {
+                return (m >> 64) as u64;
+            }
+            // Rejection zone: only when lo < n do we need the threshold test.
+            let t = n.wrapping_neg() % n;
+            if lo >= t {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Take `n` raw outputs (test helper).
+    pub fn take_u64(mut self, n: usize) -> Vec<u64> {
+        (0..n).map(|_| self.next_u64()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = Pcg64::new(1, 2).take_u64(16);
+        let b = Pcg64::new(1, 2).take_u64(16);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn streams_differ() {
+        let a = Pcg64::new(1, 2).take_u64(16);
+        let b = Pcg64::new(1, 3).take_u64(16);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn f64_bounds() {
+        let mut rng = Pcg64::seeded(7);
+        for _ in 0..10_000 {
+            let x = rng.next_f64();
+            assert!((0.0..1.0).contains(&x));
+            let y = rng.next_f64_open();
+            assert!(y > 0.0 && y <= 1.0);
+        }
+    }
+
+    #[test]
+    fn uniformity_rough() {
+        // Mean of U[0,1) over 100k draws within 1%.
+        let mut rng = Pcg64::seeded(11);
+        let mean: f64 = (0..100_000).map(|_| rng.next_f64()).sum::<f64>() / 100_000.0;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn below_unbiased_support() {
+        let mut rng = Pcg64::seeded(3);
+        let mut seen = [0u32; 7];
+        for _ in 0..7_000 {
+            seen[rng.below(7) as usize] += 1;
+        }
+        for (i, c) in seen.iter().enumerate() {
+            assert!(*c > 700, "bucket {i} count {c}");
+        }
+    }
+
+    #[test]
+    fn bernoulli_rate() {
+        let mut rng = Pcg64::seeded(5);
+        let hits = (0..100_000).filter(|_| rng.bernoulli(0.3)).count();
+        assert!((hits as f64 / 100_000.0 - 0.3).abs() < 0.01);
+    }
+}

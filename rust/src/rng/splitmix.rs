@@ -1,0 +1,44 @@
+//! SplitMix64 (Steele, Lea, Flood 2014) — used only to expand seeds and
+//! derive independent streams; never for the simulation draws themselves.
+
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        SplitMix64 { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vector() {
+        // First outputs for seed 0 (cross-checked against the reference
+        // implementation in the Vigna/SplitMix literature).
+        let mut s = SplitMix64::new(0);
+        assert_eq!(s.next_u64(), 0xE220A8397B1DCDAF);
+        assert_eq!(s.next_u64(), 0x6E789E6AA1B965F4);
+        assert_eq!(s.next_u64(), 0x06C45D188009454F);
+    }
+
+    #[test]
+    fn distinct_seeds_diverge() {
+        let mut a = SplitMix64::new(1);
+        let mut b = SplitMix64::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+}

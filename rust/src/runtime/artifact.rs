@@ -1,0 +1,123 @@
+//! Artifact manifest: what `python/compile/aot.py` produced.
+
+use std::path::{Path, PathBuf};
+
+/// One compiled artifact (one model variant).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// Entry kind: "plan" or "surface".
+    pub entry: String,
+    /// Batch size B baked into the module.
+    pub b: usize,
+    /// Period-grid length G.
+    pub g: usize,
+    /// Raw-parameter row width (must match model::Params::to_raw_row).
+    pub nraw: usize,
+}
+
+impl ArtifactSpec {
+    pub fn hlo_path(&self, dir: &Path) -> PathBuf {
+        dir.join(format!("{}.hlo.txt", self.name))
+    }
+}
+
+/// The parsed manifest.txt.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactSpec>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Self::parse(&text, dir.to_path_buf())
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> anyhow::Result<Manifest> {
+        let mut artifacts = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let name = parts
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("manifest line {}: empty", lineno + 1))?
+                .to_string();
+            let mut spec = ArtifactSpec { name, entry: String::new(), b: 0, g: 0, nraw: 0 };
+            for kv in parts {
+                let (k, v) = kv
+                    .split_once('=')
+                    .ok_or_else(|| anyhow::anyhow!("manifest line {}: bad field {kv}", lineno + 1))?;
+                match k {
+                    "entry" => spec.entry = v.to_string(),
+                    "b" => spec.b = v.parse()?,
+                    "g" => spec.g = v.parse()?,
+                    "nraw" => spec.nraw = v.parse()?,
+                    other => anyhow::bail!("manifest line {}: unknown key {other}", lineno + 1),
+                }
+            }
+            anyhow::ensure!(
+                !spec.entry.is_empty() && spec.b > 0 && spec.g > 0 && spec.nraw > 0,
+                "manifest line {}: incomplete spec {spec:?}",
+                lineno + 1
+            );
+            artifacts.push(spec);
+        }
+        Ok(Manifest { artifacts, dir })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Smallest `plan` artifact whose batch is >= `want` (or the
+    /// largest available).
+    pub fn plan_artifact_for(&self, want: usize) -> Option<&ArtifactSpec> {
+        let mut plans: Vec<&ArtifactSpec> =
+            self.artifacts.iter().filter(|a| a.entry == "plan").collect();
+        plans.sort_by_key(|a| a.b);
+        plans.iter().find(|a| a.b >= want).copied().or(plans.last().copied())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+planner_b1 entry=plan b=1 g=512 nraw=10
+planner_b64 entry=plan b=64 g=512 nraw=10
+surface_b16 entry=surface b=16 g=512 nraw=10
+";
+
+    #[test]
+    fn parses_manifest() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.artifacts.len(), 3);
+        let p = m.find("planner_b64").unwrap();
+        assert_eq!(p.b, 64);
+        assert_eq!(p.entry, "plan");
+        assert_eq!(p.hlo_path(&m.dir), PathBuf::from("/tmp/planner_b64.hlo.txt"));
+    }
+
+    #[test]
+    fn plan_selection() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from(".")).unwrap();
+        assert_eq!(m.plan_artifact_for(1).unwrap().b, 1);
+        assert_eq!(m.plan_artifact_for(2).unwrap().b, 64);
+        assert_eq!(m.plan_artifact_for(64).unwrap().b, 64);
+        assert_eq!(m.plan_artifact_for(500).unwrap().b, 64); // largest
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(Manifest::parse("x entry=plan b=0 g=512 nraw=10", ".".into()).is_err());
+        assert!(Manifest::parse("x entry=plan b=1 g=512 bogus=1", ".".into()).is_err());
+    }
+}

@@ -1,0 +1,78 @@
+//! PJRT client wrapper: compile-once, execute-many.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use super::{ArtifactSpec, Manifest};
+
+/// Owns the PJRT CPU client and the compiled executables.
+///
+/// Not `Sync`: the coordinator funnels executions through a single
+/// owner thread (see [`crate::coordinator::Batcher`]).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Load the manifest and lazily compile artifacts on first use.
+    pub fn open(dir: &Path) -> anyhow::Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        anyhow::ensure!(!manifest.artifacts.is_empty(), "empty manifest in {}", dir.display());
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, manifest, executables: HashMap::new() })
+    }
+
+    /// Open from the default artifacts location.
+    pub fn open_default() -> anyhow::Result<Runtime> {
+        let dir = super::artifacts_dir()
+            .ok_or_else(|| anyhow::anyhow!("artifacts/ not found — run `make artifacts`"))?;
+        Self::open(&dir)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch the cached) executable for an artifact.
+    pub fn executable(&mut self, name: &str) -> anyhow::Result<&xla::PjRtLoadedExecutable> {
+        if !self.executables.contains_key(name) {
+            let spec = self
+                .manifest
+                .find(name)
+                .ok_or_else(|| anyhow::anyhow!("artifact '{name}' not in manifest"))?
+                .clone();
+            let path = spec.hlo_path(&self.manifest.dir);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.executables.insert(name.to_string(), exe);
+        }
+        Ok(&self.executables[name])
+    }
+
+    /// Execute an artifact on literal inputs; returns the flattened
+    /// tuple elements of the (single-device) result.
+    pub fn execute(
+        &mut self,
+        name: &str,
+        inputs: &[xla::Literal],
+    ) -> anyhow::Result<Vec<xla::Literal>> {
+        let exe = self.executable(name)?;
+        let result = exe.execute::<xla::Literal>(inputs)?;
+        anyhow::ensure!(!result.is_empty() && !result[0].is_empty(), "empty execution result");
+        let literal = result[0][0].to_literal_sync()?;
+        Ok(literal.to_tuple()?)
+    }
+
+    pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.manifest.find(name)
+    }
+}

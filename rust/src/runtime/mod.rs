@@ -1,0 +1,34 @@
+//! The AOT runtime: loads the JAX/Pallas-compiled planner artifacts
+//! (HLO text) and executes them on the PJRT CPU client.
+//!
+//! Python never runs here — `make artifacts` produced the HLO once at
+//! build time; this module is the only bridge between the Rust
+//! coordinator and the compiled L1/L2 stack.
+
+mod artifact;
+mod client;
+mod planner_exec;
+
+pub use artifact::{ArtifactSpec, Manifest};
+pub use client::Runtime;
+pub use planner_exec::{HloPlanner, PlanOutput, SurfaceOutput};
+
+/// Locate the artifacts directory: `$CKPTFP_ARTIFACTS`, else
+/// `./artifacts`, else walking up from the current directory (so tests
+/// and examples work from any workspace subdirectory).
+pub fn artifacts_dir() -> Option<std::path::PathBuf> {
+    if let Ok(dir) = std::env::var("CKPTFP_ARTIFACTS") {
+        let p = std::path::PathBuf::from(dir);
+        return p.is_dir().then_some(p);
+    }
+    let mut cur = std::env::current_dir().ok()?;
+    loop {
+        let candidate = cur.join("artifacts");
+        if candidate.join("manifest.txt").is_file() {
+            return Some(candidate);
+        }
+        if !cur.pop() {
+            return None;
+        }
+    }
+}

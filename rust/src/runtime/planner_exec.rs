@@ -1,0 +1,206 @@
+//! Batched planner execution: pack [`Params`] rows into the artifact's
+//! f32 layout, run, unpack.
+
+use super::Runtime;
+use crate::model::{Params, StrategyKind, NSTRAT_USIZE};
+
+/// Result of planning one configuration through the HLO path.
+#[derive(Debug, Clone)]
+pub struct PlanOutput {
+    /// Per-strategy optimal waste (clamped to 1.0).
+    pub waste: [f64; 6],
+    /// Per-strategy optimal period.
+    pub period: [f64; 6],
+    /// Winning strategy index.
+    pub winner: StrategyKind,
+    pub winner_waste: f64,
+    pub winner_period: f64,
+}
+
+/// Raw waste surfaces for figure generation.
+#[derive(Debug, Clone)]
+pub struct SurfaceOutput {
+    /// waste[s][j] for one configuration.
+    pub waste: Vec<Vec<f64>>,
+    /// The period grid T[j].
+    pub periods: Vec<f64>,
+}
+
+/// High-level planner on top of [`Runtime`].
+pub struct HloPlanner {
+    runtime: Runtime,
+    /// Normalized grid coordinates (cached literal is rebuilt per call —
+    /// see perf notes; the grid itself is fixed per planner).
+    u: Vec<f32>,
+}
+
+impl HloPlanner {
+    pub fn new(runtime: Runtime) -> HloPlanner {
+        HloPlanner { runtime, u: Vec::new() }
+    }
+
+    pub fn open_default() -> anyhow::Result<HloPlanner> {
+        Ok(HloPlanner::new(Runtime::open_default()?))
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.runtime.platform_name()
+    }
+
+    /// Compile the plan artifacts and run one dummy execution so the
+    /// first real request does not pay PJRT compilation (~300 ms per
+    /// artifact on this CPU).
+    pub fn warmup(&mut self) -> anyhow::Result<()> {
+        let dummy = crate::model::Params {
+            mu: 60_000.0,
+            c: 600.0,
+            d: 60.0,
+            r_rec: 600.0,
+            recall: 0.85,
+            precision: 0.82,
+            i: 300.0,
+            ef: 150.0,
+            alpha: 0.27,
+            m: 300.0,
+        };
+        let sizes: Vec<usize> = self
+            .runtime
+            .manifest()
+            .artifacts
+            .iter()
+            .filter(|a| a.entry == "plan")
+            .map(|a| a.b)
+            .collect();
+        for b in sizes {
+            self.plan_batch(&vec![dummy; b])?;
+        }
+        Ok(())
+    }
+
+    fn grid(&mut self, g: usize) -> &[f32] {
+        if self.u.len() != g {
+            // Quadratic spacing in [0, 1]: the artifact maps u to
+            // [C, alpha*mu], and window strategies are capped at
+            // alpha*mu_e - I which can sit very close to C — denser
+            // sampling near the bottom keeps the argmin sharp there,
+            // while interior optima are second-order flat and tolerate
+            // the coarser top end. (The kernel takes the grid as an
+            // input precisely so the host can pick the spacing.)
+            self.u = (0..g)
+                .map(|j| {
+                    let x = j as f32 / (g - 1) as f32;
+                    x * x
+                })
+                .collect();
+        }
+        &self.u
+    }
+
+    /// Plan a batch of configurations. Splits into artifact-sized
+    /// chunks (padding the tail with copies of the last row).
+    pub fn plan_batch(&mut self, configs: &[Params]) -> anyhow::Result<Vec<PlanOutput>> {
+        anyhow::ensure!(!configs.is_empty(), "empty batch");
+        let spec = self
+            .runtime
+            .manifest()
+            .plan_artifact_for(configs.len())
+            .ok_or_else(|| anyhow::anyhow!("no plan artifact in manifest"))?
+            .clone();
+        let mut out = Vec::with_capacity(configs.len());
+        for chunk in configs.chunks(spec.b) {
+            out.extend(self.plan_chunk(&spec.name, spec.b, spec.g, spec.nraw, chunk)?);
+        }
+        Ok(out)
+    }
+
+    fn plan_chunk(
+        &mut self,
+        artifact: &str,
+        b: usize,
+        g: usize,
+        nraw: usize,
+        chunk: &[Params],
+    ) -> anyhow::Result<Vec<PlanOutput>> {
+        anyhow::ensure!(chunk.len() <= b, "chunk larger than artifact batch");
+        anyhow::ensure!(nraw == 10, "artifact raw width {nraw} != 10");
+        let mut rows = Vec::with_capacity(b * nraw);
+        for cfg in chunk {
+            rows.extend_from_slice(&cfg.to_raw_row());
+        }
+        // Pad with the last row: harmless, discarded after unpacking.
+        let last = chunk.last().unwrap().to_raw_row();
+        for _ in chunk.len()..b {
+            rows.extend_from_slice(&last);
+        }
+        let raw = xla::Literal::vec1(&rows).reshape(&[b as i64, nraw as i64])?;
+        let u = xla::Literal::vec1(self.grid(g));
+        let parts = self.runtime.execute(artifact, &[raw, u])?;
+        anyhow::ensure!(parts.len() == 5, "plan artifact returned {} parts", parts.len());
+        let best_w = parts[0].to_vec::<f32>()?;
+        let best_t = parts[1].to_vec::<f32>()?;
+        let win_s = parts[2].to_vec::<i32>()?;
+        let win_w = parts[3].to_vec::<f32>()?;
+        let win_t = parts[4].to_vec::<f32>()?;
+        anyhow::ensure!(best_w.len() == b * 6, "unexpected best_w size");
+        let mut out = Vec::with_capacity(chunk.len());
+        for i in 0..chunk.len() {
+            let mut waste = [0.0; 6];
+            let mut period = [0.0; 6];
+            for s in 0..NSTRAT_USIZE {
+                waste[s] = best_w[i * 6 + s] as f64;
+                period[s] = best_t[i * 6 + s] as f64;
+            }
+            let winner = StrategyKind::from_index(win_s[i] as usize)
+                .ok_or_else(|| anyhow::anyhow!("bad winner index {}", win_s[i]))?;
+            out.push(PlanOutput {
+                waste,
+                period,
+                winner,
+                winner_waste: win_w[i] as f64,
+                winner_period: win_t[i] as f64,
+            });
+        }
+        Ok(out)
+    }
+
+    /// Raw waste surfaces for up to the surface artifact's batch size.
+    pub fn surfaces(&mut self, configs: &[Params]) -> anyhow::Result<Vec<SurfaceOutput>> {
+        anyhow::ensure!(!configs.is_empty(), "empty batch");
+        let spec = self
+            .runtime
+            .manifest()
+            .artifacts
+            .iter()
+            .find(|a| a.entry == "surface")
+            .ok_or_else(|| anyhow::anyhow!("no surface artifact in manifest"))?
+            .clone();
+        let mut out = Vec::with_capacity(configs.len());
+        for chunk in configs.chunks(spec.b) {
+            let (b, g) = (spec.b, spec.g);
+            let mut rows = Vec::with_capacity(b * spec.nraw);
+            for cfg in chunk {
+                rows.extend_from_slice(&cfg.to_raw_row());
+            }
+            let last = chunk.last().unwrap().to_raw_row();
+            for _ in chunk.len()..b {
+                rows.extend_from_slice(&last);
+            }
+            let raw = xla::Literal::vec1(&rows).reshape(&[b as i64, spec.nraw as i64])?;
+            let u = xla::Literal::vec1(self.grid(g));
+            let parts = self.runtime.execute(&spec.name, &[raw, u])?;
+            anyhow::ensure!(parts.len() == 2, "surface artifact returned {} parts", parts.len());
+            let w = parts[0].to_vec::<f32>()?; // [b, 6, g]
+            let t = parts[1].to_vec::<f32>()?; // [b, g]
+            for i in 0..chunk.len() {
+                let mut waste = Vec::with_capacity(6);
+                for s in 0..6 {
+                    let off = (i * 6 + s) * g;
+                    waste.push(w[off..off + g].iter().map(|x| *x as f64).collect());
+                }
+                let periods = t[i * g..(i + 1) * g].iter().map(|x| *x as f64).collect();
+                out.push(SurfaceOutput { waste, periods });
+            }
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,735 @@
+//! The discrete-event execution engine.
+//!
+//! One engine instance replays one job against one event trace under
+//! one strategy. The machine alternates *segments* — work, checkpoint,
+//! downtime, recovery, migration — and every segment can be cut short
+//! by a fault. Prediction handling follows the paper's algorithms:
+//!
+//! * a prediction becomes known at `avail = t0 − lead`; the trust
+//!   decision (probability q) is drawn immediately;
+//! * a trusted prediction schedules a proactive action: checkpoint
+//!   completing right at t0 (Figure 1(a)), or — when a regular
+//!   checkpoint runs past `t0 − C` — extra work up to t0 and no extra
+//!   checkpoint (Figure 1(b));
+//! * at t0 the engine enters the window phase per the strategy's
+//!   [`ProactiveMode`]: return to regular (`CkptBefore`), work
+//!   unprotected to `t0 + I` (`SkipWindow`), or loop proactive
+//!   checkpoints of period T_P (`CkptDuring`, Algorithm 1);
+//! * regular-mode period accounting (`W_reg`, Algorithm 1 lines 12/15)
+//!   survives proactive excursions and resets on faults and regular
+//!   checkpoints.
+//!
+//! Deviations from the idealized analysis (all conservative, see
+//! DESIGN.md): faults can strike during checkpoints, recoveries and
+//! migrations (the analysis assumes one event per interval); a
+//! prediction whose action point falls inside an outage is honored
+//! late when the window is still open and dropped otherwise.
+
+use std::collections::{HashSet, VecDeque};
+
+use super::{Outcome, SimConfig};
+use crate::rng::Pcg64;
+use crate::strategies::{ProactiveMode, StrategySpec};
+use crate::trace::{EventSource, Fault, Prediction};
+
+/// Numerical slack on work comparisons (seconds).
+const EPS: f64 = 1e-6;
+
+enum Seg {
+    Completed,
+    Faulted(Fault),
+}
+
+pub struct Engine<'a, S: EventSource> {
+    cfg: &'a SimConfig,
+    spec: &'a StrategySpec,
+    source: S,
+    rng_trust: Pcg64,
+
+    now: f64,
+    /// Work persisted by checkpoints (survives faults).
+    saved: f64,
+    /// Work since the last persisted state (lost on fault).
+    vol: f64,
+    /// Regular-mode work accumulated toward the current period.
+    w_reg: f64,
+    /// Effective regular period (>= C + 1 s to keep progress possible).
+    t_r: f64,
+    /// Lead the strategy needs ahead of t0.
+    lead: f64,
+
+    next_fault: Option<Fault>,
+    next_pred: Option<Prediction>,
+    /// Trusted predictions awaiting their action point, sorted by t0.
+    pending: VecDeque<Prediction>,
+    /// Fault ids neutralized by completed migrations.
+    neutralized: HashSet<u64>,
+
+    out: Outcome,
+}
+
+impl<'a, S: EventSource> Engine<'a, S> {
+    pub fn new(cfg: &'a SimConfig, spec: &'a StrategySpec, source: S, trust_seed: u64) -> Self {
+        let t_r = spec.t_r.max(cfg.c + 1.0);
+        let lead = spec.required_lead(cfg.c);
+        Engine {
+            cfg,
+            spec,
+            source,
+            rng_trust: Pcg64::new(trust_seed, 0x7157),
+            now: 0.0,
+            saved: 0.0,
+            vol: 0.0,
+            w_reg: 0.0,
+            t_r,
+            lead,
+            next_fault: None,
+            next_pred: None,
+            pending: VecDeque::new(),
+            neutralized: HashSet::new(),
+            out: Outcome::default(),
+        }
+    }
+
+    #[inline]
+    fn work_done(&self) -> f64 {
+        self.saved + self.vol
+    }
+
+    #[inline]
+    fn work_boundary(&self) -> f64 {
+        self.t_r - self.cfg.c
+    }
+
+    /// Next fault that actually strikes us (skips migrated-away ones).
+    fn peek_fault(&mut self) -> Option<&Fault> {
+        loop {
+            if self.next_fault.is_none() {
+                self.next_fault = self.source.next_fault();
+            }
+            match &self.next_fault {
+                None => return None,
+                Some(f) if self.neutralized.remove(&f.id) => {
+                    self.out.n_faults_avoided += 1;
+                    self.next_fault = None;
+                }
+                Some(_) => return self.next_fault.as_ref(),
+            }
+        }
+    }
+
+    /// Consume and return the next fault if it strikes strictly before `end`.
+    fn take_fault_before(&mut self, end: f64) -> Option<Fault> {
+        match self.peek_fault() {
+            Some(f) if f.t < end => self.next_fault.take(),
+            _ => None,
+        }
+    }
+
+    /// Process all predictions that have become known by `now`.
+    fn drain_predictions(&mut self) {
+        loop {
+            if self.next_pred.is_none() {
+                self.next_pred = self.source.next_prediction();
+            }
+            match &self.next_pred {
+                Some(p) if p.avail <= self.now => {
+                    let p = self.next_pred.take().unwrap();
+                    self.out.n_preds += 1;
+                    if p.is_true_positive() {
+                        self.out.n_true_preds += 1;
+                    }
+                    let ignore = matches!(self.spec.proactive, ProactiveMode::Ignore);
+                    let trusted = !ignore
+                        && self.spec.q > 0.0
+                        && (self.spec.q >= 1.0 || self.rng_trust.bernoulli(self.spec.q));
+                    if trusted && p.t_end() > self.now {
+                        self.out.n_trusted += 1;
+                        let pos = self
+                            .pending
+                            .iter()
+                            .position(|q| q.t0 > p.t0)
+                            .unwrap_or(self.pending.len());
+                        self.pending.insert(pos, p);
+                    }
+                }
+                _ => return,
+            }
+        }
+    }
+
+    /// Work until `end` (absolute time). Returns Faulted if a fault cut
+    /// the segment short (fault effects NOT yet applied).
+    fn work_until(&mut self, end: f64, count_reg: bool) -> Seg {
+        debug_assert!(end >= self.now - 1e-9);
+        self.out.n_segments += 1;
+        if let Some(f) = self.take_fault_before(end) {
+            let elapsed = (f.t - self.now).max(0.0);
+            self.vol += elapsed;
+            if count_reg {
+                self.w_reg += elapsed;
+            }
+            self.now = f.t;
+            return Seg::Faulted(f);
+        }
+        let elapsed = end - self.now;
+        self.vol += elapsed;
+        if count_reg {
+            self.w_reg += elapsed;
+        }
+        self.now = end;
+        Seg::Completed
+    }
+
+    /// A non-working segment (checkpoint, downtime, recovery, migration).
+    fn passive(&mut self, duration: f64) -> Seg {
+        self.out.n_segments += 1;
+        let end = self.now + duration;
+        if let Some(f) = self.take_fault_before(end) {
+            self.now = f.t;
+            return Seg::Faulted(f);
+        }
+        self.now = end;
+        Seg::Completed
+    }
+
+    /// Take a checkpoint; on success the volatile work is persisted.
+    /// Regular checkpoints close the period (reset `w_reg`); proactive
+    /// ones do not (Algorithm 1 keeps W_reg across the excursion).
+    fn checkpoint(&mut self, proactive: bool) -> Seg {
+        match self.passive(self.cfg.c) {
+            Seg::Faulted(f) => Seg::Faulted(f),
+            Seg::Completed => {
+                self.saved += self.vol;
+                self.vol = 0.0;
+                if proactive {
+                    self.out.n_proactive_ckpts += 1;
+                } else {
+                    self.out.n_ckpts += 1;
+                    self.w_reg = 0.0;
+                }
+                Seg::Completed
+            }
+        }
+    }
+
+    /// Apply a fault: lose volatile work, run downtime + recovery
+    /// (themselves interruptible by further faults), restart the period.
+    fn handle_fault(&mut self, mut fault: Fault) {
+        loop {
+            self.out.n_faults += 1;
+            if !fault.predicted {
+                self.out.n_faults_unpredicted += 1;
+            }
+            self.out.lost_work += self.vol;
+            self.now = fault.t;
+            self.vol = 0.0;
+            self.w_reg = 0.0;
+            match self.passive(self.cfg.d) {
+                Seg::Faulted(f) => {
+                    fault = f;
+                    continue;
+                }
+                Seg::Completed => {}
+            }
+            match self.passive(self.cfg.r) {
+                Seg::Faulted(f) => {
+                    fault = f;
+                    continue;
+                }
+                Seg::Completed => {}
+            }
+            break;
+        }
+        // Predictions whose window already closed are moot now.
+        let now = self.now;
+        self.pending.retain(|p| p.t_end() > now);
+    }
+
+    /// Execute the proactive response to a trusted prediction whose
+    /// action point has arrived. Any fault inside aborts the response.
+    fn handle_proactive(&mut self, p: Prediction) {
+        match self.spec.proactive {
+            ProactiveMode::Ignore => {}
+            ProactiveMode::Migrate { m } => self.proactive_migrate(p, m),
+            ProactiveMode::CkptBefore | ProactiveMode::SkipWindow | ProactiveMode::CkptDuring { .. } => {
+                self.proactive_ckpt_flow(p)
+            }
+        }
+    }
+
+    fn proactive_ckpt_flow(&mut self, p: Prediction) {
+        // Pre-window: checkpoint completing right at t0 when there is
+        // room (Fig. 1a); otherwise extra work up to t0 (Fig. 1b) —
+        // including the case where an outage delayed us past t0 − C.
+        let ckpt_start = p.t0 - self.cfg.c;
+        if self.now <= ckpt_start {
+            if self.now < ckpt_start {
+                let end = ckpt_start.min(self.now + self.remaining_work());
+                match self.work_until(end, true) {
+                    Seg::Faulted(f) => return self.handle_fault(f),
+                    Seg::Completed => {}
+                }
+                if self.remaining_work() <= EPS {
+                    return;
+                }
+            }
+            if self.vol > 0.0 {
+                match self.checkpoint(true) {
+                    Seg::Faulted(f) => return self.handle_fault(f),
+                    Seg::Completed => {}
+                }
+            } else {
+                // State already persisted; skip the redundant checkpoint
+                // and work through the slot instead.
+                let end = p.t0.min(self.now + self.remaining_work());
+                match self.work_until(end, true) {
+                    Seg::Faulted(f) => return self.handle_fault(f),
+                    Seg::Completed => {}
+                }
+                if self.remaining_work() <= EPS {
+                    return;
+                }
+            }
+        } else if self.now < p.t0 {
+            let end = p.t0.min(self.now + self.remaining_work());
+            match self.work_until(end, true) {
+                Seg::Faulted(f) => return self.handle_fault(f),
+                Seg::Completed => {}
+            }
+            if self.remaining_work() <= EPS {
+                return;
+            }
+        }
+        if self.now >= p.t_end() && p.window > 0.0 {
+            return; // window passed entirely during an outage
+        }
+        // Window phase.
+        match self.spec.proactive {
+            ProactiveMode::CkptBefore => {} // back to regular mode at once
+            ProactiveMode::SkipWindow => {
+                // Work unprotected through the window; the interrupted
+                // regular period resumes at t0 + I (work here does not
+                // advance W_reg — it belongs to the proactive mode).
+                let end = p.t_end().min(self.now + self.remaining_work());
+                if end > self.now {
+                    if let Seg::Faulted(f) = self.work_until(end, false) {
+                        self.handle_fault(f);
+                    }
+                }
+            }
+            ProactiveMode::CkptDuring { t_p } => {
+                let t_p = t_p.max(self.cfg.c + 1.0);
+                let t_end = p.t_end();
+                // Algorithm 1 lines 17-18: work T_P − C, checkpoint, until
+                // the window closes (T_P divides I by construction).
+                while self.now < t_end - EPS {
+                    let slice_end =
+                        (self.now + (t_p - self.cfg.c)).min(t_end).min(self.now + self.remaining_work());
+                    if slice_end > self.now {
+                        match self.work_until(slice_end, false) {
+                            Seg::Faulted(f) => return self.handle_fault(f),
+                            Seg::Completed => {}
+                        }
+                    }
+                    if self.remaining_work() <= EPS {
+                        return; // job finished inside the window
+                    }
+                    if self.now >= t_end - EPS {
+                        break; // window closes; trailing ckpt aligns with it
+                    }
+                    match self.checkpoint(true) {
+                        Seg::Faulted(f) => return self.handle_fault(f),
+                        Seg::Completed => {}
+                    }
+                }
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    fn proactive_migrate(&mut self, p: Prediction, m: f64) {
+        let start = p.t0 - m;
+        if self.now > start {
+            return; // cannot complete before the predicted date: abandon
+        }
+        if self.now < start {
+            let end = start.min(self.now + self.remaining_work());
+            match self.work_until(end, true) {
+                Seg::Faulted(f) => return self.handle_fault(f),
+                Seg::Completed => {}
+            }
+            if self.remaining_work() <= EPS {
+                return;
+            }
+        }
+        // Live migration: state (volatile work) moves with the task.
+        match self.passive(m) {
+            Seg::Faulted(f) => self.handle_fault(f),
+            Seg::Completed => {
+                self.out.n_migrations += 1;
+                if let Some(id) = p.fault_id {
+                    // The fault will strike the abandoned node, not us.
+                    if self.next_fault.as_ref().map(|f| f.id) == Some(id) {
+                        self.next_fault = None;
+                        self.out.n_faults_avoided += 1;
+                    } else {
+                        self.neutralized.insert(id);
+                    }
+                }
+            }
+        }
+    }
+
+    #[inline]
+    fn remaining_work(&self) -> f64 {
+        (self.cfg.work - self.work_done()).max(0.0)
+    }
+
+    /// Run to completion (or the makespan guard).
+    pub fn run(mut self) -> Outcome {
+        loop {
+            if self.remaining_work() <= EPS {
+                self.out.completed = true;
+                break;
+            }
+            if self.now > self.cfg.max_makespan {
+                self.out.completed = false;
+                break;
+            }
+            self.drain_predictions();
+
+            // Proactive action due?
+            if let Some(p) = self.pending.front().copied() {
+                let start = (p.t0 - self.lead).max(0.0);
+                if start <= self.now {
+                    self.pending.pop_front();
+                    self.handle_proactive(p);
+                    continue;
+                }
+            }
+
+            // Regular checkpoint due?
+            if self.w_reg >= self.work_boundary() - EPS {
+                if self.vol > 0.0 {
+                    if let Seg::Faulted(f) = self.checkpoint(false) {
+                        self.handle_fault(f);
+                    }
+                } else {
+                    self.w_reg = 0.0; // state already persisted
+                }
+                continue;
+            }
+
+            // Plan the next work slice.
+            let mut end = self.now + self.remaining_work();
+            end = end.min(self.now + (self.work_boundary() - self.w_reg).max(0.0));
+            if let Some(p) = self.pending.front() {
+                end = end.min((p.t0 - self.lead).max(self.now));
+            }
+            // Cut at the next prediction-availability so the trust
+            // decision happens at the right simulated time.
+            if self.next_pred.is_none() {
+                self.next_pred = self.source.next_prediction();
+            }
+            if let Some(pr) = &self.next_pred {
+                if pr.avail > self.now {
+                    end = end.min(pr.avail);
+                }
+            }
+            if end <= self.now + 1e-9 {
+                // Defensive: only reachable through degenerate pending
+                // entries; drop the blocker and move on.
+                self.pending.pop_front();
+                continue;
+            }
+            if let Seg::Faulted(f) = self.work_until(end, true) {
+                self.handle_fault(f);
+            }
+        }
+        self.out.makespan = self.now;
+        self.out.work = self.work_done().min(self.cfg.work);
+        self.out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::VecSource;
+
+    fn cfg(work: f64) -> SimConfig {
+        SimConfig { work, c: 10.0, d: 2.0, r: 5.0, max_makespan: 1e12 }
+    }
+
+    fn spec(t_r: f64, proactive: ProactiveMode) -> StrategySpec {
+        let q = if matches!(proactive, ProactiveMode::Ignore) { 0.0 } else { 1.0 };
+        StrategySpec { name: "test".into(), t_r, q, proactive }
+    }
+
+    fn run(cfg: &SimConfig, spec: &StrategySpec, faults: Vec<Fault>, preds: Vec<Prediction>) -> Outcome {
+        Engine::new(cfg, spec, VecSource::new(faults, preds), 7).run()
+    }
+
+    #[test]
+    fn fault_free_periodic() {
+        // W = 300, T = 110 (work 100 per period, ckpt 10): two full
+        // periods with checkpoints + final 100 work, no trailing ckpt.
+        let c = cfg(300.0);
+        let s = spec(110.0, ProactiveMode::Ignore);
+        let o = run(&c, &s, vec![], vec![]);
+        assert!(o.completed);
+        assert_eq!(o.n_ckpts, 2);
+        assert!((o.makespan - 320.0).abs() < 1e-6, "makespan {}", o.makespan);
+        assert!((o.waste() - 20.0 / 320.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_fault_loses_volatile_work() {
+        // Fault at t=50: 50 work lost, downtime 2 + recovery 5, then
+        // the 300 work redone from scratch.
+        let c = cfg(300.0);
+        let s = spec(1e6, ProactiveMode::Ignore); // no intermediate ckpt
+        let o = run(&c, &s, vec![Fault::unpredicted(50.0, 0)], vec![]);
+        assert!(o.completed);
+        assert_eq!(o.n_faults, 1);
+        assert!((o.lost_work - 50.0).abs() < 1e-9);
+        assert!((o.makespan - (50.0 + 2.0 + 5.0 + 300.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fault_after_checkpoint_resumes_from_checkpoint() {
+        // T = 110: ckpt completes at 110 (100 saved). Fault at 115:
+        // lose 5 volatile; resume with 200 left.
+        let c = cfg(300.0);
+        let s = spec(110.0, ProactiveMode::Ignore);
+        let o = run(&c, &s, vec![Fault::unpredicted(115.0, 0)], vec![]);
+        assert!(o.completed);
+        assert!((o.lost_work - 5.0).abs() < 1e-9);
+        // 115 + 7 (D+R) + 100 work + 10 ckpt + 100 work + 10 ckpt...
+        // after recovery at 122: 200 work left, period restarts:
+        // work 100, ckpt -> 232; work 100 -> 332 done.
+        assert!((o.makespan - 332.0).abs() < 1e-6, "makespan {}", o.makespan);
+        assert_eq!(o.n_ckpts, 2);
+    }
+
+    #[test]
+    fn fault_during_checkpoint_destroys_it() {
+        // T = 110, ckpt spans [100, 110]; fault at 105 → all 100
+        // volatile lost.
+        let c = cfg(300.0);
+        let s = spec(110.0, ProactiveMode::Ignore);
+        let o = run(&c, &s, vec![Fault::unpredicted(105.0, 0)], vec![]);
+        assert!(o.completed);
+        assert!((o.lost_work - 100.0).abs() < 1e-9);
+        // After the fault all 300 work remains: work/ckpt, work/ckpt, work.
+        assert_eq!(o.n_ckpts, 2);
+    }
+
+    #[test]
+    fn fault_during_recovery_restarts_it() {
+        let c = cfg(100.0);
+        let s = spec(1e6, ProactiveMode::Ignore);
+        // First fault at 10; recovery spans [12, 17]; second at 14.
+        let o = run(
+            &c,
+            &s,
+            vec![Fault::unpredicted(10.0, 0), Fault::unpredicted(14.0, 1)],
+            vec![],
+        );
+        assert!(o.completed);
+        assert_eq!(o.n_faults, 2);
+        // 14 + 2 + 5 + 100.
+        assert!((o.makespan - 121.0).abs() < 1e-6, "makespan {}", o.makespan);
+    }
+
+    #[test]
+    fn exact_prediction_saves_work() {
+        // Fault at 500 predicted exactly; proactive ckpt spans
+        // [490, 500]; only D+R is lost.
+        let c = cfg(1000.0);
+        let s = spec(1e6, ProactiveMode::CkptBefore);
+        let o = run(
+            &c,
+            &s,
+            vec![Fault::predicted(500.0, 0)],
+            vec![Prediction::exact(500.0, 10.0, Some(0))],
+        );
+        assert!(o.completed);
+        assert_eq!(o.n_proactive_ckpts, 1);
+        assert!((o.lost_work - 0.0).abs() < 1e-9);
+        // 500 (work+ckpt) + 7 (D+R) + 510 remaining work = 1017.
+        assert!((o.makespan - 1017.0).abs() < 1e-6, "makespan {}", o.makespan);
+    }
+
+    #[test]
+    fn untrusted_prediction_is_ignored() {
+        let c = cfg(1000.0);
+        let mut s = spec(1e6, ProactiveMode::CkptBefore);
+        s.q = 0.0;
+        let o = run(
+            &c,
+            &s,
+            vec![Fault::predicted(500.0, 0)],
+            vec![Prediction::exact(500.0, 10.0, Some(0))],
+        );
+        assert!(o.completed);
+        assert_eq!(o.n_proactive_ckpts, 0);
+        assert!((o.lost_work - 500.0).abs() < 1e-9);
+        assert_eq!(o.n_trusted, 0);
+        assert_eq!(o.n_preds, 1);
+    }
+
+    #[test]
+    fn false_prediction_costs_one_checkpoint() {
+        let c = cfg(1000.0);
+        let s = spec(1e6, ProactiveMode::CkptBefore);
+        let o = run(&c, &s, vec![], vec![Prediction::exact(500.0, 10.0, None)]);
+        assert!(o.completed);
+        assert_eq!(o.n_proactive_ckpts, 1);
+        assert!((o.makespan - 1010.0).abs() < 1e-6);
+        assert_eq!(o.n_faults, 0);
+    }
+
+    #[test]
+    fn window_skip_mode_waits_out_the_window() {
+        // Window [500, 600], fault at 580. SkipWindow: ckpt [490,500],
+        // work through window, fault at 580 loses the 80 done since t0.
+        let c = cfg(1000.0);
+        let s = spec(1e6, ProactiveMode::SkipWindow);
+        let o = run(
+            &c,
+            &s,
+            vec![Fault::predicted(580.0, 0)],
+            vec![Prediction::windowed(500.0, 100.0, 10.0, Some(0))],
+        );
+        assert!(o.completed);
+        assert!((o.lost_work - 80.0).abs() < 1e-9, "lost {}", o.lost_work);
+        // 580 + 7 + remaining (1000 − 490) = 1097.
+        assert!((o.makespan - 1097.0).abs() < 1e-6, "makespan {}", o.makespan);
+    }
+
+    #[test]
+    fn window_ckpt_during_bounds_loss_to_tp() {
+        // Window [500, 700], T_P = 110 (work 100 + ckpt 10).
+        // Fault at 695: in-window ckpts at [600,610]; loss = work in
+        // (610, 695) = 85.
+        let c = cfg(2000.0);
+        let s = spec(1e6, ProactiveMode::CkptDuring { t_p: 110.0 });
+        let o = run(
+            &c,
+            &s,
+            vec![Fault::predicted(695.0, 0)],
+            vec![Prediction::windowed(500.0, 200.0, 10.0, Some(0))],
+        );
+        assert!(o.completed);
+        assert_eq!(o.n_proactive_ckpts, 2); // pre-window + one inside
+        assert!((o.lost_work - 85.0).abs() < 1e-9, "lost {}", o.lost_work);
+    }
+
+    #[test]
+    fn migration_avoids_predicted_fault() {
+        let c = cfg(1000.0);
+        let s = spec(1e6, ProactiveMode::Migrate { m: 20.0 });
+        let o = run(
+            &c,
+            &s,
+            vec![Fault::predicted(500.0, 0)],
+            vec![Prediction::exact(500.0, 20.0, Some(0))],
+        );
+        assert!(o.completed);
+        assert_eq!(o.n_migrations, 1);
+        assert_eq!(o.n_faults, 0);
+        assert_eq!(o.n_faults_avoided, 1);
+        // Only the 20 s migration is lost: 1020.
+        assert!((o.makespan - 1020.0).abs() < 1e-6, "makespan {}", o.makespan);
+        assert!((o.lost_work - 0.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn false_prediction_migration_costs_m() {
+        let c = cfg(1000.0);
+        let s = spec(1e6, ProactiveMode::Migrate { m: 20.0 });
+        let o = run(&c, &s, vec![], vec![Prediction::exact(500.0, 20.0, None)]);
+        assert!(o.completed);
+        assert!((o.makespan - 1020.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn prediction_too_late_for_migration_is_abandoned() {
+        // avail/lead allows ckpt (10) but not migration (100): the
+        // engine cannot start at t0 − m < avail-time ⇒ fault strikes.
+        let c = cfg(1000.0);
+        let s = spec(1e6, ProactiveMode::Migrate { m: 100.0 });
+        let o = run(
+            &c,
+            &s,
+            vec![Fault::predicted(50.0, 0)],
+            vec![Prediction::exact(50.0, 100.0, Some(0))], // avail < 0 → clamped late
+        );
+        assert!(o.completed);
+        assert_eq!(o.n_migrations, 0);
+        assert_eq!(o.n_faults, 1);
+    }
+
+    #[test]
+    fn fig1b_no_room_for_extra_checkpoint() {
+        // Regular T = 110 ⇒ ckpt spans [100, 110]. Prediction for
+        // t0 = 115 becomes known at 105 (mid-checkpoint). The regular
+        // checkpoint finishes at 110; vol = 0 afterwards ⇒ no extra
+        // proactive ckpt; work [110, 115] runs at risk (Fig. 1b).
+        let c = cfg(300.0);
+        let s = spec(110.0, ProactiveMode::CkptBefore);
+        let o = run(
+            &c,
+            &s,
+            vec![Fault::predicted(115.0, 0)],
+            vec![Prediction::exact(115.0, 10.0, Some(0))],
+        );
+        assert!(o.completed);
+        assert_eq!(o.n_proactive_ckpts, 0);
+        assert_eq!(o.n_ckpts, 2); // the [100,110] one + one later
+        assert!((o.lost_work - 5.0).abs() < 1e-9, "lost {}", o.lost_work);
+    }
+
+    #[test]
+    fn job_completes_mid_window() {
+        // Job finishes inside the prediction window — engine must stop.
+        let c = cfg(520.0);
+        let s = spec(1e6, ProactiveMode::SkipWindow);
+        let o = run(&c, &s, vec![], vec![Prediction::windowed(500.0, 200.0, 10.0, None)]);
+        assert!(o.completed);
+        // ckpt [490, 500] then 30 remaining work inside window: 530.
+        assert!((o.makespan - 530.0).abs() < 1e-6, "makespan {}", o.makespan);
+    }
+
+    #[test]
+    fn makespan_guard_reports_incomplete() {
+        let mut c = cfg(1000.0);
+        c.max_makespan = 400.0;
+        let s = spec(1e6, ProactiveMode::Ignore);
+        // Fault storm: every 100 s, job can never finish.
+        let faults: Vec<Fault> =
+            (1..2000).map(|i| Fault::unpredicted(i as f64 * 100.0, i as u64)).collect();
+        // Never completes 1000 contiguous work.
+        let o = run(&c, &s, faults, vec![]);
+        assert!(!o.completed);
+    }
+
+    #[test]
+    fn work_conservation() {
+        // makespan == work + overhead, with overhead = ckpts + faults'
+        // D+R + lost work (+ idle): verified via the identity.
+        let c = cfg(300.0);
+        let s = spec(110.0, ProactiveMode::Ignore);
+        let o = run(&c, &s, vec![Fault::unpredicted(115.0, 0)], vec![]);
+        let ckpt_time = (o.n_ckpts + o.n_proactive_ckpts) as f64 * c.c;
+        let fault_time = o.n_faults as f64 * (c.d + c.r);
+        let accounted = ckpt_time + fault_time + o.lost_work;
+        assert!(
+            (o.overhead() - accounted).abs() < 1e-6,
+            "overhead {} vs accounted {accounted}",
+            o.overhead()
+        );
+    }
+}

@@ -1,0 +1,52 @@
+//! Discrete-event simulation of a checkpointed execution under faults
+//! and predictions.
+//!
+//! [`Engine`] replays one job against one trace under one
+//! [`crate::strategies::StrategySpec`]; [`runner`] replicates across
+//! seeds and aggregates.
+
+mod engine;
+mod outcome;
+mod runner;
+
+pub use engine::Engine;
+pub use outcome::Outcome;
+pub use runner::{run_replications, simulate_once, ReplicationReport};
+
+use crate::config::Scenario;
+
+/// Immutable per-run simulation parameters.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Total useful work W of the job (s).
+    pub work: f64,
+    /// Checkpoint duration C (s).
+    pub c: f64,
+    /// Downtime D (s).
+    pub d: f64,
+    /// Recovery duration R (s).
+    pub r: f64,
+    /// Abort guard: a run whose makespan exceeds this is reported
+    /// incomplete (`Outcome::completed == false`).
+    pub max_makespan: f64,
+}
+
+impl SimConfig {
+    pub fn from_scenario(s: &Scenario) -> SimConfig {
+        SimConfig {
+            work: s.work,
+            c: s.platform.c,
+            d: s.platform.d,
+            r: s.platform.r,
+            max_makespan: s.work * 250.0,
+        }
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.work > 0.0, "work must be positive");
+        anyhow::ensure!(self.c > 0.0, "checkpoint duration must be positive");
+        anyhow::ensure!(self.d >= 0.0 && self.r >= 0.0, "D and R must be >= 0");
+        anyhow::ensure!(self.max_makespan > self.work, "max_makespan below work");
+        Ok(())
+    }
+}

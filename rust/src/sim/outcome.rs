@@ -1,0 +1,73 @@
+//! Result of one simulated execution.
+
+/// Everything the experiment harness wants to know about one run.
+#[derive(Debug, Clone, Default)]
+pub struct Outcome {
+    /// Wall-clock time to complete the job (s).
+    pub makespan: f64,
+    /// Useful work completed (== the configured W when `completed`).
+    pub work: f64,
+    /// Whether the job finished before the makespan guard.
+    pub completed: bool,
+
+    /// Faults that struck the application (excluding migrated-away ones).
+    pub n_faults: u64,
+    /// ... of which were unpredicted (false negatives).
+    pub n_faults_unpredicted: u64,
+    /// Predictions seen (true + false positives).
+    pub n_preds: u64,
+    /// ... of which were true positives.
+    pub n_true_preds: u64,
+    /// Predictions the policy decided to trust.
+    pub n_trusted: u64,
+    /// Regular-mode checkpoints completed.
+    pub n_ckpts: u64,
+    /// Proactive checkpoints completed (pre-window + in-window).
+    pub n_proactive_ckpts: u64,
+    /// Successful preventive migrations.
+    pub n_migrations: u64,
+    /// Faults avoided by migration.
+    pub n_faults_avoided: u64,
+    /// Work lost to faults (volatile work destroyed), total (s).
+    pub lost_work: f64,
+    /// Engine segments processed — the simulator's own throughput unit.
+    pub n_segments: u64,
+
+    /// Wall-clock seconds the engine itself spent (set by the runner).
+    pub sim_seconds: f64,
+}
+
+impl Outcome {
+    /// WASTE = fraction of time not spent on useful work (§2.1).
+    pub fn waste(&self) -> f64 {
+        if self.makespan <= 0.0 {
+            0.0
+        } else {
+            1.0 - self.work / self.makespan
+        }
+    }
+
+    /// Conservation check: total time = work + waste components.
+    /// (Exact identity; used by property tests.)
+    pub fn overhead(&self) -> f64 {
+        self.makespan - self.work
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn waste_formula() {
+        let o = Outcome { makespan: 200.0, work: 150.0, completed: true, ..Default::default() };
+        assert!((o.waste() - 0.25).abs() < 1e-12);
+        assert!((o.overhead() - 50.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_makespan_guard() {
+        let o = Outcome::default();
+        assert_eq!(o.waste(), 0.0);
+    }
+}

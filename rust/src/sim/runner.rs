@@ -1,0 +1,165 @@
+//! Replicated simulation: run a strategy against `reps` independent
+//! traces and aggregate.
+
+use super::{Engine, Outcome, SimConfig};
+use crate::config::Scenario;
+use crate::strategies::StrategySpec;
+use crate::trace::TraceGen;
+use crate::util::stats::Summary;
+
+/// Aggregated result of a replication batch.
+#[derive(Debug, Clone)]
+pub struct ReplicationReport {
+    pub strategy: String,
+    pub waste: Summary,
+    pub makespan: Summary,
+    pub outcomes: Vec<Outcome>,
+}
+
+impl ReplicationReport {
+    pub fn mean_waste(&self) -> f64 {
+        self.waste.mean()
+    }
+
+    pub fn mean_makespan(&self) -> f64 {
+        self.makespan.mean()
+    }
+
+    /// Fraction of replications that finished under the guard.
+    pub fn completion_rate(&self) -> f64 {
+        let done = self.outcomes.iter().filter(|o| o.completed).count();
+        done as f64 / self.outcomes.len().max(1) as f64
+    }
+}
+
+/// One replication: trace `rep` of `scenario.seed`, executed under `spec`.
+pub fn simulate_once(
+    scenario: &Scenario,
+    spec: &StrategySpec,
+    rep: u64,
+) -> anyhow::Result<Outcome> {
+    let cfg = SimConfig::from_scenario(scenario);
+    cfg.validate()?;
+    let lead = spec.required_lead(cfg.c);
+    let source = TraceGen::new(scenario, lead, scenario.seed, rep)?;
+    let started = std::time::Instant::now();
+    let mut out = Engine::new(&cfg, spec, source, scenario.seed ^ (rep << 17) ^ 0xA5).run();
+    out.sim_seconds = started.elapsed().as_secs_f64();
+    Ok(out)
+}
+
+/// Run `reps` replications sequentially. (The coordinator parallelizes
+/// across replications and scenarios; this is the single-thread core.)
+pub fn run_replications(
+    scenario: &Scenario,
+    spec: &StrategySpec,
+    reps: u64,
+) -> anyhow::Result<ReplicationReport> {
+    let mut waste = Summary::new();
+    let mut makespan = Summary::new();
+    let mut outcomes = Vec::with_capacity(reps as usize);
+    for rep in 0..reps {
+        let o = simulate_once(scenario, spec, rep)?;
+        waste.push(o.waste());
+        makespan.push(o.makespan);
+        outcomes.push(o);
+    }
+    Ok(ReplicationReport { strategy: spec.name.clone(), waste, makespan, outcomes })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Predictor, Scenario};
+    use crate::model::{waste_young, Params};
+    use crate::strategies::spec_for;
+    use crate::model::{Capping, StrategyKind};
+
+    fn small_scenario() -> Scenario {
+        // Modest platform + small job so the test stays fast.
+        let mut s = Scenario::paper(1 << 16, Predictor::none());
+        s.fault_dist = "exp".into();
+        s.work = 3.0e5; // ~3.5 days of work, mu = 60000 s
+        s
+    }
+
+    #[test]
+    fn young_simulation_matches_analysis_exponential() {
+        // The headline validation: simulated waste under Exponential
+        // faults must match Eq. (1) at q = 0 within a few percent.
+        let s = small_scenario();
+        let spec = spec_for(StrategyKind::Young, &s, Capping::Uncapped);
+        let report = run_replications(&s, &spec, 60).unwrap();
+        assert!(report.completion_rate() == 1.0);
+        let p = Params::from_scenario(&s);
+        let analytic = waste_young(&p, spec.t_r);
+        let sim = report.mean_waste();
+        assert!(
+            (sim - analytic).abs() / analytic < 0.08,
+            "sim {sim} vs analytic {analytic}"
+        );
+    }
+
+    #[test]
+    fn exact_prediction_beats_young_in_simulation() {
+        let mut s = small_scenario();
+        s.predictor = Predictor::exact(0.85, 0.82);
+        let young = spec_for(StrategyKind::Young, &s, Capping::Uncapped);
+        let exact = spec_for(StrategyKind::ExactPrediction, &s, Capping::Uncapped);
+        let wy = run_replications(&s, &young, 40).unwrap().mean_waste();
+        let we = run_replications(&s, &exact, 40).unwrap().mean_waste();
+        assert!(we < wy, "exact {we} vs young {wy}");
+    }
+
+    #[test]
+    fn replications_are_reproducible() {
+        let s = small_scenario();
+        let spec = spec_for(StrategyKind::Young, &s, Capping::Uncapped);
+        let a = run_replications(&s, &spec, 5).unwrap();
+        let b = run_replications(&s, &spec, 5).unwrap();
+        for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+            assert_eq!(x.makespan, y.makespan);
+            assert_eq!(x.n_faults, y.n_faults);
+        }
+    }
+
+    #[test]
+    fn same_trace_across_strategies() {
+        // Strategies with the same required lead see identical fault
+        // streams — the §5 comparison is paired.
+        let mut s = small_scenario();
+        s.predictor = Predictor::windowed(0.7, 0.4, 300.0);
+        let a = spec_for(StrategyKind::Instant, &s, Capping::Uncapped);
+        let b = spec_for(StrategyKind::NoCkptI, &s, Capping::Uncapped);
+        let oa = simulate_once(&s, &a, 3).unwrap();
+        let ob = simulate_once(&s, &b, 3).unwrap();
+        assert_eq!(oa.n_preds, ob.n_preds);
+        // Fault counts can differ (different makespans expose different
+        // trace prefixes) but the prediction stream prefix is shared.
+    }
+
+    #[test]
+    fn q_zero_equals_young() {
+        let mut s = small_scenario();
+        s.predictor = Predictor::exact(0.85, 0.82);
+        let young = spec_for(StrategyKind::Young, &s, Capping::Uncapped);
+        let mut distrust = spec_for(StrategyKind::ExactPrediction, &s, Capping::Uncapped);
+        distrust.q = 0.0;
+        distrust.t_r = young.t_r;
+        let wy = simulate_once(&s, &young, 1).unwrap();
+        let wd = simulate_once(&s, &distrust, 1).unwrap();
+        assert_eq!(wy.makespan, wd.makespan);
+    }
+
+    #[test]
+    fn outcome_counters_consistent() {
+        let mut s = small_scenario();
+        s.predictor = Predictor::exact(0.7, 0.4);
+        let spec = spec_for(StrategyKind::ExactPrediction, &s, Capping::Uncapped);
+        let o = simulate_once(&s, &spec, 0).unwrap();
+        assert!(o.n_true_preds <= o.n_preds);
+        assert!(o.n_faults_unpredicted <= o.n_faults);
+        assert!(o.completed);
+        assert!(o.n_segments > 0);
+    }
+}

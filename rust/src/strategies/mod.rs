@@ -1,0 +1,188 @@
+//! Checkpointing strategies: planners that turn a [`Scenario`] into an
+//! executable [`StrategySpec`] for the simulation engine.
+//!
+//! The *planner* half of each strategy is closed-form (or HLO-compiled,
+//! via [`crate::runtime`]); the *executor* half is the shared
+//! discrete-event engine in [`crate::sim`], parameterized by the spec's
+//! [`ProactiveMode`].
+
+mod best_period;
+
+pub use best_period::{best_period, BestPeriodResult};
+
+use crate::config::Scenario;
+use crate::model::{self, Capping, Params, StrategyKind};
+
+/// What the executor does when a trusted prediction's window opens.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ProactiveMode {
+    /// Predictions ignored entirely (Young / Daly; q = 0).
+    Ignore,
+    /// Checkpoint completing right at t0, then back to regular mode
+    /// (§3 ExactPrediction; §4 Instant).
+    CkptBefore,
+    /// Checkpoint before t0, then work through the window without any
+    /// checkpoint, resuming the period at t0 + I (§4 NoCkptI).
+    SkipWindow,
+    /// Checkpoint before t0, then periodic proactive checkpoints with
+    /// period `t_p` inside the window (§4 WithCkptI / Algorithm 1).
+    CkptDuring { t_p: f64 },
+    /// Preventive migration of duration `m` completing at t0 (§3.4);
+    /// the predicted fault is avoided, state survives.
+    Migrate { m: f64 },
+}
+
+/// Executable description of a strategy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StrategySpec {
+    pub name: String,
+    /// Regular-mode checkpoint period T_R.
+    pub t_r: f64,
+    /// Probability of trusting a prediction (the paper proves the
+    /// optimum is 0 or 1; the simulator accepts anything in [0, 1]).
+    pub q: f64,
+    pub proactive: ProactiveMode,
+}
+
+impl StrategySpec {
+    /// The lead time the executor needs ahead of t0.
+    pub fn required_lead(&self, c: f64) -> f64 {
+        match self.proactive {
+            ProactiveMode::Migrate { m } => m.max(c),
+            _ => c,
+        }
+    }
+}
+
+/// Build the spec for a paper strategy. Periods follow the §5
+/// simulation protocol by default (`Capping::Uncapped`, q = 1):
+/// T_R = sqrt(2 mu C / (1 − r q)).
+pub fn spec_for(kind: StrategyKind, scenario: &Scenario, capping: Capping) -> StrategySpec {
+    let p = Params::from_scenario(scenario);
+    let t_r = model::optimal_period(&p, kind, capping);
+    match kind {
+        StrategyKind::Young => StrategySpec {
+            name: "Young".into(),
+            t_r,
+            q: 0.0,
+            proactive: ProactiveMode::Ignore,
+        },
+        StrategyKind::ExactPrediction => StrategySpec {
+            name: "ExactPrediction".into(),
+            t_r,
+            q: 1.0,
+            proactive: ProactiveMode::CkptBefore,
+        },
+        StrategyKind::Instant => StrategySpec {
+            name: "Instant".into(),
+            t_r,
+            q: 1.0,
+            proactive: ProactiveMode::CkptBefore,
+        },
+        StrategyKind::NoCkptI => StrategySpec {
+            name: "NoCkptI".into(),
+            t_r,
+            q: 1.0,
+            proactive: ProactiveMode::SkipWindow,
+        },
+        StrategyKind::WithCkptI => StrategySpec {
+            name: "WithCkptI".into(),
+            t_r,
+            q: 1.0,
+            proactive: ProactiveMode::CkptDuring { t_p: model::tp_opt(&p) },
+        },
+        StrategyKind::Migration => StrategySpec {
+            name: "Migration".into(),
+            t_r,
+            q: 1.0,
+            proactive: ProactiveMode::Migrate { m: scenario.migration },
+        },
+    }
+}
+
+/// Daly's higher-order variant of the no-prediction baseline:
+/// T = sqrt(2 (mu + R) C) [2].
+pub fn daly_spec(scenario: &Scenario) -> StrategySpec {
+    let p = Params::from_scenario(scenario);
+    StrategySpec {
+        name: "Daly".into(),
+        t_r: (2.0 * (p.mu + p.r_rec) * p.c).sqrt().max(p.c),
+        q: 0.0,
+        proactive: ProactiveMode::Ignore,
+    }
+}
+
+/// ExactPrediction executed against a *window* trace degenerates to
+/// treating t0 as the fault date — which is exactly `Instant`. The §5
+/// EXACTPREDICTION heuristic instead gets an exact-date trace (window
+/// forced to 0); this helper builds that scenario variant.
+pub fn exactify(scenario: &Scenario) -> Scenario {
+    let mut s = scenario.clone();
+    s.predictor.window = 0.0;
+    s.predictor.ef = 0.0;
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Predictor;
+    use crate::util::approx_eq;
+
+    fn scenario() -> Scenario {
+        Scenario::paper(1 << 16, Predictor::windowed(0.85, 0.82, 3000.0))
+    }
+
+    #[test]
+    fn uncapped_periods_match_formula() {
+        let s = scenario();
+        let mu = s.mu();
+        let young = spec_for(StrategyKind::Young, &s, Capping::Uncapped);
+        assert!(approx_eq(young.t_r, (2.0 * mu * 600.0).sqrt(), 1e-12));
+        let exact = spec_for(StrategyKind::ExactPrediction, &s, Capping::Uncapped);
+        assert!(approx_eq(exact.t_r, (2.0 * mu * 600.0 / 0.15).sqrt(), 1e-12));
+        assert_eq!(exact.q, 1.0);
+    }
+
+    #[test]
+    fn withckpt_carries_tp() {
+        let s = scenario();
+        let spec = spec_for(StrategyKind::WithCkptI, &s, Capping::Uncapped);
+        match spec.proactive {
+            ProactiveMode::CkptDuring { t_p } => {
+                assert!(t_p >= 600.0);
+                let k = 3000.0 / t_p;
+                assert!((k - k.round()).abs() < 1e-9);
+            }
+            _ => panic!("wrong mode"),
+        }
+    }
+
+    #[test]
+    fn migration_lead() {
+        let s = scenario();
+        let spec = spec_for(StrategyKind::Migration, &s, Capping::Uncapped);
+        assert_eq!(spec.required_lead(600.0), 600.0); // M = 300 < C
+        let mut s2 = s.clone();
+        s2.migration = 900.0;
+        let spec2 = spec_for(StrategyKind::Migration, &s2, Capping::Uncapped);
+        assert_eq!(spec2.required_lead(600.0), 900.0);
+    }
+
+    #[test]
+    fn daly_close_to_young_at_large_mu() {
+        let s = scenario();
+        let daly = daly_spec(&s);
+        let young = spec_for(StrategyKind::Young, &s, Capping::Uncapped);
+        let rel = (daly.t_r - young.t_r) / young.t_r;
+        assert!(rel > 0.0 && rel < 0.01, "rel={rel}");
+    }
+
+    #[test]
+    fn exactify_zeroes_window() {
+        let s = exactify(&scenario());
+        assert_eq!(s.predictor.window, 0.0);
+        assert_eq!(s.predictor.ef, 0.0);
+        s.validate().unwrap();
+    }
+}

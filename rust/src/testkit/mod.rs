@@ -1,0 +1,124 @@
+//! Mini property-testing harness (substrate: no `proptest` offline).
+//!
+//! Deterministic: every case derives from a fixed seed, so failures
+//! reproduce. On failure the harness reports the case index and the
+//! generated inputs via the panic message of the property itself.
+
+use crate::rng::Pcg64;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 64, seed: 0xbead }
+    }
+}
+
+/// A generator of random values for property tests.
+pub struct Gen<'a> {
+    rng: &'a mut Pcg64,
+}
+
+impl<'a> Gen<'a> {
+    /// Uniform f64 in [lo, hi).
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.rng.next_f64()
+    }
+
+    /// Log-uniform f64 in [lo, hi) — natural for periods/MTBFs.
+    pub fn log_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        assert!(lo > 0.0 && hi > lo);
+        (self.f64(lo.ln(), hi.ln())).exp()
+    }
+
+    /// Uniform integer in [lo, hi].
+    pub fn u64(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    /// Pick one element.
+    pub fn choose<'b, T>(&mut self, items: &'b [T]) -> &'b T {
+        &items[self.rng.below(items.len() as u64) as usize]
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.bernoulli(p)
+    }
+}
+
+/// Run `property` on `cfg.cases` generated cases. The property panics
+/// to signal failure; the harness decorates the panic with the case
+/// number so the seed can be replayed.
+pub fn check<F: FnMut(&mut Gen<'_>)>(cfg: Config, mut property: F) {
+    for case in 0..cfg.cases {
+        let mut rng = crate::rng::substream(cfg.seed, "testkit", case as u64);
+        let mut gen = Gen { rng: &mut rng };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            property(&mut gen);
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property failed on case {case} (seed {:#x}): {msg}", cfg.seed);
+        }
+    }
+}
+
+/// Shorthand with default config.
+pub fn check_default<F: FnMut(&mut Gen<'_>)>(property: F) {
+    check(Config::default(), property);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check_default(|g| {
+            let x = g.f64(0.0, 10.0);
+            assert!((0.0..10.0).contains(&x));
+        });
+    }
+
+    #[test]
+    fn reports_failing_case() {
+        let result = std::panic::catch_unwind(|| {
+            check(Config { cases: 32, seed: 1 }, |g| {
+                let x = g.u64(0, 100);
+                assert!(x < 95, "x was {x}");
+            });
+        });
+        let msg = match result {
+            Err(p) => p.downcast_ref::<String>().cloned().unwrap_or_default(),
+            Ok(()) => panic!("property should have failed"),
+        };
+        assert!(msg.contains("property failed on case"), "{msg}");
+    }
+
+    #[test]
+    fn log_uniform_in_range() {
+        check_default(|g| {
+            let x = g.log_f64(10.0, 1000.0);
+            assert!((10.0..1000.0).contains(&x));
+        });
+    }
+
+    #[test]
+    fn choose_covers_all() {
+        let items = [1, 2, 3];
+        let mut seen = [false; 3];
+        check(Config { cases: 200, seed: 3 }, |g| {
+            seen[*g.choose(&items) as usize - 1] = true;
+        });
+        assert_eq!(seen, [true, true, true]);
+    }
+}

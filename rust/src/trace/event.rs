@@ -1,0 +1,77 @@
+//! Trace event types.
+
+/// An actual failure of the platform.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Fault {
+    /// Strike time (s).
+    pub t: f64,
+    /// Stable identifier (links true predictions to their fault).
+    pub id: u64,
+    /// Whether the predictor caught this fault (drawn with prob. r).
+    pub predicted: bool,
+}
+
+impl Fault {
+    pub fn unpredicted(t: f64, id: u64) -> Fault {
+        Fault { t, id, predicted: false }
+    }
+
+    pub fn predicted(t: f64, id: u64) -> Fault {
+        Fault { t, id, predicted: true }
+    }
+}
+
+/// A prediction emitted by the fault predictor.
+///
+/// Exact-date predictions have `window == 0` and `t0` equal to the
+/// predicted strike time; window predictions cover `[t0, t0 + window]`.
+/// The predictor announces the event at `avail <= t0 - lead`, where the
+/// lead leaves room for one proactive checkpoint (§3: "at least C
+/// seconds in advance").
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Prediction {
+    /// When the prediction becomes known.
+    pub avail: f64,
+    /// Predicted date (exact) or window start.
+    pub t0: f64,
+    /// Window length I (0 = exact).
+    pub window: f64,
+    /// Id of the true fault this predicts; `None` for false positives.
+    pub fault_id: Option<u64>,
+}
+
+impl Prediction {
+    pub fn exact(t0: f64, lead: f64, fault_id: Option<u64>) -> Prediction {
+        Prediction { avail: t0 - lead, t0, window: 0.0, fault_id }
+    }
+
+    pub fn windowed(t0: f64, window: f64, lead: f64, fault_id: Option<u64>) -> Prediction {
+        Prediction { avail: t0 - lead, t0, window, fault_id }
+    }
+
+    pub fn is_true_positive(&self) -> bool {
+        self.fault_id.is_some()
+    }
+
+    /// Window end (== t0 for exact predictions).
+    pub fn t_end(&self) -> f64 {
+        self.t0 + self.window
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors() {
+        let p = Prediction::exact(1000.0, 600.0, Some(3));
+        assert_eq!(p.avail, 400.0);
+        assert_eq!(p.t_end(), 1000.0);
+        assert!(p.is_true_positive());
+
+        let w = Prediction::windowed(1000.0, 300.0, 600.0, None);
+        assert_eq!(w.t_end(), 1300.0);
+        assert!(!w.is_true_positive());
+    }
+}

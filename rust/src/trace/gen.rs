@@ -1,0 +1,284 @@
+//! Stochastic trace generator — the §5 simulation-engine front-end.
+//!
+//! Faults: i.i.d. inter-arrivals from the failure law (scaled to mean
+//! mu), each marked predicted with probability r. True predictions:
+//! the fault is placed uniformly inside its window (t0 = t_f − U·I),
+//! announced at `t0 − lead`. False predictions: an independent stream
+//! with inter-arrival expectation p·mu / (r·(1−p)) from either the
+//! same law or a uniform one (Figures 5/7).
+//!
+//! Emission order: faults are trivially monotone; predictions need
+//! lookahead because a true prediction for a *later* fault can become
+//! available *earlier* (windows shift availability back by up to
+//! I + lead). The generator therefore keeps generating faults until the
+//! fault clock passes `candidate.avail + window + lead` before emitting
+//! a prediction candidate.
+
+use std::collections::VecDeque;
+
+use super::{EventSource, Fault, Prediction};
+use crate::config::Scenario;
+use crate::dist::Distribution;
+use crate::rng::{substream, Pcg64};
+
+pub struct TraceGen {
+    fault_dist: Box<dyn Distribution>,
+    false_dist: Option<Box<dyn Distribution>>,
+    recall: f64,
+    window: f64,
+    lead: f64,
+    rng_fault: Pcg64,
+    rng_mark: Pcg64,
+    rng_win: Pcg64,
+    rng_false: Pcg64,
+    clock_fault: f64,
+    clock_false: f64,
+    next_id: u64,
+    fault_buf: VecDeque<Fault>,
+    // True-prediction candidates awaiting safe emission, kept sorted by avail.
+    true_buf: VecDeque<Prediction>,
+    pending_false: Option<Prediction>,
+}
+
+impl TraceGen {
+    /// Build a generator for one replication of a scenario.
+    /// `lead` is the proactive-action lead the consumer needs (>= C for
+    /// checkpointing strategies, >= M for migration).
+    pub fn new(scenario: &Scenario, lead: f64, seed: u64, rep: u64) -> anyhow::Result<TraceGen> {
+        let mu = scenario.mu();
+        let pred = &scenario.predictor;
+        let fault_dist = crate::dist::parse(&scenario.fault_dist)?.with_mean(mu);
+        let false_interval = pred.false_pred_interval(mu);
+        let false_dist = if false_interval.is_finite() {
+            Some(crate::dist::parse(scenario.false_dist_spec())?.with_mean(false_interval))
+        } else {
+            None
+        };
+        Ok(TraceGen {
+            fault_dist,
+            false_dist,
+            recall: pred.recall,
+            window: pred.window,
+            lead,
+            rng_fault: substream(seed, "fault", rep),
+            rng_mark: substream(seed, "mark", rep),
+            rng_win: substream(seed, "win", rep),
+            rng_false: substream(seed, "false", rep),
+            clock_fault: 0.0,
+            clock_false: 0.0,
+            next_id: 0,
+            fault_buf: VecDeque::new(),
+            true_buf: VecDeque::new(),
+            pending_false: None,
+        })
+    }
+
+    /// Generate one more fault (and possibly its prediction candidate).
+    fn gen_fault(&mut self) {
+        self.clock_fault += self.fault_dist.sample(&mut self.rng_fault);
+        let predicted = self.rng_mark.bernoulli(self.recall);
+        let id = self.next_id;
+        self.next_id += 1;
+        let t = self.clock_fault;
+        self.fault_buf.push_back(Fault { t, id, predicted });
+        if predicted {
+            // Fault uniform inside its window: t0 = t_f − U·I.
+            let offset = if self.window > 0.0 { self.rng_win.next_f64() * self.window } else { 0.0 };
+            let t0 = t - offset;
+            let p = Prediction::windowed(t0, self.window, self.lead, Some(id));
+            // Insert keeping true_buf sorted by avail (windows can invert
+            // the order of nearby faults' predictions).
+            let pos = self
+                .true_buf
+                .iter()
+                .position(|q| q.avail > p.avail)
+                .unwrap_or(self.true_buf.len());
+            self.true_buf.insert(pos, p);
+        }
+    }
+
+    fn peek_false(&mut self) -> Option<&Prediction> {
+        if self.pending_false.is_none() {
+            let dist = self.false_dist.as_deref()?;
+            self.clock_false += dist.sample(&mut self.rng_false);
+            self.pending_false = Some(Prediction::windowed(
+                self.clock_false,
+                self.window,
+                self.lead,
+                None,
+            ));
+        }
+        self.pending_false.as_ref()
+    }
+}
+
+impl EventSource for TraceGen {
+    fn next_fault(&mut self) -> Option<Fault> {
+        if self.fault_buf.is_empty() {
+            self.gen_fault();
+        }
+        self.fault_buf.pop_front()
+    }
+
+    fn next_prediction(&mut self) -> Option<Prediction> {
+        loop {
+            let false_avail = self.peek_false().map(|p| p.avail).unwrap_or(f64::INFINITY);
+            let true_avail = self.true_buf.front().map(|p| p.avail).unwrap_or(f64::INFINITY);
+            let candidate = true_avail.min(false_avail);
+            if candidate.is_infinite() && self.false_dist.is_none() && self.recall == 0.0 {
+                return None; // predictor never fires
+            }
+            // Any not-yet-generated fault lies after clock_fault, so its
+            // prediction's avail > clock_fault − window − lead. Emission
+            // is safe once that bound passes the candidate.
+            if self.clock_fault - self.window - self.lead > candidate {
+                return if true_avail <= false_avail {
+                    self.true_buf.pop_front()
+                } else {
+                    self.pending_false.take()
+                };
+            }
+            self.gen_fault();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Predictor, Scenario};
+
+    fn scenario(recall: f64, precision: f64, window: f64, dist: &str) -> Scenario {
+        let pred = if window > 0.0 {
+            Predictor::windowed(recall, precision, window)
+        } else {
+            Predictor::exact(recall, precision)
+        };
+        let mut s = Scenario::paper(1 << 16, pred);
+        s.fault_dist = dist.to_string();
+        s
+    }
+
+    fn drain(gen: &mut TraceGen, horizon: f64) -> (Vec<Fault>, Vec<Prediction>) {
+        let mut faults = Vec::new();
+        let mut preds = Vec::new();
+        while let Some(f) = gen.next_fault() {
+            if f.t > horizon {
+                break;
+            }
+            faults.push(f);
+        }
+        while let Some(p) = gen.next_prediction() {
+            if p.avail > horizon {
+                break;
+            }
+            preds.push(p);
+        }
+        (faults, preds)
+    }
+
+    #[test]
+    fn streams_are_monotone() {
+        let s = scenario(0.85, 0.82, 3000.0, "weibull:0.7");
+        let mut gen = TraceGen::new(&s, 600.0, 1, 0).unwrap();
+        let (faults, preds) = drain(&mut gen, 5e7);
+        assert!(faults.len() > 100);
+        assert!(preds.len() > 100);
+        for w in faults.windows(2) {
+            assert!(w[0].t <= w[1].t);
+        }
+        for w in preds.windows(2) {
+            assert!(w[0].avail <= w[1].avail, "{} > {}", w[0].avail, w[1].avail);
+        }
+    }
+
+    #[test]
+    fn empirical_mtbf() {
+        let s = scenario(0.85, 0.82, 0.0, "exp");
+        let mu = s.mu();
+        let mut gen = TraceGen::new(&s, 600.0, 2, 0).unwrap();
+        let horizon = mu * 5000.0;
+        let (faults, _) = drain(&mut gen, horizon);
+        let emp = horizon / faults.len() as f64;
+        assert!((emp - mu).abs() / mu < 0.05, "MTBF {emp} vs {mu}");
+    }
+
+    #[test]
+    fn empirical_recall_and_precision() {
+        let s = scenario(0.7, 0.4, 0.0, "exp");
+        let mut gen = TraceGen::new(&s, 600.0, 3, 0).unwrap();
+        let (faults, preds) = drain(&mut gen, s.mu() * 8000.0);
+        let predicted = faults.iter().filter(|f| f.predicted).count();
+        let recall = predicted as f64 / faults.len() as f64;
+        assert!((recall - 0.7).abs() < 0.03, "recall {recall}");
+        let true_preds = preds.iter().filter(|p| p.is_true_positive()).count();
+        let precision = true_preds as f64 / preds.len() as f64;
+        assert!((precision - 0.4).abs() < 0.03, "precision {precision}");
+    }
+
+    #[test]
+    fn window_contains_fault() {
+        let s = scenario(0.9, 0.8, 3000.0, "weibull:0.5");
+        let mut gen = TraceGen::new(&s, 600.0, 4, 0).unwrap();
+        let (faults, preds) = drain(&mut gen, 5e7);
+        let by_id: std::collections::HashMap<u64, f64> =
+            faults.iter().map(|f| (f.id, f.t)).collect();
+        let mut checked = 0;
+        for p in &preds {
+            if let Some(id) = p.fault_id {
+                if let Some(&tf) = by_id.get(&id) {
+                    assert!(tf >= p.t0 - 1e-9 && tf <= p.t_end() + 1e-9);
+                    assert!(p.avail <= p.t0 - 600.0 + 1e-9);
+                    checked += 1;
+                }
+            }
+        }
+        assert!(checked > 50);
+    }
+
+    #[test]
+    fn no_predictor_no_predictions() {
+        let s = scenario(0.0, 1.0, 0.0, "exp");
+        let mut gen = TraceGen::new(&s, 600.0, 5, 0).unwrap();
+        assert!(gen.next_prediction().is_none());
+        assert!(gen.next_fault().is_some());
+    }
+
+    #[test]
+    fn perfect_precision_no_false_predictions() {
+        let s = scenario(0.8, 1.0, 0.0, "exp");
+        let mut gen = TraceGen::new(&s, 600.0, 6, 0).unwrap();
+        let (_, preds) = drain(&mut gen, 1e8);
+        assert!(!preds.is_empty());
+        assert!(preds.iter().all(Prediction::is_true_positive));
+    }
+
+    #[test]
+    fn reps_produce_distinct_traces() {
+        let s = scenario(0.85, 0.82, 0.0, "exp");
+        let t1: Vec<f64> = {
+            let mut g = TraceGen::new(&s, 600.0, 7, 0).unwrap();
+            (0..10).map(|_| g.next_fault().unwrap().t).collect()
+        };
+        let t2: Vec<f64> = {
+            let mut g = TraceGen::new(&s, 600.0, 7, 1).unwrap();
+            (0..10).map(|_| g.next_fault().unwrap().t).collect()
+        };
+        assert_ne!(t1, t2);
+        let t1b: Vec<f64> = {
+            let mut g = TraceGen::new(&s, 600.0, 7, 0).unwrap();
+            (0..10).map(|_| g.next_fault().unwrap().t).collect()
+        };
+        assert_eq!(t1, t1b);
+    }
+
+    #[test]
+    fn uniform_false_pred_dist() {
+        let mut s = scenario(0.7, 0.4, 300.0, "weibull:0.7");
+        s.false_pred_dist = "uniform".into();
+        let mut gen = TraceGen::new(&s, 600.0, 8, 0).unwrap();
+        let (_, preds) = drain(&mut gen, 3e7);
+        let false_count = preds.iter().filter(|p| !p.is_true_positive()).count();
+        assert!(false_count > 50);
+    }
+}

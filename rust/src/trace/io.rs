@@ -1,0 +1,114 @@
+//! Trace (de)serialization — a small CSV dialect so generated traces
+//! can be inspected, archived and replayed (`ckptfp trace` command).
+//!
+//! Format, one event per line:
+//! ```text
+//! fault,<t>,<id>,<predicted 0|1>
+//! pred,<avail>,<t0>,<window>,<fault_id|->
+//! ```
+
+use std::io::{BufRead, Write};
+
+use super::{EventSource, Fault, Prediction, VecSource};
+
+/// Write `horizon`-bounded streams of an event source.
+pub fn write_trace<W: Write, S: EventSource>(
+    out: &mut W,
+    source: &mut S,
+    horizon: f64,
+) -> anyhow::Result<(usize, usize)> {
+    let mut nf = 0;
+    let mut np = 0;
+    writeln!(out, "# ckptfp trace v1, horizon={horizon}")?;
+    while let Some(f) = source.next_fault() {
+        if f.t > horizon {
+            break;
+        }
+        writeln!(out, "fault,{},{},{}", f.t, f.id, u8::from(f.predicted))?;
+        nf += 1;
+    }
+    while let Some(p) = source.next_prediction() {
+        if p.avail > horizon {
+            break;
+        }
+        let fid = p.fault_id.map(|i| i.to_string()).unwrap_or_else(|| "-".into());
+        writeln!(out, "pred,{},{},{},{fid}", p.avail, p.t0, p.window)?;
+        np += 1;
+    }
+    Ok((nf, np))
+}
+
+/// Read a trace back into a replayable [`VecSource`].
+pub fn read_trace<R: BufRead>(input: R) -> anyhow::Result<VecSource> {
+    let mut faults = Vec::new();
+    let mut preds = Vec::new();
+    for (lineno, line) in input.lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').collect();
+        let ctx = || format!("trace line {}", lineno + 1);
+        match fields[0] {
+            "fault" => {
+                anyhow::ensure!(fields.len() == 4, "{}: want 4 fields", ctx());
+                faults.push(Fault {
+                    t: fields[1].parse()?,
+                    id: fields[2].parse()?,
+                    predicted: fields[3] == "1",
+                });
+            }
+            "pred" => {
+                anyhow::ensure!(fields.len() == 5, "{}: want 5 fields", ctx());
+                preds.push(Prediction {
+                    avail: fields[1].parse()?,
+                    t0: fields[2].parse()?,
+                    window: fields[3].parse()?,
+                    fault_id: if fields[4] == "-" { None } else { Some(fields[4].parse()?) },
+                });
+            }
+            other => anyhow::bail!("{}: unknown record '{other}'", ctx()),
+        }
+    }
+    Ok(VecSource::new(faults, preds))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Predictor, Scenario};
+    use crate::trace::TraceGen;
+
+    #[test]
+    fn round_trip() {
+        let s = Scenario::paper(1 << 16, Predictor::windowed(0.85, 0.82, 300.0));
+        let mut gen = TraceGen::new(&s, 600.0, 42, 0).unwrap();
+        let mut buf = Vec::new();
+        let (nf, np) = write_trace(&mut buf, &mut gen, 2e6).unwrap();
+        assert!(nf > 5 && np > 3, "nf={nf} np={np}");
+
+        let mut replay = read_trace(std::io::BufReader::new(&buf[..])).unwrap();
+        let mut gen2 = TraceGen::new(&s, 600.0, 42, 0).unwrap();
+        for _ in 0..nf {
+            let a = replay.next_fault().unwrap();
+            let b = gen2.next_fault().unwrap();
+            assert_eq!(a.id, b.id);
+            assert!((a.t - b.t).abs() < 1e-9);
+            assert_eq!(a.predicted, b.predicted);
+        }
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(read_trace(std::io::BufReader::new("fault,1.0".as_bytes())).is_err());
+        assert!(read_trace(std::io::BufReader::new("bogus,1,2,3".as_bytes())).is_err());
+    }
+
+    #[test]
+    fn skips_comments_and_blanks() {
+        let src = "# hello\n\nfault,10.0,0,1\n";
+        let mut v = read_trace(std::io::BufReader::new(src.as_bytes())).unwrap();
+        assert_eq!(v.next_fault().unwrap().t, 10.0);
+    }
+}

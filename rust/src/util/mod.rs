@@ -1,0 +1,25 @@
+//! Shared utilities: statistics, logging, JSON, time units.
+
+pub mod json;
+pub mod logging;
+pub mod stats;
+pub mod units;
+
+/// Relative closeness for floating-point comparisons in tests and
+/// validation paths.
+pub fn approx_eq(a: f64, b: f64, rel: f64) -> bool {
+    let scale = a.abs().max(b.abs()).max(1e-12);
+    (a - b).abs() <= rel * scale
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn approx_eq_basic() {
+        assert!(approx_eq(1.0, 1.0 + 1e-9, 1e-6));
+        assert!(!approx_eq(1.0, 1.1, 1e-6));
+        assert!(approx_eq(0.0, 0.0, 1e-12));
+    }
+}

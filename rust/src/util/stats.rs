@@ -1,0 +1,169 @@
+//! Summary statistics for replicated simulation experiments: mean,
+//! standard deviation, standard error and normal-approximation
+//! confidence intervals. (Substrate module: no external stats crate.)
+
+/// Streaming summary via Welford's algorithm — numerically stable for
+/// the long waste/makespan accumulations the experiment runner produces.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn from_iter<I: IntoIterator<Item = f64>>(iter: I) -> Self {
+        let mut s = Self::new();
+        for x in iter {
+            s.push(x);
+        }
+        s
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 { f64::NAN } else { self.mean }
+    }
+
+    /// Unbiased sample variance.
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    /// Standard error of the mean.
+    pub fn stderr(&self) -> f64 {
+        if self.n == 0 { f64::NAN } else { self.stddev() / (self.n as f64).sqrt() }
+    }
+
+    /// Half-width of the ~95% CI (normal approximation, z = 1.96).
+    pub fn ci95(&self) -> f64 {
+        1.96 * self.stderr()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Merge two summaries (parallel reduction from worker threads).
+    pub fn merge(&self, other: &Summary) -> Summary {
+        if self.n == 0 {
+            return other.clone();
+        }
+        if other.n == 0 {
+            return self.clone();
+        }
+        let n = self.n + other.n;
+        let delta = other.mean - self.mean;
+        let mean = self.mean + delta * other.n as f64 / n as f64;
+        let m2 = self.m2
+            + other.m2
+            + delta * delta * self.n as f64 * other.n as f64 / n as f64;
+        Summary { n, mean, m2, min: self.min.min(other.min), max: self.max.max(other.max) }
+    }
+}
+
+impl std::fmt::Display for Summary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:.6} ± {:.6} (n={})", self.mean(), self.ci95(), self.n)
+    }
+}
+
+/// Exact percentile of a sample (linear interpolation); used by the
+/// service latency metrics.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        sorted[lo] + (pos - lo as f64) * (sorted[hi] - sorted[lo])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::approx_eq;
+
+    #[test]
+    fn mean_and_variance() {
+        let s = Summary::from_iter([2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!(approx_eq(s.mean(), 5.0, 1e-12));
+        assert!(approx_eq(s.variance(), 32.0 / 7.0, 1e-12));
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 9.0);
+    }
+
+    #[test]
+    fn merge_matches_sequential() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin() * 3.0 + 1.0).collect();
+        let full = Summary::from_iter(xs.iter().copied());
+        let a = Summary::from_iter(xs[..37].iter().copied());
+        let b = Summary::from_iter(xs[37..].iter().copied());
+        let merged = a.merge(&b);
+        assert!(approx_eq(full.mean(), merged.mean(), 1e-12));
+        assert!(approx_eq(full.variance(), merged.variance(), 1e-9));
+        assert_eq!(full.count(), merged.count());
+    }
+
+    #[test]
+    fn merge_with_empty() {
+        let a = Summary::from_iter([1.0, 2.0]);
+        let e = Summary::new();
+        assert!(approx_eq(a.merge(&e).mean(), 1.5, 1e-12));
+        assert!(approx_eq(e.merge(&a).mean(), 1.5, 1e-12));
+    }
+
+    #[test]
+    fn empty_summary() {
+        let s = Summary::new();
+        assert!(s.mean().is_nan());
+        assert_eq!(s.count(), 0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let v = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert!(approx_eq(percentile(&v, 0.5), 3.0, 1e-12));
+        assert!(approx_eq(percentile(&v, 0.0), 1.0, 1e-12));
+        assert!(approx_eq(percentile(&v, 1.0), 5.0, 1e-12));
+        assert!(approx_eq(percentile(&v, 0.25), 2.0, 1e-12));
+    }
+
+    #[test]
+    fn ci_shrinks_with_n() {
+        let a = Summary::from_iter((0..10).map(|i| i as f64 % 2.0));
+        let b = Summary::from_iter((0..1000).map(|i| i as f64 % 2.0));
+        assert!(b.ci95() < a.ci95());
+    }
+}

@@ -1,0 +1,68 @@
+//! Time-unit helpers. The canonical internal unit is the **second** (f64);
+//! the paper quotes minutes (C = R = 10 mn) and the predictor literature
+//! quotes seconds (I = 300 s) — conversions live here so call sites stay
+//! unit-honest.
+
+/// Seconds per minute.
+pub const MIN: f64 = 60.0;
+/// Seconds per hour.
+pub const HOUR: f64 = 3_600.0;
+/// Seconds per day.
+pub const DAY: f64 = 86_400.0;
+/// Seconds per (Julian) year, used for the paper's mu_ind = 125 years.
+pub const YEAR: f64 = 365.25 * DAY;
+
+/// Convert seconds to days (for the paper's execution-time tables).
+pub fn to_days(seconds: f64) -> f64 {
+    seconds / DAY
+}
+
+/// Convert minutes to seconds.
+pub fn minutes(m: f64) -> f64 {
+    m * MIN
+}
+
+/// Human-readable duration, e.g. "2d 3h 04m".
+pub fn human(seconds: f64) -> String {
+    if !seconds.is_finite() {
+        return format!("{seconds}");
+    }
+    let total = seconds.max(0.0);
+    let d = (total / DAY).floor() as u64;
+    let rem = total - d as f64 * DAY;
+    let h = (rem / HOUR).floor() as u64;
+    let m = ((rem - h as f64 * HOUR) / MIN).floor() as u64;
+    if d > 0 {
+        format!("{d}d {h}h {m:02}m")
+    } else if h > 0 {
+        format!("{h}h {m:02}m")
+    } else if total >= MIN {
+        format!("{m}m {:02.0}s", total - m as f64 * MIN)
+    } else {
+        format!("{total:.1}s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constants() {
+        assert_eq!(minutes(10.0), 600.0);
+        assert_eq!(to_days(DAY * 2.5), 2.5);
+    }
+
+    #[test]
+    fn human_format() {
+        assert_eq!(human(30.0), "30.0s");
+        assert_eq!(human(90.0), "1m 30s");
+        assert_eq!(human(HOUR * 2.0 + 120.0), "2h 02m");
+        assert_eq!(human(DAY + HOUR * 3.0 + 240.0), "1d 3h 04m");
+    }
+
+    #[test]
+    fn human_handles_nonfinite() {
+        assert_eq!(human(f64::INFINITY), "inf");
+    }
+}

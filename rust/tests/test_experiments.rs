@@ -1,0 +1,87 @@
+//! Integration: the §5 experiment harness produces paper-shaped output.
+//! Uses tiny replication counts — the recorded runs use the bench
+//! harness with full settings.
+
+use ckptfp::experiments::{run_experiment, ExpOptions};
+
+fn tiny() -> ExpOptions {
+    ExpOptions { reps: 3, ..ExpOptions::quick() }
+}
+
+#[test]
+fn fig4_structure_and_shape() {
+    let r = run_experiment("fig4", &tiny()).unwrap();
+    // 2 windows x (2 analytic + 3 simulated) = 10 subfigures (a)-(j).
+    assert_eq!(r.figures.len(), 10);
+    let names: Vec<&str> = r.figures.iter().map(|f| f.name.as_str()).collect();
+    assert!(names.iter().any(|n| n.contains("I300-analytic-capped")));
+    assert!(names.iter().any(|n| n.contains("I3000-sim-weibull0.5")));
+    // Analytical uncapped subfigure: prediction dominates Young.
+    let fig = r
+        .figures
+        .iter()
+        .find(|f| f.name.contains("I300-analytic-uncapped"))
+        .unwrap();
+    let young = fig.get("Young").unwrap();
+    let exact = fig.get("ExactPrediction").unwrap();
+    for (y, e) in young.points.iter().zip(&exact.points) {
+        assert!(e.1 <= y.1 + 1e-9, "prediction must help: {e:?} vs {y:?}");
+    }
+    // Simulated subfigure exists with all heuristics and 6 sizes.
+    let sim = r.figures.iter().find(|f| f.name.contains("I300-sim-exp")).unwrap();
+    assert_eq!(sim.series.len(), 4); // no WithCkptI at I=300 < C
+    for s in &sim.series {
+        assert_eq!(s.points.len(), 6);
+        for (_, w) in &s.points {
+            assert!((0.0..=1.0).contains(w));
+        }
+    }
+}
+
+#[test]
+fn fig6_large_window_has_withckpt() {
+    let r = run_experiment("fig6", &tiny()).unwrap();
+    let sim = r.figures.iter().find(|f| f.name.contains("I3000-sim-exp")).unwrap();
+    assert!(sim.get("WithCkptI").is_some());
+    assert_eq!(sim.series.len(), 5);
+}
+
+#[test]
+fn sweep_fig10_recall_improves_waste() {
+    let mut opts = tiny();
+    opts.reps = 4;
+    let r = run_experiment("fig10", &opts).unwrap();
+    assert_eq!(r.figures.len(), 2); // N = 2^16 and 2^19
+    for fig in &r.figures {
+        let s = fig.series.iter().find(|s| s.label.contains("p=0.8")).unwrap();
+        // Higher recall should not hurt: waste at r=0.99 below r=0.3,
+        // with stochastic slack.
+        let first = s.points.first().unwrap().1;
+        let last = s.points.last().unwrap().1;
+        assert!(last < first * 1.05, "{}: {first} -> {last}", fig.name);
+    }
+}
+
+#[test]
+fn tab3_catalog_renders() {
+    let r = run_experiment("tab3", &tiny()).unwrap();
+    assert_eq!(r.tables.len(), 1);
+    let text = r.render();
+    assert!(text.contains("Yu et al."));
+    assert!(text.contains("winner"));
+}
+
+#[test]
+fn csv_output_written() {
+    let dir = std::env::temp_dir().join(format!("ckptfp-exp-{}", std::process::id()));
+    let r = run_experiment("tab3", &tiny()).unwrap();
+    r.write_csvs(&dir).unwrap();
+    // tab3 has no figures, so no files — use a figure experiment.
+    let mut opts = tiny();
+    opts.reps = 2;
+    let rf = run_experiment("fig8", &opts).unwrap();
+    rf.write_csvs(&dir).unwrap();
+    let entries: Vec<_> = std::fs::read_dir(&dir).unwrap().collect();
+    assert!(!entries.is_empty());
+    std::fs::remove_dir_all(&dir).unwrap();
+}

@@ -1,0 +1,202 @@
+//! Property-based integration tests (via the in-tree testkit).
+
+use ckptfp::config::{Predictor, Scenario};
+use ckptfp::model::{
+    optimal_period, optimize, t_cap, tp_opt, waste_exact_q, waste_of, Capping, Params,
+    StrategyKind,
+};
+use ckptfp::sim::{simulate_once, SimConfig};
+use ckptfp::strategies::{spec_for, ProactiveMode, StrategySpec};
+use ckptfp::testkit::{check, Config};
+use ckptfp::trace::{EventSource, TraceGen};
+
+fn random_params(g: &mut ckptfp::testkit::Gen<'_>) -> Params {
+    let window = *g.choose(&[0.0, 300.0, 3000.0, 7200.0]);
+    let pred = if window > 0.0 {
+        Predictor::windowed(g.f64(0.0, 1.0), g.f64(0.05, 1.0), window)
+    } else {
+        Predictor::exact(g.f64(0.0, 1.0), g.f64(0.05, 1.0))
+    };
+    let mut s = Scenario::paper(1 << g.u64(14, 19), pred);
+    s.platform.c = g.f64(60.0, 1200.0);
+    Params::from_scenario(&s)
+}
+
+#[test]
+fn prop_q_endpoint_optimality() {
+    // §3.3: WASTE(q) affine in q ⇒ for any T, no interior q beats both
+    // endpoints.
+    check(Config { cases: 200, seed: 11 }, |g| {
+        let p = random_params(g);
+        let t = g.log_f64(p.c + 1.0, 20.0 * p.c + 50_000.0);
+        let q = g.f64(0.01, 0.99);
+        let w0 = waste_exact_q(&p, t, 0.0);
+        let w1 = waste_exact_q(&p, t, 1.0);
+        let wq = waste_exact_q(&p, t, q);
+        assert!(wq >= w0.min(w1) - 1e-12, "interior q beat endpoints");
+        assert!(wq <= w0.max(w1) + 1e-12, "affinity violated");
+    });
+}
+
+#[test]
+fn prop_optimal_period_is_argmin() {
+    // The closed-form period must beat any other admissible period.
+    check(Config { cases: 150, seed: 12 }, |g| {
+        let p = random_params(g);
+        let kind = *g.choose(&StrategyKind::ALL);
+        let cap = t_cap(&p, kind);
+        if cap <= p.c {
+            return; // inadmissible configuration
+        }
+        let t_star = optimal_period(&p, kind, Capping::Capped);
+        let tp = tp_opt(&p);
+        let w_star = waste_of(&p, kind, t_star, tp);
+        let t_other = g.f64(p.c, cap);
+        let w_other = waste_of(&p, kind, t_other, tp);
+        assert!(
+            w_star <= w_other + 1e-9,
+            "{}: T*={t_star} w*={w_star} beaten by T={t_other} w={w_other}",
+            kind.name()
+        );
+    });
+}
+
+#[test]
+fn prop_tp_divides_window() {
+    check(Config { cases: 150, seed: 13 }, |g| {
+        let mut p = random_params(g);
+        p.i = g.f64(p.c, 20.0 * p.c);
+        p.ef = p.i / 2.0;
+        let tp = tp_opt(&p);
+        let k = p.i / tp;
+        assert!(
+            (k - k.round()).abs() < 1e-6 || (tp - p.c).abs() < 1e-9,
+            "I={} tp={tp} k={k}",
+            p.i
+        );
+        assert!(tp >= p.c - 1e-9);
+    });
+}
+
+#[test]
+fn prop_waste_in_unit_interval() {
+    check(Config { cases: 200, seed: 14 }, |g| {
+        let p = random_params(g);
+        for kind in StrategyKind::ALL {
+            let (_, w) = optimize(&p, kind, Capping::Capped);
+            assert!((0.0..=1.0).contains(&w), "{}: {w}", kind.name());
+        }
+    });
+}
+
+#[test]
+fn prop_engine_conservation() {
+    // makespan == useful work + checkpoints + (D+R per fault) + lost
+    // work + migrations — on random generated traces, every strategy.
+    check(Config { cases: 25, seed: 15 }, |g| {
+        let window = *g.choose(&[0.0, 300.0, 3000.0]);
+        let pred = if window > 0.0 {
+            Predictor::windowed(g.f64(0.2, 0.95), g.f64(0.3, 0.95), window)
+        } else {
+            Predictor::exact(g.f64(0.2, 0.95), g.f64(0.3, 0.95))
+        };
+        let mut s = Scenario::paper(1 << 16, pred);
+        s.fault_dist = (*g.choose(&["exp", "weibull:0.7", "uniform"])).to_string();
+        s.work = g.f64(1.0e5, 5.0e5);
+        s.seed = g.u64(0, u64::MAX / 2);
+        let kind = *g.choose(&StrategyKind::ALL);
+        let sk = ckptfp::experiments::scenario_for(kind, &s);
+        let spec = spec_for(kind, &sk, Capping::Uncapped);
+        let o = simulate_once(&sk, &spec, g.u64(0, 10)).expect("sim");
+        assert!(o.completed);
+        let cfg = SimConfig::from_scenario(&sk);
+        // Hard components of the overhead: completed checkpoints,
+        // destroyed volatile work, completed migrations.
+        let lower = (o.n_ckpts + o.n_proactive_ckpts) as f64 * cfg.c
+            + o.n_migrations as f64
+                * match spec.proactive {
+                    ProactiveMode::Migrate { m } => m,
+                    _ => 0.0,
+                }
+            + o.lost_work;
+        let overhead = o.overhead();
+        // Each fault adds at most D + R (less when a later fault
+        // truncates the outage); each trusted prediction can add up to
+        // C of fill slack (Fig. 1b) plus a partially-wasted checkpoint.
+        let upper = lower
+            + o.n_faults as f64 * (cfg.d + cfg.r)
+            + o.n_trusted as f64 * 2.0 * cfg.c
+            + 1.0;
+        assert!(
+            overhead >= lower - 1e-3 && overhead <= upper,
+            "{}: overhead {overhead} outside [{lower}, {upper}]",
+            spec.name
+        );
+    });
+}
+
+#[test]
+fn prop_trace_recall_precision() {
+    check(Config { cases: 12, seed: 16 }, |g| {
+        let recall = g.f64(0.2, 0.95);
+        let precision = g.f64(0.3, 0.95);
+        let mut s = Scenario::paper(1 << 18, Predictor::exact(recall, precision));
+        s.fault_dist = "exp".into();
+        s.seed = g.u64(0, 1 << 40);
+        let mut gen = TraceGen::new(&s, s.platform.c, s.seed, 0).unwrap();
+        let mut faults = 0u64;
+        let mut predicted = 0u64;
+        let horizon = s.mu() * 4000.0;
+        loop {
+            let f = gen.next_fault().unwrap();
+            if f.t > horizon {
+                break;
+            }
+            faults += 1;
+            if f.predicted {
+                predicted += 1;
+            }
+        }
+        let emp = predicted as f64 / faults as f64;
+        assert!(
+            (emp - recall).abs() < 0.06,
+            "recall {recall} vs empirical {emp} over {faults} faults"
+        );
+    });
+}
+
+#[test]
+fn prop_period_monotone_in_recall() {
+    // T_extr = sqrt(2 mu C / (1 - r)): higher recall ⇒ longer period.
+    check(Config { cases: 80, seed: 17 }, |g| {
+        let base = random_params(g);
+        let r1 = g.f64(0.0, 0.5);
+        let r2 = g.f64(r1 + 0.01, 0.99);
+        let mut p1 = base;
+        p1.recall = r1;
+        let mut p2 = base;
+        p2.recall = r2;
+        let t1 = optimal_period(&p1, StrategyKind::ExactPrediction, Capping::Uncapped);
+        let t2 = optimal_period(&p2, StrategyKind::ExactPrediction, Capping::Uncapped);
+        assert!(t2 >= t1, "r {r1}->{r2} but T {t1}->{t2}");
+    });
+}
+
+#[test]
+fn prop_simulation_seed_determinism() {
+    check(Config { cases: 8, seed: 18 }, |g| {
+        let mut s = Scenario::paper(1 << 16, Predictor::windowed(0.7, 0.4, 300.0));
+        s.work = 2.0e5;
+        s.seed = g.u64(0, 1 << 40);
+        let spec = StrategySpec {
+            name: "t".into(),
+            t_r: g.log_f64(s.platform.c + 10.0, 40_000.0),
+            q: 1.0,
+            proactive: ProactiveMode::CkptBefore,
+        };
+        let a = simulate_once(&s, &spec, 2).unwrap();
+        let b = simulate_once(&s, &spec, 2).unwrap();
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.n_segments, b.n_segments);
+    });
+}

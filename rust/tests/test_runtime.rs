@@ -1,0 +1,173 @@
+//! Integration: the AOT HLO planner against the Rust closed-form model.
+//!
+//! This is the contract between the three layers: the Pallas kernel +
+//! JAX planner (compiled at build time) must agree with the native case
+//! analysis on every §5 configuration.
+//!
+//! Requires `make artifacts`; tests panic with a clear message if the
+//! artifacts are missing (the Makefile runs them in order).
+
+use ckptfp::config::{paper_proc_counts, predictor_yu, predictor_zheng, Predictor, Scenario};
+use ckptfp::model::{optimize, plan, Capping, Params, StrategyKind};
+use ckptfp::runtime::{artifacts_dir, HloPlanner, Runtime};
+
+fn planner() -> HloPlanner {
+    HloPlanner::open_default().expect(
+        "HLO artifacts not found or unloadable — run `make artifacts` before `cargo test`",
+    )
+}
+
+fn paper_params() -> Vec<Params> {
+    let mut out = Vec::new();
+    for n in paper_proc_counts() {
+        for window in [0.0, 300.0, 3000.0] {
+            out.push(Params::from_scenario(&Scenario::paper(n, predictor_yu(window))));
+            out.push(Params::from_scenario(&Scenario::paper(n, predictor_zheng(window))));
+        }
+        out.push(Params::from_scenario(&Scenario::paper(n, Predictor::none())));
+    }
+    out
+}
+
+#[test]
+fn manifest_and_artifacts_present() {
+    let dir = artifacts_dir().expect("artifacts dir missing");
+    let rt = Runtime::open(&dir).unwrap();
+    assert!(rt.manifest().find("planner_b1").is_some());
+    assert!(rt.manifest().find("planner_b64").is_some());
+    assert!(rt.manifest().find("surface_b16").is_some());
+    assert_eq!(rt.platform_name(), "cpu");
+}
+
+#[test]
+fn hlo_waste_matches_closed_form_everywhere() {
+    let mut planner = planner();
+    let params = paper_params();
+    let outs = planner.plan_batch(&params).unwrap();
+    assert_eq!(outs.len(), params.len());
+    let mut worst: (f64, usize, usize) = (0.0, 0, 0);
+    for (i, (p, out)) in params.iter().zip(&outs).enumerate() {
+        for kind in StrategyKind::ALL {
+            let (_, w) = optimize(p, kind, Capping::Capped);
+            let diff = (w - out.waste[kind as usize]).abs();
+            if diff > worst.0 {
+                worst = (diff, i, kind as usize);
+            }
+        }
+    }
+    // Grid resolution: 512 quadratically-spaced points over
+    // [C, alpha*mu]. Interior optima sit in flat basins (sub-1e-3
+    // agreement); configurations whose window cap alpha*mu_e - I is
+    // barely above C are boundary-limited and the grid argmin
+    // over-approximates by up to a few 1e-3 — always conservative.
+    assert!(
+        worst.0 < 5e-3,
+        "config {} strategy {}: HLO vs closed form differs by {}",
+        worst.1,
+        worst.2,
+        worst.0
+    );
+}
+
+#[test]
+fn hlo_periods_match_case_analysis() {
+    let mut planner = planner();
+    let params = paper_params();
+    let outs = planner.plan_batch(&params).unwrap();
+    for (p, out) in params.iter().zip(&outs) {
+        for kind in [StrategyKind::Young, StrategyKind::ExactPrediction] {
+            let (t, w) = optimize(p, kind, Capping::Capped);
+            if w >= 1.0 {
+                continue; // masked configuration
+            }
+            let rel = (t - out.period[kind as usize]).abs() / t;
+            assert!(
+                rel < 0.02,
+                "{}: closed form T={t} vs HLO {}",
+                kind.name(),
+                out.period[kind as usize]
+            );
+        }
+    }
+}
+
+#[test]
+fn hlo_winner_agrees_with_model() {
+    let mut planner = planner();
+    let params = paper_params();
+    let outs = planner.plan_batch(&params).unwrap();
+    for (p, out) in params.iter().zip(&outs) {
+        let native = plan(p, Capping::Capped, true);
+        // Winners can differ when two strategies are within grid
+        // tolerance of each other; the winning *waste* must agree.
+        assert!(
+            (native.winner_waste() - out.winner_waste).abs() < 2e-3,
+            "native {} ({}) vs hlo {} ({})",
+            native.winner_waste(),
+            native.winner.name(),
+            out.winner_waste,
+            out.winner.name()
+        );
+    }
+}
+
+#[test]
+fn batch_one_artifact_round_trip() {
+    let mut planner = planner();
+    let p = Params::from_scenario(&Scenario::paper(1 << 16, predictor_yu(300.0)));
+    let single = planner.plan_batch(&[p]).unwrap();
+    let batch = planner.plan_batch(&vec![p; 64]).unwrap();
+    // The b=1 artifact and the b=64 artifact must agree on identical input.
+    for s in 0..6 {
+        assert!((single[0].waste[s] - batch[0].waste[s]).abs() < 1e-6);
+        assert!((single[0].waste[s] - batch[63].waste[s]).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn surfaces_are_convex_and_masked() {
+    let mut planner = planner();
+    let p = Params::from_scenario(&Scenario::paper(1 << 16, predictor_yu(3000.0)));
+    let surf = planner.surfaces(&[p]).unwrap().remove(0);
+    assert_eq!(surf.waste.len(), 6);
+    assert_eq!(surf.periods.len(), surf.waste[0].len());
+    // Period grid starts at C and increases.
+    assert!((surf.periods[0] - 600.0).abs() < 1.0);
+    assert!(surf.periods.windows(2).all(|w| w[1] > w[0]));
+    // Each surface, below its mask, is convex in T — except Instant
+    // (s=2), whose Eq. (5) has one concave kink at T = 2 E_I^f. The
+    // grid is non-uniform, so use divided differences in T.
+    for s in 0..6 {
+        let w = &surf.waste[s];
+        let t = &surf.periods;
+        let mut violations = 0;
+        for j in 1..w.len() - 1 {
+            if w[j - 1] >= 1.0 || w[j] >= 1.0 || w[j + 1] >= 1.0 {
+                continue; // masked region
+            }
+            let slope_lo = (w[j] - w[j - 1]) / (t[j] - t[j - 1]);
+            let slope_hi = (w[j + 1] - w[j]) / (t[j + 1] - t[j]);
+            if slope_hi < slope_lo - 1e-7 {
+                violations += 1;
+                assert!(s == 2, "s={s} j={j}: slopes {slope_lo} -> {slope_hi}");
+            }
+        }
+        // f32 noise can smear the single analytic kink across a couple
+        // of adjacent grid cells.
+        assert!(violations <= 3, "s={s}: {violations} kinks");
+    }
+    // Window strategies masked beyond alpha*mu_e - I.
+    let last = surf.waste[2].last().unwrap();
+    assert_eq!(*last, 1.0);
+}
+
+#[test]
+fn oversized_batch_chunks() {
+    let mut planner = planner();
+    let p = Params::from_scenario(&Scenario::paper(1 << 17, predictor_zheng(300.0)));
+    let outs = planner.plan_batch(&vec![p; 130]).unwrap(); // 3 chunks of b=64
+    assert_eq!(outs.len(), 130);
+    for o in &outs {
+        assert!((o.waste[0] - outs[0].waste[0]).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,107 @@
+//! Integration: batcher + TCP planner service end to end.
+//! Requires `make artifacts` (the Makefile orders this before tests).
+
+use std::time::Duration;
+
+use ckptfp::coordinator::{serve, Batcher, BatcherConfig, PlannerClient, ServiceConfig};
+use ckptfp::runtime::HloPlanner;
+
+fn start_service() -> (ckptfp::coordinator::ServiceHandle, String, Batcher) {
+    let batcher = Batcher::spawn(
+        HloPlanner::open_default,
+        BatcherConfig { max_batch: 16, max_delay: Duration::from_millis(1), ..Default::default() },
+    )
+    .expect("artifacts missing? run `make artifacts`");
+    let handle = serve(batcher.clone(), ServiceConfig { addr: "127.0.0.1:0".into() }).unwrap();
+    let addr = handle.addr.to_string();
+    (handle, addr, batcher)
+}
+
+#[test]
+fn plan_request_round_trip() {
+    let (handle, addr, _batcher) = start_service();
+    let mut client = PlannerClient::connect(&addr).unwrap();
+    let v = client
+        .call(r#"{"mu": 60000, "recall": 0.85, "precision": 0.82, "window": 300}"#)
+        .unwrap();
+    assert_eq!(v.get("ok").and_then(|b| b.as_bool()), Some(true));
+    let waste = v.num_or("winner_waste", f64::NAN);
+    assert!(waste > 0.0 && waste < 1.0, "waste {waste}");
+    let period = v.num_or("winner_period", f64::NAN);
+    assert!(period >= 600.0);
+    // All six strategies reported.
+    match v.get("strategies") {
+        Some(ckptfp::util::json::Json::Arr(xs)) => assert_eq!(xs.len(), 6),
+        other => panic!("bad strategies field: {other:?}"),
+    }
+    handle.stop();
+}
+
+#[test]
+fn ping_stats_and_errors() {
+    let (handle, addr, _batcher) = start_service();
+    let mut client = PlannerClient::connect(&addr).unwrap();
+    let pong = client.call(r#"{"op": "ping"}"#).unwrap();
+    assert_eq!(pong.get("pong").and_then(|b| b.as_bool()), Some(true));
+
+    let err = client.call(r#"{"op": "plan"}"#).unwrap(); // missing mu
+    assert_eq!(err.get("ok").and_then(|b| b.as_bool()), Some(false));
+    assert!(err.get("error").is_some());
+
+    let garbage = client.call("this is not json").unwrap();
+    assert_eq!(garbage.get("ok").and_then(|b| b.as_bool()), Some(false));
+
+    // Connection survives errors: a valid request still works.
+    let v = client.call(r#"{"mu": 7500, "recall": 0.7, "precision": 0.4}"#).unwrap();
+    assert_eq!(v.get("ok").and_then(|b| b.as_bool()), Some(true));
+
+    // Only the one valid plan request reached the batcher (errors and
+    // pings are handled at the protocol layer).
+    let stats = client.call(r#"{"op": "stats"}"#).unwrap();
+    assert!(stats.num_or("requests", 0.0) >= 1.0);
+    handle.stop();
+}
+
+#[test]
+fn concurrent_clients_batch_together() {
+    let (handle, addr, batcher) = start_service();
+    let n_clients = 12;
+    std::thread::scope(|scope| {
+        for i in 0..n_clients {
+            let addr = addr.clone();
+            scope.spawn(move || {
+                let mut client = PlannerClient::connect(&addr).unwrap();
+                let mu = 7500.0 * (1.0 + i as f64 * 0.1);
+                let v = client
+                    .call(&format!(r#"{{"mu": {mu}, "recall": 0.85, "precision": 0.82}}"#))
+                    .unwrap();
+                assert_eq!(v.get("ok").and_then(|b| b.as_bool()), Some(true));
+            });
+        }
+    });
+    let stats = batcher.stats();
+    assert_eq!(stats.requests, n_clients as u64);
+    // Dynamic batching must have coalesced at least some requests.
+    assert!(stats.batches < n_clients as u64, "batches {} for {n_clients} requests", stats.batches);
+    handle.stop();
+}
+
+#[test]
+fn batcher_direct_plan_many() {
+    let batcher = Batcher::spawn(
+        HloPlanner::open_default,
+        BatcherConfig { max_batch: 64, max_delay: Duration::from_millis(1), ..Default::default() },
+    )
+    .unwrap();
+    let s = ckptfp::config::Scenario::paper(
+        1 << 16,
+        ckptfp::config::Predictor::windowed(0.85, 0.82, 300.0),
+    );
+    let p = ckptfp::model::Params::from_scenario(&s);
+    let outs = batcher.plan_many(vec![p; 30]).unwrap();
+    assert_eq!(outs.len(), 30);
+    for o in &outs {
+        assert!((o.winner_waste - outs[0].winner_waste).abs() < 1e-9);
+    }
+    batcher.shutdown();
+}
