@@ -1,20 +1,58 @@
 //! Performance benches (`cargo bench --bench perf`): the §Perf numbers
 //! of EXPERIMENTS.md.
 //!
-//!   planner   AOT XLA planner latency/throughput, B = 1 vs B = 64
-//!   batcher   dynamic batcher under concurrent clients
-//!   sim       simulation engine event throughput
-//!   pool      worker-pool scaling
-//!   model     closed-form planner throughput (the non-AOT baseline)
+//!   planner              AOT XLA planner latency/throughput, B = 1 vs B = 64
+//!   batcher              dynamic batcher under concurrent clients
+//!   sim                  simulation engine event throughput (session path)
+//!   session_vs_oneshot   SimSession reuse vs naive per-rep construction
+//!   pool                 worker-pool scaling (streaming fold + sessions)
+//!   best_period          brute-force period search, 1 worker vs all
+//!   model                closed-form planner throughput (the non-AOT baseline)
+//!
+//! Every run also emits `BENCH_perf.json` (one object per executed
+//! bench, schema documented in EXPERIMENTS.md §Perf) so the perf
+//! trajectory is machine-readable across PRs.
 
 use std::time::Instant;
 
-use ckptfp::config::{paper_proc_counts, predictor_yu, Scenario};
-use ckptfp::coordinator::{run_parallel, Batcher, BatcherConfig};
+use ckptfp::config::{paper_proc_counts, predictor_yu, Predictor, Scenario};
+use ckptfp::coordinator::{run_parallel_fold, Batcher, BatcherConfig};
 use ckptfp::model::{plan, Capping, Params, StrategyKind};
 use ckptfp::runtime::HloPlanner;
-use ckptfp::sim::simulate_once;
-use ckptfp::strategies::spec_for;
+use ckptfp::sim::{simulate_once, SimSession};
+use ckptfp::strategies::{best_period_with, spec_for, BestPeriodOptions};
+use ckptfp::util::json::Json;
+use ckptfp::util::stats::Summary;
+
+/// Collects per-bench results for the BENCH_perf.json dump.
+#[derive(Default)]
+struct Recorder {
+    entries: Vec<(String, Json)>,
+}
+
+impl Recorder {
+    fn push(&mut self, bench: &str, fields: Vec<(&str, Json)>) {
+        self.entries.push((bench.to_string(), Json::obj(fields)));
+    }
+
+    fn write(&self, path: &str) {
+        let mut top = vec![
+            ("schema".to_string(), Json::Str("ckptfp-perf-v1".into())),
+            (
+                "workers_available".to_string(),
+                Json::Num(ckptfp::coordinator::available_workers() as f64),
+            ),
+        ];
+        for (k, v) in &self.entries {
+            top.push((k.clone(), v.clone()));
+        }
+        let json = Json::Obj(top.into_iter().collect());
+        match std::fs::write(path, json.to_string() + "\n") {
+            Ok(()) => println!("\nwrote {path}"),
+            Err(e) => eprintln!("could not write {path}: {e}"),
+        }
+    }
+}
 
 fn time<F: FnMut()>(label: &str, iters: usize, mut f: F) -> f64 {
     // Warmup.
@@ -28,6 +66,21 @@ fn time<F: FnMut()>(label: &str, iters: usize, mut f: F) -> f64 {
     per
 }
 
+/// Run `f(rep)` (returning engine segments) repeatedly for ~`secs`
+/// wall-clock; yields (M segments/s, runs, seconds).
+fn segment_throughput<F: FnMut(u64) -> u64>(mut f: F, secs: f64) -> (f64, u64, f64) {
+    f(0); // warmup
+    let t0 = Instant::now();
+    let mut segments = 0u64;
+    let mut rep = 0u64;
+    while t0.elapsed().as_secs_f64() < secs {
+        segments += f(rep);
+        rep += 1;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    (segments as f64 / dt / 1e6, rep, dt)
+}
+
 fn params_batch(n: usize) -> Vec<Params> {
     let mut out = Vec::with_capacity(n);
     for i in 0..n {
@@ -38,12 +91,13 @@ fn params_batch(n: usize) -> Vec<Params> {
     out
 }
 
-fn bench_planner() {
+fn bench_planner(rec: &mut Recorder) {
     println!("== planner (AOT XLA via PJRT) ==");
     let mut planner = match HloPlanner::open_default() {
         Ok(p) => p,
         Err(e) => {
             println!("  skipped: {e}");
+            rec.push("planner", vec![("skipped", Json::Bool(true))]);
             return;
         }
     };
@@ -55,14 +109,20 @@ fn bench_planner() {
     let t64 = time("plan_batch B=64", 50, || {
         planner.plan_batch(&sixty_four).expect("plan");
     });
-    println!(
-        "  batching efficiency: {:.1}x per-config speedup (B=64 vs B=1)",
-        t1 / (t64 / 64.0)
-    );
+    let efficiency = t1 / (t64 / 64.0);
+    println!("  batching efficiency: {efficiency:.1}x per-config speedup (B=64 vs B=1)");
     println!("  per-config latency at B=64: {:.1} us", t64 / 64.0 * 1e6);
+    rec.push(
+        "planner",
+        vec![
+            ("b1_ms", Json::Num(t1 * 1e3)),
+            ("b64_ms", Json::Num(t64 * 1e3)),
+            ("batching_efficiency", Json::Num(efficiency)),
+        ],
+    );
 }
 
-fn bench_batcher() {
+fn bench_batcher(rec: &mut Recorder) {
     println!("== dynamic batcher (concurrent clients) ==");
     let batcher = match Batcher::spawn(
         HloPlanner::open_default,
@@ -71,10 +131,13 @@ fn bench_batcher() {
         Ok(b) => b,
         Err(e) => {
             println!("  skipped: {e}");
+            rec.push("batcher", vec![("skipped", Json::Bool(true))]);
             return;
         }
     };
-    for clients in [1usize, 8, 64] {
+    let mut fields: Vec<(&str, Json)> = Vec::new();
+    let labels = ["plans_per_s_c1", "plans_per_s_c8", "plans_per_s_c64"];
+    for (clients, label) in [1usize, 8, 64].into_iter().zip(labels) {
         let reqs = params_batch(clients);
         let t0 = Instant::now();
         let rounds = 20;
@@ -93,45 +156,72 @@ fn bench_batcher() {
             total / dt,
             dt / rounds as f64 * 1e3
         );
+        fields.push((label, Json::Num(total / dt)));
     }
     let stats = batcher.stats();
     println!(
         "  batches formed: {} for {} requests (max batch {})",
         stats.batches, stats.requests, stats.max_batch_seen
     );
+    rec.push("batcher", fields);
     batcher.shutdown();
 }
 
-fn bench_sim() {
-    println!("== simulation engine ==");
-    for (label, n, dist) in [
-        ("N=2^16 weibull:0.7", 1u64 << 16, "weibull:0.7"),
-        ("N=2^19 weibull:0.7", 1u64 << 19, "weibull:0.7"),
-        ("N=2^19 exp", 1u64 << 19, "exp"),
+fn bench_sim(rec: &mut Recorder) {
+    println!("== simulation engine (session path) ==");
+    let mut fields: Vec<(&str, Json)> = Vec::new();
+    for (label, key, n, dist) in [
+        ("N=2^16 weibull:0.7", "msegs_n16_weibull07", 1u64 << 16, "weibull:0.7"),
+        ("N=2^19 weibull:0.7", "msegs_n19_weibull07", 1u64 << 19, "weibull:0.7"),
+        ("N=2^19 exp", "msegs_n19_exp", 1u64 << 19, "exp"),
     ] {
         let mut s = Scenario::paper(n, predictor_yu(300.0));
         s.fault_dist = dist.into();
         let spec = spec_for(StrategyKind::NoCkptI, &s, Capping::Uncapped);
-        let mut segments = 0u64;
-        let mut rep = 0u64;
-        let t0 = Instant::now();
-        while t0.elapsed().as_secs_f64() < 1.0 {
-            let o = simulate_once(&s, &spec, rep).expect("sim");
-            segments += o.n_segments;
-            rep += 1;
-        }
-        let dt = t0.elapsed().as_secs_f64();
+        let mut session = SimSession::new(&s, &spec).expect("session");
+        let (msegs, runs, dt) = segment_throughput(|rep| session.run(rep).n_segments, 1.0);
         println!(
             "  {label:<24} {:>6.2} M segments/s  ({:.1} sim-years/s, {} runs)",
-            segments as f64 / dt / 1e6,
-            rep as f64 * s.work / (365.25 * 86400.0) / dt,
-            rep
+            msegs,
+            runs as f64 * s.work / (365.25 * 86400.0) / dt,
+            runs
         );
+        fields.push((key, Json::Num(msegs)));
     }
+    rec.push("sim", fields);
 }
 
-fn bench_pool() {
-    println!("== worker pool scaling (fixed total work) ==");
+fn bench_session_vs_oneshot(rec: &mut Recorder) {
+    println!("== session reuse vs one-shot construction ==");
+    // The BestPeriod-shaped workload: many replications of one
+    // (scenario, spec) pair. The one-shot path re-parses the spec
+    // strings and rebuilds generator + engine (and their buffers) every
+    // replication; the session path pays that once.
+    let mut s = Scenario::paper(1 << 19, predictor_yu(300.0));
+    s.fault_dist = "weibull:0.7".into();
+    let spec = spec_for(StrategyKind::NoCkptI, &s, Capping::Uncapped);
+
+    let (oneshot_msegs, oneshot_runs, _) =
+        segment_throughput(|rep| simulate_once(&s, &spec, rep).expect("sim").n_segments, 1.5);
+    let mut session = SimSession::new(&s, &spec).expect("session");
+    let (session_msegs, session_runs, _) =
+        segment_throughput(|rep| session.run(rep).n_segments, 1.5);
+    let speedup = session_msegs / oneshot_msegs;
+    println!("  one-shot simulate_once loop  {oneshot_msegs:>6.2} M segments/s ({oneshot_runs} runs)");
+    println!("  SimSession::run loop         {session_msegs:>6.2} M segments/s ({session_runs} runs)");
+    println!("  session speedup: {speedup:.2}x");
+    rec.push(
+        "session_vs_oneshot",
+        vec![
+            ("oneshot_msegments_per_s", Json::Num(oneshot_msegs)),
+            ("session_msegments_per_s", Json::Num(session_msegs)),
+            ("speedup", Json::Num(speedup)),
+        ],
+    );
+}
+
+fn bench_pool(rec: &mut Recorder) {
+    println!("== worker pool scaling (streaming fold, fixed total work) ==");
     let s = {
         let mut s = Scenario::paper(1 << 19, predictor_yu(300.0));
         s.fault_dist = "weibull:0.7".into();
@@ -140,11 +230,23 @@ fn bench_pool() {
     let spec = spec_for(StrategyKind::NoCkptI, &s, Capping::Uncapped);
     let reps: Vec<u64> = (0..2048).collect();
     let mut base = 0.0;
-    for workers in [1usize, 2, 4, 8] {
+    let mut fields: Vec<(&str, Json)> = Vec::new();
+    let keys = ["speedup_w1", "speedup_w2", "speedup_w4", "speedup_w8"];
+    for (workers, key) in [1usize, 2, 4, 8].into_iter().zip(keys) {
         let t0 = Instant::now();
-        let _ = run_parallel(reps.clone(), workers, |rep| {
-            simulate_once(&s, &spec, *rep).expect("sim").waste()
-        });
+        let (_, sum) = run_parallel_fold(
+            &reps,
+            workers,
+            || (None::<SimSession>, Summary::new()),
+            |(mut sess, mut sum), &rep| {
+                let sref = sess
+                    .get_or_insert_with(|| SimSession::new(&s, &spec).expect("session"));
+                sum.push(sref.run(rep).waste());
+                (sess, sum)
+            },
+            |(_, a), (_, b)| (None, a.merge(&b)),
+        );
+        std::hint::black_box(sum.mean());
         let dt = t0.elapsed().as_secs_f64();
         if workers == 1 {
             base = dt;
@@ -154,36 +256,89 @@ fn bench_pool() {
             base / dt,
             base / dt / workers as f64 * 100.0
         );
+        fields.push((key, Json::Num(base / dt)));
     }
+    rec.push("pool", fields);
 }
 
-fn bench_model() {
+fn bench_best_period(rec: &mut Recorder) {
+    println!("== best-period search (candidate x rep product) ==");
+    // The `best_period_close_to_formula` test configuration.
+    let mut s = Scenario::paper(1 << 16, Predictor::none());
+    s.fault_dist = "exp".into();
+    s.work = 2.0e5;
+    let base = spec_for(StrategyKind::Young, &s, Capping::Uncapped);
+    let mut fields: Vec<(&str, Json)> = Vec::new();
+    let mut serial = 0.0;
+    let all = ckptfp::coordinator::available_workers();
+    for (label, key, workers, prune) in [
+        ("1 worker, no prune", "serial_s", 1usize, false),
+        ("1 worker, pruned", "serial_pruned_s", 1, true),
+        ("all workers, pruned", "parallel_pruned_s", all, true),
+    ] {
+        let t0 = Instant::now();
+        let res = best_period_with(&s, &base, 12, 12, &BestPeriodOptions { workers, prune })
+            .expect("search");
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "  {label:<22} {dt:>6.2}s  (T* = {:.0}, {} pruned)",
+            res.t_r, res.n_pruned
+        );
+        if key == "serial_s" {
+            serial = dt;
+        }
+        fields.push((key, Json::Num(dt)));
+        std::hint::black_box(res.waste);
+        if key == "parallel_pruned_s" && serial > 0.0 {
+            println!("  end-to-end speedup vs serial exhaustive: {:.2}x", serial / dt);
+            fields.push(("speedup", Json::Num(serial / dt)));
+        }
+    }
+    rec.push("best_period", fields);
+}
+
+fn bench_model(rec: &mut Recorder) {
     println!("== closed-form planner (Rust baseline) ==");
     let batch = params_batch(64);
-    time("plan() x64 closed-form", 200, || {
+    let per = time("plan() x64 closed-form", 200, || {
         for p in &batch {
             std::hint::black_box(plan(p, Capping::Capped, false));
         }
     });
+    rec.push("model", vec![("plan64_ms", Json::Num(per * 1e3))]);
 }
 
 fn main() {
     let which: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with("--")).collect();
     let run = |name: &str| which.is_empty() || which.iter().any(|w| w == name);
     println!("ckptfp perf bench (workers available: {})", ckptfp::coordinator::available_workers());
+    let mut rec = Recorder::default();
     if run("planner") {
-        bench_planner();
+        bench_planner(&mut rec);
     }
     if run("batcher") {
-        bench_batcher();
+        bench_batcher(&mut rec);
     }
     if run("sim") {
-        bench_sim();
+        bench_sim(&mut rec);
+    }
+    if run("session_vs_oneshot") {
+        bench_session_vs_oneshot(&mut rec);
     }
     if run("pool") {
-        bench_pool();
+        bench_pool(&mut rec);
+    }
+    if run("best_period") {
+        bench_best_period(&mut rec);
     }
     if run("model") {
-        bench_model();
+        bench_model(&mut rec);
+    }
+    if which.is_empty() {
+        rec.write("BENCH_perf.json");
+    } else {
+        // A filtered run records only a subset; overwriting would
+        // clobber the last full baseline.
+        println!("\n(filtered run — BENCH_perf.json left untouched; run with no bench names to record)");
     }
 }

@@ -156,13 +156,19 @@ impl Scenario {
     }
 
     pub fn validate(&self) -> anyhow::Result<()> {
+        use anyhow::Context as _;
         self.platform.validate()?;
         self.predictor.validate()?;
         anyhow::ensure!(self.alpha > 0.0 && self.alpha <= 1.0, "alpha in (0,1]");
         anyhow::ensure!(self.work > 0.0, "work must be positive");
-        crate::dist::parse(&self.fault_dist)?;
+        // Single source of truth for spec syntax: `dist::parse` — its
+        // error already names the offending spec; the context pins down
+        // which field carried it.
+        crate::dist::parse(&self.fault_dist)
+            .with_context(|| format!("scenario fault_dist '{}'", self.fault_dist))?;
         if !self.false_pred_dist.is_empty() {
-            crate::dist::parse(&self.false_pred_dist)?;
+            crate::dist::parse(&self.false_pred_dist)
+                .with_context(|| format!("scenario false_pred_dist '{}'", self.false_pred_dist))?;
         }
         Ok(())
     }
@@ -230,7 +236,16 @@ mod tests {
         assert!(s.validate().is_err());
         s.alpha = 0.27;
         s.fault_dist = "bogus".into();
-        assert!(s.validate().is_err());
+        let err = s.validate().unwrap_err();
+        assert!(
+            format!("{err:#}").contains("bogus"),
+            "validation error must name the offending spec: {err:#}"
+        );
+        s.fault_dist = "exp".into();
+        s.false_pred_dist = "weibull:nope".into();
+        let err = s.validate().unwrap_err();
+        assert!(format!("{err:#}").contains("weibull:nope"), "{err:#}");
+        s.false_pred_dist.clear();
 
         let bad = Predictor { recall: 0.5, precision: 0.0, window: 0.0, ef: 0.0 };
         assert!(bad.validate().is_err());

@@ -10,5 +10,5 @@ mod service;
 
 pub use batcher::{Batcher, BatcherConfig, BatcherStats};
 pub use metrics::Metrics;
-pub use pool::{available_workers, run_parallel};
+pub use pool::{available_workers, run_parallel, run_parallel_fold};
 pub use service::{serve, PlannerClient, ServiceConfig, ServiceHandle};

@@ -64,6 +64,75 @@ struct SlotsPtr<R>(*mut Option<R>);
 unsafe impl<R: Send> Send for SlotsPtr<R> {}
 unsafe impl<R: Send> Sync for SlotsPtr<R> {}
 
+/// Streaming parallel reduction: fold `items` into per-worker
+/// accumulators, then merge the partials — no `Vec<Option<R>>` slot
+/// array, no per-item result allocation. This is the right shape for
+/// replication workloads, where the caller only wants the aggregate
+/// (and where the per-worker accumulator can carry reusable scratch
+/// such as a [`crate::sim::SimSession`]).
+///
+/// Work distribution is a deterministic stride: worker `w` folds items
+/// `w, w + W, w + 2W, …` in order, and partials merge in worker order.
+/// Unlike the atomic-claim loop in [`run_parallel`] this keeps the
+/// reduction reproducible for a fixed worker count (counters exactly,
+/// floating-point accumulations bit-for-bit), while replication costs —
+/// random by construction — still average out across the stride.
+///
+/// Panics in `fold` propagate after all workers stop, matching
+/// [`run_parallel`]. Empty input returns `init()` untouched.
+pub fn run_parallel_fold<T, A, I, F, M>(
+    items: &[T],
+    workers: usize,
+    init: I,
+    fold: F,
+    merge: M,
+) -> A
+where
+    T: Sync,
+    A: Send,
+    I: Fn() -> A + Sync,
+    F: Fn(A, &T) -> A + Sync,
+    M: Fn(A, A) -> A,
+{
+    let n = items.len();
+    if n == 0 {
+        return init();
+    }
+    let workers = workers.max(1).min(n);
+    if workers == 1 {
+        return items.iter().fold(init(), &fold);
+    }
+    let mut partials: Vec<A> = Vec::with_capacity(workers);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..workers)
+            .map(|w| {
+                let init = &init;
+                let fold = &fold;
+                scope.spawn(move || {
+                    let mut acc = init();
+                    let mut i = w;
+                    while i < n {
+                        acc = fold(acc, &items[i]);
+                        i += workers;
+                    }
+                    acc
+                })
+            })
+            .collect();
+        for h in handles {
+            match h.join() {
+                Ok(a) => partials.push(a),
+                // Re-raise the worker's payload; the scope joins the
+                // remaining workers before unwinding past it.
+                Err(payload) => std::panic::resume_unwind(payload),
+            }
+        }
+    });
+    let mut iter = partials.into_iter();
+    let first = iter.next().expect("at least one worker ran");
+    iter.fold(first, merge)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -106,5 +175,76 @@ mod tests {
     #[test]
     fn workers_env_override() {
         assert!(available_workers() >= 1);
+    }
+
+    #[test]
+    fn fold_matches_sequential_sum() {
+        let items: Vec<u64> = (0..1000).collect();
+        let total = run_parallel_fold(&items, 8, || 0u64, |a, x| a + x, |a, b| a + b);
+        assert_eq!(total, items.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn fold_empty_input_returns_init() {
+        let out = run_parallel_fold(&Vec::<u32>::new(), 4, || 41u32, |a, x| a + x, |a, b| a + b);
+        assert_eq!(out, 41);
+    }
+
+    #[test]
+    fn fold_single_worker_is_plain_fold() {
+        let items = vec![1u64, 2, 3, 4];
+        let out = run_parallel_fold(
+            &items,
+            1,
+            Vec::new,
+            |mut acc: Vec<u64>, &x| {
+                acc.push(x);
+                acc
+            },
+            |mut a, b| {
+                a.extend(b);
+                a
+            },
+        );
+        // One worker folds in input order.
+        assert_eq!(out, items);
+    }
+
+    #[test]
+    fn fold_is_deterministic_for_fixed_workers() {
+        // Floating-point accumulation order is a fixed stride + fixed
+        // merge order, so two runs agree bit for bit.
+        let items: Vec<f64> = (0..501).map(|i| (i as f64).sin()).collect();
+        let run = || {
+            run_parallel_fold(&items, 5, || 0.0f64, |a, x| a + x, |a, b| a + b)
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+
+    #[test]
+    fn fold_more_workers_than_items_clamps() {
+        let items = vec![10u64, 20];
+        let total = run_parallel_fold(&items, 64, || 0u64, |a, x| a + x, |a, b| a + b);
+        assert_eq!(total, 30);
+    }
+
+    #[test]
+    #[should_panic(expected = "boom at 17")]
+    fn fold_propagates_worker_panics() {
+        let items: Vec<u64> = (0..64).collect();
+        let _ = run_parallel_fold(
+            &items,
+            4,
+            || 0u64,
+            |a, &x| {
+                if x == 17 {
+                    panic!("boom at 17");
+                }
+                a + x
+            },
+            |a, b| a + b,
+        );
     }
 }

@@ -1,0 +1,342 @@
+//! Failure-law distributions (substrate: no `rand_distr` offline).
+//!
+//! [`Dist`] is the workhorse: a monomorphized enum over the three laws
+//! the paper simulates (Exponential, Weibull, Uniform) with inline
+//! inverse-CDF sampling — the trace generator draws one sample per
+//! fault and per false prediction, so the sampling call sits on the
+//! replication hot path and must not go through `Box<dyn>` virtual
+//! dispatch. The thin [`Distribution`] trait (and the per-law structs)
+//! exists only for the `prelude` API and generic user code; everything
+//! inside the engine stores `Dist` by value.
+//!
+//! Spec strings, as used by [`crate::config::Scenario`]:
+//!
+//! * `"exp"` (or `"exponential"`) — Exponential;
+//! * `"weibull:K"` — Weibull with shape `K` (e.g. `weibull:0.7`);
+//! * `"uniform"` — Uniform on `[0, 2·mean]`.
+//!
+//! [`parse`] yields a unit-mean law; scale it with [`Dist::with_mean`].
+
+use crate::rng::Pcg64;
+
+/// A continuous positive distribution, monomorphized for the sampling
+/// hot loop. All variants are parameterized so that [`Dist::mean`] is
+/// exact and [`Dist::with_mean`] is a pure rescale.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Dist {
+    /// Exponential with the given mean (rate 1/mean).
+    Exponential { mean: f64 },
+    /// Weibull with shape `k` and scale `lambda`.
+    Weibull { shape: f64, scale: f64 },
+    /// Uniform on `[lo, hi)`.
+    Uniform { lo: f64, hi: f64 },
+}
+
+impl Dist {
+    /// Inverse-CDF sample. Uses the open-interval uniform so `ln` never
+    /// sees zero; one RNG draw per sample for every law.
+    #[inline]
+    pub fn sample(&self, rng: &mut Pcg64) -> f64 {
+        match *self {
+            Dist::Exponential { mean } => -mean * rng.next_f64_open().ln(),
+            Dist::Weibull { shape, scale } => {
+                scale * (-rng.next_f64_open().ln()).powf(1.0 / shape)
+            }
+            Dist::Uniform { lo, hi } => lo + (hi - lo) * rng.next_f64(),
+        }
+    }
+
+    /// Exact expectation of the law.
+    pub fn mean(&self) -> f64 {
+        match *self {
+            Dist::Exponential { mean } => mean,
+            Dist::Weibull { shape, scale } => scale * gamma(1.0 + 1.0 / shape),
+            Dist::Uniform { lo, hi } => 0.5 * (lo + hi),
+        }
+    }
+
+    /// Rescale so the expectation equals `mean` (shape is preserved).
+    pub fn with_mean(self, mean: f64) -> Dist {
+        match self {
+            Dist::Exponential { .. } => Dist::Exponential { mean },
+            Dist::Weibull { shape, .. } => {
+                Dist::Weibull { shape, scale: mean / gamma(1.0 + 1.0 / shape) }
+            }
+            Dist::Uniform { .. } => Dist::Uniform { lo: 0.0, hi: 2.0 * mean },
+        }
+    }
+}
+
+/// Parse a spec string into a unit-mean law. The error always names the
+/// offending spec so `Scenario::validate` failures are actionable.
+pub fn parse(spec: &str) -> anyhow::Result<Dist> {
+    let spec_trim = spec.trim();
+    match spec_trim {
+        "exp" | "exponential" => return Ok(Dist::Exponential { mean: 1.0 }),
+        "uniform" => return Ok(Dist::Uniform { lo: 0.0, hi: 2.0 }),
+        _ => {}
+    }
+    if let Some(shape_str) = spec_trim.strip_prefix("weibull:") {
+        let shape: f64 = shape_str.parse().map_err(|_| {
+            anyhow::anyhow!("bad Weibull shape in distribution spec '{spec}' (expected weibull:<shape>, e.g. weibull:0.7)")
+        })?;
+        anyhow::ensure!(
+            shape.is_finite() && shape > 0.0,
+            "Weibull shape must be finite and positive in distribution spec '{spec}'"
+        );
+        return Ok(Dist::Weibull { shape, scale: 1.0 }.with_mean(1.0));
+    }
+    anyhow::bail!(
+        "unrecognized distribution spec '{spec}' (expected \"exp\", \"weibull:<shape>\" or \"uniform\")"
+    )
+}
+
+/// Γ(x) for x > 0 — Lanczos approximation (g = 7, n = 9), accurate to
+/// ~1e-13 over the shapes used here. Needed for the Weibull mean.
+fn gamma(x: f64) -> f64 {
+    const COEFFS: [f64; 9] = [
+        0.99999999999980993,
+        676.5203681218851,
+        -1259.1392167224028,
+        771.32342877765313,
+        -176.61502916214059,
+        12.507343278686905,
+        -0.13857109526572012,
+        9.9843695780195716e-6,
+        1.5056327351493116e-7,
+    ];
+    if x < 0.5 {
+        // Reflection formula keeps the approximation in its sweet spot.
+        return std::f64::consts::PI / ((std::f64::consts::PI * x).sin() * gamma(1.0 - x));
+    }
+    let x = x - 1.0;
+    let mut acc = COEFFS[0];
+    for (i, c) in COEFFS.iter().enumerate().skip(1) {
+        acc += c / (x + i as f64);
+    }
+    let t = x + 7.5;
+    (2.0 * std::f64::consts::PI).sqrt() * t.powf(x + 0.5) * (-t).exp() * acc
+}
+
+/// Object-safe view of a distribution, for the prelude / generic user
+/// code. The engine never goes through this — it stores [`Dist`].
+pub trait Distribution {
+    fn sample(&self, rng: &mut Pcg64) -> f64;
+    fn mean(&self) -> f64;
+}
+
+impl Distribution for Dist {
+    #[inline]
+    fn sample(&self, rng: &mut Pcg64) -> f64 {
+        Dist::sample(self, rng)
+    }
+
+    fn mean(&self) -> f64 {
+        Dist::mean(self)
+    }
+}
+
+/// Exponential law (prelude convenience wrapper over [`Dist`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Exponential {
+    pub mean: f64,
+}
+
+impl Exponential {
+    pub fn new(mean: f64) -> Self {
+        Exponential { mean }
+    }
+}
+
+impl From<Exponential> for Dist {
+    fn from(e: Exponential) -> Dist {
+        Dist::Exponential { mean: e.mean }
+    }
+}
+
+impl Distribution for Exponential {
+    #[inline]
+    fn sample(&self, rng: &mut Pcg64) -> f64 {
+        Dist::from(*self).sample(rng)
+    }
+
+    fn mean(&self) -> f64 {
+        self.mean
+    }
+}
+
+/// Weibull law (prelude convenience wrapper over [`Dist`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Weibull {
+    pub shape: f64,
+    pub scale: f64,
+}
+
+impl Weibull {
+    pub fn new(shape: f64, scale: f64) -> Self {
+        Weibull { shape, scale }
+    }
+
+    /// Weibull with shape `k`, scaled to the given mean.
+    pub fn with_mean(shape: f64, mean: f64) -> Self {
+        match (Dist::Weibull { shape, scale: 1.0 }).with_mean(mean) {
+            Dist::Weibull { shape, scale } => Weibull { shape, scale },
+            _ => unreachable!(),
+        }
+    }
+}
+
+impl From<Weibull> for Dist {
+    fn from(w: Weibull) -> Dist {
+        Dist::Weibull { shape: w.shape, scale: w.scale }
+    }
+}
+
+impl Distribution for Weibull {
+    #[inline]
+    fn sample(&self, rng: &mut Pcg64) -> f64 {
+        Dist::from(*self).sample(rng)
+    }
+
+    fn mean(&self) -> f64 {
+        Dist::from(*self).mean()
+    }
+}
+
+/// Uniform law (prelude convenience wrapper over [`Dist`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Uniform {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Uniform {
+    pub fn new(lo: f64, hi: f64) -> Self {
+        Uniform { lo, hi }
+    }
+}
+
+impl From<Uniform> for Dist {
+    fn from(u: Uniform) -> Dist {
+        Dist::Uniform { lo: u.lo, hi: u.hi }
+    }
+}
+
+impl Distribution for Uniform {
+    #[inline]
+    fn sample(&self, rng: &mut Pcg64) -> f64 {
+        Dist::from(*self).sample(rng)
+    }
+
+    fn mean(&self) -> f64 {
+        Dist::from(*self).mean()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::approx_eq;
+
+    fn empirical_mean(d: Dist, n: usize, seed: u64) -> f64 {
+        let mut rng = Pcg64::seeded(seed);
+        (0..n).map(|_| d.sample(&mut rng)).sum::<f64>() / n as f64
+    }
+
+    #[test]
+    fn parse_known_specs() {
+        assert_eq!(parse("exp").unwrap(), Dist::Exponential { mean: 1.0 });
+        assert_eq!(parse("exponential").unwrap(), Dist::Exponential { mean: 1.0 });
+        assert_eq!(parse("uniform").unwrap(), Dist::Uniform { lo: 0.0, hi: 2.0 });
+        match parse("weibull:0.7").unwrap() {
+            Dist::Weibull { shape, scale } => {
+                assert!(approx_eq(shape, 0.7, 1e-12));
+                assert!(scale > 0.0);
+            }
+            other => panic!("wrong law: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_yields_unit_mean() {
+        for spec in ["exp", "uniform", "weibull:0.5", "weibull:0.7", "weibull:1.0", "weibull:2.0"] {
+            let d = parse(spec).unwrap();
+            assert!(approx_eq(d.mean(), 1.0, 1e-9), "{spec}: mean {}", d.mean());
+        }
+    }
+
+    #[test]
+    fn parse_error_names_the_spec() {
+        for bad in ["bogus", "weibull:", "weibull:zero", "weibull:-1", "weibull:nan"] {
+            let err = parse(bad).unwrap_err().to_string();
+            assert!(err.contains(bad), "error for '{bad}' does not name it: {err}");
+        }
+    }
+
+    #[test]
+    fn with_mean_rescales_exactly() {
+        for spec in ["exp", "uniform", "weibull:0.7"] {
+            let d = parse(spec).unwrap().with_mean(60_000.0);
+            assert!(approx_eq(d.mean(), 60_000.0, 1e-9), "{spec}: mean {}", d.mean());
+        }
+    }
+
+    #[test]
+    fn gamma_known_values() {
+        // Γ(n) = (n-1)!, Γ(1/2) = sqrt(pi).
+        assert!(approx_eq(gamma(1.0), 1.0, 1e-12));
+        assert!(approx_eq(gamma(2.0), 1.0, 1e-12));
+        assert!(approx_eq(gamma(5.0), 24.0, 1e-12));
+        assert!(approx_eq(gamma(0.5), std::f64::consts::PI.sqrt(), 1e-12));
+        // Weibull k=0.7 mean factor Γ(1 + 1/0.7) = Γ(2.428...).
+        assert!(approx_eq(gamma(1.0 + 1.0 / 0.7), 1.265857127050092, 1e-9));
+    }
+
+    #[test]
+    fn empirical_means_match() {
+        let n = 200_000;
+        for (spec, seed) in [("exp", 1), ("uniform", 2), ("weibull:0.7", 3), ("weibull:2.0", 4)] {
+            let d = parse(spec).unwrap().with_mean(100.0);
+            let emp = empirical_mean(d, n, seed);
+            assert!(
+                (emp - 100.0).abs() / 100.0 < 0.03,
+                "{spec}: empirical mean {emp}"
+            );
+        }
+    }
+
+    #[test]
+    fn exponential_memoryless_rate() {
+        // P(X > t) = exp(-t/mean): check one tail point empirically.
+        let d = Dist::Exponential { mean: 50.0 };
+        let mut rng = Pcg64::seeded(9);
+        let n = 100_000;
+        let tail = (0..n).filter(|_| d.sample(&mut rng) > 50.0).count() as f64 / n as f64;
+        assert!((tail - (-1.0f64).exp()).abs() < 0.01, "tail {tail}");
+    }
+
+    #[test]
+    fn sampling_is_deterministic() {
+        let d = parse("weibull:0.7").unwrap().with_mean(1000.0);
+        let mut a = Pcg64::seeded(7);
+        let mut b = Pcg64::seeded(7);
+        for _ in 0..100 {
+            assert_eq!(d.sample(&mut a), d.sample(&mut b));
+        }
+    }
+
+    #[test]
+    fn trait_objects_still_work() {
+        // The prelude API: dyn-compatible trait over the wrappers.
+        let laws: Vec<Box<dyn Distribution>> = vec![
+            Box::new(Exponential::new(10.0)),
+            Box::new(Weibull::with_mean(0.7, 10.0)),
+            Box::new(Uniform::new(0.0, 20.0)),
+        ];
+        let mut rng = Pcg64::seeded(5);
+        for law in &laws {
+            assert!(approx_eq(law.mean(), 10.0, 1e-9));
+            assert!(law.sample(&mut rng) >= 0.0);
+        }
+    }
+}

@@ -14,15 +14,12 @@
 //! * `abl-cap`    — §3.2's capped domain vs the §5 uncapped periods:
 //!                  the price of mathematical rigor at scale.
 
-use super::{scenario_for, sim_waste, ExpOptions, ExperimentResult};
+use super::{replicate_stat, scenario_for, sim_waste, ExpOptions, ExperimentResult};
 use crate::config::{paper_proc_counts, predictor_yu, Predictor, Scenario};
-use crate::coordinator::run_parallel;
 use crate::model::{Capping, Params, StrategyKind};
 use crate::report::FigureData;
-use crate::sim::{Engine, SimConfig};
+use crate::sim::{Outcome, SimSession};
 use crate::strategies::{daly_spec, spec_for, ProactiveMode, StrategySpec};
-use crate::trace::TraceGen;
-use crate::util::stats::Summary;
 
 /// q-sweep: simulated waste as a function of the trust probability.
 pub fn ablation_q(opts: &ExpOptions) -> anyhow::Result<ExperimentResult> {
@@ -47,11 +44,8 @@ pub fn ablation_q(opts: &ExpOptions) -> anyhow::Result<ExperimentResult> {
                     q,
                     proactive: ProactiveMode::CkptBefore,
                 };
-                let reps: Vec<u64> = (0..opts.reps).collect();
-                let wastes = run_parallel(reps, opts.workers, |rep| {
-                    crate::sim::simulate_once(&s, &spec, *rep).expect("sim").waste()
-                });
-                fig.series_mut(dist).push(q, Summary::from_iter(wastes).mean());
+                let w = replicate_stat(&s, &spec, opts.reps, opts.workers, Outcome::waste);
+                fig.series_mut(dist).push(q, w.mean());
             }
         }
         result.figures.push(fig);
@@ -70,11 +64,8 @@ pub fn ablation_daly(opts: &ExpOptions) -> anyhow::Result<ExperimentResult> {
             let young = spec_for(StrategyKind::Young, &s, Capping::Uncapped);
             let daly = daly_spec(&s);
             for spec in [&young, &daly] {
-                let reps: Vec<u64> = (0..opts.reps).collect();
-                let wastes = run_parallel(reps, opts.workers, |rep| {
-                    crate::sim::simulate_once(&s, spec, *rep).expect("sim").waste()
-                });
-                fig.series_mut(&spec.name).push(n as f64, Summary::from_iter(wastes).mean());
+                let w = replicate_stat(&s, spec, opts.reps, opts.workers, Outcome::waste);
+                fig.series_mut(&spec.name).push(n as f64, w.mean());
             }
         }
         result.figures.push(fig);
@@ -96,22 +87,21 @@ pub fn ablation_lead(opts: &ExpOptions) -> anyhow::Result<ExperimentResult> {
     let mut fig = FigureData::new("abl-lead-N2e19", "lead/C", "waste");
 
     // Young reference (lead-independent).
-    let reps: Vec<u64> = (0..opts.reps).collect();
-    let young_waste = Summary::from_iter(run_parallel(reps, opts.workers, |rep| {
-        crate::sim::simulate_once(&s, &young, *rep).expect("sim").waste()
-    }))
-    .mean();
+    let young_waste =
+        replicate_stat(&s, &young, opts.reps, opts.workers, Outcome::waste).mean();
 
     for frac in [0.0, 0.25, 0.5, 0.75, 1.0, 2.0] {
         let lead = frac * c;
-        let reps: Vec<u64> = (0..opts.reps).collect();
-        let cfg = SimConfig::from_scenario(&s);
-        let wastes = run_parallel(reps, opts.workers, |rep| {
-            // Bypass simulate_once to control the trace lead directly.
-            let source = TraceGen::new(&s, lead, s.seed, *rep).expect("trace");
-            Engine::new(&cfg, &spec, source, s.seed ^ (*rep << 17)).run().waste()
-        });
-        fig.series_mut("ExactPrediction").push(frac, Summary::from_iter(wastes).mean());
+        // Sessions with an explicit trace lead (below the strategy's
+        // own requirement — the point of the ablation), reused across
+        // each worker's replications.
+        let sum = super::replicate_stat_with(
+            opts.reps,
+            opts.workers,
+            || SimSession::with_lead(&s, &spec, lead).expect("valid scenario"),
+            Outcome::waste,
+        );
+        fig.series_mut("ExactPrediction").push(frac, sum.mean());
         fig.series_mut("Young").push(frac, young_waste);
     }
     result.figures.push(fig);
@@ -128,15 +118,12 @@ pub fn ablation_cap(opts: &ExpOptions) -> anyhow::Result<ExperimentResult> {
         for capping in [Capping::Capped, Capping::Uncapped] {
             let sk = scenario_for(StrategyKind::ExactPrediction, &s);
             let spec = spec_for(StrategyKind::ExactPrediction, &sk, capping);
-            let reps: Vec<u64> = (0..opts.reps).collect();
-            let wastes = run_parallel(reps, opts.workers, |rep| {
-                crate::sim::simulate_once(&sk, &spec, *rep).expect("sim").waste()
-            });
+            let w = replicate_stat(&sk, &spec, opts.reps, opts.workers, Outcome::waste);
             let label = match capping {
                 Capping::Capped => "capped",
                 Capping::Uncapped => "uncapped",
             };
-            fig.series_mut(label).push(n as f64, Summary::from_iter(wastes).mean());
+            fig.series_mut(label).push(n as f64, w.mean());
         }
         // Young baseline for context (uses sim_waste's pairing).
         let w = sim_waste(&s, StrategyKind::Young, opts).mean();

@@ -4,13 +4,11 @@
 //! with the false-prediction trace drawn from the failure law
 //! (Figs. 4/6) or a uniform law (Figs. 5/7).
 
-use super::{paper_heuristics, scenario_for, ExpOptions, ExperimentResult};
+use super::{paper_heuristics, scenario_for, sim_waste_grid, ExpOptions, ExperimentResult};
 use crate::config::{paper_proc_counts, Predictor, Scenario};
-use crate::coordinator::run_parallel;
 use crate::model::{optimize, Capping, Params, StrategyKind};
 use crate::report::FigureData;
-use crate::sim::simulate_once;
-use crate::strategies::{best_period, spec_for};
+use crate::strategies::{best_period_with, spec_for, BestPeriodOptions, StrategySpec};
 
 /// Predictor/false-trace parameters of each waste figure.
 pub fn figure_params(id: &str) -> anyhow::Result<(f64, f64, bool)> {
@@ -72,58 +70,36 @@ fn simulated_figure(
         "N",
         "waste",
     );
-    // Flatten (N, heuristic, rep) for dynamic load balancing: the
-    // N = 2^19 runs process ~30x more events than N = 2^14.
-    struct Task {
-        n: u64,
-        kind: StrategyKind,
-        rep: u64,
-    }
-    let mut tasks = Vec::new();
+    // One flattened (N, heuristic) × rep pool pass: the grid runner
+    // strides the product across workers (the N = 2^19 runs process
+    // ~30x more events than N = 2^14, so striding matters) and each
+    // worker reuses one simulation session per point.
     let c = 600.0;
-    for n in paper_proc_counts() {
-        for kind in paper_heuristics(i_win, c) {
-            for rep in 0..opts.reps {
-                tasks.push(Task { n, kind, rep });
-            }
-        }
-    }
-    // Pre-build scenarios + specs per (n, kind) once.
-    let mut cache = std::collections::HashMap::new();
+    let mut keys: Vec<(u64, StrategyKind)> = Vec::new();
+    let mut points: Vec<(Scenario, StrategySpec)> = Vec::new();
     for n in paper_proc_counts() {
         for kind in paper_heuristics(i_win, c) {
             let mut s = base_scenario(n, precision, recall, i_win, uniform_false);
             s.fault_dist = dist.to_string();
             let sk = scenario_for(kind, &s);
             let spec = spec_for(kind, &sk, Capping::Uncapped);
-            cache.insert((n, kind as usize), (sk, spec));
+            keys.push((n, kind));
+            points.push((sk, spec));
         }
     }
-    let wastes = run_parallel(tasks, opts.workers, |t| {
-        let (s, spec) = &cache[&(t.n, t.kind as usize)];
-        (t.n, t.kind as usize, simulate_once(s, spec, t.rep).expect("sim failed").waste())
-    });
-    let mut agg: std::collections::HashMap<(u64, usize), crate::util::stats::Summary> =
-        std::collections::HashMap::new();
-    for (n, kind, w) in wastes {
-        agg.entry((n, kind)).or_default().push(w);
+    let sums = sim_waste_grid(&points, opts.reps, opts.workers);
+    for ((n, kind), sum) in keys.iter().zip(&sums) {
+        fig.series_mut(kind.name()).push(*n as f64, sum.mean());
     }
-    for n in paper_proc_counts() {
-        for kind in paper_heuristics(i_win, c) {
-            let w = agg[&(n, kind as usize)].mean();
-            fig.series_mut(kind.name()).push(n as f64, w);
-        }
-    }
-    // BestPeriod counterparts (brute-force; §5's quality check).
+    // BestPeriod counterparts (brute-force; §5's quality check). Each
+    // search parallelizes its own (candidate × rep) product internally.
     if opts.best_period {
-        for n in paper_proc_counts() {
-            for kind in paper_heuristics(i_win, c) {
-                let (s, spec) = &cache[&(n, kind as usize)];
-                let res = best_period(s, spec, opts.bp_reps, opts.bp_candidates)
-                    .expect("best-period search failed");
-                fig.series_mut(&format!("BestPeriod:{}", kind.name()))
-                    .push(n as f64, res.waste);
-            }
+        let bp_opts = BestPeriodOptions { workers: opts.workers, prune: true };
+        for ((n, kind), (s, spec)) in keys.iter().zip(&points) {
+            let res = best_period_with(s, spec, opts.bp_reps, opts.bp_candidates, &bp_opts)
+                .expect("best-period search failed");
+            fig.series_mut(&format!("BestPeriod:{}", kind.name()))
+                .push(*n as f64, res.waste);
         }
     }
     fig

@@ -11,10 +11,10 @@ pub mod sweep;
 pub mod tables;
 
 use crate::config::Scenario;
-use crate::coordinator::{available_workers, run_parallel};
+use crate::coordinator::{available_workers, run_parallel_fold};
 use crate::model::{Capping, StrategyKind};
-use crate::sim::simulate_once;
-use crate::strategies::{exactify, spec_for};
+use crate::sim::{fold_waste_product, rep_blocks, Outcome, SimSession};
+use crate::strategies::{exactify, spec_for, StrategySpec};
 use crate::util::stats::Summary;
 
 /// Knobs shared by all experiments.
@@ -77,29 +77,85 @@ pub fn scenario_for(kind: StrategyKind, scenario: &Scenario) -> Scenario {
     }
 }
 
+/// Streaming parallel replication of one (scenario, spec) point: each
+/// pool worker owns a reused [`SimSession`] and a worker-local Welford
+/// summary of `stat`; partials merge at the end. No spec re-parsing and
+/// no per-replication result slots anywhere on the path.
+pub fn replicate_stat<F>(
+    scenario: &Scenario,
+    spec: &StrategySpec,
+    reps: u64,
+    workers: usize,
+    stat: F,
+) -> Summary
+where
+    F: Fn(&Outcome) -> f64 + Sync,
+{
+    scenario.validate().expect("invalid scenario");
+    replicate_stat_with(
+        reps,
+        workers,
+        || SimSession::new(scenario, spec).expect("scenario validated above"),
+        stat,
+    )
+}
+
+/// [`replicate_stat`] with an explicit session factory — for callers
+/// that need a non-default session (e.g. the `abl-lead` study's
+/// [`SimSession::with_lead`]). The factory runs once per worker.
+pub fn replicate_stat_with<M, F>(reps: u64, workers: usize, make: M, stat: F) -> Summary
+where
+    M: Fn() -> SimSession + Sync,
+    F: Fn(&Outcome) -> f64 + Sync,
+{
+    let rep_ids: Vec<u64> = (0..reps).collect();
+    run_parallel_fold(
+        &rep_ids,
+        workers,
+        || (None::<SimSession>, Summary::new()),
+        |(mut session, mut sum), &rep| {
+            let s = session.get_or_insert_with(&make);
+            sum.push(stat(&s.run(rep)));
+            (session, sum)
+        },
+        |(_, a), (_, b)| (None, a.merge(&b)),
+    )
+    .1
+}
+
+/// Simulate a grid of (scenario, spec) points × `reps` through one pool
+/// pass — the figure harnesses' workhorse. Tasks are point-major, so a
+/// worker's session is rebuilt only when its stride crosses a point
+/// boundary; per-point waste summaries come back in input order.
+pub fn sim_waste_grid(
+    points: &[(Scenario, StrategySpec)],
+    reps: u64,
+    workers: usize,
+) -> Vec<Summary> {
+    for (s, _) in points {
+        s.validate().expect("invalid scenario");
+    }
+    let all: Vec<usize> = (0..points.len()).collect();
+    let tasks = rep_blocks(&all, 0, reps, workers);
+    fold_waste_product(&tasks, points.len(), workers, |pi| {
+        let (s, spec) = &points[pi];
+        SimSession::new(s, spec).expect("scenario validated above")
+    })
+}
+
 /// Mean simulated waste of `kind` on `scenario`: `reps` paired
 /// replications, parallelized over the worker pool.
 pub fn sim_waste(scenario: &Scenario, kind: StrategyKind, opts: &ExpOptions) -> Summary {
     let s = scenario_for(kind, scenario);
-    s.validate().expect("invalid scenario");
     let spec = spec_for(kind, &s, Capping::Uncapped);
-    let reps: Vec<u64> = (0..opts.reps).collect();
-    let wastes = run_parallel(reps, opts.workers, |rep| {
-        simulate_once(&s, &spec, *rep).expect("simulation failed").waste()
-    });
-    Summary::from_iter(wastes)
+    replicate_stat(&s, &spec, opts.reps, opts.workers, Outcome::waste)
 }
 
 /// Mean simulated execution time (seconds) of `kind` on `scenario`.
 pub fn sim_makespan(scenario: &Scenario, kind: StrategyKind, opts: &ExpOptions) -> Summary {
     let s = scenario_for(kind, scenario);
-    s.validate().expect("invalid scenario");
     let spec = spec_for(kind, &s, Capping::Uncapped);
-    let reps: Vec<u64> = (0..opts.reps).collect();
-    let spans = run_parallel(reps, opts.workers, |rep| {
-        simulate_once(&s, &spec, *rep).expect("simulation failed").makespan
-    });
-    Summary::from_iter(spans)
+    replicate_stat(&s, &spec, opts.reps, opts.workers, |o| o.makespan)
 }
 
 /// Result bundle an experiment hands back to the CLI / bench harness.
@@ -182,6 +238,23 @@ mod tests {
         assert_eq!(e.predictor.window, 0.0);
         let i = scenario_for(StrategyKind::Instant, &s);
         assert_eq!(i.predictor.window, 300.0);
+    }
+
+    #[test]
+    fn waste_grid_matches_single_point_replication() {
+        let mut s = Scenario::paper(1 << 16, Predictor::none());
+        s.fault_dist = "exp".into();
+        s.work = 2.0e5;
+        let spec = spec_for(StrategyKind::Young, &s, Capping::Uncapped);
+        let points = vec![(s.clone(), spec.clone()), (s.clone(), spec.clone())];
+        let grid = sim_waste_grid(&points, 6, 2);
+        assert_eq!(grid.len(), 2);
+        assert_eq!(grid[0].count(), 6);
+        let single = replicate_stat(&s, &spec, 6, 1, crate::sim::Outcome::waste);
+        // Identical point → identical traces per rep → identical means
+        // (up to merge-order reassociation).
+        assert!(crate::util::approx_eq(grid[0].mean(), single.mean(), 1e-12));
+        assert!(crate::util::approx_eq(grid[1].mean(), single.mean(), 1e-12));
     }
 
     #[test]

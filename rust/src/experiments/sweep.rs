@@ -5,10 +5,11 @@
 //! The paper's headline conclusion — recall matters far more than
 //! precision — falls out of these plots.
 
-use super::{sim_waste, ExpOptions, ExperimentResult};
+use super::{scenario_for, sim_waste, sim_waste_grid, ExpOptions, ExperimentResult};
 use crate::config::{Predictor, Scenario};
-use crate::model::StrategyKind;
+use crate::model::{Capping, StrategyKind};
 use crate::report::FigureData;
+use crate::strategies::{spec_for, StrategySpec};
 
 /// Which sweep a figure id denotes.
 pub fn sweep_params(id: &str) -> anyhow::Result<(f64, bool)> {
@@ -50,6 +51,11 @@ pub fn figure_sweep(id: &str, opts: &ExpOptions) -> anyhow::Result<ExperimentRes
                 fig.series_mut("Young").push(x, w);
             }
         }
+        // Flatten every (fixed, x) predictor point of this subfigure
+        // into one grid pass so the pool sees the whole product at once
+        // instead of a barrier per point.
+        let mut labels: Vec<(String, f64)> = Vec::new();
+        let mut points: Vec<(Scenario, StrategySpec)> = Vec::new();
         for fixed in fixed_values {
             let label = if sweep_precision {
                 format!("NoCkptI r={fixed}")
@@ -61,9 +67,15 @@ pub fn figure_sweep(id: &str, opts: &ExpOptions) -> anyhow::Result<ExperimentRes
                     if sweep_precision { (fixed, x) } else { (x, fixed) };
                 let mut s = Scenario::paper(n, Predictor::windowed(recall, precision, i_win));
                 s.fault_dist = dist.clone();
-                let w = sim_waste(&s, StrategyKind::NoCkptI, opts).mean();
-                fig.series_mut(&label).push(x, w);
+                let sk = scenario_for(StrategyKind::NoCkptI, &s);
+                let spec = spec_for(StrategyKind::NoCkptI, &sk, Capping::Uncapped);
+                labels.push((label.clone(), x));
+                points.push((sk, spec));
             }
+        }
+        let sums = sim_waste_grid(&points, opts.reps, opts.workers);
+        for ((label, x), sum) in labels.iter().zip(&sums) {
+            fig.series_mut(label).push(*x, sum.mean());
         }
         result.figures.push(fig);
     }

@@ -21,7 +21,9 @@
 //!
 //! Substrate modules ([`rng`], [`dist`], [`util`], [`config`], [`cli`],
 //! [`report`], [`testkit`]) are implemented from scratch — the build is
-//! fully offline and depends only on the `xla` PJRT bindings and `anyhow`.
+//! fully offline and depends only on `anyhow` (plus the optional `xla`
+//! PJRT bindings behind the `pjrt` feature; without it the [`runtime`]
+//! module keeps its API surface but reports the missing backend).
 
 pub mod cli;
 pub mod config;
@@ -41,10 +43,10 @@ pub mod util;
 /// Convenient glob import for examples and binaries.
 pub mod prelude {
     pub use crate::config::{Platform, Predictor, Scenario};
-    pub use crate::dist::{Distribution, Exponential, Uniform, Weibull};
+    pub use crate::dist::{Dist, Distribution, Exponential, Uniform, Weibull};
     pub use crate::model::{OptimalPlan, StrategyKind};
     pub use crate::rng::Pcg64;
-    pub use crate::sim::{Outcome, SimConfig};
+    pub use crate::sim::{Outcome, SimConfig, SimSession};
     pub use crate::strategies::{ProactiveMode, StrategySpec};
     pub use crate::util::stats::Summary;
 }

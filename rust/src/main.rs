@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! ckptfp plan       [--n-procs N | --mu-mn M] [--recall R --precision P --window I] [--hlo] [--json]
-//! ckptfp simulate   [--strategy NAME] [--n-procs N] [--reps K] [--dist exp|weibull:K]
+//! ckptfp simulate   [--strategy NAME] [--n-procs N] [--reps K] [--workers W] [--dist exp|weibull:K]
 //! ckptfp experiment <fig4..fig11|tab1|tab2|tab3|all> [--reps K] [--best-period] [--out DIR]
 //! ckptfp serve      [--addr HOST:PORT]
 //! ckptfp trace      [--out FILE] [--horizon SECONDS] [--n-procs N]
@@ -17,7 +17,7 @@ use ckptfp::experiments::{all_experiments, run_experiment, ExpOptions};
 use ckptfp::model::{plan, Capping, Params, StrategyKind};
 use ckptfp::report::Table;
 use ckptfp::runtime::HloPlanner;
-use ckptfp::sim::run_replications;
+use ckptfp::sim::run_replications_parallel;
 use ckptfp::strategies::spec_for;
 use ckptfp::trace::TraceGen;
 use ckptfp::util::units::MIN;
@@ -144,6 +144,7 @@ fn cmd_plan(args: &mut Args) -> anyhow::Result<()> {
 fn cmd_simulate(args: &mut Args) -> anyhow::Result<()> {
     let strategy = args.get_str("strategy", "ExactPrediction");
     let reps: u64 = args.get("reps", 20)?;
+    let workers: usize = args.get("workers", ckptfp::coordinator::available_workers())?;
     let s = scenario_from_args(args)?;
     args.finish()?;
     let kind = StrategyKind::ALL
@@ -152,13 +153,17 @@ fn cmd_simulate(args: &mut Args) -> anyhow::Result<()> {
         .ok_or_else(|| anyhow::anyhow!("unknown strategy '{strategy}'"))?;
     let sk = ckptfp::experiments::scenario_for(kind, &s);
     let spec = spec_for(kind, &sk, Capping::Uncapped);
-    let report = run_replications(&sk, &spec, reps)?;
+    let report = run_replications_parallel(&sk, &spec, reps, workers)?;
     println!(
-        "{}: waste {} | makespan {:.2} days | completion {:.0}%",
+        "{}: waste {} | makespan {:.2} days | completion {:.0}% | {} faults, {} ckpts over {} reps ({:.2} engine-s)",
         spec.name,
-        report.waste,
+        report.agg.waste,
         report.mean_makespan() / 86400.0,
-        report.completion_rate() * 100.0
+        report.completion_rate() * 100.0,
+        report.agg.n_faults,
+        report.agg.n_ckpts + report.agg.n_proactive_ckpts,
+        report.agg.n_reps,
+        report.agg.sim_seconds,
     );
     let p = Params::from_scenario(&sk);
     let analytic = ckptfp::model::waste_of(&p, kind, spec.t_r, ckptfp::model::tp_opt(&p));

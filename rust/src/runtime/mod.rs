@@ -4,14 +4,29 @@
 //! Python never runs here — `make artifacts` produced the HLO once at
 //! build time; this module is the only bridge between the Rust
 //! coordinator and the compiled L1/L2 stack.
+//!
+//! The PJRT client lives behind the `pjrt` cargo feature (it is the
+//! crate's only external native dependency). Without the feature the
+//! same API compiles against a stub whose constructors report the
+//! missing backend — the batcher, service and CLI degrade gracefully.
 
 mod artifact;
+#[cfg(feature = "pjrt")]
 mod client;
+mod output;
+#[cfg(feature = "pjrt")]
 mod planner_exec;
+#[cfg(not(feature = "pjrt"))]
+mod stub;
 
 pub use artifact::{ArtifactSpec, Manifest};
+#[cfg(feature = "pjrt")]
 pub use client::Runtime;
-pub use planner_exec::{HloPlanner, PlanOutput, SurfaceOutput};
+pub use output::{PlanOutput, SurfaceOutput};
+#[cfg(feature = "pjrt")]
+pub use planner_exec::HloPlanner;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{HloPlanner, Runtime};
 
 /// Locate the artifacts directory: `$CKPTFP_ARTIFACTS`, else
 /// `./artifacts`, else walking up from the current directory (so tests

@@ -1,0 +1,27 @@
+//! Planner output types — shared by the real PJRT-backed planner and
+//! the no-`pjrt` stub, so the coordinator/service layers compile either
+//! way.
+
+use crate::model::StrategyKind;
+
+/// Result of planning one configuration through the HLO path.
+#[derive(Debug, Clone)]
+pub struct PlanOutput {
+    /// Per-strategy optimal waste (clamped to 1.0).
+    pub waste: [f64; 6],
+    /// Per-strategy optimal period.
+    pub period: [f64; 6],
+    /// Winning strategy index.
+    pub winner: StrategyKind,
+    pub winner_waste: f64,
+    pub winner_period: f64,
+}
+
+/// Raw waste surfaces for figure generation.
+#[derive(Debug, Clone)]
+pub struct SurfaceOutput {
+    /// waste[s][j] for one configuration.
+    pub waste: Vec<Vec<f64>>,
+    /// The period grid T[j].
+    pub periods: Vec<f64>,
+}

@@ -1,30 +1,8 @@
 //! Batched planner execution: pack [`Params`] rows into the artifact's
 //! f32 layout, run, unpack.
 
-use super::Runtime;
+use super::{PlanOutput, Runtime, SurfaceOutput};
 use crate::model::{Params, StrategyKind, NSTRAT_USIZE};
-
-/// Result of planning one configuration through the HLO path.
-#[derive(Debug, Clone)]
-pub struct PlanOutput {
-    /// Per-strategy optimal waste (clamped to 1.0).
-    pub waste: [f64; 6],
-    /// Per-strategy optimal period.
-    pub period: [f64; 6],
-    /// Winning strategy index.
-    pub winner: StrategyKind,
-    pub winner_waste: f64,
-    pub winner_period: f64,
-}
-
-/// Raw waste surfaces for figure generation.
-#[derive(Debug, Clone)]
-pub struct SurfaceOutput {
-    /// waste[s][j] for one configuration.
-    pub waste: Vec<Vec<f64>>,
-    /// The period grid T[j].
-    pub periods: Vec<f64>,
-}
 
 /// High-level planner on top of [`Runtime`].
 pub struct HloPlanner {

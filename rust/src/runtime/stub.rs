@@ -1,0 +1,80 @@
+//! Fallback runtime when the crate is built without the `pjrt` feature:
+//! the API surface the coordinator, service and CLI compile against
+//! exists, but every entry point reports the missing backend. The
+//! analytical planner, the simulator and all experiments are fully
+//! functional without PJRT — only HLO-artifact execution needs it.
+
+use std::path::Path;
+
+use super::{Manifest, PlanOutput, SurfaceOutput};
+use crate::model::Params;
+
+const NO_PJRT: &str = "this build has no PJRT backend — rebuild with `--features pjrt` \
+    (requires the `xla` crate) to load HLO artifacts";
+
+/// Stand-in for the PJRT runtime; cannot be constructed.
+pub struct Runtime {
+    _private: (),
+}
+
+impl Runtime {
+    pub fn open(_dir: &Path) -> anyhow::Result<Runtime> {
+        anyhow::bail!(NO_PJRT)
+    }
+
+    pub fn open_default() -> anyhow::Result<Runtime> {
+        anyhow::bail!(NO_PJRT)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        unreachable!("stub Runtime cannot be constructed")
+    }
+
+    pub fn platform_name(&self) -> String {
+        unreachable!("stub Runtime cannot be constructed")
+    }
+}
+
+/// Stand-in for the HLO planner; construction always fails, so the
+/// method bodies after `open_default` are unreachable.
+pub struct HloPlanner {
+    _private: (),
+}
+
+impl HloPlanner {
+    pub fn new(_runtime: Runtime) -> HloPlanner {
+        unreachable!("stub Runtime cannot be constructed")
+    }
+
+    pub fn open_default() -> anyhow::Result<HloPlanner> {
+        anyhow::bail!(NO_PJRT)
+    }
+
+    pub fn platform_name(&self) -> String {
+        unreachable!("stub HloPlanner cannot be constructed")
+    }
+
+    pub fn warmup(&mut self) -> anyhow::Result<()> {
+        anyhow::bail!(NO_PJRT)
+    }
+
+    pub fn plan_batch(&mut self, _configs: &[Params]) -> anyhow::Result<Vec<PlanOutput>> {
+        anyhow::bail!(NO_PJRT)
+    }
+
+    pub fn surfaces(&mut self, _configs: &[Params]) -> anyhow::Result<Vec<SurfaceOutput>> {
+        anyhow::bail!(NO_PJRT)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_missing_backend() {
+        let err = HloPlanner::open_default().unwrap_err().to_string();
+        assert!(err.contains("pjrt"), "{err}");
+        assert!(Runtime::open_default().is_err());
+    }
+}

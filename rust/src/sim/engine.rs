@@ -25,7 +25,7 @@
 //! prediction whose action point falls inside an outage is honored
 //! late when the window is still open and dropped otherwise.
 
-use std::collections::{HashSet, VecDeque};
+use std::collections::VecDeque;
 
 use super::{Outcome, SimConfig};
 use crate::rng::Pcg64;
@@ -40,9 +40,17 @@ enum Seg {
     Faulted(Fault),
 }
 
-pub struct Engine<'a, S: EventSource> {
-    cfg: &'a SimConfig,
-    spec: &'a StrategySpec,
+/// The replayer. Owns its configuration (a handful of scalars copied
+/// out of [`SimConfig`]/[`StrategySpec`] at construction) so a
+/// [`crate::sim::SimSession`] can hold one engine across replications
+/// and [`Engine::reset`] it — the `pending`/`neutralized` buffers keep
+/// their capacity, making the steady state allocation-free.
+pub struct Engine<S: EventSource> {
+    cfg: SimConfig,
+    /// Probability of trusting a prediction (from the spec).
+    q: f64,
+    /// Proactive response mode (from the spec).
+    proactive: ProactiveMode,
     source: S,
     rng_trust: Pcg64,
 
@@ -62,19 +70,22 @@ pub struct Engine<'a, S: EventSource> {
     next_pred: Option<Prediction>,
     /// Trusted predictions awaiting their action point, sorted by t0.
     pending: VecDeque<Prediction>,
-    /// Fault ids neutralized by completed migrations.
-    neutralized: HashSet<u64>,
+    /// Fault ids neutralized by completed migrations. A plain vector:
+    /// at most a handful of ids are ever in flight, and a linear scan
+    /// beats hashing at that size.
+    neutralized: Vec<u64>,
 
     out: Outcome,
 }
 
-impl<'a, S: EventSource> Engine<'a, S> {
-    pub fn new(cfg: &'a SimConfig, spec: &'a StrategySpec, source: S, trust_seed: u64) -> Self {
+impl<S: EventSource> Engine<S> {
+    pub fn new(cfg: &SimConfig, spec: &StrategySpec, source: S, trust_seed: u64) -> Self {
         let t_r = spec.t_r.max(cfg.c + 1.0);
         let lead = spec.required_lead(cfg.c);
         Engine {
-            cfg,
-            spec,
+            cfg: cfg.clone(),
+            q: spec.q,
+            proactive: spec.proactive,
             source,
             rng_trust: Pcg64::new(trust_seed, 0x7157),
             now: 0.0,
@@ -86,9 +97,31 @@ impl<'a, S: EventSource> Engine<'a, S> {
             next_fault: None,
             next_pred: None,
             pending: VecDeque::new(),
-            neutralized: HashSet::new(),
+            neutralized: Vec::new(),
             out: Outcome::default(),
         }
+    }
+
+    /// Rewind to time zero for a new replication under the same
+    /// configuration and strategy. Buffers keep their capacity; the
+    /// trust RNG is re-derived from `trust_seed`, so a reset engine is
+    /// bit-identical to a freshly constructed one.
+    pub fn reset(&mut self, trust_seed: u64) {
+        self.rng_trust = Pcg64::new(trust_seed, 0x7157);
+        self.now = 0.0;
+        self.saved = 0.0;
+        self.vol = 0.0;
+        self.w_reg = 0.0;
+        self.next_fault = None;
+        self.next_pred = None;
+        self.pending.clear();
+        self.neutralized.clear();
+        self.out = Outcome::default();
+    }
+
+    /// The event source, e.g. to reset a generator between replications.
+    pub fn source_mut(&mut self) -> &mut S {
+        &mut self.source
     }
 
     #[inline]
@@ -107,13 +140,13 @@ impl<'a, S: EventSource> Engine<'a, S> {
             if self.next_fault.is_none() {
                 self.next_fault = self.source.next_fault();
             }
-            match &self.next_fault {
-                None => return None,
-                Some(f) if self.neutralized.remove(&f.id) => {
-                    self.out.n_faults_avoided += 1;
-                    self.next_fault = None;
-                }
-                Some(_) => return self.next_fault.as_ref(),
+            let f = self.next_fault?;
+            if let Some(pos) = self.neutralized.iter().position(|&id| id == f.id) {
+                self.neutralized.swap_remove(pos);
+                self.out.n_faults_avoided += 1;
+                self.next_fault = None;
+            } else {
+                return self.next_fault.as_ref();
             }
         }
     }
@@ -139,10 +172,10 @@ impl<'a, S: EventSource> Engine<'a, S> {
                     if p.is_true_positive() {
                         self.out.n_true_preds += 1;
                     }
-                    let ignore = matches!(self.spec.proactive, ProactiveMode::Ignore);
+                    let ignore = matches!(self.proactive, ProactiveMode::Ignore);
                     let trusted = !ignore
-                        && self.spec.q > 0.0
-                        && (self.spec.q >= 1.0 || self.rng_trust.bernoulli(self.spec.q));
+                        && self.q > 0.0
+                        && (self.q >= 1.0 || self.rng_trust.bernoulli(self.q));
                     if trusted && p.t_end() > self.now {
                         self.out.n_trusted += 1;
                         let pos = self
@@ -249,7 +282,7 @@ impl<'a, S: EventSource> Engine<'a, S> {
     /// Execute the proactive response to a trusted prediction whose
     /// action point has arrived. Any fault inside aborts the response.
     fn handle_proactive(&mut self, p: Prediction) {
-        match self.spec.proactive {
+        match self.proactive {
             ProactiveMode::Ignore => {}
             ProactiveMode::Migrate { m } => self.proactive_migrate(p, m),
             ProactiveMode::CkptBefore | ProactiveMode::SkipWindow | ProactiveMode::CkptDuring { .. } => {
@@ -305,7 +338,7 @@ impl<'a, S: EventSource> Engine<'a, S> {
             return; // window passed entirely during an outage
         }
         // Window phase.
-        match self.spec.proactive {
+        match self.proactive {
             ProactiveMode::CkptBefore => {} // back to regular mode at once
             ProactiveMode::SkipWindow => {
                 // Work unprotected through the window; the interrupted
@@ -374,7 +407,7 @@ impl<'a, S: EventSource> Engine<'a, S> {
                         self.next_fault = None;
                         self.out.n_faults_avoided += 1;
                     } else {
-                        self.neutralized.insert(id);
+                        self.neutralized.push(id);
                     }
                 }
             }
@@ -388,6 +421,13 @@ impl<'a, S: EventSource> Engine<'a, S> {
 
     /// Run to completion (or the makespan guard).
     pub fn run(mut self) -> Outcome {
+        self.run_to_completion()
+    }
+
+    /// In-place variant for session reuse: runs the current replication
+    /// and hands the outcome out, leaving the engine ready for
+    /// [`Engine::reset`]. No allocations beyond buffer growth.
+    pub(crate) fn run_to_completion(&mut self) -> Outcome {
         loop {
             if self.remaining_work() <= EPS {
                 self.out.completed = true;
@@ -449,7 +489,7 @@ impl<'a, S: EventSource> Engine<'a, S> {
         }
         self.out.makespan = self.now;
         self.out.work = self.work_done().min(self.cfg.work);
-        self.out
+        std::mem::take(&mut self.out)
     }
 }
 

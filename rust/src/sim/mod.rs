@@ -2,16 +2,23 @@
 //! and predictions.
 //!
 //! [`Engine`] replays one job against one trace under one
-//! [`crate::strategies::StrategySpec`]; [`runner`] replicates across
-//! seeds and aggregates.
+//! [`crate::strategies::StrategySpec`]; [`SimSession`] amortizes the
+//! per-replication setup (spec parsing, validation, buffers) across a
+//! whole batch; [`runner`] replicates across seeds and streams the
+//! aggregation.
 
 mod engine;
 mod outcome;
 mod runner;
+mod session;
 
 pub use engine::Engine;
 pub use outcome::Outcome;
-pub use runner::{run_replications, simulate_once, ReplicationReport};
+pub use runner::{
+    fold_waste_product, rep_blocks, run_replications, run_replications_parallel,
+    run_replications_with, simulate_once, ReplicationAgg, ReplicationReport, Retain,
+};
+pub use session::SimSession;
 
 use crate::config::Scenario;
 

@@ -1,70 +1,264 @@
 //! Replicated simulation: run a strategy against `reps` independent
-//! traces and aggregate.
+//! traces and aggregate — streaming, so a million replications cost
+//! O(1) memory unless the caller opts into raw-outcome retention.
 
-use super::{Engine, Outcome, SimConfig};
+use super::{Outcome, SimSession};
 use crate::config::Scenario;
+use crate::coordinator::run_parallel_fold;
 use crate::strategies::StrategySpec;
-use crate::trace::TraceGen;
 use crate::util::stats::Summary;
+
+/// Streaming accumulator over outcomes: Welford summaries for the
+/// continuous statistics plus merged event counters. Merging two
+/// accumulators (parallel reduction) gives exactly the counters — and,
+/// up to floating-point reassociation, the summaries — of the combined
+/// stream.
+#[derive(Debug, Clone, Default)]
+pub struct ReplicationAgg {
+    pub waste: Summary,
+    pub makespan: Summary,
+    pub n_reps: u64,
+    pub n_completed: u64,
+    pub n_faults: u64,
+    pub n_faults_unpredicted: u64,
+    pub n_preds: u64,
+    pub n_true_preds: u64,
+    pub n_trusted: u64,
+    pub n_ckpts: u64,
+    pub n_proactive_ckpts: u64,
+    pub n_migrations: u64,
+    pub n_faults_avoided: u64,
+    pub n_segments: u64,
+    pub lost_work: f64,
+    /// Total engine wall-clock across replications (CPU-seconds).
+    pub sim_seconds: f64,
+}
+
+impl ReplicationAgg {
+    pub fn push(&mut self, o: &Outcome) {
+        self.waste.push(o.waste());
+        self.makespan.push(o.makespan);
+        self.n_reps += 1;
+        self.n_completed += o.completed as u64;
+        self.n_faults += o.n_faults;
+        self.n_faults_unpredicted += o.n_faults_unpredicted;
+        self.n_preds += o.n_preds;
+        self.n_true_preds += o.n_true_preds;
+        self.n_trusted += o.n_trusted;
+        self.n_ckpts += o.n_ckpts;
+        self.n_proactive_ckpts += o.n_proactive_ckpts;
+        self.n_migrations += o.n_migrations;
+        self.n_faults_avoided += o.n_faults_avoided;
+        self.n_segments += o.n_segments;
+        self.lost_work += o.lost_work;
+        self.sim_seconds += o.sim_seconds;
+    }
+
+    /// Merge a partial accumulator (worker-local) into this one.
+    pub fn merge(mut self, other: ReplicationAgg) -> ReplicationAgg {
+        self.waste = self.waste.merge(&other.waste);
+        self.makespan = self.makespan.merge(&other.makespan);
+        self.n_reps += other.n_reps;
+        self.n_completed += other.n_completed;
+        self.n_faults += other.n_faults;
+        self.n_faults_unpredicted += other.n_faults_unpredicted;
+        self.n_preds += other.n_preds;
+        self.n_true_preds += other.n_true_preds;
+        self.n_trusted += other.n_trusted;
+        self.n_ckpts += other.n_ckpts;
+        self.n_proactive_ckpts += other.n_proactive_ckpts;
+        self.n_migrations += other.n_migrations;
+        self.n_faults_avoided += other.n_faults_avoided;
+        self.n_segments += other.n_segments;
+        self.lost_work += other.lost_work;
+        self.sim_seconds += other.sim_seconds;
+        self
+    }
+
+    /// Fraction of replications that finished under the guard.
+    pub fn completion_rate(&self) -> f64 {
+        self.n_completed as f64 / self.n_reps.max(1) as f64
+    }
+}
+
+/// What a replication batch keeps per replication.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Retain {
+    /// Streaming statistics only (the default — O(1) memory).
+    Stats,
+    /// Also keep every raw [`Outcome`] (per-replication analysis,
+    /// debugging; O(reps) memory).
+    Outcomes,
+}
 
 /// Aggregated result of a replication batch.
 #[derive(Debug, Clone)]
 pub struct ReplicationReport {
     pub strategy: String,
-    pub waste: Summary,
-    pub makespan: Summary,
+    pub agg: ReplicationAgg,
+    /// Raw outcomes — empty unless the batch ran with
+    /// [`Retain::Outcomes`].
     pub outcomes: Vec<Outcome>,
 }
 
 impl ReplicationReport {
     pub fn mean_waste(&self) -> f64 {
-        self.waste.mean()
+        self.agg.waste.mean()
     }
 
     pub fn mean_makespan(&self) -> f64 {
-        self.makespan.mean()
+        self.agg.makespan.mean()
     }
 
     /// Fraction of replications that finished under the guard.
     pub fn completion_rate(&self) -> f64 {
-        let done = self.outcomes.iter().filter(|o| o.completed).count();
-        done as f64 / self.outcomes.len().max(1) as f64
+        self.agg.completion_rate()
     }
 }
 
-/// One replication: trace `rep` of `scenario.seed`, executed under `spec`.
+/// One replication: trace `rep` of `scenario.seed`, executed under
+/// `spec`. One-shot wrapper over [`SimSession`]; batch callers should
+/// hold a session instead and amortize the setup.
 pub fn simulate_once(
     scenario: &Scenario,
     spec: &StrategySpec,
     rep: u64,
 ) -> anyhow::Result<Outcome> {
-    let cfg = SimConfig::from_scenario(scenario);
-    cfg.validate()?;
-    let lead = spec.required_lead(cfg.c);
-    let source = TraceGen::new(scenario, lead, scenario.seed, rep)?;
-    let started = std::time::Instant::now();
-    let mut out = Engine::new(&cfg, spec, source, scenario.seed ^ (rep << 17) ^ 0xA5).run();
-    out.sim_seconds = started.elapsed().as_secs_f64();
-    Ok(out)
+    Ok(SimSession::new(scenario, spec)?.run(rep))
 }
 
-/// Run `reps` replications sequentially. (The coordinator parallelizes
-/// across replications and scenarios; this is the single-thread core.)
+/// Run `reps` replications sequentially on one session, streaming into
+/// the aggregate. (The coordinator parallelizes across replications and
+/// scenarios; this is the single-thread core.)
 pub fn run_replications(
     scenario: &Scenario,
     spec: &StrategySpec,
     reps: u64,
 ) -> anyhow::Result<ReplicationReport> {
-    let mut waste = Summary::new();
-    let mut makespan = Summary::new();
-    let mut outcomes = Vec::with_capacity(reps as usize);
+    run_replications_with(scenario, spec, reps, Retain::Stats)
+}
+
+/// [`run_replications`] with explicit retention policy.
+pub fn run_replications_with(
+    scenario: &Scenario,
+    spec: &StrategySpec,
+    reps: u64,
+    retain: Retain,
+) -> anyhow::Result<ReplicationReport> {
+    let mut session = SimSession::new(scenario, spec)?;
+    let mut agg = ReplicationAgg::default();
+    let mut outcomes =
+        Vec::with_capacity(if retain == Retain::Outcomes { reps as usize } else { 0 });
     for rep in 0..reps {
-        let o = simulate_once(scenario, spec, rep)?;
-        waste.push(o.waste());
-        makespan.push(o.makespan);
-        outcomes.push(o);
+        let o = session.run(rep);
+        agg.push(&o);
+        if retain == Retain::Outcomes {
+            outcomes.push(o);
+        }
     }
-    Ok(ReplicationReport { strategy: spec.name.clone(), waste, makespan, outcomes })
+    Ok(ReplicationReport { strategy: spec.name.clone(), agg, outcomes })
+}
+
+/// Parallel replication batch: replications are strided across
+/// `workers` pool threads, each worker owning one reused [`SimSession`]
+/// and one worker-local [`ReplicationAgg`]; partials merge at the end
+/// (no per-replication result slots). Deterministic for a fixed worker
+/// count — counters are exactly order-independent, summaries up to
+/// floating-point reassociation of the fixed stride order.
+pub fn run_replications_parallel(
+    scenario: &Scenario,
+    spec: &StrategySpec,
+    reps: u64,
+    workers: usize,
+) -> anyhow::Result<ReplicationReport> {
+    // Surface configuration errors here, once, instead of panicking in
+    // a worker.
+    drop(SimSession::new(scenario, spec)?);
+    let rep_ids: Vec<u64> = (0..reps).collect();
+    let (_, agg) = run_parallel_fold(
+        &rep_ids,
+        workers,
+        || (None::<SimSession>, ReplicationAgg::default()),
+        |(mut session, mut agg), &rep| {
+            let s = session.get_or_insert_with(|| {
+                SimSession::new(scenario, spec).expect("scenario validated above")
+            });
+            agg.push(&s.run(rep));
+            (session, agg)
+        },
+        |(_, a), (_, b)| (None, a.merge(b)),
+    );
+    Ok(ReplicationReport { strategy: spec.name.clone(), agg, outcomes: Vec::new() })
+}
+
+/// Build point-major `(point, rep_lo, rep_hi)` blocks for
+/// [`fold_waste_product`]. Blocking is what keeps the per-worker
+/// session cache effective regardless of the stride: a flat
+/// `(point, rep)` product with `reps < workers` would land every
+/// consecutive task of a worker on a *different* point, rebuilding the
+/// session per task. Block size targets ~4 tasks per worker across
+/// the whole product, clamped to the rep range, so each session build
+/// amortizes over a run of replications while load balancing keeps
+/// several blocks per worker.
+pub fn rep_blocks(
+    points: &[usize],
+    rep_lo: u64,
+    rep_hi: u64,
+    workers: usize,
+) -> Vec<(usize, u64, u64)> {
+    let reps = rep_hi.saturating_sub(rep_lo);
+    if reps == 0 || points.is_empty() {
+        return Vec::new();
+    }
+    let total = reps * points.len() as u64;
+    let desired_tasks = (workers.max(1) as u64) * 4;
+    let block = (total.div_ceil(desired_tasks)).clamp(1, reps);
+    let mut tasks = Vec::new();
+    for &pi in points {
+        let mut lo = rep_lo;
+        while lo < rep_hi {
+            let hi = (lo + block).min(rep_hi);
+            tasks.push((pi, lo, hi));
+            lo = hi;
+        }
+    }
+    tasks
+}
+
+/// Shared engine for (point × replication) products — the figure grids
+/// and the BestPeriod candidate sweep: fold `(point, rep_lo, rep_hi)`
+/// blocks (see [`rep_blocks`]) through the pool, one reused session
+/// per worker per point (`make(i)` builds point `i`'s session; at
+/// worst one build per block, amortized over the block's
+/// replications). Returns per-point waste summaries, `n_points` long,
+/// merged in deterministic worker order.
+pub fn fold_waste_product<F>(
+    tasks: &[(usize, u64, u64)],
+    n_points: usize,
+    workers: usize,
+    make: F,
+) -> Vec<Summary>
+where
+    F: Fn(usize) -> SimSession + Sync,
+{
+    run_parallel_fold(
+        tasks,
+        workers,
+        || (vec![Summary::new(); n_points], None::<(usize, SimSession)>),
+        |(mut sums, mut cache), &(pi, rep_lo, rep_hi)| {
+            let stale = cache.as_ref().map(|(cached, _)| *cached != pi).unwrap_or(true);
+            if stale {
+                cache = Some((pi, make(pi)));
+            }
+            let (_, session) = cache.as_mut().expect("cache filled above");
+            for rep in rep_lo..rep_hi {
+                sums[pi].push(session.run(rep).waste());
+            }
+            (sums, cache)
+        },
+        |(a, _), (b, _)| (a.iter().zip(&b).map(|(x, y)| x.merge(y)).collect(), None),
+    )
+    .0
 }
 
 #[cfg(test)]
@@ -74,6 +268,7 @@ mod tests {
     use crate::model::{waste_young, Params};
     use crate::strategies::spec_for;
     use crate::model::{Capping, StrategyKind};
+    use crate::util::approx_eq;
 
     fn small_scenario() -> Scenario {
         // Modest platform + small job so the test stays fast.
@@ -115,12 +310,57 @@ mod tests {
     fn replications_are_reproducible() {
         let s = small_scenario();
         let spec = spec_for(StrategyKind::Young, &s, Capping::Uncapped);
-        let a = run_replications(&s, &spec, 5).unwrap();
-        let b = run_replications(&s, &spec, 5).unwrap();
+        let a = run_replications_with(&s, &spec, 5, Retain::Outcomes).unwrap();
+        let b = run_replications_with(&s, &spec, 5, Retain::Outcomes).unwrap();
+        assert_eq!(a.outcomes.len(), 5);
         for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
             assert_eq!(x.makespan, y.makespan);
             assert_eq!(x.n_faults, y.n_faults);
         }
+    }
+
+    #[test]
+    fn replications_are_reproducible_under_parallel_fold() {
+        // Same worker count => identical stride partition => the merged
+        // aggregate is deterministic, counters *and* means.
+        let mut s = small_scenario();
+        s.predictor = Predictor::exact(0.7, 0.4);
+        let spec = spec_for(StrategyKind::ExactPrediction, &s, Capping::Uncapped);
+        let a = run_replications_parallel(&s, &spec, 12, 4).unwrap();
+        let b = run_replications_parallel(&s, &spec, 12, 4).unwrap();
+        assert_eq!(a.agg.n_faults, b.agg.n_faults);
+        assert_eq!(a.agg.n_preds, b.agg.n_preds);
+        assert_eq!(a.agg.n_segments, b.agg.n_segments);
+        assert_eq!(a.agg.makespan.mean(), b.agg.makespan.mean());
+        assert_eq!(a.agg.waste.mean(), b.agg.waste.mean());
+    }
+
+    #[test]
+    fn parallel_fold_matches_sequential_aggregate() {
+        let s = small_scenario();
+        let spec = spec_for(StrategyKind::Young, &s, Capping::Uncapped);
+        let seq = run_replications(&s, &spec, 10).unwrap();
+        let par = run_replications_parallel(&s, &spec, 10, 3).unwrap();
+        // Counters are order-independent: exact equality.
+        assert_eq!(seq.agg.n_reps, par.agg.n_reps);
+        assert_eq!(seq.agg.n_faults, par.agg.n_faults);
+        assert_eq!(seq.agg.n_ckpts, par.agg.n_ckpts);
+        assert_eq!(seq.agg.n_segments, par.agg.n_segments);
+        assert_eq!(seq.agg.n_completed, par.agg.n_completed);
+        // Summaries differ only by floating-point reassociation.
+        assert!(approx_eq(seq.mean_waste(), par.mean_waste(), 1e-12));
+        assert!(approx_eq(seq.mean_makespan(), par.mean_makespan(), 1e-12));
+        assert!(approx_eq(seq.agg.waste.variance(), par.agg.waste.variance(), 1e-9));
+    }
+
+    #[test]
+    fn stats_mode_retains_nothing() {
+        let s = small_scenario();
+        let spec = spec_for(StrategyKind::Young, &s, Capping::Uncapped);
+        let report = run_replications(&s, &spec, 5).unwrap();
+        assert!(report.outcomes.is_empty());
+        assert_eq!(report.agg.n_reps, 5);
+        assert_eq!(report.agg.waste.count(), 5);
     }
 
     #[test]
@@ -161,5 +401,43 @@ mod tests {
         assert!(o.n_faults_unpredicted <= o.n_faults);
         assert!(o.completed);
         assert!(o.n_segments > 0);
+    }
+
+    #[test]
+    fn rep_blocks_cover_the_product_exactly_once() {
+        // Every (point, rep) pair appears in exactly one block, blocks
+        // are point-major, and small products still amortize: with
+        // reps < workers the block size stays >= 1 and never explodes
+        // the task count past points × reps.
+        for (points, lo, hi, workers) in
+            [(3usize, 0u64, 8u64, 16usize), (24, 0, 40, 8), (12, 3, 12, 4), (1, 0, 1, 8)]
+        {
+            let idx: Vec<usize> = (0..points).collect();
+            let tasks = rep_blocks(&idx, lo, hi, workers);
+            let mut seen = std::collections::HashSet::new();
+            for &(pi, a, b) in &tasks {
+                assert!(a < b && a >= lo && b <= hi, "bad block {pi} {a}..{b}");
+                for rep in a..b {
+                    assert!(seen.insert((pi, rep)), "duplicate ({pi}, {rep})");
+                }
+            }
+            assert_eq!(seen.len(), points * (hi - lo) as usize);
+            assert!(tasks.len() <= points * (hi - lo) as usize);
+        }
+        assert!(rep_blocks(&[0, 1], 5, 5, 4).is_empty());
+        assert!(rep_blocks(&[], 0, 10, 4).is_empty());
+    }
+
+    #[test]
+    fn aggregate_counters_sum_over_reps() {
+        let mut s = small_scenario();
+        s.predictor = Predictor::exact(0.7, 0.4);
+        let spec = spec_for(StrategyKind::ExactPrediction, &s, Capping::Uncapped);
+        let report = run_replications_with(&s, &spec, 6, Retain::Outcomes).unwrap();
+        let faults: u64 = report.outcomes.iter().map(|o| o.n_faults).sum();
+        let segs: u64 = report.outcomes.iter().map(|o| o.n_segments).sum();
+        assert_eq!(report.agg.n_faults, faults);
+        assert_eq!(report.agg.n_segments, segs);
+        assert_eq!(report.agg.n_reps, 6);
     }
 }

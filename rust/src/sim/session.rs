@@ -1,0 +1,130 @@
+//! Reusable simulation sessions: build once per (scenario, strategy),
+//! replicate many times.
+//!
+//! [`crate::sim::simulate_once`] pays the full setup bill on every
+//! replication: distribution specs re-parsed from strings, a fresh
+//! trace generator, a fresh engine with fresh event buffers. A
+//! [`SimSession`] does all of that exactly once — distributions are
+//! parsed and validated at construction, the engine and generator are
+//! built once, and [`SimSession::run`] replays replication `rep` by
+//! *resetting* them (RNG substreams re-derived from `(seed, rep)`,
+//! buffers cleared in place). Steady state is allocation- and
+//! parse-free, and the outcomes are bit-identical to the one-shot path
+//! (`session_matches_oneshot` below pins this).
+
+use std::time::Instant;
+
+use super::{Engine, Outcome, SimConfig};
+use crate::config::Scenario;
+use crate::strategies::StrategySpec;
+use crate::trace::TraceGen;
+
+/// A (scenario, strategy) pair prepared for repeated replication.
+pub struct SimSession {
+    seed: u64,
+    engine: Engine<TraceGen>,
+}
+
+impl SimSession {
+    /// Parse, validate and pre-build everything `run` needs. This is
+    /// the only place a session touches spec strings or the allocator
+    /// (beyond buffer growth inside the first replications).
+    pub fn new(scenario: &Scenario, spec: &StrategySpec) -> anyhow::Result<SimSession> {
+        Self::with_lead(scenario, spec, spec.required_lead(scenario.platform.c))
+    }
+
+    /// Like [`SimSession::new`] but with an explicit predictor lead for
+    /// the trace generator (the `abl-lead` study drives leads below the
+    /// strategy's own requirement).
+    pub fn with_lead(scenario: &Scenario, spec: &StrategySpec, lead: f64) -> anyhow::Result<SimSession> {
+        let cfg = SimConfig::from_scenario(scenario);
+        cfg.validate()?;
+        let source = TraceGen::new(scenario, lead, scenario.seed, 0)?;
+        // The trust seed is per-replication; `run` resets it before use.
+        let engine = Engine::new(&cfg, spec, source, 0);
+        Ok(SimSession { seed: scenario.seed, engine })
+    }
+
+    /// Execute replication `rep`. Reuses the session's engine and
+    /// generator via reset — same trace and trust streams as
+    /// `simulate_once(scenario, spec, rep)`, bit for bit.
+    pub fn run(&mut self, rep: u64) -> Outcome {
+        self.engine.source_mut().reset(self.seed, rep);
+        self.engine.reset(self.seed ^ (rep << 17) ^ 0xA5);
+        let started = Instant::now();
+        let mut out = self.engine.run_to_completion();
+        out.sim_seconds = started.elapsed().as_secs_f64();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Predictor;
+    use crate::model::{Capping, StrategyKind};
+    use crate::sim::simulate_once;
+    use crate::strategies::spec_for;
+
+    fn scenario(window: f64) -> Scenario {
+        let pred = if window > 0.0 {
+            Predictor::windowed(0.85, 0.82, window)
+        } else {
+            Predictor::exact(0.85, 0.82)
+        };
+        let mut s = Scenario::paper(1 << 16, pred);
+        s.fault_dist = "weibull:0.7".into();
+        s.work = 2.0e5;
+        s
+    }
+
+    #[test]
+    fn session_matches_oneshot() {
+        // The determinism contract: buffer reuse must not perturb a
+        // single bit of the outcome relative to fresh construction.
+        for (kind, window) in [
+            (StrategyKind::Young, 0.0),
+            (StrategyKind::ExactPrediction, 0.0),
+            (StrategyKind::NoCkptI, 300.0),
+            (StrategyKind::WithCkptI, 3000.0),
+            (StrategyKind::Migration, 0.0),
+        ] {
+            let s0 = scenario(window);
+            let s = crate::experiments::scenario_for(kind, &s0);
+            let spec = spec_for(kind, &s, Capping::Uncapped);
+            let mut session = SimSession::new(&s, &spec).unwrap();
+            // Deliberately out of order so reuse cannot hide behind a
+            // sequential-rep coincidence.
+            for rep in [2u64, 0, 5, 2, 9] {
+                let a = session.run(rep);
+                let b = simulate_once(&s, &spec, rep).unwrap();
+                assert_eq!(a.makespan, b.makespan, "{} rep {rep}", spec.name);
+                assert_eq!(a.n_faults, b.n_faults, "{} rep {rep}", spec.name);
+                assert_eq!(a.n_preds, b.n_preds, "{} rep {rep}", spec.name);
+                assert_eq!(a.n_ckpts, b.n_ckpts, "{} rep {rep}", spec.name);
+                assert_eq!(a.n_segments, b.n_segments, "{} rep {rep}", spec.name);
+                assert_eq!(a.lost_work, b.lost_work, "{} rep {rep}", spec.name);
+            }
+        }
+    }
+
+    #[test]
+    fn rerunning_a_rep_is_idempotent() {
+        let s = scenario(0.0);
+        let spec = spec_for(StrategyKind::Young, &s, Capping::Uncapped);
+        let mut session = SimSession::new(&s, &spec).unwrap();
+        let a = session.run(4);
+        let b = session.run(4);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.n_segments, b.n_segments);
+    }
+
+    #[test]
+    fn invalid_scenario_fails_at_construction() {
+        let mut s = scenario(0.0);
+        s.fault_dist = "bogus".into();
+        let spec = spec_for(StrategyKind::Young, &s, Capping::Uncapped);
+        let err = SimSession::new(&s, &spec).unwrap_err().to_string();
+        assert!(err.contains("bogus"), "error should name the spec: {err}");
+    }
+}

@@ -8,7 +8,9 @@
 
 mod best_period;
 
-pub use best_period::{best_period, BestPeriodResult};
+pub use best_period::{
+    best_period, best_period_with, period_grid, BestPeriodOptions, BestPeriodResult,
+};
 
 use crate::config::Scenario;
 use crate::model::{self, Capping, Params, StrategyKind};

@@ -18,12 +18,14 @@ use std::collections::VecDeque;
 
 use super::{EventSource, Fault, Prediction};
 use crate::config::Scenario;
-use crate::dist::Distribution;
+use crate::dist::Dist;
 use crate::rng::{substream, Pcg64};
 
 pub struct TraceGen {
-    fault_dist: Box<dyn Distribution>,
-    false_dist: Option<Box<dyn Distribution>>,
+    // Monomorphized laws, parsed once per generator — never re-parsed
+    // or boxed on the sampling hot path.
+    fault_dist: Dist,
+    false_dist: Option<Dist>,
     recall: f64,
     window: f64,
     lead: f64,
@@ -54,11 +56,25 @@ impl TraceGen {
         } else {
             None
         };
-        Ok(TraceGen {
+        Ok(TraceGen::from_dists(fault_dist, false_dist, pred.recall, pred.window, lead, seed, rep))
+    }
+
+    /// Build from pre-parsed laws (the [`crate::sim::SimSession`] path:
+    /// specs are parsed once per session, not once per replication).
+    pub fn from_dists(
+        fault_dist: Dist,
+        false_dist: Option<Dist>,
+        recall: f64,
+        window: f64,
+        lead: f64,
+        seed: u64,
+        rep: u64,
+    ) -> TraceGen {
+        TraceGen {
             fault_dist,
             false_dist,
-            recall: pred.recall,
-            window: pred.window,
+            recall,
+            window,
             lead,
             rng_fault: substream(seed, "fault", rep),
             rng_mark: substream(seed, "mark", rep),
@@ -70,7 +86,25 @@ impl TraceGen {
             fault_buf: VecDeque::new(),
             true_buf: VecDeque::new(),
             pending_false: None,
-        })
+        }
+    }
+
+    /// Rewind to the start of replication `rep` of `seed`, reusing the
+    /// parsed laws and the event buffers' capacity. A reset generator
+    /// emits the exact same streams as a freshly built one — the RNG
+    /// substreams are re-derived from `(seed, label, rep)`, so there is
+    /// no state carry-over between replications.
+    pub fn reset(&mut self, seed: u64, rep: u64) {
+        self.rng_fault = substream(seed, "fault", rep);
+        self.rng_mark = substream(seed, "mark", rep);
+        self.rng_win = substream(seed, "win", rep);
+        self.rng_false = substream(seed, "false", rep);
+        self.clock_fault = 0.0;
+        self.clock_false = 0.0;
+        self.next_id = 0;
+        self.fault_buf.clear();
+        self.true_buf.clear();
+        self.pending_false = None;
     }
 
     /// Generate one more fault (and possibly its prediction candidate).
@@ -99,7 +133,7 @@ impl TraceGen {
 
     fn peek_false(&mut self) -> Option<&Prediction> {
         if self.pending_false.is_none() {
-            let dist = self.false_dist.as_deref()?;
+            let dist = self.false_dist?;
             self.clock_false += dist.sample(&mut self.rng_false);
             self.pending_false = Some(Prediction::windowed(
                 self.clock_false,
@@ -270,6 +304,25 @@ mod tests {
             (0..10).map(|_| g.next_fault().unwrap().t).collect()
         };
         assert_eq!(t1, t1b);
+    }
+
+    #[test]
+    fn reset_matches_fresh_generator() {
+        // Buffer-reusing reset must be bit-identical to fresh
+        // construction, even when the previous replication was left
+        // mid-stream with events still buffered.
+        let s = scenario(0.85, 0.82, 3000.0, "weibull:0.7");
+        let mut reused = TraceGen::new(&s, 600.0, 9, 0).unwrap();
+        for rep in [3u64, 0, 7] {
+            reused.reset(9, rep);
+            let mut fresh = TraceGen::new(&s, 600.0, 9, rep).unwrap();
+            for _ in 0..50 {
+                assert_eq!(reused.next_fault(), fresh.next_fault());
+            }
+            for _ in 0..20 {
+                assert_eq!(reused.next_prediction(), fresh.next_prediction());
+            }
+        }
     }
 
     #[test]

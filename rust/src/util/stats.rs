@@ -4,13 +4,22 @@
 
 /// Streaming summary via Welford's algorithm — numerically stable for
 /// the long waste/makespan accumulations the experiment runner produces.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct Summary {
     n: u64,
     mean: f64,
     m2: f64,
     min: f64,
     max: f64,
+}
+
+/// `Default` must match [`Summary::new`] — a derived default would
+/// zero `min`/`max` and pin the extrema of every aggregate built via
+/// `..Default::default()` (e.g. `ReplicationAgg`) at 0.
+impl Default for Summary {
+    fn default() -> Self {
+        Summary::new()
+    }
 }
 
 impl Summary {
@@ -149,6 +158,20 @@ mod tests {
         let s = Summary::new();
         assert!(s.mean().is_nan());
         assert_eq!(s.count(), 0);
+    }
+
+    #[test]
+    fn default_matches_new() {
+        // Regression: a derived Default once zeroed min/max, pinning
+        // aggregate extrema at 0 for all-positive samples.
+        let mut s = Summary::default();
+        s.push(0.3);
+        s.push(0.5);
+        assert_eq!(s.min(), 0.3);
+        assert_eq!(s.max(), 0.5);
+        let mut neg = Summary::default();
+        neg.push(-2.0);
+        assert_eq!(neg.max(), -2.0);
     }
 
     #[test]
