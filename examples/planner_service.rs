@@ -8,6 +8,7 @@
 
 use std::time::Duration;
 
+use ckptfp::api::{Executor, ExecutorConfig};
 use ckptfp::coordinator::{serve, Batcher, BatcherConfig, PlannerClient, ServiceConfig};
 use ckptfp::runtime::HloPlanner;
 
@@ -16,7 +17,8 @@ fn main() -> anyhow::Result<()> {
         HloPlanner::open_default,
         BatcherConfig { max_batch: 64, max_delay: Duration::from_millis(2), ..Default::default() },
     )?;
-    let handle = serve(batcher.clone(), ServiceConfig { addr: "127.0.0.1:0".into() })?;
+    let executor = Executor::with_batcher(batcher.clone(), ExecutorConfig::default());
+    let handle = serve(executor, ServiceConfig { addr: "127.0.0.1:0".into() })?;
     let addr = handle.addr.to_string();
     println!("service on {addr}");
 

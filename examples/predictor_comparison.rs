@@ -49,7 +49,7 @@ fn main() -> anyhow::Result<()> {
     let mut results = Vec::new();
     for (r, p, note) in cases {
         let mut s = Scenario::paper(1 << 19, Predictor::windowed(r, p, 300.0));
-        s.fault_dist = "weibull:0.7".into();
+        s.fault_dist = ckptfp::dist::DistSpec::weibull(0.7);
         let w = sim_waste(&s, StrategyKind::NoCkptI, &opts).mean();
         results.push((r, p, w));
         t2.row([format!("r={r}, p={p}"), format!("{w:.3}"), note.to_string()]);

@@ -44,7 +44,7 @@ fn main() -> anyhow::Result<()> {
     // 2. Verify by simulation: Young vs the winner, 40 replications.
     println!("\nsimulation check (Exponential faults, 40 reps):");
     let mut exp = scenario.clone();
-    exp.fault_dist = "exp".into();
+    exp.fault_dist = ckptfp::dist::DistSpec::Exp;
     for kind in [StrategyKind::Young, best.winner] {
         let s = scenario_for(kind, &exp);
         let spec = spec_for(kind, &s, Capping::Uncapped);

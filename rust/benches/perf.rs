@@ -16,6 +16,7 @@
 use std::time::Instant;
 
 use ckptfp::config::{paper_proc_counts, predictor_yu, Predictor, Scenario};
+use ckptfp::dist::DistSpec;
 use ckptfp::coordinator::{run_parallel_fold, Batcher, BatcherConfig};
 use ckptfp::model::{plan, Capping, Params, StrategyKind};
 use ckptfp::runtime::HloPlanner;
@@ -171,12 +172,12 @@ fn bench_sim(rec: &mut Recorder) {
     println!("== simulation engine (session path) ==");
     let mut fields: Vec<(&str, Json)> = Vec::new();
     for (label, key, n, dist) in [
-        ("N=2^16 weibull:0.7", "msegs_n16_weibull07", 1u64 << 16, "weibull:0.7"),
-        ("N=2^19 weibull:0.7", "msegs_n19_weibull07", 1u64 << 19, "weibull:0.7"),
-        ("N=2^19 exp", "msegs_n19_exp", 1u64 << 19, "exp"),
+        ("N=2^16 weibull:0.7", "msegs_n16_weibull07", 1u64 << 16, DistSpec::weibull(0.7)),
+        ("N=2^19 weibull:0.7", "msegs_n19_weibull07", 1u64 << 19, DistSpec::weibull(0.7)),
+        ("N=2^19 exp", "msegs_n19_exp", 1u64 << 19, DistSpec::Exp),
     ] {
         let mut s = Scenario::paper(n, predictor_yu(300.0));
-        s.fault_dist = dist.into();
+        s.fault_dist = dist;
         let spec = spec_for(StrategyKind::NoCkptI, &s, Capping::Uncapped);
         let mut session = SimSession::new(&s, &spec).expect("session");
         let (msegs, runs, dt) = segment_throughput(|rep| session.run(rep).n_segments, 1.0);
@@ -198,7 +199,7 @@ fn bench_session_vs_oneshot(rec: &mut Recorder) {
     // strings and rebuilds generator + engine (and their buffers) every
     // replication; the session path pays that once.
     let mut s = Scenario::paper(1 << 19, predictor_yu(300.0));
-    s.fault_dist = "weibull:0.7".into();
+    s.fault_dist = DistSpec::weibull(0.7);
     let spec = spec_for(StrategyKind::NoCkptI, &s, Capping::Uncapped);
 
     let (oneshot_msegs, oneshot_runs, _) =
@@ -224,7 +225,7 @@ fn bench_pool(rec: &mut Recorder) {
     println!("== worker pool scaling (streaming fold, fixed total work) ==");
     let s = {
         let mut s = Scenario::paper(1 << 19, predictor_yu(300.0));
-        s.fault_dist = "weibull:0.7".into();
+        s.fault_dist = DistSpec::weibull(0.7);
         s
     };
     let spec = spec_for(StrategyKind::NoCkptI, &s, Capping::Uncapped);
@@ -265,7 +266,7 @@ fn bench_best_period(rec: &mut Recorder) {
     println!("== best-period search (candidate x rep product) ==");
     // The `best_period_close_to_formula` test configuration.
     let mut s = Scenario::paper(1 << 16, Predictor::none());
-    s.fault_dist = "exp".into();
+    s.fault_dist = DistSpec::Exp;
     s.work = 2.0e5;
     let base = spec_for(StrategyKind::Young, &s, Capping::Uncapped);
     let mut fields: Vec<(&str, Json)> = Vec::new();

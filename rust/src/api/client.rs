@@ -1,0 +1,86 @@
+//! Blocking typed client for the job service: encodes [`JobRequest`]s
+//! as protocol-v2 JSONL over TCP and decodes typed responses. One
+//! request in flight per connection (the protocol is strictly
+//! line-for-line); open more clients for concurrency — the service is
+//! one thread per connection.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use super::types::*;
+use super::wire;
+
+pub struct ServiceClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl ServiceClient {
+    pub fn connect(addr: &str) -> anyhow::Result<ServiceClient> {
+        let stream = TcpStream::connect(addr)?;
+        let writer = stream.try_clone()?;
+        Ok(ServiceClient { reader: BufReader::new(stream), writer })
+    }
+
+    /// Send one job, wait for its response. Server-reported failures
+    /// come back as `Ok(JobResponse::Error(_))`; transport failures as
+    /// `Err`.
+    pub fn call(&mut self, req: &JobRequest) -> anyhow::Result<JobResponse> {
+        let line = wire::encode_request(req);
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut resp = String::new();
+        self.reader.read_line(&mut resp)?;
+        anyhow::ensure!(!resp.is_empty(), "server closed the connection");
+        wire::decode_response(resp.trim()).map_err(Into::into)
+    }
+
+    pub fn plan(&mut self, job: PlanJob) -> anyhow::Result<PlanResult> {
+        match self.call(&JobRequest::Plan(job))? {
+            JobResponse::Plan(r) => Ok(r),
+            JobResponse::Error(e) => Err(e.into()),
+            other => anyhow::bail!("unexpected response to plan: {other:?}"),
+        }
+    }
+
+    pub fn simulate(&mut self, job: SimulateJob) -> anyhow::Result<SimulateResult> {
+        match self.call(&JobRequest::Simulate(job))? {
+            JobResponse::Simulate(r) => Ok(r),
+            JobResponse::Error(e) => Err(e.into()),
+            other => anyhow::bail!("unexpected response to simulate: {other:?}"),
+        }
+    }
+
+    pub fn best_period(&mut self, job: BestPeriodJob) -> anyhow::Result<BestPeriodOutcome> {
+        match self.call(&JobRequest::BestPeriod(job))? {
+            JobResponse::BestPeriod(r) => Ok(r),
+            JobResponse::Error(e) => Err(e.into()),
+            other => anyhow::bail!("unexpected response to best_period: {other:?}"),
+        }
+    }
+
+    pub fn sweep(&mut self, job: SweepJob) -> anyhow::Result<SweepResult> {
+        match self.call(&JobRequest::Sweep(job))? {
+            JobResponse::Sweep(r) => Ok(r),
+            JobResponse::Error(e) => Err(e.into()),
+            other => anyhow::bail!("unexpected response to sweep: {other:?}"),
+        }
+    }
+
+    pub fn stats(&mut self) -> anyhow::Result<ServiceStats> {
+        match self.call(&JobRequest::Stats)? {
+            JobResponse::Stats(s) => Ok(s),
+            JobResponse::Error(e) => Err(e.into()),
+            other => anyhow::bail!("unexpected response to stats: {other:?}"),
+        }
+    }
+
+    pub fn ping(&mut self) -> anyhow::Result<()> {
+        match self.call(&JobRequest::Ping)? {
+            JobResponse::Pong => Ok(()),
+            JobResponse::Error(e) => Err(e.into()),
+            other => anyhow::bail!("unexpected response to ping: {other:?}"),
+        }
+    }
+}

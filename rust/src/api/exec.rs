@@ -1,0 +1,366 @@
+//! The job executor: one implementation of every [`JobRequest`],
+//! shared verbatim by the TCP service, the CLI and in-process callers —
+//! local and remote execution are the same code path.
+//!
+//! * `Plan`/`Sweep` ride the HLO batcher when one is attached
+//!   ([`Executor::with_batcher`]) and fall back to the closed-form
+//!   model otherwise, so a service without PJRT artifacts still
+//!   answers every job.
+//! * `Simulate`/`BestPeriod` run on the worker pool with per-worker
+//!   [`crate::sim::SimSession`] reuse and streaming
+//!   [`crate::sim::ReplicationAgg`] aggregation — the same hot path as
+//!   the experiment harness, at the same throughput.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::types::*;
+use crate::coordinator::{available_workers, Batcher, Metrics};
+use crate::experiments::scenario_for;
+use crate::model::{self, Params, StrategyKind};
+use crate::sim::run_replications_parallel;
+use crate::strategies::{best_period_with, spec_for, BestPeriodOptions};
+
+/// Tuning for an [`Executor`].
+#[derive(Debug, Clone)]
+pub struct ExecutorConfig {
+    /// Default pool width for simulation jobs.
+    pub workers: usize,
+    /// Default replication count when a job asks for `reps = 0`.
+    pub reps_default: u64,
+    /// Default best-period grid size when a job asks for
+    /// `candidates = 0`.
+    pub bp_candidates_default: u64,
+}
+
+impl Default for ExecutorConfig {
+    fn default() -> Self {
+        ExecutorConfig {
+            workers: available_workers(),
+            reps_default: 100,
+            bp_candidates_default: 16,
+        }
+    }
+}
+
+/// Cloneable job executor. Cheap to clone (the batcher handle and the
+/// metrics registry are shared), so the service hands one to every
+/// connection thread.
+#[derive(Clone)]
+pub struct Executor {
+    batcher: Option<Batcher>,
+    cfg: ExecutorConfig,
+    metrics: Arc<Metrics>,
+}
+
+impl Executor {
+    /// Analytic-planner executor with default tuning — the local /
+    /// in-process entry point.
+    pub fn local() -> Executor {
+        Executor::new(ExecutorConfig::default())
+    }
+
+    pub fn new(cfg: ExecutorConfig) -> Executor {
+        Executor { batcher: None, cfg, metrics: Arc::new(Metrics::new()) }
+    }
+
+    /// Executor whose `Plan`/`Sweep` jobs ride the HLO batcher.
+    pub fn with_batcher(batcher: Batcher, cfg: ExecutorConfig) -> Executor {
+        Executor { batcher: Some(batcher), cfg, metrics: Arc::new(Metrics::new()) }
+    }
+
+    pub fn batcher(&self) -> Option<&Batcher> {
+        self.batcher.as_ref()
+    }
+
+    pub fn config(&self) -> &ExecutorConfig {
+        &self.cfg
+    }
+
+    /// Execute any job; failures become [`JobResponse::Error`], never a
+    /// panic or a dropped connection.
+    pub fn execute(&self, req: &JobRequest) -> JobResponse {
+        let started = Instant::now();
+        self.metrics.incr("requests", 1);
+        self.metrics.incr(req.op(), 1);
+        let resp = match req {
+            JobRequest::Plan(job) => self.plan(job).map(JobResponse::Plan),
+            JobRequest::Simulate(job) => self.simulate(job).map(JobResponse::Simulate),
+            JobRequest::BestPeriod(job) => self.best_period(job).map(JobResponse::BestPeriod),
+            JobRequest::Sweep(job) => self.sweep(job).map(JobResponse::Sweep),
+            JobRequest::Stats => Ok(JobResponse::Stats(self.stats())),
+            JobRequest::Ping => Ok(JobResponse::Pong),
+        };
+        self.metrics.observe_latency(started.elapsed().as_secs_f64());
+        resp.unwrap_or_else(|e| {
+            self.metrics.incr("errors", 1);
+            JobResponse::Error(e)
+        })
+    }
+
+    /// Count a request that failed before reaching [`Executor::execute`]
+    /// (malformed line, unsupported version) so `stats` sees it.
+    pub fn note_rejected(&self) {
+        self.metrics.incr("requests", 1);
+        self.metrics.incr("errors", 1);
+    }
+
+    pub fn plan(&self, job: &PlanJob) -> Result<PlanResult, ApiError> {
+        job.scenario.validate().map_err(ApiError::from_invalid)?;
+        let params = Params::from_scenario(&job.scenario);
+        if let Some(b) = &self.batcher {
+            let out = b.plan(params).map_err(ApiError::from_internal)?;
+            Ok(PlanResult {
+                waste: out.waste,
+                period: out.period,
+                winner: out.winner,
+                winner_waste: out.winner_waste,
+                winner_period: out.winner_period,
+                q: u8::from(out.winner != StrategyKind::Young),
+                via_hlo: true,
+            })
+        } else {
+            let p = model::plan(&params, job.capping, true);
+            Ok(PlanResult {
+                waste: p.waste,
+                period: p.period,
+                winner: p.winner,
+                winner_waste: p.winner_waste(),
+                winner_period: p.winner_period(),
+                q: p.q,
+                via_hlo: false,
+            })
+        }
+    }
+
+    pub fn simulate(&self, job: &SimulateJob) -> Result<SimulateResult, ApiError> {
+        let workers = self.resolve_workers(job.workers);
+        let reps = if job.reps == 0 { self.cfg.reps_default } else { job.reps };
+        // EXACTPREDICTION runs against the exact-date variant of the
+        // trace, per the §5 protocol — same rule as the experiments.
+        let s = scenario_for(job.strategy, &job.scenario);
+        let spec = spec_for(job.strategy, &s, model::Capping::Uncapped);
+        let report =
+            run_replications_parallel(&s, &spec, reps, workers).map_err(ApiError::from_invalid)?;
+        Ok(SimulateResult {
+            strategy: report.strategy,
+            reps,
+            workers: workers as u64,
+            mean_waste: report.agg.waste.mean(),
+            waste_ci95: report.agg.waste.ci95(),
+            mean_makespan: report.agg.makespan.mean(),
+            completion_rate: report.agg.completion_rate(),
+            n_faults: report.agg.n_faults,
+            n_preds: report.agg.n_preds,
+            n_ckpts: report.agg.n_ckpts,
+            n_proactive_ckpts: report.agg.n_proactive_ckpts,
+            sim_seconds: report.agg.sim_seconds,
+        })
+    }
+
+    pub fn best_period(&self, job: &BestPeriodJob) -> Result<BestPeriodOutcome, ApiError> {
+        let workers = self.resolve_workers(job.workers);
+        let reps = if job.reps == 0 { self.cfg.reps_default } else { job.reps };
+        let candidates =
+            if job.candidates == 0 { self.cfg.bp_candidates_default } else { job.candidates };
+        if candidates < 2 {
+            return Err(ApiError::bad_request("best_period needs at least 2 candidates"));
+        }
+        let s = scenario_for(job.strategy, &job.scenario);
+        let spec = spec_for(job.strategy, &s, model::Capping::Uncapped);
+        let opts = BestPeriodOptions { workers, prune: job.prune };
+        let res = best_period_with(&s, &spec, reps, candidates as usize, &opts)
+            .map_err(ApiError::from_invalid)?;
+        Ok(BestPeriodOutcome {
+            strategy: spec.name,
+            t_r: res.t_r,
+            waste: res.waste,
+            n_pruned: res.n_pruned as u64,
+            sweep: res.sweep,
+            reps,
+            candidates,
+            workers: workers as u64,
+        })
+    }
+
+    pub fn sweep(&self, job: &SweepJob) -> Result<SweepResult, ApiError> {
+        if job.n_procs.is_empty() {
+            return Err(ApiError::bad_request("sweep needs at least one n_procs entry"));
+        }
+        let mut scenarios = Vec::with_capacity(job.n_procs.len());
+        for &n in &job.n_procs {
+            let mut s = job.base.clone();
+            s.platform.n_procs = n;
+            s.validate()
+                .map_err(|e| ApiError::bad_request(format!("sweep n_procs = {n}: {e:#}")))?;
+            scenarios.push(s);
+        }
+        let params: Vec<Params> = scenarios.iter().map(Params::from_scenario).collect();
+        let (outs, via_hlo) = if let Some(b) = &self.batcher {
+            let outs = b.plan_many(params).map_err(ApiError::from_internal)?;
+            let rows = outs
+                .into_iter()
+                .map(|o| (o.winner, o.winner_waste, o.winner_period))
+                .collect::<Vec<_>>();
+            (rows, true)
+        } else {
+            let rows = params
+                .iter()
+                .map(|p| {
+                    let plan = model::plan(p, job.capping, true);
+                    (plan.winner, plan.winner_waste(), plan.winner_period())
+                })
+                .collect::<Vec<_>>();
+            (rows, false)
+        };
+        let rows = scenarios
+            .iter()
+            .zip(outs)
+            .map(|(s, (winner, winner_waste, winner_period))| SweepRow {
+                n_procs: s.platform.n_procs,
+                mu: s.mu(),
+                winner,
+                winner_waste,
+                winner_period,
+            })
+            .collect();
+        Ok(SweepResult { rows, via_hlo })
+    }
+
+    pub fn stats(&self) -> ServiceStats {
+        let (p50, p95, p99, n) = self.metrics.latency_quantiles();
+        let finite = |x: f64| if x.is_finite() { x } else { 0.0 };
+        ServiceStats {
+            requests: self.metrics.get("requests"),
+            errors: self.metrics.get("errors"),
+            plans: self.metrics.get("plan"),
+            simulates: self.metrics.get("simulate"),
+            best_periods: self.metrics.get("best_period"),
+            sweeps: self.metrics.get("sweep"),
+            lat_p50_s: finite(p50),
+            lat_p95_s: finite(p95),
+            lat_p99_s: finite(p99),
+            lat_n: n as u64,
+            batcher: self.batcher.as_ref().map(|b| {
+                let s = b.stats();
+                BatcherSnapshot {
+                    requests: s.requests,
+                    batches: s.batches,
+                    max_batch: s.max_batch_seen,
+                }
+            }),
+        }
+    }
+
+    fn resolve_workers(&self, requested: Option<u64>) -> usize {
+        match requested {
+            Some(w) => (w as usize).max(1),
+            None => self.cfg.workers.max(1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Predictor, Scenario};
+    use crate::dist::DistSpec;
+    use crate::model::Capping;
+
+    fn small_scenario() -> Scenario {
+        let mut s = Scenario::paper(1 << 16, Predictor::exact(0.85, 0.82));
+        s.fault_dist = DistSpec::Exp;
+        s.work = 2.0e5;
+        s
+    }
+
+    #[test]
+    fn plan_falls_back_to_analytic() {
+        let exec = Executor::local();
+        let res = exec.plan(&PlanJob::new(small_scenario())).unwrap();
+        assert!(!res.via_hlo);
+        assert!(res.winner_waste > 0.0 && res.winner_waste < 1.0);
+        // ExactPrediction beats Young under a good exact predictor.
+        assert!(res.waste[StrategyKind::ExactPrediction as usize] < res.waste[StrategyKind::Young as usize]);
+        assert_eq!(res.q, u8::from(res.winner != StrategyKind::Young));
+    }
+
+    #[test]
+    fn plan_rejects_invalid_scenario() {
+        let mut s = small_scenario();
+        s.work = -1.0;
+        let err = Executor::local().plan(&PlanJob::new(s)).unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadRequest);
+    }
+
+    #[test]
+    fn simulate_matches_direct_pool_run() {
+        let exec = Executor::local();
+        let mut job = SimulateJob::new(small_scenario(), StrategyKind::Young);
+        job.reps = 8;
+        job.workers = Some(2);
+        let res = exec.simulate(&job).unwrap();
+        assert_eq!(res.reps, 8);
+        assert_eq!(res.workers, 2);
+        let spec = spec_for(StrategyKind::Young, &small_scenario(), Capping::Uncapped);
+        let direct = run_replications_parallel(&small_scenario(), &spec, 8, 2).unwrap();
+        assert_eq!(res.mean_waste.to_bits(), direct.agg.waste.mean().to_bits());
+        assert_eq!(res.n_faults, direct.agg.n_faults);
+    }
+
+    #[test]
+    fn simulate_resolves_defaults() {
+        let exec = Executor::new(ExecutorConfig { reps_default: 3, ..Default::default() });
+        let res = exec.simulate(&SimulateJob::new(small_scenario(), StrategyKind::Young)).unwrap();
+        assert_eq!(res.reps, 3);
+    }
+
+    #[test]
+    fn best_period_guards_degenerate_grid() {
+        let exec = Executor::local();
+        let mut job = BestPeriodJob::new(small_scenario(), StrategyKind::Young);
+        job.candidates = 1;
+        assert_eq!(exec.best_period(&job).unwrap_err().code, ErrorCode::BadRequest);
+    }
+
+    #[test]
+    fn sweep_rows_follow_mu() {
+        let exec = Executor::local();
+        let res = exec
+            .sweep(&SweepJob {
+                base: small_scenario(),
+                n_procs: vec![1 << 16, 1 << 19],
+                capping: Capping::Uncapped,
+            })
+            .unwrap();
+        assert_eq!(res.rows.len(), 2);
+        assert!(res.rows[0].mu > res.rows[1].mu, "MTBF shrinks with N");
+        assert!(res.rows[0].winner_waste < res.rows[1].winner_waste);
+        assert!(exec.sweep(&SweepJob {
+            base: small_scenario(),
+            n_procs: vec![],
+            capping: Capping::Uncapped
+        })
+        .is_err());
+    }
+
+    #[test]
+    fn execute_counts_requests_and_errors() {
+        let exec = Executor::local();
+        assert_eq!(exec.execute(&JobRequest::Ping), JobResponse::Pong);
+        let mut bad = small_scenario();
+        bad.work = -1.0;
+        match exec.execute(&JobRequest::Plan(PlanJob::new(bad))) {
+            JobResponse::Error(e) => assert_eq!(e.code, ErrorCode::BadRequest),
+            other => panic!("expected error, got {other:?}"),
+        }
+        let stats = exec.stats();
+        assert_eq!(stats.requests, 2);
+        assert_eq!(stats.errors, 1);
+        assert!(stats.batcher.is_none());
+        match exec.execute(&JobRequest::Stats) {
+            JobResponse::Stats(s) => assert_eq!(s.requests, 3),
+            other => panic!("expected stats, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,37 @@
+//! The crate's one public job surface.
+//!
+//! Everything the system can do for a caller — closed-form/HLO
+//! **planning**, pool-parallel Monte Carlo **simulation**, brute-force
+//! **best-period** search, platform **sweeps** — is a [`JobRequest`]
+//! answered by a [`JobResponse`], with structured [`ApiError`]s in
+//! place of stringly failures. The same [`Executor`] serves every
+//! caller:
+//!
+//! ```text
+//!   CLI (`ckptfp plan|simulate|best-period`)  ─┐
+//!   experiments / in-process users            ─┼─▶ Executor::execute ─▶ model | batcher | sim pool
+//!   TCP service (JSONL v2, v1 adapter)        ─┘        ▲
+//!   remote callers ── ServiceClient ── wire ────────────┘
+//! ```
+//!
+//! so local and remote execution share one code path, and a `Simulate`
+//! job served over TCP is bit-identical to the same replication run
+//! in-process (pinned in `tests/test_api.rs`).
+//!
+//! Submodules:
+//!
+//! * [`types`] — `JobRequest` / `JobResponse` / `ApiError`;
+//! * [`wire`] — the versioned JSONL v2 encoding and the v1 adapter
+//!   (documented with examples in `docs/PROTOCOL.md`);
+//! * [`Executor`] — job execution (HLO batcher when attached, analytic
+//!   fallback; simulation on the worker pool with session reuse);
+//! * [`ServiceClient`] — blocking typed TCP client.
+
+mod client;
+mod exec;
+pub mod types;
+pub mod wire;
+
+pub use client::ServiceClient;
+pub use exec::{Executor, ExecutorConfig};
+pub use types::*;

@@ -1,0 +1,348 @@
+//! The typed job surface: every operation the crate can perform for a
+//! caller — planning, simulation, best-period search, platform sweeps —
+//! as one request/response pair of enums, independent of any wire
+//! encoding.
+//!
+//! Invariants:
+//!
+//! * requests carry fully-typed payloads ([`crate::config::Scenario`],
+//!   [`StrategyKind`], [`Capping`]) — strings exist only in
+//!   [`crate::api::wire`];
+//! * every failure is an [`ApiError`] with a machine-readable
+//!   [`ErrorCode`], never a bare string;
+//! * responses are plain data with `PartialEq`, so wire round-trips can
+//!   be pinned exactly in tests.
+
+use crate::config::Scenario;
+use crate::model::{Capping, StrategyKind};
+
+/// One job, as accepted by [`crate::api::Executor::execute`] and the
+/// TCP service alike.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JobRequest {
+    /// Closed-form (or HLO-compiled) optimal strategy/period planning.
+    Plan(PlanJob),
+    /// Monte Carlo replication of one strategy on the worker pool.
+    Simulate(SimulateJob),
+    /// Brute-force §5 best-period search on the worker pool.
+    BestPeriod(BestPeriodJob),
+    /// Plan across a range of platform sizes in one batch.
+    Sweep(SweepJob),
+    /// Service counters and latency quantiles.
+    Stats,
+    /// Liveness probe.
+    Ping,
+}
+
+impl JobRequest {
+    /// Canonical op name — the `"op"` field of the wire encoding.
+    pub fn op(&self) -> &'static str {
+        match self {
+            JobRequest::Plan(_) => "plan",
+            JobRequest::Simulate(_) => "simulate",
+            JobRequest::BestPeriod(_) => "best_period",
+            JobRequest::Sweep(_) => "sweep",
+            JobRequest::Stats => "stats",
+            JobRequest::Ping => "ping",
+        }
+    }
+}
+
+/// Plan the optimal strategy and period for one configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanJob {
+    pub scenario: Scenario,
+    /// Period-domain treatment for the analytic path (the HLO planner
+    /// bakes its own); defaults to the §5 `Uncapped` convention.
+    pub capping: Capping,
+}
+
+impl PlanJob {
+    pub fn new(scenario: Scenario) -> PlanJob {
+        PlanJob { scenario, capping: Capping::Uncapped }
+    }
+}
+
+/// Replicate one strategy `reps` times and aggregate.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimulateJob {
+    pub scenario: Scenario,
+    pub strategy: StrategyKind,
+    /// Replications; 0 = the executor's configured default.
+    pub reps: u64,
+    /// Pool width; `None` = the executor's configured default.
+    pub workers: Option<u64>,
+}
+
+impl SimulateJob {
+    pub fn new(scenario: Scenario, strategy: StrategyKind) -> SimulateJob {
+        SimulateJob { scenario, strategy, reps: 0, workers: None }
+    }
+}
+
+/// Brute-force the best regular period of one strategy by simulation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BestPeriodJob {
+    pub scenario: Scenario,
+    pub strategy: StrategyKind,
+    /// Replications per candidate; 0 = the executor's default.
+    pub reps: u64,
+    /// Period-grid size; 0 = the executor's default.
+    pub candidates: u64,
+    /// Pool width; `None` = the executor's configured default.
+    pub workers: Option<u64>,
+    /// Enable the coarse-pass pruning heuristic.
+    pub prune: bool,
+}
+
+impl BestPeriodJob {
+    pub fn new(scenario: Scenario, strategy: StrategyKind) -> BestPeriodJob {
+        BestPeriodJob { scenario, strategy, reps: 0, candidates: 0, workers: None, prune: false }
+    }
+}
+
+/// Plan the same base scenario across several platform sizes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepJob {
+    /// Base configuration; `platform.n_procs` is overridden per row.
+    pub base: Scenario,
+    pub n_procs: Vec<u64>,
+    pub capping: Capping,
+}
+
+/// One job's result. `Error` is a first-class variant so the service
+/// can answer *every* line with a `JobResponse`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JobResponse {
+    Plan(PlanResult),
+    Simulate(SimulateResult),
+    BestPeriod(BestPeriodOutcome),
+    Sweep(SweepResult),
+    Stats(ServiceStats),
+    Pong,
+    Error(ApiError),
+}
+
+/// Per-strategy optima plus the winner — the payload the v1 protocol
+/// has always carried, now typed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanResult {
+    /// Optimal waste per strategy ([`StrategyKind`] indexing).
+    pub waste: [f64; 6],
+    /// Optimal period per strategy.
+    pub period: [f64; 6],
+    pub winner: StrategyKind,
+    pub winner_waste: f64,
+    pub winner_period: f64,
+    /// Trust decision of the winner (0 = ignore predictor, 1 = trust).
+    pub q: u8,
+    /// Whether the AOT HLO planner produced this (vs the closed form).
+    pub via_hlo: bool,
+}
+
+/// Aggregated Monte Carlo result of a [`SimulateJob`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimulateResult {
+    pub strategy: String,
+    /// Replications actually run (defaults resolved).
+    pub reps: u64,
+    /// Pool width actually used. Means are bit-reproducible only for a
+    /// fixed width, so the response echoes it.
+    pub workers: u64,
+    pub mean_waste: f64,
+    /// Half-width of the 95% confidence interval on the mean waste.
+    pub waste_ci95: f64,
+    pub mean_makespan: f64,
+    pub completion_rate: f64,
+    pub n_faults: u64,
+    pub n_preds: u64,
+    pub n_ckpts: u64,
+    pub n_proactive_ckpts: u64,
+    /// Total engine wall-clock across replications (CPU-seconds).
+    pub sim_seconds: f64,
+}
+
+/// Result of a [`BestPeriodJob`] search.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BestPeriodOutcome {
+    pub strategy: String,
+    /// Winning regular period.
+    pub t_r: f64,
+    /// Mean waste at the winning period.
+    pub waste: f64,
+    /// Candidates eliminated by the coarse pass.
+    pub n_pruned: u64,
+    /// The full `(period, mean waste)` sweep.
+    pub sweep: Vec<(f64, f64)>,
+    pub reps: u64,
+    pub candidates: u64,
+    pub workers: u64,
+}
+
+/// One row of a [`SweepJob`] answer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepRow {
+    pub n_procs: u64,
+    /// Platform MTBF at this size (s).
+    pub mu: f64,
+    pub winner: StrategyKind,
+    pub winner_waste: f64,
+    pub winner_period: f64,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepResult {
+    pub rows: Vec<SweepRow>,
+    pub via_hlo: bool,
+}
+
+/// Batcher counters as exposed through the job surface.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatcherSnapshot {
+    pub requests: u64,
+    pub batches: u64,
+    pub max_batch: u64,
+}
+
+/// Service-level counters. Latency quantiles are 0 until at least one
+/// request has been timed (never NaN — the type round-trips exactly).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ServiceStats {
+    pub requests: u64,
+    pub errors: u64,
+    pub plans: u64,
+    pub simulates: u64,
+    pub best_periods: u64,
+    pub sweeps: u64,
+    pub lat_p50_s: f64,
+    pub lat_p95_s: f64,
+    pub lat_p99_s: f64,
+    pub lat_n: u64,
+    /// Present only when the service runs an HLO batcher.
+    pub batcher: Option<BatcherSnapshot>,
+}
+
+/// Machine-readable failure category. The wire form is the kebab-free
+/// snake_case string of [`ErrorCode::as_str`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// The line was not valid JSON.
+    InvalidJson,
+    /// The `v` field named a protocol version this build cannot speak.
+    UnsupportedVersion,
+    /// The `op` field named no known job.
+    UnknownOp,
+    /// The job payload failed validation.
+    BadRequest,
+    /// The job needs a backend this service does not have.
+    Unsupported,
+    /// The backend failed while executing a valid job.
+    Internal,
+}
+
+impl ErrorCode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ErrorCode::InvalidJson => "invalid_json",
+            ErrorCode::UnsupportedVersion => "unsupported_version",
+            ErrorCode::UnknownOp => "unknown_op",
+            ErrorCode::BadRequest => "bad_request",
+            ErrorCode::Unsupported => "unsupported",
+            ErrorCode::Internal => "internal",
+        }
+    }
+
+    /// Inverse of [`ErrorCode::as_str`]; unknown strings collapse to
+    /// `Internal` so old clients survive new server codes.
+    pub fn parse(s: &str) -> ErrorCode {
+        match s {
+            "invalid_json" => ErrorCode::InvalidJson,
+            "unsupported_version" => ErrorCode::UnsupportedVersion,
+            "unknown_op" => ErrorCode::UnknownOp,
+            "bad_request" => ErrorCode::BadRequest,
+            "unsupported" => ErrorCode::Unsupported,
+            _ => ErrorCode::Internal,
+        }
+    }
+}
+
+/// A structured job failure: code for machines, message for humans.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ApiError {
+    pub code: ErrorCode,
+    pub message: String,
+}
+
+impl ApiError {
+    pub fn new(code: ErrorCode, message: impl Into<String>) -> ApiError {
+        ApiError { code, message: message.into() }
+    }
+
+    pub fn bad_request(message: impl Into<String>) -> ApiError {
+        ApiError::new(ErrorCode::BadRequest, message)
+    }
+
+    pub fn invalid_json(message: impl Into<String>) -> ApiError {
+        ApiError::new(ErrorCode::InvalidJson, message)
+    }
+
+    pub fn unknown_op(op: &str) -> ApiError {
+        ApiError::new(ErrorCode::UnknownOp, format!("unknown op '{op}'"))
+    }
+
+    /// Wrap a validation error, keeping the full anyhow context chain.
+    pub fn from_invalid(err: anyhow::Error) -> ApiError {
+        ApiError::bad_request(format!("{err:#}"))
+    }
+
+    /// Wrap a backend failure.
+    pub fn from_internal(err: anyhow::Error) -> ApiError {
+        ApiError::new(ErrorCode::Internal, format!("{err:#}"))
+    }
+}
+
+impl std::fmt::Display for ApiError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}", self.code.as_str(), self.message)
+    }
+}
+
+impl std::error::Error for ApiError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_codes_round_trip() {
+        for code in [
+            ErrorCode::InvalidJson,
+            ErrorCode::UnsupportedVersion,
+            ErrorCode::UnknownOp,
+            ErrorCode::BadRequest,
+            ErrorCode::Unsupported,
+            ErrorCode::Internal,
+        ] {
+            assert_eq!(ErrorCode::parse(code.as_str()), code);
+        }
+        assert_eq!(ErrorCode::parse("some_future_code"), ErrorCode::Internal);
+    }
+
+    #[test]
+    fn api_error_displays_code_and_message() {
+        let e = ApiError::bad_request("work must be positive");
+        assert_eq!(e.to_string(), "bad_request: work must be positive");
+        let any: anyhow::Error = e.clone().into();
+        assert!(any.to_string().contains("bad_request"));
+    }
+
+    #[test]
+    fn op_names_are_stable() {
+        let s = Scenario::paper(1 << 16, crate::config::Predictor::none());
+        assert_eq!(JobRequest::Plan(PlanJob::new(s.clone())).op(), "plan");
+        assert_eq!(JobRequest::Simulate(SimulateJob::new(s.clone(), StrategyKind::Young)).op(), "simulate");
+        assert_eq!(JobRequest::BestPeriod(BestPeriodJob::new(s, StrategyKind::Young)).op(), "best_period");
+        assert_eq!(JobRequest::Stats.op(), "stats");
+        assert_eq!(JobRequest::Ping.op(), "ping");
+    }
+}

@@ -1,0 +1,627 @@
+//! JSONL wire encoding of the job surface — protocol **v2** — plus the
+//! adapter that keeps the flat v1 planner dialect
+//! ([`crate::coordinator::protocol`]) working on the same socket.
+//!
+//! One JSON object per line, both directions. Requests carry
+//! `"v": 2` and an `"op"`; a line without `v` (or with `v = 1`) is
+//! decoded through the v1 adapter and answered in the legacy response
+//! shape, so pre-v2 clients never notice the redesign. Full examples
+//! live in `docs/PROTOCOL.md`.
+//!
+//! Every decode failure is an [`ApiError`] with a machine-readable
+//! code (`invalid_json`, `unsupported_version`, `unknown_op`,
+//! `bad_request`), already shaped for the error response.
+
+use super::types::*;
+use crate::config::{Predictor, Scenario};
+use crate::dist::DistSpec;
+use crate::model::{Capping, StrategyKind};
+use crate::util::json::{parse, Json};
+
+/// The protocol version this build speaks natively.
+pub const PROTOCOL_VERSION: f64 = 2.0;
+
+/// A decoded request plus the dialect it arrived in: legacy (v1)
+/// requests must be answered in the legacy response shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Decoded {
+    pub request: JobRequest,
+    pub legacy: bool,
+}
+
+// ---------------------------------------------------------------------------
+// Requests
+// ---------------------------------------------------------------------------
+
+/// Decode one request line (either dialect).
+pub fn decode_request(line: &str) -> Result<Decoded, ApiError> {
+    let v = parse(line).map_err(|e| ApiError::invalid_json(format!("{e:#}")))?;
+    if !matches!(v, Json::Obj(_)) {
+        return Err(ApiError::bad_request("request must be a JSON object"));
+    }
+    let version = v.num_or("v", 1.0);
+    if version == 1.0 {
+        return Ok(Decoded { request: decode_v1(&v)?, legacy: true });
+    }
+    if version != PROTOCOL_VERSION {
+        return Err(ApiError::new(
+            ErrorCode::UnsupportedVersion,
+            format!("protocol version {version} not supported (this build speaks v1 and v2)"),
+        ));
+    }
+    let op = match v.get("op").and_then(Json::as_str) {
+        Some(op) => op,
+        None => return Err(ApiError::unknown_op("<missing>")),
+    };
+    let request = match op {
+        "plan" => JobRequest::Plan(PlanJob {
+            scenario: scenario_from_json(require(&v, "scenario")?)?,
+            capping: capping_from_json(&v),
+        }),
+        "simulate" => JobRequest::Simulate(SimulateJob {
+            scenario: scenario_from_json(require(&v, "scenario")?)?,
+            strategy: strategy_from_json(&v)?,
+            reps: u64_or(&v, "reps", 0),
+            workers: opt_u64(&v, "workers"),
+        }),
+        "best_period" | "best-period" => JobRequest::BestPeriod(BestPeriodJob {
+            scenario: scenario_from_json(require(&v, "scenario")?)?,
+            strategy: strategy_from_json(&v)?,
+            reps: u64_or(&v, "reps", 0),
+            candidates: u64_or(&v, "candidates", 0),
+            workers: opt_u64(&v, "workers"),
+            prune: v.get("prune").and_then(Json::as_bool).unwrap_or(false),
+        }),
+        "sweep" => {
+            let n_procs = match v.get("n_procs") {
+                Some(Json::Arr(xs)) => xs
+                    .iter()
+                    .map(|x| x.as_f64().map(|f| f as u64))
+                    .collect::<Option<Vec<u64>>>()
+                    .ok_or_else(|| ApiError::bad_request("sweep n_procs must be numbers"))?,
+                _ => return Err(ApiError::bad_request("sweep needs an 'n_procs' array")),
+            };
+            JobRequest::Sweep(SweepJob {
+                base: scenario_from_json(require(&v, "scenario")?)?,
+                n_procs,
+                capping: capping_from_json(&v),
+            })
+        }
+        "stats" => JobRequest::Stats,
+        "ping" => JobRequest::Ping,
+        other => return Err(ApiError::unknown_op(other)),
+    };
+    Ok(Decoded { request, legacy: false })
+}
+
+/// Dialect sniff for lines that failed [`decode_request`]: a
+/// parseable object without `"v": 2` is the legacy dialect, so its
+/// error reply must use the legacy shape. Unparseable lines have no
+/// dialect and get the v2 error shape.
+pub fn line_is_legacy(line: &str) -> bool {
+    match parse(line) {
+        Ok(v @ Json::Obj(_)) => v.num_or("v", 1.0) == 1.0,
+        _ => false,
+    }
+}
+
+/// The v1 adapter: flat planner-dialect fields become a one-processor
+/// [`Scenario`] whose platform MTBF is the request's `mu`. Parsing and
+/// validation are delegated to [`crate::coordinator::protocol`] so the
+/// two dialects cannot drift.
+fn decode_v1(v: &Json) -> Result<JobRequest, ApiError> {
+    use crate::coordinator::protocol::{parse_request, Request};
+    // Re-serialize the already-parsed object rather than re-parsing the
+    // raw line: byte-level concerns stay in one place.
+    let req = parse_request(&v.to_string()).map_err(|e| {
+        let msg = format!("{e:#}");
+        if msg.contains("unknown op") {
+            ApiError::new(ErrorCode::UnknownOp, msg)
+        } else {
+            ApiError::bad_request(msg)
+        }
+    })?;
+    Ok(match req {
+        Request::Ping => JobRequest::Ping,
+        Request::Stats => JobRequest::Stats,
+        Request::Plan(p) => {
+            let predictor =
+                Predictor { recall: p.recall, precision: p.precision, window: p.i, ef: p.ef };
+            let scenario = Scenario::builder()
+                .n_procs(1)
+                .mu(p.mu)
+                .checkpoint(p.c)
+                .downtime(p.d)
+                .recovery(p.r_rec)
+                .predictor(predictor)
+                .alpha(p.alpha)
+                .migration(p.m)
+                .build()
+                .map_err(ApiError::from_invalid)?;
+            JobRequest::Plan(PlanJob { scenario, capping: Capping::Uncapped })
+        }
+    })
+}
+
+/// Encode one request line (always v2).
+pub fn encode_request(req: &JobRequest) -> String {
+    let mut fields: Vec<(&str, Json)> = vec![
+        ("v", Json::Num(PROTOCOL_VERSION)),
+        ("op", Json::Str(req.op().into())),
+    ];
+    match req {
+        JobRequest::Plan(job) => {
+            fields.push(("scenario", scenario_to_json(&job.scenario)));
+            fields.push(("capped", Json::Bool(job.capping == Capping::Capped)));
+        }
+        JobRequest::Simulate(job) => {
+            fields.push(("scenario", scenario_to_json(&job.scenario)));
+            fields.push(("strategy", Json::Str(job.strategy.name().into())));
+            fields.push(("reps", Json::Num(job.reps as f64)));
+            if let Some(w) = job.workers {
+                fields.push(("workers", Json::Num(w as f64)));
+            }
+        }
+        JobRequest::BestPeriod(job) => {
+            fields.push(("scenario", scenario_to_json(&job.scenario)));
+            fields.push(("strategy", Json::Str(job.strategy.name().into())));
+            fields.push(("reps", Json::Num(job.reps as f64)));
+            fields.push(("candidates", Json::Num(job.candidates as f64)));
+            if let Some(w) = job.workers {
+                fields.push(("workers", Json::Num(w as f64)));
+            }
+            fields.push(("prune", Json::Bool(job.prune)));
+        }
+        JobRequest::Sweep(job) => {
+            fields.push(("scenario", scenario_to_json(&job.base)));
+            fields.push((
+                "n_procs",
+                Json::Arr(job.n_procs.iter().map(|&n| Json::Num(n as f64)).collect()),
+            ));
+            fields.push(("capped", Json::Bool(job.capping == Capping::Capped)));
+        }
+        JobRequest::Stats | JobRequest::Ping => {}
+    }
+    Json::obj(fields).to_string()
+}
+
+// ---------------------------------------------------------------------------
+// Responses
+// ---------------------------------------------------------------------------
+
+/// Encode one response line. `legacy` selects the v1 shape (no `v` /
+/// `job` markers — exactly what pre-v2 clients parse today).
+pub fn encode_response(resp: &JobResponse, legacy: bool) -> String {
+    let mut fields: Vec<(&str, Json)> = Vec::new();
+    if !legacy {
+        fields.push(("v", Json::Num(PROTOCOL_VERSION)));
+    }
+    match resp {
+        JobResponse::Error(e) => {
+            fields.push(("ok", Json::Bool(false)));
+            fields.push(("code", Json::Str(e.code.as_str().into())));
+            fields.push(("error", Json::Str(e.message.clone())));
+        }
+        JobResponse::Pong => {
+            fields.push(("ok", Json::Bool(true)));
+            if !legacy {
+                fields.push(("job", Json::Str("ping".into())));
+            }
+            fields.push(("pong", Json::Bool(true)));
+        }
+        JobResponse::Plan(r) => {
+            fields.push(("ok", Json::Bool(true)));
+            if !legacy {
+                fields.push(("job", Json::Str("plan".into())));
+                fields.push((
+                    "planner",
+                    Json::Str(if r.via_hlo { "hlo" } else { "analytic" }.into()),
+                ));
+            }
+            fields.extend(plan_payload(r));
+        }
+        JobResponse::Simulate(r) => {
+            fields.push(("ok", Json::Bool(true)));
+            if !legacy {
+                fields.push(("job", Json::Str("simulate".into())));
+            }
+            fields.extend(vec![
+                ("strategy", Json::Str(r.strategy.clone())),
+                ("reps", Json::Num(r.reps as f64)),
+                ("workers", Json::Num(r.workers as f64)),
+                ("mean_waste", Json::Num(r.mean_waste)),
+                ("waste_ci95", Json::Num(r.waste_ci95)),
+                ("mean_makespan", Json::Num(r.mean_makespan)),
+                ("completion_rate", Json::Num(r.completion_rate)),
+                ("n_faults", Json::Num(r.n_faults as f64)),
+                ("n_preds", Json::Num(r.n_preds as f64)),
+                ("n_ckpts", Json::Num(r.n_ckpts as f64)),
+                ("n_proactive_ckpts", Json::Num(r.n_proactive_ckpts as f64)),
+                ("sim_seconds", Json::Num(r.sim_seconds)),
+            ]);
+        }
+        JobResponse::BestPeriod(r) => {
+            fields.push(("ok", Json::Bool(true)));
+            if !legacy {
+                fields.push(("job", Json::Str("best_period".into())));
+            }
+            fields.extend(vec![
+                ("strategy", Json::Str(r.strategy.clone())),
+                ("t_r", Json::Num(r.t_r)),
+                ("waste", Json::Num(r.waste)),
+                ("n_pruned", Json::Num(r.n_pruned as f64)),
+                ("reps", Json::Num(r.reps as f64)),
+                ("candidates", Json::Num(r.candidates as f64)),
+                ("workers", Json::Num(r.workers as f64)),
+                (
+                    "sweep",
+                    Json::Arr(
+                        r.sweep
+                            .iter()
+                            .map(|&(t, w)| Json::Arr(vec![Json::Num(t), Json::Num(w)]))
+                            .collect(),
+                    ),
+                ),
+            ]);
+        }
+        JobResponse::Sweep(r) => {
+            fields.push(("ok", Json::Bool(true)));
+            if !legacy {
+                fields.push(("job", Json::Str("sweep".into())));
+            }
+            fields.push((
+                "planner",
+                Json::Str(if r.via_hlo { "hlo" } else { "analytic" }.into()),
+            ));
+            fields.push((
+                "rows",
+                Json::Arr(
+                    r.rows
+                        .iter()
+                        .map(|row| {
+                            Json::obj(vec![
+                                ("n_procs", Json::Num(row.n_procs as f64)),
+                                ("mu", Json::Num(row.mu)),
+                                ("winner", Json::Str(row.winner.name().into())),
+                                ("winner_waste", Json::Num(row.winner_waste)),
+                                ("winner_period", Json::Num(row.winner_period)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ));
+        }
+        JobResponse::Stats(s) => {
+            fields.push(("ok", Json::Bool(true)));
+            if legacy {
+                // The v1 stats shape: top-level planner counters —
+                // `requests` has always meant "plans that reached the
+                // batcher", with `batches`/`max_batch` beside it. Keep
+                // those fields (and their semantics) intact for pre-v2
+                // monitoring clients; `errors` rides along as a purely
+                // additive extra.
+                let (req, batches, max_batch) = match &s.batcher {
+                    Some(b) => (b.requests, b.batches, b.max_batch),
+                    None => (s.requests, 0, 0),
+                };
+                fields.extend(vec![
+                    ("requests", Json::Num(req as f64)),
+                    ("batches", Json::Num(batches as f64)),
+                    ("max_batch", Json::Num(max_batch as f64)),
+                    ("errors", Json::Num(s.errors as f64)),
+                    ("lat_p50_s", Json::Num(s.lat_p50_s)),
+                    ("lat_p95_s", Json::Num(s.lat_p95_s)),
+                    ("lat_p99_s", Json::Num(s.lat_p99_s)),
+                    ("lat_n", Json::Num(s.lat_n as f64)),
+                ]);
+            } else {
+                fields.push(("job", Json::Str("stats".into())));
+                fields.extend(vec![
+                    ("requests", Json::Num(s.requests as f64)),
+                    ("errors", Json::Num(s.errors as f64)),
+                    ("plans", Json::Num(s.plans as f64)),
+                    ("simulates", Json::Num(s.simulates as f64)),
+                    ("best_periods", Json::Num(s.best_periods as f64)),
+                    ("sweeps", Json::Num(s.sweeps as f64)),
+                    ("lat_p50_s", Json::Num(s.lat_p50_s)),
+                    ("lat_p95_s", Json::Num(s.lat_p95_s)),
+                    ("lat_p99_s", Json::Num(s.lat_p99_s)),
+                    ("lat_n", Json::Num(s.lat_n as f64)),
+                ]);
+                if let Some(b) = &s.batcher {
+                    fields.push((
+                        "batcher",
+                        Json::obj(vec![
+                            ("requests", Json::Num(b.requests as f64)),
+                            ("batches", Json::Num(b.batches as f64)),
+                            ("max_batch", Json::Num(b.max_batch as f64)),
+                        ]),
+                    ));
+                }
+            }
+        }
+    }
+    Json::obj(fields).to_string()
+}
+
+/// The plan payload fields shared by both dialects — one builder so the
+/// v1 and v2 shapes cannot diverge (acceptance-pinned in
+/// `tests/test_api.rs`).
+fn plan_payload(r: &PlanResult) -> Vec<(&'static str, Json)> {
+    let strategies: Vec<Json> = StrategyKind::ALL
+        .iter()
+        .map(|k| {
+            Json::obj(vec![
+                ("name", Json::Str(k.name().into())),
+                ("waste", Json::Num(r.waste[*k as usize])),
+                ("period", Json::Num(r.period[*k as usize])),
+            ])
+        })
+        .collect();
+    vec![
+        ("winner", Json::Str(r.winner.name().into())),
+        ("q", Json::Num(r.q as f64)),
+        ("winner_waste", Json::Num(r.winner_waste)),
+        ("winner_period", Json::Num(r.winner_period)),
+        ("strategies", Json::Arr(strategies)),
+    ]
+}
+
+/// Decode one (v2) response line back into a typed [`JobResponse`] —
+/// the client half of the protocol.
+pub fn decode_response(line: &str) -> Result<JobResponse, ApiError> {
+    let v = parse(line).map_err(|e| ApiError::invalid_json(format!("{e:#}")))?;
+    match v.get("ok").and_then(Json::as_bool) {
+        Some(true) => {}
+        Some(false) => {
+            let code = ErrorCode::parse(v.get("code").and_then(Json::as_str).unwrap_or(""));
+            let message =
+                v.get("error").and_then(Json::as_str).unwrap_or("unknown error").to_string();
+            return Ok(JobResponse::Error(ApiError { code, message }));
+        }
+        None => return Err(ApiError::bad_request("response missing 'ok'")),
+    }
+    match v.get("job").and_then(Json::as_str) {
+        Some("ping") => Ok(JobResponse::Pong),
+        Some("plan") => {
+            let mut waste = [0.0; 6];
+            let mut period = [0.0; 6];
+            if let Some(Json::Arr(xs)) = v.get("strategies") {
+                for x in xs {
+                    let name = x.get("name").and_then(Json::as_str).unwrap_or("");
+                    if let Ok(k) = name.parse::<StrategyKind>() {
+                        waste[k as usize] = x.num_or("waste", f64::NAN);
+                        period[k as usize] = x.num_or("period", f64::NAN);
+                    }
+                }
+            }
+            let winner = v
+                .get("winner")
+                .and_then(Json::as_str)
+                .unwrap_or("")
+                .parse::<StrategyKind>()
+                .map_err(ApiError::from_invalid)?;
+            Ok(JobResponse::Plan(PlanResult {
+                waste,
+                period,
+                winner,
+                winner_waste: v.num_or("winner_waste", f64::NAN),
+                winner_period: v.num_or("winner_period", f64::NAN),
+                q: v.num_or("q", 0.0) as u8,
+                via_hlo: v.get("planner").and_then(Json::as_str) == Some("hlo"),
+            }))
+        }
+        Some("simulate") => Ok(JobResponse::Simulate(SimulateResult {
+            strategy: v.get("strategy").and_then(Json::as_str).unwrap_or("").to_string(),
+            reps: u64_or(&v, "reps", 0),
+            workers: u64_or(&v, "workers", 0),
+            mean_waste: v.num_or("mean_waste", f64::NAN),
+            waste_ci95: v.num_or("waste_ci95", f64::NAN),
+            mean_makespan: v.num_or("mean_makespan", f64::NAN),
+            completion_rate: v.num_or("completion_rate", f64::NAN),
+            n_faults: u64_or(&v, "n_faults", 0),
+            n_preds: u64_or(&v, "n_preds", 0),
+            n_ckpts: u64_or(&v, "n_ckpts", 0),
+            n_proactive_ckpts: u64_or(&v, "n_proactive_ckpts", 0),
+            sim_seconds: v.num_or("sim_seconds", 0.0),
+        })),
+        Some("best_period") => {
+            let sweep = match v.get("sweep") {
+                Some(Json::Arr(xs)) => xs
+                    .iter()
+                    .map(|x| match x {
+                        Json::Arr(pair) if pair.len() == 2 => {
+                            match (pair[0].as_f64(), pair[1].as_f64()) {
+                                (Some(t), Some(w)) => Ok((t, w)),
+                                _ => Err(ApiError::bad_request("sweep entries must be numbers")),
+                            }
+                        }
+                        _ => Err(ApiError::bad_request("sweep entries must be [t, w] pairs")),
+                    })
+                    .collect::<Result<Vec<_>, _>>()?,
+                _ => Vec::new(),
+            };
+            Ok(JobResponse::BestPeriod(BestPeriodOutcome {
+                strategy: v.get("strategy").and_then(Json::as_str).unwrap_or("").to_string(),
+                t_r: v.num_or("t_r", f64::NAN),
+                waste: v.num_or("waste", f64::NAN),
+                n_pruned: u64_or(&v, "n_pruned", 0),
+                sweep,
+                reps: u64_or(&v, "reps", 0),
+                candidates: u64_or(&v, "candidates", 0),
+                workers: u64_or(&v, "workers", 0),
+            }))
+        }
+        Some("sweep") => {
+            let rows = match v.get("rows") {
+                Some(Json::Arr(xs)) => xs
+                    .iter()
+                    .map(|x| {
+                        let winner = x
+                            .get("winner")
+                            .and_then(Json::as_str)
+                            .unwrap_or("")
+                            .parse::<StrategyKind>()
+                            .map_err(ApiError::from_invalid)?;
+                        Ok(SweepRow {
+                            n_procs: u64_or(x, "n_procs", 0),
+                            mu: x.num_or("mu", f64::NAN),
+                            winner,
+                            winner_waste: x.num_or("winner_waste", f64::NAN),
+                            winner_period: x.num_or("winner_period", f64::NAN),
+                        })
+                    })
+                    .collect::<Result<Vec<_>, ApiError>>()?,
+                _ => Vec::new(),
+            };
+            Ok(JobResponse::Sweep(SweepResult {
+                rows,
+                via_hlo: v.get("planner").and_then(Json::as_str) == Some("hlo"),
+            }))
+        }
+        Some("stats") => {
+            let batcher = v.get("batcher").map(|b| BatcherSnapshot {
+                requests: u64_or(b, "requests", 0),
+                batches: u64_or(b, "batches", 0),
+                max_batch: u64_or(b, "max_batch", 0),
+            });
+            Ok(JobResponse::Stats(ServiceStats {
+                requests: u64_or(&v, "requests", 0),
+                errors: u64_or(&v, "errors", 0),
+                plans: u64_or(&v, "plans", 0),
+                simulates: u64_or(&v, "simulates", 0),
+                best_periods: u64_or(&v, "best_periods", 0),
+                sweeps: u64_or(&v, "sweeps", 0),
+                lat_p50_s: v.num_or("lat_p50_s", 0.0),
+                lat_p95_s: v.num_or("lat_p95_s", 0.0),
+                lat_p99_s: v.num_or("lat_p99_s", 0.0),
+                lat_n: u64_or(&v, "lat_n", 0),
+                batcher,
+            }))
+        }
+        Some(other) => Err(ApiError::bad_request(format!("unknown job kind '{other}'"))),
+        None => Err(ApiError::bad_request("response missing 'job' (v1 server?)")),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scenario <-> JSON
+// ---------------------------------------------------------------------------
+
+/// Encode a scenario fully and explicitly — decode of this object is
+/// the identity (pinned in the round-trip tests). Seeds above 2^53 lose
+/// precision in JSON's number model; the practical seed space is far
+/// below that.
+pub fn scenario_to_json(s: &Scenario) -> Json {
+    let mut fields: Vec<(&str, Json)> = vec![
+        ("n_procs", Json::Num(s.platform.n_procs as f64)),
+        ("mu_ind", Json::Num(s.platform.mu_ind)),
+        ("c", Json::Num(s.platform.c)),
+        ("d", Json::Num(s.platform.d)),
+        ("r", Json::Num(s.platform.r)),
+        ("recall", Json::Num(s.predictor.recall)),
+        ("precision", Json::Num(s.predictor.precision)),
+        ("window", Json::Num(s.predictor.window)),
+        ("ef", Json::Num(s.predictor.ef)),
+        ("alpha", Json::Num(s.alpha)),
+        ("work", Json::Num(s.work)),
+        ("fault_dist", Json::Str(s.fault_dist.to_string())),
+        ("migration", Json::Num(s.migration)),
+        ("seed", Json::Num(s.seed as f64)),
+    ];
+    if let Some(d) = &s.false_pred_dist {
+        fields.push(("false_pred_dist", Json::Str(d.to_string())));
+    }
+    Json::obj(fields)
+}
+
+/// Decode a scenario object. Missing fields inherit the §5 paper preset
+/// for the given `n_procs` (mirroring the TOML loader); the result is
+/// validated before it crosses into the typed world.
+pub fn scenario_from_json(v: &Json) -> Result<Scenario, ApiError> {
+    if !matches!(v, Json::Obj(_)) {
+        return Err(ApiError::bad_request("'scenario' must be a JSON object"));
+    }
+    let n_procs = u64_or(v, "n_procs", 1 << 16);
+    let window = v.num_or("window", 0.0);
+    let mut pb = Predictor::builder()
+        .recall(v.num_or("recall", 0.0))
+        .precision(v.num_or("precision", 1.0))
+        .window(window);
+    if let Some(ef) = v.get("ef").and_then(Json::as_f64) {
+        pb = pb.ef(ef);
+    }
+    let predictor = pb.build().map_err(ApiError::from_invalid)?;
+    let mut s = Scenario::paper(n_procs.max(1), predictor);
+    s.platform.n_procs = n_procs; // n_procs = 0 caught by validate below
+    if let Some(x) = v.get("mu_ind").and_then(Json::as_f64) {
+        s.platform.mu_ind = x;
+    } else if let Some(x) = v.get("mu").and_then(Json::as_f64) {
+        // Direct platform-MTBF override, v1-style.
+        s.platform.mu_ind = x * n_procs as f64;
+    }
+    if let Some(x) = v.get("c").and_then(Json::as_f64) {
+        s.platform.c = x;
+    }
+    if let Some(x) = v.get("d").and_then(Json::as_f64) {
+        s.platform.d = x;
+    }
+    if let Some(x) = v.get("r").and_then(Json::as_f64) {
+        s.platform.r = x;
+    }
+    if let Some(x) = v.get("alpha").and_then(Json::as_f64) {
+        s.alpha = x;
+    }
+    if let Some(x) = v.get("work").and_then(Json::as_f64) {
+        s.work = x;
+    }
+    if let Some(x) = v.get("migration").and_then(Json::as_f64) {
+        s.migration = x;
+    }
+    if let Some(x) = v.get("seed").and_then(Json::as_f64) {
+        s.seed = x as u64;
+    }
+    if let Some(x) = v.get("fault_dist").and_then(Json::as_str) {
+        s.fault_dist = x.parse::<DistSpec>().map_err(ApiError::from_invalid)?;
+    }
+    match v.get("false_pred_dist").and_then(Json::as_str) {
+        Some("") | None => {}
+        Some(x) => {
+            s.false_pred_dist = Some(x.parse::<DistSpec>().map_err(ApiError::from_invalid)?)
+        }
+    }
+    s.validate().map_err(ApiError::from_invalid)?;
+    Ok(s)
+}
+
+// ---------------------------------------------------------------------------
+// Small field helpers
+// ---------------------------------------------------------------------------
+
+fn require<'a>(v: &'a Json, key: &str) -> Result<&'a Json, ApiError> {
+    v.get(key).ok_or_else(|| ApiError::bad_request(format!("missing '{key}'")))
+}
+
+fn capping_from_json(v: &Json) -> Capping {
+    if v.get("capped").and_then(Json::as_bool).unwrap_or(false) {
+        Capping::Capped
+    } else {
+        Capping::Uncapped
+    }
+}
+
+fn strategy_from_json(v: &Json) -> Result<StrategyKind, ApiError> {
+    v.get("strategy")
+        .and_then(Json::as_str)
+        .ok_or_else(|| ApiError::bad_request("missing 'strategy'"))?
+        .parse::<StrategyKind>()
+        .map_err(ApiError::from_invalid)
+}
+
+fn u64_or(v: &Json, key: &str, default: u64) -> u64 {
+    v.num_or(key, default as f64) as u64
+}
+
+fn opt_u64(v: &Json, key: &str) -> Option<u64> {
+    v.get(key).and_then(Json::as_f64).map(|x| x as u64)
+}

@@ -148,10 +148,11 @@ pub fn scenario_from_table(t: &Table) -> anyhow::Result<crate::config::Scenario>
         s.alpha = x;
     }
     if let Some(x) = t.str("faults.dist") {
-        s.fault_dist = x.to_string();
+        s.fault_dist = x.parse().map_err(|e| anyhow::anyhow!("faults.dist: {e}"))?;
     }
     if let Some(x) = t.str("faults.false_pred_dist") {
-        s.false_pred_dist = x.to_string();
+        s.false_pred_dist =
+            Some(x.parse().map_err(|e| anyhow::anyhow!("faults.false_pred_dist: {e}"))?);
     }
     if let Some(x) = t.num("job.migration") {
         s.migration = x;
@@ -205,7 +206,7 @@ work = 1.0e6
         assert_eq!(s.platform.n_procs, 65536);
         assert_eq!(s.predictor.window, 300.0);
         assert_eq!(s.predictor.ef, 150.0);
-        assert_eq!(s.fault_dist, "weibull:0.7");
+        assert_eq!(s.fault_dist, crate::dist::DistSpec::weibull(0.7));
         assert_eq!(s.seed, 7);
     }
 

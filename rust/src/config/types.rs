@@ -1,6 +1,14 @@
 //! Configuration types shared by the planner, the simulator and the
 //! experiment harness.
+//!
+//! [`Scenario`] and [`Predictor`] are fully typed — the failure law is
+//! a [`DistSpec`], not a string — and both come with builders
+//! ([`Scenario::builder`], [`Predictor::builder`]) so callers outside
+//! the paper presets can assemble valid configurations without
+//! touching raw struct fields. Strings enter only at the wire edge
+//! (`api::wire`, the TOML loader, CLI flags).
 
+use crate::dist::DistSpec;
 use crate::util::units::{MIN, YEAR};
 
 /// Fault-tolerance characteristics of the platform (§2.1).
@@ -59,6 +67,11 @@ pub struct Predictor {
 }
 
 impl Predictor {
+    /// Step-by-step construction; [`PredictorBuilder::build`] validates.
+    pub fn builder() -> PredictorBuilder {
+        PredictorBuilder { p: Predictor::none(), ef_explicit: false }
+    }
+
     /// Exact-date predictor (§3): I = 0.
     pub fn exact(recall: f64, precision: f64) -> Self {
         Predictor { recall, precision, window: 0.0, ef: 0.0 }
@@ -116,8 +129,50 @@ impl Predictor {
     }
 }
 
-/// A complete experiment scenario.
+/// Incremental [`Predictor`] construction: recall/precision default to
+/// the no-predictor degenerate case (r = 0, p = 1); setting a window
+/// re-derives `ef = I/2` (the paper's uniform in-window law) unless an
+/// explicit `ef` was given.
 #[derive(Debug, Clone)]
+pub struct PredictorBuilder {
+    p: Predictor,
+    ef_explicit: bool,
+}
+
+impl PredictorBuilder {
+    pub fn recall(mut self, r: f64) -> Self {
+        self.p.recall = r;
+        self
+    }
+
+    pub fn precision(mut self, p: f64) -> Self {
+        self.p.precision = p;
+        self
+    }
+
+    pub fn window(mut self, i: f64) -> Self {
+        self.p.window = i;
+        if !self.ef_explicit {
+            self.p.ef = i / 2.0;
+        }
+        self
+    }
+
+    /// Mean in-window fault position; overrides the `window/2` default.
+    pub fn ef(mut self, ef: f64) -> Self {
+        self.p.ef = ef;
+        self.ef_explicit = true;
+        self
+    }
+
+    pub fn build(self) -> anyhow::Result<Predictor> {
+        self.p.validate()?;
+        Ok(self.p)
+    }
+}
+
+/// A complete experiment scenario.
+#[derive(Debug, Clone, PartialEq)]
 pub struct Scenario {
     pub platform: Platform,
     pub predictor: Predictor,
@@ -125,10 +180,11 @@ pub struct Scenario {
     pub alpha: f64,
     /// Total useful work of the job (s).
     pub work: f64,
-    /// Failure inter-arrival law: "exp" | "weibull:K" | "uniform".
-    pub fault_dist: String,
-    /// False-prediction inter-arrival law ("" = same as fault_dist).
-    pub false_pred_dist: String,
+    /// Failure inter-arrival law.
+    pub fault_dist: DistSpec,
+    /// False-prediction inter-arrival law (`None` = same as
+    /// `fault_dist`).
+    pub false_pred_dist: Option<DistSpec>,
     /// Migration duration M for the §3.4 strategy (s).
     pub migration: f64,
     /// Master seed.
@@ -136,6 +192,12 @@ pub struct Scenario {
 }
 
 impl Scenario {
+    /// Step-by-step construction starting from the §5 paper preset;
+    /// [`ScenarioBuilder::build`] validates the result.
+    pub fn builder() -> ScenarioBuilder {
+        ScenarioBuilder { s: Scenario::paper(1 << 16, Predictor::none()), mu: None }
+    }
+
     pub fn paper(n_procs: u64, predictor: Predictor) -> Self {
         Scenario {
             platform: Platform::paper(n_procs),
@@ -148,8 +210,8 @@ impl Scenario {
             // W_seq calibrated so Young at N = 2^16 under Weibull
             // k = 0.7 lands at the paper's ~81 days (EXPERIMENTS.md).
             work: 3.893e11 / n_procs as f64,
-            fault_dist: "weibull:0.7".into(),
-            false_pred_dist: String::new(),
+            fault_dist: DistSpec::weibull(0.7),
+            false_pred_dist: None,
             migration: 300.0,
             seed: 0x5EED,
         }
@@ -161,14 +223,11 @@ impl Scenario {
         self.predictor.validate()?;
         anyhow::ensure!(self.alpha > 0.0 && self.alpha <= 1.0, "alpha in (0,1]");
         anyhow::ensure!(self.work > 0.0, "work must be positive");
-        // Single source of truth for spec syntax: `dist::parse` — its
-        // error already names the offending spec; the context pins down
-        // which field carried it.
-        crate::dist::parse(&self.fault_dist)
-            .with_context(|| format!("scenario fault_dist '{}'", self.fault_dist))?;
-        if !self.false_pred_dist.is_empty() {
-            crate::dist::parse(&self.false_pred_dist)
-                .with_context(|| format!("scenario false_pred_dist '{}'", self.false_pred_dist))?;
+        // The spec type guarantees the law's *identity*; its parameters
+        // (a directly-constructed Weibull shape) still need checking.
+        self.fault_dist.validate().context("scenario fault_dist")?;
+        if let Some(d) = &self.false_pred_dist {
+            d.validate().context("scenario false_pred_dist")?;
         }
         Ok(())
     }
@@ -178,8 +237,99 @@ impl Scenario {
     }
 
     /// Effective false-prediction distribution spec.
-    pub fn false_dist_spec(&self) -> &str {
-        if self.false_pred_dist.is_empty() { &self.fault_dist } else { &self.false_pred_dist }
+    pub fn false_dist_spec(&self) -> DistSpec {
+        self.false_pred_dist.unwrap_or(self.fault_dist)
+    }
+}
+
+/// Incremental [`Scenario`] construction. Starts from the §5 paper
+/// preset (N = 2^16, no predictor, Weibull k = 0.7 faults) and
+/// overrides field by field; `build` validates. A direct platform-MTBF
+/// override ([`ScenarioBuilder::mu`]) is resolved against the final
+/// processor count, so call order does not matter.
+#[derive(Debug, Clone)]
+pub struct ScenarioBuilder {
+    s: Scenario,
+    mu: Option<f64>,
+}
+
+impl ScenarioBuilder {
+    pub fn platform(mut self, p: Platform) -> Self {
+        self.s.platform = p;
+        self
+    }
+
+    /// Processor count; the platform MTBF is mu_ind / N.
+    pub fn n_procs(mut self, n: u64) -> Self {
+        self.s.platform.n_procs = n;
+        self
+    }
+
+    /// Platform MTBF mu in *seconds*, overriding `mu_ind / N`.
+    pub fn mu(mut self, mu: f64) -> Self {
+        self.mu = Some(mu);
+        self
+    }
+
+    /// Checkpoint duration C (s).
+    pub fn checkpoint(mut self, c: f64) -> Self {
+        self.s.platform.c = c;
+        self
+    }
+
+    /// Downtime D (s).
+    pub fn downtime(mut self, d: f64) -> Self {
+        self.s.platform.d = d;
+        self
+    }
+
+    /// Recovery duration R (s).
+    pub fn recovery(mut self, r: f64) -> Self {
+        self.s.platform.r = r;
+        self
+    }
+
+    pub fn predictor(mut self, p: Predictor) -> Self {
+        self.s.predictor = p;
+        self
+    }
+
+    pub fn alpha(mut self, alpha: f64) -> Self {
+        self.s.alpha = alpha;
+        self
+    }
+
+    pub fn work(mut self, work: f64) -> Self {
+        self.s.work = work;
+        self
+    }
+
+    pub fn fault_dist(mut self, d: DistSpec) -> Self {
+        self.s.fault_dist = d;
+        self
+    }
+
+    pub fn false_pred_dist(mut self, d: Option<DistSpec>) -> Self {
+        self.s.false_pred_dist = d;
+        self
+    }
+
+    pub fn migration(mut self, m: f64) -> Self {
+        self.s.migration = m;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.s.seed = seed;
+        self
+    }
+
+    pub fn build(mut self) -> anyhow::Result<Scenario> {
+        if let Some(mu) = self.mu {
+            self.s.platform.mu_ind = mu * self.s.platform.n_procs as f64;
+        }
+        self.s.validate()?;
+        Ok(self.s)
     }
 }
 
@@ -235,21 +385,82 @@ mod tests {
         s.alpha = 0.0;
         assert!(s.validate().is_err());
         s.alpha = 0.27;
-        s.fault_dist = "bogus".into();
+        s.fault_dist = DistSpec::weibull(-1.0);
         let err = s.validate().unwrap_err();
         assert!(
-            format!("{err:#}").contains("bogus"),
+            format!("{err:#}").contains("weibull:-1"),
             "validation error must name the offending spec: {err:#}"
         );
-        s.fault_dist = "exp".into();
-        s.false_pred_dist = "weibull:nope".into();
-        let err = s.validate().unwrap_err();
-        assert!(format!("{err:#}").contains("weibull:nope"), "{err:#}");
-        s.false_pred_dist.clear();
+        s.fault_dist = DistSpec::Exp;
+        s.false_pred_dist = Some(DistSpec::weibull(f64::NAN));
+        assert!(s.validate().is_err());
+        s.false_pred_dist = None;
+        s.validate().unwrap();
 
         let bad = Predictor { recall: 0.5, precision: 0.0, window: 0.0, ef: 0.0 };
         assert!(bad.validate().is_err());
         let bad_ef = Predictor { recall: 0.5, precision: 0.5, window: 10.0, ef: 20.0 };
         assert!(bad_ef.validate().is_err());
+    }
+
+    #[test]
+    fn no_predictor_degenerate_case_is_valid() {
+        // precision = 0 is fine when the predictor never fires — the
+        // paper's no-predictor case. The wire layers must accept it too
+        // (pinned again in the protocol tests).
+        let p = Predictor { recall: 0.0, precision: 0.0, window: 0.0, ef: 0.0 };
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn scenario_builder_round_trip() {
+        let s = Scenario::builder()
+            .n_procs(1 << 18)
+            .checkpoint(300.0)
+            .predictor(Predictor::windowed(0.85, 0.82, 300.0))
+            .fault_dist(DistSpec::Exp)
+            .work(1.0e6)
+            .seed(42)
+            .build()
+            .unwrap();
+        assert_eq!(s.platform.n_procs, 1 << 18);
+        assert_eq!(s.platform.c, 300.0);
+        assert_eq!(s.fault_dist, DistSpec::Exp);
+        assert_eq!(s.seed, 42);
+        // Untouched fields keep the paper preset.
+        assert_eq!(s.alpha, 0.27);
+    }
+
+    #[test]
+    fn scenario_builder_mu_override_is_order_independent() {
+        let a = Scenario::builder().mu(60_000.0).n_procs(4).build().unwrap();
+        let b = Scenario::builder().n_procs(4).mu(60_000.0).build().unwrap();
+        assert!(approx_eq(a.mu(), 60_000.0, 1e-9));
+        assert!(approx_eq(b.mu(), 60_000.0, 1e-9));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn scenario_builder_rejects_invalid() {
+        assert!(Scenario::builder().work(-1.0).build().is_err());
+        assert!(Scenario::builder().fault_dist(DistSpec::weibull(0.0)).build().is_err());
+    }
+
+    #[test]
+    fn predictor_builder_defaults_and_ef() {
+        let p = Predictor::builder().recall(0.85).precision(0.82).window(300.0).build().unwrap();
+        assert_eq!(p, Predictor::windowed(0.85, 0.82, 300.0));
+        let p2 = Predictor::builder()
+            .recall(0.7)
+            .precision(0.4)
+            .ef(100.0)
+            .window(300.0)
+            .build()
+            .unwrap();
+        assert_eq!(p2.ef, 100.0, "explicit ef survives a later window()");
+        // Defaults are the degenerate no-predictor case.
+        assert_eq!(Predictor::builder().build().unwrap(), Predictor::none());
+        // Invalid combinations are rejected at build.
+        assert!(Predictor::builder().recall(0.5).precision(0.0).build().is_err());
     }
 }

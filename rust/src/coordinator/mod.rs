@@ -1,6 +1,7 @@
 //! The L3 coordinator: leader/worker experiment orchestration, dynamic
 //! batching of planning requests onto the PJRT executable, and the
-//! TCP/JSONL planner service.
+//! TCP/JSONL job service (protocol v2 via [`crate::api`]; the v1
+//! planner dialect lives on in [`protocol`] behind an adapter).
 
 mod batcher;
 mod metrics;

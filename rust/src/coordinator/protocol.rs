@@ -1,4 +1,10 @@
-//! Planner-service wire protocol: one JSON object per line.
+//! The **v1** planner-service wire dialect: one flat JSON object per
+//! line, planning only. Kept alive behind the protocol-v2 adapter in
+//! [`crate::api::wire`] — a request without a `"v"` field decodes here,
+//! and is answered in this module's response shape, so pre-v2 clients
+//! keep working unchanged (pinned by the back-compat tests in
+//! `tests/test_api.rs`). New integrations should speak v2; see
+//! `docs/PROTOCOL.md`.
 //!
 //! Request:
 //! ```json
@@ -16,6 +22,7 @@
 //!  "strategies": [{"name": "Young", "waste": ..., "period": ...}, ...]}
 //! ```
 
+use crate::config::Predictor;
 use crate::model::{Params, StrategyKind};
 use crate::runtime::PlanOutput;
 use crate::util::json::{parse, Json};
@@ -49,8 +56,12 @@ pub fn parse_request(line: &str) -> anyhow::Result<Request> {
                 alpha: v.num_or("alpha", 0.27),
                 m: v.num_or("migration", 300.0),
             };
-            anyhow::ensure!((0.0..=1.0).contains(&p.recall), "recall in [0,1]");
-            anyhow::ensure!(p.precision > 0.0 && p.precision <= 1.0, "precision in (0,1]");
+            // Predictor validation is delegated to the typed layer so
+            // the wire cannot drift from `Predictor::validate` — in
+            // particular the degenerate no-predictor case
+            // (recall = 0, precision = 0) is legal here too.
+            Predictor { recall: p.recall, precision: p.precision, window: p.i, ef: p.ef }
+                .validate()?;
             Ok(Request::Plan(p))
         }
         other => anyhow::bail!("unknown op '{other}'"),
@@ -114,8 +125,23 @@ mod tests {
         assert!(parse_request(r#"{"op": "plan"}"#).is_err()); // no mu
         assert!(parse_request(r#"{"mu": -5}"#).is_err());
         assert!(parse_request(r#"{"mu": 100, "recall": 2.0}"#).is_err());
+        assert!(parse_request(r#"{"mu": 100, "recall": 0.5, "precision": 0}"#).is_err());
         assert!(parse_request("not json").is_err());
         assert!(parse_request(r#"{"op": "destroy"}"#).is_err());
+    }
+
+    #[test]
+    fn degenerate_no_predictor_case_is_accepted() {
+        // recall = 0, precision = 0 is the paper's "no predictor at
+        // all" point; the wire must agree with `Predictor::validate`.
+        let r = parse_request(r#"{"mu": 60000, "recall": 0, "precision": 0}"#).unwrap();
+        match r {
+            Request::Plan(p) => {
+                assert_eq!(p.recall, 0.0);
+                assert_eq!(p.precision, 0.0);
+            }
+            _ => panic!(),
+        }
     }
 
     #[test]

@@ -1,14 +1,16 @@
-//! The planner service: a TCP listener speaking the JSONL protocol,
-//! one thread per connection, all requests funneled through the
-//! dynamic [`Batcher`].
+//! The job service: a TCP listener speaking the JSONL job protocol
+//! (v2, with the v1 planner dialect adapted transparently), one thread
+//! per connection, every request dispatched through a shared
+//! [`Executor`] — the same entry points the CLI and the experiment
+//! harness use in-process.
 
 use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
-use super::protocol::{error_response, parse_request, plan_response, Request};
-use super::Batcher;
+use crate::api::{wire, Executor, JobResponse};
 use crate::util::json::Json;
 
 #[derive(Debug, Clone)]
@@ -25,7 +27,7 @@ impl Default for ServiceConfig {
 
 /// Running service handle: local address + shutdown flag.
 pub struct ServiceHandle {
-    pub addr: std::net::SocketAddr,
+    pub addr: SocketAddr,
     stop: Arc<AtomicBool>,
     join: Option<std::thread::JoinHandle<()>>,
 }
@@ -33,17 +35,26 @@ pub struct ServiceHandle {
 impl ServiceHandle {
     pub fn stop(mut self) {
         self.stop.store(true, Ordering::SeqCst);
-        // Nudge the accept loop with a dummy connection.
-        let _ = TcpStream::connect(self.addr);
+        // Nudge the accept loop with a dummy connection. The bound
+        // address may be unconnectable (0.0.0.0 / ::), so aim the nudge
+        // at the loopback of the same family, same port.
+        let mut nudge = self.addr;
+        if nudge.ip().is_unspecified() {
+            nudge.set_ip(match nudge.ip() {
+                IpAddr::V4(_) => IpAddr::V4(Ipv4Addr::LOCALHOST),
+                IpAddr::V6(_) => IpAddr::V6(Ipv6Addr::LOCALHOST),
+            });
+        }
+        let _ = TcpStream::connect_timeout(&nudge, Duration::from_millis(250));
         if let Some(j) = self.join.take() {
             let _ = j.join();
         }
     }
 }
 
-/// Start serving in background threads. The batcher (and its PJRT
-/// planner) is shared across connections.
-pub fn serve(batcher: Batcher, cfg: ServiceConfig) -> anyhow::Result<ServiceHandle> {
+/// Start serving in background threads. The executor (its batcher
+/// handle and metrics) is shared across connections.
+pub fn serve(executor: Executor, cfg: ServiceConfig) -> anyhow::Result<ServiceHandle> {
     let listener = TcpListener::bind(&cfg.addr)?;
     let addr = listener.local_addr()?;
     let stop = Arc::new(AtomicBool::new(false));
@@ -55,10 +66,10 @@ pub fn serve(batcher: Batcher, cfg: ServiceConfig) -> anyhow::Result<ServiceHand
             }
             match conn {
                 Ok(stream) => {
-                    let batcher = batcher.clone();
+                    let executor = executor.clone();
                     let _ = std::thread::Builder::new()
                         .name("ckptfp-conn".into())
-                        .spawn(move || handle_connection(stream, batcher));
+                        .spawn(move || handle_connection(stream, executor));
                 }
                 Err(_) => break,
             }
@@ -67,8 +78,7 @@ pub fn serve(batcher: Batcher, cfg: ServiceConfig) -> anyhow::Result<ServiceHand
     Ok(ServiceHandle { addr, stop, join: Some(join) })
 }
 
-fn handle_connection(stream: TcpStream, batcher: Batcher) {
-    let peer = stream.peer_addr().ok();
+fn handle_connection(stream: TcpStream, executor: Executor) {
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
         Err(_) => return,
@@ -82,28 +92,18 @@ fn handle_connection(stream: TcpStream, batcher: Batcher) {
         if line.trim().is_empty() {
             continue;
         }
-        let response = match parse_request(&line) {
-            Err(e) => error_response(&format!("{e:#}")),
-            Ok(Request::Ping) => Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))]).to_string(),
-            Ok(Request::Stats) => {
-                let stats = batcher.stats();
-                let (p50, p95, p99, n) = batcher.metrics().latency_quantiles();
-                Json::obj(vec![
-                    ("ok", Json::Bool(true)),
-                    ("requests", Json::Num(stats.requests as f64)),
-                    ("batches", Json::Num(stats.batches as f64)),
-                    ("max_batch", Json::Num(stats.max_batch_seen as f64)),
-                    ("lat_p50_s", Json::Num(p50)),
-                    ("lat_p95_s", Json::Num(p95)),
-                    ("lat_p99_s", Json::Num(p99)),
-                    ("lat_n", Json::Num(n as f64)),
-                ])
-                .to_string()
+        let response = match wire::decode_request(&line) {
+            Err(e) => {
+                executor.note_rejected();
+                // Answer in the dialect the line arrived in: a v1 line
+                // that failed validation still gets the legacy error
+                // shape (no "v" marker). Unparseable lines default to
+                // the v2 shape — both dialects read ok:false + error.
+                wire::encode_response(&JobResponse::Error(e), wire::line_is_legacy(&line))
             }
-            Ok(Request::Plan(params)) => match batcher.plan(params) {
-                Ok(out) => plan_response(&out),
-                Err(e) => error_response(&format!("{e:#}")),
-            },
+            Ok(decoded) => {
+                wire::encode_response(&executor.execute(&decoded.request), decoded.legacy)
+            }
         };
         if writer.write_all(response.as_bytes()).is_err()
             || writer.write_all(b"\n").is_err()
@@ -112,10 +112,12 @@ fn handle_connection(stream: TcpStream, batcher: Batcher) {
             break;
         }
     }
-    let _ = peer; // quiet unused in non-logging builds
 }
 
-/// Minimal blocking client for examples and tests.
+/// Minimal blocking *raw-line* client, for tests and tools that need
+/// byte-level control over what goes on the wire (e.g. the v1
+/// back-compat pins). Typed callers should use
+/// [`crate::api::ServiceClient`] instead.
 pub struct PlannerClient {
     reader: BufReader<TcpStream>,
     writer: TcpStream,

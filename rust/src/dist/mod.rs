@@ -9,7 +9,10 @@
 //! exists only for the `prelude` API and generic user code; everything
 //! inside the engine stores `Dist` by value.
 //!
-//! Spec strings, as used by [`crate::config::Scenario`]:
+//! [`DistSpec`] is the *typed* failure-law specification carried by
+//! [`crate::config::Scenario`]: the three laws as data, with
+//! `FromStr`/`Display` doing the string conversion exactly once at the
+//! wire edge (JSONL protocol, TOML files, CLI flags). Spec strings:
 //!
 //! * `"exp"` (or `"exponential"`) — Exponential;
 //! * `"weibull:K"` — Weibull with shape `K` (e.g. `weibull:0.7`);
@@ -67,28 +70,95 @@ impl Dist {
     }
 }
 
-/// Parse a spec string into a unit-mean law. The error always names the
-/// offending spec so `Scenario::validate` failures are actionable.
+/// Typed failure-law specification — the form a law takes *outside*
+/// the sampling hot path. A [`crate::config::Scenario`] stores one of
+/// these; strings appear only at the wire edge, through the `FromStr`
+/// and `Display` impls (which round-trip: `spec.to_string().parse()`
+/// gives back `spec` for every valid value).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DistSpec {
+    /// Exponential (memoryless) inter-arrivals — spec string `"exp"`.
+    Exp,
+    /// Weibull inter-arrivals with the given shape — `"weibull:K"`.
+    Weibull { shape: f64 },
+    /// Uniform on `[0, 2·mean]` — `"uniform"`.
+    Uniform,
+}
+
+impl DistSpec {
+    /// Weibull spec with shape `k` (validated later, see
+    /// [`DistSpec::validate`]).
+    pub fn weibull(shape: f64) -> DistSpec {
+        DistSpec::Weibull { shape }
+    }
+
+    /// Reject parameterizations the sampler cannot honor. `FromStr`
+    /// already enforces this; direct construction goes through here via
+    /// `Scenario::validate`.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if let DistSpec::Weibull { shape } = self {
+            anyhow::ensure!(
+                shape.is_finite() && *shape > 0.0,
+                "Weibull shape must be finite and positive in distribution spec '{}'",
+                self
+            );
+        }
+        Ok(())
+    }
+
+    /// Materialize the unit-mean sampling law. Fails (naming the spec)
+    /// on invalid parameterizations instead of sampling NaNs.
+    pub fn dist(&self) -> anyhow::Result<Dist> {
+        self.validate()?;
+        Ok(match *self {
+            DistSpec::Exp => Dist::Exponential { mean: 1.0 },
+            DistSpec::Weibull { shape } => Dist::Weibull { shape, scale: 1.0 }.with_mean(1.0),
+            DistSpec::Uniform => Dist::Uniform { lo: 0.0, hi: 2.0 },
+        })
+    }
+}
+
+impl std::fmt::Display for DistSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DistSpec::Exp => f.write_str("exp"),
+            DistSpec::Weibull { shape } => write!(f, "weibull:{shape}"),
+            DistSpec::Uniform => f.write_str("uniform"),
+        }
+    }
+}
+
+impl std::str::FromStr for DistSpec {
+    type Err = anyhow::Error;
+
+    fn from_str(spec: &str) -> anyhow::Result<DistSpec> {
+        let spec_trim = spec.trim();
+        match spec_trim {
+            "exp" | "exponential" => return Ok(DistSpec::Exp),
+            "uniform" => return Ok(DistSpec::Uniform),
+            _ => {}
+        }
+        if let Some(shape_str) = spec_trim.strip_prefix("weibull:") {
+            let shape: f64 = shape_str.parse().map_err(|_| {
+                anyhow::anyhow!("bad Weibull shape in distribution spec '{spec}' (expected weibull:<shape>, e.g. weibull:0.7)")
+            })?;
+            anyhow::ensure!(
+                shape.is_finite() && shape > 0.0,
+                "Weibull shape must be finite and positive in distribution spec '{spec}'"
+            );
+            return Ok(DistSpec::Weibull { shape });
+        }
+        anyhow::bail!(
+            "unrecognized distribution spec '{spec}' (expected \"exp\", \"weibull:<shape>\" or \"uniform\")"
+        )
+    }
+}
+
+/// Parse a spec string straight into a unit-mean law — the one-step
+/// wire-edge helper. The error always names the offending spec so
+/// validation failures are actionable.
 pub fn parse(spec: &str) -> anyhow::Result<Dist> {
-    let spec_trim = spec.trim();
-    match spec_trim {
-        "exp" | "exponential" => return Ok(Dist::Exponential { mean: 1.0 }),
-        "uniform" => return Ok(Dist::Uniform { lo: 0.0, hi: 2.0 }),
-        _ => {}
-    }
-    if let Some(shape_str) = spec_trim.strip_prefix("weibull:") {
-        let shape: f64 = shape_str.parse().map_err(|_| {
-            anyhow::anyhow!("bad Weibull shape in distribution spec '{spec}' (expected weibull:<shape>, e.g. weibull:0.7)")
-        })?;
-        anyhow::ensure!(
-            shape.is_finite() && shape > 0.0,
-            "Weibull shape must be finite and positive in distribution spec '{spec}'"
-        );
-        return Ok(Dist::Weibull { shape, scale: 1.0 }.with_mean(1.0));
-    }
-    anyhow::bail!(
-        "unrecognized distribution spec '{spec}' (expected \"exp\", \"weibull:<shape>\" or \"uniform\")"
-    )
+    spec.parse::<DistSpec>()?.dist()
 }
 
 /// Γ(x) for x > 0 — Lanczos approximation (g = 7, n = 9), accurate to
@@ -262,6 +332,33 @@ mod tests {
         for spec in ["exp", "uniform", "weibull:0.5", "weibull:0.7", "weibull:1.0", "weibull:2.0"] {
             let d = parse(spec).unwrap();
             assert!(approx_eq(d.mean(), 1.0, 1e-9), "{spec}: mean {}", d.mean());
+        }
+    }
+
+    #[test]
+    fn spec_round_trips_through_display() {
+        for spec in [DistSpec::Exp, DistSpec::weibull(0.7), DistSpec::weibull(2.0), DistSpec::Uniform] {
+            let s = spec.to_string();
+            assert_eq!(s.parse::<DistSpec>().unwrap(), spec, "round-trip of '{s}'");
+        }
+        assert_eq!("exponential".parse::<DistSpec>().unwrap(), DistSpec::Exp);
+    }
+
+    #[test]
+    fn spec_validate_catches_bad_shapes() {
+        assert!(DistSpec::weibull(0.0).validate().is_err());
+        assert!(DistSpec::weibull(f64::NAN).validate().is_err());
+        assert!(DistSpec::weibull(-1.0).dist().is_err());
+        let err = DistSpec::weibull(-1.0).validate().unwrap_err().to_string();
+        assert!(err.contains("weibull:-1"), "error must name the spec: {err}");
+        DistSpec::Exp.validate().unwrap();
+        DistSpec::Uniform.validate().unwrap();
+    }
+
+    #[test]
+    fn spec_dist_matches_parse() {
+        for s in ["exp", "uniform", "weibull:0.7"] {
+            assert_eq!(s.parse::<DistSpec>().unwrap().dist().unwrap(), parse(s).unwrap());
         }
     }
 

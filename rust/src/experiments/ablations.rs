@@ -16,6 +16,7 @@
 
 use super::{replicate_stat, scenario_for, sim_waste, ExpOptions, ExperimentResult};
 use crate::config::{paper_proc_counts, predictor_yu, Predictor, Scenario};
+use crate::dist::DistSpec;
 use crate::model::{Capping, Params, StrategyKind};
 use crate::report::FigureData;
 use crate::sim::{Outcome, SimSession};
@@ -31,9 +32,9 @@ pub fn ablation_q(opts: &ExpOptions) -> anyhow::Result<ExperimentResult> {
             "q",
             "waste",
         );
-        for dist in ["exp", "weibull:0.7"] {
+        for dist in [DistSpec::Exp, DistSpec::weibull(0.7)] {
             let mut s = Scenario::paper(n, Predictor::exact(0.85, 0.82));
-            s.fault_dist = dist.into();
+            s.fault_dist = dist;
             let p = Params::from_scenario(&s);
             for q in qs {
                 let denom = 1.0 - p.recall * q;
@@ -45,7 +46,7 @@ pub fn ablation_q(opts: &ExpOptions) -> anyhow::Result<ExperimentResult> {
                     proactive: ProactiveMode::CkptBefore,
                 };
                 let w = replicate_stat(&s, &spec, opts.reps, opts.workers, Outcome::waste);
-                fig.series_mut(dist).push(q, w.mean());
+                fig.series_mut(&dist.to_string()).push(q, w.mean());
             }
         }
         result.figures.push(fig);
@@ -56,11 +57,15 @@ pub fn ablation_q(opts: &ExpOptions) -> anyhow::Result<ExperimentResult> {
 /// Young vs Daly: T = sqrt(2 mu C) vs sqrt(2 (mu + R) C).
 pub fn ablation_daly(opts: &ExpOptions) -> anyhow::Result<ExperimentResult> {
     let mut result = ExperimentResult::default();
-    for dist in ["exp", "weibull:0.7"] {
-        let mut fig = FigureData::new(format!("abl-daly-{}", dist.replace(':', "")), "N", "waste");
+    for dist in [DistSpec::Exp, DistSpec::weibull(0.7)] {
+        let mut fig = FigureData::new(
+            format!("abl-daly-{}", dist.to_string().replace(':', "")),
+            "N",
+            "waste",
+        );
         for n in paper_proc_counts() {
             let mut s = Scenario::paper(n, Predictor::none());
-            s.fault_dist = dist.into();
+            s.fault_dist = dist;
             let young = spec_for(StrategyKind::Young, &s, Capping::Uncapped);
             let daly = daly_spec(&s);
             for spec in [&young, &daly] {
@@ -80,7 +85,7 @@ pub fn ablation_lead(opts: &ExpOptions) -> anyhow::Result<ExperimentResult> {
     let mut result = ExperimentResult::default();
     let n = 1u64 << 19;
     let mut s = Scenario::paper(n, Predictor::exact(0.85, 0.82));
-    s.fault_dist = "weibull:0.7".into();
+    s.fault_dist = DistSpec::weibull(0.7);
     let spec = spec_for(StrategyKind::ExactPrediction, &s, Capping::Uncapped);
     let young = spec_for(StrategyKind::Young, &s, Capping::Uncapped);
     let c = s.platform.c;
@@ -114,7 +119,7 @@ pub fn ablation_cap(opts: &ExpOptions) -> anyhow::Result<ExperimentResult> {
     let mut fig = FigureData::new("abl-cap", "N", "waste");
     for n in paper_proc_counts() {
         let mut s = Scenario::paper(n, predictor_yu(0.0));
-        s.fault_dist = "exp".into();
+        s.fault_dist = DistSpec::Exp;
         for capping in [Capping::Capped, Capping::Uncapped] {
             let sk = scenario_for(StrategyKind::ExactPrediction, &s);
             let spec = spec_for(StrategyKind::ExactPrediction, &sk, capping);

@@ -25,7 +25,7 @@ pub fn figure_params(id: &str) -> anyhow::Result<(f64, f64, bool)> {
 fn base_scenario(n: u64, precision: f64, recall: f64, i_win: f64, uniform_false: bool) -> Scenario {
     let mut s = Scenario::paper(n, Predictor::windowed(recall, precision, i_win));
     if uniform_false {
-        s.false_pred_dist = "uniform".into();
+        s.false_pred_dist = Some(crate::dist::DistSpec::Uniform);
     }
     s
 }
@@ -62,11 +62,11 @@ fn simulated_figure(
     recall: f64,
     i_win: f64,
     uniform_false: bool,
-    dist: &str,
+    dist: crate::dist::DistSpec,
     opts: &ExpOptions,
 ) -> FigureData {
     let mut fig = FigureData::new(
-        format!("{id}-I{i_win}-sim-{}", dist.replace(':', "")),
+        format!("{id}-I{i_win}-sim-{}", dist.to_string().replace(':', "")),
         "N",
         "waste",
     );
@@ -80,7 +80,7 @@ fn simulated_figure(
     for n in paper_proc_counts() {
         for kind in paper_heuristics(i_win, c) {
             let mut s = base_scenario(n, precision, recall, i_win, uniform_false);
-            s.fault_dist = dist.to_string();
+            s.fault_dist = dist;
             let sk = scenario_for(kind, &s);
             let spec = spec_for(kind, &sk, Capping::Uncapped);
             keys.push((n, kind));
@@ -112,7 +112,11 @@ pub fn figure_waste(id: &str, opts: &ExpOptions) -> anyhow::Result<ExperimentRes
     for i_win in [300.0, 3000.0] {
         result.figures.push(analytic_figure(id, precision, recall, i_win, Capping::Capped));
         result.figures.push(analytic_figure(id, precision, recall, i_win, Capping::Uncapped));
-        for dist in ["exp", "weibull:0.7", "weibull:0.5"] {
+        for dist in [
+            crate::dist::DistSpec::Exp,
+            crate::dist::DistSpec::weibull(0.7),
+            crate::dist::DistSpec::weibull(0.5),
+        ] {
             result.figures.push(simulated_figure(
                 id,
                 precision,

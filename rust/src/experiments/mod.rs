@@ -243,7 +243,7 @@ mod tests {
     #[test]
     fn waste_grid_matches_single_point_replication() {
         let mut s = Scenario::paper(1 << 16, Predictor::none());
-        s.fault_dist = "exp".into();
+        s.fault_dist = crate::dist::DistSpec::Exp;
         s.work = 2.0e5;
         let spec = spec_for(StrategyKind::Young, &s, Capping::Uncapped);
         let points = vec![(s.clone(), spec.clone()), (s.clone(), spec.clone())];

@@ -31,7 +31,7 @@ pub fn sweep_axis() -> Vec<f64> {
 
 pub fn figure_sweep(id: &str, opts: &ExpOptions) -> anyhow::Result<ExperimentResult> {
     let (k, sweep_precision) = sweep_params(id)?;
-    let dist = format!("weibull:{k}");
+    let dist = crate::dist::DistSpec::weibull(k);
     let fixed_values = [0.4, 0.8];
     let i_win = 300.0;
     let mut result = ExperimentResult::default();
@@ -45,7 +45,7 @@ pub fn figure_sweep(id: &str, opts: &ExpOptions) -> anyhow::Result<ExperimentRes
         // Young reference: independent of the predictor.
         {
             let mut s = Scenario::paper(n, Predictor::none());
-            s.fault_dist = dist.clone();
+            s.fault_dist = dist;
             let w = sim_waste(&s, StrategyKind::Young, opts).mean();
             for x in sweep_axis() {
                 fig.series_mut("Young").push(x, w);
@@ -66,7 +66,7 @@ pub fn figure_sweep(id: &str, opts: &ExpOptions) -> anyhow::Result<ExperimentRes
                 let (recall, precision) =
                     if sweep_precision { (fixed, x) } else { (x, fixed) };
                 let mut s = Scenario::paper(n, Predictor::windowed(recall, precision, i_win));
-                s.fault_dist = dist.clone();
+                s.fault_dist = dist;
                 let sk = scenario_for(StrategyKind::NoCkptI, &s);
                 let spec = spec_for(StrategyKind::NoCkptI, &sk, Capping::Uncapped);
                 labels.push((label.clone(), x));

@@ -20,7 +20,7 @@ fn table_rows(i_win: f64) -> Vec<StrategyKind> {
 
 /// One (Table 1 or Table 2) reproduction: Weibull shape `k`.
 pub fn table_exec(k: f64, opts: &ExpOptions) -> anyhow::Result<ExperimentResult> {
-    let dist = format!("weibull:{k}");
+    let dist = crate::dist::DistSpec::weibull(k);
     let mut result = ExperimentResult::default();
     for i_win in [300.0, 3000.0] {
         let mut t = Table::new([
@@ -36,7 +36,7 @@ pub fn table_exec(k: f64, opts: &ExpOptions) -> anyhow::Result<ExperimentResult>
             for n in [1u64 << 16, 1u64 << 19] {
                 let pred = if make { predictor_yu(i_win) } else { predictor_zheng(i_win) };
                 let mut s = Scenario::paper(n, pred);
-                s.fault_dist = dist.clone();
+                s.fault_dist = dist;
                 columns.push((format!("{pname}-{n}"), s));
             }
         }

@@ -15,16 +15,24 @@
 //!   checkpointing strategy against a trace;
 //! * [`strategies`] — Young, Daly, ExactPrediction, Instant, NoCkptI,
 //!   WithCkptI, Migration and the brute-force BestPeriod search;
-//! * [`coordinator`] — leader/worker experiment orchestration, a dynamic
-//!   batcher for planning requests and a TCP/JSONL planner service;
+//! * [`coordinator`] — leader/worker pools, a dynamic batcher for
+//!   planning requests and the TCP/JSONL job service;
+//! * [`api`] — the crate's one public job surface: typed
+//!   [`api::JobRequest`]/[`api::JobResponse`] pairs, the versioned
+//!   JSONL v2 wire encoding (with a v1 adapter), the shared
+//!   [`api::Executor`] and the blocking [`api::ServiceClient`] —
+//!   the CLI, the experiments and the TCP service all execute jobs
+//!   through this one entry point;
 //! * [`experiments`] — the §5 evaluation scenarios (every figure & table).
 //!
 //! Substrate modules ([`rng`], [`dist`], [`util`], [`config`], [`cli`],
 //! [`report`], [`testkit`]) are implemented from scratch — the build is
 //! fully offline and depends only on `anyhow` (plus the optional `xla`
 //! PJRT bindings behind the `pjrt` feature; without it the [`runtime`]
-//! module keeps its API surface but reports the missing backend).
+//! module keeps its API surface but reports the missing backend, and
+//! the job service falls back to the closed-form planner).
 
+pub mod api;
 pub mod cli;
 pub mod config;
 pub mod coordinator;
@@ -42,9 +50,13 @@ pub mod util;
 
 /// Convenient glob import for examples and binaries.
 pub mod prelude {
+    pub use crate::api::{
+        ApiError, BestPeriodJob, ErrorCode, Executor, ExecutorConfig, JobRequest, JobResponse,
+        PlanJob, ServiceClient, SimulateJob, SweepJob,
+    };
     pub use crate::config::{Platform, Predictor, Scenario};
-    pub use crate::dist::{Dist, Distribution, Exponential, Uniform, Weibull};
-    pub use crate::model::{OptimalPlan, StrategyKind};
+    pub use crate::dist::{Dist, DistSpec, Distribution, Exponential, Uniform, Weibull};
+    pub use crate::model::{Capping, OptimalPlan, StrategyKind};
     pub use crate::rng::Pcg64;
     pub use crate::sim::{Outcome, SimConfig, SimSession};
     pub use crate::strategies::{ProactiveMode, StrategySpec};

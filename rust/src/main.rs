@@ -1,24 +1,31 @@
-//! `ckptfp` — the command-line front end.
+//! `ckptfp` — the command-line front end. Every planning/simulation
+//! command is a thin caller of the same [`ckptfp::api::Executor`] the
+//! TCP service dispatches to; `client` drives a remote service over the
+//! same typed jobs.
 //!
 //! ```text
-//! ckptfp plan       [--n-procs N | --mu-mn M] [--recall R --precision P --window I] [--hlo] [--json]
-//! ckptfp simulate   [--strategy NAME] [--n-procs N] [--reps K] [--workers W] [--dist exp|weibull:K]
-//! ckptfp experiment <fig4..fig11|tab1|tab2|tab3|all> [--reps K] [--best-period] [--out DIR]
-//! ckptfp serve      [--addr HOST:PORT]
-//! ckptfp trace      [--out FILE] [--horizon SECONDS] [--n-procs N]
-//! ckptfp config     <file.toml> — validate and print a scenario
+//! ckptfp plan        [--n-procs N | --mu-mn M] [--recall R --precision P --window I] [--hlo] [--json]
+//! ckptfp simulate    [--strategy NAME] [--n-procs N] [--reps K] [--workers W] [--dist exp|weibull:K]
+//! ckptfp best-period [--strategy NAME] [--reps K] [--candidates N] [--prune] [scenario flags]
+//! ckptfp experiment  <fig4..fig11|tab1|tab2|tab3|all> [--reps K] [--best-period] [--out DIR]
+//! ckptfp serve       [--addr HOST:PORT] [--workers W] [--reps-default K]
+//! ckptfp client      <plan|simulate|best-period|ping|stats> --addr HOST:PORT [job flags]
+//! ckptfp trace       [--out FILE] [--horizon SECONDS] [--n-procs N]
+//! ckptfp config      <file.toml> — validate and print a scenario
 //! ```
 
 use anyhow::Context;
+use ckptfp::api::{
+    BestPeriodJob, BestPeriodOutcome, Executor, ExecutorConfig, PlanJob, PlanResult,
+    ServiceClient, SimulateJob, SimulateResult,
+};
 use ckptfp::cli::Args;
 use ckptfp::config::{Predictor, Scenario};
 use ckptfp::coordinator::{serve, Batcher, BatcherConfig, ServiceConfig};
+use ckptfp::dist::DistSpec;
 use ckptfp::experiments::{all_experiments, run_experiment, ExpOptions};
-use ckptfp::model::{plan, Capping, Params, StrategyKind};
+use ckptfp::model::{Capping, Params, StrategyKind};
 use ckptfp::report::Table;
-use ckptfp::runtime::HloPlanner;
-use ckptfp::sim::run_replications_parallel;
-use ckptfp::strategies::spec_for;
 use ckptfp::trace::TraceGen;
 use ckptfp::util::units::MIN;
 
@@ -50,8 +57,10 @@ fn scenario_from_args(args: &mut Args) -> anyhow::Result<Scenario> {
     if let Some(w) = args.get_opt::<f64>("work")? {
         s.work = w;
     }
-    s.fault_dist = args.get_str("dist", &s.fault_dist.clone());
-    s.false_pred_dist = args.get_str("false-dist", "");
+    if let Some(d) = args.get_opt::<DistSpec>("dist")? {
+        s.fault_dist = d;
+    }
+    s.false_pred_dist = args.get_opt::<DistSpec>("false-dist")?;
     s.seed = args.get("seed", s.seed)?;
     s.validate()?;
     Ok(s)
@@ -62,8 +71,10 @@ fn run() -> anyhow::Result<()> {
     match args.command() {
         Some("plan") => cmd_plan(&mut args),
         Some("simulate") => cmd_simulate(&mut args),
+        Some("best-period") => cmd_best_period(&mut args),
         Some("experiment") => cmd_experiment(&mut args),
         Some("serve") => cmd_serve(&mut args),
+        Some("client") => cmd_client(&mut args),
         Some("trace") => cmd_trace(&mut args),
         Some("config") => cmd_config(&mut args),
         Some(other) => anyhow::bail!("unknown command '{other}' — see `ckptfp help`"),
@@ -78,48 +89,23 @@ const HELP: &str = "\
 ckptfp — fault-prediction-aware checkpointing (Aupy et al. 2012 reproduction)
 
 commands:
-  plan        optimal strategy/period for a platform + predictor
-  simulate    discrete-event simulation of one strategy
-  experiment  regenerate a paper figure/table (fig4..fig11, tab1..tab3, all)
-  serve       TCP/JSONL planner service (AOT XLA planner)
-  trace       dump a generated fault/prediction trace
-  config      validate a TOML scenario file
+  plan         optimal strategy/period for a platform + predictor
+  simulate     discrete-event simulation of one strategy (worker pool)
+  best-period  brute-force §5 period search by simulation
+  experiment   regenerate a paper figure/table (fig4..fig11, tab1..tab3, all)
+  serve        TCP/JSONL job service (protocol v2; v1 planner dialect adapted)
+  client       run plan/simulate/best-period jobs against a remote service
+  trace        dump a generated fault/prediction trace
+  config       validate a TOML scenario file
 ";
 
-fn cmd_plan(args: &mut Args) -> anyhow::Result<()> {
-    let use_hlo = args.switch("hlo");
-    let as_json = args.switch("json");
-    let capped = args.switch("capped");
-    let s = scenario_from_args(args)?;
-    args.finish()?;
-    let params = Params::from_scenario(&s);
-
-    let output = if use_hlo {
-        let mut planner = HloPlanner::open_default().context("opening HLO planner")?;
-        let out = planner.plan_batch(&[params])?.remove(0);
-        out
-    } else {
-        let capping = if capped { Capping::Capped } else { Capping::Uncapped };
-        let p = plan(&params, capping, true);
-        ckptfp::runtime::PlanOutput {
-            waste: p.waste,
-            period: p.period,
-            winner: p.winner,
-            winner_waste: p.winner_waste(),
-            winner_period: p.winner_period(),
-        }
-    };
-
-    if as_json {
-        println!("{}", ckptfp::coordinator::protocol::plan_response(&output));
-        return Ok(());
-    }
+fn print_plan(s: &Scenario, out: &PlanResult) {
     let mut t = Table::new(["strategy", "period (s)", "waste"]);
     for k in StrategyKind::ALL {
         t.row([
             k.name().to_string(),
-            format!("{:.1}", output.period[k as usize]),
-            format!("{:.4}", output.waste[k as usize]),
+            format!("{:.1}", out.period[k as usize]),
+            format!("{:.4}", out.waste[k as usize]),
         ]);
     }
     println!(
@@ -133,41 +119,103 @@ fn cmd_plan(args: &mut Args) -> anyhow::Result<()> {
     print!("{t}");
     println!(
         "winner: {} (period {:.1} s, waste {:.4}){}",
-        output.winner.name(),
-        output.winner_period,
-        output.winner_waste,
-        if use_hlo { " [via AOT XLA planner]" } else { "" }
+        out.winner.name(),
+        out.winner_period,
+        out.winner_waste,
+        if out.via_hlo { " [via AOT XLA planner]" } else { "" }
     );
+}
+
+fn cmd_plan(args: &mut Args) -> anyhow::Result<()> {
+    let use_hlo = args.switch("hlo");
+    let as_json = args.switch("json");
+    let capped = args.switch("capped");
+    let s = scenario_from_args(args)?;
+    args.finish()?;
+
+    let executor = if use_hlo {
+        let batcher = Batcher::spawn_default(BatcherConfig::default())
+            .context("opening HLO planner (is artifacts/ built?)")?;
+        Executor::with_batcher(batcher, ExecutorConfig::default())
+    } else {
+        Executor::local()
+    };
+    let capping = if capped { Capping::Capped } else { Capping::Uncapped };
+    let out = executor.plan(&PlanJob { scenario: s.clone(), capping })?;
+
+    if as_json {
+        println!(
+            "{}",
+            ckptfp::api::wire::encode_response(&ckptfp::api::JobResponse::Plan(out), false)
+        );
+        return Ok(());
+    }
+    print_plan(&s, &out);
     Ok(())
 }
 
-fn cmd_simulate(args: &mut Args) -> anyhow::Result<()> {
-    let strategy = args.get_str("strategy", "ExactPrediction");
-    let reps: u64 = args.get("reps", 20)?;
-    let workers: usize = args.get("workers", ckptfp::coordinator::available_workers())?;
-    let s = scenario_from_args(args)?;
-    args.finish()?;
-    let kind = StrategyKind::ALL
-        .into_iter()
-        .find(|k| k.name().eq_ignore_ascii_case(&strategy))
-        .ok_or_else(|| anyhow::anyhow!("unknown strategy '{strategy}'"))?;
-    let sk = ckptfp::experiments::scenario_for(kind, &s);
-    let spec = spec_for(kind, &sk, Capping::Uncapped);
-    let report = run_replications_parallel(&sk, &spec, reps, workers)?;
+fn print_simulate(res: &SimulateResult) {
     println!(
-        "{}: waste {} | makespan {:.2} days | completion {:.0}% | {} faults, {} ckpts over {} reps ({:.2} engine-s)",
-        spec.name,
-        report.agg.waste,
-        report.mean_makespan() / 86400.0,
-        report.completion_rate() * 100.0,
-        report.agg.n_faults,
-        report.agg.n_ckpts + report.agg.n_proactive_ckpts,
-        report.agg.n_reps,
-        report.agg.sim_seconds,
+        "{}: waste {:.4} ±{:.4} | makespan {:.2} days | completion {:.0}% | {} faults, {} ckpts over {} reps ({:.2} engine-s, {} workers)",
+        res.strategy,
+        res.mean_waste,
+        res.waste_ci95,
+        res.mean_makespan / 86400.0,
+        res.completion_rate * 100.0,
+        res.n_faults,
+        res.n_ckpts + res.n_proactive_ckpts,
+        res.reps,
+        res.sim_seconds,
+        res.workers,
     );
-    let p = Params::from_scenario(&sk);
-    let analytic = ckptfp::model::waste_of(&p, kind, spec.t_r, ckptfp::model::tp_opt(&p));
+}
+
+fn simulate_job_from_args(args: &mut Args) -> anyhow::Result<SimulateJob> {
+    let strategy: StrategyKind = args.get_str("strategy", "ExactPrediction").parse()?;
+    let reps: u64 = args.get("reps", 20)?;
+    let workers = args.get_opt::<u64>("workers")?;
+    let scenario = scenario_from_args(args)?;
+    Ok(SimulateJob { scenario, strategy, reps, workers })
+}
+
+fn cmd_simulate(args: &mut Args) -> anyhow::Result<()> {
+    let job = simulate_job_from_args(args)?;
+    args.finish()?;
+    let res = Executor::local().simulate(&job)?;
+    print_simulate(&res);
+    let s = ckptfp::experiments::scenario_for(job.strategy, &job.scenario);
+    let spec = ckptfp::strategies::spec_for(job.strategy, &s, Capping::Uncapped);
+    let p = Params::from_scenario(&s);
+    let analytic = ckptfp::model::waste_of(&p, job.strategy, spec.t_r, ckptfp::model::tp_opt(&p));
     println!("analytic waste at T_R = {:.1}: {:.4}", spec.t_r, analytic);
+    Ok(())
+}
+
+fn print_best_period(res: &BestPeriodOutcome) {
+    println!(
+        "{}: best T_R {:.1} s (mean waste {:.4}) over {} candidates x {} reps ({} pruned, {} workers)",
+        res.strategy, res.t_r, res.waste, res.candidates, res.reps, res.n_pruned, res.workers,
+    );
+    for (t, w) in &res.sweep {
+        println!("  T_R {t:>10.1}  waste {w:.4}");
+    }
+}
+
+fn best_period_job_from_args(args: &mut Args) -> anyhow::Result<BestPeriodJob> {
+    let strategy: StrategyKind = args.get_str("strategy", "Young").parse()?;
+    let reps: u64 = args.get("reps", 10)?;
+    let candidates: u64 = args.get("candidates", 16)?;
+    let workers = args.get_opt::<u64>("workers")?;
+    let prune = args.switch("prune");
+    let scenario = scenario_from_args(args)?;
+    Ok(BestPeriodJob { scenario, strategy, reps, candidates, workers, prune })
+}
+
+fn cmd_best_period(args: &mut Args) -> anyhow::Result<()> {
+    let job = best_period_job_from_args(args)?;
+    args.finish()?;
+    let res = Executor::local().best_period(&job)?;
+    print_best_period(&res);
     Ok(())
 }
 
@@ -201,20 +249,89 @@ fn cmd_serve(args: &mut Args) -> anyhow::Result<()> {
     let addr = args.get_str("addr", "127.0.0.1:7471");
     let max_batch: usize = args.get("max-batch", 64)?;
     let max_delay_ms: u64 = args.get("max-delay-ms", 2)?;
+    let workers: usize = args.get("workers", ckptfp::coordinator::available_workers())?;
+    let reps_default: u64 = args.get("reps-default", 100)?;
     args.finish()?;
-    let batcher = Batcher::spawn_default(BatcherConfig {
+    let exec_cfg = ExecutorConfig { workers, reps_default, ..Default::default() };
+    let executor = match Batcher::spawn_default(BatcherConfig {
         max_batch,
         max_delay: std::time::Duration::from_millis(max_delay_ms),
         eager: max_delay_ms == 0,
         ..Default::default()
-    })
-    .context("starting batcher (is artifacts/ built?)")?;
-    let handle = serve(batcher, ServiceConfig { addr })?;
-    println!("ckptfp planner service listening on {}", handle.addr);
-    println!("protocol: one JSON object per line; see coordinator::protocol docs");
+    }) {
+        Ok(batcher) => {
+            println!("plan jobs ride the AOT XLA planner (dynamic batching)");
+            Executor::with_batcher(batcher, exec_cfg)
+        }
+        Err(e) => {
+            eprintln!("planner backend unavailable ({e:#}); serving closed-form plans");
+            Executor::new(exec_cfg)
+        }
+    };
+    let handle = serve(executor, ServiceConfig { addr })?;
+    println!("ckptfp job service listening on {}", handle.addr);
+    println!("protocol: one JSON object per line (v2; v1 plan dialect accepted) — docs/PROTOCOL.md");
+    println!("simulation pool: {workers} workers, default {reps_default} replications");
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
+}
+
+fn cmd_client(args: &mut Args) -> anyhow::Result<()> {
+    let verb = args
+        .positional()
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("client needs a verb: plan | simulate | best-period | ping | stats"))?
+        .clone();
+    let addr = args.get_str("addr", "127.0.0.1:7471");
+    match verb.as_str() {
+        "plan" => {
+            let capped = args.switch("capped");
+            let scenario = scenario_from_args(args)?;
+            args.finish()?;
+            let mut client = ServiceClient::connect(&addr)?;
+            let capping = if capped { Capping::Capped } else { Capping::Uncapped };
+            let out = client.plan(PlanJob { scenario: scenario.clone(), capping })?;
+            print_plan(&scenario, &out);
+        }
+        "simulate" => {
+            let job = simulate_job_from_args(args)?;
+            args.finish()?;
+            let res = ServiceClient::connect(&addr)?.simulate(job)?;
+            print_simulate(&res);
+        }
+        "best-period" => {
+            let job = best_period_job_from_args(args)?;
+            args.finish()?;
+            let res = ServiceClient::connect(&addr)?.best_period(job)?;
+            print_best_period(&res);
+        }
+        "ping" => {
+            args.finish()?;
+            ServiceClient::connect(&addr)?.ping()?;
+            println!("pong from {addr}");
+        }
+        "stats" => {
+            args.finish()?;
+            let s = ServiceClient::connect(&addr)?.stats()?;
+            println!(
+                "requests {} (errors {}) | plan {} simulate {} best_period {} sweep {}",
+                s.requests, s.errors, s.plans, s.simulates, s.best_periods, s.sweeps
+            );
+            println!(
+                "latency p50 {:.4}s p95 {:.4}s p99 {:.4}s over {} samples",
+                s.lat_p50_s, s.lat_p95_s, s.lat_p99_s, s.lat_n
+            );
+            if let Some(b) = s.batcher {
+                println!(
+                    "batcher: {} requests in {} batches (max batch {})",
+                    b.requests, b.batches, b.max_batch
+                );
+            }
+        }
+        other => anyhow::bail!("unknown client verb '{other}'"),
+    }
+    Ok(())
 }
 
 fn cmd_trace(args: &mut Args) -> anyhow::Result<()> {

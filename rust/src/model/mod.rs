@@ -71,6 +71,23 @@ impl std::fmt::Display for StrategyKind {
     }
 }
 
+impl std::str::FromStr for StrategyKind {
+    type Err = anyhow::Error;
+
+    /// Case-insensitive strategy lookup by name — the wire edge for the
+    /// `simulate`/`best_period` jobs and the CLI `--strategy` flag.
+    fn from_str(s: &str) -> anyhow::Result<StrategyKind> {
+        StrategyKind::ALL
+            .into_iter()
+            .find(|k| k.name().eq_ignore_ascii_case(s.trim()))
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown strategy '{s}' (expected one of Young, ExactPrediction, Instant, NoCkptI, WithCkptI, Migration)"
+                )
+            })
+    }
+}
+
 /// Scalar parameter bundle for the closed forms (built from a
 /// [`Scenario`]; mirrors the raw-parameter row of the HLO planner).
 #[derive(Debug, Clone, Copy)]
@@ -198,6 +215,16 @@ mod tests {
             assert_eq!(*k as usize, i);
         }
         assert_eq!(StrategyKind::from_index(6), None);
+    }
+
+    #[test]
+    fn strategy_kind_parses_by_name() {
+        for k in StrategyKind::ALL {
+            assert_eq!(k.name().parse::<StrategyKind>().unwrap(), k);
+            assert_eq!(k.name().to_lowercase().parse::<StrategyKind>().unwrap(), k);
+        }
+        assert!("Daly".parse::<StrategyKind>().is_err());
+        assert!("".parse::<StrategyKind>().is_err());
     }
 
     #[test]

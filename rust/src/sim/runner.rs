@@ -273,7 +273,7 @@ mod tests {
     fn small_scenario() -> Scenario {
         // Modest platform + small job so the test stays fast.
         let mut s = Scenario::paper(1 << 16, Predictor::none());
-        s.fault_dist = "exp".into();
+        s.fault_dist = crate::dist::DistSpec::Exp;
         s.work = 3.0e5; // ~3.5 days of work, mu = 60000 s
         s
     }

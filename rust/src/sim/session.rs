@@ -73,7 +73,7 @@ mod tests {
             Predictor::exact(0.85, 0.82)
         };
         let mut s = Scenario::paper(1 << 16, pred);
-        s.fault_dist = "weibull:0.7".into();
+        s.fault_dist = crate::dist::DistSpec::weibull(0.7);
         s.work = 2.0e5;
         s
     }
@@ -122,9 +122,9 @@ mod tests {
     #[test]
     fn invalid_scenario_fails_at_construction() {
         let mut s = scenario(0.0);
-        s.fault_dist = "bogus".into();
+        s.fault_dist = crate::dist::DistSpec::weibull(-2.0);
         let spec = spec_for(StrategyKind::Young, &s, Capping::Uncapped);
         let err = SimSession::new(&s, &spec).unwrap_err().to_string();
-        assert!(err.contains("bogus"), "error should name the spec: {err}");
+        assert!(err.contains("weibull:-2"), "error should name the spec: {err}");
     }
 }

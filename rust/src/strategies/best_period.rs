@@ -213,7 +213,7 @@ mod tests {
 
     fn small_study() -> (crate::config::Scenario, StrategySpec) {
         let mut s = crate::config::Scenario::paper(1 << 16, Predictor::none());
-        s.fault_dist = "exp".into();
+        s.fault_dist = crate::dist::DistSpec::Exp;
         s.work = 2.0e5;
         let base = spec_for(StrategyKind::Young, &s, Capping::Uncapped);
         (s, base)

@@ -49,10 +49,10 @@ impl TraceGen {
     pub fn new(scenario: &Scenario, lead: f64, seed: u64, rep: u64) -> anyhow::Result<TraceGen> {
         let mu = scenario.mu();
         let pred = &scenario.predictor;
-        let fault_dist = crate::dist::parse(&scenario.fault_dist)?.with_mean(mu);
+        let fault_dist = scenario.fault_dist.dist()?.with_mean(mu);
         let false_interval = pred.false_pred_interval(mu);
         let false_dist = if false_interval.is_finite() {
-            Some(crate::dist::parse(scenario.false_dist_spec())?.with_mean(false_interval))
+            Some(scenario.false_dist_spec().dist()?.with_mean(false_interval))
         } else {
             None
         };
@@ -189,7 +189,7 @@ mod tests {
             Predictor::exact(recall, precision)
         };
         let mut s = Scenario::paper(1 << 16, pred);
-        s.fault_dist = dist.to_string();
+        s.fault_dist = dist.parse().expect("test dist spec");
         s
     }
 
@@ -328,7 +328,7 @@ mod tests {
     #[test]
     fn uniform_false_pred_dist() {
         let mut s = scenario(0.7, 0.4, 300.0, "weibull:0.7");
-        s.false_pred_dist = "uniform".into();
+        s.false_pred_dist = Some(crate::dist::DistSpec::Uniform);
         let mut gen = TraceGen::new(&s, 600.0, 8, 0).unwrap();
         let (_, preds) = drain(&mut gen, 3e7);
         let false_count = preds.iter().filter(|p| !p.is_true_positive()).count();

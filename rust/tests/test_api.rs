@@ -1,0 +1,452 @@
+//! The job-surface contract: wire round-trips for every request and
+//! response variant, v1 back-compat, structured error shapes, and the
+//! live-service acceptance pins — a v1 plan and its v2 equivalent
+//! answer identically, and a `Simulate` job served over TCP reproduces
+//! the in-process pool run bit for bit. None of this needs the PJRT
+//! backend: the executor falls back to the closed-form planner.
+
+use ckptfp::api::{
+    wire, ApiError, BestPeriodJob, ErrorCode, Executor, ExecutorConfig, JobRequest, JobResponse,
+    PlanJob, ServiceClient, SimulateJob, SweepJob,
+};
+use ckptfp::api::{BatcherSnapshot, BestPeriodOutcome, PlanResult, ServiceStats, SimulateResult, SweepResult, SweepRow};
+use ckptfp::config::{Predictor, Scenario};
+use ckptfp::coordinator::{serve, PlannerClient, ServiceConfig, ServiceHandle};
+use ckptfp::dist::DistSpec;
+use ckptfp::experiments::{replicate_stat, scenario_for};
+use ckptfp::model::{Capping, StrategyKind};
+use ckptfp::sim::Outcome;
+use ckptfp::strategies::spec_for;
+use ckptfp::util::json::Json;
+
+fn small_scenario() -> Scenario {
+    let mut s = Scenario::paper(1 << 16, Predictor::exact(0.85, 0.82));
+    s.fault_dist = DistSpec::Exp;
+    s.work = 2.0e5;
+    s
+}
+
+fn start_local_service() -> (ServiceHandle, String) {
+    let executor = Executor::new(ExecutorConfig { reps_default: 4, ..Default::default() });
+    let handle = serve(executor, ServiceConfig { addr: "127.0.0.1:0".into() }).unwrap();
+    let addr = handle.addr.to_string();
+    (handle, addr)
+}
+
+// ---------------------------------------------------------------------------
+// Wire round-trips
+// ---------------------------------------------------------------------------
+
+#[test]
+fn every_request_variant_round_trips() {
+    let s = small_scenario();
+    let requests = vec![
+        JobRequest::Plan(PlanJob { scenario: s.clone(), capping: Capping::Capped }),
+        JobRequest::Plan(PlanJob::new(s.clone())),
+        JobRequest::Simulate(SimulateJob {
+            scenario: s.clone(),
+            strategy: StrategyKind::NoCkptI,
+            reps: 17,
+            workers: Some(3),
+        }),
+        JobRequest::Simulate(SimulateJob::new(s.clone(), StrategyKind::Young)),
+        JobRequest::BestPeriod(BestPeriodJob {
+            scenario: s.clone(),
+            strategy: StrategyKind::Migration,
+            reps: 9,
+            candidates: 12,
+            workers: None,
+            prune: true,
+        }),
+        JobRequest::Sweep(SweepJob {
+            base: s.clone(),
+            n_procs: vec![1 << 14, 1 << 16, 1 << 19],
+            capping: Capping::Uncapped,
+        }),
+        JobRequest::Stats,
+        JobRequest::Ping,
+    ];
+    for req in requests {
+        let line = wire::encode_request(&req);
+        let decoded = wire::decode_request(&line)
+            .unwrap_or_else(|e| panic!("decode of {line} failed: {e}"));
+        assert!(!decoded.legacy, "v2 encoding must not decode as legacy");
+        assert_eq!(decoded.request, req, "round-trip of {line}");
+    }
+}
+
+#[test]
+fn scenario_with_all_fields_round_trips() {
+    // Window predictor, explicit ef, distinct false-prediction law —
+    // every field must survive the wire exactly.
+    let mut s = Scenario::paper(1 << 19, Predictor::windowed(0.7, 0.4, 3000.0));
+    s.predictor.ef = 1000.0; // not the window/2 default
+    s.fault_dist = DistSpec::weibull(0.5);
+    s.false_pred_dist = Some(DistSpec::Uniform);
+    s.alpha = 0.3;
+    s.migration = 450.0;
+    s.seed = 123456789;
+    let req = JobRequest::Plan(PlanJob::new(s));
+    let decoded = wire::decode_request(&wire::encode_request(&req)).unwrap();
+    assert_eq!(decoded.request, req);
+}
+
+#[test]
+fn every_response_variant_round_trips() {
+    let responses = vec![
+        JobResponse::Plan(PlanResult {
+            waste: [0.2, 0.1, 0.12, 0.13, 0.14, 0.09],
+            period: [1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+            winner: StrategyKind::Migration,
+            winner_waste: 0.09,
+            winner_period: 6.0,
+            q: 1,
+            via_hlo: false,
+        }),
+        JobResponse::Simulate(SimulateResult {
+            strategy: "NoCkptI".into(),
+            reps: 40,
+            workers: 4,
+            mean_waste: 0.123456789012345,
+            waste_ci95: 0.01,
+            mean_makespan: 1.0e7,
+            completion_rate: 1.0,
+            n_faults: 321,
+            n_preds: 200,
+            n_ckpts: 1000,
+            n_proactive_ckpts: 55,
+            sim_seconds: 1.25,
+        }),
+        JobResponse::BestPeriod(BestPeriodOutcome {
+            strategy: "Young".into(),
+            t_r: 8123.4,
+            waste: 0.117,
+            n_pruned: 3,
+            sweep: vec![(1000.0, 0.2), (2000.0, 0.15), (4000.0, 0.117)],
+            reps: 10,
+            candidates: 3,
+            workers: 8,
+        }),
+        JobResponse::Sweep(SweepResult {
+            rows: vec![
+                SweepRow {
+                    n_procs: 1 << 16,
+                    mu: 60133.0,
+                    winner: StrategyKind::ExactPrediction,
+                    winner_waste: 0.11,
+                    winner_period: 9000.0,
+                },
+                SweepRow {
+                    n_procs: 1 << 19,
+                    mu: 7516.0,
+                    winner: StrategyKind::Young,
+                    winner_waste: 0.4,
+                    winner_period: 3000.0,
+                },
+            ],
+            via_hlo: false,
+        }),
+        JobResponse::Stats(ServiceStats {
+            requests: 10,
+            errors: 2,
+            plans: 3,
+            simulates: 4,
+            best_periods: 1,
+            sweeps: 0,
+            lat_p50_s: 0.001,
+            lat_p95_s: 0.01,
+            lat_p99_s: 0.02,
+            lat_n: 8,
+            batcher: Some(BatcherSnapshot { requests: 3, batches: 1, max_batch: 3 }),
+        }),
+        JobResponse::Stats(ServiceStats::default()),
+        JobResponse::Pong,
+        JobResponse::Error(ApiError::bad_request("work must be positive")),
+    ];
+    for resp in responses {
+        let line = wire::encode_response(&resp, false);
+        let decoded = wire::decode_response(&line)
+            .unwrap_or_else(|e| panic!("decode of {line} failed: {e}"));
+        assert_eq!(decoded, resp, "round-trip of {line}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// v1 back-compat + error shapes
+// ---------------------------------------------------------------------------
+
+#[test]
+fn v1_plan_request_decodes_through_the_adapter() {
+    let d = wire::decode_request(
+        r#"{"mu": 60000, "recall": 0.85, "precision": 0.82, "window": 300}"#,
+    )
+    .unwrap();
+    assert!(d.legacy);
+    match d.request {
+        JobRequest::Plan(job) => {
+            assert_eq!(job.scenario.platform.n_procs, 1);
+            assert!((job.scenario.mu() - 60000.0).abs() < 1e-9);
+            assert_eq!(job.scenario.predictor.recall, 0.85);
+            assert_eq!(job.scenario.predictor.window, 300.0);
+            assert_eq!(job.scenario.predictor.ef, 150.0); // window/2 default
+            assert_eq!(job.scenario.platform.c, 600.0);
+            assert_eq!(job.capping, Capping::Uncapped);
+        }
+        other => panic!("wrong request: {other:?}"),
+    }
+    // Bare verbs decode too, flagged legacy.
+    assert!(matches!(
+        wire::decode_request(r#"{"op": "ping"}"#).unwrap(),
+        wire::Decoded { request: JobRequest::Ping, legacy: true }
+    ));
+    assert!(matches!(
+        wire::decode_request(r#"{"op": "stats"}"#).unwrap().request,
+        JobRequest::Stats
+    ));
+}
+
+#[test]
+fn v1_degenerate_predictor_is_accepted() {
+    // recall = 0, precision = 0: the no-predictor case `Predictor::
+    // validate` allows — the wire must not be stricter (satellite fix).
+    let d = wire::decode_request(r#"{"mu": 60000, "recall": 0, "precision": 0}"#).unwrap();
+    match d.request {
+        JobRequest::Plan(job) => {
+            assert_eq!(job.scenario.predictor.recall, 0.0);
+            assert_eq!(job.scenario.predictor.precision, 0.0);
+        }
+        other => panic!("wrong request: {other:?}"),
+    }
+}
+
+#[test]
+fn decode_errors_carry_machine_readable_codes() {
+    let cases: Vec<(&str, ErrorCode)> = vec![
+        ("this is not json", ErrorCode::InvalidJson),
+        ("[1, 2, 3]", ErrorCode::BadRequest),
+        (r#"{"v": 3, "op": "plan"}"#, ErrorCode::UnsupportedVersion),
+        (r#"{"v": 2, "op": "destroy"}"#, ErrorCode::UnknownOp),
+        (r#"{"v": 2}"#, ErrorCode::UnknownOp),
+        (r#"{"op": "destroy"}"#, ErrorCode::UnknownOp),
+        (r#"{"v": 2, "op": "plan"}"#, ErrorCode::BadRequest), // missing scenario
+        (r#"{"v": 2, "op": "simulate", "scenario": {"work": -1}}"#, ErrorCode::BadRequest),
+        (
+            r#"{"v": 2, "op": "simulate", "scenario": {}, "strategy": "Daly"}"#,
+            ErrorCode::BadRequest,
+        ),
+        (
+            r#"{"v": 2, "op": "plan", "scenario": {"fault_dist": "bogus"}}"#,
+            ErrorCode::BadRequest,
+        ),
+        (r#"{"mu": -5}"#, ErrorCode::BadRequest), // v1 adapter validation
+    ];
+    for (line, code) in cases {
+        let err = wire::decode_request(line).unwrap_err();
+        assert_eq!(err.code, code, "line {line} -> {err}");
+        // The error encodes to the wire shape both dialects can read.
+        let encoded = wire::encode_response(&JobResponse::Error(err), false);
+        let v = ckptfp::util::json::parse(&encoded).unwrap();
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(false));
+        assert_eq!(v.get("code").and_then(Json::as_str), Some(code.as_str()));
+        assert!(v.get("error").is_some());
+    }
+}
+
+#[test]
+fn legacy_responses_keep_the_v1_shape() {
+    // Stats, legacy dialect: the original top-level planner counters
+    // survive (requests = batcher plan count, batches, max_batch).
+    let stats = JobResponse::Stats(ServiceStats {
+        requests: 10,
+        errors: 1,
+        plans: 3,
+        batcher: Some(BatcherSnapshot { requests: 3, batches: 2, max_batch: 2 }),
+        ..Default::default()
+    });
+    let v = ckptfp::util::json::parse(&wire::encode_response(&stats, true)).unwrap();
+    assert!(v.get("v").is_none());
+    assert_eq!(v.num_or("requests", -1.0), 3.0, "legacy requests = batcher plan count");
+    assert_eq!(v.num_or("batches", -1.0), 2.0);
+    assert_eq!(v.num_or("max_batch", -1.0), 2.0);
+    assert!(v.get("job").is_none());
+
+    // Error replies to a failed v1 line use the legacy shape too.
+    assert!(wire::line_is_legacy(r#"{"mu": -5}"#));
+    assert!(wire::line_is_legacy(r#"{"op": "destroy"}"#));
+    assert!(!wire::line_is_legacy(r#"{"v": 2, "op": "destroy"}"#));
+    assert!(!wire::line_is_legacy("not json"));
+    let err = wire::decode_request(r#"{"mu": -5}"#).unwrap_err();
+    let v = ckptfp::util::json::parse(&wire::encode_response(&JobResponse::Error(err), true)).unwrap();
+    assert!(v.get("v").is_none());
+    assert_eq!(v.get("ok").and_then(Json::as_bool), Some(false));
+    assert!(v.get("error").is_some());
+}
+
+// ---------------------------------------------------------------------------
+// Live service
+// ---------------------------------------------------------------------------
+
+/// Acceptance pin: a v1 `{"op":"plan",...}` request and its v2
+/// `JobRequest::Plan` equivalent return identical plan payloads from
+/// the same service.
+#[test]
+fn v1_and_v2_plan_payloads_are_identical() {
+    let (handle, addr) = start_local_service();
+    let mut client = PlannerClient::connect(&addr).unwrap();
+    let v1 = client
+        .call(r#"{"mu": 60000, "recall": 0.85, "precision": 0.82, "window": 300}"#)
+        .unwrap();
+    let v2 = client
+        .call(
+            r#"{"v": 2, "op": "plan", "scenario": {"n_procs": 1, "mu": 60000, "recall": 0.85, "precision": 0.82, "window": 300}}"#,
+        )
+        .unwrap();
+    assert_eq!(v1.get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(v2.get("ok").and_then(Json::as_bool), Some(true));
+    // Dialect markers differ...
+    assert!(v1.get("v").is_none());
+    assert_eq!(v2.num_or("v", 0.0), 2.0);
+    assert_eq!(v2.get("job").and_then(Json::as_str), Some("plan"));
+    // ...the plan payload must not.
+    for field in ["winner", "q", "winner_waste", "winner_period", "strategies"] {
+        assert_eq!(v1.get(field), v2.get(field), "payload field '{field}' diverges");
+    }
+    handle.stop();
+}
+
+/// Acceptance pin: a v2 `Simulate` job served over TCP reproduces the
+/// in-process pool replication bit for bit for the same
+/// (scenario, strategy, seed, reps, workers).
+#[test]
+fn simulate_over_tcp_is_bit_identical_to_in_process() {
+    let (handle, addr) = start_local_service();
+    let scenario = small_scenario();
+    let strategy = StrategyKind::ExactPrediction;
+    let (reps, workers) = (6u64, 2u64);
+
+    let mut client = ServiceClient::connect(&addr).unwrap();
+    let served = client
+        .simulate(SimulateJob {
+            scenario: scenario.clone(),
+            strategy,
+            reps,
+            workers: Some(workers),
+        })
+        .unwrap();
+
+    let s = scenario_for(strategy, &scenario);
+    let spec = spec_for(strategy, &s, Capping::Uncapped);
+    let local = replicate_stat(&s, &spec, reps, workers as usize, Outcome::waste);
+
+    assert_eq!(served.reps, reps);
+    assert_eq!(served.workers, workers);
+    assert_eq!(
+        served.mean_waste.to_bits(),
+        local.mean().to_bits(),
+        "served {} vs local {}",
+        served.mean_waste,
+        local.mean()
+    );
+    handle.stop();
+}
+
+#[test]
+fn concurrent_clients_simulate_against_one_service() {
+    let (handle, addr) = start_local_service();
+    let n_clients = 8;
+    let results: Vec<SimulateResult> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..n_clients)
+            .map(|_| {
+                let addr = addr.clone();
+                scope.spawn(move || {
+                    let mut client = ServiceClient::connect(&addr).unwrap();
+                    client
+                        .simulate(SimulateJob {
+                            scenario: small_scenario(),
+                            strategy: StrategyKind::Young,
+                            reps: 4,
+                            workers: Some(2),
+                        })
+                        .unwrap()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    // Identical jobs are deterministic — every client sees the same
+    // aggregate, regardless of interleaving. (`sim_seconds` is
+    // wall-clock and excluded from the comparison.)
+    for r in &results[1..] {
+        let mut a = r.clone();
+        let mut b = results[0].clone();
+        a.sim_seconds = 0.0;
+        b.sim_seconds = 0.0;
+        assert_eq!(a, b);
+    }
+    assert!(results[0].n_faults > 0);
+    assert_eq!(results[0].completion_rate, 1.0);
+
+    let mut client = ServiceClient::connect(&addr).unwrap();
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.simulates, n_clients as u64);
+    assert!(stats.requests >= n_clients as u64);
+    assert!(stats.batcher.is_none(), "local service has no batcher");
+    handle.stop();
+}
+
+#[test]
+fn typed_client_runs_plan_best_period_and_sweep() {
+    let (handle, addr) = start_local_service();
+    let mut client = ServiceClient::connect(&addr).unwrap();
+
+    let plan = client.plan(PlanJob::new(small_scenario())).unwrap();
+    assert!(!plan.via_hlo);
+    assert!(plan.winner_waste > 0.0 && plan.winner_waste < 1.0);
+
+    let bp = client
+        .best_period(BestPeriodJob {
+            scenario: small_scenario(),
+            strategy: StrategyKind::Young,
+            reps: 4,
+            candidates: 6,
+            workers: Some(2),
+            prune: false,
+        })
+        .unwrap();
+    assert_eq!(bp.sweep.len(), 6);
+    assert!(bp.t_r > 0.0 && bp.waste > 0.0);
+    assert!(bp.sweep.iter().any(|&(t, w)| t == bp.t_r && w == bp.waste));
+
+    let sweep = client
+        .sweep(SweepJob {
+            base: small_scenario(),
+            n_procs: vec![1 << 16, 1 << 19],
+            capping: Capping::Uncapped,
+        })
+        .unwrap();
+    assert_eq!(sweep.rows.len(), 2);
+    assert!(sweep.rows[0].winner_waste < sweep.rows[1].winner_waste);
+
+    client.ping().unwrap();
+
+    // Server-side failures surface as typed errors through the client.
+    let mut bad = small_scenario();
+    bad.work = -1.0;
+    let err = client.plan(PlanJob::new(bad)).unwrap_err();
+    let api_err = err.downcast_ref::<ApiError>().expect("typed ApiError");
+    assert_eq!(api_err.code, ErrorCode::BadRequest);
+    handle.stop();
+}
+
+/// Satellite fix: stopping a service bound to an unspecified address
+/// must not hang — the shutdown nudge targets loopback.
+#[test]
+fn stop_works_when_bound_to_unspecified_address() {
+    let executor = Executor::new(ExecutorConfig::default());
+    let handle = serve(executor, ServiceConfig { addr: "0.0.0.0:0".into() }).unwrap();
+    assert!(handle.addr.ip().is_unspecified());
+    // Connectable via loopback even though 0.0.0.0 itself is not.
+    let mut client = ServiceClient::connect(&format!("127.0.0.1:{}", handle.addr.port())).unwrap();
+    client.ping().unwrap();
+    handle.stop(); // would block forever before the loopback nudge
+}

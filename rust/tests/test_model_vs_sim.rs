@@ -19,7 +19,7 @@ fn scenario(window: f64) -> Scenario {
         Predictor::exact(0.85, 0.82)
     };
     let mut s = Scenario::paper(1 << 16, pred);
-    s.fault_dist = "exp".into();
+    s.fault_dist = ckptfp::dist::DistSpec::Exp;
     s.work = 6.0e5;
     s
 }
@@ -117,7 +117,7 @@ fn weibull_waste_higher_variance_but_bounded() {
     // Weibull k = 0.7 isn't covered by the closed forms; the §5 claim
     // is only that prediction still helps. Check exactly that.
     let mut s = scenario(0.0);
-    s.fault_dist = "weibull:0.7".into();
+    s.fault_dist = ckptfp::dist::DistSpec::weibull(0.7);
     let young = spec_for(StrategyKind::Young, &s, Capping::Uncapped);
     let exact = spec_for(StrategyKind::ExactPrediction, &s, Capping::Uncapped);
     let wy = run_replications(&s, &young, 30).unwrap().mean_waste();

@@ -101,7 +101,11 @@ fn prop_engine_conservation() {
             Predictor::exact(g.f64(0.2, 0.95), g.f64(0.3, 0.95))
         };
         let mut s = Scenario::paper(1 << 16, pred);
-        s.fault_dist = (*g.choose(&["exp", "weibull:0.7", "uniform"])).to_string();
+        s.fault_dist = *g.choose(&[
+            ckptfp::dist::DistSpec::Exp,
+            ckptfp::dist::DistSpec::weibull(0.7),
+            ckptfp::dist::DistSpec::Uniform,
+        ]);
         s.work = g.f64(1.0e5, 5.0e5);
         s.seed = g.u64(0, u64::MAX / 2);
         let kind = *g.choose(&StrategyKind::ALL);
@@ -141,7 +145,7 @@ fn prop_trace_recall_precision() {
         let recall = g.f64(0.2, 0.95);
         let precision = g.f64(0.3, 0.95);
         let mut s = Scenario::paper(1 << 18, Predictor::exact(recall, precision));
-        s.fault_dist = "exp".into();
+        s.fault_dist = ckptfp::dist::DistSpec::Exp;
         s.seed = g.u64(0, 1 << 40);
         let mut gen = TraceGen::new(&s, s.platform.c, s.seed, 0).unwrap();
         let mut faults = 0u64;

@@ -1,25 +1,33 @@
-//! Integration: batcher + TCP planner service end to end.
+//! Integration: HLO batcher + TCP job service end to end.
 //! Requires `make artifacts` and a `pjrt`-enabled build; each test
 //! skips (with a notice on stderr) when the planner backend is
 //! unavailable, so the tier-1 suite stays green on bare checkouts.
+//! (The planner-less service path — analytic plans, simulation jobs —
+//! is covered unconditionally in `tests/test_api.rs`.)
 
 use std::time::Duration;
 
+use ckptfp::api::{Executor, ExecutorConfig};
 use ckptfp::coordinator::{serve, Batcher, BatcherConfig, PlannerClient, ServiceConfig};
 use ckptfp::runtime::HloPlanner;
 
-fn start_service() -> Option<(ckptfp::coordinator::ServiceHandle, String, Batcher)> {
-    let batcher = match Batcher::spawn(
+fn spawn_batcher() -> Option<Batcher> {
+    match Batcher::spawn(
         HloPlanner::open_default,
         BatcherConfig { max_batch: 16, max_delay: Duration::from_millis(1), ..Default::default() },
     ) {
-        Ok(b) => b,
+        Ok(b) => Some(b),
         Err(e) => {
             eprintln!("skipping service test: {e:#} (run `make artifacts` and build with --features pjrt)");
-            return None;
+            None
         }
-    };
-    let handle = serve(batcher.clone(), ServiceConfig { addr: "127.0.0.1:0".into() }).unwrap();
+    }
+}
+
+fn start_service() -> Option<(ckptfp::coordinator::ServiceHandle, String, Batcher)> {
+    let batcher = spawn_batcher()?;
+    let executor = Executor::with_batcher(batcher.clone(), ExecutorConfig::default());
+    let handle = serve(executor, ServiceConfig { addr: "127.0.0.1:0".into() }).unwrap();
     let addr = handle.addr.to_string();
     Some((handle, addr, batcher))
 }
@@ -41,6 +49,8 @@ fn plan_request_round_trip() {
         Some(ckptfp::util::json::Json::Arr(xs)) => assert_eq!(xs.len(), 6),
         other => panic!("bad strategies field: {other:?}"),
     }
+    // A v1 request gets the v1 response shape: no "v" marker.
+    assert!(v.get("v").is_none(), "legacy response must not carry 'v': {v:?}");
     handle.stop();
 }
 
@@ -62,10 +72,9 @@ fn ping_stats_and_errors() {
     let v = client.call(r#"{"mu": 7500, "recall": 0.7, "precision": 0.4}"#).unwrap();
     assert_eq!(v.get("ok").and_then(|b| b.as_bool()), Some(true));
 
-    // Only the one valid plan request reached the batcher (errors and
-    // pings are handled at the protocol layer).
     let stats = client.call(r#"{"op": "stats"}"#).unwrap();
     assert!(stats.num_or("requests", 0.0) >= 1.0);
+    assert!(stats.num_or("errors", 0.0) >= 2.0);
     handle.stop();
 }
 
@@ -95,16 +104,7 @@ fn concurrent_clients_batch_together() {
 
 #[test]
 fn batcher_direct_plan_many() {
-    let batcher = match Batcher::spawn(
-        HloPlanner::open_default,
-        BatcherConfig { max_batch: 64, max_delay: Duration::from_millis(1), ..Default::default() },
-    ) {
-        Ok(b) => b,
-        Err(e) => {
-            eprintln!("skipping batcher test: {e:#}");
-            return;
-        }
-    };
+    let Some(batcher) = spawn_batcher() else { return };
     let s = ckptfp::config::Scenario::paper(
         1 << 16,
         ckptfp::config::Predictor::windowed(0.85, 0.82, 300.0),
@@ -116,4 +116,18 @@ fn batcher_direct_plan_many() {
         assert!((o.winner_waste - outs[0].winner_waste).abs() < 1e-9);
     }
     batcher.shutdown();
+}
+
+#[test]
+fn typed_client_rides_the_hlo_planner() {
+    let Some((handle, addr, _batcher)) = start_service() else { return };
+    let mut client = ckptfp::api::ServiceClient::connect(&addr).unwrap();
+    let scenario = ckptfp::config::Scenario::paper(
+        1 << 16,
+        ckptfp::config::Predictor::windowed(0.85, 0.82, 300.0),
+    );
+    let res = client.plan(ckptfp::api::PlanJob::new(scenario)).unwrap();
+    assert!(res.via_hlo, "service with a batcher must plan via HLO");
+    assert!(res.winner_waste > 0.0 && res.winner_waste < 1.0);
+    handle.stop();
 }
