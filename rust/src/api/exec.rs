@@ -18,8 +18,10 @@ use super::types::*;
 use crate::coordinator::{available_workers, Batcher, Metrics};
 use crate::experiments::scenario_for;
 use crate::model::{self, Params, StrategyKind};
-use crate::sim::run_replications_parallel;
-use crate::strategies::{best_period_with, spec_for, BestPeriodOptions};
+use crate::sim::{run_replications_parallel, run_replications_parallel_with, SimSession};
+use crate::strategies::{
+    best_period_with, best_policy_with, resolve_policy, spec_for, BestPeriodOptions, PolicySpec,
+};
 
 /// Tuning for an [`Executor`].
 #[derive(Debug, Clone)]
@@ -107,10 +109,22 @@ impl Executor {
 
     pub fn plan(&self, job: &PlanJob) -> Result<PlanResult, ApiError> {
         job.scenario.validate().map_err(ApiError::from_invalid)?;
+        // A policy restriction: paper strategies force the winner; the
+        // non-paper policies have no closed-form waste model.
+        let forced = match &job.policy {
+            None => None,
+            Some(PolicySpec::Strategy(kind)) => Some(*kind),
+            Some(other) => {
+                return Err(ApiError::new(
+                    ErrorCode::Unsupported,
+                    format!("policy '{other}' has no closed-form plan; use the simulate job"),
+                ))
+            }
+        };
         let params = Params::from_scenario(&job.scenario);
-        if let Some(b) = &self.batcher {
+        let mut out = if let Some(b) = &self.batcher {
             let out = b.plan(params).map_err(ApiError::from_internal)?;
-            Ok(PlanResult {
+            PlanResult {
                 waste: out.waste,
                 period: out.period,
                 winner: out.winner,
@@ -118,10 +132,10 @@ impl Executor {
                 winner_period: out.winner_period,
                 q: u8::from(out.winner != StrategyKind::Young),
                 via_hlo: true,
-            })
+            }
         } else {
             let p = model::plan(&params, job.capping, true);
-            Ok(PlanResult {
+            PlanResult {
                 waste: p.waste,
                 period: p.period,
                 winner: p.winner,
@@ -129,19 +143,41 @@ impl Executor {
                 winner_period: p.winner_period(),
                 q: p.q,
                 via_hlo: false,
-            })
+            }
+        };
+        if let Some(kind) = forced {
+            out.winner = kind;
+            out.winner_waste = out.waste[kind as usize];
+            out.winner_period = out.period[kind as usize];
+            out.q = u8::from(kind != StrategyKind::Young);
         }
+        Ok(out)
     }
 
     pub fn simulate(&self, job: &SimulateJob) -> Result<SimulateResult, ApiError> {
         let workers = self.resolve_workers(job.workers);
         let reps = if job.reps == 0 { self.cfg.reps_default } else { job.reps };
-        // EXACTPREDICTION runs against the exact-date variant of the
-        // trace, per the §5 protocol — same rule as the experiments.
-        let s = scenario_for(job.strategy, &job.scenario);
-        let spec = spec_for(job.strategy, &s, model::Capping::Uncapped);
-        let report =
-            run_replications_parallel(&s, &spec, reps, workers).map_err(ApiError::from_invalid)?;
+        let report = match &job.policy {
+            // The policy layer: resolve against the scenario and run on
+            // the same pool path. A Strategy(...) policy is
+            // bit-identical to the classic strategy field (pinned in
+            // tests/test_policies.rs).
+            Some(pspec) => {
+                let rp = resolve_policy(pspec, &job.scenario).map_err(ApiError::from_invalid)?;
+                run_replications_parallel_with(&rp.name, reps, workers, || {
+                    SimSession::from_policy(&rp.scenario, rp.policy)
+                })
+                .map_err(ApiError::from_invalid)?
+            }
+            // EXACTPREDICTION runs against the exact-date variant of the
+            // trace, per the §5 protocol — same rule as the experiments.
+            None => {
+                let s = scenario_for(job.strategy, &job.scenario);
+                let spec = spec_for(job.strategy, &s, model::Capping::Uncapped);
+                run_replications_parallel(&s, &spec, reps, workers)
+                    .map_err(ApiError::from_invalid)?
+            }
+        };
         Ok(SimulateResult {
             strategy: report.strategy,
             reps,
@@ -166,13 +202,23 @@ impl Executor {
         if candidates < 2 {
             return Err(ApiError::bad_request("best_period needs at least 2 candidates"));
         }
-        let s = scenario_for(job.strategy, &job.scenario);
-        let spec = spec_for(job.strategy, &s, model::Capping::Uncapped);
         let opts = BestPeriodOptions { workers, prune: job.prune };
-        let res = best_period_with(&s, &spec, reps, candidates as usize, &opts)
-            .map_err(ApiError::from_invalid)?;
+        let (name, res) = match &job.policy {
+            Some(pspec) => {
+                let res = best_policy_with(&job.scenario, pspec, reps, candidates as usize, &opts)
+                    .map_err(ApiError::from_invalid)?;
+                (pspec.to_string(), res)
+            }
+            None => {
+                let s = scenario_for(job.strategy, &job.scenario);
+                let spec = spec_for(job.strategy, &s, model::Capping::Uncapped);
+                let res = best_period_with(&s, &spec, reps, candidates as usize, &opts)
+                    .map_err(ApiError::from_invalid)?;
+                (spec.name, res)
+            }
+        };
         Ok(BestPeriodOutcome {
-            strategy: spec.name,
+            strategy: name,
             t_r: res.t_r,
             waste: res.waste,
             n_pruned: res.n_pruned as u64,
@@ -342,6 +388,83 @@ mod tests {
             capping: Capping::Uncapped
         })
         .is_err());
+    }
+
+    #[test]
+    fn plan_with_paper_policy_forces_the_winner() {
+        let exec = Executor::local();
+        let mut job = PlanJob::new(small_scenario());
+        job.policy = Some(PolicySpec::Strategy(StrategyKind::Young));
+        let res = exec.plan(&job).unwrap();
+        assert_eq!(res.winner, StrategyKind::Young);
+        assert_eq!(res.winner_waste, res.waste[StrategyKind::Young as usize]);
+        assert_eq!(res.winner_period, res.period[StrategyKind::Young as usize]);
+        assert_eq!(res.q, 0);
+        // The per-strategy arrays are the full plan, unchanged.
+        let free = exec.plan(&PlanJob::new(small_scenario())).unwrap();
+        assert_eq!(res.waste, free.waste);
+    }
+
+    #[test]
+    fn plan_rejects_non_paper_policies_as_unsupported() {
+        let exec = Executor::local();
+        let mut job = PlanJob::new(small_scenario());
+        job.policy = Some(PolicySpec::RiskThreshold { kappa: 1.0 });
+        let err = exec.plan(&job).unwrap_err();
+        assert_eq!(err.code, ErrorCode::Unsupported);
+        assert!(err.message.contains("risk:1"), "{}", err.message);
+    }
+
+    #[test]
+    fn simulate_policy_strategy_matches_strategy_field() {
+        // `policy: "exactprediction"` and `strategy: ExactPrediction`
+        // are the same execution, bit for bit — including the
+        // exact-date trace rule.
+        let exec = Executor::local();
+        let mut classic = SimulateJob::new(small_scenario(), StrategyKind::ExactPrediction);
+        classic.reps = 6;
+        classic.workers = Some(2);
+        let mut via_policy = classic.clone();
+        via_policy.policy = Some(PolicySpec::Strategy(StrategyKind::ExactPrediction));
+        let a = exec.simulate(&classic).unwrap();
+        let b = exec.simulate(&via_policy).unwrap();
+        assert_eq!(a.strategy, b.strategy);
+        assert_eq!(a.mean_waste.to_bits(), b.mean_waste.to_bits());
+        assert_eq!(a.n_faults, b.n_faults);
+        assert_eq!(a.n_ckpts, b.n_ckpts);
+    }
+
+    #[test]
+    fn simulate_runs_non_paper_policies_end_to_end() {
+        let exec = Executor::local();
+        for policy in [
+            PolicySpec::AdaptivePeriod { gain: 1.0 },
+            PolicySpec::RiskThreshold { kappa: 1.0 },
+        ] {
+            let mut job = SimulateJob::new(small_scenario(), StrategyKind::Young);
+            job.reps = 6;
+            job.workers = Some(2);
+            job.policy = Some(policy);
+            let res = exec.simulate(&job).unwrap();
+            assert_eq!(res.strategy, policy.to_string());
+            assert_eq!(res.completion_rate, 1.0, "{policy}");
+            assert!(res.mean_waste > 0.0 && res.mean_waste < 1.0, "{policy}");
+            assert!(res.n_ckpts > 0, "{policy}");
+        }
+    }
+
+    #[test]
+    fn best_period_sweeps_policy_parameters() {
+        let exec = Executor::local();
+        let mut job = BestPeriodJob::new(small_scenario(), StrategyKind::Young);
+        job.reps = 4;
+        job.candidates = 4;
+        job.workers = Some(2);
+        job.policy = Some(PolicySpec::RiskThreshold { kappa: 1.0 });
+        let res = exec.best_period(&job).unwrap();
+        assert_eq!(res.strategy, "risk:1");
+        assert_eq!(res.sweep.len(), 4);
+        assert!(res.t_r >= 0.25 && res.t_r <= 4.0, "kappa {}", res.t_r);
     }
 
     #[test]

@@ -15,6 +15,7 @@
 
 use crate::config::Scenario;
 use crate::model::{Capping, StrategyKind};
+use crate::strategies::PolicySpec;
 
 /// One job, as accepted by [`crate::api::Executor::execute`] and the
 /// TCP service alike.
@@ -55,11 +56,15 @@ pub struct PlanJob {
     /// Period-domain treatment for the analytic path (the HLO planner
     /// bakes its own); defaults to the §5 `Uncapped` convention.
     pub capping: Capping,
+    /// Additive v2 field: restrict the plan to one policy. A paper
+    /// strategy forces the winner to that strategy; non-paper policies
+    /// have no closed form and are answered `unsupported`.
+    pub policy: Option<PolicySpec>,
 }
 
 impl PlanJob {
     pub fn new(scenario: Scenario) -> PlanJob {
-        PlanJob { scenario, capping: Capping::Uncapped }
+        PlanJob { scenario, capping: Capping::Uncapped, policy: None }
     }
 }
 
@@ -72,11 +77,16 @@ pub struct SimulateJob {
     pub reps: u64,
     /// Pool width; `None` = the executor's configured default.
     pub workers: Option<u64>,
+    /// Additive v2 field: run this [`PolicySpec`] instead of
+    /// `strategy` (which is ignored when a policy is present). This is
+    /// how the non-paper policies (`adaptive`, `risk`) are reached
+    /// over the wire.
+    pub policy: Option<PolicySpec>,
 }
 
 impl SimulateJob {
     pub fn new(scenario: Scenario, strategy: StrategyKind) -> SimulateJob {
-        SimulateJob { scenario, strategy, reps: 0, workers: None }
+        SimulateJob { scenario, strategy, reps: 0, workers: None, policy: None }
     }
 }
 
@@ -93,11 +103,24 @@ pub struct BestPeriodJob {
     pub workers: Option<u64>,
     /// Enable the coarse-pass pruning heuristic.
     pub prune: bool,
+    /// Additive v2 field: search this policy's parameter instead of
+    /// `strategy`'s period (`strategy` is ignored when present). The
+    /// response's `t_r`/sweep carry the parameter in the policy's own
+    /// units (T_R seconds, adaptive gain, or risk kappa).
+    pub policy: Option<PolicySpec>,
 }
 
 impl BestPeriodJob {
     pub fn new(scenario: Scenario, strategy: StrategyKind) -> BestPeriodJob {
-        BestPeriodJob { scenario, strategy, reps: 0, candidates: 0, workers: None, prune: false }
+        BestPeriodJob {
+            scenario,
+            strategy,
+            reps: 0,
+            candidates: 0,
+            workers: None,
+            prune: false,
+            policy: None,
+        }
     }
 }
 

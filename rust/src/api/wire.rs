@@ -16,6 +16,7 @@ use super::types::*;
 use crate::config::{Predictor, Scenario};
 use crate::dist::DistSpec;
 use crate::model::{Capping, StrategyKind};
+use crate::strategies::PolicySpec;
 use crate::util::json::{parse, Json};
 
 /// The protocol version this build speaks natively.
@@ -57,21 +58,30 @@ pub fn decode_request(line: &str) -> Result<Decoded, ApiError> {
         "plan" => JobRequest::Plan(PlanJob {
             scenario: scenario_from_json(require(&v, "scenario")?)?,
             capping: capping_from_json(&v),
+            policy: policy_from_json(&v)?,
         }),
-        "simulate" => JobRequest::Simulate(SimulateJob {
-            scenario: scenario_from_json(require(&v, "scenario")?)?,
-            strategy: strategy_from_json(&v)?,
-            reps: u64_or(&v, "reps", 0),
-            workers: opt_u64(&v, "workers"),
-        }),
-        "best_period" | "best-period" => JobRequest::BestPeriod(BestPeriodJob {
-            scenario: scenario_from_json(require(&v, "scenario")?)?,
-            strategy: strategy_from_json(&v)?,
-            reps: u64_or(&v, "reps", 0),
-            candidates: u64_or(&v, "candidates", 0),
-            workers: opt_u64(&v, "workers"),
-            prune: v.get("prune").and_then(Json::as_bool).unwrap_or(false),
-        }),
+        "simulate" => {
+            let policy = policy_from_json(&v)?;
+            JobRequest::Simulate(SimulateJob {
+                scenario: scenario_from_json(require(&v, "scenario")?)?,
+                strategy: strategy_from_json(&v, policy.is_some())?,
+                reps: u64_or(&v, "reps", 0),
+                workers: opt_u64(&v, "workers"),
+                policy,
+            })
+        }
+        "best_period" | "best-period" => {
+            let policy = policy_from_json(&v)?;
+            JobRequest::BestPeriod(BestPeriodJob {
+                scenario: scenario_from_json(require(&v, "scenario")?)?,
+                strategy: strategy_from_json(&v, policy.is_some())?,
+                reps: u64_or(&v, "reps", 0),
+                candidates: u64_or(&v, "candidates", 0),
+                workers: opt_u64(&v, "workers"),
+                prune: v.get("prune").and_then(Json::as_bool).unwrap_or(false),
+                policy,
+            })
+        }
         "sweep" => {
             let n_procs = match v.get("n_procs") {
                 Some(Json::Arr(xs)) => xs
@@ -138,7 +148,7 @@ fn decode_v1(v: &Json) -> Result<JobRequest, ApiError> {
                 .migration(p.m)
                 .build()
                 .map_err(ApiError::from_invalid)?;
-            JobRequest::Plan(PlanJob { scenario, capping: Capping::Uncapped })
+            JobRequest::Plan(PlanJob { scenario, capping: Capping::Uncapped, policy: None })
         }
     })
 }
@@ -153,6 +163,9 @@ pub fn encode_request(req: &JobRequest) -> String {
         JobRequest::Plan(job) => {
             fields.push(("scenario", scenario_to_json(&job.scenario)));
             fields.push(("capped", Json::Bool(job.capping == Capping::Capped)));
+            if let Some(p) = &job.policy {
+                fields.push(("policy", Json::Str(p.to_string())));
+            }
         }
         JobRequest::Simulate(job) => {
             fields.push(("scenario", scenario_to_json(&job.scenario)));
@@ -160,6 +173,9 @@ pub fn encode_request(req: &JobRequest) -> String {
             fields.push(("reps", Json::Num(job.reps as f64)));
             if let Some(w) = job.workers {
                 fields.push(("workers", Json::Num(w as f64)));
+            }
+            if let Some(p) = &job.policy {
+                fields.push(("policy", Json::Str(p.to_string())));
             }
         }
         JobRequest::BestPeriod(job) => {
@@ -171,6 +187,9 @@ pub fn encode_request(req: &JobRequest) -> String {
                 fields.push(("workers", Json::Num(w as f64)));
             }
             fields.push(("prune", Json::Bool(job.prune)));
+            if let Some(p) = &job.policy {
+                fields.push(("policy", Json::Str(p.to_string())));
+            }
         }
         JobRequest::Sweep(job) => {
             fields.push(("scenario", scenario_to_json(&job.base)));
@@ -610,12 +629,27 @@ fn capping_from_json(v: &Json) -> Capping {
     }
 }
 
-fn strategy_from_json(v: &Json) -> Result<StrategyKind, ApiError> {
-    v.get("strategy")
-        .and_then(Json::as_str)
-        .ok_or_else(|| ApiError::bad_request("missing 'strategy'"))?
-        .parse::<StrategyKind>()
-        .map_err(ApiError::from_invalid)
+/// The `strategy` field; optional (defaulting to Young, which the
+/// executor then ignores) when a `policy` field is standing in for it.
+fn strategy_from_json(v: &Json, has_policy: bool) -> Result<StrategyKind, ApiError> {
+    match v.get("strategy").and_then(Json::as_str) {
+        Some(s) => s.parse::<StrategyKind>().map_err(ApiError::from_invalid),
+        None if has_policy => Ok(StrategyKind::Young),
+        None => Err(ApiError::bad_request("missing 'strategy'")),
+    }
+}
+
+/// The additive v2 `policy` field: a policy spec string
+/// (`"Young"`, `"adaptive:0.8"`, `"risk:2"`, …); absent means the
+/// classic `strategy` path.
+fn policy_from_json(v: &Json) -> Result<Option<PolicySpec>, ApiError> {
+    match v.get("policy") {
+        None => Ok(None),
+        Some(j) => match j.as_str() {
+            Some(s) => s.parse::<PolicySpec>().map(Some).map_err(ApiError::from_invalid),
+            None => Err(ApiError::bad_request("'policy' must be a policy spec string")),
+        },
+    }
 }
 
 fn u64_or(v: &Json, key: &str, default: u64) -> u64 {

@@ -164,6 +164,43 @@ pub fn scenario_from_table(t: &Table) -> anyhow::Result<crate::config::Scenario>
     Ok(s)
 }
 
+/// Read an optional `[policy]` table into a
+/// [`crate::strategies::PolicySpec`]. The `kind` key takes any policy
+/// spec string (`"Young"`, `"adaptive:0.8"`, `"risk"`, …); the
+/// structured `gain` / `kappa` keys override the matching parameter so
+/// configs can keep numbers out of strings:
+///
+/// ```toml
+/// [policy]
+/// kind = "risk"
+/// kappa = 2.0
+/// ```
+pub fn policy_from_table(t: &Table) -> anyhow::Result<Option<crate::strategies::PolicySpec>> {
+    use crate::strategies::PolicySpec;
+    let Some(kind) = t.str("policy.kind") else {
+        anyhow::ensure!(
+            t.num("policy.kappa").is_none() && t.num("policy.gain").is_none(),
+            "[policy] parameters need a policy.kind"
+        );
+        return Ok(None);
+    };
+    let mut spec: PolicySpec = kind.parse().map_err(|e| anyhow::anyhow!("policy.kind: {e}"))?;
+    if let Some(k) = t.num("policy.kappa") {
+        match &mut spec {
+            PolicySpec::RiskThreshold { kappa } => *kappa = k,
+            _ => anyhow::bail!("policy.kappa only applies to the 'risk' policy"),
+        }
+    }
+    if let Some(g) = t.num("policy.gain") {
+        match &mut spec {
+            PolicySpec::AdaptivePeriod { gain } => *gain = g,
+            _ => anyhow::bail!("policy.gain only applies to the 'adaptive' policy"),
+        }
+    }
+    spec.validate()?;
+    Ok(Some(spec))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -230,5 +267,35 @@ work = 1.0e6
         let t = Table::parse("a = true\nb = false").unwrap();
         assert_eq!(t.bool("a"), Some(true));
         assert_eq!(t.bool("b"), Some(false));
+    }
+
+    #[test]
+    fn policy_table_forms() {
+        use crate::strategies::PolicySpec;
+        // Absent section: no policy.
+        let t = Table::parse(SAMPLE).unwrap();
+        assert_eq!(policy_from_table(&t).unwrap(), None);
+        // String form.
+        let t = Table::parse("[policy]\nkind = \"risk:2\"").unwrap();
+        assert_eq!(policy_from_table(&t).unwrap(), Some(PolicySpec::RiskThreshold { kappa: 2.0 }));
+        // Structured parameter override.
+        let t = Table::parse("[policy]\nkind = \"adaptive\"\ngain = 0.5").unwrap();
+        assert_eq!(
+            policy_from_table(&t).unwrap(),
+            Some(PolicySpec::AdaptivePeriod { gain: 0.5 })
+        );
+        // Paper strategy by name.
+        let t = Table::parse("[policy]\nkind = \"WithCkptI\"").unwrap();
+        assert_eq!(
+            policy_from_table(&t).unwrap(),
+            Some(PolicySpec::Strategy(crate::model::StrategyKind::WithCkptI))
+        );
+        // Mismatched parameter, bad kind, and orphaned parameters error.
+        let t = Table::parse("[policy]\nkind = \"risk\"\ngain = 2").unwrap();
+        assert!(policy_from_table(&t).is_err());
+        let t = Table::parse("[policy]\nkind = \"bogus\"").unwrap();
+        assert!(policy_from_table(&t).is_err());
+        let t = Table::parse("[policy]\nkappa = 2").unwrap();
+        assert!(policy_from_table(&t).is_err());
     }
 }

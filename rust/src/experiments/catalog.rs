@@ -1,13 +1,15 @@
 //! Table 3 — and an extension the paper stops short of: evaluate every
-//! predictor from the literature survey with the analytical planner and
-//! report the waste/time gain it would deliver on the §5 platforms.
+//! predictor from the literature survey with the analytical planner,
+//! report the waste/time gain it would deliver on the §5 platforms,
+//! and cross-check each winner's analytic waste against the simulator
+//! (the replication budget comes from [`ExpOptions`]).
 
-use super::{scenario_for, ExpOptions, ExperimentResult};
+use super::{sim_waste, ExpOptions, ExperimentResult};
 use crate::config::{predictor_catalog, Scenario};
 use crate::model::{optimize, plan, Capping, Params, StrategyKind};
 use crate::report::Table;
 
-pub fn table_catalog(_opts: &ExpOptions) -> anyhow::Result<ExperimentResult> {
+pub fn table_catalog(opts: &ExpOptions) -> anyhow::Result<ExperimentResult> {
     let mut result = ExperimentResult::default();
     let mut t = Table::new([
         "predictor",
@@ -18,6 +20,7 @@ pub fn table_catalog(_opts: &ExpOptions) -> anyhow::Result<ExperimentResult> {
         "gain 2^16",
         "waste 2^19",
         "gain 2^19",
+        "sim 2^16",
         "winner",
     ]);
     for entry in predictor_catalog() {
@@ -32,19 +35,28 @@ pub fn table_catalog(_opts: &ExpOptions) -> anyhow::Result<ExperimentResult> {
                 .unwrap_or_else(|| "-".into()),
         ];
         let mut winner_name = String::new();
+        let mut sim_cell = String::new();
         for n in [1u64 << 16, 1u64 << 19] {
             let s = Scenario::paper(n, pred.clone());
             let params = Params::from_scenario(&s);
             let best = plan(&params, Capping::Uncapped, false);
             // Gain in execution time vs Young: 1 − (1−w_Y)/(1−w*).
-            let sy = scenario_for(StrategyKind::Young, &s);
-            let py = Params::from_scenario(&sy);
-            let (_, wy) = optimize(&py, StrategyKind::Young, Capping::Uncapped);
+            // (Young ignores the predictor, so its params are the
+            // scenario's own — no exactification needed.)
+            let (_, wy) = optimize(&params, StrategyKind::Young, Capping::Uncapped);
             let gain = 100.0 * (1.0 - (1.0 - wy) / (1.0 - best.winner_waste().min(0.999)));
             cells.push(format!("{:.3}", best.winner_waste()));
             cells.push(format!("{gain:.0}%"));
             winner_name = best.winner.name().to_string();
+            if n == 1 << 16 {
+                // Simulated cross-check of the analytic winner, on the
+                // caller's replication/worker budget (honoring `opts`
+                // like every other experiment entry point).
+                let sim = sim_waste(&s, best.winner, opts);
+                sim_cell = format!("{:.3} (x{})", sim.mean(), opts.reps);
+            }
         }
+        cells.push(sim_cell);
         cells.push(winner_name);
         t.row(cells);
     }
@@ -59,7 +71,8 @@ mod tests {
 
     #[test]
     fn catalog_table_complete() {
-        let r = table_catalog(&ExpOptions::quick()).unwrap();
+        let opts = ExpOptions { reps: 2, ..ExpOptions::quick() };
+        let r = table_catalog(&opts).unwrap();
         assert_eq!(r.tables.len(), 1);
         let rendered = r.render();
         // All 11 literature rows present.
@@ -67,6 +80,9 @@ mod tests {
             assert!(rendered.contains(src), "missing {src}");
         }
         assert_eq!(rendered.matches('\n').count() >= 12, true);
+        // The simulated cross-check column honors the caller's budget.
+        assert!(rendered.contains("sim 2^16"));
+        assert!(rendered.contains("(x2)"), "sim column must echo opts.reps:\n{rendered}");
     }
 
     #[test]

@@ -7,13 +7,14 @@
 pub mod ablations;
 pub mod catalog;
 pub mod figures;
+pub mod policies;
 pub mod sweep;
 pub mod tables;
 
 use crate::config::Scenario;
 use crate::coordinator::{available_workers, run_parallel_fold};
 use crate::model::{Capping, StrategyKind};
-use crate::sim::{fold_waste_product, rep_blocks, Outcome, SimSession};
+use crate::sim::{fold_waste_product, rep_blocks, Outcome, Policy, SimSession};
 use crate::strategies::{exactify, spec_for, StrategySpec};
 use crate::util::stats::Summary;
 
@@ -135,12 +136,35 @@ pub fn sim_waste_grid(
     for (s, _) in points {
         s.validate().expect("invalid scenario");
     }
-    let all: Vec<usize> = (0..points.len()).collect();
-    let tasks = rep_blocks(&all, 0, reps, workers);
-    fold_waste_product(&tasks, points.len(), workers, |pi| {
+    waste_grid_with(points.len(), reps, workers, |pi| {
         let (s, spec) = &points[pi];
         SimSession::new(s, spec).expect("scenario validated above")
     })
+}
+
+/// Policy-layer analogue of [`sim_waste_grid`]: a grid of
+/// (scenario, [`Policy`]) points × `reps` through one pool pass, with
+/// per-point session reuse. Resolve specs with
+/// [`crate::strategies::resolve_policy`] first.
+pub fn sim_policy_grid(points: &[(Scenario, Policy)], reps: u64, workers: usize) -> Vec<Summary> {
+    for (s, _) in points {
+        s.validate().expect("invalid scenario");
+    }
+    waste_grid_with(points.len(), reps, workers, |pi| {
+        let (s, policy) = &points[pi];
+        SimSession::from_policy(s, *policy).expect("scenario validated above")
+    })
+}
+
+/// The shared grid core: block the (point × rep) product and fold it
+/// through the pool, one reused session per worker per point.
+fn waste_grid_with<F>(n_points: usize, reps: u64, workers: usize, make: F) -> Vec<Summary>
+where
+    F: Fn(usize) -> SimSession + Sync,
+{
+    let all: Vec<usize> = (0..n_points).collect();
+    let tasks = rep_blocks(&all, 0, reps, workers);
+    fold_waste_product(&tasks, n_points, workers, make)
 }
 
 /// Mean simulated waste of `kind` on `scenario`: `reps` paired
@@ -199,8 +223,9 @@ pub fn run_experiment(id: &str, opts: &ExpOptions) -> anyhow::Result<ExperimentR
         "abl-daly" => ablations::ablation_daly(opts),
         "abl-lead" => ablations::ablation_lead(opts),
         "abl-cap" => ablations::ablation_cap(opts),
+        "policy-comparison" | "policy_comparison" => policies::policy_comparison(opts),
         other => anyhow::bail!(
-            "unknown experiment '{other}' (expected fig4..fig11 | tab1..tab3 | abl-q | abl-daly | abl-lead | abl-cap)"
+            "unknown experiment '{other}' (expected fig4..fig11 | tab1..tab3 | abl-q | abl-daly | abl-lead | abl-cap | policy-comparison)"
         ),
     }
 }
@@ -210,10 +235,11 @@ pub fn paper_experiments() -> Vec<&'static str> {
     vec!["fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "tab1", "tab2", "tab3"]
 }
 
-/// Everything: the paper's figures/tables plus the ablations.
+/// Everything: the paper's figures/tables, the ablations, and the
+/// policy-layer comparison.
 pub fn all_experiments() -> Vec<&'static str> {
     let mut v = paper_experiments();
-    v.extend(["abl-q", "abl-daly", "abl-lead", "abl-cap"]);
+    v.extend(["abl-q", "abl-daly", "abl-lead", "abl-cap", "policy-comparison"]);
     v
 }
 
@@ -265,8 +291,9 @@ mod tests {
     #[test]
     fn experiment_ids_complete() {
         // One per figure and table of §5 — the (d) deliverable checklist —
-        // plus the four ablations.
+        // plus the four ablations and the policy comparison.
         assert_eq!(paper_experiments().len(), 11);
-        assert_eq!(all_experiments().len(), 15);
+        assert_eq!(all_experiments().len(), 16);
+        assert!(all_experiments().contains(&"policy-comparison"));
     }
 }

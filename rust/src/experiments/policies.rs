@@ -1,0 +1,95 @@
+//! Policy comparison — the experiment the monolithic engine could not
+//! run: the paper's fixed-period strategies against the non-paper
+//! policies (`adaptive`, `risk`) of the pluggable policy layer, as
+//! simulated waste curves over the §5 platform sweep.
+//!
+//! Setting: the Yu predictor (p = 0.82, r = 0.85, I = 300 s) under
+//! Weibull k = 0.7 failures — the Figure 4 configuration — so the
+//! paper curves here are directly comparable to `fig4`'s.
+
+use super::{sim_policy_grid, ExpOptions, ExperimentResult};
+use crate::config::{paper_proc_counts, predictor_yu, Scenario};
+use crate::model::StrategyKind;
+use crate::report::{FigureData, Table};
+use crate::sim::Policy;
+use crate::strategies::{resolve_policy, PolicySpec};
+
+/// The policy roster: old (expressible pre-refactor) and new.
+pub fn comparison_policies() -> Vec<PolicySpec> {
+    vec![
+        PolicySpec::Strategy(StrategyKind::Young),
+        PolicySpec::Strategy(StrategyKind::ExactPrediction),
+        PolicySpec::Strategy(StrategyKind::NoCkptI),
+        PolicySpec::AdaptivePeriod { gain: 1.0 },
+        PolicySpec::RiskThreshold { kappa: 1.0 },
+    ]
+}
+
+/// Waste of every roster policy at every §5 platform size, flattened
+/// into one pool pass, plus a summary table at N = 2^16.
+pub fn policy_comparison(opts: &ExpOptions) -> anyhow::Result<ExperimentResult> {
+    let specs = comparison_policies();
+    let mut fig = FigureData::new("policy-comparison", "N", "waste");
+    let mut keys: Vec<(u64, String)> = Vec::new();
+    let mut points: Vec<(Scenario, Policy)> = Vec::new();
+    for n in paper_proc_counts() {
+        let mut s = Scenario::paper(n, predictor_yu(300.0));
+        s.fault_dist = crate::dist::DistSpec::weibull(0.7);
+        for pspec in &specs {
+            let rp = resolve_policy(pspec, &s)?;
+            keys.push((n, rp.name.clone()));
+            points.push((rp.scenario, rp.policy));
+        }
+    }
+    let sums = sim_policy_grid(&points, opts.reps, opts.workers);
+    for ((n, name), sum) in keys.iter().zip(&sums) {
+        fig.series_mut(name).push(*n as f64, sum.mean());
+    }
+
+    // Summary table at the paper's headline size.
+    let mut t = Table::new(["policy", "waste 2^16", "ci95"]);
+    let n16 = 1u64 << 16;
+    for ((n, name), sum) in keys.iter().zip(&sums) {
+        if *n == n16 {
+            t.row([name.clone(), format!("{:.4}", sum.mean()), format!("{:.4}", sum.ci95())]);
+        }
+    }
+
+    let mut result = ExperimentResult::default();
+    result.figures.push(fig);
+    result.tables.push(("policy-comparison-2^16".into(), t));
+    Ok(result)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comparison_covers_old_and_new_policies() {
+        let roster = comparison_policies();
+        assert!(roster.iter().any(|p| matches!(p, PolicySpec::Strategy(_))));
+        assert!(roster.iter().any(|p| matches!(p, PolicySpec::AdaptivePeriod { .. })));
+        assert!(roster.iter().any(|p| matches!(p, PolicySpec::RiskThreshold { .. })));
+    }
+
+    #[test]
+    fn policy_comparison_structure() {
+        let opts = ExpOptions { reps: 2, ..ExpOptions::quick() };
+        let r = policy_comparison(&opts).unwrap();
+        assert_eq!(r.figures.len(), 1);
+        let fig = &r.figures[0];
+        // One series per roster policy, one point per platform size.
+        assert_eq!(fig.series.len(), comparison_policies().len());
+        for s in &fig.series {
+            assert_eq!(s.points.len(), 6, "{}", s.label);
+            for &(_, w) in &s.points {
+                assert!((0.0..=1.0).contains(&w), "{}: waste {w}", s.label);
+            }
+        }
+        assert!(fig.get("adaptive:1").is_some());
+        assert!(fig.get("risk:1").is_some());
+        assert!(fig.get("Young").is_some());
+        assert_eq!(r.tables.len(), 1);
+    }
+}

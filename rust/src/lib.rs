@@ -11,10 +11,14 @@
 //!   grid-argmin plans natively;
 //! * [`trace`] — stochastic fault + predictor simulation (recall,
 //!   precision, exact dates or prediction windows, lead time);
-//! * [`sim`] — the discrete-event execution engine that replays a
-//!   checkpointing strategy against a trace;
+//! * [`sim`] — the discrete-event execution core plus the pluggable
+//!   checkpoint-policy layer ([`sim::Policy`]): the core replays a
+//!   policy against a trace, the policy answers when to checkpoint,
+//!   whether to trust a prediction, and what to do inside a window;
 //! * [`strategies`] — Young, Daly, ExactPrediction, Instant, NoCkptI,
-//!   WithCkptI, Migration and the brute-force BestPeriod search;
+//!   WithCkptI, Migration (as fixed-period policies), the non-paper
+//!   policies (`adaptive`, `risk` via [`strategies::PolicySpec`]) and
+//!   the brute-force BestPeriod / policy-parameter search;
 //! * [`coordinator`] — leader/worker pools, a dynamic batcher for
 //!   planning requests and the TCP/JSONL job service;
 //! * [`api`] — the crate's one public job surface: typed
@@ -58,7 +62,9 @@ pub mod prelude {
     pub use crate::dist::{Dist, DistSpec, Distribution, Exponential, Uniform, Weibull};
     pub use crate::model::{Capping, OptimalPlan, StrategyKind};
     pub use crate::rng::Pcg64;
-    pub use crate::sim::{Outcome, SimConfig, SimSession};
-    pub use crate::strategies::{ProactiveMode, StrategySpec};
+    pub use crate::sim::{Outcome, Policy, PolicyCtx, SimConfig, SimSession};
+    pub use crate::strategies::{
+        resolve_policy, PolicySpec, ProactiveMode, ResolvedPolicy, StrategySpec,
+    };
     pub use crate::util::stats::Summary;
 }

@@ -4,15 +4,19 @@
 //! same typed jobs.
 //!
 //! ```text
-//! ckptfp plan        [--n-procs N | --mu-mn M] [--recall R --precision P --window I] [--hlo] [--json]
-//! ckptfp simulate    [--strategy NAME] [--n-procs N] [--reps K] [--workers W] [--dist exp|weibull:K]
-//! ckptfp best-period [--strategy NAME] [--reps K] [--candidates N] [--prune] [scenario flags]
-//! ckptfp experiment  <fig4..fig11|tab1|tab2|tab3|all> [--reps K] [--best-period] [--out DIR]
+//! ckptfp plan        [--n-procs N | --mu-mn M] [--recall R --precision P --window I] [--policy P] [--hlo] [--json]
+//! ckptfp simulate    [--strategy NAME | --policy P] [--n-procs N] [--reps K] [--workers W] [--dist exp|weibull:K]
+//! ckptfp best-period [--strategy NAME | --policy P] [--reps K] [--candidates N] [--prune] [scenario flags]
+//! ckptfp experiment  <fig4..fig11|tab1..tab3|policy-comparison|all> [--reps K] [--best-period] [--out DIR]
 //! ckptfp serve       [--addr HOST:PORT] [--workers W] [--reps-default K]
 //! ckptfp client      <plan|simulate|best-period|ping|stats> --addr HOST:PORT [job flags]
 //! ckptfp trace       [--out FILE] [--horizon SECONDS] [--n-procs N]
-//! ckptfp config      <file.toml> — validate and print a scenario
+//! ckptfp config      <file.toml> — validate and print a scenario (+ optional [policy])
 //! ```
+//!
+//! `--policy` takes a policy spec: a strategy name (`Young`,
+//! `ExactPrediction`, …) or one of the non-paper policies
+//! (`adaptive[:gain]`, `risk[:kappa]`).
 
 use anyhow::Context;
 use ckptfp::api::{
@@ -26,6 +30,7 @@ use ckptfp::dist::DistSpec;
 use ckptfp::experiments::{all_experiments, run_experiment, ExpOptions};
 use ckptfp::model::{Capping, Params, StrategyKind};
 use ckptfp::report::Table;
+use ckptfp::strategies::PolicySpec;
 use ckptfp::trace::TraceGen;
 use ckptfp::util::units::MIN;
 
@@ -90,13 +95,16 @@ ckptfp — fault-prediction-aware checkpointing (Aupy et al. 2012 reproduction)
 
 commands:
   plan         optimal strategy/period for a platform + predictor
-  simulate     discrete-event simulation of one strategy (worker pool)
-  best-period  brute-force §5 period search by simulation
-  experiment   regenerate a paper figure/table (fig4..fig11, tab1..tab3, all)
+  simulate     discrete-event simulation of one strategy or policy (worker pool)
+  best-period  brute-force §5 period search by simulation (--policy sweeps
+               a policy's own parameter: T_R, adaptive gain, or risk kappa)
+  experiment   regenerate a paper figure/table (fig4..fig11, tab1..tab3,
+               policy-comparison, all)
   serve        TCP/JSONL job service (protocol v2; v1 planner dialect adapted)
   client       run plan/simulate/best-period jobs against a remote service
   trace        dump a generated fault/prediction trace
   config       validate a TOML scenario file
+policies (--policy): a strategy name, adaptive[:gain], or risk[:kappa]
 ";
 
 fn print_plan(s: &Scenario, out: &PlanResult) {
@@ -130,6 +138,7 @@ fn cmd_plan(args: &mut Args) -> anyhow::Result<()> {
     let use_hlo = args.switch("hlo");
     let as_json = args.switch("json");
     let capped = args.switch("capped");
+    let policy = args.get_opt::<PolicySpec>("policy")?;
     let s = scenario_from_args(args)?;
     args.finish()?;
 
@@ -141,7 +150,7 @@ fn cmd_plan(args: &mut Args) -> anyhow::Result<()> {
         Executor::local()
     };
     let capping = if capped { Capping::Capped } else { Capping::Uncapped };
-    let out = executor.plan(&PlanJob { scenario: s.clone(), capping })?;
+    let out = executor.plan(&PlanJob { scenario: s.clone(), capping, policy })?;
 
     if as_json {
         println!(
@@ -172,10 +181,11 @@ fn print_simulate(res: &SimulateResult) {
 
 fn simulate_job_from_args(args: &mut Args) -> anyhow::Result<SimulateJob> {
     let strategy: StrategyKind = args.get_str("strategy", "ExactPrediction").parse()?;
+    let policy = args.get_opt::<PolicySpec>("policy")?;
     let reps: u64 = args.get("reps", 20)?;
     let workers = args.get_opt::<u64>("workers")?;
     let scenario = scenario_from_args(args)?;
-    Ok(SimulateJob { scenario, strategy, reps, workers })
+    Ok(SimulateJob { scenario, strategy, reps, workers, policy })
 }
 
 fn cmd_simulate(args: &mut Args) -> anyhow::Result<()> {
@@ -183,11 +193,16 @@ fn cmd_simulate(args: &mut Args) -> anyhow::Result<()> {
     args.finish()?;
     let res = Executor::local().simulate(&job)?;
     print_simulate(&res);
-    let s = ckptfp::experiments::scenario_for(job.strategy, &job.scenario);
-    let spec = ckptfp::strategies::spec_for(job.strategy, &s, Capping::Uncapped);
-    let p = Params::from_scenario(&s);
-    let analytic = ckptfp::model::waste_of(&p, job.strategy, spec.t_r, ckptfp::model::tp_opt(&p));
-    println!("analytic waste at T_R = {:.1}: {:.4}", spec.t_r, analytic);
+    // The analytic comparison line exists only for the closed-form
+    // (paper strategy) waste model.
+    if job.policy.is_none() {
+        let s = ckptfp::experiments::scenario_for(job.strategy, &job.scenario);
+        let spec = ckptfp::strategies::spec_for(job.strategy, &s, Capping::Uncapped);
+        let p = Params::from_scenario(&s);
+        let analytic =
+            ckptfp::model::waste_of(&p, job.strategy, spec.t_r, ckptfp::model::tp_opt(&p));
+        println!("analytic waste at T_R = {:.1}: {:.4}", spec.t_r, analytic);
+    }
     Ok(())
 }
 
@@ -203,12 +218,13 @@ fn print_best_period(res: &BestPeriodOutcome) {
 
 fn best_period_job_from_args(args: &mut Args) -> anyhow::Result<BestPeriodJob> {
     let strategy: StrategyKind = args.get_str("strategy", "Young").parse()?;
+    let policy = args.get_opt::<PolicySpec>("policy")?;
     let reps: u64 = args.get("reps", 10)?;
     let candidates: u64 = args.get("candidates", 16)?;
     let workers = args.get_opt::<u64>("workers")?;
     let prune = args.switch("prune");
     let scenario = scenario_from_args(args)?;
-    Ok(BestPeriodJob { scenario, strategy, reps, candidates, workers, prune })
+    Ok(BestPeriodJob { scenario, strategy, reps, candidates, workers, prune, policy })
 }
 
 fn cmd_best_period(args: &mut Args) -> anyhow::Result<()> {
@@ -287,11 +303,12 @@ fn cmd_client(args: &mut Args) -> anyhow::Result<()> {
     match verb.as_str() {
         "plan" => {
             let capped = args.switch("capped");
+            let policy = args.get_opt::<PolicySpec>("policy")?;
             let scenario = scenario_from_args(args)?;
             args.finish()?;
             let mut client = ServiceClient::connect(&addr)?;
             let capping = if capped { Capping::Capped } else { Capping::Uncapped };
-            let out = client.plan(PlanJob { scenario: scenario.clone(), capping })?;
+            let out = client.plan(PlanJob { scenario: scenario.clone(), capping, policy })?;
             print_plan(&scenario, &out);
         }
         "simulate" => {
@@ -358,5 +375,9 @@ fn cmd_config(args: &mut Args) -> anyhow::Result<()> {
     let s = ckptfp::config::toml::scenario_from_table(&table)?;
     println!("{s:#?}");
     println!("platform MTBF: {:.1} mn", s.mu() / MIN);
+    if let Some(p) = ckptfp::config::toml::policy_from_table(&table)? {
+        let rp = ckptfp::strategies::resolve_policy(&p, &s)?;
+        println!("policy: {p} -> {:?}", rp.policy);
+    }
     Ok(())
 }

@@ -1,23 +1,28 @@
-//! The discrete-event execution engine.
+//! The discrete-event execution core.
 //!
 //! One engine instance replays one job against one event trace under
-//! one strategy. The machine alternates *segments* — work, checkpoint,
-//! downtime, recovery, migration — and every segment can be cut short
-//! by a fault. Prediction handling follows the paper's algorithms:
+//! one [`Policy`]. The core owns only mechanics — time and segment
+//! accounting, the fault & prediction stream plumbing, outcome
+//! bookkeeping; everything strategic (period, trust, window response)
+//! is a policy answer (see [`crate::sim::policy`]). The machine
+//! alternates *segments* — work, checkpoint, downtime, recovery,
+//! migration — and every segment can be cut short by a fault.
+//! Prediction handling follows the paper's algorithms:
 //!
 //! * a prediction becomes known at `avail = t0 − lead`; the trust
-//!   decision (probability q) is drawn immediately;
+//!   decision ([`Policy::trust`]) is drawn immediately;
 //! * a trusted prediction schedules a proactive action: checkpoint
 //!   completing right at t0 (Figure 1(a)), or — when a regular
 //!   checkpoint runs past `t0 − C` — extra work up to t0 and no extra
 //!   checkpoint (Figure 1(b));
-//! * at t0 the engine enters the window phase per the strategy's
+//! * at t0 the engine enters the window phase per the policy's
 //!   [`ProactiveMode`]: return to regular (`CkptBefore`), work
 //!   unprotected to `t0 + I` (`SkipWindow`), or loop proactive
 //!   checkpoints of period T_P (`CkptDuring`, Algorithm 1);
 //! * regular-mode period accounting (`W_reg`, Algorithm 1 lines 12/15)
 //!   survives proactive excursions and resets on faults and regular
-//!   checkpoints.
+//!   checkpoints; whether the *policy* measures its rule on `W_reg` or
+//!   on the volatile work is its own business ([`Policy::ckpt_rule`]).
 //!
 //! Deviations from the idealized analysis (all conservative, see
 //! DESIGN.md): faults can strike during checkpoints, recoveries and
@@ -27,7 +32,7 @@
 
 use std::collections::VecDeque;
 
-use super::{Outcome, SimConfig};
+use super::{Outcome, Policy, PolicyCtx, SimConfig};
 use crate::rng::Pcg64;
 use crate::strategies::{ProactiveMode, StrategySpec};
 use crate::trace::{EventSource, Fault, Prediction};
@@ -40,17 +45,16 @@ enum Seg {
     Faulted(Fault),
 }
 
-/// The replayer. Owns its configuration (a handful of scalars copied
-/// out of [`SimConfig`]/[`StrategySpec`] at construction) so a
-/// [`crate::sim::SimSession`] can hold one engine across replications
-/// and [`Engine::reset`] it — the `pending`/`neutralized` buffers keep
-/// their capacity, making the steady state allocation-free.
+/// The replayer core. Owns its configuration (a handful of scalars
+/// copied out of [`SimConfig`] plus the [`Policy`] at construction) so
+/// a [`crate::sim::SimSession`] can hold one engine across
+/// replications and [`Engine::reset`] it — the `pending`/`neutralized`
+/// buffers keep their capacity, making the steady state
+/// allocation-free.
 pub struct Engine<S: EventSource> {
     cfg: SimConfig,
-    /// Probability of trusting a prediction (from the spec).
-    q: f64,
-    /// Proactive response mode (from the spec).
-    proactive: ProactiveMode,
+    /// The checkpoint policy (stateless; consulted per planning round).
+    policy: Policy,
     source: S,
     rng_trust: Pcg64,
 
@@ -61,9 +65,7 @@ pub struct Engine<S: EventSource> {
     vol: f64,
     /// Regular-mode work accumulated toward the current period.
     w_reg: f64,
-    /// Effective regular period (>= C + 1 s to keep progress possible).
-    t_r: f64,
-    /// Lead the strategy needs ahead of t0.
+    /// Lead the policy needs ahead of t0.
     lead: f64,
 
     next_fault: Option<Fault>,
@@ -79,20 +81,27 @@ pub struct Engine<S: EventSource> {
 }
 
 impl<S: EventSource> Engine<S> {
+    /// Engine for a paper [`StrategySpec`] — sugar over
+    /// [`Engine::with_policy`] with [`Policy::from_spec`].
     pub fn new(cfg: &SimConfig, spec: &StrategySpec, source: S, trust_seed: u64) -> Self {
-        let t_r = spec.t_r.max(cfg.c + 1.0);
-        let lead = spec.required_lead(cfg.c);
+        Self::with_policy(cfg, Policy::from_spec(spec, cfg.c), source, trust_seed)
+    }
+
+    /// Engine for an arbitrary [`Policy`]. The policy is
+    /// [`Policy::sanitized`] first, so a degenerate hand-built one
+    /// (boundary <= 0) cannot stall the core in a zero-progress loop.
+    pub fn with_policy(cfg: &SimConfig, policy: Policy, source: S, trust_seed: u64) -> Self {
+        let policy = policy.sanitized(cfg.c);
+        let lead = policy.required_lead(cfg.c);
         Engine {
             cfg: cfg.clone(),
-            q: spec.q,
-            proactive: spec.proactive,
+            policy,
             source,
             rng_trust: Pcg64::new(trust_seed, 0x7157),
             now: 0.0,
             saved: 0.0,
             vol: 0.0,
             w_reg: 0.0,
-            t_r,
             lead,
             next_fault: None,
             next_pred: None,
@@ -129,9 +138,16 @@ impl<S: EventSource> Engine<S> {
         self.saved + self.vol
     }
 
+    /// Snapshot of the execution state for one policy consultation.
     #[inline]
-    fn work_boundary(&self) -> f64 {
-        self.t_r - self.cfg.c
+    fn policy_ctx(&self) -> PolicyCtx {
+        PolicyCtx {
+            now: self.now,
+            vol: self.vol,
+            w_reg: self.w_reg,
+            n_faults: self.out.n_faults,
+            c: self.cfg.c,
+        }
     }
 
     /// Next fault that actually strikes us (skips migrated-away ones).
@@ -172,10 +188,7 @@ impl<S: EventSource> Engine<S> {
                     if p.is_true_positive() {
                         self.out.n_true_preds += 1;
                     }
-                    let ignore = matches!(self.proactive, ProactiveMode::Ignore);
-                    let trusted = !ignore
-                        && self.q > 0.0
-                        && (self.q >= 1.0 || self.rng_trust.bernoulli(self.q));
+                    let trusted = self.policy.trust(&mut self.rng_trust);
                     if trusted && p.t_end() > self.now {
                         self.out.n_trusted += 1;
                         let pos = self
@@ -282,7 +295,7 @@ impl<S: EventSource> Engine<S> {
     /// Execute the proactive response to a trusted prediction whose
     /// action point has arrived. Any fault inside aborts the response.
     fn handle_proactive(&mut self, p: Prediction) {
-        match self.proactive {
+        match self.policy.window_action() {
             ProactiveMode::Ignore => {}
             ProactiveMode::Migrate { m } => self.proactive_migrate(p, m),
             ProactiveMode::CkptBefore | ProactiveMode::SkipWindow | ProactiveMode::CkptDuring { .. } => {
@@ -338,7 +351,7 @@ impl<S: EventSource> Engine<S> {
             return; // window passed entirely during an outage
         }
         // Window phase.
-        match self.proactive {
+        match self.policy.window_action() {
             ProactiveMode::CkptBefore => {} // back to regular mode at once
             ProactiveMode::SkipWindow => {
                 // Work unprotected through the window; the interrupted
@@ -449,8 +462,10 @@ impl<S: EventSource> Engine<S> {
                 }
             }
 
-            // Regular checkpoint due?
-            if self.w_reg >= self.work_boundary() - EPS {
+            // Regular checkpoint due? (Q1: the policy's rule, measured
+            // against the core's accounting.)
+            let (measured, boundary) = self.policy.ckpt_rule(&self.policy_ctx());
+            if measured >= boundary - EPS {
                 if self.vol > 0.0 {
                     if let Seg::Faulted(f) = self.checkpoint(false) {
                         self.handle_fault(f);
@@ -461,9 +476,9 @@ impl<S: EventSource> Engine<S> {
                 continue;
             }
 
-            // Plan the next work slice.
+            // Plan the next work slice, capped at the policy's rule.
             let mut end = self.now + self.remaining_work();
-            end = end.min(self.now + (self.work_boundary() - self.w_reg).max(0.0));
+            end = end.min(self.now + (boundary - measured).max(0.0));
             if let Some(p) = self.pending.front() {
                 end = end.min((p.t0 - self.lead).max(self.now));
             }
@@ -754,6 +769,147 @@ mod tests {
         // Never completes 1000 contiguous work.
         let o = run(&c, &s, faults, vec![]);
         assert!(!o.completed);
+    }
+
+    fn run_policy(
+        cfg: &SimConfig,
+        policy: Policy,
+        faults: Vec<Fault>,
+        preds: Vec<Prediction>,
+    ) -> Outcome {
+        Engine::with_policy(cfg, policy, VecSource::new(faults, preds), 7).run()
+    }
+
+    #[test]
+    fn risk_policy_resets_on_proactive_checkpoints() {
+        // The rule the old engine could not express: RiskThreshold
+        // measures *volatile* work, so a proactive checkpoint restarts
+        // its countdown, while fixed-period W_reg accounting keeps
+        // counting. One false exact prediction at t0 = 95 (trusted,
+        // CkptBefore), W = 250, C = 10, w_star = 100 vs T_R = 110:
+        //
+        //   risk : work 85, pro-ckpt [85,95], work 100, ckpt [195,205],
+        //          work 65 -> 270 (1 regular ckpt);
+        //   paper: work 85, pro-ckpt [85,95], work 15 (W_reg hits 100),
+        //          ckpt [110,120], work 100, ckpt [220,230], work 50
+        //          -> 280 (2 regular ckpts).
+        let c = cfg(250.0);
+        let risk = Policy::RiskThreshold {
+            w_star: 100.0,
+            q: 1.0,
+            proactive: ProactiveMode::CkptBefore,
+        };
+        let preds = vec![Prediction::exact(95.0, 10.0, None)];
+        let o = run_policy(&c, risk, vec![], preds.clone());
+        assert!(o.completed);
+        assert_eq!(o.n_proactive_ckpts, 1);
+        assert_eq!(o.n_ckpts, 1);
+        assert!((o.makespan - 270.0).abs() < 1e-6, "risk makespan {}", o.makespan);
+
+        let paper = spec(110.0, ProactiveMode::CkptBefore);
+        let o = run(&c, &paper, vec![], preds);
+        assert!(o.completed);
+        assert_eq!(o.n_proactive_ckpts, 1);
+        assert_eq!(o.n_ckpts, 2);
+        assert!((o.makespan - 280.0).abs() < 1e-6, "paper makespan {}", o.makespan);
+    }
+
+    #[test]
+    fn adaptive_policy_stretches_the_period_while_fault_free() {
+        // mu0 = 500, C = 10: the prior period is sqrt(2*500*10) = 100
+        // (boundary 90). Fault-free observation grows mu_hat, so by the
+        // time W_reg reaches 90 the boundary has moved past it and the
+        // W = 95 job finishes without any checkpoint; a fixed T_R = 100
+        // pays one.
+        let c = cfg(95.0);
+        let adaptive = Policy::AdaptivePeriod {
+            mu0: 500.0,
+            gain: 1.0,
+            q: 0.0,
+            proactive: ProactiveMode::Ignore,
+        };
+        let o = run_policy(&c, adaptive, vec![], vec![]);
+        assert!(o.completed);
+        assert_eq!(o.n_ckpts, 0);
+        assert!((o.makespan - 95.0).abs() < 1e-6, "adaptive makespan {}", o.makespan);
+
+        let young = spec(100.0, ProactiveMode::Ignore);
+        let o = run(&c, &young, vec![], vec![]);
+        assert_eq!(o.n_ckpts, 1);
+        assert!((o.makespan - 105.0).abs() < 1e-6, "young makespan {}", o.makespan);
+    }
+
+    #[test]
+    fn adaptive_policy_tightens_the_period_under_faults() {
+        // Same prior, but a fault storm: the observed rate pulls the
+        // derived period below the prior, so checkpoints come sooner
+        // than the prior's 90-second boundary would place them.
+        let c = cfg(300.0);
+        let adaptive = Policy::AdaptivePeriod {
+            mu0: 500.0,
+            gain: 1.0,
+            q: 0.0,
+            proactive: ProactiveMode::Ignore,
+        };
+        let faults: Vec<Fault> =
+            (1..=8).map(|i| Fault::unpredicted(i as f64 * 40.0, i as u64)).collect();
+        let o = run_policy(&c, adaptive, faults, vec![]);
+        assert!(o.completed);
+        assert_eq!(o.n_faults, 8);
+        // After the storm (last fault at 320) the observed MTBF sits
+        // near 90 s, so the derived period drops to ~43 s — far below
+        // the prior's 100 s — and the 300 s of work pays several
+        // checkpoints the fault-free run above never would.
+        assert!(o.n_ckpts >= 4, "adapted n_ckpts = {}", o.n_ckpts);
+        assert!(o.makespan > 300.0);
+    }
+
+    #[test]
+    fn degenerate_hand_built_policies_cannot_stall_the_core() {
+        // A zero/NaN boundary through the public with_policy entry
+        // point must be floored at construction, not spin the loop
+        // (the in-tree builders all floor already; this pins the raw
+        // enum path).
+        let c = cfg(50.0);
+        for policy in [
+            Policy::Paper { t_r: 0.0, q: 0.0, proactive: ProactiveMode::Ignore },
+            Policy::Paper { t_r: f64::NAN, q: 0.0, proactive: ProactiveMode::Ignore },
+            Policy::RiskThreshold { w_star: 0.0, q: 1.0, proactive: ProactiveMode::CkptBefore },
+            Policy::AdaptivePeriod {
+                mu0: f64::NAN,
+                gain: 1.0,
+                q: 0.0,
+                proactive: ProactiveMode::Ignore,
+            },
+        ] {
+            let o = run_policy(&c, policy, vec![], vec![]);
+            assert!(o.completed, "{policy:?} stalled");
+            assert!(o.makespan >= 50.0);
+        }
+    }
+
+    #[test]
+    fn policy_engine_matches_spec_engine_bit_for_bit() {
+        // The refactor contract at the engine level: a spec-built
+        // engine and a policy-built engine are the same machine.
+        let c = cfg(2000.0);
+        for proactive in [
+            ProactiveMode::Ignore,
+            ProactiveMode::CkptBefore,
+            ProactiveMode::SkipWindow,
+            ProactiveMode::CkptDuring { t_p: 110.0 },
+            ProactiveMode::Migrate { m: 20.0 },
+        ] {
+            let s = spec(110.0, proactive);
+            let faults = vec![Fault::predicted(500.0, 0), Fault::unpredicted(901.0, 1)];
+            let preds = vec![Prediction::windowed(500.0, 200.0, 20.0, Some(0))];
+            let a = run(&c, &s, faults.clone(), preds.clone());
+            let b = run_policy(&c, Policy::from_spec(&s, c.c), faults, preds);
+            assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "{proactive:?}");
+            assert_eq!(a.n_segments, b.n_segments, "{proactive:?}");
+            assert_eq!(a.n_ckpts, b.n_ckpts, "{proactive:?}");
+            assert_eq!(a.lost_work.to_bits(), b.lost_work.to_bits(), "{proactive:?}");
+        }
     }
 
     #[test]

@@ -1,22 +1,28 @@
 //! Discrete-event simulation of a checkpointed execution under faults
 //! and predictions.
 //!
-//! [`Engine`] replays one job against one trace under one
-//! [`crate::strategies::StrategySpec`]; [`SimSession`] amortizes the
-//! per-replication setup (spec parsing, validation, buffers) across a
-//! whole batch; [`runner`] replicates across seeds and streams the
-//! aggregation.
+//! [`Engine`] is the discrete-event *core*: it replays one job against
+//! one trace, delegating every strategic decision (regular period,
+//! prediction trust, window response) to a monomorphized [`Policy`] —
+//! the paper's strategies are the [`Policy::Paper`] variant, built
+//! from a [`crate::strategies::StrategySpec`]. [`SimSession`]
+//! amortizes the per-replication setup (spec parsing, validation,
+//! buffers) across a whole batch; [`runner`] replicates across seeds
+//! and streams the aggregation.
 
 mod engine;
 mod outcome;
+pub mod policy;
 mod runner;
 mod session;
 
 pub use engine::Engine;
 pub use outcome::Outcome;
+pub use policy::{Policy, PolicyCtx};
 pub use runner::{
     fold_waste_product, rep_blocks, run_replications, run_replications_parallel,
-    run_replications_with, simulate_once, ReplicationAgg, ReplicationReport, Retain,
+    run_replications_parallel_with, run_replications_with, simulate_once, ReplicationAgg,
+    ReplicationReport, Retain,
 };
 pub use session::SimSession;
 

@@ -1,0 +1,257 @@
+//! The pluggable checkpoint-policy layer.
+//!
+//! [`crate::sim::Engine`] is a thin discrete-event *core*: it owns time
+//! and segment accounting, the fault/prediction stream plumbing, and
+//! the outcome bookkeeping. Everything strategic is delegated to a
+//! [`Policy`], which answers the core's three questions:
+//!
+//! 1. **When is the next regular checkpoint due?** —
+//!    [`Policy::ckpt_rule`] returns a `(measured, boundary)` pair; the
+//!    core checkpoints when `measured >= boundary - EPS` and never
+//!    plans a work slice longer than `boundary - measured`.
+//! 2. **Trust this prediction?** — [`Policy::trust`], drawing from the
+//!    core's trust RNG exactly when a probabilistic decision is needed
+//!    (so replications stay bit-reproducible).
+//! 3. **What to do inside an open prediction window?** —
+//!    [`Policy::window_action`] (the [`ProactiveMode`] vocabulary).
+//!
+//! Like [`crate::dist::Dist`], `Policy` is a monomorphized enum — no
+//! `Box<dyn>` on the per-segment hot path. The paper's entire strategy
+//! space is the [`Policy::Paper`] variant (fixed period, fixed trust
+//! probability, fixed window response); the other variants are
+//! policies the pre-refactor monolithic engine could not express:
+//!
+//! * [`Policy::AdaptivePeriod`] re-derives the Young period online
+//!   from the *observed* fault rate (prior MTBF blended with the
+//!   empirical one, one pseudo-observation of weight `mu0`);
+//! * [`Policy::RiskThreshold`] watches the *unprotected* (volatile)
+//!   work instead of the regular-mode period accounting: under a
+//!   constant hazard `1/mu`, the expected loss of `v` seconds of
+//!   unprotected work accrues as `v^2 / (2 mu)`, so checkpointing when
+//!   it reaches `kappa * C` means checkpointing at
+//!   `v = sqrt(2 kappa mu C)` of volatile work — a rule that resets on
+//!   *proactive* checkpoints too, which no `(t_r, W_reg)` accounting
+//!   can emulate.
+//!
+//! Invariants the core guarantees to policies (see DESIGN.md § Policy
+//! layer): `ckpt_rule` is consulted once per planning round with a
+//! fresh [`PolicyCtx`]; `boundary` must stay >= 1 s so progress is
+//! always possible (every constructor enforces the floor); `trust` is
+//! called exactly once per arriving prediction, in trace order.
+
+use crate::rng::Pcg64;
+use crate::strategies::{ProactiveMode, StrategySpec};
+
+/// The core's read-only execution state, snapshotted for one policy
+/// consultation.
+#[derive(Debug, Clone, Copy)]
+pub struct PolicyCtx {
+    /// Current simulated time (s).
+    pub now: f64,
+    /// Unprotected (volatile) work since the last persisted state (s).
+    pub vol: f64,
+    /// Regular-mode work accumulated toward the current period (s).
+    pub w_reg: f64,
+    /// Faults observed so far this replication.
+    pub n_faults: u64,
+    /// Checkpoint duration C (s).
+    pub c: f64,
+}
+
+/// A checkpoint policy, monomorphized for the simulation hot loop.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Policy {
+    /// Fixed regular period `t_r`, trust probability `q` and window
+    /// response — the paper's §3/§4 strategy space
+    /// ([`StrategySpec`] made executable).
+    Paper { t_r: f64, q: f64, proactive: ProactiveMode },
+    /// Young's period re-derived online from the observed fault rate:
+    /// `mu_hat = (mu0 + now) / (1 + n_faults)` (the prior MTBF `mu0`
+    /// enters as one pseudo-observation), `T_R = gain * sqrt(2 mu_hat C)`.
+    AdaptivePeriod { mu0: f64, gain: f64, q: f64, proactive: ProactiveMode },
+    /// Checkpoint when the volatile work reaches `w_star =
+    /// sqrt(2 kappa mu C)` — i.e. when the accumulated risk
+    /// `vol^2 / (2 mu)` exceeds `kappa * C`.
+    RiskThreshold { w_star: f64, q: f64, proactive: ProactiveMode },
+}
+
+impl Policy {
+    /// The executable form of a paper [`StrategySpec`]. Applies the
+    /// engine's classic period floor (`t_r >= C + 1`) so a policy-built
+    /// engine is bit-identical to a spec-built one.
+    pub fn from_spec(spec: &StrategySpec, c: f64) -> Policy {
+        Policy::Paper { t_r: spec.t_r.max(c + 1.0), q: spec.q, proactive: spec.proactive }
+    }
+
+    /// Enforce the progress floors on a directly-constructed policy
+    /// (`Paper`: `t_r >= C + 1`; `RiskThreshold`: `w_star >= 1`;
+    /// `AdaptivePeriod` floors per-consultation already). The engine
+    /// applies this at construction so a degenerate hand-built policy
+    /// (zero or NaN boundary) cannot stall the core — `f64::max`
+    /// discards NaN, so even `t_r = NaN` lands on the floor. Idempotent
+    /// over [`Policy::from_spec`] / `resolve_policy` output, so
+    /// sanitizing never perturbs a legitimately built policy.
+    pub fn sanitized(self, c: f64) -> Policy {
+        match self {
+            Policy::Paper { t_r, q, proactive } => {
+                Policy::Paper { t_r: t_r.max(c + 1.0), q, proactive }
+            }
+            Policy::AdaptivePeriod { .. } => self,
+            Policy::RiskThreshold { w_star, q, proactive } => {
+                Policy::RiskThreshold { w_star: w_star.max(1.0), q, proactive }
+            }
+        }
+    }
+
+    #[inline]
+    fn q_and_mode(&self) -> (f64, ProactiveMode) {
+        match *self {
+            Policy::Paper { q, proactive, .. }
+            | Policy::AdaptivePeriod { q, proactive, .. }
+            | Policy::RiskThreshold { q, proactive, .. } => (q, proactive),
+        }
+    }
+
+    /// Q3 — the response when a trusted prediction's window opens.
+    #[inline]
+    pub fn window_action(&self) -> ProactiveMode {
+        self.q_and_mode().1
+    }
+
+    /// The lead time the policy needs ahead of a predicted date
+    /// (mirrors [`StrategySpec::required_lead`]).
+    pub fn required_lead(&self, c: f64) -> f64 {
+        match self.window_action() {
+            ProactiveMode::Migrate { m } => m.max(c),
+            _ => c,
+        }
+    }
+
+    /// Q2 — trust this prediction? Consumes one Bernoulli draw exactly
+    /// when `0 < q < 1` and predictions are not ignored — the same RNG
+    /// consumption pattern as the pre-refactor engine, so outcomes stay
+    /// bit-identical.
+    #[inline]
+    pub fn trust(&self, rng: &mut Pcg64) -> bool {
+        let (q, proactive) = self.q_and_mode();
+        let ignore = matches!(proactive, ProactiveMode::Ignore);
+        !ignore && q > 0.0 && (q >= 1.0 || rng.bernoulli(q))
+    }
+
+    /// Q1 — the regular-checkpoint rule as a `(measured, boundary)`
+    /// pair: a regular checkpoint is due when
+    /// `measured >= boundary - EPS`, and the next work slice is capped
+    /// at `boundary - measured` seconds of work. Every variant keeps
+    /// `boundary >= 1` so the core always makes progress.
+    #[inline]
+    pub fn ckpt_rule(&self, ctx: &PolicyCtx) -> (f64, f64) {
+        match *self {
+            Policy::Paper { t_r, .. } => (ctx.w_reg, t_r - ctx.c),
+            Policy::AdaptivePeriod { mu0, gain, .. } => {
+                let mu_hat = (mu0 + ctx.now) / (1.0 + ctx.n_faults as f64);
+                let t_r = (gain * (2.0 * mu_hat * ctx.c).sqrt()).max(ctx.c + 1.0);
+                (ctx.w_reg, t_r - ctx.c)
+            }
+            Policy::RiskThreshold { w_star, .. } => (ctx.vol, w_star),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(now: f64, vol: f64, w_reg: f64, n_faults: u64) -> PolicyCtx {
+        PolicyCtx { now, vol, w_reg, n_faults, c: 10.0 }
+    }
+
+    #[test]
+    fn paper_rule_matches_fixed_period() {
+        let p = Policy::Paper { t_r: 110.0, q: 0.0, proactive: ProactiveMode::Ignore };
+        let (m, b) = p.ckpt_rule(&ctx(500.0, 30.0, 40.0, 2));
+        assert_eq!(m, 40.0); // measured on W_reg
+        assert_eq!(b, 100.0); // T_R - C
+    }
+
+    #[test]
+    fn from_spec_applies_the_period_floor() {
+        let spec =
+            StrategySpec { name: "t".into(), t_r: 3.0, q: 0.0, proactive: ProactiveMode::Ignore };
+        match Policy::from_spec(&spec, 10.0) {
+            Policy::Paper { t_r, .. } => assert_eq!(t_r, 11.0),
+            other => panic!("wrong variant: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn adaptive_boundary_tracks_the_observed_rate() {
+        let p = Policy::AdaptivePeriod {
+            mu0: 500.0,
+            gain: 1.0,
+            q: 0.0,
+            proactive: ProactiveMode::Ignore,
+        };
+        // Prior only: T_R = sqrt(2 * 500 * 10) = 100, boundary 90.
+        let (_, b0) = p.ckpt_rule(&ctx(0.0, 0.0, 0.0, 0));
+        assert!((b0 - 90.0).abs() < 1e-9, "b0 = {b0}");
+        // Long fault-free run: the estimated MTBF grows, so does the period.
+        let (_, b_calm) = p.ckpt_rule(&ctx(10_000.0, 0.0, 0.0, 0));
+        // Fault storm: the estimate shrinks, the policy checkpoints sooner.
+        let (_, b_storm) = p.ckpt_rule(&ctx(10_000.0, 0.0, 0.0, 50));
+        assert!(b_storm < b0 && b0 < b_calm, "{b_storm} < {b0} < {b_calm}");
+        // The floor keeps progress possible under any storm.
+        let (_, b_floor) = p.ckpt_rule(&ctx(1.0, 0.0, 0.0, 1_000_000));
+        assert!(b_floor >= 1.0);
+    }
+
+    #[test]
+    fn adaptive_gain_scales_the_period() {
+        let mk = |gain| Policy::AdaptivePeriod {
+            mu0: 500.0,
+            gain,
+            q: 0.0,
+            proactive: ProactiveMode::Ignore,
+        };
+        let (_, b1) = mk(1.0).ckpt_rule(&ctx(0.0, 0.0, 0.0, 0));
+        let (_, b2) = mk(2.0).ckpt_rule(&ctx(0.0, 0.0, 0.0, 0));
+        assert!((b2 - (2.0 * 100.0 - 10.0)).abs() < 1e-9);
+        assert!(b2 > b1);
+    }
+
+    #[test]
+    fn risk_rule_measures_volatile_work() {
+        let p =
+            Policy::RiskThreshold { w_star: 100.0, q: 1.0, proactive: ProactiveMode::CkptBefore };
+        // W_reg is irrelevant; only the unprotected work counts.
+        let (m, b) = p.ckpt_rule(&ctx(1e6, 42.0, 9999.0, 7));
+        assert_eq!(m, 42.0);
+        assert_eq!(b, 100.0);
+    }
+
+    #[test]
+    fn trust_honors_ignore_and_extremes_without_rng_draws() {
+        // Ignore mode and the q extremes must not consume a draw — the
+        // engine's bit-reproducibility contract depends on it.
+        let mut rng = Pcg64::new(1, 2);
+        let mut twin = Pcg64::new(1, 2);
+        let ignore = Policy::Paper { t_r: 100.0, q: 1.0, proactive: ProactiveMode::Ignore };
+        assert!(!ignore.trust(&mut rng));
+        let distrust = Policy::Paper { t_r: 100.0, q: 0.0, proactive: ProactiveMode::CkptBefore };
+        assert!(!distrust.trust(&mut rng));
+        let certain = Policy::Paper { t_r: 100.0, q: 1.0, proactive: ProactiveMode::CkptBefore };
+        assert!(certain.trust(&mut rng));
+        assert_eq!(rng.next_u64(), twin.next_u64(), "no draw may have been consumed");
+        // A fractional q does draw.
+        let coin = Policy::Paper { t_r: 100.0, q: 0.5, proactive: ProactiveMode::CkptBefore };
+        let _ = coin.trust(&mut rng);
+        assert_ne!(rng.next_u64(), twin.next_u64());
+    }
+
+    #[test]
+    fn required_lead_mirrors_spec() {
+        let mig = Policy::Paper { t_r: 100.0, q: 1.0, proactive: ProactiveMode::Migrate { m: 900.0 } };
+        assert_eq!(mig.required_lead(600.0), 900.0);
+        let ckpt = Policy::Paper { t_r: 100.0, q: 1.0, proactive: ProactiveMode::CkptBefore };
+        assert_eq!(ckpt.required_lead(600.0), 600.0);
+    }
+}

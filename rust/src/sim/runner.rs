@@ -171,24 +171,38 @@ pub fn run_replications_parallel(
     reps: u64,
     workers: usize,
 ) -> anyhow::Result<ReplicationReport> {
+    run_replications_parallel_with(&spec.name, reps, workers, || SimSession::new(scenario, spec))
+}
+
+/// [`run_replications_parallel`] with an explicit session factory —
+/// the policy-layer entry point (build sessions with
+/// [`SimSession::from_policy`]) and anything else that needs a
+/// non-default session. The factory runs once per worker.
+pub fn run_replications_parallel_with<M>(
+    name: &str,
+    reps: u64,
+    workers: usize,
+    make: M,
+) -> anyhow::Result<ReplicationReport>
+where
+    M: Fn() -> anyhow::Result<SimSession> + Sync,
+{
     // Surface configuration errors here, once, instead of panicking in
     // a worker.
-    drop(SimSession::new(scenario, spec)?);
+    drop(make()?);
     let rep_ids: Vec<u64> = (0..reps).collect();
     let (_, agg) = run_parallel_fold(
         &rep_ids,
         workers,
         || (None::<SimSession>, ReplicationAgg::default()),
         |(mut session, mut agg), &rep| {
-            let s = session.get_or_insert_with(|| {
-                SimSession::new(scenario, spec).expect("scenario validated above")
-            });
+            let s = session.get_or_insert_with(|| make().expect("session validated above"));
             agg.push(&s.run(rep));
             (session, agg)
         },
         |(_, a), (_, b)| (None, a.merge(b)),
     );
-    Ok(ReplicationReport { strategy: spec.name.clone(), agg, outcomes: Vec::new() })
+    Ok(ReplicationReport { strategy: name.to_string(), agg, outcomes: Vec::new() })
 }
 
 /// Build point-major `(point, rep_lo, rep_hi)` blocks for

@@ -14,12 +14,12 @@
 
 use std::time::Instant;
 
-use super::{Engine, Outcome, SimConfig};
+use super::{Engine, Outcome, Policy, SimConfig};
 use crate::config::Scenario;
 use crate::strategies::StrategySpec;
 use crate::trace::TraceGen;
 
-/// A (scenario, strategy) pair prepared for repeated replication.
+/// A (scenario, policy) pair prepared for repeated replication.
 pub struct SimSession {
     seed: u64,
     engine: Engine<TraceGen>,
@@ -37,11 +37,27 @@ impl SimSession {
     /// the trace generator (the `abl-lead` study drives leads below the
     /// strategy's own requirement).
     pub fn with_lead(scenario: &Scenario, spec: &StrategySpec, lead: f64) -> anyhow::Result<SimSession> {
+        Self::from_policy_with_lead(scenario, Policy::from_spec(spec, scenario.platform.c), lead)
+    }
+
+    /// Session for an arbitrary [`Policy`] — the non-paper strategies'
+    /// entry point. For a [`Policy::Paper`] built from the same spec
+    /// this is bit-identical to [`SimSession::new`].
+    pub fn from_policy(scenario: &Scenario, policy: Policy) -> anyhow::Result<SimSession> {
+        Self::from_policy_with_lead(scenario, policy, policy.required_lead(scenario.platform.c))
+    }
+
+    /// [`SimSession::from_policy`] with an explicit predictor lead.
+    pub fn from_policy_with_lead(
+        scenario: &Scenario,
+        policy: Policy,
+        lead: f64,
+    ) -> anyhow::Result<SimSession> {
         let cfg = SimConfig::from_scenario(scenario);
         cfg.validate()?;
         let source = TraceGen::new(scenario, lead, scenario.seed, 0)?;
         // The trust seed is per-replication; `run` resets it before use.
-        let engine = Engine::new(&cfg, spec, source, 0);
+        let engine = Engine::with_policy(&cfg, policy, source, 0);
         Ok(SimSession { seed: scenario.seed, engine })
     }
 

@@ -1,5 +1,8 @@
 //! BestPeriod: the §5 brute-force numerical search for the optimal
-//! regular period of any strategy, by direct simulation.
+//! regular period of any strategy, by direct simulation — and its
+//! policy-layer generalization [`best_policy_with`], which sweeps
+//! whatever scalar a [`PolicySpec`] exposes (T_R for paper strategies,
+//! gain for `adaptive`, kappa for `risk`).
 //!
 //! This is by far the most expensive operation in the study, so it gets
 //! the full hot-path treatment: the (candidate × replication) product
@@ -11,7 +14,7 @@
 use crate::config::Scenario;
 use crate::coordinator::available_workers;
 use crate::sim::{fold_waste_product, rep_blocks, SimSession};
-use crate::strategies::StrategySpec;
+use crate::strategies::{resolve_policy, PolicySpec, StrategySpec};
 use crate::util::stats::Summary;
 
 /// Result of a brute-force period search.
@@ -96,14 +99,92 @@ pub fn best_period_with(
     // Surface configuration errors once, before any worker runs.
     drop(SimSession::new(scenario, &specs[0])?);
 
+    Ok(search_grid(&grid, reps, opts, |ci| {
+        SimSession::new(scenario, &specs[ci]).expect("scenario validated above")
+    }))
+}
+
+/// Parameter search for a [`PolicySpec`]: the same brute-force
+/// machinery as [`best_period_with`], sweeping the policy's natural
+/// tuning axis. Paper strategies sweep their regular period T_R
+/// (delegating to [`best_period_with`]); `adaptive` sweeps its gain
+/// and `risk` its kappa over a geometric `[x/4, 4x]` bracket around
+/// the spec's value. The result's `t_r` field and sweep x-axis carry
+/// the winning parameter in the policy's own units.
+pub fn best_policy_with(
+    scenario: &Scenario,
+    spec: &PolicySpec,
+    reps: u64,
+    n_candidates: usize,
+    opts: &BestPeriodOptions,
+) -> anyhow::Result<BestPeriodResult> {
+    anyhow::ensure!(reps > 0, "best_policy needs at least one replication");
+    // Validate before the grid construction: a degenerate parameter
+    // must surface as an error, not a bracket-assertion panic.
+    spec.validate()?;
+    match *spec {
+        PolicySpec::Strategy(kind) => {
+            let rp = resolve_policy(spec, scenario)?;
+            let base =
+                crate::strategies::spec_for(kind, &rp.scenario, crate::model::Capping::Uncapped);
+            best_period_with(&rp.scenario, &base, reps, n_candidates, opts)
+        }
+        PolicySpec::AdaptivePeriod { gain } => search_policy_param(
+            scenario,
+            gain,
+            n_candidates,
+            reps,
+            opts,
+            |g| PolicySpec::AdaptivePeriod { gain: g },
+        ),
+        PolicySpec::RiskThreshold { kappa } => search_policy_param(
+            scenario,
+            kappa,
+            n_candidates,
+            reps,
+            opts,
+            |k| PolicySpec::RiskThreshold { kappa: k },
+        ),
+    }
+}
+
+/// Sweep one scalar policy parameter over a geometric bracket around
+/// `center`, resolving each candidate against `scenario`.
+fn search_policy_param(
+    scenario: &Scenario,
+    center: f64,
+    n_candidates: usize,
+    reps: u64,
+    opts: &BestPeriodOptions,
+    respec: impl Fn(f64) -> PolicySpec,
+) -> anyhow::Result<BestPeriodResult> {
+    let grid = period_grid(center / 4.0, center * 4.0, n_candidates.max(2));
+    let policies: Vec<crate::sim::Policy> = grid
+        .iter()
+        .map(|&x| Ok(resolve_policy(&respec(x), scenario)?.policy))
+        .collect::<anyhow::Result<_>>()?;
+    // Surface configuration errors once, before any worker runs.
+    drop(SimSession::from_policy(scenario, policies[0])?);
+
+    Ok(search_grid(&grid, reps, opts, |ci| {
+        SimSession::from_policy(scenario, policies[ci]).expect("policy validated above")
+    }))
+}
+
+/// The shared search core: per-candidate streaming waste summaries over
+/// the (candidate × replication) product, with the optional coarse
+/// pruning pass. `make(i)` builds candidate `i`'s session; the sweep
+/// x-axis is `grid`.
+fn search_grid<F>(grid: &[f64], reps: u64, opts: &BestPeriodOptions, make: F) -> BestPeriodResult
+where
+    F: Fn(usize) -> SimSession + Sync,
+{
     // A pool pass over `candidates × [rep_lo, rep_hi)`: per-candidate
     // streaming waste summaries through the shared product folder
     // (candidate-major rep blocks, one reused session per block).
     let simulate = |candidates: &[usize], rep_lo: u64, rep_hi: u64| -> Vec<Summary> {
         let tasks = rep_blocks(candidates, rep_lo, rep_hi, opts.workers);
-        fold_waste_product(&tasks, grid.len(), opts.workers, |ci| {
-            SimSession::new(scenario, &specs[ci]).expect("scenario validated above")
-        })
+        fold_waste_product(&tasks, grid.len(), opts.workers, &make)
     };
 
     let all: Vec<usize> = (0..grid.len()).collect();
@@ -111,7 +192,7 @@ pub fn best_period_with(
     // worth it when there are enough replications for the coarse means
     // to rank candidates and enough candidates to prune.
     let coarse_reps =
-        if opts.prune && reps >= 8 && n_candidates >= 4 { (reps / 4).max(2) } else { reps };
+        if opts.prune && reps >= 8 && grid.len() >= 4 { (reps / 4).max(2) } else { reps };
     let coarse = simulate(&all, 0, coarse_reps);
 
     let (survivors, totals, n_pruned) = if coarse_reps >= reps {
@@ -150,7 +231,7 @@ pub fn best_period_with(
             best = (w, grid[ci]);
         }
     }
-    Ok(BestPeriodResult { t_r: best.1, waste: best.0, sweep, n_pruned })
+    BestPeriodResult { t_r: best.1, waste: best.0, sweep, n_pruned }
 }
 
 fn argmin(sums: &[Summary]) -> usize {
@@ -287,6 +368,52 @@ mod tests {
         if pruned.t_r == exhaustive.t_r {
             assert!((pruned.waste - exhaustive.waste).abs() < 1e-9);
         }
+    }
+
+    #[test]
+    fn policy_search_delegates_for_paper_strategies() {
+        // A Strategy(...) policy spec must return the classic T_R
+        // search, bit for bit.
+        let (s, base) = small_study();
+        let opts = BestPeriodOptions { workers: 2, prune: false };
+        let direct = best_period_with(&s, &base, 6, 5, &opts).unwrap();
+        let via_policy = best_policy_with(
+            &s,
+            &PolicySpec::Strategy(crate::model::StrategyKind::Young),
+            6,
+            5,
+            &opts,
+        )
+        .unwrap();
+        assert_eq!(direct.t_r, via_policy.t_r);
+        assert_eq!(direct.waste, via_policy.waste);
+        assert_eq!(direct.sweep, via_policy.sweep);
+    }
+
+    #[test]
+    fn policy_search_sweeps_the_risk_kappa() {
+        let (s, _) = small_study();
+        let opts = BestPeriodOptions { workers: 2, prune: false };
+        let res =
+            best_policy_with(&s, &PolicySpec::RiskThreshold { kappa: 1.0 }, 6, 5, &opts).unwrap();
+        assert_eq!(res.sweep.len(), 5);
+        // The bracket spans [1/4, 4] around kappa = 1.
+        assert!((res.sweep[0].0 - 0.25).abs() < 1e-9);
+        assert!((res.sweep[4].0 - 4.0).abs() < 1e-6);
+        // The winner is a grid point with its own recorded waste.
+        assert!(res.sweep.iter().any(|&(k, w)| k == res.t_r && w == res.waste));
+        assert!(res.waste > 0.0 && res.waste < 1.0);
+    }
+
+    #[test]
+    fn policy_search_is_reproducible() {
+        let (s, _) = small_study();
+        let opts = BestPeriodOptions { workers: 3, prune: false };
+        let spec = PolicySpec::AdaptivePeriod { gain: 1.0 };
+        let a = best_policy_with(&s, &spec, 5, 4, &opts).unwrap();
+        let b = best_policy_with(&s, &spec, 5, 4, &opts).unwrap();
+        assert_eq!(a.t_r, b.t_r);
+        assert_eq!(a.sweep, b.sweep);
     }
 
     #[test]

@@ -3,14 +3,21 @@
 //!
 //! The *planner* half of each strategy is closed-form (or HLO-compiled,
 //! via [`crate::runtime`]); the *executor* half is the shared
-//! discrete-event engine in [`crate::sim`], parameterized by the spec's
-//! [`ProactiveMode`].
+//! discrete-event core in [`crate::sim`], parameterized by a
+//! [`crate::sim::Policy`]. [`StrategySpec`] (fixed period + trust +
+//! [`ProactiveMode`]) describes the paper's strategy space;
+//! [`PolicySpec`] is the superset that also names the non-paper
+//! policies (`adaptive`, `risk`) and resolves to a runtime policy via
+//! [`resolve_policy`].
 
 mod best_period;
+mod policy;
 
 pub use best_period::{
-    best_period, best_period_with, period_grid, BestPeriodOptions, BestPeriodResult,
+    best_period, best_period_with, best_policy_with, period_grid, BestPeriodOptions,
+    BestPeriodResult,
 };
+pub use policy::{resolve_policy, PolicySpec, ResolvedPolicy};
 
 use crate::config::Scenario;
 use crate::model::{self, Capping, Params, StrategyKind};

@@ -1,0 +1,260 @@
+//! Policy *specifications* — the config-level form of a checkpoint
+//! policy, mirroring the [`crate::dist::DistSpec`] / [`crate::dist::Dist`]
+//! split: [`PolicySpec`] is typed data with `FromStr`/`Display` at the
+//! wire edge (JSONL `policy` field, TOML `[policy]` tables, the CLI
+//! `--policy` flag), and [`resolve_policy`] materializes the runtime
+//! [`Policy`] against a concrete [`Scenario`].
+//!
+//! Spec strings:
+//!
+//! * any [`StrategyKind`] name (`"Young"`, `"ExactPrediction"`, …,
+//!   case-insensitive) — the paper strategy with its closed-form
+//!   period;
+//! * `"adaptive"` or `"adaptive:GAIN"` — [`Policy::AdaptivePeriod`]
+//!   with the scenario MTBF as prior and the given period gain
+//!   (default 1);
+//! * `"risk"` or `"risk:KAPPA"` — [`Policy::RiskThreshold`]
+//!   checkpointing when the accumulated risk of the unprotected work
+//!   reaches `KAPPA * C` (default 1).
+
+use crate::config::Scenario;
+use crate::model::{Capping, StrategyKind};
+use crate::sim::Policy;
+use crate::strategies::{exactify, spec_for, ProactiveMode};
+
+/// A checkpoint policy as configuration data, resolvable against any
+/// scenario.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PolicySpec {
+    /// One of the paper's strategies; the regular period comes from the
+    /// closed form ([`spec_for`], §5 `Uncapped` convention).
+    Strategy(StrategyKind),
+    /// Young's period re-derived online from the observed fault rate,
+    /// scaled by `gain`. Ignores the predictor (q = 0), like Young.
+    AdaptivePeriod { gain: f64 },
+    /// Checkpoint when the expected loss of the unprotected work
+    /// (`vol^2 / 2mu` under constant hazard) reaches `kappa * C`.
+    /// Trusts every prediction (q = 1, `CkptBefore` response).
+    RiskThreshold { kappa: f64 },
+}
+
+impl PolicySpec {
+    /// Reject parameterizations the simulator cannot honor. `FromStr`
+    /// already enforces this; direct construction goes through here via
+    /// [`resolve_policy`].
+    pub fn validate(&self) -> anyhow::Result<()> {
+        match self {
+            PolicySpec::Strategy(_) => Ok(()),
+            PolicySpec::AdaptivePeriod { gain } => {
+                anyhow::ensure!(
+                    gain.is_finite() && *gain > 0.0,
+                    "adaptive gain must be finite and positive in policy spec '{self}'"
+                );
+                Ok(())
+            }
+            PolicySpec::RiskThreshold { kappa } => {
+                anyhow::ensure!(
+                    kappa.is_finite() && *kappa > 0.0,
+                    "risk threshold kappa must be finite and positive in policy spec '{self}'"
+                );
+                Ok(())
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for PolicySpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PolicySpec::Strategy(k) => f.write_str(k.name()),
+            PolicySpec::AdaptivePeriod { gain } => write!(f, "adaptive:{gain}"),
+            PolicySpec::RiskThreshold { kappa } => write!(f, "risk:{kappa}"),
+        }
+    }
+}
+
+impl std::str::FromStr for PolicySpec {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<PolicySpec> {
+        let t = s.trim();
+        if let Ok(kind) = t.parse::<StrategyKind>() {
+            return Ok(PolicySpec::Strategy(kind));
+        }
+        let (head, param) = match t.split_once(':') {
+            Some((h, p)) => (h, Some(p)),
+            None => (t, None),
+        };
+        let number = |name: &str| -> anyhow::Result<f64> {
+            match param {
+                None => Ok(1.0),
+                Some(raw) => raw.parse::<f64>().map_err(|_| {
+                    anyhow::anyhow!("bad {name} in policy spec '{s}' (expected a number)")
+                }),
+            }
+        };
+        let spec = match head.to_ascii_lowercase().as_str() {
+            "adaptive" | "adaptiveperiod" => PolicySpec::AdaptivePeriod { gain: number("gain")? },
+            "risk" | "riskthreshold" => PolicySpec::RiskThreshold { kappa: number("kappa")? },
+            _ => anyhow::bail!(
+                "unknown policy '{s}' (expected a strategy name — Young, ExactPrediction, \
+                 Instant, NoCkptI, WithCkptI, Migration — or adaptive[:gain] / risk[:kappa])"
+            ),
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+/// A [`PolicySpec`] resolved against one scenario: the effective
+/// scenario (EXACTPREDICTION runs against the exact-date variant of
+/// the trace, per §5), the runtime [`Policy`], and a display name for
+/// reports and wire responses.
+#[derive(Debug, Clone)]
+pub struct ResolvedPolicy {
+    pub scenario: Scenario,
+    pub policy: Policy,
+    pub name: String,
+}
+
+/// Materialize a policy spec for one scenario. For paper strategies
+/// the result is bit-identical to the classic
+/// `scenario_for` + [`spec_for`] path (pinned in
+/// `tests/test_policies.rs`).
+pub fn resolve_policy(spec: &PolicySpec, scenario: &Scenario) -> anyhow::Result<ResolvedPolicy> {
+    spec.validate()?;
+    scenario.validate()?;
+    let c = scenario.platform.c;
+    Ok(match *spec {
+        PolicySpec::Strategy(kind) => {
+            let s = if kind == StrategyKind::ExactPrediction {
+                exactify(scenario)
+            } else {
+                scenario.clone()
+            };
+            let sspec = spec_for(kind, &s, Capping::Uncapped);
+            let policy = Policy::from_spec(&sspec, c);
+            ResolvedPolicy { scenario: s, policy, name: sspec.name }
+        }
+        PolicySpec::AdaptivePeriod { gain } => ResolvedPolicy {
+            scenario: scenario.clone(),
+            policy: Policy::AdaptivePeriod {
+                mu0: scenario.mu(),
+                gain,
+                q: 0.0,
+                proactive: ProactiveMode::Ignore,
+            },
+            name: spec.to_string(),
+        },
+        PolicySpec::RiskThreshold { kappa } => {
+            // Risk kappa*C is reached at vol = sqrt(2 kappa mu C);
+            // floored at 1 s so progress is always possible.
+            let w_star = (2.0 * kappa * scenario.mu() * c).sqrt().max(1.0);
+            ResolvedPolicy {
+                scenario: scenario.clone(),
+                policy: Policy::RiskThreshold {
+                    w_star,
+                    q: 1.0,
+                    proactive: ProactiveMode::CkptBefore,
+                },
+                name: spec.to_string(),
+            }
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Predictor;
+
+    fn scenario() -> Scenario {
+        Scenario::paper(1 << 16, Predictor::windowed(0.85, 0.82, 300.0))
+    }
+
+    #[test]
+    fn spec_strings_round_trip() {
+        let specs = [
+            PolicySpec::Strategy(StrategyKind::Young),
+            PolicySpec::Strategy(StrategyKind::WithCkptI),
+            PolicySpec::AdaptivePeriod { gain: 1.0 },
+            PolicySpec::AdaptivePeriod { gain: 0.5 },
+            PolicySpec::RiskThreshold { kappa: 1.0 },
+            PolicySpec::RiskThreshold { kappa: 2.25 },
+        ];
+        for spec in specs {
+            let s = spec.to_string();
+            assert_eq!(s.parse::<PolicySpec>().unwrap(), spec, "round-trip of '{s}'");
+        }
+        // Case-insensitive and defaulted forms.
+        assert_eq!("young".parse::<PolicySpec>().unwrap(), PolicySpec::Strategy(StrategyKind::Young));
+        assert_eq!("adaptive".parse::<PolicySpec>().unwrap(), PolicySpec::AdaptivePeriod { gain: 1.0 });
+        assert_eq!("RISK".parse::<PolicySpec>().unwrap(), PolicySpec::RiskThreshold { kappa: 1.0 });
+        assert_eq!(
+            "risk:0.5".parse::<PolicySpec>().unwrap(),
+            PolicySpec::RiskThreshold { kappa: 0.5 }
+        );
+    }
+
+    #[test]
+    fn invalid_specs_are_rejected() {
+        assert!("daly".parse::<PolicySpec>().is_err());
+        assert!("risk:zero".parse::<PolicySpec>().is_err());
+        assert!("risk:-1".parse::<PolicySpec>().is_err());
+        assert!("adaptive:0".parse::<PolicySpec>().is_err());
+        assert!(PolicySpec::RiskThreshold { kappa: f64::NAN }.validate().is_err());
+        assert!(resolve_policy(&PolicySpec::AdaptivePeriod { gain: -1.0 }, &scenario()).is_err());
+    }
+
+    #[test]
+    fn strategy_resolution_matches_spec_for() {
+        let s = scenario();
+        for kind in StrategyKind::ALL {
+            let rp = resolve_policy(&PolicySpec::Strategy(kind), &s).unwrap();
+            let expected_scenario =
+                if kind == StrategyKind::ExactPrediction { exactify(&s) } else { s.clone() };
+            assert_eq!(rp.scenario, expected_scenario, "{kind}");
+            let sspec = spec_for(kind, &expected_scenario, Capping::Uncapped);
+            assert_eq!(rp.policy, Policy::from_spec(&sspec, s.platform.c), "{kind}");
+            assert_eq!(rp.name, sspec.name);
+        }
+    }
+
+    #[test]
+    fn risk_threshold_scale() {
+        let s = scenario();
+        let rp = resolve_policy(&PolicySpec::RiskThreshold { kappa: 1.0 }, &s).unwrap();
+        match rp.policy {
+            Policy::RiskThreshold { w_star, q, .. } => {
+                let expected = (2.0 * s.mu() * s.platform.c).sqrt();
+                assert!((w_star - expected).abs() < 1e-9);
+                assert_eq!(q, 1.0);
+            }
+            other => panic!("wrong policy: {other:?}"),
+        }
+        // kappa scales the threshold by sqrt(kappa).
+        let rp4 = resolve_policy(&PolicySpec::RiskThreshold { kappa: 4.0 }, &s).unwrap();
+        match (rp.policy, rp4.policy) {
+            (Policy::RiskThreshold { w_star: w1, .. }, Policy::RiskThreshold { w_star: w4, .. }) => {
+                assert!((w4 / w1 - 2.0).abs() < 1e-9);
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn adaptive_prior_is_the_scenario_mtbf() {
+        let s = scenario();
+        let rp = resolve_policy(&PolicySpec::AdaptivePeriod { gain: 1.0 }, &s).unwrap();
+        match rp.policy {
+            Policy::AdaptivePeriod { mu0, gain, q, proactive } => {
+                assert_eq!(mu0, s.mu());
+                assert_eq!(gain, 1.0);
+                assert_eq!(q, 0.0);
+                assert_eq!(proactive, ProactiveMode::Ignore);
+            }
+            other => panic!("wrong policy: {other:?}"),
+        }
+        assert_eq!(rp.name, "adaptive:1");
+    }
+}

@@ -100,6 +100,51 @@ mod tests {
     }
 
     #[test]
+    fn round_trip_is_bit_identical_for_both_prediction_kinds() {
+        // Generated trace -> write -> read back: every event must be
+        // reproduced *bit for bit* (Rust's f64 Display is shortest
+        // round-trip, so the CSV form loses nothing), for window
+        // predictions and exact-date predictions alike.
+        for window in [0.0, 300.0] {
+            let pred = if window > 0.0 {
+                Predictor::windowed(0.7, 0.4, window)
+            } else {
+                Predictor::exact(0.7, 0.4)
+            };
+            let mut s = Scenario::paper(1 << 16, pred);
+            s.fault_dist = crate::dist::DistSpec::weibull(0.7);
+
+            let mut gen = TraceGen::new(&s, 600.0, 11, 2).unwrap();
+            let mut buf = Vec::new();
+            let (nf, np) = write_trace(&mut buf, &mut gen, 3e6).unwrap();
+            assert!(nf > 10 && np > 5, "window {window}: nf={nf} np={np}");
+
+            let mut replay = read_trace(std::io::BufReader::new(&buf[..])).unwrap();
+            let mut fresh = TraceGen::new(&s, 600.0, 11, 2).unwrap();
+            for i in 0..nf {
+                let a = replay.next_fault().expect("replay fault");
+                let b = fresh.next_fault().expect("fresh fault");
+                assert_eq!(a.t.to_bits(), b.t.to_bits(), "window {window} fault {i}");
+                assert_eq!(a, b, "window {window} fault {i}");
+            }
+            for i in 0..np {
+                let a = replay.next_prediction().expect("replay pred");
+                let b = fresh.next_prediction().expect("fresh pred");
+                assert_eq!(a.avail.to_bits(), b.avail.to_bits(), "window {window} pred {i}");
+                assert_eq!(a.t0.to_bits(), b.t0.to_bits(), "window {window} pred {i}");
+                assert_eq!(a.window.to_bits(), b.window.to_bits(), "window {window} pred {i}");
+                assert_eq!(a.fault_id, b.fault_id, "window {window} pred {i}");
+                if window == 0.0 {
+                    assert_eq!(a.window, 0.0, "exact predictor must stay exact");
+                }
+            }
+            // The replay source is exhausted exactly at the horizon cut.
+            assert!(replay.next_fault().is_none());
+            assert!(replay.next_prediction().is_none());
+        }
+    }
+
+    #[test]
     fn rejects_malformed() {
         assert!(read_trace(std::io::BufReader::new("fault,1.0".as_bytes())).is_err());
         assert!(read_trace(std::io::BufReader::new("bogus,1,2,3".as_bytes())).is_err());

@@ -16,7 +16,7 @@ use ckptfp::dist::DistSpec;
 use ckptfp::experiments::{replicate_stat, scenario_for};
 use ckptfp::model::{Capping, StrategyKind};
 use ckptfp::sim::Outcome;
-use ckptfp::strategies::spec_for;
+use ckptfp::strategies::{spec_for, PolicySpec};
 use ckptfp::util::json::Json;
 
 fn small_scenario() -> Scenario {
@@ -41,13 +41,26 @@ fn start_local_service() -> (ServiceHandle, String) {
 fn every_request_variant_round_trips() {
     let s = small_scenario();
     let requests = vec![
-        JobRequest::Plan(PlanJob { scenario: s.clone(), capping: Capping::Capped }),
+        JobRequest::Plan(PlanJob { scenario: s.clone(), capping: Capping::Capped, policy: None }),
+        JobRequest::Plan(PlanJob {
+            scenario: s.clone(),
+            capping: Capping::Uncapped,
+            policy: Some(PolicySpec::Strategy(StrategyKind::NoCkptI)),
+        }),
         JobRequest::Plan(PlanJob::new(s.clone())),
         JobRequest::Simulate(SimulateJob {
             scenario: s.clone(),
             strategy: StrategyKind::NoCkptI,
             reps: 17,
             workers: Some(3),
+            policy: None,
+        }),
+        JobRequest::Simulate(SimulateJob {
+            scenario: s.clone(),
+            strategy: StrategyKind::Young,
+            reps: 5,
+            workers: None,
+            policy: Some(PolicySpec::RiskThreshold { kappa: 2.5 }),
         }),
         JobRequest::Simulate(SimulateJob::new(s.clone(), StrategyKind::Young)),
         JobRequest::BestPeriod(BestPeriodJob {
@@ -57,6 +70,16 @@ fn every_request_variant_round_trips() {
             candidates: 12,
             workers: None,
             prune: true,
+            policy: None,
+        }),
+        JobRequest::BestPeriod(BestPeriodJob {
+            scenario: s.clone(),
+            strategy: StrategyKind::Young,
+            reps: 3,
+            candidates: 4,
+            workers: Some(2),
+            prune: false,
+            policy: Some(PolicySpec::AdaptivePeriod { gain: 0.75 }),
         }),
         JobRequest::Sweep(SweepJob {
             base: s.clone(),
@@ -174,6 +197,46 @@ fn every_response_variant_round_trips() {
 // ---------------------------------------------------------------------------
 // v1 back-compat + error shapes
 // ---------------------------------------------------------------------------
+
+#[test]
+fn policy_field_is_additive_and_optional() {
+    // A hand-written v2 simulate with a policy and no strategy decodes
+    // (the strategy field is only required on the classic path).
+    let d = wire::decode_request(
+        r#"{"v": 2, "op": "simulate", "scenario": {"work": 200000, "fault_dist": "exp"}, "policy": "risk:2", "reps": 5}"#,
+    )
+    .unwrap();
+    match d.request {
+        JobRequest::Simulate(job) => {
+            assert_eq!(job.policy, Some(PolicySpec::RiskThreshold { kappa: 2.0 }));
+            assert_eq!(job.reps, 5);
+        }
+        other => panic!("wrong request: {other:?}"),
+    }
+    // best_period takes the same field.
+    let d = wire::decode_request(
+        r#"{"v": 2, "op": "best_period", "scenario": {}, "policy": "adaptive"}"#,
+    )
+    .unwrap();
+    match d.request {
+        JobRequest::BestPeriod(job) => {
+            assert_eq!(job.policy, Some(PolicySpec::AdaptivePeriod { gain: 1.0 }))
+        }
+        other => panic!("wrong request: {other:?}"),
+    }
+    // A bad policy spec is a bad_request naming the offender.
+    let err = wire::decode_request(
+        r#"{"v": 2, "op": "simulate", "scenario": {}, "policy": "bogus"}"#,
+    )
+    .unwrap_err();
+    assert_eq!(err.code, ErrorCode::BadRequest);
+    assert!(err.message.contains("bogus"), "{}", err.message);
+    // Without either strategy or policy, simulate still demands one.
+    let err =
+        wire::decode_request(r#"{"v": 2, "op": "simulate", "scenario": {}}"#).unwrap_err();
+    assert_eq!(err.code, ErrorCode::BadRequest);
+    assert!(err.message.contains("strategy"), "{}", err.message);
+}
 
 #[test]
 fn v1_plan_request_decodes_through_the_adapter() {
@@ -331,6 +394,7 @@ fn simulate_over_tcp_is_bit_identical_to_in_process() {
             strategy,
             reps,
             workers: Some(workers),
+            policy: None,
         })
         .unwrap();
 
@@ -366,6 +430,7 @@ fn concurrent_clients_simulate_against_one_service() {
                             strategy: StrategyKind::Young,
                             reps: 4,
                             workers: Some(2),
+                            policy: None,
                         })
                         .unwrap()
                 })
@@ -411,6 +476,7 @@ fn typed_client_runs_plan_best_period_and_sweep() {
             candidates: 6,
             workers: Some(2),
             prune: false,
+            policy: None,
         })
         .unwrap();
     assert_eq!(bp.sweep.len(), 6);

@@ -1,0 +1,191 @@
+//! The policy-layer refactor contract.
+//!
+//! Golden-outcome pinning: every paper strategy, executed through the
+//! classic spec path (`SimSession::new` over `spec_for`) and through
+//! the policy layer (`SimSession::from_policy` over `resolve_policy`),
+//! must produce *identical* `Outcome` structs — every counter equal,
+//! every float equal to the bit — across several scenarios and
+//! replications. Plus end-to-end coverage of the two non-paper
+//! policies through the executor/wire stack the CLI and the TCP
+//! service share.
+
+use ckptfp::api::{Executor, SimulateJob};
+use ckptfp::config::{Predictor, Scenario};
+use ckptfp::dist::DistSpec;
+use ckptfp::experiments::scenario_for;
+use ckptfp::model::{Capping, StrategyKind};
+use ckptfp::sim::SimSession;
+use ckptfp::strategies::{resolve_policy, spec_for, PolicySpec};
+
+/// Three §5-flavored scenarios: exact predictor over Exponential
+/// faults, small window over Weibull 0.7, large window over
+/// Weibull 0.5 with a uniform false-prediction law. The windowed
+/// scenarios keep I >= C so WithCkptI is exercised in both.
+fn scenarios() -> Vec<Scenario> {
+    let mut exact = Scenario::paper(1 << 16, Predictor::exact(0.85, 0.82));
+    exact.fault_dist = DistSpec::Exp;
+    exact.work = 2.0e5;
+
+    let mut small_window = Scenario::paper(1 << 16, Predictor::windowed(0.85, 0.82, 900.0));
+    small_window.fault_dist = DistSpec::weibull(0.7);
+    small_window.work = 2.0e5;
+
+    let mut large_window = Scenario::paper(1 << 16, Predictor::windowed(0.7, 0.4, 3000.0));
+    large_window.fault_dist = DistSpec::weibull(0.5);
+    large_window.false_pred_dist = Some(DistSpec::Uniform);
+    large_window.work = 2.0e5;
+
+    vec![exact, small_window, large_window]
+}
+
+/// The five paper strategies of the §5 simulations (WithCkptI needs
+/// I >= C, which all three scenarios' windowed variants honor or skip).
+fn paper_strategies(window: f64, c: f64) -> Vec<StrategyKind> {
+    let mut v = vec![
+        StrategyKind::Young,
+        StrategyKind::ExactPrediction,
+        StrategyKind::Instant,
+        StrategyKind::NoCkptI,
+    ];
+    if window >= c {
+        v.push(StrategyKind::WithCkptI);
+    }
+    v
+}
+
+#[test]
+fn paper_strategies_are_bit_identical_through_the_policy_layer() {
+    for (si, scenario) in scenarios().iter().enumerate() {
+        let kinds = paper_strategies(scenario.predictor.window, scenario.platform.c);
+        for kind in kinds {
+            // Seed path: the pre-refactor construction route.
+            let s = scenario_for(kind, scenario);
+            let spec = spec_for(kind, &s, Capping::Uncapped);
+            let mut classic = SimSession::new(&s, &spec).unwrap();
+            // Policy path: spec string -> PolicySpec -> resolve -> run.
+            let pspec: PolicySpec = kind.name().parse().unwrap();
+            let rp = resolve_policy(&pspec, scenario).unwrap();
+            assert_eq!(rp.scenario, s, "scenario {si} {kind}: resolution must exactify alike");
+            let mut layered = SimSession::from_policy(&rp.scenario, rp.policy).unwrap();
+
+            for rep in [0u64, 1, 4] {
+                let a = classic.run(rep);
+                let b = layered.run(rep);
+                let tag = format!("scenario {si}, {kind}, rep {rep}");
+                assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "{tag}: makespan");
+                assert_eq!(a.work.to_bits(), b.work.to_bits(), "{tag}: work");
+                assert_eq!(a.lost_work.to_bits(), b.lost_work.to_bits(), "{tag}: lost_work");
+                assert_eq!(a.completed, b.completed, "{tag}: completed");
+                assert_eq!(a.n_faults, b.n_faults, "{tag}: n_faults");
+                assert_eq!(
+                    a.n_faults_unpredicted, b.n_faults_unpredicted,
+                    "{tag}: n_faults_unpredicted"
+                );
+                assert_eq!(a.n_preds, b.n_preds, "{tag}: n_preds");
+                assert_eq!(a.n_true_preds, b.n_true_preds, "{tag}: n_true_preds");
+                assert_eq!(a.n_trusted, b.n_trusted, "{tag}: n_trusted");
+                assert_eq!(a.n_ckpts, b.n_ckpts, "{tag}: n_ckpts");
+                assert_eq!(a.n_proactive_ckpts, b.n_proactive_ckpts, "{tag}: n_proactive");
+                assert_eq!(a.n_migrations, b.n_migrations, "{tag}: n_migrations");
+                assert_eq!(a.n_faults_avoided, b.n_faults_avoided, "{tag}: n_avoided");
+                assert_eq!(a.n_segments, b.n_segments, "{tag}: n_segments");
+            }
+        }
+    }
+}
+
+#[test]
+fn migration_strategy_also_survives_the_policy_layer() {
+    // Migration has the distinct required-lead rule (M vs C); pin it
+    // separately on the exact-predictor scenario.
+    let scenario = &scenarios()[0];
+    let spec = spec_for(StrategyKind::Migration, scenario, Capping::Uncapped);
+    let mut classic = SimSession::new(scenario, &spec).unwrap();
+    let rp = resolve_policy(&PolicySpec::Strategy(StrategyKind::Migration), scenario).unwrap();
+    let mut layered = SimSession::from_policy(&rp.scenario, rp.policy).unwrap();
+    for rep in [0u64, 3] {
+        let a = classic.run(rep);
+        let b = layered.run(rep);
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+        assert_eq!(a.n_migrations, b.n_migrations);
+        assert_eq!(a.n_segments, b.n_segments);
+    }
+}
+
+#[test]
+fn non_paper_policies_run_end_to_end_and_diverge_from_paper_ones() {
+    let scenario = &scenarios()[1];
+    let young = resolve_policy(&PolicySpec::Strategy(StrategyKind::Young), scenario).unwrap();
+    let adaptive = resolve_policy(&PolicySpec::AdaptivePeriod { gain: 1.0 }, scenario).unwrap();
+    let risk = resolve_policy(&PolicySpec::RiskThreshold { kappa: 1.0 }, scenario).unwrap();
+
+    let mut young_s = SimSession::from_policy(&young.scenario, young.policy).unwrap();
+    let mut adaptive_s = SimSession::from_policy(&adaptive.scenario, adaptive.policy).unwrap();
+    let mut risk_s = SimSession::from_policy(&risk.scenario, risk.policy).unwrap();
+
+    let y = young_s.run(0);
+    let a = adaptive_s.run(0);
+    let r = risk_s.run(0);
+    for (name, o) in [("young", &y), ("adaptive", &a), ("risk", &r)] {
+        assert!(o.completed, "{name} must complete");
+        assert!(o.waste() > 0.0 && o.waste() < 1.0, "{name} waste {}", o.waste());
+        assert!(o.n_ckpts > 0, "{name} must checkpoint");
+    }
+    // The new policies are genuinely different machines: at least one
+    // observable differs from Young on the same trace. (Adaptive moves
+    // its period; risk trusts predictions and measures volatile work.)
+    assert!(
+        a.n_segments != y.n_segments || a.makespan != y.makespan,
+        "adaptive ran identically to Young"
+    );
+    assert!(
+        r.n_proactive_ckpts != y.n_proactive_ckpts || r.makespan != y.makespan,
+        "risk ran identically to Young"
+    );
+}
+
+#[test]
+fn policy_jobs_flow_through_the_executor_and_wire() {
+    use ckptfp::api::{wire, JobRequest, JobResponse};
+
+    let scenario = &scenarios()[0];
+    let exec = Executor::local();
+    let mut job = SimulateJob::new(scenario.clone(), StrategyKind::Young);
+    job.reps = 4;
+    job.workers = Some(2);
+    job.policy = Some(PolicySpec::AdaptivePeriod { gain: 1.0 });
+
+    // Encode -> decode -> execute: the full remote path in-process.
+    let line = wire::encode_request(&JobRequest::Simulate(job.clone()));
+    let decoded = wire::decode_request(&line).unwrap();
+    assert_eq!(decoded.request, JobRequest::Simulate(job.clone()));
+    match exec.execute(&decoded.request) {
+        JobResponse::Simulate(res) => {
+            assert_eq!(res.strategy, "adaptive:1");
+            assert_eq!(res.reps, 4);
+            assert_eq!(res.completion_rate, 1.0);
+            // The response round-trips the wire too.
+            let resp_line = wire::encode_response(&JobResponse::Simulate(res.clone()), false);
+            assert_eq!(wire::decode_response(&resp_line).unwrap(), JobResponse::Simulate(res));
+        }
+        other => panic!("expected simulate result, got {other:?}"),
+    }
+}
+
+#[test]
+fn policy_replications_are_deterministic() {
+    let scenario = &scenarios()[2];
+    for pspec in [PolicySpec::AdaptivePeriod { gain: 1.0 }, PolicySpec::RiskThreshold { kappa: 1.0 }]
+    {
+        let rp = resolve_policy(&pspec, scenario).unwrap();
+        let mut s1 = SimSession::from_policy(&rp.scenario, rp.policy).unwrap();
+        let mut s2 = SimSession::from_policy(&rp.scenario, rp.policy).unwrap();
+        for rep in [0u64, 2, 2, 5] {
+            let a = s1.run(rep);
+            let b = s2.run(rep);
+            assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "{pspec} rep {rep}");
+            assert_eq!(a.n_segments, b.n_segments, "{pspec} rep {rep}");
+            assert_eq!(a.n_ckpts, b.n_ckpts, "{pspec} rep {rep}");
+        }
+    }
+}

@@ -1,0 +1,97 @@
+#!/usr/bin/env python3
+"""Diff two BENCH_perf.json files and report per-metric deltas.
+
+Usage: bench_diff.py BASELINE.json CURRENT.json
+
+Walks the shared numeric leaves of the two perf recordings
+(`<bench>.<metric>` keys, schema ckptfp-perf-v1, see EXPERIMENTS.md
+§Perf), prints a markdown table of the deltas, and flags metrics that
+moved against their good direction by more than the noise threshold.
+
+Warn-only by design: the exit code is always 0. CI runs this as a
+bench-regression *comment*, not a gate — perf numbers on shared
+runners are noisy, and the session hot path is additionally pinned by
+the throughput-shaped tests.
+"""
+
+import json
+import sys
+
+# Metrics where LOWER is better (latencies, durations).
+LOWER_BETTER_SUFFIXES = ("_ms", "_s", "_seconds")
+# Metrics where HIGHER is better (throughputs, speedups, efficiencies).
+HIGHER_BETTER_HINTS = ("per_s", "speedup", "efficiency", "msegs", "msegments")
+# Relative move (on the good-direction axis) below which we stay quiet.
+NOISE = 0.10
+
+
+def flatten(obj, prefix=""):
+    out = {}
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            out.update(flatten(v, f"{prefix}{k}." if prefix else f"{k}."))
+    elif isinstance(obj, (int, float)) and not isinstance(obj, bool):
+        out[prefix[:-1]] = float(obj)
+    return out
+
+
+def direction(key):
+    leaf = key.rsplit(".", 1)[-1]
+    if any(h in leaf for h in HIGHER_BETTER_HINTS):
+        return "higher"
+    if leaf.endswith(LOWER_BETTER_SUFFIXES):
+        return "lower"
+    return None  # informational only (counters, worker counts)
+
+
+def main():
+    if len(sys.argv) != 3:
+        print(__doc__.strip())
+        return
+    with open(sys.argv[1]) as f:
+        base = flatten(json.load(f))
+    with open(sys.argv[2]) as f:
+        cur = flatten(json.load(f))
+
+    shared = sorted(set(base) & set(cur))
+    if not shared:
+        print("bench-diff: no shared numeric metrics between baseline and current run")
+        return
+
+    regressions = []
+    print("### Bench delta vs previous run (warn-only)")
+    print()
+    print("| metric | baseline | current | delta |")
+    print("|---|---:|---:|---:|")
+    for key in shared:
+        b, c = base[key], cur[key]
+        if b == 0:
+            delta_txt = "n/a"
+        else:
+            pct = (c - b) / abs(b) * 100.0
+            delta_txt = f"{pct:+.1f}%"
+        print(f"| `{key}` | {b:.4g} | {c:.4g} | {delta_txt} |")
+        d = direction(key)
+        if d and b != 0:
+            rel = (c - b) / abs(b)
+            if (d == "lower" and rel > NOISE) or (d == "higher" and rel < -NOISE):
+                regressions.append((key, rel * 100.0, d))
+    print()
+    only_base = sorted(set(base) - set(cur))
+    only_cur = sorted(set(cur) - set(base))
+    if only_cur:
+        print(f"new metrics: {', '.join(f'`{k}`' for k in only_cur)}")
+    if only_base:
+        print(f"dropped metrics: {', '.join(f'`{k}`' for k in only_base)}")
+    if regressions:
+        print()
+        print(f"**possible regressions (> {NOISE:.0%} against the good direction):**")
+        for key, pct, d in regressions:
+            print(f"- `{key}`: {pct:+.1f}% ({d} is better)")
+    else:
+        print()
+        print(f"no metric moved more than {NOISE:.0%} against its good direction.")
+
+
+if __name__ == "__main__":
+    main()
