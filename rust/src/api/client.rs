@@ -68,6 +68,14 @@ impl ServiceClient {
         }
     }
 
+    pub fn verify(&mut self, job: VerifyJob) -> anyhow::Result<crate::verify::VerifyReport> {
+        match self.call(&JobRequest::Verify(job))? {
+            JobResponse::Verify(r) => Ok(r),
+            JobResponse::Error(e) => Err(e.into()),
+            other => anyhow::bail!("unexpected response to verify: {other:?}"),
+        }
+    }
+
     pub fn stats(&mut self) -> anyhow::Result<ServiceStats> {
         match self.call(&JobRequest::Stats)? {
             JobResponse::Stats(s) => Ok(s),

@@ -22,6 +22,7 @@ use crate::sim::{run_replications_parallel, run_replications_parallel_with, SimS
 use crate::strategies::{
     best_period_with, best_policy_with, resolve_policy, spec_for, BestPeriodOptions, PolicySpec,
 };
+use crate::verify::{run_conformance, VerifyOptions, VerifyReport};
 
 /// Tuning for an [`Executor`].
 #[derive(Debug, Clone)]
@@ -90,6 +91,7 @@ impl Executor {
             JobRequest::Simulate(job) => self.simulate(job).map(JobResponse::Simulate),
             JobRequest::BestPeriod(job) => self.best_period(job).map(JobResponse::BestPeriod),
             JobRequest::Sweep(job) => self.sweep(job).map(JobResponse::Sweep),
+            JobRequest::Verify(job) => self.verify(job).map(JobResponse::Verify),
             JobRequest::Stats => Ok(JobResponse::Stats(self.stats())),
             JobRequest::Ping => Ok(JobResponse::Pong),
         };
@@ -273,6 +275,19 @@ impl Executor {
         Ok(SweepResult { rows, via_hlo })
     }
 
+    /// Run the conformance grid (the `verify` subsystem) on the worker
+    /// pool. Deterministic for a fixed `(grid, reps, budget, workers)`
+    /// tuple — a TCP-served `Verify` is bit-identical to the in-process
+    /// run (pinned in `tests/test_verify.rs`).
+    pub fn verify(&self, job: &VerifyJob) -> Result<VerifyReport, ApiError> {
+        let workers = self.resolve_workers(job.workers);
+        let (d_reps, d_budget) = job.grid.default_budget();
+        let reps0 = if job.reps == 0 { d_reps } else { job.reps };
+        let budget = if job.budget == 0 { d_budget.max(reps0) } else { job.budget.max(reps0) };
+        let opts = VerifyOptions { reps0, budget, workers };
+        run_conformance(job.grid, job.policy.as_ref(), &opts).map_err(ApiError::from_invalid)
+    }
+
     pub fn stats(&self) -> ServiceStats {
         let (p50, p95, p99, n) = self.metrics.latency_quantiles();
         let finite = |x: f64| if x.is_finite() { x } else { 0.0 };
@@ -283,6 +298,7 @@ impl Executor {
             simulates: self.metrics.get("simulate"),
             best_periods: self.metrics.get("best_period"),
             sweeps: self.metrics.get("sweep"),
+            verifies: self.metrics.get("verify"),
             lat_p50_s: finite(p50),
             lat_p95_s: finite(p95),
             lat_p99_s: finite(p99),
@@ -465,6 +481,24 @@ mod tests {
         assert_eq!(res.strategy, "risk:1");
         assert_eq!(res.sweep.len(), 4);
         assert!(res.t_r >= 0.25 && res.t_r <= 4.0, "kappa {}", res.t_r);
+    }
+
+    #[test]
+    fn verify_resolves_defaults_and_filters() {
+        let exec = Executor::local();
+        let mut job = VerifyJob::new(crate::verify::GridKind::Quick);
+        job.policy = Some(PolicySpec::RiskThreshold { kappa: 1.0 });
+        job.reps = 2;
+        job.budget = 2;
+        job.workers = Some(2);
+        let r = exec.verify(&job).unwrap();
+        assert_eq!(r.workers, 2);
+        assert!(!r.cases.is_empty());
+        assert!(r.cases.iter().all(|c| c.policy == "risk:1"));
+        // A filter with no grid presence is a bad request, not an
+        // empty (vacuously green) report.
+        job.policy = Some(PolicySpec::AdaptivePeriod { gain: 9.0 });
+        assert_eq!(exec.verify(&job).unwrap_err().code, ErrorCode::BadRequest);
     }
 
     #[test]

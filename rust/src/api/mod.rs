@@ -2,7 +2,8 @@
 //!
 //! Everything the system can do for a caller — closed-form/HLO
 //! **planning**, pool-parallel Monte Carlo **simulation**, brute-force
-//! **best-period** search, platform **sweeps** — is a [`JobRequest`]
+//! **best-period** search, platform **sweeps**, model-vs-simulation
+//! **conformance** ([`VerifyJob`]) — is a [`JobRequest`]
 //! answered by a [`JobResponse`], with structured [`ApiError`]s in
 //! place of stringly failures. The same [`Executor`] serves every
 //! caller:

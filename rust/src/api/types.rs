@@ -16,6 +16,7 @@
 use crate::config::Scenario;
 use crate::model::{Capping, StrategyKind};
 use crate::strategies::PolicySpec;
+use crate::verify::{GridKind, VerifyReport};
 
 /// One job, as accepted by [`crate::api::Executor::execute`] and the
 /// TCP service alike.
@@ -29,6 +30,10 @@ pub enum JobRequest {
     BestPeriod(BestPeriodJob),
     /// Plan across a range of platform sizes in one batch.
     Sweep(SweepJob),
+    /// Run the conformance grid: cross-check the analytic model
+    /// against the simulator with CI-aware verdicts (the `verify`
+    /// subsystem, v2-only).
+    Verify(VerifyJob),
     /// Service counters and latency quantiles.
     Stats,
     /// Liveness probe.
@@ -43,6 +48,7 @@ impl JobRequest {
             JobRequest::Simulate(_) => "simulate",
             JobRequest::BestPeriod(_) => "best_period",
             JobRequest::Sweep(_) => "sweep",
+            JobRequest::Verify(_) => "verify",
             JobRequest::Stats => "stats",
             JobRequest::Ping => "ping",
         }
@@ -133,6 +139,26 @@ pub struct SweepJob {
     pub capping: Capping,
 }
 
+/// Run the conformance grid and report CI-aware verdicts.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VerifyJob {
+    pub grid: GridKind,
+    /// Restrict to cases whose subject equals this policy spec.
+    pub policy: Option<PolicySpec>,
+    /// Base replications per case; 0 = the grid's default.
+    pub reps: u64,
+    /// Replication-escalation budget per case; 0 = the grid's default.
+    pub budget: u64,
+    /// Pool width; `None` = the executor's configured default.
+    pub workers: Option<u64>,
+}
+
+impl VerifyJob {
+    pub fn new(grid: GridKind) -> VerifyJob {
+        VerifyJob { grid, policy: None, reps: 0, budget: 0, workers: None }
+    }
+}
+
 /// One job's result. `Error` is a first-class variant so the service
 /// can answer *every* line with a `JobResponse`.
 #[derive(Debug, Clone, PartialEq)]
@@ -141,6 +167,7 @@ pub enum JobResponse {
     Simulate(SimulateResult),
     BestPeriod(BestPeriodOutcome),
     Sweep(SweepResult),
+    Verify(VerifyReport),
     Stats(ServiceStats),
     Pong,
     Error(ApiError),
@@ -237,6 +264,7 @@ pub struct ServiceStats {
     pub simulates: u64,
     pub best_periods: u64,
     pub sweeps: u64,
+    pub verifies: u64,
     pub lat_p50_s: f64,
     pub lat_p95_s: f64,
     pub lat_p99_s: f64,
@@ -365,6 +393,7 @@ mod tests {
         assert_eq!(JobRequest::Plan(PlanJob::new(s.clone())).op(), "plan");
         assert_eq!(JobRequest::Simulate(SimulateJob::new(s.clone(), StrategyKind::Young)).op(), "simulate");
         assert_eq!(JobRequest::BestPeriod(BestPeriodJob::new(s, StrategyKind::Young)).op(), "best_period");
+        assert_eq!(JobRequest::Verify(VerifyJob::new(GridKind::Quick)).op(), "verify");
         assert_eq!(JobRequest::Stats.op(), "stats");
         assert_eq!(JobRequest::Ping.op(), "ping");
     }

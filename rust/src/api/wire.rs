@@ -18,6 +18,7 @@ use crate::dist::DistSpec;
 use crate::model::{Capping, StrategyKind};
 use crate::strategies::PolicySpec;
 use crate::util::json::{parse, Json};
+use crate::verify::{self, GridKind};
 
 /// The protocol version this build speaks natively.
 pub const PROTOCOL_VERSION: f64 = 2.0;
@@ -95,6 +96,19 @@ pub fn decode_request(line: &str) -> Result<Decoded, ApiError> {
                 base: scenario_from_json(require(&v, "scenario")?)?,
                 n_procs,
                 capping: capping_from_json(&v),
+            })
+        }
+        "verify" => {
+            let grid = match v.get("grid").and_then(Json::as_str) {
+                None => GridKind::Quick,
+                Some(g) => g.parse::<GridKind>().map_err(ApiError::from_invalid)?,
+            };
+            JobRequest::Verify(VerifyJob {
+                grid,
+                policy: policy_from_json(&v)?,
+                reps: u64_or(&v, "reps", 0),
+                budget: u64_or(&v, "budget", 0),
+                workers: opt_u64(&v, "workers"),
             })
         }
         "stats" => JobRequest::Stats,
@@ -198,6 +212,17 @@ pub fn encode_request(req: &JobRequest) -> String {
                 Json::Arr(job.n_procs.iter().map(|&n| Json::Num(n as f64)).collect()),
             ));
             fields.push(("capped", Json::Bool(job.capping == Capping::Capped)));
+        }
+        JobRequest::Verify(job) => {
+            fields.push(("grid", Json::Str(job.grid.name().into())));
+            fields.push(("reps", Json::Num(job.reps as f64)));
+            fields.push(("budget", Json::Num(job.budget as f64)));
+            if let Some(w) = job.workers {
+                fields.push(("workers", Json::Num(w as f64)));
+            }
+            if let Some(p) = &job.policy {
+                fields.push(("policy", Json::Str(p.to_string())));
+            }
         }
         JobRequest::Stats | JobRequest::Ping => {}
     }
@@ -310,6 +335,13 @@ pub fn encode_response(resp: &JobResponse, legacy: bool) -> String {
                 ),
             ));
         }
+        JobResponse::Verify(r) => {
+            fields.push(("ok", Json::Bool(true)));
+            if !legacy {
+                fields.push(("job", Json::Str("verify".into())));
+            }
+            fields.extend(verify::report_fields(r));
+        }
         JobResponse::Stats(s) => {
             fields.push(("ok", Json::Bool(true)));
             if legacy {
@@ -342,6 +374,7 @@ pub fn encode_response(resp: &JobResponse, legacy: bool) -> String {
                     ("simulates", Json::Num(s.simulates as f64)),
                     ("best_periods", Json::Num(s.best_periods as f64)),
                     ("sweeps", Json::Num(s.sweeps as f64)),
+                    ("verifies", Json::Num(s.verifies as f64)),
                     ("lat_p50_s", Json::Num(s.lat_p50_s)),
                     ("lat_p95_s", Json::Num(s.lat_p95_s)),
                     ("lat_p99_s", Json::Num(s.lat_p99_s)),
@@ -498,6 +531,9 @@ pub fn decode_response(line: &str) -> Result<JobResponse, ApiError> {
                 via_hlo: v.get("planner").and_then(Json::as_str) == Some("hlo"),
             }))
         }
+        Some("verify") => verify::report_from_json(&v)
+            .map(JobResponse::Verify)
+            .map_err(|e| ApiError::bad_request(format!("{e:#}"))),
         Some("stats") => {
             let batcher = v.get("batcher").map(|b| BatcherSnapshot {
                 requests: u64_or(b, "requests", 0),
@@ -511,6 +547,7 @@ pub fn decode_response(line: &str) -> Result<JobResponse, ApiError> {
                 simulates: u64_or(&v, "simulates", 0),
                 best_periods: u64_or(&v, "best_periods", 0),
                 sweeps: u64_or(&v, "sweeps", 0),
+                verifies: u64_or(&v, "verifies", 0),
                 lat_p50_s: v.num_or("lat_p50_s", 0.0),
                 lat_p95_s: v.num_or("lat_p95_s", 0.0),
                 lat_p99_s: v.num_or("lat_p99_s", 0.0),

@@ -1,0 +1,66 @@
+//! The `conformance` experiment: the §5.1 "analysis corroborated by
+//! simulation" claim as a catalog entry — runs the quick conformance
+//! grid through the [`crate::verify`] subsystem and renders the
+//! verdicts as a table (the same data `ckptfp verify` writes to
+//! `CONFORMANCE.json`).
+
+use super::{ExpOptions, ExperimentResult};
+use crate::report::Table;
+use crate::verify::{run_conformance, GridKind, VerifyOptions};
+
+/// Map the experiment harness's replication knob onto the comparator:
+/// `opts.reps` is the base batch, the escalation budget is 8×.
+pub fn conformance(opts: &ExpOptions) -> anyhow::Result<ExperimentResult> {
+    let reps0 = opts.reps.max(8);
+    let vopts = VerifyOptions { reps0, budget: reps0 * 8, workers: opts.workers };
+    let report = run_conformance(GridKind::Quick, None, &vopts)?;
+
+    let mut t = Table::new([
+        "case", "policy", "domain", "analytic", "band lo", "band hi", "sim", "ci95", "reps",
+        "verdict",
+    ]);
+    for c in &report.cases {
+        t.row([
+            c.name.clone(),
+            c.policy.clone(),
+            if c.domain.is_first_order() { "first-order".into() } else { "out-of-domain".into() },
+            format!("{:.4}", c.analytic),
+            format!("{:.4}", c.band.0),
+            format!("{:.4}", c.band.1),
+            format!("{:.4}", c.sim_mean),
+            format!("{:.4}", c.sim_ci95),
+            c.reps.to_string(),
+            c.verdict.to_string(),
+        ]);
+    }
+    let mut result = ExperimentResult::default();
+    result.tables.push((
+        format!(
+            "conformance-{} ({} pass / {} fail / {} inconclusive)",
+            report.grid, report.n_pass, report.n_fail, report.n_inconclusive
+        ),
+        t,
+    ));
+    Ok(result)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conformance_experiment_renders_every_case() {
+        // Tiny budget: this is a smoke test of the wiring, not of the
+        // verdicts (test_verify.rs covers those on a real budget).
+        let opts = ExpOptions { reps: 2, ..ExpOptions::quick() };
+        let r = conformance(&opts).unwrap();
+        assert_eq!(r.tables.len(), 1);
+        let rendered = r.render();
+        let n_cases = crate::verify::conformance_grid(GridKind::Quick).len();
+        for needle in ["exp-n16-none-Young", "verdict", "out-of-domain", "first-order"] {
+            assert!(rendered.contains(needle), "missing '{needle}':\n{rendered}");
+        }
+        // One row per case plus header material.
+        assert!(rendered.matches('\n').count() >= n_cases);
+    }
+}

@@ -6,6 +6,7 @@
 
 pub mod ablations;
 pub mod catalog;
+pub mod conformance;
 pub mod figures;
 pub mod policies;
 pub mod sweep;
@@ -224,8 +225,9 @@ pub fn run_experiment(id: &str, opts: &ExpOptions) -> anyhow::Result<ExperimentR
         "abl-lead" => ablations::ablation_lead(opts),
         "abl-cap" => ablations::ablation_cap(opts),
         "policy-comparison" | "policy_comparison" => policies::policy_comparison(opts),
+        "conformance" => conformance::conformance(opts),
         other => anyhow::bail!(
-            "unknown experiment '{other}' (expected fig4..fig11 | tab1..tab3 | abl-q | abl-daly | abl-lead | abl-cap | policy-comparison)"
+            "unknown experiment '{other}' (expected fig4..fig11 | tab1..tab3 | abl-q | abl-daly | abl-lead | abl-cap | policy-comparison | conformance)"
         ),
     }
 }
@@ -235,11 +237,11 @@ pub fn paper_experiments() -> Vec<&'static str> {
     vec!["fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "tab1", "tab2", "tab3"]
 }
 
-/// Everything: the paper's figures/tables, the ablations, and the
-/// policy-layer comparison.
+/// Everything: the paper's figures/tables, the ablations, the
+/// policy-layer comparison, and the conformance grid.
 pub fn all_experiments() -> Vec<&'static str> {
     let mut v = paper_experiments();
-    v.extend(["abl-q", "abl-daly", "abl-lead", "abl-cap", "policy-comparison"]);
+    v.extend(["abl-q", "abl-daly", "abl-lead", "abl-cap", "policy-comparison", "conformance"]);
     v
 }
 
@@ -291,9 +293,11 @@ mod tests {
     #[test]
     fn experiment_ids_complete() {
         // One per figure and table of §5 — the (d) deliverable checklist —
-        // plus the four ablations and the policy comparison.
+        // plus the four ablations, the policy comparison and the
+        // conformance grid.
         assert_eq!(paper_experiments().len(), 11);
-        assert_eq!(all_experiments().len(), 16);
+        assert_eq!(all_experiments().len(), 17);
         assert!(all_experiments().contains(&"policy-comparison"));
+        assert!(all_experiments().contains(&"conformance"));
     }
 }

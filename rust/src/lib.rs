@@ -27,10 +27,14 @@
 //!   [`api::Executor`] and the blocking [`api::ServiceClient`] —
 //!   the CLI, the experiments and the TCP service all execute jobs
 //!   through this one entry point;
-//! * [`experiments`] — the §5 evaluation scenarios (every figure & table).
+//! * [`experiments`] — the §5 evaluation scenarios (every figure & table);
+//! * [`verify`] — the conformance subsystem: the paper's "analysis
+//!   corroborated by simulation" claim as an executable test layer
+//!   (scenario grid × analytic oracle × CI-aware comparator, reported
+//!   as `CONFORMANCE.json` and served as the `verify` job).
 //!
 //! Substrate modules ([`rng`], [`dist`], [`util`], [`config`], [`cli`],
-//! [`report`], [`testkit`]) are implemented from scratch — the build is
+//! [`report`], [`verify::testkit`]) are implemented from scratch — the build is
 //! fully offline and depends only on `anyhow` (plus the optional `xla`
 //! PJRT bindings behind the `pjrt` feature; without it the [`runtime`]
 //! module keeps its API surface but reports the missing backend, and
@@ -48,15 +52,19 @@ pub mod rng;
 pub mod runtime;
 pub mod sim;
 pub mod strategies;
-pub mod testkit;
 pub mod trace;
 pub mod util;
+pub mod verify;
+
+/// The property harness moved into [`verify`]; this alias keeps the
+/// historical `ckptfp::testkit` path working.
+pub use verify::testkit;
 
 /// Convenient glob import for examples and binaries.
 pub mod prelude {
     pub use crate::api::{
         ApiError, BestPeriodJob, ErrorCode, Executor, ExecutorConfig, JobRequest, JobResponse,
-        PlanJob, ServiceClient, SimulateJob, SweepJob,
+        PlanJob, ServiceClient, SimulateJob, SweepJob, VerifyJob,
     };
     pub use crate::config::{Platform, Predictor, Scenario};
     pub use crate::dist::{Dist, DistSpec, Distribution, Exponential, Uniform, Weibull};
@@ -67,4 +75,8 @@ pub mod prelude {
         resolve_policy, PolicySpec, ProactiveMode, ResolvedPolicy, StrategySpec,
     };
     pub use crate::util::stats::Summary;
+    pub use crate::verify::{
+        conformance_grid, run_conformance, CaseVerdict, ConformanceCase, GridKind, Verdict,
+        VerifyOptions, VerifyReport,
+    };
 }

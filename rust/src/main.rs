@@ -7,9 +7,10 @@
 //! ckptfp plan        [--n-procs N | --mu-mn M] [--recall R --precision P --window I] [--policy P] [--hlo] [--json]
 //! ckptfp simulate    [--strategy NAME | --policy P] [--n-procs N] [--reps K] [--workers W] [--dist exp|weibull:K]
 //! ckptfp best-period [--strategy NAME | --policy P] [--reps K] [--candidates N] [--prune] [scenario flags]
-//! ckptfp experiment  <fig4..fig11|tab1..tab3|policy-comparison|all> [--reps K] [--best-period] [--out DIR]
+//! ckptfp verify      [--grid quick|full] [--policy P] [--reps K] [--budget B] [--workers W] [--out FILE] [--json]
+//! ckptfp experiment  <fig4..fig11|tab1..tab3|policy-comparison|conformance|all> [--reps K] [--best-period] [--out DIR]
 //! ckptfp serve       [--addr HOST:PORT] [--workers W] [--reps-default K]
-//! ckptfp client      <plan|simulate|best-period|ping|stats> --addr HOST:PORT [job flags]
+//! ckptfp client      <plan|simulate|best-period|verify|ping|stats> --addr HOST:PORT [job flags]
 //! ckptfp trace       [--out FILE] [--horizon SECONDS] [--n-procs N]
 //! ckptfp config      <file.toml> — validate and print a scenario (+ optional [policy])
 //! ```
@@ -21,7 +22,7 @@
 use anyhow::Context;
 use ckptfp::api::{
     BestPeriodJob, BestPeriodOutcome, Executor, ExecutorConfig, PlanJob, PlanResult,
-    ServiceClient, SimulateJob, SimulateResult,
+    ServiceClient, SimulateJob, SimulateResult, VerifyJob,
 };
 use ckptfp::cli::Args;
 use ckptfp::config::{Predictor, Scenario};
@@ -77,6 +78,7 @@ fn run() -> anyhow::Result<()> {
         Some("plan") => cmd_plan(&mut args),
         Some("simulate") => cmd_simulate(&mut args),
         Some("best-period") => cmd_best_period(&mut args),
+        Some("verify") => cmd_verify(&mut args),
         Some("experiment") => cmd_experiment(&mut args),
         Some("serve") => cmd_serve(&mut args),
         Some("client") => cmd_client(&mut args),
@@ -98,10 +100,14 @@ commands:
   simulate     discrete-event simulation of one strategy or policy (worker pool)
   best-period  brute-force §5 period search by simulation (--policy sweeps
                a policy's own parameter: T_R, adaptive gain, or risk kappa)
+  verify       conformance grid: cross-check the analytic model against the
+               simulator with CI-aware verdicts; writes CONFORMANCE.json and
+               exits nonzero on any 'fail' verdict
+               [--grid quick|full] [--policy P] [--reps N] [--budget N] [--out FILE]
   experiment   regenerate a paper figure/table (fig4..fig11, tab1..tab3,
-               policy-comparison, all)
+               policy-comparison, conformance, all)
   serve        TCP/JSONL job service (protocol v2; v1 planner dialect adapted)
-  client       run plan/simulate/best-period jobs against a remote service
+  client       run plan/simulate/best-period/verify jobs against a remote service
   trace        dump a generated fault/prediction trace
   config       validate a TOML scenario file
 policies (--policy): a strategy name, adaptive[:gain], or risk[:kappa]
@@ -235,6 +241,72 @@ fn cmd_best_period(args: &mut Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn verify_job_from_args(args: &mut Args) -> anyhow::Result<VerifyJob> {
+    let grid: ckptfp::verify::GridKind = args.get_str("grid", "quick").parse()?;
+    let policy = args.get_opt::<PolicySpec>("policy")?;
+    let reps: u64 = args.get("reps", 0)?;
+    let budget: u64 = args.get("budget", 0)?;
+    let workers = args.get_opt::<u64>("workers")?;
+    Ok(VerifyJob { grid, policy, reps, budget, workers })
+}
+
+fn print_verify(report: &ckptfp::verify::VerifyReport) {
+    let mut t = Table::new([
+        "case", "domain", "analytic", "band", "sim", "ci95", "reps", "verdict",
+    ]);
+    for c in &report.cases {
+        t.row([
+            c.name.clone(),
+            if c.domain.is_first_order() { "first-order".into() } else { "out-of-domain".into() },
+            format!("{:.4}", c.analytic),
+            format!("[{:.3}, {:.3}]", c.band.0, c.band.1),
+            format!("{:.4}", c.sim_mean),
+            format!("{:.4}", c.sim_ci95),
+            c.reps.to_string(),
+            c.verdict.to_string(),
+        ]);
+    }
+    print!("{t}");
+    println!(
+        "{} grid: {} pass, {} fail, {} inconclusive over {} cases ({} workers)",
+        report.grid,
+        report.n_pass,
+        report.n_fail,
+        report.n_inconclusive,
+        report.cases.len(),
+        report.workers,
+    );
+}
+
+fn cmd_verify(args: &mut Args) -> anyhow::Result<()> {
+    let job = verify_job_from_args(args)?;
+    let out = args.get_str("out", "CONFORMANCE.json");
+    let as_json = args.switch("json");
+    args.finish()?;
+    let report = Executor::local().verify(&job)?;
+    let mut doc = ckptfp::verify::conformance_json(&report).to_string();
+    doc.push('\n');
+    std::fs::write(&out, doc).with_context(|| format!("writing {out}"))?;
+    if as_json {
+        println!(
+            "{}",
+            ckptfp::api::wire::encode_response(
+                &ckptfp::api::JobResponse::Verify(report.clone()),
+                false
+            )
+        );
+    } else {
+        print_verify(&report);
+    }
+    eprintln!("conformance report written to {out}");
+    anyhow::ensure!(
+        report.ok(),
+        "conformance: {} case(s) FAILED (see {out})",
+        report.n_fail
+    );
+    Ok(())
+}
+
 fn cmd_experiment(args: &mut Args) -> anyhow::Result<()> {
     let mut opts = ExpOptions::default();
     opts.reps = args.get("reps", opts.reps)?;
@@ -297,7 +369,7 @@ fn cmd_client(args: &mut Args) -> anyhow::Result<()> {
     let verb = args
         .positional()
         .first()
-        .ok_or_else(|| anyhow::anyhow!("client needs a verb: plan | simulate | best-period | ping | stats"))?
+        .ok_or_else(|| anyhow::anyhow!("client needs a verb: plan | simulate | best-period | verify | ping | stats"))?
         .clone();
     let addr = args.get_str("addr", "127.0.0.1:7471");
     match verb.as_str() {
@@ -323,6 +395,13 @@ fn cmd_client(args: &mut Args) -> anyhow::Result<()> {
             let res = ServiceClient::connect(&addr)?.best_period(job)?;
             print_best_period(&res);
         }
+        "verify" => {
+            let job = verify_job_from_args(args)?;
+            args.finish()?;
+            let report = ServiceClient::connect(&addr)?.verify(job)?;
+            print_verify(&report);
+            anyhow::ensure!(report.ok(), "conformance: {} case(s) FAILED", report.n_fail);
+        }
         "ping" => {
             args.finish()?;
             ServiceClient::connect(&addr)?.ping()?;
@@ -332,8 +411,8 @@ fn cmd_client(args: &mut Args) -> anyhow::Result<()> {
             args.finish()?;
             let s = ServiceClient::connect(&addr)?.stats()?;
             println!(
-                "requests {} (errors {}) | plan {} simulate {} best_period {} sweep {}",
-                s.requests, s.errors, s.plans, s.simulates, s.best_periods, s.sweeps
+                "requests {} (errors {}) | plan {} simulate {} best_period {} sweep {} verify {}",
+                s.requests, s.errors, s.plans, s.simulates, s.best_periods, s.sweeps, s.verifies
             );
             println!(
                 "latency p50 {:.4}s p95 {:.4}s p99 {:.4}s over {} samples",

@@ -187,10 +187,32 @@ pub fn run_replications_parallel_with<M>(
 where
     M: Fn() -> anyhow::Result<SimSession> + Sync,
 {
+    let agg = run_replication_range_with(0, reps, workers, make)?;
+    Ok(ReplicationReport { strategy: name.to_string(), agg, outcomes: Vec::new() })
+}
+
+/// The range core under [`run_replications_parallel_with`]: replicate
+/// `[rep_lo, rep_hi)` across the pool and return the merged aggregate.
+/// The explicit range lets incremental callers (the `verify`
+/// conformance comparator's replication escalation) extend an existing
+/// aggregate without re-simulating the replications they already have:
+/// `agg([lo, mid)) merge agg([mid, hi))` equals one pass over
+/// `[lo, hi)` in counters, and differs from it only by floating-point
+/// reassociation in the summaries. Deterministic for a fixed worker
+/// count, like everything on this path.
+pub fn run_replication_range_with<M>(
+    rep_lo: u64,
+    rep_hi: u64,
+    workers: usize,
+    make: M,
+) -> anyhow::Result<ReplicationAgg>
+where
+    M: Fn() -> anyhow::Result<SimSession> + Sync,
+{
     // Surface configuration errors here, once, instead of panicking in
     // a worker.
     drop(make()?);
-    let rep_ids: Vec<u64> = (0..reps).collect();
+    let rep_ids: Vec<u64> = (rep_lo..rep_hi).collect();
     let (_, agg) = run_parallel_fold(
         &rep_ids,
         workers,
@@ -202,7 +224,7 @@ where
         },
         |(_, a), (_, b)| (None, a.merge(b)),
     );
-    Ok(ReplicationReport { strategy: name.to_string(), agg, outcomes: Vec::new() })
+    Ok(agg)
 }
 
 /// Build point-major `(point, rep_lo, rep_hi)` blocks for
@@ -365,6 +387,26 @@ mod tests {
         assert!(approx_eq(seq.mean_waste(), par.mean_waste(), 1e-12));
         assert!(approx_eq(seq.mean_makespan(), par.mean_makespan(), 1e-12));
         assert!(approx_eq(seq.agg.waste.variance(), par.agg.waste.variance(), 1e-9));
+    }
+
+    #[test]
+    fn replication_ranges_merge_to_the_full_pass() {
+        // agg([0,4)) merge agg([4,10)) == agg([0,10)): exact counters,
+        // reassociation-level summaries — the escalation contract the
+        // verify comparator builds on.
+        let s = small_scenario();
+        let spec = spec_for(StrategyKind::Young, &s, Capping::Uncapped);
+        let make = || SimSession::new(&s, &spec);
+        let full = run_replication_range_with(0, 10, 3, make).unwrap();
+        let a = run_replication_range_with(0, 4, 3, make).unwrap();
+        let b = run_replication_range_with(4, 10, 3, make).unwrap();
+        let merged = a.merge(b);
+        assert_eq!(full.n_reps, merged.n_reps);
+        assert_eq!(full.n_faults, merged.n_faults);
+        assert_eq!(full.n_segments, merged.n_segments);
+        assert_eq!(full.n_ckpts, merged.n_ckpts);
+        assert!(approx_eq(full.waste.mean(), merged.waste.mean(), 1e-12));
+        assert!(approx_eq(full.makespan.mean(), merged.makespan.mean(), 1e-12));
     }
 
     #[test]

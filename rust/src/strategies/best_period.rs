@@ -158,7 +158,16 @@ fn search_policy_param(
     opts: &BestPeriodOptions,
     respec: impl Fn(f64) -> PolicySpec,
 ) -> anyhow::Result<BestPeriodResult> {
-    let grid = period_grid(center / 4.0, center * 4.0, n_candidates.max(2));
+    let (lo, hi) = (center / 4.0, center * 4.0);
+    // `validate()` admits any finite positive parameter, including
+    // denormals whose quarter underflows to 0 and giants whose 4x
+    // overflows — either would trip `period_grid`'s bracket assert and
+    // panic inside the executor. Refuse them as a plain error instead.
+    anyhow::ensure!(
+        lo > 0.0 && hi.is_finite() && hi > lo,
+        "policy parameter {center:e} is too extreme to bracket a [x/4, 4x] search grid"
+    );
+    let grid = period_grid(lo, hi, n_candidates.max(2));
     let policies: Vec<crate::sim::Policy> = grid
         .iter()
         .map(|&x| Ok(resolve_policy(&respec(x), scenario)?.policy))
@@ -403,6 +412,19 @@ mod tests {
         // The winner is a grid point with its own recorded waste.
         assert!(res.sweep.iter().any(|&(k, w)| k == res.t_r && w == res.waste));
         assert!(res.waste > 0.0 && res.waste < 1.0);
+    }
+
+    #[test]
+    fn policy_search_refuses_unbracketable_parameters() {
+        // Denormal kappa: finite and positive (so validate admits it)
+        // but kappa/4 underflows to 0 — must be an error, not a panic.
+        let (s, _) = small_study();
+        let opts = BestPeriodOptions { workers: 2, prune: false };
+        let tiny = PolicySpec::RiskThreshold { kappa: 5e-324 };
+        let err = best_policy_with(&s, &tiny, 2, 4, &opts).unwrap_err();
+        assert!(err.to_string().contains("too extreme"), "{err:#}");
+        let huge = PolicySpec::AdaptivePeriod { gain: f64::MAX };
+        assert!(best_policy_with(&s, &huge, 2, 4, &opts).is_err());
     }
 
     #[test]

@@ -1,0 +1,224 @@
+//! The statistical comparator: CI-aware verdicts over the parallel
+//! replication runner, with automatic replication escalation.
+//!
+//! A case is judged by where the 95% confidence interval of its
+//! simulated mean waste lands relative to the oracle band:
+//!
+//! * CI entirely **inside** the band → [`Verdict::Pass`];
+//! * CI entirely **outside** the band → [`Verdict::Fail`];
+//! * CI **straddles** a band edge → the sample is not yet decisive:
+//!   the comparator doubles the replication count (extending the
+//!   existing aggregate — earlier replications are never re-simulated)
+//!   until the verdict resolves or the budget is exhausted, in which
+//!   case the case reports [`Verdict::Inconclusive`].
+//!
+//! No magic epsilons anywhere: the only tolerances are the oracle's
+//! stated band and the sample's own confidence interval. The whole
+//! procedure is deterministic for a fixed `(reps0, budget, workers)` —
+//! the property the TCP-vs-in-process acceptance pin relies on.
+
+use super::grid::ConformanceCase;
+use super::oracle::{oracle_for, Domain};
+use crate::sim::{run_replication_range_with, ReplicationAgg, SimSession};
+use crate::strategies::resolve_policy;
+
+/// Comparator tuning. `reps0` is the first batch; escalation doubles
+/// the total until it reaches `budget`.
+#[derive(Debug, Clone)]
+pub struct VerifyOptions {
+    pub reps0: u64,
+    pub budget: u64,
+    pub workers: usize,
+}
+
+/// Outcome of one conformance case.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// The simulated CI lies inside the oracle band.
+    Pass,
+    /// The simulated CI lies outside the oracle band (or replications
+    /// hit the makespan guard).
+    Fail,
+    /// The CI still straddles a band edge after the full budget.
+    Inconclusive,
+}
+
+impl Verdict {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Verdict::Pass => "pass",
+            Verdict::Fail => "fail",
+            Verdict::Inconclusive => "inconclusive",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Verdict> {
+        match s {
+            "pass" => Ok(Verdict::Pass),
+            "fail" => Ok(Verdict::Fail),
+            "inconclusive" => Ok(Verdict::Inconclusive),
+            other => anyhow::bail!("unknown verdict '{other}'"),
+        }
+    }
+}
+
+impl std::fmt::Display for Verdict {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// The judged result of one case — everything `CONFORMANCE.json`
+/// records about it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CaseVerdict {
+    pub name: String,
+    /// Display form of the subject policy spec.
+    pub policy: String,
+    pub domain: Domain,
+    /// The oracle's analytic prediction (or out-of-domain reference).
+    pub analytic: f64,
+    /// The oracle band the CI was tested against.
+    pub band: (f64, f64),
+    pub sim_mean: f64,
+    pub sim_ci95: f64,
+    pub completion_rate: f64,
+    /// Replications actually spent (after escalation).
+    pub reps: u64,
+    pub verdict: Verdict,
+}
+
+/// Classify one aggregate against a band. Replications that hit the
+/// makespan guard poison the waste mean, so any incompletion is an
+/// immediate failure.
+fn classify(agg: &ReplicationAgg, band: (f64, f64)) -> Verdict {
+    if agg.n_completed < agg.n_reps {
+        return Verdict::Fail;
+    }
+    let mean = agg.waste.mean();
+    let ci = agg.waste.ci95();
+    let (lo, hi) = (mean - ci, mean + ci);
+    if lo >= band.0 && hi <= band.1 {
+        Verdict::Pass
+    } else if hi < band.0 || lo > band.1 {
+        Verdict::Fail
+    } else {
+        Verdict::Inconclusive
+    }
+}
+
+/// Judge one conformance case: oracle, replication batches with
+/// escalation, final verdict.
+pub fn judge_case(case: &ConformanceCase, opts: &VerifyOptions) -> anyhow::Result<CaseVerdict> {
+    let oracle = oracle_for(case)?;
+    let rp = resolve_policy(&case.subject, &case.scenario)?;
+    let reps0 = opts.reps0.max(2);
+    let budget = opts.budget.max(reps0);
+
+    let mut agg = ReplicationAgg::default();
+    let mut done = 0u64;
+    let verdict = loop {
+        let target = if done == 0 { reps0 } else { (done * 2).min(budget) };
+        let chunk = run_replication_range_with(done, target, opts.workers, || {
+            SimSession::from_policy(&rp.scenario, rp.policy)
+        })?;
+        agg = agg.merge(chunk);
+        done = target;
+        let v = classify(&agg, oracle.band);
+        if v != Verdict::Inconclusive || done >= budget {
+            break v;
+        }
+    };
+
+    Ok(CaseVerdict {
+        name: case.name.clone(),
+        policy: case.subject.to_string(),
+        domain: oracle.domain,
+        analytic: oracle.analytic,
+        band: oracle.band,
+        sim_mean: agg.waste.mean(),
+        sim_ci95: agg.waste.ci95(),
+        completion_rate: agg.completion_rate(),
+        reps: done,
+        verdict,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::Summary;
+    use crate::verify::grid::{conformance_grid, GridKind};
+
+    fn agg_of(values: &[f64], completed: bool) -> ReplicationAgg {
+        let mut agg = ReplicationAgg::default();
+        for &v in values {
+            agg.waste.push(v);
+            agg.makespan.push(1.0);
+            agg.n_reps += 1;
+            agg.n_completed += completed as u64;
+        }
+        agg
+    }
+
+    #[test]
+    fn classify_pass_fail_inconclusive() {
+        // Tight sample inside the band.
+        let inside = agg_of(&[0.10, 0.101, 0.099, 0.1, 0.1005, 0.0995], true);
+        assert_eq!(classify(&inside, (0.08, 0.12)), Verdict::Pass);
+        // Tight sample far outside.
+        let outside = agg_of(&[0.30, 0.301, 0.299, 0.3, 0.3005, 0.2995], true);
+        assert_eq!(classify(&outside, (0.08, 0.12)), Verdict::Fail);
+        // Sample whose CI straddles the upper edge.
+        let straddle = agg_of(&[0.08, 0.16, 0.09, 0.15, 0.10, 0.14], true);
+        let s = Summary::from_iter([0.08, 0.16, 0.09, 0.15, 0.10, 0.14]);
+        assert!(s.mean() - s.ci95() < 0.12 && s.mean() + s.ci95() > 0.12);
+        assert_eq!(classify(&straddle, (0.02, 0.12)), Verdict::Inconclusive);
+    }
+
+    #[test]
+    fn incomplete_replications_fail_outright() {
+        let agg = agg_of(&[0.1, 0.1, 0.1], false);
+        assert_eq!(classify(&agg, (0.0, 1.0)), Verdict::Fail);
+    }
+
+    #[test]
+    fn verdict_names_round_trip() {
+        for v in [Verdict::Pass, Verdict::Fail, Verdict::Inconclusive] {
+            assert_eq!(Verdict::parse(v.name()).unwrap(), v);
+        }
+        assert!(Verdict::parse("maybe").is_err());
+    }
+
+    #[test]
+    fn judge_respects_the_budget_and_is_deterministic() {
+        let case = conformance_grid(GridKind::Quick)
+            .into_iter()
+            .find(|c| c.name == "exp-n16-none-Young")
+            .unwrap();
+        let opts = VerifyOptions { reps0: 4, budget: 13, workers: 2 };
+        let a = judge_case(&case, &opts).unwrap();
+        // Escalation path is 4 -> 8 -> 13; whatever the verdict, the
+        // spend never exceeds the budget.
+        assert!(a.reps == 4 || a.reps == 8 || a.reps == 13, "reps {}", a.reps);
+        assert_eq!(a.completion_rate, 1.0);
+        let b = judge_case(&case, &opts).unwrap();
+        assert_eq!(a, b, "judgement must be deterministic for fixed options");
+    }
+
+    #[test]
+    fn judge_in_domain_case_does_not_fail() {
+        // The headline conformance property on one cheap case: Young on
+        // Exponential faults agrees with Eq. (1) — at worst the small
+        // budget leaves it inconclusive, it must never confidently fail.
+        let case = conformance_grid(GridKind::Quick)
+            .into_iter()
+            .find(|c| c.name == "exp-n16-none-Young")
+            .unwrap();
+        let opts = VerifyOptions { reps0: 24, budget: 96, workers: 2 };
+        let v = judge_case(&case, &opts).unwrap();
+        assert_ne!(v.verdict, Verdict::Fail, "{v:?}");
+        assert!(v.sim_mean > 0.0 && v.sim_mean < 1.0);
+        assert!(v.domain.is_first_order());
+    }
+}

@@ -1,0 +1,337 @@
+//! The conformance scenario grid: the paper's parameter space as
+//! named, seeded [`ConformanceCase`]s.
+//!
+//! Each case pairs one [`Scenario`] with one subject [`PolicySpec`]
+//! (a paper strategy or one of the non-paper policies). Names are
+//! stable identifiers of the form `<law>-<platform>-<predictor>-<subject>`;
+//! the scenario seed is derived from the name (FNV-1a), so inserting a
+//! case never reshuffles another case's traces.
+//!
+//! Two grids: [`GridKind::Quick`] is the CI gate (~20 cases covering
+//! every strategy, both failure laws, the recall×precision corners and
+//! one deliberately out-of-domain regime case); [`GridKind::Full`] is
+//! the quick grid plus the platform-size sweep, the Zheng predictor on
+//! every window strategy, C/D/R variations, precision/recall extremes
+//! and the policy-parameter variants.
+
+use crate::config::{Predictor, Scenario};
+use crate::dist::DistSpec;
+use crate::model::StrategyKind;
+use crate::strategies::PolicySpec;
+
+/// Which conformance grid to enumerate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GridKind {
+    /// The CI gate: every strategy and law once, ~20 cases.
+    Quick,
+    /// The quick grid plus platform sweep, predictor grid and
+    /// parameter variants.
+    Full,
+}
+
+impl GridKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            GridKind::Quick => "quick",
+            GridKind::Full => "full",
+        }
+    }
+
+    /// Default (base replications, escalation budget) per case.
+    pub fn default_budget(&self) -> (u64, u64) {
+        match self {
+            GridKind::Quick => (48, 384),
+            GridKind::Full => (96, 768),
+        }
+    }
+}
+
+impl std::fmt::Display for GridKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for GridKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<GridKind> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "quick" => Ok(GridKind::Quick),
+            "full" => Ok(GridKind::Full),
+            other => anyhow::bail!("unknown conformance grid '{other}' (expected quick | full)"),
+        }
+    }
+}
+
+/// One point of the conformance grid: a scenario and the policy whose
+/// simulated waste is checked against the analytic oracle.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConformanceCase {
+    /// Stable identifier, e.g. `exp-n16-yu:exact-ExactPrediction`.
+    pub name: String,
+    pub scenario: Scenario,
+    pub subject: PolicySpec,
+}
+
+/// FNV-1a over the case name — a stable per-case master seed, so the
+/// grid can grow without perturbing existing cases' traces.
+fn case_seed(name: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Predictor shorthand for case names.
+#[derive(Clone, Copy)]
+enum Pred {
+    None,
+    YuExact,
+    ZhengExact,
+    Yu(f64),
+    Zheng(f64),
+    Custom(&'static str, f64, f64, f64),
+}
+
+impl Pred {
+    fn label(&self) -> String {
+        match self {
+            Pred::None => "none".into(),
+            Pred::YuExact => "yu:exact".into(),
+            Pred::ZhengExact => "zheng:exact".into(),
+            Pred::Yu(i) => format!("yu:I{i}"),
+            Pred::Zheng(i) => format!("zheng:I{i}"),
+            Pred::Custom(tag, _, _, _) => (*tag).into(),
+        }
+    }
+
+    fn build(&self) -> Predictor {
+        match *self {
+            Pred::None => Predictor::none(),
+            Pred::YuExact => Predictor::exact(0.85, 0.82),
+            Pred::ZhengExact => Predictor::exact(0.7, 0.4),
+            Pred::Yu(i) => Predictor::windowed(0.85, 0.82, i),
+            Pred::Zheng(i) => Predictor::windowed(0.7, 0.4, i),
+            Pred::Custom(_, r, p, i) => {
+                if i > 0.0 {
+                    Predictor::windowed(r, p, i)
+                } else {
+                    Predictor::exact(r, p)
+                }
+            }
+        }
+    }
+}
+
+/// A mutation applied to the base paper scenario of a case.
+#[derive(Clone, Copy)]
+enum Tweak {
+    /// No change beyond the case defaults.
+    None,
+    /// Checkpoint duration C (s).
+    C(f64),
+    /// Downtime D (s).
+    D(f64),
+    /// Recovery R (s).
+    R(f64),
+    /// Direct platform-MTBF override (s) — the deliberate T ~ mu case.
+    Mu(f64),
+    /// Uniform false-prediction inter-arrival law (Figures 5/7).
+    UniformFalse,
+}
+
+impl Tweak {
+    fn label(&self) -> Option<String> {
+        match self {
+            Tweak::None => None,
+            Tweak::C(c) => Some(format!("C{c}")),
+            Tweak::D(d) => Some(format!("D{d}")),
+            Tweak::R(r) => Some(format!("R{r}")),
+            Tweak::Mu(m) => Some(format!("mu{m}")),
+            Tweak::UniformFalse => Some("ufalse".into()),
+        }
+    }
+}
+
+struct GridBuilder {
+    cases: Vec<ConformanceCase>,
+}
+
+impl GridBuilder {
+    fn push(&mut self, dist: DistSpec, n_exp: u32, pred: Pred, tweak: Tweak, subject: PolicySpec) {
+        let mut name = format!("{dist}-n{n_exp}-{}", pred.label());
+        if let Some(t) = tweak.label() {
+            name.push('-');
+            name.push_str(&t);
+        }
+        name.push('-');
+        name.push_str(&subject.to_string());
+
+        let mut s = Scenario::paper(1u64 << n_exp, pred.build());
+        s.fault_dist = dist;
+        match tweak {
+            Tweak::None => {}
+            Tweak::C(c) => s.platform.c = c,
+            Tweak::D(d) => s.platform.d = d,
+            Tweak::R(r) => s.platform.r = r,
+            Tweak::Mu(mu) => s.platform.mu_ind = mu * s.platform.n_procs as f64,
+            Tweak::UniformFalse => s.false_pred_dist = Some(DistSpec::Uniform),
+        }
+        // Enough work for O(10..100) faults per replication without
+        // making a single replication expensive: ~10 platform MTBFs,
+        // floored so large-mu platforms still see events.
+        s.work = (10.0 * s.mu()).max(4.0e5);
+        s.seed = case_seed(&name);
+        self.cases.push(ConformanceCase { name, scenario: s, subject });
+    }
+}
+
+/// Enumerate the conformance grid, in a stable order.
+pub fn conformance_grid(kind: GridKind) -> Vec<ConformanceCase> {
+    use StrategyKind::*;
+    let strat = PolicySpec::Strategy;
+    let mut b = GridBuilder { cases: Vec::new() };
+    let exp = DistSpec::Exp;
+    let w07 = DistSpec::weibull(0.7);
+    let w05 = DistSpec::weibull(0.5);
+
+    // --- In-domain: Exponential faults, first-order regime ----------
+    b.push(exp, 16, Pred::None, Tweak::None, strat(Young));
+    b.push(exp, 16, Pred::YuExact, Tweak::None, strat(Young)); // predictions ignored
+    b.push(exp, 16, Pred::YuExact, Tweak::None, strat(ExactPrediction));
+    b.push(exp, 16, Pred::ZhengExact, Tweak::None, strat(ExactPrediction));
+    b.push(exp, 16, Pred::Yu(300.0), Tweak::None, strat(Instant));
+    b.push(exp, 16, Pred::Yu(300.0), Tweak::None, strat(NoCkptI));
+    b.push(exp, 16, Pred::Yu(3000.0), Tweak::None, strat(NoCkptI));
+    b.push(exp, 16, Pred::Yu(3000.0), Tweak::None, strat(WithCkptI));
+    b.push(exp, 16, Pred::YuExact, Tweak::None, strat(Migration));
+    b.push(exp, 18, Pred::None, Tweak::None, strat(Young));
+    // n = 2^18 pushes ExactPrediction's T_R past the first-order cap:
+    // the oracle must classify it out-of-domain automatically.
+    b.push(exp, 18, Pred::YuExact, Tweak::None, strat(ExactPrediction));
+    b.push(exp, 16, Pred::None, Tweak::C(300.0), strat(Young));
+    b.push(exp, 16, Pred::None, Tweak::C(1200.0), strat(Young));
+
+    // --- Out-of-domain: the deliberate T ~ mu regime case -----------
+    b.push(exp, 16, Pred::None, Tweak::Mu(4000.0), strat(Young));
+
+    // --- Out-of-domain: Weibull failure laws -------------------------
+    b.push(w07, 16, Pred::None, Tweak::None, strat(Young));
+    b.push(w07, 16, Pred::YuExact, Tweak::None, strat(ExactPrediction));
+    b.push(w05, 16, Pred::None, Tweak::None, strat(Young));
+    b.push(w05, 16, Pred::YuExact, Tweak::None, strat(ExactPrediction));
+
+    // --- Out-of-domain: the non-paper policies -----------------------
+    b.push(exp, 16, Pred::None, Tweak::None, PolicySpec::AdaptivePeriod { gain: 1.0 });
+    b.push(exp, 16, Pred::None, Tweak::None, PolicySpec::RiskThreshold { kappa: 1.0 });
+    b.push(exp, 16, Pred::YuExact, Tweak::None, PolicySpec::RiskThreshold { kappa: 1.0 });
+
+    if kind == GridKind::Quick {
+        return b.cases;
+    }
+
+    // --- Full grid: platform-size sweep ------------------------------
+    for n in [14u32, 17, 19] {
+        b.push(exp, n, Pred::None, Tweak::None, strat(Young));
+        b.push(exp, n, Pred::YuExact, Tweak::None, strat(ExactPrediction));
+    }
+    // Zheng predictor over the window strategies (recall×precision grid).
+    b.push(exp, 16, Pred::Zheng(300.0), Tweak::None, strat(Instant));
+    b.push(exp, 16, Pred::Zheng(300.0), Tweak::None, strat(NoCkptI));
+    b.push(exp, 16, Pred::Zheng(3000.0), Tweak::None, strat(NoCkptI));
+    b.push(exp, 16, Pred::Zheng(3000.0), Tweak::None, strat(WithCkptI));
+    b.push(exp, 16, Pred::Yu(3000.0), Tweak::None, strat(Instant));
+    b.push(exp, 16, Pred::ZhengExact, Tweak::None, strat(Migration));
+    // Distinct false-prediction law (Figures 5/7 setting).
+    b.push(exp, 16, Pred::ZhengExact, Tweak::UniformFalse, strat(ExactPrediction));
+    // D/R variations.
+    b.push(exp, 16, Pred::None, Tweak::D(0.0), strat(Young));
+    b.push(exp, 16, Pred::None, Tweak::R(60.0), strat(Young));
+    // Precision/recall extremes.
+    b.push(exp, 16, Pred::Custom("r30p90", 0.3, 0.9, 0.0), Tweak::None, strat(ExactPrediction));
+    b.push(exp, 16, Pred::Custom("r85p100", 0.85, 1.0, 0.0), Tweak::None, strat(ExactPrediction));
+    // Weibull window strategies + a second platform size.
+    b.push(w07, 16, Pred::Yu(300.0), Tweak::None, strat(Instant));
+    b.push(w07, 16, Pred::Yu(300.0), Tweak::None, strat(NoCkptI));
+    b.push(w07, 18, Pred::None, Tweak::None, strat(Young));
+    // Policy-parameter variants.
+    b.push(exp, 16, Pred::None, Tweak::None, PolicySpec::AdaptivePeriod { gain: 0.5 });
+    b.push(exp, 16, Pred::None, Tweak::None, PolicySpec::AdaptivePeriod { gain: 2.0 });
+    b.push(exp, 16, Pred::None, Tweak::None, PolicySpec::RiskThreshold { kappa: 0.5 });
+    b.push(exp, 16, Pred::None, Tweak::None, PolicySpec::RiskThreshold { kappa: 2.0 });
+
+    b.cases
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::strategies::resolve_policy;
+
+    #[test]
+    fn grid_kind_round_trips() {
+        for kind in [GridKind::Quick, GridKind::Full] {
+            assert_eq!(kind.name().parse::<GridKind>().unwrap(), kind);
+        }
+        assert_eq!("QUICK".parse::<GridKind>().unwrap(), GridKind::Quick);
+        assert!("medium".parse::<GridKind>().is_err());
+    }
+
+    #[test]
+    fn grids_are_stable_and_named_uniquely() {
+        for kind in [GridKind::Quick, GridKind::Full] {
+            let a = conformance_grid(kind);
+            let b = conformance_grid(kind);
+            assert_eq!(a, b, "{kind} grid must be deterministic");
+            let mut names = std::collections::HashSet::new();
+            for c in &a {
+                assert!(names.insert(c.name.clone()), "duplicate case name {}", c.name);
+            }
+        }
+    }
+
+    #[test]
+    fn quick_is_a_prefix_of_full() {
+        let quick = conformance_grid(GridKind::Quick);
+        let full = conformance_grid(GridKind::Full);
+        assert!(full.len() > quick.len());
+        assert_eq!(&full[..quick.len()], &quick[..]);
+    }
+
+    #[test]
+    fn every_case_resolves_and_validates() {
+        for case in conformance_grid(GridKind::Full) {
+            case.scenario.validate().unwrap_or_else(|e| panic!("{}: {e:#}", case.name));
+            resolve_policy(&case.subject, &case.scenario)
+                .unwrap_or_else(|e| panic!("{}: {e:#}", case.name));
+        }
+    }
+
+    #[test]
+    fn quick_covers_the_strategy_space() {
+        let quick = conformance_grid(GridKind::Quick);
+        for kind in crate::model::StrategyKind::ALL {
+            assert!(
+                quick.iter().any(|c| c.subject == PolicySpec::Strategy(kind)),
+                "quick grid misses {kind}"
+            );
+        }
+        assert!(quick.iter().any(|c| matches!(c.subject, PolicySpec::AdaptivePeriod { .. })));
+        assert!(quick.iter().any(|c| matches!(c.subject, PolicySpec::RiskThreshold { .. })));
+        assert!(quick.iter().any(|c| c.scenario.fault_dist != DistSpec::Exp));
+    }
+
+    #[test]
+    fn seeds_derive_from_names() {
+        let quick = conformance_grid(GridKind::Quick);
+        assert_eq!(quick[0].scenario.seed, case_seed(&quick[0].name));
+        // Distinct names, distinct seeds (FNV collisions are possible in
+        // principle but must not happen on the actual grid).
+        let seeds: std::collections::HashSet<u64> =
+            quick.iter().map(|c| c.scenario.seed).collect();
+        assert_eq!(seeds.len(), quick.len());
+    }
+}

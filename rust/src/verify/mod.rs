@@ -1,0 +1,280 @@
+//! The conformance subsystem: the paper's "analysis corroborated by
+//! simulation" claim as an executable, statistically-sound test layer.
+//!
+//! Three pieces (see DESIGN.md §5):
+//!
+//! * [`grid`] — the scenario-grid generator: the paper's parameter
+//!   space (platform sizes, C/D/R, Exponential and Weibull laws, the
+//!   recall×precision grid, exact vs window predictions, all five
+//!   strategies plus the `adaptive`/`risk` policies) enumerated as
+//!   named, seeded [`ConformanceCase`]s;
+//! * [`oracle`] — the analytic adapter: evaluates the
+//!   `model::{waste, optimal, window}` first-order predictions for a
+//!   case and states their validity domain, so out-of-domain cases
+//!   assert divergence *bounds* rather than agreement;
+//! * [`compare`] — the statistical comparator: CI-aware
+//!   pass / fail / inconclusive verdicts over the parallel replication
+//!   runner, with automatic replication escalation up to a budget.
+//!
+//! [`run_conformance`] strings them together into a [`VerifyReport`];
+//! [`conformance_json`] renders the machine-readable `CONFORMANCE.json`
+//! CI consumes. The report also travels the wire as the v2 `verify`
+//! job ([`crate::api::VerifyJob`]), reachable through the CLI
+//! (`ckptfp verify --grid quick`), the TCP service and the
+//! `conformance` experiment.
+//!
+//! The module grew out of (and absorbed) the old top-level `testkit`
+//! property harness, which lives on as [`testkit`] — re-exported at
+//! the crate root so `ckptfp::testkit::check` keeps working.
+
+pub mod compare;
+pub mod grid;
+pub mod oracle;
+pub mod testkit;
+
+pub use compare::{judge_case, CaseVerdict, Verdict, VerifyOptions};
+pub use grid::{conformance_grid, ConformanceCase, GridKind};
+pub use oracle::{oracle_for, Domain, Oracle, FIRST_ORDER_RATIO_CAP};
+
+use crate::strategies::PolicySpec;
+use crate::util::json::Json;
+
+/// Schema tag of the `CONFORMANCE.json` report.
+pub const CONFORMANCE_SCHEMA: &str = "ckptfp-conformance-v1";
+
+/// The judged conformance grid — the payload of `CONFORMANCE.json` and
+/// of the wire-level `verify` response.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VerifyReport {
+    pub grid: GridKind,
+    /// Pool width the verdicts were computed with (they are
+    /// bit-reproducible only for a fixed width, so the report echoes it).
+    pub workers: u64,
+    pub n_pass: u64,
+    pub n_fail: u64,
+    pub n_inconclusive: u64,
+    pub cases: Vec<CaseVerdict>,
+}
+
+impl VerifyReport {
+    pub fn ok(&self) -> bool {
+        self.n_fail == 0
+    }
+}
+
+/// Run the conformance grid. `filter` restricts to cases whose subject
+/// equals the given policy spec (the CLI `--policy` flag).
+pub fn run_conformance(
+    grid: GridKind,
+    filter: Option<&PolicySpec>,
+    opts: &VerifyOptions,
+) -> anyhow::Result<VerifyReport> {
+    let mut cases = conformance_grid(grid);
+    if let Some(f) = filter {
+        cases.retain(|c| c.subject == *f);
+        anyhow::ensure!(
+            !cases.is_empty(),
+            "no conformance case in the {grid} grid has subject policy '{f}'"
+        );
+    }
+    let mut out = Vec::with_capacity(cases.len());
+    let (mut n_pass, mut n_fail, mut n_inconclusive) = (0u64, 0u64, 0u64);
+    for case in &cases {
+        let v = judge_case(case, opts)?;
+        match v.verdict {
+            Verdict::Pass => n_pass += 1,
+            Verdict::Fail => n_fail += 1,
+            Verdict::Inconclusive => n_inconclusive += 1,
+        }
+        out.push(v);
+    }
+    Ok(VerifyReport {
+        grid,
+        workers: opts.workers as u64,
+        n_pass,
+        n_fail,
+        n_inconclusive,
+        cases: out,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// JSON encoding — shared by CONFORMANCE.json and the wire response
+// ---------------------------------------------------------------------------
+
+fn case_to_json(c: &CaseVerdict) -> Json {
+    let mut fields: Vec<(&str, Json)> = vec![
+        ("name", Json::Str(c.name.clone())),
+        ("policy", Json::Str(c.policy.clone())),
+        ("analytic", Json::Num(c.analytic)),
+        ("band_lo", Json::Num(c.band.0)),
+        ("band_hi", Json::Num(c.band.1)),
+        ("sim_mean", Json::Num(c.sim_mean)),
+        ("sim_ci95", Json::Num(c.sim_ci95)),
+        ("completion_rate", Json::Num(c.completion_rate)),
+        ("reps", Json::Num(c.reps as f64)),
+        ("verdict", Json::Str(c.verdict.name().into())),
+    ];
+    match &c.domain {
+        Domain::FirstOrder => fields.push(("domain", Json::Str("first_order".into()))),
+        Domain::OutOfDomain { reason } => {
+            fields.push(("domain", Json::Str("out_of_domain".into())));
+            fields.push(("domain_reason", Json::Str(reason.clone())));
+        }
+    }
+    Json::obj(fields)
+}
+
+fn case_from_json(v: &Json) -> anyhow::Result<CaseVerdict> {
+    let str_field = |key: &str| -> anyhow::Result<String> {
+        v.get(key)
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .ok_or_else(|| anyhow::anyhow!("conformance case missing '{key}'"))
+    };
+    let domain = match str_field("domain")?.as_str() {
+        "first_order" => Domain::FirstOrder,
+        "out_of_domain" => Domain::OutOfDomain {
+            reason: v
+                .get("domain_reason")
+                .and_then(Json::as_str)
+                .unwrap_or("")
+                .to_string(),
+        },
+        other => anyhow::bail!("unknown conformance domain '{other}'"),
+    };
+    Ok(CaseVerdict {
+        name: str_field("name")?,
+        policy: str_field("policy")?,
+        domain,
+        analytic: v.num_or("analytic", f64::NAN),
+        band: (v.num_or("band_lo", f64::NAN), v.num_or("band_hi", f64::NAN)),
+        sim_mean: v.num_or("sim_mean", f64::NAN),
+        sim_ci95: v.num_or("sim_ci95", f64::NAN),
+        completion_rate: v.num_or("completion_rate", f64::NAN),
+        reps: v.num_or("reps", 0.0) as u64,
+        verdict: Verdict::parse(&str_field("verdict")?)?,
+    })
+}
+
+/// The report's fields, ready to splice into a JSON object (the wire
+/// layer adds its own envelope around these).
+pub fn report_fields(r: &VerifyReport) -> Vec<(&'static str, Json)> {
+    vec![
+        ("grid", Json::Str(r.grid.name().into())),
+        ("workers", Json::Num(r.workers as f64)),
+        ("n_pass", Json::Num(r.n_pass as f64)),
+        ("n_fail", Json::Num(r.n_fail as f64)),
+        ("n_inconclusive", Json::Num(r.n_inconclusive as f64)),
+        ("cases", Json::Arr(r.cases.iter().map(case_to_json).collect())),
+    ]
+}
+
+/// Inverse of [`report_fields`] — also reads `CONFORMANCE.json`.
+pub fn report_from_json(v: &Json) -> anyhow::Result<VerifyReport> {
+    let grid = v
+        .get("grid")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow::anyhow!("conformance report missing 'grid'"))?
+        .parse::<GridKind>()?;
+    let cases = match v.get("cases") {
+        Some(Json::Arr(xs)) => xs.iter().map(case_from_json).collect::<anyhow::Result<Vec<_>>>()?,
+        _ => anyhow::bail!("conformance report missing 'cases' array"),
+    };
+    Ok(VerifyReport {
+        grid,
+        workers: v.num_or("workers", 0.0) as u64,
+        n_pass: v.num_or("n_pass", 0.0) as u64,
+        n_fail: v.num_or("n_fail", 0.0) as u64,
+        n_inconclusive: v.num_or("n_inconclusive", 0.0) as u64,
+        cases,
+    })
+}
+
+/// The full `CONFORMANCE.json` document (report plus schema tag).
+pub fn conformance_json(r: &VerifyReport) -> Json {
+    let mut fields: Vec<(&str, Json)> = vec![("schema", Json::Str(CONFORMANCE_SCHEMA.into()))];
+    fields.extend(report_fields(r));
+    Json::obj(fields)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::StrategyKind;
+
+    fn sample_report() -> VerifyReport {
+        VerifyReport {
+            grid: GridKind::Quick,
+            workers: 4,
+            n_pass: 1,
+            n_fail: 0,
+            n_inconclusive: 1,
+            cases: vec![
+                CaseVerdict {
+                    name: "exp-n16-none-Young".into(),
+                    policy: "Young".into(),
+                    domain: Domain::FirstOrder,
+                    analytic: 0.117,
+                    band: (0.097, 0.137),
+                    sim_mean: 0.1175,
+                    sim_ci95: 0.004,
+                    completion_rate: 1.0,
+                    reps: 48,
+                    verdict: Verdict::Pass,
+                },
+                CaseVerdict {
+                    name: "weibull:0.5-n16-none-Young".into(),
+                    policy: "Young".into(),
+                    domain: Domain::OutOfDomain { reason: "weibull:0.5 faults".into() },
+                    analytic: 0.117,
+                    band: (0.03, 0.47),
+                    sim_mean: 0.46,
+                    sim_ci95: 0.02,
+                    completion_rate: 1.0,
+                    reps: 384,
+                    verdict: Verdict::Inconclusive,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn report_json_round_trips() {
+        let r = sample_report();
+        let doc = conformance_json(&r);
+        let parsed = crate::util::json::parse(&doc.to_string()).unwrap();
+        assert_eq!(
+            parsed.get("schema").and_then(Json::as_str),
+            Some(CONFORMANCE_SCHEMA)
+        );
+        let back = report_from_json(&parsed).unwrap();
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn run_conformance_filters_by_policy() {
+        // Filtered, tiny-budget run: only the risk:1 cases execute.
+        let opts = VerifyOptions { reps0: 2, budget: 2, workers: 2 };
+        let spec = PolicySpec::RiskThreshold { kappa: 1.0 };
+        let r = run_conformance(GridKind::Quick, Some(&spec), &opts).unwrap();
+        assert!(!r.cases.is_empty());
+        assert!(r.cases.iter().all(|c| c.policy == "risk:1"));
+        assert_eq!(r.n_pass + r.n_fail + r.n_inconclusive, r.cases.len() as u64);
+        // A policy with no grid presence is an error, not an empty pass.
+        let missing = PolicySpec::AdaptivePeriod { gain: 9.0 };
+        assert!(run_conformance(GridKind::Quick, Some(&missing), &opts).is_err());
+        // Strategy filters work too.
+        let young = PolicySpec::Strategy(StrategyKind::Young);
+        let r = run_conformance(GridKind::Quick, Some(&young), &opts).unwrap();
+        assert!(r.cases.len() >= 4, "Young appears across laws and tweaks");
+    }
+
+    #[test]
+    fn report_ok_tracks_failures() {
+        let mut r = sample_report();
+        assert!(r.ok());
+        r.n_fail = 1;
+        assert!(!r.ok());
+    }
+}

@@ -1,4 +1,6 @@
 //! Mini property-testing harness (substrate: no `proptest` offline).
+//! Part of the [`crate::verify`] subsystem; re-exported at the crate
+//! root as `ckptfp::testkit` for the existing property suites.
 //!
 //! Deterministic: every case derives from a fixed seed, so failures
 //! reproduce. On failure the harness reports the case index and the

@@ -176,6 +176,7 @@ fn every_response_variant_round_trips() {
             simulates: 4,
             best_periods: 1,
             sweeps: 0,
+            verifies: 2,
             lat_p50_s: 0.001,
             lat_p95_s: 0.01,
             lat_p99_s: 0.02,

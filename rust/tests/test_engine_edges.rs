@@ -1,0 +1,252 @@
+//! Engine edge cases the golden tests skip: zero-length prediction
+//! windows, degenerate predictors (recall = 0 / precision = 0),
+//! predictions arriving mid-checkpoint, and `RiskThreshold` at the
+//! kappa extremes (the progress floor must hold).
+
+use ckptfp::config::{Predictor, Scenario};
+use ckptfp::model::{Capping, StrategyKind};
+use ckptfp::sim::{simulate_once, Engine, Policy, SimConfig, SimSession};
+use ckptfp::strategies::{resolve_policy, spec_for, PolicySpec, ProactiveMode, StrategySpec};
+use ckptfp::trace::{Fault, Prediction, VecSource};
+
+fn cfg(work: f64) -> SimConfig {
+    SimConfig { work, c: 10.0, d: 2.0, r: 5.0, max_makespan: 1e12 }
+}
+
+fn spec(t_r: f64, proactive: ProactiveMode) -> StrategySpec {
+    let q = if matches!(proactive, ProactiveMode::Ignore) { 0.0 } else { 1.0 };
+    StrategySpec { name: "edge".into(), t_r, q, proactive }
+}
+
+fn run(
+    c: &SimConfig,
+    s: &StrategySpec,
+    faults: Vec<Fault>,
+    preds: Vec<Prediction>,
+) -> ckptfp::sim::Outcome {
+    Engine::new(c, s, VecSource::new(faults, preds), 7).run()
+}
+
+fn small_scenario(pred: Predictor) -> Scenario {
+    let mut s = Scenario::paper(1 << 16, pred);
+    s.fault_dist = ckptfp::dist::DistSpec::Exp;
+    s.work = 2.0e5;
+    s
+}
+
+// ---------------------------------------------------------------------------
+// Zero-length prediction windows
+// ---------------------------------------------------------------------------
+
+#[test]
+fn zero_window_skipwindow_equals_ckptbefore() {
+    // A window of length 0 makes the SkipWindow excursion empty: the
+    // engine must behave exactly like CkptBefore, event for event.
+    let c = cfg(1000.0);
+    let faults = vec![Fault::predicted(500.0, 0)];
+    let preds = vec![Prediction::windowed(500.0, 0.0, 10.0, Some(0))];
+    let skip = run(&c, &spec(1e6, ProactiveMode::SkipWindow), faults.clone(), preds.clone());
+    let before = run(&c, &spec(1e6, ProactiveMode::CkptBefore), faults, preds);
+    assert!(skip.completed && before.completed);
+    assert_eq!(skip.makespan.to_bits(), before.makespan.to_bits());
+    assert_eq!(skip.n_segments, before.n_segments);
+    assert_eq!(skip.n_proactive_ckpts, before.n_proactive_ckpts);
+    assert_eq!(skip.lost_work.to_bits(), before.lost_work.to_bits());
+}
+
+#[test]
+fn zero_window_scenario_nockpt_equals_instant() {
+    // Through the full stack (generator included): with I = 0 the
+    // NoCkptI and Instant strategies are the same machine — §4.2's
+    // "Eqs. (5) and (6) coincide at I = 0", executable form.
+    let s = small_scenario(Predictor { recall: 0.85, precision: 0.82, window: 0.0, ef: 0.0 });
+    let instant = spec_for(StrategyKind::Instant, &s, Capping::Uncapped);
+    let nockpt = spec_for(StrategyKind::NoCkptI, &s, Capping::Uncapped);
+    assert_eq!(instant.t_r, nockpt.t_r, "same closed-form period at I = 0");
+    for rep in 0..5 {
+        let a = simulate_once(&s, &instant, rep).unwrap();
+        let b = simulate_once(&s, &nockpt, rep).unwrap();
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "rep {rep}");
+        assert_eq!(a.n_segments, b.n_segments, "rep {rep}");
+        assert_eq!(a.n_ckpts, b.n_ckpts, "rep {rep}");
+        assert_eq!(a.n_proactive_ckpts, b.n_proactive_ckpts, "rep {rep}");
+    }
+}
+
+#[test]
+fn zero_window_job_finishing_at_t0_terminates() {
+    // Work runs out exactly at the window-start slot of a zero-length
+    // window: no infinite loop, no trailing segment.
+    let c = cfg(490.0);
+    let o = run(
+        &c,
+        &spec(1e6, ProactiveMode::SkipWindow),
+        vec![],
+        vec![Prediction::windowed(500.0, 0.0, 10.0, None)],
+    );
+    assert!(o.completed);
+    // 490 work + one proactive ckpt [490, 500] never happens (vol
+    // persisted? No — work ends at 490 with all work done).
+    assert!((o.makespan - 490.0).abs() < 1e-6, "makespan {}", o.makespan);
+}
+
+// ---------------------------------------------------------------------------
+// Degenerate predictors
+// ---------------------------------------------------------------------------
+
+#[test]
+fn recall_zero_trusting_strategy_equals_young() {
+    // recall = 0: the predictor never fires, so a trusting strategy
+    // with the same period is bit-identical to Young.
+    let s = small_scenario(Predictor::none());
+    let young = spec_for(StrategyKind::Young, &s, Capping::Uncapped);
+    let exact = spec_for(StrategyKind::ExactPrediction, &s, Capping::Uncapped);
+    // 1 - rq = 1 at r = 0: both closed forms give the same period.
+    assert_eq!(young.t_r, exact.t_r);
+    for rep in 0..5 {
+        let a = simulate_once(&s, &young, rep).unwrap();
+        let b = simulate_once(&s, &exact, rep).unwrap();
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "rep {rep}");
+        assert_eq!(a.n_segments, b.n_segments, "rep {rep}");
+        assert_eq!(b.n_preds, 0, "no predictor may fire at r = 0");
+        assert_eq!(b.n_trusted, 0);
+    }
+}
+
+#[test]
+fn precision_zero_degenerate_predictor_runs() {
+    // The r = 0, p = 0 predictor the validation layer explicitly
+    // allows: the whole stack (scenario -> generator -> engine) must
+    // accept it and produce a prediction-free run.
+    let pred = Predictor { recall: 0.0, precision: 0.0, window: 0.0, ef: 0.0 };
+    pred.validate().unwrap();
+    let s = small_scenario(pred);
+    s.validate().unwrap();
+    let spec = spec_for(StrategyKind::ExactPrediction, &s, Capping::Uncapped);
+    let o = simulate_once(&s, &spec, 0).unwrap();
+    assert!(o.completed);
+    assert_eq!(o.n_preds, 0);
+    assert_eq!(o.n_faults_unpredicted, o.n_faults);
+}
+
+#[test]
+fn perfect_recall_perfect_precision_avoids_all_unpredicted_faults() {
+    // r = p = 1 with exact dates: every fault is predicted, no false
+    // alarms — the opposite degenerate corner.
+    let mut s = small_scenario(Predictor::exact(1.0, 1.0));
+    s.work = 6.0e5; // several MTBFs of work: faults occur w.h.p.
+    let spec = spec_for(StrategyKind::ExactPrediction, &s, Capping::Uncapped);
+    let mut total_preds = 0;
+    for rep in 0..3 {
+        let o = simulate_once(&s, &spec, rep).unwrap();
+        assert!(o.completed, "rep {rep}");
+        assert_eq!(o.n_preds, o.n_true_preds, "p = 1: no false positives (rep {rep})");
+        assert_eq!(o.n_faults_unpredicted, 0, "r = 1: no surprises (rep {rep})");
+        total_preds += o.n_preds;
+    }
+    assert!(total_preds > 0, "a perfect predictor must have fired");
+}
+
+// ---------------------------------------------------------------------------
+// Prediction arriving mid-checkpoint
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prediction_arriving_mid_checkpoint_is_honored_after_it() {
+    // Regular ckpt spans [100, 110]; the prediction for t0 = 140
+    // becomes known at 104, mid-checkpoint. The engine drains it after
+    // the segment, works to the action point (130), and the proactive
+    // checkpoint completes exactly at t0 — no work is lost.
+    let c = cfg(300.0);
+    let o = run(
+        &c,
+        &spec(110.0, ProactiveMode::CkptBefore),
+        vec![Fault::predicted(140.0, 0)],
+        vec![Prediction { avail: 104.0, t0: 140.0, window: 0.0, fault_id: Some(0) }],
+    );
+    assert!(o.completed);
+    assert_eq!(o.n_proactive_ckpts, 1);
+    assert!((o.lost_work - 0.0).abs() < 1e-9, "lost {}", o.lost_work);
+    // Timeline: 100 work + ckpt(10) + 20 work + pro-ckpt [130,140] +
+    // fault at 140 -> D+R (7) + remaining 180 work + its final ckpt
+    // never needed: 147 + 180 = 327... plus one more regular ckpt at
+    // W_reg = 100 inside the tail.
+    assert!(o.makespan > 300.0 && o.makespan < 400.0, "makespan {}", o.makespan);
+}
+
+#[test]
+fn prediction_arriving_mid_proactive_checkpoint_waits_its_turn() {
+    // A second prediction becomes available while the proactive
+    // checkpoint for the first is running; its own action point is
+    // still ahead, so it must be handled — not dropped.
+    let c = cfg(1000.0);
+    let o = run(
+        &c,
+        &spec(1e6, ProactiveMode::CkptBefore),
+        vec![Fault::predicted(500.0, 0), Fault::predicted(600.0, 1)],
+        vec![
+            Prediction::exact(500.0, 10.0, Some(0)),
+            // avail = 495: inside the [490, 500] proactive checkpoint.
+            Prediction { avail: 495.0, t0: 600.0, window: 0.0, fault_id: Some(1) },
+        ],
+    );
+    assert!(o.completed);
+    assert_eq!(o.n_proactive_ckpts, 2, "both predictions act");
+    assert_eq!(o.n_faults_avoided, 0);
+    assert!((o.lost_work - 0.0).abs() < 1e-9, "lost {}", o.lost_work);
+}
+
+// ---------------------------------------------------------------------------
+// RiskThreshold at the kappa extremes
+// ---------------------------------------------------------------------------
+
+#[test]
+fn risk_threshold_kappa_extremes_respect_the_progress_floor() {
+    let s = {
+        let mut s = small_scenario(Predictor::none());
+        s.work = 5.0e3; // tiny job: even a 1-second threshold finishes fast
+        // A 1-second threshold against the paper's C = 600 s would pay
+        // 600 s of checkpoint per second of work and trip the makespan
+        // guard — the floor behavior itself is what's under test, so
+        // shrink C to keep the run inside the guard.
+        s.platform.c = 1.0;
+        s
+    };
+    // kappa -> 0: w_star collapses onto the 1-second floor; the run
+    // must still complete (checkpointing every second, not stalling).
+    let tiny = resolve_policy(&PolicySpec::RiskThreshold { kappa: 1e-30 }, &s).unwrap();
+    match tiny.policy {
+        Policy::RiskThreshold { w_star, .. } => assert_eq!(w_star, 1.0, "floor"),
+        ref other => panic!("wrong policy {other:?}"),
+    }
+    let mut session = SimSession::from_policy(&tiny.scenario, tiny.policy).unwrap();
+    let o = session.run(0);
+    assert!(o.completed, "kappa -> 0 must not stall the core");
+    assert!(o.n_ckpts > 100, "a 1 s threshold checkpoints constantly: {}", o.n_ckpts);
+
+    // kappa -> infinity (large finite): no regular checkpoint ever.
+    let huge = resolve_policy(&PolicySpec::RiskThreshold { kappa: 1e30 }, &s).unwrap();
+    let mut session = SimSession::from_policy(&huge.scenario, huge.policy).unwrap();
+    let o = session.run(0);
+    assert!(o.completed);
+    assert_eq!(o.n_ckpts, 0, "infinite threshold: no regular checkpoints");
+}
+
+#[test]
+fn risk_threshold_rejects_non_finite_kappa() {
+    for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+        let spec = PolicySpec::RiskThreshold { kappa: bad };
+        assert!(spec.validate().is_err(), "kappa {bad} must be rejected");
+    }
+    // And the raw degenerate policy cannot stall the engine either —
+    // `Engine::with_policy` sanitizes the boundary.
+    let c = cfg(50.0);
+    let o = Engine::with_policy(
+        &c,
+        Policy::RiskThreshold { w_star: 0.0, q: 1.0, proactive: ProactiveMode::CkptBefore },
+        VecSource::new(vec![], vec![]),
+        7,
+    )
+    .run();
+    assert!(o.completed);
+}

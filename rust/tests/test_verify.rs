@@ -1,0 +1,226 @@
+//! Integration: the conformance subsystem end to end — grid shape,
+//! oracle domains, CI-aware verdicts with replication escalation, the
+//! `CONFORMANCE.json` document, the wire round-trip of the `verify`
+//! job, and the acceptance pin that a TCP-served `Verify` returns a
+//! verdict set bit-identical to the in-process run.
+
+use ckptfp::api::{
+    wire, Executor, ExecutorConfig, JobRequest, JobResponse, ServiceClient, VerifyJob,
+};
+use ckptfp::coordinator::{serve, ServiceConfig, ServiceHandle};
+use ckptfp::model::StrategyKind;
+use ckptfp::strategies::PolicySpec;
+use ckptfp::util::json::Json;
+use ckptfp::verify::{
+    conformance_grid, conformance_json, judge_case, oracle_for, report_from_json,
+    run_conformance, Domain, GridKind, Verdict, VerifyOptions, CONFORMANCE_SCHEMA,
+};
+
+fn start_local_service() -> (ServiceHandle, String) {
+    let executor = Executor::new(ExecutorConfig::default());
+    let handle = serve(executor, ServiceConfig { addr: "127.0.0.1:0".into() }).unwrap();
+    let addr = handle.addr.to_string();
+    (handle, addr)
+}
+
+// ---------------------------------------------------------------------------
+// Grid and oracle
+// ---------------------------------------------------------------------------
+
+#[test]
+fn quick_grid_spans_both_domains_and_all_subjects() {
+    let cases = conformance_grid(GridKind::Quick);
+    assert!(cases.len() >= 18, "quick grid has {} cases", cases.len());
+    let mut first_order = 0;
+    let mut out_of_domain = 0;
+    for case in &cases {
+        match oracle_for(case).unwrap().domain {
+            Domain::FirstOrder => first_order += 1,
+            Domain::OutOfDomain { .. } => out_of_domain += 1,
+        }
+    }
+    assert!(first_order >= 8, "{first_order} in-domain cases");
+    assert!(out_of_domain >= 6, "{out_of_domain} out-of-domain cases");
+}
+
+#[test]
+fn deliberate_regime_case_takes_the_divergence_bound_path() {
+    // The acceptance criterion: at least one deliberately out-of-domain
+    // case (T ~ mu) demonstrates the divergence-bound path end to end.
+    let case = conformance_grid(GridKind::Quick)
+        .into_iter()
+        .find(|c| c.name == "exp-n16-none-mu4000-Young")
+        .expect("the T ~ mu case must be on the quick grid");
+    let oracle = oracle_for(&case).unwrap();
+    match &oracle.domain {
+        Domain::OutOfDomain { reason } => assert!(reason.contains("first-order"), "{reason}"),
+        d => panic!("expected out-of-domain, got {d:?}"),
+    }
+    // The band is a bound, not agreement: it is far wider than the
+    // in-domain slack of the same strategy...
+    let in_domain = conformance_grid(GridKind::Quick)
+        .into_iter()
+        .find(|c| c.name == "exp-n16-none-Young")
+        .unwrap();
+    let od_width = (oracle.band.1 - oracle.band.0) / oracle.analytic;
+    let id_oracle = oracle_for(&in_domain).unwrap();
+    let id_width = (id_oracle.band.1 - id_oracle.band.0) / id_oracle.analytic;
+    assert!(od_width > id_width * 1.5, "od {od_width} vs id {id_width}");
+    // ...and judging it works: the simulator diverges from the
+    // first-order value (that is the point) yet stays inside the bound.
+    let opts = VerifyOptions { reps0: 24, budget: 96, workers: 2 };
+    let v = judge_case(&case, &opts).unwrap();
+    assert_ne!(v.verdict, Verdict::Fail, "{v:?}");
+    assert_eq!(v.completion_rate, 1.0);
+}
+
+// ---------------------------------------------------------------------------
+// Verdicts and escalation
+// ---------------------------------------------------------------------------
+
+#[test]
+fn escalation_extends_rather_than_restarts() {
+    // Same case, same workers: a run that escalates must report more
+    // reps than its base batch and stay within the budget.
+    let case = conformance_grid(GridKind::Quick)
+        .into_iter()
+        .find(|c| c.name == "exp-n16-yu:exact-ExactPrediction")
+        .unwrap();
+    let opts = VerifyOptions { reps0: 2, budget: 11, workers: 2 };
+    let v = judge_case(&case, &opts).unwrap();
+    assert!(v.reps >= 2 && v.reps <= 11, "reps {}", v.reps);
+    // reps follows the doubling schedule 2 -> 4 -> 8 -> 11.
+    assert!([2u64, 4, 8, 11].contains(&v.reps), "reps {}", v.reps);
+}
+
+#[test]
+fn quick_grid_small_budget_has_no_failures() {
+    // The CI gate in miniature: a reduced-budget pass over the full
+    // quick grid must produce zero `fail` verdicts. (CI runs the same
+    // gate at full budget via `ckptfp verify --grid quick`.)
+    let opts = VerifyOptions { reps0: 16, budget: 128, workers: 2 };
+    let report = run_conformance(GridKind::Quick, None, &opts).unwrap();
+    let failed: Vec<&str> = report
+        .cases
+        .iter()
+        .filter(|c| c.verdict == Verdict::Fail)
+        .map(|c| c.name.as_str())
+        .collect();
+    assert!(failed.is_empty(), "failed cases: {failed:?}");
+    assert_eq!(report.n_fail, 0);
+    assert_eq!(
+        report.n_pass + report.n_inconclusive,
+        report.cases.len() as u64
+    );
+    // The grid must not be vacuously inconclusive either: most cases
+    // resolve on this budget.
+    assert!(
+        report.n_pass as usize * 2 > report.cases.len(),
+        "only {} of {} cases passed",
+        report.n_pass,
+        report.cases.len()
+    );
+}
+
+// ---------------------------------------------------------------------------
+// CONFORMANCE.json and the wire
+// ---------------------------------------------------------------------------
+
+#[test]
+fn conformance_json_document_round_trips() {
+    let opts = VerifyOptions { reps0: 4, budget: 8, workers: 2 };
+    let spec = PolicySpec::Strategy(StrategyKind::Migration);
+    let report = run_conformance(GridKind::Quick, Some(&spec), &opts).unwrap();
+    let doc = conformance_json(&report).to_string();
+    let parsed = ckptfp::util::json::parse(&doc).unwrap();
+    assert_eq!(
+        parsed.get("schema").and_then(Json::as_str),
+        Some(CONFORMANCE_SCHEMA)
+    );
+    let back = report_from_json(&parsed).unwrap();
+    assert_eq!(back, report, "document must round-trip the full report");
+}
+
+#[test]
+fn verify_job_round_trips_on_the_wire() {
+    let jobs = vec![
+        VerifyJob::new(GridKind::Quick),
+        VerifyJob::new(GridKind::Full),
+        VerifyJob {
+            grid: GridKind::Quick,
+            policy: Some(PolicySpec::RiskThreshold { kappa: 1.0 }),
+            reps: 12,
+            budget: 48,
+            workers: Some(3),
+        },
+    ];
+    for job in jobs {
+        let req = JobRequest::Verify(job);
+        let line = wire::encode_request(&req);
+        let decoded = wire::decode_request(&line).unwrap();
+        assert!(!decoded.legacy);
+        assert_eq!(decoded.request, req, "round-trip of {line}");
+    }
+    // A bare v2 verify defaults to the quick grid.
+    match wire::decode_request(r#"{"v": 2, "op": "verify"}"#).unwrap().request {
+        JobRequest::Verify(job) => {
+            assert_eq!(job.grid, GridKind::Quick);
+            assert_eq!(job.policy, None);
+        }
+        other => panic!("wrong request: {other:?}"),
+    }
+    // Unknown grids are bad requests naming the offender.
+    let err = wire::decode_request(r#"{"v": 2, "op": "verify", "grid": "huge"}"#).unwrap_err();
+    assert!(err.message.contains("huge"), "{}", err.message);
+}
+
+#[test]
+fn verify_response_round_trips_on_the_wire() {
+    let opts = VerifyOptions { reps0: 4, budget: 8, workers: 2 };
+    let spec = PolicySpec::AdaptivePeriod { gain: 1.0 };
+    let report = run_conformance(GridKind::Quick, Some(&spec), &opts).unwrap();
+    let resp = JobResponse::Verify(report);
+    let line = wire::encode_response(&resp, false);
+    let decoded = wire::decode_response(&line).unwrap();
+    assert_eq!(decoded, resp, "round-trip of {line}");
+}
+
+// ---------------------------------------------------------------------------
+// Acceptance pin: TCP == in-process, bit for bit
+// ---------------------------------------------------------------------------
+
+#[test]
+fn verify_over_tcp_is_bit_identical_to_in_process() {
+    let (handle, addr) = start_local_service();
+    // Filter to the Young cases to keep the service call quick; the
+    // determinism contract is the same for any filter.
+    let job = VerifyJob {
+        grid: GridKind::Quick,
+        policy: Some(PolicySpec::Strategy(StrategyKind::Young)),
+        reps: 8,
+        budget: 16,
+        workers: Some(2),
+    };
+    let mut client = ServiceClient::connect(&addr).unwrap();
+    let served = client.verify(job.clone()).unwrap();
+
+    let local = Executor::local().verify(&job).unwrap();
+
+    assert_eq!(served.cases.len(), local.cases.len());
+    for (s, l) in served.cases.iter().zip(&local.cases) {
+        assert_eq!(s.name, l.name);
+        assert_eq!(s.verdict, l.verdict, "{}", s.name);
+        assert_eq!(s.reps, l.reps, "{}", s.name);
+        assert_eq!(
+            s.sim_mean.to_bits(),
+            l.sim_mean.to_bits(),
+            "{}: served {} vs local {}",
+            s.name,
+            s.sim_mean,
+            l.sim_mean
+        );
+        assert_eq!(s.sim_ci95.to_bits(), l.sim_ci95.to_bits(), "{}", s.name);
+    }
+    assert_eq!(served, local, "the full verdict set must be identical");
+    handle.stop();
+}

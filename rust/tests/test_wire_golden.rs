@@ -1,0 +1,331 @@
+//! Golden-file pins for the wire protocol: the canonical JSONL
+//! fixtures under `tests/fixtures/` are the protocol's byte-level
+//! contract. Every line is checked in *both* directions — the typed
+//! value constructed here must encode to the fixture bytes exactly,
+//! and the fixture bytes must decode back to the typed value — so any
+//! protocol drift (field rename, ordering change, number formatting,
+//! new mandatory field) fails loudly here instead of only through the
+//! adapter tests.
+//!
+//! Regenerate after *deliberate* protocol changes with
+//! `python3 scripts/gen_wire_fixtures.py` (no Rust toolchain needed);
+//! the generator mirrors the canonical encoder.
+
+use ckptfp::api::{
+    wire, ApiError, BatcherSnapshot, BestPeriodJob, BestPeriodOutcome, JobRequest, JobResponse,
+    PlanJob, PlanResult, ServiceStats, SimulateJob, SimulateResult, SweepJob, SweepResult,
+    SweepRow, VerifyJob,
+};
+use ckptfp::config::{Predictor, Scenario};
+use ckptfp::dist::DistSpec;
+use ckptfp::model::{Capping, StrategyKind};
+use ckptfp::strategies::PolicySpec;
+use ckptfp::verify::{CaseVerdict, Domain, GridKind, Verdict, VerifyReport};
+
+const REQUESTS_V2: &str = include_str!("fixtures/requests_v2.jsonl");
+const RESPONSES_V2: &str = include_str!("fixtures/responses_v2.jsonl");
+const RESPONSES_V1: &str = include_str!("fixtures/responses_v1.jsonl");
+const REQUESTS_V1: &str = include_str!("fixtures/requests_v1.jsonl");
+
+fn lines(s: &str) -> Vec<&str> {
+    s.lines().filter(|l| !l.trim().is_empty()).collect()
+}
+
+/// The golden scenario the fixtures carry: `Scenario::paper(4096, ...)`
+/// with a clean platform MTBF (mu_ind = 60000 * 4096), exp faults,
+/// work 200000, seed 42.
+fn golden_scenario() -> Scenario {
+    let mut s = Scenario::paper(4096, Predictor::windowed(0.85, 0.82, 300.0));
+    s.platform.mu_ind = 245_760_000.0;
+    s.fault_dist = DistSpec::Exp;
+    s.work = 200_000.0;
+    s.seed = 42;
+    s
+}
+
+/// The all-optional-fields variant: Weibull faults, uniform
+/// false-prediction law, non-default ef/alpha/migration.
+fn weibull_scenario() -> Scenario {
+    let mut s = golden_scenario();
+    s.predictor = Predictor::windowed(0.85, 0.82, 3000.0);
+    s.predictor.ef = 1000.0;
+    s.fault_dist = DistSpec::weibull(0.7);
+    s.false_pred_dist = Some(DistSpec::Uniform);
+    s.alpha = 0.3;
+    s.migration = 450.0;
+    s.seed = 7;
+    s
+}
+
+fn golden_requests() -> Vec<JobRequest> {
+    vec![
+        JobRequest::Plan(PlanJob {
+            scenario: golden_scenario(),
+            capping: Capping::Capped,
+            policy: None,
+        }),
+        JobRequest::Plan(PlanJob {
+            scenario: golden_scenario(),
+            capping: Capping::Uncapped,
+            policy: Some(PolicySpec::Strategy(StrategyKind::NoCkptI)),
+        }),
+        JobRequest::Simulate(SimulateJob {
+            scenario: golden_scenario(),
+            strategy: StrategyKind::NoCkptI,
+            reps: 17,
+            workers: Some(3),
+            policy: None,
+        }),
+        JobRequest::Simulate(SimulateJob {
+            scenario: weibull_scenario(),
+            strategy: StrategyKind::Young,
+            reps: 5,
+            workers: None,
+            policy: Some(PolicySpec::RiskThreshold { kappa: 2.5 }),
+        }),
+        JobRequest::BestPeriod(BestPeriodJob {
+            scenario: golden_scenario(),
+            strategy: StrategyKind::Migration,
+            reps: 9,
+            candidates: 12,
+            workers: None,
+            prune: true,
+            policy: None,
+        }),
+        JobRequest::BestPeriod(BestPeriodJob {
+            scenario: golden_scenario(),
+            strategy: StrategyKind::Young,
+            reps: 3,
+            candidates: 4,
+            workers: Some(2),
+            prune: false,
+            policy: Some(PolicySpec::AdaptivePeriod { gain: 0.75 }),
+        }),
+        JobRequest::Sweep(SweepJob {
+            base: golden_scenario(),
+            n_procs: vec![1 << 14, 1 << 16, 1 << 19],
+            capping: Capping::Uncapped,
+        }),
+        JobRequest::Verify(VerifyJob {
+            grid: GridKind::Quick,
+            policy: Some(PolicySpec::RiskThreshold { kappa: 1.0 }),
+            reps: 32,
+            budget: 128,
+            workers: Some(2),
+        }),
+        JobRequest::Stats,
+        JobRequest::Ping,
+    ]
+}
+
+fn golden_plan_result() -> PlanResult {
+    PlanResult {
+        waste: [0.117, 0.105, 0.11, 0.112, 1.0, 0.09],
+        period: [8485.25, 21900.5, 21900.5, 21900.5, 21900.5, 21900.5],
+        winner: StrategyKind::ExactPrediction,
+        winner_waste: 0.105,
+        winner_period: 21900.5,
+        q: 1,
+        via_hlo: false,
+    }
+}
+
+fn golden_stats() -> ServiceStats {
+    ServiceStats {
+        requests: 10,
+        errors: 2,
+        plans: 3,
+        simulates: 4,
+        best_periods: 1,
+        sweeps: 0,
+        verifies: 2,
+        lat_p50_s: 0.001,
+        lat_p95_s: 0.01,
+        lat_p99_s: 0.02,
+        lat_n: 8,
+        batcher: Some(BatcherSnapshot { requests: 3, batches: 1, max_batch: 3 }),
+    }
+}
+
+fn golden_responses() -> Vec<JobResponse> {
+    vec![
+        JobResponse::Plan(golden_plan_result()),
+        JobResponse::Simulate(SimulateResult {
+            strategy: "NoCkptI".into(),
+            reps: 40,
+            workers: 4,
+            mean_waste: 0.123456789012345,
+            waste_ci95: 0.01,
+            mean_makespan: 1.0e7,
+            completion_rate: 1.0,
+            n_faults: 321,
+            n_preds: 200,
+            n_ckpts: 1000,
+            n_proactive_ckpts: 55,
+            sim_seconds: 1.25,
+        }),
+        JobResponse::BestPeriod(BestPeriodOutcome {
+            strategy: "Young".into(),
+            t_r: 8123.4,
+            waste: 0.117,
+            n_pruned: 3,
+            sweep: vec![(1000.0, 0.2), (2000.0, 0.15), (4000.0, 0.117)],
+            reps: 10,
+            candidates: 3,
+            workers: 8,
+        }),
+        JobResponse::Sweep(SweepResult {
+            rows: vec![
+                SweepRow {
+                    n_procs: 1 << 16,
+                    mu: 60133.0,
+                    winner: StrategyKind::ExactPrediction,
+                    winner_waste: 0.11,
+                    winner_period: 9000.0,
+                },
+                SweepRow {
+                    n_procs: 1 << 19,
+                    mu: 7516.5,
+                    winner: StrategyKind::Young,
+                    winner_waste: 0.4,
+                    winner_period: 3000.0,
+                },
+            ],
+            via_hlo: false,
+        }),
+        JobResponse::Verify(VerifyReport {
+            grid: GridKind::Quick,
+            workers: 4,
+            n_pass: 1,
+            n_fail: 0,
+            n_inconclusive: 1,
+            cases: vec![
+                CaseVerdict {
+                    name: "exp-n16-none-Young".into(),
+                    policy: "Young".into(),
+                    domain: Domain::FirstOrder,
+                    analytic: 0.117,
+                    band: (0.097, 0.137),
+                    sim_mean: 0.1175,
+                    sim_ci95: 0.004,
+                    completion_rate: 1.0,
+                    reps: 48,
+                    verdict: Verdict::Pass,
+                },
+                CaseVerdict {
+                    name: "weibull:0.5-n16-none-Young".into(),
+                    policy: "Young".into(),
+                    domain: Domain::OutOfDomain { reason: "weibull:0.5 faults".into() },
+                    analytic: 0.117,
+                    band: (0.03, 0.47),
+                    sim_mean: 0.46,
+                    sim_ci95: 0.02,
+                    completion_rate: 1.0,
+                    reps: 384,
+                    verdict: Verdict::Inconclusive,
+                },
+            ],
+        }),
+        JobResponse::Stats(golden_stats()),
+        JobResponse::Stats(ServiceStats::default()),
+        JobResponse::Pong,
+        JobResponse::Error(ApiError::bad_request("work must be positive")),
+    ]
+}
+
+// ---------------------------------------------------------------------------
+// v2 requests
+// ---------------------------------------------------------------------------
+
+#[test]
+fn v2_request_fixtures_pin_both_directions() {
+    let fixture = lines(REQUESTS_V2);
+    let typed = golden_requests();
+    assert_eq!(
+        fixture.len(),
+        typed.len(),
+        "fixture count drifted — regenerate scripts/gen_wire_fixtures.py and update golden_requests()"
+    );
+    for (i, (line, req)) in fixture.iter().zip(&typed).enumerate() {
+        // Typed -> bytes: canonical encoding is pinned exactly.
+        let encoded = wire::encode_request(req);
+        assert_eq!(&encoded, line, "request {i}: encoding drifted");
+        // Bytes -> typed: the fixture decodes to the same value.
+        let decoded = wire::decode_request(line)
+            .unwrap_or_else(|e| panic!("request {i} failed to decode: {e}"));
+        assert!(!decoded.legacy, "request {i}: v2 lines are not legacy");
+        assert_eq!(&decoded.request, req, "request {i}: decode drifted");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// v2 responses
+// ---------------------------------------------------------------------------
+
+#[test]
+fn v2_response_fixtures_pin_both_directions() {
+    let fixture = lines(RESPONSES_V2);
+    let typed = golden_responses();
+    assert_eq!(
+        fixture.len(),
+        typed.len(),
+        "fixture count drifted — regenerate scripts/gen_wire_fixtures.py and update golden_responses()"
+    );
+    for (i, (line, resp)) in fixture.iter().zip(&typed).enumerate() {
+        let encoded = wire::encode_response(resp, false);
+        assert_eq!(&encoded, line, "response {i}: encoding drifted");
+        let decoded = wire::decode_response(line)
+            .unwrap_or_else(|e| panic!("response {i} failed to decode: {e}"));
+        assert_eq!(&decoded, resp, "response {i}: decode drifted");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// v1 (legacy) shapes
+// ---------------------------------------------------------------------------
+
+#[test]
+fn v1_response_fixtures_pin_the_legacy_shape() {
+    let fixture = lines(RESPONSES_V1);
+    let typed = vec![
+        JobResponse::Plan(golden_plan_result()),
+        JobResponse::Stats(golden_stats()),
+        JobResponse::Pong,
+        JobResponse::Error(ApiError::bad_request("work must be positive")),
+    ];
+    assert_eq!(fixture.len(), typed.len());
+    for (i, (line, resp)) in fixture.iter().zip(&typed).enumerate() {
+        let encoded = wire::encode_response(resp, true);
+        assert_eq!(&encoded, line, "legacy response {i}: encoding drifted");
+    }
+}
+
+#[test]
+fn v1_request_fixtures_decode_through_the_adapter() {
+    let fixture = lines(REQUESTS_V1);
+    assert_eq!(fixture.len(), 3);
+    // Line 0: the flat planner dialect.
+    let d = wire::decode_request(fixture[0]).unwrap();
+    assert!(d.legacy);
+    match d.request {
+        JobRequest::Plan(job) => {
+            assert_eq!(job.scenario.platform.n_procs, 1);
+            assert!((job.scenario.mu() - 60000.0).abs() < 1e-9);
+            assert_eq!(job.scenario.predictor.recall, 0.85);
+            assert_eq!(job.scenario.predictor.precision, 0.82);
+            assert_eq!(job.scenario.predictor.window, 300.0);
+            assert_eq!(job.capping, Capping::Uncapped);
+            assert_eq!(job.policy, None);
+        }
+        other => panic!("line 0 decoded to {other:?}"),
+    }
+    // Lines 1-2: bare verbs.
+    assert!(matches!(
+        wire::decode_request(fixture[1]).unwrap(),
+        wire::Decoded { request: JobRequest::Ping, legacy: true }
+    ));
+    assert!(matches!(
+        wire::decode_request(fixture[2]).unwrap(),
+        wire::Decoded { request: JobRequest::Stats, legacy: true }
+    ));
+}

@@ -1,0 +1,239 @@
+#!/usr/bin/env python3
+"""Regenerate the wire-protocol golden fixtures under rust/tests/fixtures/.
+
+Mirrors the canonical JSONL encoding of `rust/src/util/json.rs` +
+`rust/src/api/wire.rs` exactly:
+
+* objects serialize with keys in lexicographic (BTreeMap) order;
+* numbers that are integral with |x| < 1e15 print as integers;
+* other finite numbers print as Python's repr — identical to Rust's
+  shortest-round-trip f64 Display for values in [1e-3, 1e15), which is
+  why every fixture value stays inside that range.
+
+The fixtures pin the protocol byte-for-byte: `tests/test_wire_golden.rs`
+constructs the same typed requests/responses in Rust and asserts both
+decode(fixture) == typed and encode(typed) == fixture. Drift in either
+direction fails loudly.
+"""
+
+import os
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "rust", "tests", "fixtures")
+
+
+def jnum(x):
+    if isinstance(x, bool):
+        raise TypeError("bools are not numbers here")
+    x = float(x)
+    if x == int(x) and abs(x) < 1e15:
+        return str(int(x))
+    return repr(x)
+
+
+def jval(v):
+    if isinstance(v, bool):
+        return "true" if v else "false"
+    if isinstance(v, (int, float)):
+        return jnum(v)
+    if isinstance(v, str):
+        # Fixture strings are plain ASCII without escapes by design.
+        assert all(32 <= ord(c) < 127 and c not in '"\\' for c in v), v
+        return f'"{v}"'
+    if isinstance(v, list):
+        return "[" + ",".join(jval(x) for x in v) + "]"
+    if isinstance(v, dict):
+        return "{" + ",".join(f'"{k}":{jval(v[k])}' for k in sorted(v)) + "}"
+    raise TypeError(type(v))
+
+
+def scenario(**over):
+    """The golden scenario: Scenario::paper(4096, windowed(0.85, 0.82, 300))
+    with mu_ind = 60000 * 4096, work 200000, exp faults, seed 42."""
+    s = {
+        "alpha": 0.27,
+        "c": 600,
+        "d": 60,
+        "ef": 150,
+        "fault_dist": "exp",
+        "migration": 300,
+        "mu_ind": 245760000,
+        "n_procs": 4096,
+        "precision": 0.82,
+        "r": 600,
+        "recall": 0.85,
+        "seed": 42,
+        "window": 300,
+        "work": 200000,
+    }
+    s.update(over)
+    return s
+
+
+# Variant with every optional field exercised: Weibull faults, distinct
+# false-prediction law, non-default ef/alpha/migration.
+WEIBULL_SCENARIO = scenario(
+    alpha=0.3,
+    ef=1000,
+    fault_dist="weibull:0.7",
+    false_pred_dist="uniform",
+    migration=450,
+    seed=7,
+    window=3000,
+)
+
+REQUESTS_V2 = [
+    {"v": 2, "op": "plan", "scenario": scenario(), "capped": True},
+    {"v": 2, "op": "plan", "scenario": scenario(), "capped": False, "policy": "NoCkptI"},
+    {"v": 2, "op": "simulate", "scenario": scenario(), "strategy": "NoCkptI", "reps": 17,
+     "workers": 3},
+    {"v": 2, "op": "simulate", "scenario": WEIBULL_SCENARIO, "strategy": "Young", "reps": 5,
+     "policy": "risk:2.5"},
+    {"v": 2, "op": "best_period", "scenario": scenario(), "strategy": "Migration", "reps": 9,
+     "candidates": 12, "prune": True},
+    {"v": 2, "op": "best_period", "scenario": scenario(), "strategy": "Young", "reps": 3,
+     "candidates": 4, "workers": 2, "prune": False, "policy": "adaptive:0.75"},
+    {"v": 2, "op": "sweep", "scenario": scenario(), "n_procs": [16384, 65536, 524288],
+     "capped": False},
+    {"v": 2, "op": "verify", "grid": "quick", "reps": 32, "budget": 128, "workers": 2,
+     "policy": "risk:1"},
+    {"v": 2, "op": "stats"},
+    {"v": 2, "op": "ping"},
+]
+
+PLAN_PAYLOAD = {
+    "winner": "ExactPrediction",
+    "q": 1,
+    "winner_waste": 0.105,
+    "winner_period": 21900.5,
+    "strategies": [
+        {"name": "Young", "waste": 0.117, "period": 8485.25},
+        {"name": "ExactPrediction", "waste": 0.105, "period": 21900.5},
+        {"name": "Instant", "waste": 0.11, "period": 21900.5},
+        {"name": "NoCkptI", "waste": 0.112, "period": 21900.5},
+        {"name": "WithCkptI", "waste": 1, "period": 21900.5},
+        {"name": "Migration", "waste": 0.09, "period": 21900.5},
+    ],
+}
+
+SIMULATE_PAYLOAD = {
+    "strategy": "NoCkptI",
+    "reps": 40,
+    "workers": 4,
+    "mean_waste": 0.123456789012345,
+    "waste_ci95": 0.01,
+    "mean_makespan": 10000000,
+    "completion_rate": 1,
+    "n_faults": 321,
+    "n_preds": 200,
+    "n_ckpts": 1000,
+    "n_proactive_ckpts": 55,
+    "sim_seconds": 1.25,
+}
+
+BEST_PERIOD_PAYLOAD = {
+    "strategy": "Young",
+    "t_r": 8123.4,
+    "waste": 0.117,
+    "n_pruned": 3,
+    "reps": 10,
+    "candidates": 3,
+    "workers": 8,
+    "sweep": [[1000, 0.2], [2000, 0.15], [4000, 0.117]],
+}
+
+SWEEP_PAYLOAD = {
+    "planner": "analytic",
+    "rows": [
+        {"n_procs": 65536, "mu": 60133, "winner": "ExactPrediction",
+         "winner_waste": 0.11, "winner_period": 9000},
+        {"n_procs": 524288, "mu": 7516.5, "winner": "Young",
+         "winner_waste": 0.4, "winner_period": 3000},
+    ],
+}
+
+VERIFY_PAYLOAD = {
+    "grid": "quick",
+    "workers": 4,
+    "n_pass": 1,
+    "n_fail": 0,
+    "n_inconclusive": 1,
+    "cases": [
+        {"name": "exp-n16-none-Young", "policy": "Young", "analytic": 0.117,
+         "band_lo": 0.097, "band_hi": 0.137, "sim_mean": 0.1175, "sim_ci95": 0.004,
+         "completion_rate": 1, "reps": 48, "verdict": "pass", "domain": "first_order"},
+        {"name": "weibull:0.5-n16-none-Young", "policy": "Young", "analytic": 0.117,
+         "band_lo": 0.03, "band_hi": 0.47, "sim_mean": 0.46, "sim_ci95": 0.02,
+         "completion_rate": 1, "reps": 384, "verdict": "inconclusive",
+         "domain": "out_of_domain", "domain_reason": "weibull:0.5 faults"},
+    ],
+}
+
+STATS_PAYLOAD = {
+    "requests": 10,
+    "errors": 2,
+    "plans": 3,
+    "simulates": 4,
+    "best_periods": 1,
+    "sweeps": 0,
+    "verifies": 2,
+    "lat_p50_s": 0.001,
+    "lat_p95_s": 0.01,
+    "lat_p99_s": 0.02,
+    "lat_n": 8,
+    "batcher": {"requests": 3, "batches": 1, "max_batch": 3},
+}
+
+STATS_DEFAULT = {
+    "requests": 0, "errors": 0, "plans": 0, "simulates": 0, "best_periods": 0,
+    "sweeps": 0, "verifies": 0, "lat_p50_s": 0, "lat_p95_s": 0, "lat_p99_s": 0,
+    "lat_n": 0,
+}
+
+RESPONSES_V2 = [
+    {"v": 2, "ok": True, "job": "plan", "planner": "analytic", **PLAN_PAYLOAD},
+    {"v": 2, "ok": True, "job": "simulate", **SIMULATE_PAYLOAD},
+    {"v": 2, "ok": True, "job": "best_period", **BEST_PERIOD_PAYLOAD},
+    {"v": 2, "ok": True, "job": "sweep", **SWEEP_PAYLOAD},
+    {"v": 2, "ok": True, "job": "verify", **VERIFY_PAYLOAD},
+    {"v": 2, "ok": True, "job": "stats", **STATS_PAYLOAD},
+    {"v": 2, "ok": True, "job": "stats", **STATS_DEFAULT},
+    {"v": 2, "ok": True, "job": "ping", "pong": True},
+    {"v": 2, "ok": False, "code": "bad_request", "error": "work must be positive"},
+]
+
+# Legacy (v1) response shapes: no "v"/"job"/"planner" markers; stats
+# keeps the original top-level planner counters.
+RESPONSES_V1 = [
+    {"ok": True, **PLAN_PAYLOAD},
+    {"ok": True, "requests": 3, "batches": 1, "max_batch": 3, "errors": 2,
+     "lat_p50_s": 0.001, "lat_p95_s": 0.01, "lat_p99_s": 0.02, "lat_n": 8},
+    {"ok": True, "pong": True},
+    {"ok": False, "code": "bad_request", "error": "work must be positive"},
+]
+
+# Legacy request *inputs* (arbitrary client bytes, not canonical): the
+# golden test decodes these and pins the typed result + legacy flag.
+REQUESTS_V1 = [
+    '{"mu": 60000, "recall": 0.85, "precision": 0.82, "window": 300}',
+    '{"op": "ping"}',
+    '{"op": "stats"}',
+]
+
+
+def main():
+    os.makedirs(OUT, exist_ok=True)
+    files = {
+        "requests_v2.jsonl": [jval(r) for r in REQUESTS_V2],
+        "responses_v2.jsonl": [jval(r) for r in RESPONSES_V2],
+        "responses_v1.jsonl": [jval(r) for r in RESPONSES_V1],
+        "requests_v1.jsonl": REQUESTS_V1,
+    }
+    for name, lines in files.items():
+        path = os.path.join(OUT, name)
+        with open(path, "w") as f:
+            f.write("\n".join(lines) + "\n")
+        print(f"wrote {path} ({len(lines)} lines)")
+
+
+if __name__ == "__main__":
+    main()
