@@ -5,8 +5,10 @@
 //!   batcher              dynamic batcher under concurrent clients
 //!   sim                  simulation engine event throughput (session path)
 //!   session_vs_oneshot   SimSession reuse vs naive per-rep construction
+//!   bank_replay_vs_live  TraceBank replay vs live trace generation
 //!   pool                 worker-pool scaling (streaming fold + sessions)
 //!   best_period          brute-force period search, 1 worker vs all
+//!   best_period_crn      replay-backed sweep vs live sweep at equal reps
 //!   model                closed-form planner throughput (the non-AOT baseline)
 //!
 //! Every run also emits `BENCH_perf.json` (one object per executed
@@ -221,6 +223,58 @@ fn bench_session_vs_oneshot(rec: &mut Recorder) {
     );
 }
 
+fn bench_bank_replay(rec: &mut Recorder) {
+    println!("== trace-bank replay vs live generation ==");
+    // Same (scenario, policy) replicated two ways: a live session
+    // re-samples the fault/prediction streams every run; a replay
+    // session walks the bank's arena. The outcomes are bit-identical
+    // (pinned by tests); the delta is pure sampling cost.
+    let mut s = Scenario::paper(1 << 19, predictor_yu(300.0));
+    s.fault_dist = DistSpec::weibull(0.7);
+    let spec = spec_for(StrategyKind::NoCkptI, &s, Capping::Uncapped);
+    let policy = ckptfp::sim::Policy::from_spec(&spec, s.platform.c);
+    let lead = spec.required_lead(s.platform.c);
+
+    let mut live = SimSession::new(&s, &spec).expect("session");
+    let (live_msegs, live_runs, _) = segment_throughput(|rep| live.run(rep).n_segments, 1.5);
+
+    // Bank sized to stay inside the arena cap at this platform's fault
+    // rate; replays cycle through its reps.
+    let bank_reps = 256u64;
+    let t0 = Instant::now();
+    let bank = match ckptfp::trace::TraceBank::try_build(&s, lead, bank_reps).expect("bank build")
+    {
+        Some(b) => std::sync::Arc::new(b),
+        None => {
+            println!("  skipped: bank declined (arena cap)");
+            rec.push("bank_replay_vs_live", vec![("skipped", Json::Bool(true))]);
+            return;
+        }
+    };
+    let build_s = t0.elapsed().as_secs_f64();
+    let mut replay = SimSession::replay(bank.clone(), &s, policy).expect("replay session");
+    let (replay_msegs, replay_runs, _) =
+        segment_throughput(|rep| replay.run(rep % bank_reps).n_segments, 1.5);
+    let speedup = replay_msegs / live_msegs;
+    let ctr = ckptfp::trace::bank::counters();
+    println!("  live TraceGen session        {live_msegs:>6.2} M segments/s ({live_runs} runs)");
+    println!("  bank ReplaySource session    {replay_msegs:>6.2} M segments/s ({replay_runs} runs)");
+    println!(
+        "  replay speedup: {speedup:.2}x  (bank build {build_s:.2}s, {:.1} MB resident, {} fallbacks so far)",
+        bank.resident_bytes() as f64 / 1e6,
+        ctr.fallbacks_taken
+    );
+    rec.push(
+        "bank_replay_vs_live",
+        vec![
+            ("live_msegments_per_s", Json::Num(live_msegs)),
+            ("replay_msegments_per_s", Json::Num(replay_msegs)),
+            ("speedup", Json::Num(speedup)),
+            ("bank_build_s", Json::Num(build_s)),
+        ],
+    );
+}
+
 fn bench_pool(rec: &mut Recorder) {
     println!("== worker pool scaling (streaming fold, fixed total work) ==");
     let s = {
@@ -278,7 +332,7 @@ fn bench_best_period(rec: &mut Recorder) {
         ("all workers, pruned", "parallel_pruned_s", all, true),
     ] {
         let t0 = Instant::now();
-        let res = best_period_with(&s, &base, 12, 12, &BestPeriodOptions { workers, prune })
+        let res = best_period_with(&s, &base, 12, 12, &BestPeriodOptions { workers, prune, replay: true })
             .expect("search");
         let dt = t0.elapsed().as_secs_f64();
         println!(
@@ -296,6 +350,45 @@ fn bench_best_period(rec: &mut Recorder) {
         }
     }
     rec.push("best_period", fields);
+}
+
+fn bench_best_period_crn(rec: &mut Recorder) {
+    println!("== best-period: replay-backed sweep vs live sweep (equal reps) ==");
+    // The acceptance bench: the same search budget, with and without
+    // the trace bank. No pruning, so both runs execute the identical
+    // candidate × rep product and the wall-clock delta is the
+    // sampling work the bank amortizes across candidates.
+    let mut s = Scenario::paper(1 << 16, Predictor::none());
+    s.fault_dist = DistSpec::Exp;
+    s.work = 2.0e5;
+    let base = spec_for(StrategyKind::Young, &s, Capping::Uncapped);
+    let workers = ckptfp::coordinator::available_workers();
+    let mut fields: Vec<(&str, Json)> = Vec::new();
+    let mut live_s = 0.0;
+    for (label, key, replay) in
+        [("live generation", "live_s", false), ("bank replay", "replay_s", true)]
+    {
+        let t0 = Instant::now();
+        let res = best_period_with(
+            &s,
+            &base,
+            24,
+            12,
+            &BestPeriodOptions { workers, prune: false, replay },
+        )
+        .expect("search");
+        let dt = t0.elapsed().as_secs_f64();
+        println!("  {label:<16} {dt:>6.2}s  (T* = {:.0}, {} reps simulated)", res.t_r, res.reps_used);
+        fields.push((key, Json::Num(dt)));
+        std::hint::black_box(res.waste);
+        if replay {
+            println!("  CRN speedup at equal reps: {:.2}x", live_s / dt);
+            fields.push(("speedup", Json::Num(live_s / dt)));
+        } else {
+            live_s = dt;
+        }
+    }
+    rec.push("best_period_crn", fields);
 }
 
 fn bench_model(rec: &mut Recorder) {
@@ -326,11 +419,17 @@ fn main() {
     if run("session_vs_oneshot") {
         bench_session_vs_oneshot(&mut rec);
     }
+    if run("bank_replay_vs_live") {
+        bench_bank_replay(&mut rec);
+    }
     if run("pool") {
         bench_pool(&mut rec);
     }
     if run("best_period") {
         bench_best_period(&mut rec);
+    }
+    if run("best_period_crn") {
+        bench_best_period_crn(&mut rec);
     }
     if run("model") {
         bench_model(&mut rec);

@@ -204,7 +204,7 @@ impl Executor {
         if candidates < 2 {
             return Err(ApiError::bad_request("best_period needs at least 2 candidates"));
         }
-        let opts = BestPeriodOptions { workers, prune: job.prune };
+        let opts = BestPeriodOptions { workers, prune: job.prune, replay: true };
         let (name, res) = match &job.policy {
             Some(pspec) => {
                 let res = best_policy_with(&job.scenario, pspec, reps, candidates as usize, &opts)
@@ -228,6 +228,7 @@ impl Executor {
             reps,
             candidates,
             workers: workers as u64,
+            reps_used: res.reps_used,
         })
     }
 
@@ -291,6 +292,7 @@ impl Executor {
     pub fn stats(&self) -> ServiceStats {
         let (p50, p95, p99, n) = self.metrics.latency_quantiles();
         let finite = |x: f64| if x.is_finite() { x } else { 0.0 };
+        let bank = crate::trace::bank::counters();
         ServiceStats {
             requests: self.metrics.get("requests"),
             errors: self.metrics.get("errors"),
@@ -303,6 +305,10 @@ impl Executor {
             lat_p95_s: finite(p95),
             lat_p99_s: finite(p99),
             lat_n: n as u64,
+            banks_built: bank.banks_built,
+            bank_replays: bank.replays_served,
+            bank_fallbacks: bank.fallbacks_taken,
+            bank_bytes_resident: bank.bytes_resident,
             batcher: self.batcher.as_ref().map(|b| {
                 let s = b.stats();
                 BatcherSnapshot {

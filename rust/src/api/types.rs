@@ -227,6 +227,11 @@ pub struct BestPeriodOutcome {
     pub reps: u64,
     pub candidates: u64,
     pub workers: u64,
+    /// Replications actually simulated (additive v2 field): with
+    /// pruning, the coarse pass covers the full grid and only
+    /// survivors get the rest, so this is the honest spend — not the
+    /// requested `reps × candidates` budget.
+    pub reps_used: u64,
 }
 
 /// One row of a [`SweepJob`] answer.
@@ -269,6 +274,14 @@ pub struct ServiceStats {
     pub lat_p95_s: f64,
     pub lat_p99_s: f64,
     pub lat_n: u64,
+    /// Trace-bank reuse counters (additive v2 fields; process-global,
+    /// see [`crate::trace::bank::counters`]): banks built, replications
+    /// served from a bank arena, replications that fell back to live
+    /// generation, and arena bytes currently resident.
+    pub banks_built: u64,
+    pub bank_replays: u64,
+    pub bank_fallbacks: u64,
+    pub bank_bytes_resident: u64,
     /// Present only when the service runs an HLO batcher.
     pub batcher: Option<BatcherSnapshot>,
 }

@@ -295,6 +295,7 @@ pub fn encode_response(resp: &JobResponse, legacy: bool) -> String {
                 ("waste", Json::Num(r.waste)),
                 ("n_pruned", Json::Num(r.n_pruned as f64)),
                 ("reps", Json::Num(r.reps as f64)),
+                ("reps_used", Json::Num(r.reps_used as f64)),
                 ("candidates", Json::Num(r.candidates as f64)),
                 ("workers", Json::Num(r.workers as f64)),
                 (
@@ -379,6 +380,10 @@ pub fn encode_response(resp: &JobResponse, legacy: bool) -> String {
                     ("lat_p95_s", Json::Num(s.lat_p95_s)),
                     ("lat_p99_s", Json::Num(s.lat_p99_s)),
                     ("lat_n", Json::Num(s.lat_n as f64)),
+                    ("banks_built", Json::Num(s.banks_built as f64)),
+                    ("bank_replays", Json::Num(s.bank_replays as f64)),
+                    ("bank_fallbacks", Json::Num(s.bank_fallbacks as f64)),
+                    ("bank_bytes_resident", Json::Num(s.bank_bytes_resident as f64)),
                 ]);
                 if let Some(b) = &s.batcher {
                     fields.push((
@@ -502,6 +507,7 @@ pub fn decode_response(line: &str) -> Result<JobResponse, ApiError> {
                 reps: u64_or(&v, "reps", 0),
                 candidates: u64_or(&v, "candidates", 0),
                 workers: u64_or(&v, "workers", 0),
+                reps_used: u64_or(&v, "reps_used", 0),
             }))
         }
         Some("sweep") => {
@@ -552,6 +558,10 @@ pub fn decode_response(line: &str) -> Result<JobResponse, ApiError> {
                 lat_p95_s: v.num_or("lat_p95_s", 0.0),
                 lat_p99_s: v.num_or("lat_p99_s", 0.0),
                 lat_n: u64_or(&v, "lat_n", 0),
+                banks_built: u64_or(&v, "banks_built", 0),
+                bank_replays: u64_or(&v, "bank_replays", 0),
+                bank_fallbacks: u64_or(&v, "bank_fallbacks", 0),
+                bank_bytes_resident: u64_or(&v, "bank_bytes_resident", 0),
                 batcher,
             }))
         }

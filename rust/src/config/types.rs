@@ -127,6 +127,20 @@ impl Predictor {
             self.precision * mu / (self.recall * (1.0 - self.precision))
         }
     }
+
+    /// Whether this predictor can never emit a prediction: no true
+    /// positives (r = 0) and no false-positive stream either. This is
+    /// the one condition under which a live
+    /// [`crate::trace::TraceGen`]'s prediction stream legitimately
+    /// returns `None` (the generator's own check in
+    /// `trace::gen` is the from-parsed-dists form of the same rule),
+    /// and therefore the condition under which a
+    /// [`crate::trace::TraceBank`]'s empty prediction span is a
+    /// faithful replay rather than a truncation — keep the three in
+    /// lockstep through this helper.
+    pub fn never_fires(&self, mu: f64) -> bool {
+        self.recall == 0.0 && !self.false_pred_interval(mu).is_finite()
+    }
 }
 
 /// Incremental [`Predictor`] construction: recall/precision default to

@@ -59,7 +59,7 @@ impl Metrics {
         (q(0.50), q(0.95), q(0.99), v.len())
     }
 
-    /// Render all counters for the service `stats` verb.
+    /// Render this instance's counters for the service `stats` verb.
     pub fn snapshot(&self) -> BTreeMap<String, u64> {
         self.counters
             .lock()
@@ -68,6 +68,23 @@ impl Metrics {
             .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
             .collect()
     }
+}
+
+/// The trace-bank reuse counters (banks built, replays served,
+/// fallbacks taken, bytes resident) as `bank.*` metric entries. These
+/// are *process-global* — the bank subsystem is shared by every
+/// executor in the process — so they are deliberately not part of any
+/// per-instance [`Metrics::snapshot`]; stats renderers splice them in
+/// beside their own counters (the v2 `stats` job does exactly that
+/// with dedicated fields).
+pub fn bank_snapshot() -> BTreeMap<String, u64> {
+    let bank = crate::trace::bank::counters();
+    BTreeMap::from([
+        ("bank.banks_built".to_string(), bank.banks_built),
+        ("bank.replays_served".to_string(), bank.replays_served),
+        ("bank.fallbacks_taken".to_string(), bank.fallbacks_taken),
+        ("bank.bytes_resident".to_string(), bank.bytes_resident),
+    ])
 }
 
 #[cfg(test)]
@@ -84,6 +101,25 @@ mod tests {
         assert_eq!(m.get("b"), 1);
         assert_eq!(m.get("missing"), 0);
         assert_eq!(m.snapshot().len(), 2);
+    }
+
+    #[test]
+    fn bank_snapshot_carries_the_global_reuse_counters() {
+        let snap = bank_snapshot();
+        assert_eq!(snap.len(), 4);
+        for key in [
+            "bank.banks_built",
+            "bank.replays_served",
+            "bank.fallbacks_taken",
+            "bank.bytes_resident",
+        ] {
+            assert!(snap.contains_key(key), "missing {key}");
+        }
+        // The entries mirror the bank module's own monotone counters
+        // (a later read can only be >= an earlier snapshot).
+        let ctr = crate::trace::bank::counters();
+        assert!(ctr.banks_built >= snap["bank.banks_built"]);
+        assert!(ctr.replays_served >= snap["bank.replays_served"]);
     }
 
     #[test]

@@ -10,6 +10,6 @@ pub mod protocol;
 mod service;
 
 pub use batcher::{Batcher, BatcherConfig, BatcherStats};
-pub use metrics::Metrics;
+pub use metrics::{bank_snapshot, Metrics};
 pub use pool::{available_workers, run_parallel, run_parallel_fold};
 pub use service::{serve, PlannerClient, ServiceConfig, ServiceHandle};

@@ -94,7 +94,7 @@ fn simulated_figure(
     // BestPeriod counterparts (brute-force; §5's quality check). Each
     // search parallelizes its own (candidate × rep) product internally.
     if opts.best_period {
-        let bp_opts = BestPeriodOptions { workers: opts.workers, prune: true };
+        let bp_opts = BestPeriodOptions { workers: opts.workers, prune: true, replay: true };
         for ((n, kind), (s, spec)) in keys.iter().zip(&points) {
             let res = best_period_with(s, spec, opts.bp_reps, opts.bp_candidates, &bp_opts)
                 .expect("best-period search failed");

@@ -74,7 +74,8 @@ pub mod prelude {
     pub use crate::strategies::{
         resolve_policy, PolicySpec, ProactiveMode, ResolvedPolicy, StrategySpec,
     };
-    pub use crate::util::stats::Summary;
+    pub use crate::trace::{ReplaySource, TraceBank};
+    pub use crate::util::stats::{PairedDiff, Summary};
     pub use crate::verify::{
         conformance_grid, run_conformance, CaseVerdict, ConformanceCase, GridKind, Verdict,
         VerifyOptions, VerifyReport,

@@ -213,9 +213,19 @@ fn cmd_simulate(args: &mut Args) -> anyhow::Result<()> {
 }
 
 fn print_best_period(res: &BestPeriodOutcome) {
+    // `reps` is the requested per-candidate budget; `reps_used` is what
+    // was actually simulated after pruning — the honest number for
+    // bench comparisons. (Old servers report reps_used = 0: omit.)
     println!(
-        "{}: best T_R {:.1} s (mean waste {:.4}) over {} candidates x {} reps ({} pruned, {} workers)",
-        res.strategy, res.t_r, res.waste, res.candidates, res.reps, res.n_pruned, res.workers,
+        "{}: best T_R {:.1} s (mean waste {:.4}) over {} candidates x {} reps requested ({} simulated, {} pruned, {} workers)",
+        res.strategy,
+        res.t_r,
+        res.waste,
+        res.candidates,
+        res.reps,
+        if res.reps_used > 0 { res.reps_used.to_string() } else { "?".into() },
+        res.n_pruned,
+        res.workers,
     );
     for (t, w) in &res.sweep {
         println!("  T_R {t:>10.1}  waste {w:.4}");
@@ -267,13 +277,17 @@ fn print_verify(report: &ckptfp::verify::VerifyReport) {
         ]);
     }
     print!("{t}");
+    // Per-case `reps` above and this total are post-escalation spends —
+    // what was actually simulated, not the requested budget.
+    let consumed: u64 = report.cases.iter().map(|c| c.reps).sum();
     println!(
-        "{} grid: {} pass, {} fail, {} inconclusive over {} cases ({} workers)",
+        "{} grid: {} pass, {} fail, {} inconclusive over {} cases ({} reps consumed, {} workers)",
         report.grid,
         report.n_pass,
         report.n_fail,
         report.n_inconclusive,
         report.cases.len(),
+        consumed,
         report.workers,
     );
 }

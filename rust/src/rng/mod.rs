@@ -14,6 +14,15 @@ mod splitmix;
 pub use pcg::Pcg64;
 pub use splitmix::SplitMix64;
 
+/// The per-replication trust-stream seed. One definition shared by the
+/// engine-owned trust RNG ([`crate::sim::SimSession`]) and the
+/// trace-bank's pre-sampled trust uniforms
+/// ([`crate::trace::TraceBank`]) — the two must stay in lockstep for
+/// replay to be bit-identical to live generation.
+pub fn trust_seed(seed: u64, rep: u64) -> u64 {
+    seed ^ (rep << 17) ^ 0xA5
+}
+
 /// Derive a child generator for `(label, index)` — stable, collision-
 /// resistant stream splitting for parallel replications.
 pub fn substream(seed: u64, label: &str, index: u64) -> Pcg64 {

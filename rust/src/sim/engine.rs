@@ -188,7 +188,15 @@ impl<S: EventSource> Engine<S> {
                     if p.is_true_positive() {
                         self.out.n_true_preds += 1;
                     }
-                    let trusted = self.policy.trust(&mut self.rng_trust);
+                    // Replay sources carry the prediction's pre-sampled
+                    // trust uniform; live generators return None and the
+                    // engine draws from its own per-replication stream.
+                    // Either way the k-th prediction sees the k-th
+                    // uniform of the same sequence (rng::trust_seed).
+                    let trusted = match self.source.next_trust_uniform() {
+                        Some(u) => self.policy.trust_with(u),
+                        None => self.policy.trust(&mut self.rng_trust),
+                    };
                     if trusted && p.t_end() > self.now {
                         self.out.n_trusted += 1;
                         let pos = self

@@ -138,6 +138,19 @@ impl Policy {
         !ignore && q > 0.0 && (q >= 1.0 || rng.bernoulli(q))
     }
 
+    /// [`Policy::trust`] against a *pre-sampled* uniform — the trace-
+    /// bank replay path, where the per-prediction uniform was drawn at
+    /// materialization time from the same stream the engine's RNG
+    /// would have produced. Same decision table: `Ignore` and the q
+    /// extremes never look at `u`, a fractional q compares against it
+    /// exactly as `bernoulli` would.
+    #[inline]
+    pub fn trust_with(&self, u: f64) -> bool {
+        let (q, proactive) = self.q_and_mode();
+        let ignore = matches!(proactive, ProactiveMode::Ignore);
+        !ignore && q > 0.0 && (q >= 1.0 || u < q)
+    }
+
     /// Q1 — the regular-checkpoint rule as a `(measured, boundary)`
     /// pair: a regular checkpoint is due when
     /// `measured >= boundary - EPS`, and the next work slice is capped
@@ -245,6 +258,29 @@ mod tests {
         let coin = Policy::Paper { t_r: 100.0, q: 0.5, proactive: ProactiveMode::CkptBefore };
         let _ = coin.trust(&mut rng);
         assert_ne!(rng.next_u64(), twin.next_u64());
+    }
+
+    #[test]
+    fn trust_with_matches_the_rng_decision_table() {
+        // trust_with(u) must agree with trust(rng) whenever the rng's
+        // next uniform is u — the bank replay bit-identity hinge.
+        for q in [0.0, 0.3, 0.5, 0.99, 1.0] {
+            let policy = Policy::Paper { t_r: 100.0, q, proactive: ProactiveMode::CkptBefore };
+            let mut rng = Pcg64::new(11, 7);
+            let mut probe = Pcg64::new(11, 7);
+            for _ in 0..50 {
+                let u = probe.next_f64();
+                let via_rng = policy.trust(&mut rng);
+                assert_eq!(policy.trust_with(u), via_rng, "q={q} u={u}");
+                // Keep the probe aligned: trust consumes a draw only
+                // for fractional q.
+                if !(q > 0.0 && q < 1.0) {
+                    probe = rng.clone();
+                }
+            }
+        }
+        let ignore = Policy::Paper { t_r: 100.0, q: 1.0, proactive: ProactiveMode::Ignore };
+        assert!(!ignore.trust_with(0.0));
     }
 
     #[test]

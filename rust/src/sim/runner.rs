@@ -147,8 +147,12 @@ pub fn run_replications_with(
 ) -> anyhow::Result<ReplicationReport> {
     let mut session = SimSession::new(scenario, spec)?;
     let mut agg = ReplicationAgg::default();
-    let mut outcomes =
-        Vec::with_capacity(if retain == Retain::Outcomes { reps as usize } else { 0 });
+    // The retained-outcome count is known exactly up front: one
+    // reservation, no doubling-growth churn across a large batch.
+    let mut outcomes: Vec<Outcome> = Vec::new();
+    if retain == Retain::Outcomes {
+        outcomes.reserve_exact(reps as usize);
+    }
     for rep in 0..reps {
         let o = session.run(rep);
         agg.push(&o);
@@ -200,6 +204,13 @@ where
 /// `[lo, hi)` in counters, and differs from it only by floating-point
 /// reassociation in the summaries. Deterministic for a fixed worker
 /// count, like everything on this path.
+///
+/// The factory doubles as the *bank provider*: hand it a closure that
+/// builds [`SimSession::replay`] sessions over a shared
+/// [`crate::trace::TraceBank`] and the whole range replays
+/// pre-materialized traces (the comparator extends one bank across its
+/// doubling rounds this way) — outcomes are bit-identical to live
+/// factories, so callers may switch freely.
 pub fn run_replication_range_with<M>(
     rep_lo: u64,
     rep_hi: u64,
@@ -295,6 +306,56 @@ where
         |(a, _), (b, _)| (a.iter().zip(&b).map(|(x, y)| x.merge(y)).collect(), None),
     )
     .0
+}
+
+/// [`fold_waste_product`] that additionally *retains* every
+/// per-replication waste in a point-major matrix
+/// (`matrix[pi * (rep_hi - rep_lo) + (rep - rep_lo)]`). The summaries
+/// are pushed and merged in exactly the same order as the plain fold.
+/// This is how the CRN best-period prune gets per-rep values for its
+/// paired-difference statistics without simulating anything twice:
+/// each `(point, rep)` slot is written exactly once, so the matrix is
+/// deterministic regardless of worker scheduling. Costs
+/// `n_points × reps × 8` bytes — callers bound that product.
+pub fn fold_waste_product_retaining<F>(
+    tasks: &[(usize, u64, u64)],
+    n_points: usize,
+    rep_lo: u64,
+    rep_hi: u64,
+    workers: usize,
+    make: F,
+) -> (Vec<Summary>, Vec<f64>)
+where
+    F: Fn(usize) -> SimSession + Sync,
+{
+    let span = (rep_hi - rep_lo) as usize;
+    let (sums, cells, _) = run_parallel_fold(
+        tasks,
+        workers,
+        || (vec![Summary::new(); n_points], Vec::<(usize, f64)>::new(), None::<(usize, SimSession)>),
+        |(mut sums, mut cells, mut cache), &(pi, lo, hi)| {
+            let stale = cache.as_ref().map(|(cached, _)| *cached != pi).unwrap_or(true);
+            if stale {
+                cache = Some((pi, make(pi)));
+            }
+            let (_, session) = cache.as_mut().expect("cache filled above");
+            for rep in lo..hi {
+                let w = session.run(rep).waste();
+                sums[pi].push(w);
+                cells.push((pi * span + (rep - rep_lo) as usize, w));
+            }
+            (sums, cells, cache)
+        },
+        |(a, mut ca, _), (b, cb, _)| {
+            ca.extend(cb);
+            (a.iter().zip(&b).map(|(x, y)| x.merge(y)).collect(), ca, None)
+        },
+    );
+    let mut matrix = vec![f64::NAN; n_points * span];
+    for (slot, w) in cells {
+        matrix[slot] = w;
+    }
+    (sums, matrix)
 }
 
 #[cfg(test)]

@@ -12,17 +12,39 @@
 //! parse-free, and the outcomes are bit-identical to the one-shot path
 //! (`session_matches_oneshot` below pins this).
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use super::{Engine, Outcome, Policy, SimConfig};
 use crate::config::Scenario;
+use crate::rng::trust_seed;
 use crate::strategies::StrategySpec;
-use crate::trace::TraceGen;
+use crate::trace::{bank, ReplaySource, TraceBank, TraceGen};
 
 /// A (scenario, policy) pair prepared for repeated replication.
+///
+/// Two backings share one public surface: the classic *live* engine
+/// over a [`TraceGen`], and a *replay* engine over a shared
+/// [`TraceBank`] ([`SimSession::replay`]) that serves pre-materialized
+/// event streams and falls back to a lazily-built live engine for any
+/// replication the bank cannot soundly serve (underrun past the
+/// horizon, un-materialized rep). Either way, `run(rep)` is
+/// bit-identical to `simulate_once(scenario, spec, rep)`.
 pub struct SimSession {
     seed: u64,
-    engine: Engine<TraceGen>,
+    inner: Backing,
+}
+
+enum Backing {
+    Live(Engine<TraceGen>),
+    Replay {
+        engine: Engine<ReplaySource>,
+        /// Live fallback engine, built on first use.
+        fallback: Option<Box<Engine<TraceGen>>>,
+        scenario: Box<Scenario>,
+        policy: Policy,
+        lead: f64,
+    },
 }
 
 impl SimSession {
@@ -58,17 +80,103 @@ impl SimSession {
         let source = TraceGen::new(scenario, lead, scenario.seed, 0)?;
         // The trust seed is per-replication; `run` resets it before use.
         let engine = Engine::with_policy(&cfg, policy, source, 0);
-        Ok(SimSession { seed: scenario.seed, engine })
+        Ok(SimSession { seed: scenario.seed, inner: Backing::Live(engine) })
+    }
+
+    /// Replay-backed session over a shared [`TraceBank`]: replications
+    /// are served from the bank's arena instead of re-sampling the
+    /// trace, bit-identical to the live path (underruns past the
+    /// bank's horizon fall back to a live engine automatically).
+    ///
+    /// The bank must have been built for this scenario's seed and for
+    /// exactly the lead this policy requires — a mismatch would replay
+    /// a *different* experiment and is rejected here.
+    pub fn replay(
+        bank: Arc<TraceBank>,
+        scenario: &Scenario,
+        policy: Policy,
+    ) -> anyhow::Result<SimSession> {
+        let cfg = SimConfig::from_scenario(scenario);
+        cfg.validate()?;
+        let lead = policy.sanitized(cfg.c).required_lead(cfg.c);
+        anyhow::ensure!(
+            bank.seed() == scenario.seed,
+            "trace bank was built for seed {} but the scenario uses seed {}",
+            bank.seed(),
+            scenario.seed
+        );
+        anyhow::ensure!(
+            bank.lead() == lead,
+            "trace bank was built with lead {} but the policy requires lead {}",
+            bank.lead(),
+            lead
+        );
+        let engine = Engine::with_policy(&cfg, policy, ReplaySource::new(bank), 0);
+        Ok(SimSession {
+            seed: scenario.seed,
+            inner: Backing::Replay {
+                engine,
+                fallback: None,
+                scenario: Box::new(scenario.clone()),
+                policy,
+                lead,
+            },
+        })
+    }
+
+    /// Whether this session serves replications from a trace bank.
+    pub fn is_replay(&self) -> bool {
+        matches!(self.inner, Backing::Replay { .. })
     }
 
     /// Execute replication `rep`. Reuses the session's engine and
     /// generator via reset — same trace and trust streams as
-    /// `simulate_once(scenario, spec, rep)`, bit for bit.
+    /// `simulate_once(scenario, spec, rep)`, bit for bit, whichever
+    /// backing serves it.
     pub fn run(&mut self, rep: u64) -> Outcome {
-        self.engine.source_mut().reset(self.seed, rep);
-        self.engine.reset(self.seed ^ (rep << 17) ^ 0xA5);
         let started = Instant::now();
-        let mut out = self.engine.run_to_completion();
+        let mut out = match &mut self.inner {
+            Backing::Live(engine) => {
+                engine.source_mut().reset(self.seed, rep);
+                engine.reset(trust_seed(self.seed, rep));
+                engine.run_to_completion()
+            }
+            Backing::Replay { engine, fallback, scenario, policy, lead } => {
+                let covered = engine.source_mut().reset(rep);
+                let replayed = covered.then(|| {
+                    engine.reset(trust_seed(self.seed, rep));
+                    engine.run_to_completion()
+                });
+                match replayed {
+                    // The replayed run stayed inside the bank's horizon:
+                    // its outcome is the live outcome, to the bit.
+                    Some(out) if !engine.source_mut().underrun() => {
+                        bank::note_replay_served();
+                        out
+                    }
+                    // Underrun or un-materialized rep: the replayed
+                    // outcome (if any) may have diverged past the
+                    // horizon — discard it and re-run live.
+                    _ => {
+                        bank::note_fallback_taken();
+                        let live = match fallback {
+                            Some(live) => live,
+                            None => {
+                                let cfg = SimConfig::from_scenario(scenario);
+                                let source =
+                                    TraceGen::new(scenario, *lead, self.seed, rep)
+                                        .expect("scenario validated at session build");
+                                fallback
+                                    .insert(Box::new(Engine::with_policy(&cfg, *policy, source, 0)))
+                            }
+                        };
+                        live.source_mut().reset(self.seed, rep);
+                        live.reset(trust_seed(self.seed, rep));
+                        live.run_to_completion()
+                    }
+                }
+            }
+        };
         out.sim_seconds = started.elapsed().as_secs_f64();
         out
     }
@@ -133,6 +241,68 @@ mod tests {
         let b = session.run(4);
         assert_eq!(a.makespan, b.makespan);
         assert_eq!(a.n_segments, b.n_segments);
+    }
+
+    #[test]
+    fn replay_session_matches_live_session_bit_for_bit() {
+        // The bank bit-identity contract at the session level, including
+        // a fractional trust probability so the pre-sampled uniforms are
+        // genuinely consulted.
+        let s0 = scenario(3000.0);
+        let s = crate::experiments::scenario_for(StrategyKind::WithCkptI, &s0);
+        let mut spec = spec_for(StrategyKind::WithCkptI, &s, Capping::Uncapped);
+        spec.q = 0.6; // fractional: every prediction draws a trust uniform
+        let policy = Policy::from_spec(&spec, s.platform.c);
+        let lead = policy.required_lead(s.platform.c);
+        let bank = Arc::new(TraceBank::try_build(&s, lead, 6).unwrap().expect("bank fits"));
+        let mut replay = SimSession::replay(bank, &s, policy).unwrap();
+        let mut live = SimSession::from_policy(&s, policy).unwrap();
+        assert!(replay.is_replay() && !live.is_replay());
+        for rep in [0u64, 3, 1, 3, 5] {
+            let a = replay.run(rep);
+            let b = live.run(rep);
+            assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "rep {rep}");
+            assert_eq!(a.n_segments, b.n_segments, "rep {rep}");
+            assert_eq!(a.n_trusted, b.n_trusted, "rep {rep}");
+            assert_eq!(a.n_preds, b.n_preds, "rep {rep}");
+            assert_eq!(a.lost_work.to_bits(), b.lost_work.to_bits(), "rep {rep}");
+        }
+    }
+
+    #[test]
+    fn replay_falls_back_for_unmaterialized_reps() {
+        let s = scenario(0.0);
+        let spec = spec_for(StrategyKind::Young, &s, Capping::Uncapped);
+        let policy = Policy::from_spec(&spec, s.platform.c);
+        let lead = policy.required_lead(s.platform.c);
+        let bank = Arc::new(TraceBank::try_build(&s, lead, 2).unwrap().unwrap());
+        let mut replay = SimSession::replay(bank, &s, policy).unwrap();
+        // Rep 7 is not in the bank: served by the live fallback, still
+        // bit-identical to the one-shot path.
+        let a = replay.run(7);
+        let b = simulate_once(&s, &spec, 7).unwrap();
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+        assert_eq!(a.n_segments, b.n_segments);
+    }
+
+    #[test]
+    fn replay_rejects_mismatched_banks() {
+        let s = scenario(0.0);
+        let spec = spec_for(StrategyKind::Young, &s, Capping::Uncapped);
+        let policy = Policy::from_spec(&spec, s.platform.c);
+        let lead = policy.required_lead(s.platform.c);
+        let bank = Arc::new(TraceBank::try_build(&s, lead, 1).unwrap().unwrap());
+        // Seed mismatch.
+        let mut other = s.clone();
+        other.seed += 1;
+        assert!(SimSession::replay(bank.clone(), &other, policy).is_err());
+        // Lead mismatch (migration policies need M > C here).
+        let mig = Policy::Paper {
+            t_r: spec.t_r,
+            q: 1.0,
+            proactive: crate::strategies::ProactiveMode::Migrate { m: lead * 2.0 },
+        };
+        assert!(SimSession::replay(bank, &s, mig).is_err());
     }
 
     #[test]

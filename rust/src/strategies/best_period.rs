@@ -11,11 +11,14 @@
 //! optional coarse pass prunes clearly dominated periods before the
 //! fine pass spends the remaining replications on the contenders.
 
+use std::sync::Arc;
+
 use crate::config::Scenario;
 use crate::coordinator::available_workers;
-use crate::sim::{fold_waste_product, rep_blocks, SimSession};
+use crate::sim::{fold_waste_product, rep_blocks, Policy, SimSession};
 use crate::strategies::{resolve_policy, PolicySpec, StrategySpec};
-use crate::util::stats::Summary;
+use crate::trace::TraceBank;
+use crate::util::stats::{PairedDiff, Summary};
 
 /// Result of a brute-force period search.
 #[derive(Debug, Clone)]
@@ -29,6 +32,19 @@ pub struct BestPeriodResult {
     pub sweep: Vec<(f64, f64)>,
     /// How many candidates the coarse pass eliminated.
     pub n_pruned: usize,
+    /// Replications actually simulated for the sweep estimates
+    /// (coarse pass × full grid plus fine pass × survivors) — the
+    /// honest spend, as opposed to the requested
+    /// `reps × n_candidates` budget. The CRN pruning statistics are
+    /// computed from wastes *retained* during the coarse pass and add
+    /// nothing here.
+    pub reps_used: u64,
+    /// Per-candidate 95% CI half-width of the *paired* waste
+    /// difference against the coarse leader (common random numbers):
+    /// `NaN` when the search ran without a trace bank, without
+    /// pruning, or past the retained-matrix bound; `0` for the leader
+    /// itself. See [`crate::util::stats::PairedDiff`].
+    pub paired_ci: Vec<f64>,
 }
 
 /// Tuning knobs for the search.
@@ -42,12 +58,24 @@ pub struct BestPeriodOptions {
     /// (rarely) prune the true argmin on a noisy coarse mean, and
     /// pruned sweep entries carry coarse-budget means — so it is
     /// opt-in; the expensive figure harness enables it explicitly.
+    /// With a trace bank attached ([`BestPeriodOptions::replay`]) the
+    /// pruning decision uses the *paired* difference CI against the
+    /// coarse leader, which separates candidates with far fewer
+    /// replications than the unpaired bands.
     pub prune: bool,
+    /// Materialize each replication's trace once in a
+    /// [`TraceBank`] and replay it across all candidates (common
+    /// random numbers). Bit-identical to live generation — pinned by
+    /// golden test — and a large constant-factor win since sampling
+    /// dominates the per-candidate cost; the bank declines (and the
+    /// search transparently runs live) when its arena would exceed
+    /// [`crate::trace::bank::MAX_RESIDENT_BYTES`].
+    pub replay: bool,
 }
 
 impl Default for BestPeriodOptions {
     fn default() -> Self {
-        BestPeriodOptions { workers: available_workers(), prune: false }
+        BestPeriodOptions { workers: available_workers(), prune: false, replay: true }
     }
 }
 
@@ -99,8 +127,20 @@ pub fn best_period_with(
     // Surface configuration errors once, before any worker runs.
     drop(SimSession::new(scenario, &specs[0])?);
 
-    Ok(search_grid(&grid, reps, opts, |ci| {
-        SimSession::new(scenario, &specs[ci]).expect("scenario validated above")
+    // All candidates share the base's proactive mode, hence its lead —
+    // one bank serves the whole sweep. `None` (declined or replay off)
+    // falls through to classic live sessions.
+    let bank = if opts.replay {
+        TraceBank::try_build(scenario, base.required_lead(c), reps)?.map(Arc::new)
+    } else {
+        None
+    };
+    Ok(search_grid(&grid, reps, opts, bank.is_some(), |ci| match &bank {
+        Some(b) => {
+            SimSession::replay(b.clone(), scenario, Policy::from_spec(&specs[ci], c))
+                .expect("bank lead/seed derived from this scenario")
+        }
+        None => SimSession::new(scenario, &specs[ci]).expect("scenario validated above"),
     }))
 }
 
@@ -168,23 +208,42 @@ fn search_policy_param(
         "policy parameter {center:e} is too extreme to bracket a [x/4, 4x] search grid"
     );
     let grid = period_grid(lo, hi, n_candidates.max(2));
-    let policies: Vec<crate::sim::Policy> = grid
+    let policies: Vec<Policy> = grid
         .iter()
         .map(|&x| Ok(resolve_policy(&respec(x), scenario)?.policy))
         .collect::<anyhow::Result<_>>()?;
     // Surface configuration errors once, before any worker runs.
     drop(SimSession::from_policy(scenario, policies[0])?);
 
-    Ok(search_grid(&grid, reps, opts, |ci| {
-        SimSession::from_policy(scenario, policies[ci]).expect("policy validated above")
+    // The swept parameter never changes the proactive mode, so every
+    // candidate needs the same lead and one bank covers the sweep.
+    let c = scenario.platform.c;
+    let bank = if opts.replay {
+        TraceBank::try_build(scenario, policies[0].required_lead(c), reps)?.map(Arc::new)
+    } else {
+        None
+    };
+    Ok(search_grid(&grid, reps, opts, bank.is_some(), |ci| match &bank {
+        Some(b) => SimSession::replay(b.clone(), scenario, policies[ci])
+            .expect("bank lead/seed derived from this scenario"),
+        None => SimSession::from_policy(scenario, policies[ci]).expect("policy validated above"),
     }))
 }
 
 /// The shared search core: per-candidate streaming waste summaries over
 /// the (candidate × replication) product, with the optional coarse
 /// pruning pass. `make(i)` builds candidate `i`'s session; the sweep
-/// x-axis is `grid`.
-fn search_grid<F>(grid: &[f64], reps: u64, opts: &BestPeriodOptions, make: F) -> BestPeriodResult
+/// x-axis is `grid`. `crn` says the sessions replay a common trace
+/// bank, which upgrades the pruning decision to *paired*-difference
+/// CIs over wastes retained during the coarse pass (see below) — it
+/// never changes the sweep estimates themselves.
+fn search_grid<F>(
+    grid: &[f64],
+    reps: u64,
+    opts: &BestPeriodOptions,
+    crn: bool,
+    make: F,
+) -> BestPeriodResult
 where
     F: Fn(usize) -> SimSession + Sync,
 {
@@ -202,27 +261,84 @@ where
     // to rank candidates and enough candidates to prune.
     let coarse_reps =
         if opts.prune && reps >= 8 && grid.len() >= 4 { (reps / 4).max(2) } else { reps };
-    let coarse = simulate(&all, 0, coarse_reps);
+    // With CRN pruning ahead, the coarse pass *retains* every per-rep
+    // waste (one extra f64 per simulation, bounded below) so the
+    // paired-difference statistics come free afterwards — nothing is
+    // ever simulated twice. The matrix is only worth carrying when a
+    // prune will actually read it.
+    let retain_matrix = crn
+        && coarse_reps < reps
+        && grid.len() as u64 * coarse_reps <= (1 << 22);
+    let (coarse, coarse_matrix) = if retain_matrix {
+        let tasks = rep_blocks(&all, 0, coarse_reps, opts.workers);
+        let (sums, matrix) = crate::sim::fold_waste_product_retaining(
+            &tasks,
+            grid.len(),
+            0,
+            coarse_reps,
+            opts.workers,
+            &make,
+        );
+        (sums, Some(matrix))
+    } else {
+        (simulate(&all, 0, coarse_reps), None)
+    };
+    let mut reps_used = grid.len() as u64 * coarse_reps;
+    let mut paired_ci = vec![f64::NAN; grid.len()];
 
     let (survivors, totals, n_pruned) = if coarse_reps >= reps {
         (all, coarse, 0)
     } else {
         let best_idx = argmin(&coarse);
         let best_mean = coarse[best_idx].mean();
-        // Keep everything statistically close to the coarse leader: a
-        // candidate survives unless its mean is above the leader's by
-        // both a 10% margin and the combined 95% noise bands.
+        // Keep everything statistically close to the coarse leader.
+        // Without CRN, a candidate survives unless its mean is above
+        // the leader's by both a 10% margin and the combined 95% noise
+        // bands. With CRN the per-rep wastes retained by the coarse
+        // pass pair each candidate with the leader on the same traces,
+        // and the decision uses the *paired-difference* CI —
+        // dramatically narrower on common random numbers, so
+        // genuinely-worse candidates are pruned at replication counts
+        // where the unpaired bands still overlap.
+        let pairs: Option<Vec<PairedDiff>> = coarse_matrix.map(|matrix| {
+            let span = coarse_reps as usize;
+            let leader = &matrix[best_idx * span..(best_idx + 1) * span];
+            all.iter()
+                .map(|&ci| {
+                    let mut pd = PairedDiff::new();
+                    if ci != best_idx {
+                        let row = &matrix[ci * span..(ci + 1) * span];
+                        for (a, b) in row.iter().zip(leader) {
+                            pd.push(*a, *b);
+                        }
+                    }
+                    pd
+                })
+                .collect()
+        });
         let survivors: Vec<usize> = all
             .iter()
             .copied()
-            .filter(|&ci| {
-                let slack =
-                    (0.10 * best_mean.abs()).max(coarse[ci].ci95() + coarse[best_idx].ci95());
-                coarse[ci].mean() <= best_mean + slack
+            .filter(|&ci| match &pairs {
+                Some(pds) if ci != best_idx => {
+                    let slack = (0.10 * best_mean.abs()).max(pds[ci].ci95_paired());
+                    pds[ci].mean_diff() <= slack
+                }
+                _ => {
+                    let slack =
+                        (0.10 * best_mean.abs()).max(coarse[ci].ci95() + coarse[best_idx].ci95());
+                    coarse[ci].mean() <= best_mean + slack
+                }
             })
             .collect();
+        if let Some(pds) = &pairs {
+            for ci in 0..grid.len() {
+                paired_ci[ci] = if ci == best_idx { 0.0 } else { pds[ci].ci95_paired() };
+            }
+        }
         let n_pruned = grid.len() - survivors.len();
         let fine = simulate(&survivors, coarse_reps, reps);
+        reps_used += survivors.len() as u64 * (reps - coarse_reps);
         let totals: Vec<Summary> = coarse
             .iter()
             .zip(&fine)
@@ -240,7 +356,7 @@ where
             best = (w, grid[ci]);
         }
     }
-    BestPeriodResult { t_r: best.1, waste: best.0, sweep, n_pruned }
+    BestPeriodResult { t_r: best.1, waste: best.0, sweep, n_pruned, reps_used, paired_ci }
 }
 
 fn argmin(sums: &[Summary]) -> usize {
@@ -340,7 +456,7 @@ mod tests {
             &base,
             12,
             8,
-            &BestPeriodOptions { workers: 2, prune: false },
+            &BestPeriodOptions { workers: 2, prune: false, replay: true },
         )
         .unwrap();
         let pruned = best_period_with(
@@ -348,7 +464,7 @@ mod tests {
             &base,
             12,
             8,
-            &BestPeriodOptions { workers: 2, prune: true },
+            &BestPeriodOptions { workers: 2, prune: true, replay: true },
         )
         .unwrap();
         assert_eq!(exhaustive.n_pruned, 0);
@@ -384,7 +500,7 @@ mod tests {
         // A Strategy(...) policy spec must return the classic T_R
         // search, bit for bit.
         let (s, base) = small_study();
-        let opts = BestPeriodOptions { workers: 2, prune: false };
+        let opts = BestPeriodOptions { workers: 2, prune: false, replay: true };
         let direct = best_period_with(&s, &base, 6, 5, &opts).unwrap();
         let via_policy = best_policy_with(
             &s,
@@ -402,7 +518,7 @@ mod tests {
     #[test]
     fn policy_search_sweeps_the_risk_kappa() {
         let (s, _) = small_study();
-        let opts = BestPeriodOptions { workers: 2, prune: false };
+        let opts = BestPeriodOptions { workers: 2, prune: false, replay: true };
         let res =
             best_policy_with(&s, &PolicySpec::RiskThreshold { kappa: 1.0 }, 6, 5, &opts).unwrap();
         assert_eq!(res.sweep.len(), 5);
@@ -419,7 +535,7 @@ mod tests {
         // Denormal kappa: finite and positive (so validate admits it)
         // but kappa/4 underflows to 0 — must be an error, not a panic.
         let (s, _) = small_study();
-        let opts = BestPeriodOptions { workers: 2, prune: false };
+        let opts = BestPeriodOptions { workers: 2, prune: false, replay: true };
         let tiny = PolicySpec::RiskThreshold { kappa: 5e-324 };
         let err = best_policy_with(&s, &tiny, 2, 4, &opts).unwrap_err();
         assert!(err.to_string().contains("too extreme"), "{err:#}");
@@ -428,9 +544,76 @@ mod tests {
     }
 
     #[test]
+    fn replay_search_is_bit_identical_to_live_search() {
+        // The CRN tentpole contract at the search level: with pruning
+        // off (so both paths run the identical candidate × rep product
+        // through the identical fold), a bank-replayed search and a
+        // live-generation search agree to the bit.
+        let (s, base) = small_study();
+        let live = best_period_with(
+            &s,
+            &base,
+            6,
+            6,
+            &BestPeriodOptions { workers: 2, prune: false, replay: false },
+        )
+        .unwrap();
+        let replay = best_period_with(
+            &s,
+            &base,
+            6,
+            6,
+            &BestPeriodOptions { workers: 2, prune: false, replay: true },
+        )
+        .unwrap();
+        assert_eq!(live.t_r.to_bits(), replay.t_r.to_bits());
+        assert_eq!(live.waste.to_bits(), replay.waste.to_bits());
+        assert_eq!(live.sweep.len(), replay.sweep.len());
+        for (a, b) in live.sweep.iter().zip(&replay.sweep) {
+            assert_eq!(a.0.to_bits(), b.0.to_bits());
+            assert_eq!(a.1.to_bits(), b.1.to_bits());
+        }
+        assert_eq!(live.reps_used, replay.reps_used);
+        assert!(live.paired_ci.iter().all(|x| x.is_nan()), "no pairing without pruning");
+    }
+
+    #[test]
+    fn reps_used_reports_the_honest_spend() {
+        let (s, base) = small_study();
+        // No pruning: every candidate gets the full budget.
+        let full = best_period_with(
+            &s,
+            &base,
+            6,
+            5,
+            &BestPeriodOptions { workers: 2, prune: false, replay: true },
+        )
+        .unwrap();
+        assert_eq!(full.reps_used, 6 * 5);
+        // Pruning: the coarse pass covers the grid, the fine pass only
+        // survivors — never more than the requested budget.
+        let pruned = best_period_with(
+            &s,
+            &base,
+            16,
+            8,
+            &BestPeriodOptions { workers: 2, prune: true, replay: true },
+        )
+        .unwrap();
+        let coarse = (16u64 / 4).max(2);
+        let expected =
+            8 * coarse + (8 - pruned.n_pruned as u64) * (16 - coarse);
+        assert_eq!(pruned.reps_used, expected);
+        assert!(pruned.reps_used <= 16 * 8);
+        // The paired CIs exist exactly when CRN pruning ran.
+        assert_eq!(pruned.paired_ci.len(), 8);
+        assert!(pruned.paired_ci.iter().any(|x| x.is_finite()));
+    }
+
+    #[test]
     fn policy_search_is_reproducible() {
         let (s, _) = small_study();
-        let opts = BestPeriodOptions { workers: 3, prune: false };
+        let opts = BestPeriodOptions { workers: 3, prune: false, replay: true };
         let spec = PolicySpec::AdaptivePeriod { gain: 1.0 };
         let a = best_policy_with(&s, &spec, 5, 4, &opts).unwrap();
         let b = best_policy_with(&s, &spec, 5, 4, &opts).unwrap();
@@ -441,7 +624,7 @@ mod tests {
     #[test]
     fn parallel_search_is_reproducible() {
         let (s, base) = small_study();
-        let opts = BestPeriodOptions { workers: 4, prune: true };
+        let opts = BestPeriodOptions { workers: 4, prune: true, replay: true };
         let a = best_period_with(&s, &base, 8, 6, &opts).unwrap();
         let b = best_period_with(&s, &base, 8, 6, &opts).unwrap();
         assert_eq!(a.t_r, b.t_r);

@@ -1,0 +1,594 @@
+//! Trace banks: materialize each replication's event streams once,
+//! replay them across every candidate of a sweep.
+//!
+//! `TraceGen`'s streams depend only on the *scenario* (laws, predictor,
+//! lead, seed, rep) — never on the candidate period or policy being
+//! evaluated. Every sweep surface in the repo therefore re-samples the
+//! exact same traces once per candidate. A [`TraceBank`] samples each
+//! replication exactly once into a contiguous arena (three `Vec`s —
+//! faults, predictions, pre-drawn trust uniforms — with per-rep spans),
+//! and a [`ReplaySource`] serves a rep's slice back through the
+//! [`EventSource`] trait, so the engine cannot tell replay from live
+//! generation. Beyond the constant-factor win (sampling dominates the
+//! hot path; replay is a pointer walk), the replay discipline makes
+//! candidate comparisons *paired* — common random numbers — which is
+//! what [`crate::util::stats::PairedDiff`] exploits for narrow CIs.
+//!
+//! ## Bit-identity contract
+//!
+//! Replay must be indistinguishable from live generation at a fixed
+//! seed, to the bit (pinned by `tests/test_bank.rs`). Three properties
+//! make that hold:
+//!
+//! * `TraceGen`'s two streams are interleaving-independent — draining
+//!   all faults, then all predictions, yields exactly the sequences an
+//!   engine's arbitrary interleaving would see;
+//! * trust decisions consult a uniform only for *fractional* q
+//!   (`Policy::trust` short-circuits `Ignore` and the q ∈ {0, 1}
+//!   extremes without drawing), and when they do, the engine draws
+//!   exactly once per drained prediction in emission order — so the
+//!   bank pre-draws the k-th uniform for the k-th prediction from the
+//!   same `Pcg64::new(trust_seed(seed, rep), 0x7157)` stream the
+//!   engine would have used ([`crate::rng::trust_seed`] is the single
+//!   shared definition), and `Policy::trust_with` ignores the uniform
+//!   in exactly the cases `trust` would not have drawn one. A future
+//!   policy whose draw decision depends on anything *else* (e.g. the
+//!   prediction's truth) would break this alignment and must not be
+//!   replayed from a bank;
+//! * a bank is *finite* where a generator is infinite, so
+//!   [`ReplaySource`] raises an **underrun** flag the moment a caller
+//!   asks past the materialized horizon, and the session layer falls
+//!   back to a live [`TraceGen`] run for that replication. The
+//!   fallback is a code path, not a panic — replay is an optimization
+//!   whose validity domain is "the run stayed inside the horizon", and
+//!   outside it the answer still comes from the reference path.
+//!
+//! ## Validity domain / declining
+//!
+//! Two ways a bank declines rather than misbehaving:
+//!
+//! * **per-replication**: underrun (run outlived `horizon`, e.g. a
+//!   pathological waste near 1) → that rep re-runs live;
+//! * **whole-bank**: the estimated arena footprint for the requested
+//!   replication count exceeds [`MAX_RESIDENT_BYTES`] →
+//!   [`TraceBank::try_build`] returns `None` and the caller keeps the
+//!   classic live sessions.
+//!
+//! Event streams whose regeneration would depend on engine decisions
+//! (none exist in-tree today — predictions and faults are exogenous)
+//! can never be banked; a source with that property must simply not
+//! get a bank, which is the same `None` path.
+//!
+//! Reuse counters (banks built, replays served, fallbacks taken, bytes
+//! resident) are process-global atomics surfaced through
+//! [`counters`], `coordinator::metrics` and the v2 `stats` job.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use super::{EventSource, Fault, Prediction, TraceGen};
+use crate::config::Scenario;
+use crate::rng::{trust_seed, Pcg64};
+
+/// Default materialization horizon as a multiple of the job's work:
+/// covers every run with waste below `1 - 1/4 = 0.75`; longer runs hit
+/// the underrun fallback (correct, just not accelerated).
+pub const HORIZON_FACTOR: f64 = 4.0;
+
+/// Whole-bank decline threshold on the *estimated* arena footprint.
+pub const MAX_RESIDENT_BYTES: u64 = 256 << 20;
+
+// ---------------------------------------------------------------------------
+// Reuse counters
+// ---------------------------------------------------------------------------
+
+static BANKS_BUILT: AtomicU64 = AtomicU64::new(0);
+static REPLAYS_SERVED: AtomicU64 = AtomicU64::new(0);
+static FALLBACKS_TAKEN: AtomicU64 = AtomicU64::new(0);
+static BYTES_RESIDENT: AtomicU64 = AtomicU64::new(0);
+
+/// Point-in-time snapshot of the process-global bank counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct BankCounters {
+    /// Banks successfully built (`try_build` returning `Some`).
+    pub banks_built: u64,
+    /// Replications served from a bank arena without falling back.
+    pub replays_served: u64,
+    /// Replications that fell back to live generation (underrun,
+    /// missing rep) plus whole-bank declines.
+    pub fallbacks_taken: u64,
+    /// Arena bytes currently resident across all live banks.
+    pub bytes_resident: u64,
+}
+
+/// Read the process-global bank reuse counters.
+pub fn counters() -> BankCounters {
+    BankCounters {
+        banks_built: BANKS_BUILT.load(Ordering::Relaxed),
+        replays_served: REPLAYS_SERVED.load(Ordering::Relaxed),
+        fallbacks_taken: FALLBACKS_TAKEN.load(Ordering::Relaxed),
+        bytes_resident: BYTES_RESIDENT.load(Ordering::Relaxed),
+    }
+}
+
+pub(crate) fn note_replay_served() {
+    REPLAYS_SERVED.fetch_add(1, Ordering::Relaxed);
+}
+
+pub(crate) fn note_fallback_taken() {
+    FALLBACKS_TAKEN.fetch_add(1, Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------------
+// TraceBank
+// ---------------------------------------------------------------------------
+
+/// Arena span of one materialized replication.
+#[derive(Debug, Clone, Copy, Default)]
+struct RepSpan {
+    fault_lo: u32,
+    fault_hi: u32,
+    pred_lo: u32,
+    pred_hi: u32,
+}
+
+/// A set of replications' fault/prediction streams, materialized once
+/// into one contiguous arena and replayed many times.
+///
+/// Build with [`TraceBank::try_build`], grow with
+/// [`TraceBank::ensure_reps`] (the verify comparator's replication
+/// doubling extends the bank instead of regenerating), hand out as
+/// `Arc<TraceBank>` to [`ReplaySource`]s across worker threads. Reuse
+/// an existing allocation for a new scenario/seed with
+/// [`TraceBank::reset_for`] (the `SimSession` discipline: arenas keep
+/// their capacity).
+#[derive(Debug)]
+pub struct TraceBank {
+    seed: u64,
+    lead: f64,
+    horizon: f64,
+    /// True when the scenario's predictor can never fire (recall 0 and
+    /// no false-prediction stream): an empty prediction span then
+    /// faithfully replays the live `None`, not an underrun.
+    preds_never_fire: bool,
+    faults: Vec<Fault>,
+    preds: Vec<Prediction>,
+    /// Pre-sampled per-prediction trust uniforms, aligned with `preds`:
+    /// `trust[k]` is the k-th `next_f64` of the engine's per-rep trust
+    /// stream, restarting at each rep's `pred_lo`.
+    trust: Vec<f64>,
+    spans: Vec<RepSpan>,
+    /// Reusable generator for materialization (reset per rep).
+    gen: TraceGen,
+    /// Bytes currently charged against the global residency counter.
+    accounted_bytes: u64,
+}
+
+impl TraceBank {
+    /// Build a bank for `scenario` with the proactive `lead` the
+    /// consumer's policy needs, materializing replications `0..reps`.
+    ///
+    /// Returns `Ok(None)` — the *decline* path — when the estimated
+    /// arena footprint for `reps` replications exceeds
+    /// [`MAX_RESIDENT_BYTES`]; the caller then keeps live sessions.
+    pub fn try_build(
+        scenario: &Scenario,
+        lead: f64,
+        reps: u64,
+    ) -> anyhow::Result<Option<TraceBank>> {
+        match Self::try_reserve(scenario, lead, reps)? {
+            Some(mut bank) => {
+                bank.ensure_reps(reps);
+                Ok(Some(bank))
+            }
+            None => Ok(None),
+        }
+    }
+
+    /// [`TraceBank::try_build`] without materializing anything yet:
+    /// the decline decision is made against `planned_reps` (the
+    /// caller's eventual budget), but the bank comes back empty so an
+    /// incremental consumer (the verify comparator's doubling) can
+    /// [`TraceBank::ensure_reps`] only as far as each round needs.
+    pub fn try_reserve(
+        scenario: &Scenario,
+        lead: f64,
+        planned_reps: u64,
+    ) -> anyhow::Result<Option<TraceBank>> {
+        let horizon = HORIZON_FACTOR * scenario.work;
+        if estimate_bytes(scenario, horizon, planned_reps) > MAX_RESIDENT_BYTES {
+            note_fallback_taken();
+            return Ok(None);
+        }
+        let gen = TraceGen::new(scenario, lead, scenario.seed, 0)?;
+        let bank = TraceBank {
+            seed: scenario.seed,
+            lead,
+            horizon,
+            preds_never_fire: scenario.predictor.never_fires(scenario.mu()),
+            faults: Vec::new(),
+            preds: Vec::new(),
+            trust: Vec::new(),
+            spans: Vec::new(),
+            gen,
+            accounted_bytes: 0,
+        };
+        BANKS_BUILT.fetch_add(1, Ordering::Relaxed);
+        Ok(Some(bank))
+    }
+
+    /// Re-target an existing allocation at a new scenario/lead/seed:
+    /// arenas are cleared but keep their capacity, like
+    /// `SimSession`/`TraceGen` resets. Replications must be re-ensured
+    /// afterwards.
+    pub fn reset_for(&mut self, scenario: &Scenario, lead: f64) -> anyhow::Result<()> {
+        self.gen = TraceGen::new(scenario, lead, scenario.seed, 0)?;
+        self.seed = scenario.seed;
+        self.lead = lead;
+        self.horizon = HORIZON_FACTOR * scenario.work;
+        self.preds_never_fire = scenario.predictor.never_fires(scenario.mu());
+        self.faults.clear();
+        self.preds.clear();
+        self.trust.clear();
+        self.spans.clear();
+        self.settle_bytes();
+        Ok(())
+    }
+
+    /// Materialize replications `spans.len()..reps` (no-op when the
+    /// bank already covers them). This is the extension hook the
+    /// verify comparator's replication doubling uses: earlier reps'
+    /// arenas are never regenerated.
+    pub fn ensure_reps(&mut self, reps: u64) {
+        while (self.spans.len() as u64) < reps {
+            let rep = self.spans.len() as u64;
+            self.gen.reset(self.seed, rep);
+            let fault_lo = self.faults.len();
+            loop {
+                // TraceGen's fault stream is infinite by construction.
+                let f = self.gen.next_fault().expect("generator fault streams are infinite");
+                if f.t > self.horizon {
+                    break;
+                }
+                self.faults.push(f);
+            }
+            let pred_lo = self.preds.len();
+            loop {
+                match self.gen.next_prediction() {
+                    None => break, // predictor never fires
+                    Some(p) if p.avail > self.horizon => break,
+                    Some(p) => self.preds.push(p),
+                }
+            }
+            // Pre-draw the trust uniforms from the exact stream the
+            // engine's own trust RNG would produce for this rep.
+            let mut rng = Pcg64::new(trust_seed(self.seed, rep), 0x7157);
+            for _ in pred_lo..self.preds.len() {
+                self.trust.push(rng.next_f64());
+            }
+            self.spans.push(RepSpan {
+                fault_lo: fault_lo as u32,
+                fault_hi: self.faults.len() as u32,
+                pred_lo: pred_lo as u32,
+                pred_hi: self.preds.len() as u32,
+            });
+        }
+        self.settle_bytes();
+    }
+
+    /// Replications currently materialized.
+    pub fn reps(&self) -> u64 {
+        self.spans.len() as u64
+    }
+
+    pub fn has_rep(&self, rep: u64) -> bool {
+        rep < self.spans.len() as u64
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// The proactive lead the bank's prediction stream was generated
+    /// with; a replaying session must require exactly this lead.
+    pub fn lead(&self) -> f64 {
+        self.lead
+    }
+
+    /// Materialization horizon (s): a replay whose engine asks past it
+    /// underruns and falls back to live generation.
+    pub fn horizon(&self) -> f64 {
+        self.horizon
+    }
+
+    /// Current arena footprint in bytes.
+    pub fn resident_bytes(&self) -> u64 {
+        (self.faults.capacity() * std::mem::size_of::<Fault>()
+            + self.preds.capacity() * std::mem::size_of::<Prediction>()
+            + self.trust.capacity() * std::mem::size_of::<f64>()
+            + self.spans.capacity() * std::mem::size_of::<RepSpan>()) as u64
+    }
+
+    /// Re-sync the global residency counter with this bank's actual
+    /// footprint.
+    fn settle_bytes(&mut self) {
+        let now = self.resident_bytes();
+        if now >= self.accounted_bytes {
+            BYTES_RESIDENT.fetch_add(now - self.accounted_bytes, Ordering::Relaxed);
+        } else {
+            BYTES_RESIDENT.fetch_sub(self.accounted_bytes - now, Ordering::Relaxed);
+        }
+        self.accounted_bytes = now;
+    }
+}
+
+impl Drop for TraceBank {
+    fn drop(&mut self) {
+        BYTES_RESIDENT.fetch_sub(self.accounted_bytes, Ordering::Relaxed);
+    }
+}
+
+/// Estimate the arena footprint of `reps` replications without
+/// sampling anything: expected faults per rep is `horizon / mu`, true
+/// predictions scale by recall, false ones by the false-prediction
+/// interval.
+fn estimate_bytes(scenario: &Scenario, horizon: f64, reps: u64) -> u64 {
+    let mu = scenario.mu();
+    let faults_per_rep = (horizon / mu.max(1.0)).max(1.0);
+    let false_interval = scenario.predictor.false_pred_interval(mu);
+    let false_per_rep =
+        if false_interval.is_finite() { horizon / false_interval.max(1.0) } else { 0.0 };
+    let preds_per_rep = faults_per_rep * scenario.predictor.recall + false_per_rep;
+    let per_rep = faults_per_rep * std::mem::size_of::<Fault>() as f64
+        + preds_per_rep
+            * (std::mem::size_of::<Prediction>() + std::mem::size_of::<f64>()) as f64;
+    (per_rep * reps as f64) as u64
+}
+
+// ---------------------------------------------------------------------------
+// ReplaySource
+// ---------------------------------------------------------------------------
+
+/// [`EventSource`] over one replication's bank spans. The engine is
+/// oblivious: faults and predictions arrive exactly as from the live
+/// generator, and the per-prediction trust uniform rides along through
+/// [`EventSource::next_trust_uniform`].
+#[derive(Debug, Clone)]
+pub struct ReplaySource {
+    bank: Arc<TraceBank>,
+    fi: usize,
+    fhi: usize,
+    pi: usize,
+    phi: usize,
+    /// Trust uniform of the most recently served prediction, consumed
+    /// by the engine's immediately following `next_trust_uniform`.
+    pending_trust: Option<f64>,
+    underrun: bool,
+}
+
+impl ReplaySource {
+    /// A source positioned on an empty span; call
+    /// [`ReplaySource::reset`] before use.
+    pub fn new(bank: Arc<TraceBank>) -> ReplaySource {
+        ReplaySource { bank, fi: 0, fhi: 0, pi: 0, phi: 0, pending_trust: None, underrun: false }
+    }
+
+    pub fn bank(&self) -> &Arc<TraceBank> {
+        &self.bank
+    }
+
+    /// Point the source at replication `rep`'s spans. Returns false
+    /// (leaving the source empty and underrun) when the bank does not
+    /// cover `rep` — the caller should fall back to live generation.
+    pub fn reset(&mut self, rep: u64) -> bool {
+        self.pending_trust = None;
+        match self.bank.spans.get(rep as usize) {
+            Some(span) => {
+                self.fi = span.fault_lo as usize;
+                self.fhi = span.fault_hi as usize;
+                self.pi = span.pred_lo as usize;
+                self.phi = span.pred_hi as usize;
+                self.underrun = false;
+                true
+            }
+            None => {
+                self.fi = 0;
+                self.fhi = 0;
+                self.pi = 0;
+                self.phi = 0;
+                self.underrun = true;
+                false
+            }
+        }
+    }
+
+    /// Whether the consumer asked past the materialized horizon: the
+    /// replayed outcome can no longer be trusted to match live
+    /// generation and the replication must be re-run live.
+    pub fn underrun(&self) -> bool {
+        self.underrun
+    }
+}
+
+impl EventSource for ReplaySource {
+    fn next_fault(&mut self) -> Option<Fault> {
+        if self.fi < self.fhi {
+            let f = self.bank.faults[self.fi];
+            self.fi += 1;
+            Some(f)
+        } else {
+            // Live fault streams never end: hitting the span end means
+            // the run outlived the horizon.
+            self.underrun = true;
+            None
+        }
+    }
+
+    fn next_prediction(&mut self) -> Option<Prediction> {
+        if self.pi < self.phi {
+            let p = self.bank.preds[self.pi];
+            self.pending_trust = Some(self.bank.trust[self.pi]);
+            self.pi += 1;
+            Some(p)
+        } else {
+            if !self.bank.preds_never_fire {
+                self.underrun = true;
+            }
+            None
+        }
+    }
+
+    fn next_trust_uniform(&mut self) -> Option<f64> {
+        self.pending_trust.take()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Predictor;
+
+    fn scenario(recall: f64, precision: f64, window: f64, dist: &str) -> Scenario {
+        let pred = if window > 0.0 {
+            Predictor::windowed(recall, precision, window)
+        } else {
+            Predictor::exact(recall, precision)
+        };
+        let mut s = Scenario::paper(1 << 16, pred);
+        s.fault_dist = dist.parse().expect("test dist spec");
+        s.work = 2.0e5;
+        s
+    }
+
+    #[test]
+    fn replay_matches_live_streams_bit_for_bit() {
+        let s = scenario(0.85, 0.82, 3000.0, "weibull:0.7");
+        let lead = s.platform.c;
+        let bank =
+            Arc::new(TraceBank::try_build(&s, lead, 3).unwrap().expect("small bank fits"));
+        for rep in [2u64, 0, 1] {
+            let mut live = TraceGen::new(&s, lead, s.seed, rep).unwrap();
+            let mut replay = ReplaySource::new(bank.clone());
+            assert!(replay.reset(rep));
+            // Every banked fault/prediction equals the live stream's
+            // prefix, in order, to the bit.
+            loop {
+                match replay.next_fault() {
+                    Some(f) => assert_eq!(Some(f), live.next_fault(), "rep {rep}"),
+                    None => break,
+                }
+            }
+            assert!(replay.underrun(), "finite spans end in underrun");
+            let mut replay = ReplaySource::new(bank.clone());
+            assert!(replay.reset(rep));
+            loop {
+                match replay.next_prediction() {
+                    Some(p) => {
+                        assert_eq!(Some(p), live.next_prediction(), "rep {rep}");
+                        assert!(replay.next_trust_uniform().is_some());
+                    }
+                    None => break,
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn trust_uniforms_match_the_engine_stream() {
+        let s = scenario(0.7, 0.4, 300.0, "exp");
+        let bank = TraceBank::try_build(&s, s.platform.c, 2).unwrap().unwrap();
+        for rep in [0u64, 1] {
+            let span = bank.spans[rep as usize];
+            let mut rng = Pcg64::new(trust_seed(s.seed, rep), 0x7157);
+            for k in span.pred_lo..span.pred_hi {
+                assert_eq!(bank.trust[k as usize].to_bits(), rng.next_f64().to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn missing_rep_is_a_fallback_not_a_panic() {
+        let s = scenario(0.85, 0.82, 0.0, "exp");
+        let bank = Arc::new(TraceBank::try_build(&s, s.platform.c, 2).unwrap().unwrap());
+        let mut replay = ReplaySource::new(bank);
+        assert!(!replay.reset(5));
+        assert!(replay.underrun());
+        assert!(replay.next_fault().is_none());
+    }
+
+    #[test]
+    fn never_firing_predictor_replays_none_without_underrun() {
+        let s = scenario(0.0, 1.0, 0.0, "exp");
+        let bank = Arc::new(TraceBank::try_build(&s, s.platform.c, 1).unwrap().unwrap());
+        let mut replay = ReplaySource::new(bank);
+        assert!(replay.reset(0));
+        assert!(replay.next_prediction().is_none());
+        assert!(!replay.underrun(), "empty predictor is faithful, not truncated");
+        assert!(replay.next_fault().is_some());
+    }
+
+    #[test]
+    fn ensure_reps_extends_without_touching_existing_spans() {
+        let s = scenario(0.85, 0.82, 300.0, "weibull:0.7");
+        let mut bank = TraceBank::try_build(&s, s.platform.c, 2).unwrap().unwrap();
+        let before: Vec<Fault> = bank.faults[..bank.spans[1].fault_hi as usize].to_vec();
+        bank.ensure_reps(5);
+        assert_eq!(bank.reps(), 5);
+        assert_eq!(&bank.faults[..before.len()], &before[..], "extension rewrote history");
+        // Extended reps match a from-scratch build.
+        let fresh = TraceBank::try_build(&s, s.platform.c, 5).unwrap().unwrap();
+        assert_eq!(bank.faults.len(), fresh.faults.len());
+        for (a, b) in bank.faults.iter().zip(&fresh.faults) {
+            assert_eq!(a, b);
+        }
+        for (a, b) in bank.trust.iter().zip(&fresh.trust) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn oversized_banks_decline() {
+        let mut s = scenario(0.85, 0.82, 0.0, "exp");
+        s.work = 1.0e9; // horizon 4e9 s, mu ~6e4 s: ~66k faults/rep
+        let declined = TraceBank::try_build(&s, s.platform.c, 1_000_000).unwrap();
+        assert!(declined.is_none(), "a terabyte-scale bank must decline");
+    }
+
+    #[test]
+    fn residency_counter_settles_on_drop() {
+        let s = scenario(0.85, 0.82, 0.0, "exp");
+        let bank = TraceBank::try_build(&s, s.platform.c, 4).unwrap().unwrap();
+        let own = bank.resident_bytes();
+        assert!(own > 0);
+        // Tests share the process-global counter, so the only race-free
+        // claims are monotone ones: while alive, the global footprint
+        // includes this bank's bytes...
+        assert!(counters().bytes_resident >= own);
+        let counted = bank.accounted_bytes;
+        assert_eq!(counted, own, "accounting drifted from the arena");
+        drop(bank);
+        // ...and the drop handler subtracted exactly what was charged
+        // (indirectly: building + dropping in a loop must not leak).
+        for _ in 0..3 {
+            let b = TraceBank::try_build(&s, s.platform.c, 4).unwrap().unwrap();
+            assert_eq!(b.accounted_bytes, b.resident_bytes());
+        }
+    }
+
+    #[test]
+    fn reset_for_reuses_the_allocation() {
+        let s1 = scenario(0.85, 0.82, 300.0, "weibull:0.7");
+        let mut s2 = scenario(0.7, 0.4, 0.0, "exp");
+        s2.seed = 99;
+        let mut bank = TraceBank::try_build(&s1, s1.platform.c, 3).unwrap().unwrap();
+        bank.reset_for(&s2, s2.platform.c).unwrap();
+        assert_eq!(bank.reps(), 0);
+        assert_eq!(bank.seed(), 99);
+        bank.ensure_reps(2);
+        let fresh = TraceBank::try_build(&s2, s2.platform.c, 2).unwrap().unwrap();
+        assert_eq!(bank.faults.len(), fresh.faults.len());
+        for (a, b) in bank.faults.iter().zip(&fresh.faults) {
+            assert_eq!(a, b);
+        }
+    }
+}

@@ -21,6 +21,7 @@ use crate::config::Scenario;
 use crate::dist::Dist;
 use crate::rng::{substream, Pcg64};
 
+#[derive(Debug)]
 pub struct TraceGen {
     // Monomorphized laws, parsed once per generator — never re-parsed
     // or boxed on the sampling hot path.
@@ -159,6 +160,9 @@ impl EventSource for TraceGen {
             let false_avail = self.peek_false().map(|p| p.avail).unwrap_or(f64::INFINITY);
             let true_avail = self.true_buf.front().map(|p| p.avail).unwrap_or(f64::INFINITY);
             let candidate = true_avail.min(false_avail);
+            // The from-parsed-dists form of `Predictor::never_fires`
+            // (a None false_dist is exactly an infinite false-pred
+            // interval): the only way this stream returns None.
             if candidate.is_infinite() && self.false_dist.is_none() && self.recall == 0.0 {
                 return None; // predictor never fires
             }

@@ -8,10 +8,12 @@
 //! p mu / (r (1-p)) — §5). Both streams are consumed lazily by the
 //! simulation engine through the [`EventSource`] trait.
 
+pub mod bank;
 mod event;
 mod gen;
 pub mod io;
 
+pub use bank::{BankCounters, ReplaySource, TraceBank};
 pub use event::{Fault, Prediction};
 pub use gen::TraceGen;
 
@@ -24,6 +26,17 @@ pub use gen::TraceGen;
 pub trait EventSource {
     fn next_fault(&mut self) -> Option<Fault>;
     fn next_prediction(&mut self) -> Option<Prediction>;
+
+    /// Pre-sampled trust uniform for the prediction most recently
+    /// returned by [`EventSource::next_prediction`]. `None` (the
+    /// default for live generators) tells the engine to draw from its
+    /// own per-replication trust RNG; replay sources
+    /// ([`bank::ReplaySource`]) return the uniform banked for that
+    /// prediction, which is bit-identical to what the engine's RNG
+    /// would have produced (see [`crate::rng::trust_seed`]).
+    fn next_trust_uniform(&mut self) -> Option<f64> {
+        None
+    }
 }
 
 /// Replay of pre-built vectors — test fixture and trace-file playback.

@@ -103,6 +103,78 @@ impl std::fmt::Display for Summary {
     }
 }
 
+/// Paired-difference aggregator for common-random-number comparisons:
+/// Welford statistics over per-replication deltas `a - b`, alongside
+/// the two marginal summaries.
+///
+/// When two candidates are replicated on the *same* traces (the
+/// [`crate::trace::TraceBank`] replay discipline), their wastes are
+/// strongly positively correlated, so the variance of the per-rep
+/// difference is far below `var(a) + var(b)` — the paired CI
+/// ([`PairedDiff::ci95_paired`]) is correspondingly narrower than the
+/// unpaired one ([`PairedDiff::ci95_unpaired`]) at the same
+/// replication count. The best-period pruning pass uses this to
+/// separate candidates with a fraction of the replications an
+/// independent-samples comparison would need.
+#[derive(Debug, Clone, Default)]
+pub struct PairedDiff {
+    a: Summary,
+    b: Summary,
+    diff: Summary,
+}
+
+impl PairedDiff {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one replication's paired observations.
+    pub fn push(&mut self, a: f64, b: f64) {
+        self.a.push(a);
+        self.b.push(b);
+        self.diff.push(a - b);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.diff.count()
+    }
+
+    /// Mean of the per-replication differences `a - b`.
+    pub fn mean_diff(&self) -> f64 {
+        self.diff.mean()
+    }
+
+    pub fn mean_a(&self) -> f64 {
+        self.a.mean()
+    }
+
+    pub fn mean_b(&self) -> f64 {
+        self.b.mean()
+    }
+
+    /// 95% CI half-width of the mean difference, using the *paired*
+    /// variance (the deltas' own spread).
+    pub fn ci95_paired(&self) -> f64 {
+        self.diff.ci95()
+    }
+
+    /// 95% CI half-width the same comparison would have if the two
+    /// samples were treated as independent: `1.96 * sqrt(se_a^2 + se_b^2)`.
+    pub fn ci95_unpaired(&self) -> f64 {
+        let (sa, sb) = (self.a.stderr(), self.b.stderr());
+        1.96 * (sa * sa + sb * sb).sqrt()
+    }
+
+    /// Merge a partial aggregator (parallel reduction).
+    pub fn merge(&self, other: &PairedDiff) -> PairedDiff {
+        PairedDiff {
+            a: self.a.merge(&other.a),
+            b: self.b.merge(&other.b),
+            diff: self.diff.merge(&other.diff),
+        }
+    }
+}
+
 /// Exact percentile of a sample (linear interpolation); used by the
 /// service latency metrics.
 pub fn percentile(sorted: &[f64], q: f64) -> f64 {
@@ -181,6 +253,49 @@ mod tests {
         assert!(approx_eq(percentile(&v, 0.0), 1.0, 1e-12));
         assert!(approx_eq(percentile(&v, 1.0), 5.0, 1e-12));
         assert!(approx_eq(percentile(&v, 0.25), 2.0, 1e-12));
+    }
+
+    #[test]
+    fn paired_diff_tracks_correlated_samples() {
+        // a and b share a large common component; the paired CI must
+        // collapse while the unpaired CI stays wide.
+        let mut pd = PairedDiff::new();
+        for i in 0..200 {
+            let common = ((i * 37 % 101) as f64) / 101.0; // shared "trace" noise
+            let a = 0.20 + common;
+            let b = 0.18 + common;
+            pd.push(a, b);
+        }
+        assert_eq!(pd.count(), 200);
+        assert!(approx_eq(pd.mean_diff(), 0.02, 1e-12));
+        assert!(approx_eq(pd.mean_a() - pd.mean_b(), pd.mean_diff(), 1e-12));
+        // The deltas are constant here, so the paired CI is ~0 while
+        // the unpaired one sees the full common-component variance.
+        assert!(pd.ci95_paired() < 1e-9, "paired {}", pd.ci95_paired());
+        assert!(pd.ci95_unpaired() > 0.01, "unpaired {}", pd.ci95_unpaired());
+    }
+
+    #[test]
+    fn paired_diff_merge_matches_sequential() {
+        let xs: Vec<(f64, f64)> =
+            (0..60).map(|i| ((i as f64).sin(), (i as f64).cos())).collect();
+        let mut full = PairedDiff::new();
+        for &(a, b) in &xs {
+            full.push(a, b);
+        }
+        let mut left = PairedDiff::new();
+        let mut right = PairedDiff::new();
+        for &(a, b) in &xs[..23] {
+            left.push(a, b);
+        }
+        for &(a, b) in &xs[23..] {
+            right.push(a, b);
+        }
+        let merged = left.merge(&right);
+        assert_eq!(merged.count(), full.count());
+        assert!(approx_eq(merged.mean_diff(), full.mean_diff(), 1e-12));
+        assert!(approx_eq(merged.ci95_paired(), full.ci95_paired(), 1e-12));
+        assert!(approx_eq(merged.ci95_unpaired(), full.ci95_unpaired(), 1e-12));
     }
 
     #[test]

@@ -17,10 +17,13 @@
 //! procedure is deterministic for a fixed `(reps0, budget, workers)` —
 //! the property the TCP-vs-in-process acceptance pin relies on.
 
+use std::sync::Arc;
+
 use super::grid::ConformanceCase;
 use super::oracle::{oracle_for, Domain};
 use crate::sim::{run_replication_range_with, ReplicationAgg, SimSession};
 use crate::strategies::resolve_policy;
+use crate::trace::TraceBank;
 
 /// Comparator tuning. `reps0` is the first batch; escalation doubles
 /// the total until it reaches `budget`.
@@ -109,19 +112,41 @@ fn classify(agg: &ReplicationAgg, band: (f64, f64)) -> Verdict {
 
 /// Judge one conformance case: oracle, replication batches with
 /// escalation, final verdict.
+///
+/// Replication batches replay a per-case [`TraceBank`] when one fits:
+/// each escalation round *extends* the bank to the new target (new
+/// reps are materialized once; earlier reps' arenas are untouched)
+/// instead of re-sampling anything — the common-random-numbers
+/// discipline applied to the doubling. Outcomes are bit-identical to
+/// the live path, so verdicts are unchanged by the bank's presence
+/// (underruns and oversized cases transparently run live).
 pub fn judge_case(case: &ConformanceCase, opts: &VerifyOptions) -> anyhow::Result<CaseVerdict> {
     let oracle = oracle_for(case)?;
     let rp = resolve_policy(&case.subject, &case.scenario)?;
     let reps0 = opts.reps0.max(2);
     let budget = opts.budget.max(reps0);
 
+    // Reserve the bank against the full escalation budget (a bank that
+    // would blow the arena cap at the deepest doubling is declined up
+    // front), but materialize lazily, one round at a time.
+    let lead = rp.policy.required_lead(rp.scenario.platform.c);
+    let mut bank = TraceBank::try_reserve(&rp.scenario, lead, budget)?;
+
     let mut agg = ReplicationAgg::default();
     let mut done = 0u64;
     let verdict = loop {
         let target = if done == 0 { reps0 } else { (done * 2).min(budget) };
-        let chunk = run_replication_range_with(done, target, opts.workers, || {
-            SimSession::from_policy(&rp.scenario, rp.policy)
+        if let Some(b) = &mut bank {
+            b.ensure_reps(target);
+        }
+        // Workers share the bank read-only for the round; it is handed
+        // back for extension once the round's sessions are gone.
+        let shared = bank.take().map(Arc::new);
+        let chunk = run_replication_range_with(done, target, opts.workers, || match &shared {
+            Some(b) => SimSession::replay(b.clone(), &rp.scenario, rp.policy),
+            None => SimSession::from_policy(&rp.scenario, rp.policy),
         })?;
+        bank = shared.and_then(|a| Arc::try_unwrap(a).ok());
         agg = agg.merge(chunk);
         done = target;
         let v = classify(&agg, oracle.band);

@@ -149,6 +149,7 @@ fn every_response_variant_round_trips() {
             reps: 10,
             candidates: 3,
             workers: 8,
+            reps_used: 24,
         }),
         JobResponse::Sweep(SweepResult {
             rows: vec![
@@ -181,6 +182,10 @@ fn every_response_variant_round_trips() {
             lat_p95_s: 0.01,
             lat_p99_s: 0.02,
             lat_n: 8,
+            banks_built: 2,
+            bank_replays: 1536,
+            bank_fallbacks: 3,
+            bank_bytes_resident: 1 << 20,
             batcher: Some(BatcherSnapshot { requests: 3, batches: 1, max_batch: 3 }),
         }),
         JobResponse::Stats(ServiceStats::default()),

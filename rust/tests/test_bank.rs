@@ -1,0 +1,177 @@
+//! Trace-bank CRN acceptance tests: replay must be bit-identical to
+//! live generation, and common random numbers must actually buy the
+//! variance reduction the sweep statistics claim.
+
+use std::sync::Arc;
+
+use ckptfp::api::{Executor, JobRequest, JobResponse, SimulateJob};
+use ckptfp::config::{Predictor, Scenario};
+use ckptfp::dist::DistSpec;
+use ckptfp::model::{Capping, StrategyKind};
+use ckptfp::sim::{Policy, SimSession};
+use ckptfp::strategies::{best_period_with, spec_for, BestPeriodOptions};
+use ckptfp::trace::TraceBank;
+use ckptfp::util::stats::PairedDiff;
+
+fn study(dist: DistSpec, predictor: Predictor) -> Scenario {
+    let mut s = Scenario::paper(1 << 16, predictor);
+    s.fault_dist = dist;
+    s.work = 2.0e5;
+    s
+}
+
+/// The acceptance golden: a replay-backed `best_period_with` returns
+/// bit-identical results to the live-generation path at a fixed seed,
+/// for Exponential and Weibull faults (with and without a predictor).
+#[test]
+fn best_period_replay_is_bit_identical_to_live_golden() {
+    let cases = [
+        (study(DistSpec::Exp, Predictor::none()), StrategyKind::Young),
+        (study(DistSpec::weibull(0.7), Predictor::windowed(0.85, 0.82, 300.0)), StrategyKind::NoCkptI),
+    ];
+    for (s, kind) in cases {
+        let base = spec_for(kind, &s, Capping::Uncapped);
+        let live = best_period_with(
+            &s,
+            &base,
+            8,
+            6,
+            &BestPeriodOptions { workers: 2, prune: false, replay: false },
+        )
+        .unwrap();
+        let replay = best_period_with(
+            &s,
+            &base,
+            8,
+            6,
+            &BestPeriodOptions { workers: 2, prune: false, replay: true },
+        )
+        .unwrap();
+        assert_eq!(live.t_r.to_bits(), replay.t_r.to_bits(), "{kind:?} winner period");
+        assert_eq!(live.waste.to_bits(), replay.waste.to_bits(), "{kind:?} winner waste");
+        assert_eq!(live.n_pruned, replay.n_pruned);
+        assert_eq!(live.reps_used, replay.reps_used);
+        for (i, (a, b)) in live.sweep.iter().zip(&replay.sweep).enumerate() {
+            assert_eq!(a.0.to_bits(), b.0.to_bits(), "{kind:?} sweep[{i}] period");
+            assert_eq!(a.1.to_bits(), b.1.to_bits(), "{kind:?} sweep[{i}] waste");
+        }
+    }
+}
+
+/// The CRN variance-reduction claim, measured: on the same replications
+/// of the same bank, the paired-difference CI between two adjacent
+/// candidate periods is strictly narrower than the unpaired CI.
+#[test]
+fn paired_ci_is_strictly_narrower_than_unpaired_on_shared_traces() {
+    let s = study(DistSpec::weibull(0.7), Predictor::windowed(0.85, 0.82, 300.0));
+    let base = spec_for(StrategyKind::NoCkptI, &s, Capping::Uncapped);
+    let c = s.platform.c;
+    let bank = Arc::new(
+        TraceBank::try_build(&s, base.required_lead(c), 40).unwrap().expect("bank fits"),
+    );
+    // Two adjacent candidates around the closed-form optimum.
+    let mut lo = base.clone();
+    lo.t_r *= 0.8;
+    let mut hi = base.clone();
+    hi.t_r *= 1.25;
+    let mut sa = SimSession::replay(bank.clone(), &s, Policy::from_spec(&lo, c)).unwrap();
+    let mut sb = SimSession::replay(bank, &s, Policy::from_spec(&hi, c)).unwrap();
+    let mut pd = PairedDiff::new();
+    for rep in 0..40 {
+        pd.push(sa.run(rep).waste(), sb.run(rep).waste());
+    }
+    assert_eq!(pd.count(), 40);
+    assert!(
+        pd.ci95_paired() < pd.ci95_unpaired(),
+        "paired {} must beat unpaired {}",
+        pd.ci95_paired(),
+        pd.ci95_unpaired()
+    );
+    // Not marginal, either: common random numbers on adjacent periods
+    // share most of the fault history, so the reduction is large.
+    assert!(
+        pd.ci95_paired() < 0.8 * pd.ci95_unpaired(),
+        "CRN reduction too small: paired {} vs unpaired {}",
+        pd.ci95_paired(),
+        pd.ci95_unpaired()
+    );
+}
+
+/// Pruned replay searches stay deterministic and honest about spend.
+#[test]
+fn pruned_replay_search_is_reproducible_and_reports_spend() {
+    let s = study(DistSpec::Exp, Predictor::none());
+    let base = spec_for(StrategyKind::Young, &s, Capping::Uncapped);
+    let opts = BestPeriodOptions { workers: 3, prune: true, replay: true };
+    let a = best_period_with(&s, &base, 12, 8, &opts).unwrap();
+    let b = best_period_with(&s, &base, 12, 8, &opts).unwrap();
+    assert_eq!(a.t_r, b.t_r);
+    assert_eq!(a.n_pruned, b.n_pruned);
+    assert_eq!(a.reps_used, b.reps_used);
+    assert_eq!(a.sweep, b.sweep);
+    assert!(a.reps_used <= 12 * 8, "spend cannot exceed the requested budget");
+    assert!(a.reps_used >= 8 * 3, "coarse pass covers the grid");
+    // Paired CIs vs the coarse leader came back for the CRN prune.
+    assert_eq!(a.paired_ci.len(), 8);
+    assert!(a.paired_ci.iter().any(|x| x.is_finite()));
+    for (x, y) in a.paired_ci.iter().zip(&b.paired_ci) {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+}
+
+/// The v2 stats surface exposes the bank reuse counters, and running a
+/// replay-backed search moves them.
+#[test]
+fn bank_counters_surface_through_stats() {
+    let exec = Executor::local();
+    let before = match exec.execute(&JobRequest::Stats) {
+        JobResponse::Stats(s) => s,
+        other => panic!("expected stats, got {other:?}"),
+    };
+    let s = study(DistSpec::Exp, Predictor::none());
+    let base = spec_for(StrategyKind::Young, &s, Capping::Uncapped);
+    best_period_with(
+        &s,
+        &base,
+        4,
+        4,
+        &BestPeriodOptions { workers: 2, prune: false, replay: true },
+    )
+    .unwrap();
+    let after = match exec.execute(&JobRequest::Stats) {
+        JobResponse::Stats(s) => s,
+        other => panic!("expected stats, got {other:?}"),
+    };
+    // Counters are process-global and other tests run concurrently, so
+    // assert monotone movement, not exact deltas.
+    assert!(after.banks_built > before.banks_built, "a bank was built");
+    assert!(
+        after.bank_replays >= before.bank_replays + 16,
+        "4 candidates x 4 reps replayed"
+    );
+    // And the coordinator-metrics bank snapshot mirrors the same
+    // process-global counters (per-instance Metrics stay untouched).
+    let snap = ckptfp::coordinator::bank_snapshot();
+    assert!(snap["bank.banks_built"] >= after.banks_built);
+    assert!(snap.contains_key("bank.replays_served"));
+    assert!(snap.contains_key("bank.fallbacks_taken"));
+    assert!(snap.contains_key("bank.bytes_resident"));
+    assert!(ckptfp::coordinator::Metrics::new().snapshot().is_empty());
+}
+
+/// Replay-backed Simulate through the executor is bit-identical to the
+/// classic path (the bank is an internal detail of best-period/verify;
+/// simulate stays live — this pins that nothing leaked).
+#[test]
+fn simulate_path_is_unchanged_by_the_bank_subsystem() {
+    let exec = Executor::local();
+    let mut s = study(DistSpec::Exp, Predictor::exact(0.85, 0.82));
+    s.seed = 77;
+    let mut job = SimulateJob::new(s.clone(), StrategyKind::ExactPrediction);
+    job.reps = 6;
+    job.workers = Some(2);
+    let a = exec.simulate(&job).unwrap();
+    let b = exec.simulate(&job).unwrap();
+    assert_eq!(a.mean_waste.to_bits(), b.mean_waste.to_bits());
+    assert_eq!(a.n_faults, b.n_faults);
+}

@@ -7,6 +7,11 @@ Walks the shared numeric leaves of the two perf recordings
 (`<bench>.<metric>` keys, schema ckptfp-perf-v1, see EXPERIMENTS.md
 §Perf), prints a markdown table of the deltas, and flags metrics that
 moved against their good direction by more than the noise threshold.
+New benches are picked up automatically once both runs record them —
+the trace-bank pair (`bank_replay_vs_live.*`, `best_period_crn.*`)
+keys its directions off the standard suffixes: `*_per_s`/`speedup`
+higher-better, `*_s` (incl. `bank_build_s`, `live_s`, `replay_s`)
+lower-better.
 
 Warn-only by design: the exit code is always 0. CI runs this as a
 bench-regression *comment*, not a gate — perf numbers on shared

@@ -136,6 +136,9 @@ BEST_PERIOD_PAYLOAD = {
     "waste": 0.117,
     "n_pruned": 3,
     "reps": 10,
+    # Additive: replications actually simulated after pruning (the
+    # honest spend; requested budget would have been reps*candidates).
+    "reps_used": 24,
     "candidates": 3,
     "workers": 8,
     "sweep": [[1000, 0.2], [2000, 0.15], [4000, 0.117]],
@@ -180,13 +183,20 @@ STATS_PAYLOAD = {
     "lat_p95_s": 0.01,
     "lat_p99_s": 0.02,
     "lat_n": 8,
+    # Additive trace-bank reuse counters (v2 only; the legacy stats
+    # shape below carries none of these).
+    "banks_built": 2,
+    "bank_replays": 1536,
+    "bank_fallbacks": 3,
+    "bank_bytes_resident": 1048576,
     "batcher": {"requests": 3, "batches": 1, "max_batch": 3},
 }
 
 STATS_DEFAULT = {
     "requests": 0, "errors": 0, "plans": 0, "simulates": 0, "best_periods": 0,
     "sweeps": 0, "verifies": 0, "lat_p50_s": 0, "lat_p95_s": 0, "lat_p99_s": 0,
-    "lat_n": 0,
+    "lat_n": 0, "banks_built": 0, "bank_replays": 0, "bank_fallbacks": 0,
+    "bank_bytes_resident": 0,
 }
 
 RESPONSES_V2 = [
