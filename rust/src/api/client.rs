@@ -3,37 +3,140 @@
 //! request in flight per connection (the protocol is strictly
 //! line-for-line); open more clients for concurrency — the service is
 //! one thread per connection.
+//!
+//! The client is resilient by default: connects are bounded by
+//! [`ClientConfig::connect_timeout`], reads by
+//! [`ClientConfig::read_timeout`], and transport failures retry with
+//! seeded exponential backoff ([`ClientConfig::retries`] attempts,
+//! reconnecting each time). Retries re-send the request, which is safe
+//! here because every job is a pure computation — callers wiring this
+//! to side-effecting jobs should set `retries: 0`.
 
 use std::io::{BufRead, BufReader, Write};
-use std::net::TcpStream;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
 
 use super::types::*;
 use super::wire;
+use crate::rng::Pcg64;
+
+/// Process-wide count of transport-level retries across all
+/// [`ServiceClient`]s — surfaced as `client_retries` in
+/// [`ServiceStats`] so a service that also acts as a client (planner
+/// fan-out) reports its own flakiness.
+static CLIENT_RETRIES: AtomicU64 = AtomicU64::new(0);
+
+pub fn client_retries() -> u64 {
+    CLIENT_RETRIES.load(Ordering::Relaxed)
+}
+
+/// Timeouts and retry policy for a [`ServiceClient`].
+#[derive(Debug, Clone)]
+pub struct ClientConfig {
+    /// Bound on establishing the TCP connection.
+    pub connect_timeout: Duration,
+    /// Bound on waiting for a response line; expiry is a transport
+    /// error (and thus retried), not a hang.
+    pub read_timeout: Duration,
+    /// Transport-level retries after the first attempt. `0` disables.
+    pub retries: u32,
+    /// First backoff sleep; doubles per retry, with seeded jitter in
+    /// `[0.5, 1.0)` of the doubled value.
+    pub backoff_base: Duration,
+    /// Seed for the jitter stream — fixed seed, reproducible schedule.
+    pub seed: u64,
+}
+
+impl Default for ClientConfig {
+    fn default() -> Self {
+        ClientConfig {
+            connect_timeout: Duration::from_secs(5),
+            read_timeout: Duration::from_secs(30),
+            retries: 2,
+            backoff_base: Duration::from_millis(50),
+            seed: 0,
+        }
+    }
+}
 
 pub struct ServiceClient {
+    addr: String,
+    cfg: ClientConfig,
+    rng: Pcg64,
     reader: BufReader<TcpStream>,
     writer: TcpStream,
 }
 
 impl ServiceClient {
     pub fn connect(addr: &str) -> anyhow::Result<ServiceClient> {
-        let stream = TcpStream::connect(addr)?;
-        let writer = stream.try_clone()?;
-        Ok(ServiceClient { reader: BufReader::new(stream), writer })
+        ServiceClient::connect_with(addr, ClientConfig::default())
+    }
+
+    pub fn connect_with(addr: &str, cfg: ClientConfig) -> anyhow::Result<ServiceClient> {
+        let (reader, writer) = open(addr, &cfg)?;
+        let rng = Pcg64::new(cfg.seed, 0x636c69);
+        Ok(ServiceClient { addr: addr.to_string(), cfg, rng, reader, writer })
     }
 
     /// Send one job, wait for its response. Server-reported failures
-    /// come back as `Ok(JobResponse::Error(_))`; transport failures as
-    /// `Err`.
+    /// come back as `Ok(JobResponse::Error(_))`; transport failures
+    /// retry per [`ClientConfig`] and surface as `Err` once exhausted.
     pub fn call(&mut self, req: &JobRequest) -> anyhow::Result<JobResponse> {
+        let mut last_err = None;
+        for attempt in 0..=self.cfg.retries {
+            if attempt > 0 {
+                CLIENT_RETRIES.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(self.backoff(attempt));
+                match open(&self.addr, &self.cfg) {
+                    Ok((reader, writer)) => {
+                        self.reader = reader;
+                        self.writer = writer;
+                    }
+                    Err(e) => {
+                        last_err = Some(e);
+                        continue;
+                    }
+                }
+            }
+            match self.transact(req) {
+                Ok(resp) => return Ok(resp),
+                Err(e) => last_err = Some(e),
+            }
+        }
+        let e = last_err.expect("at least one attempt always runs");
+        Err(e.context(format!("request failed after {} retries", self.cfg.retries)))
+    }
+
+    fn transact(&mut self, req: &JobRequest) -> anyhow::Result<JobResponse> {
         let line = wire::encode_request(req);
         self.writer.write_all(line.as_bytes())?;
         self.writer.write_all(b"\n")?;
         self.writer.flush()?;
         let mut resp = String::new();
-        self.reader.read_line(&mut resp)?;
+        self.reader.read_line(&mut resp).map_err(|e| {
+            if matches!(
+                e.kind(),
+                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+            ) {
+                anyhow::anyhow!(
+                    "no response within the {:.1}s read timeout",
+                    self.cfg.read_timeout.as_secs_f64()
+                )
+            } else {
+                e.into()
+            }
+        })?;
         anyhow::ensure!(!resp.is_empty(), "server closed the connection");
         wire::decode_response(resp.trim()).map_err(Into::into)
+    }
+
+    /// Exponential backoff with multiplicative jitter in `[0.5, 1.0)`,
+    /// deterministic for a fixed [`ClientConfig::seed`].
+    fn backoff(&mut self, attempt: u32) -> Duration {
+        let doubled = self.cfg.backoff_base.saturating_mul(1u32 << (attempt - 1).min(16));
+        let jitter = 0.5 + 0.5 * self.rng.next_f64();
+        Duration::from_secs_f64(doubled.as_secs_f64() * jitter)
     }
 
     pub fn plan(&mut self, job: PlanJob) -> anyhow::Result<PlanResult> {
@@ -89,6 +192,116 @@ impl ServiceClient {
             JobResponse::Pong => Ok(()),
             JobResponse::Error(e) => Err(e.into()),
             other => anyhow::bail!("unexpected response to ping: {other:?}"),
+        }
+    }
+}
+
+/// Open one bounded connection: resolve, connect with the configured
+/// timeout (first address that answers wins), arm the read timeout.
+fn open(
+    addr: &str,
+    cfg: &ClientConfig,
+) -> anyhow::Result<(BufReader<TcpStream>, TcpStream)> {
+    let addrs = addr
+        .to_socket_addrs()
+        .map_err(|e| anyhow::anyhow!("resolving {addr}: {e}"))?;
+    let mut last_err = None;
+    let mut stream = None;
+    for sa in addrs {
+        match TcpStream::connect_timeout(&sa, cfg.connect_timeout) {
+            Ok(s) => {
+                stream = Some(s);
+                break;
+            }
+            Err(e) => last_err = Some(e),
+        }
+    }
+    let stream = match stream {
+        Some(s) => s,
+        None => match last_err {
+            Some(e) => anyhow::bail!("connecting to {addr}: {e}"),
+            None => anyhow::bail!("{addr} resolved to no addresses"),
+        },
+    };
+    if cfg.read_timeout > Duration::ZERO {
+        stream.set_read_timeout(Some(cfg.read_timeout))?;
+    }
+    let writer = stream.try_clone()?;
+    Ok((BufReader::new(stream), writer))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    #[test]
+    fn connect_timeout_is_a_clear_error() {
+        // Connecting to an address nobody listens on fails within the
+        // budget, naming the address.
+        let cfg = ClientConfig {
+            connect_timeout: Duration::from_millis(200),
+            retries: 0,
+            ..Default::default()
+        };
+        // A bound-then-dropped listener yields a port that refuses.
+        let port = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().port()
+        };
+        let err = ServiceClient::connect_with(&format!("127.0.0.1:{port}"), cfg).unwrap_err();
+        assert!(err.to_string().contains("connecting to"), "{err:#}");
+    }
+
+    #[test]
+    fn transport_failure_retries_reconnect_and_recover() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            // First connection: accept and hang up before answering.
+            drop(listener.accept().unwrap());
+            // Second connection (the retry): answer one request.
+            let (s, _) = listener.accept().unwrap();
+            let mut r = BufReader::new(s.try_clone().unwrap());
+            let mut line = String::new();
+            r.read_line(&mut line).unwrap();
+            let req = wire::decode_request(line.trim()).unwrap();
+            assert!(!req.legacy);
+            let resp = wire::encode_response(&JobResponse::Pong, false);
+            let mut w = s;
+            w.write_all(resp.as_bytes()).unwrap();
+            w.write_all(b"\n").unwrap();
+        });
+        let cfg = ClientConfig {
+            retries: 2,
+            backoff_base: Duration::from_millis(5),
+            read_timeout: Duration::from_secs(5),
+            ..Default::default()
+        };
+        let before = client_retries();
+        let mut client = ServiceClient::connect_with(&addr, cfg).unwrap();
+        let resp = client.call(&JobRequest::Ping).unwrap();
+        assert_eq!(resp, JobResponse::Pong);
+        assert!(client_retries() > before, "the recovery must count as a retry");
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn backoff_schedule_is_seeded_and_bounded() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let mk = || {
+            // Keep the listener alive so connects succeed; nothing reads.
+            let cfg = ClientConfig { seed: 7, ..Default::default() };
+            ServiceClient::connect_with(&addr, cfg).unwrap()
+        };
+        let mut a = mk();
+        let mut b = mk();
+        for attempt in 1..=3u32 {
+            let da = a.backoff(attempt);
+            assert_eq!(da, b.backoff(attempt), "same seed, same schedule");
+            let doubled = Duration::from_millis(50).saturating_mul(1 << (attempt - 1));
+            assert!(da >= doubled / 2 && da < doubled, "attempt {attempt}: {da:?}");
         }
     }
 }

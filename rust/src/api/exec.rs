@@ -12,13 +12,14 @@
 //!   the experiment harness, at the same throughput.
 
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use super::types::*;
-use crate::coordinator::{available_workers, Batcher, Metrics};
+use crate::coordinator::{available_workers, Batcher, Metrics, PoolPanic};
 use crate::experiments::scenario_for;
 use crate::model::{self, Params, StrategyKind};
-use crate::sim::{run_replications_parallel, run_replications_parallel_with, SimSession};
+use crate::sim::{run_replication_range_with_cancel, SimSession};
+use crate::util::cancel::CancelToken;
 use crate::strategies::{
     best_period_with, best_policy_with, resolve_policy, spec_for, BestPeriodOptions, PolicySpec,
 };
@@ -34,6 +35,13 @@ pub struct ExecutorConfig {
     /// Default best-period grid size when a job asks for
     /// `candidates = 0`.
     pub bp_candidates_default: u64,
+    /// Per-request wall-clock budget for simulation jobs, enforced
+    /// cooperatively between replications. `None` disables the guard.
+    pub deadline: Option<Duration>,
+    /// Hard cap on replications per `simulate` job; over-cap requests
+    /// are rejected up front as `bad_request` instead of admitted and
+    /// later killed by the deadline.
+    pub reps_cap: u64,
 }
 
 impl Default for ExecutorConfig {
@@ -42,6 +50,8 @@ impl Default for ExecutorConfig {
             workers: available_workers(),
             reps_default: 100,
             bp_candidates_default: 16,
+            deadline: None,
+            reps_cap: 10_000_000,
         }
     }
 }
@@ -83,12 +93,24 @@ impl Executor {
     /// Execute any job; failures become [`JobResponse::Error`], never a
     /// panic or a dropped connection.
     pub fn execute(&self, req: &JobRequest) -> JobResponse {
+        self.execute_cancellable(req, &CancelToken::unbounded())
+    }
+
+    /// [`Executor::execute`] under a caller-supplied [`CancelToken`]
+    /// (the service threads its shutdown flag through here). The
+    /// configured per-request deadline, if any, is layered on top as a
+    /// child token, so either budget expiry or shutdown stops a
+    /// long-running simulation between replications.
+    pub fn execute_cancellable(&self, req: &JobRequest, parent: &CancelToken) -> JobResponse {
         let started = Instant::now();
         self.metrics.incr("requests", 1);
         self.metrics.incr(req.op(), 1);
+        let token = parent.child_with_deadline(self.cfg.deadline);
         let resp = match req {
             JobRequest::Plan(job) => self.plan(job).map(JobResponse::Plan),
-            JobRequest::Simulate(job) => self.simulate(job).map(JobResponse::Simulate),
+            JobRequest::Simulate(job) => {
+                self.simulate_cancellable(job, &token).map(JobResponse::Simulate)
+            }
             JobRequest::BestPeriod(job) => self.best_period(job).map(JobResponse::BestPeriod),
             JobRequest::Sweep(job) => self.sweep(job).map(JobResponse::Sweep),
             JobRequest::Verify(job) => self.verify(job).map(JobResponse::Verify),
@@ -98,6 +120,9 @@ impl Executor {
         self.metrics.observe_latency(started.elapsed().as_secs_f64());
         resp.unwrap_or_else(|e| {
             self.metrics.incr("errors", 1);
+            if e.code == ErrorCode::DeadlineExceeded {
+                self.metrics.incr("service.deadline_exceeded", 1);
+            }
             JobResponse::Error(e)
         })
     }
@@ -107,6 +132,32 @@ impl Executor {
     pub fn note_rejected(&self) {
         self.metrics.incr("requests", 1);
         self.metrics.incr("errors", 1);
+    }
+
+    /// Count a request the service refused at the admission gate, so
+    /// `stats` distinguishes shed load from failed work.
+    pub fn note_overloaded(&self) {
+        self.metrics.incr("requests", 1);
+        self.metrics.incr("errors", 1);
+        self.metrics.incr("service.rejected_overloaded", 1);
+    }
+
+    /// Count a panic the service contained at a request or connection
+    /// boundary (outside [`Executor::execute`]'s own error mapping).
+    pub fn note_panic_contained(&self) {
+        self.metrics.incr("service.panics_contained", 1);
+    }
+
+    /// Map a pool-layer failure: a contained worker panic becomes
+    /// `internal` (and is counted), anything else keeps the existing
+    /// `bad_request` mapping for validation errors.
+    fn classify_pool_error(&self, e: anyhow::Error) -> ApiError {
+        if let Some(pp) = e.downcast_ref::<PoolPanic>() {
+            self.metrics.incr("service.panics_contained", 1);
+            ApiError::new(ErrorCode::Internal, format!("replication worker panicked: {pp}"))
+        } else {
+            ApiError::from_invalid(e)
+        }
     }
 
     pub fn plan(&self, job: &PlanJob) -> Result<PlanResult, ApiError> {
@@ -157,42 +208,71 @@ impl Executor {
     }
 
     pub fn simulate(&self, job: &SimulateJob) -> Result<SimulateResult, ApiError> {
+        self.simulate_cancellable(job, &CancelToken::unbounded())
+    }
+
+    /// [`Executor::simulate`] under a [`CancelToken`]: replications stop
+    /// folding once the token trips. A tripped *deadline* with work left
+    /// over becomes a structured `deadline_exceeded` error reporting the
+    /// partial progress; a tripped shutdown flag returns the partial
+    /// aggregate as-is (the drain path wants whatever finished).
+    pub fn simulate_cancellable(
+        &self,
+        job: &SimulateJob,
+        cancel: &CancelToken,
+    ) -> Result<SimulateResult, ApiError> {
         let workers = self.resolve_workers(job.workers);
         let reps = if job.reps == 0 { self.cfg.reps_default } else { job.reps };
-        let report = match &job.policy {
+        if reps > self.cfg.reps_cap {
+            return Err(ApiError::bad_request(format!(
+                "reps = {reps} exceeds the service cap of {} replications",
+                self.cfg.reps_cap
+            )));
+        }
+        let (name, agg) = match &job.policy {
             // The policy layer: resolve against the scenario and run on
             // the same pool path. A Strategy(...) policy is
             // bit-identical to the classic strategy field (pinned in
             // tests/test_policies.rs).
             Some(pspec) => {
                 let rp = resolve_policy(pspec, &job.scenario).map_err(ApiError::from_invalid)?;
-                run_replications_parallel_with(&rp.name, reps, workers, || {
+                let agg = run_replication_range_with_cancel(0, reps, workers, cancel, || {
                     SimSession::from_policy(&rp.scenario, rp.policy)
                 })
-                .map_err(ApiError::from_invalid)?
+                .map_err(|e| self.classify_pool_error(e))?;
+                (rp.name, agg)
             }
             // EXACTPREDICTION runs against the exact-date variant of the
             // trace, per the §5 protocol — same rule as the experiments.
             None => {
                 let s = scenario_for(job.strategy, &job.scenario);
                 let spec = spec_for(job.strategy, &s, model::Capping::Uncapped);
-                run_replications_parallel(&s, &spec, reps, workers)
-                    .map_err(ApiError::from_invalid)?
+                let agg = run_replication_range_with_cancel(0, reps, workers, cancel, || {
+                    SimSession::new(&s, &spec)
+                })
+                .map_err(|e| self.classify_pool_error(e))?;
+                (spec.name, agg)
             }
         };
+        if cancel.deadline_exceeded() && agg.n_reps < reps {
+            return Err(ApiError::deadline_exceeded(format!(
+                "simulate finished {} of {reps} replications before the deadline",
+                agg.n_reps
+            )));
+        }
         Ok(SimulateResult {
-            strategy: report.strategy,
+            strategy: name,
             reps,
             workers: workers as u64,
-            mean_waste: report.agg.waste.mean(),
-            waste_ci95: report.agg.waste.ci95(),
-            mean_makespan: report.agg.makespan.mean(),
-            completion_rate: report.agg.completion_rate(),
-            n_faults: report.agg.n_faults,
-            n_preds: report.agg.n_preds,
-            n_ckpts: report.agg.n_ckpts,
-            n_proactive_ckpts: report.agg.n_proactive_ckpts,
-            sim_seconds: report.agg.sim_seconds,
+            mean_waste: agg.waste.mean(),
+            waste_ci95: agg.waste.ci95(),
+            mean_makespan: agg.makespan.mean(),
+            completion_rate: agg.completion_rate(),
+            n_faults: agg.n_faults,
+            n_preds: agg.n_preds,
+            n_ckpts: agg.n_ckpts,
+            n_proactive_ckpts: agg.n_proactive_ckpts,
+            sim_seconds: agg.sim_seconds,
         })
     }
 
@@ -309,6 +389,10 @@ impl Executor {
             bank_replays: bank.replays_served,
             bank_fallbacks: bank.fallbacks_taken,
             bank_bytes_resident: bank.bytes_resident,
+            rejected_overloaded: self.metrics.get("service.rejected_overloaded"),
+            deadline_exceeded: self.metrics.get("service.deadline_exceeded"),
+            panics_contained: self.metrics.get("service.panics_contained"),
+            client_retries: super::client::client_retries(),
             batcher: self.batcher.as_ref().map(|b| {
                 let s = b.stats();
                 BatcherSnapshot {
@@ -334,6 +418,7 @@ mod tests {
     use crate::config::{Predictor, Scenario};
     use crate::dist::DistSpec;
     use crate::model::Capping;
+    use crate::sim::run_replications_parallel;
 
     fn small_scenario() -> Scenario {
         let mut s = Scenario::paper(1 << 16, Predictor::exact(0.85, 0.82));
@@ -505,6 +590,66 @@ mod tests {
         // empty (vacuously green) report.
         job.policy = Some(PolicySpec::AdaptivePeriod { gain: 9.0 });
         assert_eq!(exec.verify(&job).unwrap_err().code, ErrorCode::BadRequest);
+    }
+
+    #[test]
+    fn simulate_rejects_over_cap_reps() {
+        let exec = Executor::new(ExecutorConfig { reps_cap: 10, ..Default::default() });
+        let mut job = SimulateJob::new(small_scenario(), StrategyKind::Young);
+        job.reps = 11;
+        let err = exec.simulate(&job).unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadRequest);
+        assert!(err.message.contains("cap"), "{}", err.message);
+        job.reps = 10;
+        assert!(exec.simulate(&job).is_ok());
+    }
+
+    #[test]
+    fn expired_deadline_reports_partial_progress() {
+        // A zero wall-clock budget trips before the first replication,
+        // so the guard fires deterministically regardless of host speed.
+        let exec = Executor::new(ExecutorConfig {
+            deadline: Some(std::time::Duration::ZERO),
+            ..Default::default()
+        });
+        let mut job = SimulateJob::new(small_scenario(), StrategyKind::Young);
+        job.reps = 4;
+        match exec.execute(&JobRequest::Simulate(job)) {
+            JobResponse::Error(e) => {
+                assert_eq!(e.code, ErrorCode::DeadlineExceeded);
+                assert!(e.message.contains("0 of 4"), "{}", e.message);
+            }
+            other => panic!("expected deadline error, got {other:?}"),
+        }
+        let stats = exec.stats();
+        assert_eq!(stats.deadline_exceeded, 1);
+        assert_eq!(stats.errors, 1);
+    }
+
+    #[test]
+    fn shutdown_flag_returns_partial_results_not_an_error() {
+        // A tripped shutdown flag (no deadline) is a drain, not a
+        // failure: the partial aggregate comes back as a success.
+        let exec = Executor::local();
+        let flag = Arc::new(std::sync::atomic::AtomicBool::new(true));
+        let mut job = SimulateJob::new(small_scenario(), StrategyKind::Young);
+        job.reps = 4;
+        let res = exec
+            .simulate_cancellable(&job, &CancelToken::with_flag(flag))
+            .unwrap();
+        assert_eq!(res.reps, 4);
+        assert_eq!(res.n_faults, 0, "no replication ran under a pre-tripped flag");
+    }
+
+    #[test]
+    fn overload_notes_show_up_in_stats() {
+        let exec = Executor::local();
+        exec.note_overloaded();
+        exec.note_overloaded();
+        let stats = exec.stats();
+        assert_eq!(stats.rejected_overloaded, 2);
+        assert_eq!(stats.requests, 2, "a shed request still counts as a request");
+        assert_eq!(stats.errors, 2);
     }
 
     #[test]

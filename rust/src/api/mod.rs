@@ -33,6 +33,6 @@ mod exec;
 pub mod types;
 pub mod wire;
 
-pub use client::ServiceClient;
+pub use client::{client_retries, ClientConfig, ServiceClient};
 pub use exec::{Executor, ExecutorConfig};
 pub use types::*;

@@ -282,6 +282,15 @@ pub struct ServiceStats {
     pub bank_replays: u64,
     pub bank_fallbacks: u64,
     pub bank_bytes_resident: u64,
+    /// Robustness counters (additive v2 fields): requests rejected by
+    /// admission control, jobs that ran out of wall-clock budget,
+    /// worker/connection panics contained as `internal` errors, and
+    /// transport retries performed by [`crate::api::ServiceClient`]s in
+    /// this process.
+    pub rejected_overloaded: u64,
+    pub deadline_exceeded: u64,
+    pub panics_contained: u64,
+    pub client_retries: u64,
     /// Present only when the service runs an HLO batcher.
     pub batcher: Option<BatcherSnapshot>,
 }
@@ -302,6 +311,13 @@ pub enum ErrorCode {
     Unsupported,
     /// The backend failed while executing a valid job.
     Internal,
+    /// The service is at its admission limits; retry after the hinted
+    /// delay (additive v2 code, also answered in the v1 dialect).
+    Overloaded,
+    /// The job's wall-clock budget expired before it finished; the
+    /// message names how far it got. Retrying with a larger deadline or
+    /// fewer reps is safe — jobs are pure.
+    DeadlineExceeded,
 }
 
 impl ErrorCode {
@@ -313,6 +329,8 @@ impl ErrorCode {
             ErrorCode::BadRequest => "bad_request",
             ErrorCode::Unsupported => "unsupported",
             ErrorCode::Internal => "internal",
+            ErrorCode::Overloaded => "overloaded",
+            ErrorCode::DeadlineExceeded => "deadline_exceeded",
         }
     }
 
@@ -325,6 +343,8 @@ impl ErrorCode {
             "unknown_op" => ErrorCode::UnknownOp,
             "bad_request" => ErrorCode::BadRequest,
             "unsupported" => ErrorCode::Unsupported,
+            "overloaded" => ErrorCode::Overloaded,
+            "deadline_exceeded" => ErrorCode::DeadlineExceeded,
             _ => ErrorCode::Internal,
         }
     }
@@ -335,11 +355,14 @@ impl ErrorCode {
 pub struct ApiError {
     pub code: ErrorCode,
     pub message: String,
+    /// Retry hint in milliseconds (additive v2 field, carried only by
+    /// `overloaded` rejections today).
+    pub retry_after_ms: Option<u64>,
 }
 
 impl ApiError {
     pub fn new(code: ErrorCode, message: impl Into<String>) -> ApiError {
-        ApiError { code, message: message.into() }
+        ApiError { code, message: message.into(), retry_after_ms: None }
     }
 
     pub fn bad_request(message: impl Into<String>) -> ApiError {
@@ -352,6 +375,18 @@ impl ApiError {
 
     pub fn unknown_op(op: &str) -> ApiError {
         ApiError::new(ErrorCode::UnknownOp, format!("unknown op '{op}'"))
+    }
+
+    /// An admission-control rejection with a retry hint.
+    pub fn overloaded(message: impl Into<String>, retry_after_ms: u64) -> ApiError {
+        let mut e = ApiError::new(ErrorCode::Overloaded, message);
+        e.retry_after_ms = Some(retry_after_ms);
+        e
+    }
+
+    /// A deadline expiry; `message` should say how far the job got.
+    pub fn deadline_exceeded(message: impl Into<String>) -> ApiError {
+        ApiError::new(ErrorCode::DeadlineExceeded, message)
     }
 
     /// Wrap a validation error, keeping the full anyhow context chain.
@@ -386,10 +421,20 @@ mod tests {
             ErrorCode::BadRequest,
             ErrorCode::Unsupported,
             ErrorCode::Internal,
+            ErrorCode::Overloaded,
+            ErrorCode::DeadlineExceeded,
         ] {
             assert_eq!(ErrorCode::parse(code.as_str()), code);
         }
         assert_eq!(ErrorCode::parse("some_future_code"), ErrorCode::Internal);
+    }
+
+    #[test]
+    fn overloaded_carries_a_retry_hint() {
+        let e = ApiError::overloaded("at capacity", 250);
+        assert_eq!(e.code, ErrorCode::Overloaded);
+        assert_eq!(e.retry_after_ms, Some(250));
+        assert_eq!(ApiError::deadline_exceeded("40/100 reps").retry_after_ms, None);
     }
 
     #[test]

@@ -23,6 +23,12 @@ use crate::verify::{self, GridKind};
 /// The protocol version this build speaks natively.
 pub const PROTOCOL_VERSION: f64 = 2.0;
 
+/// Maximum accepted request-line length (bytes, excluding the newline).
+/// Longer lines are rejected with `bad_request` before any parsing —
+/// a guard against hostile or broken peers streaming unbounded bytes
+/// into the decoder. 1 MiB is ~100x the largest legitimate job line.
+pub const MAX_LINE_BYTES: usize = 1 << 20;
+
 /// A decoded request plus the dialect it arrived in: legacy (v1)
 /// requests must be answered in the legacy response shape.
 #[derive(Debug, Clone, PartialEq)]
@@ -37,6 +43,13 @@ pub struct Decoded {
 
 /// Decode one request line (either dialect).
 pub fn decode_request(line: &str) -> Result<Decoded, ApiError> {
+    if line.len() > MAX_LINE_BYTES {
+        return Err(ApiError::bad_request(format!(
+            "request line of {} bytes exceeds the {} byte limit",
+            line.len(),
+            MAX_LINE_BYTES
+        )));
+    }
     let v = parse(line).map_err(|e| ApiError::invalid_json(format!("{e:#}")))?;
     if !matches!(v, Json::Obj(_)) {
         return Err(ApiError::bad_request("request must be a JSON object"));
@@ -245,6 +258,11 @@ pub fn encode_response(resp: &JobResponse, legacy: bool) -> String {
             fields.push(("ok", Json::Bool(false)));
             fields.push(("code", Json::Str(e.code.as_str().into())));
             fields.push(("error", Json::Str(e.message.clone())));
+            // Additive in both dialects: only new codes carry it, so v1
+            // response shapes for pre-existing errors are unchanged.
+            if let Some(ms) = e.retry_after_ms {
+                fields.push(("retry_after_ms", Json::Num(ms as f64)));
+            }
         }
         JobResponse::Pong => {
             fields.push(("ok", Json::Bool(true)));
@@ -384,6 +402,10 @@ pub fn encode_response(resp: &JobResponse, legacy: bool) -> String {
                     ("bank_replays", Json::Num(s.bank_replays as f64)),
                     ("bank_fallbacks", Json::Num(s.bank_fallbacks as f64)),
                     ("bank_bytes_resident", Json::Num(s.bank_bytes_resident as f64)),
+                    ("rejected_overloaded", Json::Num(s.rejected_overloaded as f64)),
+                    ("deadline_exceeded", Json::Num(s.deadline_exceeded as f64)),
+                    ("panics_contained", Json::Num(s.panics_contained as f64)),
+                    ("client_retries", Json::Num(s.client_retries as f64)),
                 ]);
                 if let Some(b) = &s.batcher {
                     fields.push((
@@ -434,7 +456,8 @@ pub fn decode_response(line: &str) -> Result<JobResponse, ApiError> {
             let code = ErrorCode::parse(v.get("code").and_then(Json::as_str).unwrap_or(""));
             let message =
                 v.get("error").and_then(Json::as_str).unwrap_or("unknown error").to_string();
-            return Ok(JobResponse::Error(ApiError { code, message }));
+            let retry_after_ms = opt_u64(&v, "retry_after_ms");
+            return Ok(JobResponse::Error(ApiError { code, message, retry_after_ms }));
         }
         None => return Err(ApiError::bad_request("response missing 'ok'")),
     }
@@ -562,6 +585,10 @@ pub fn decode_response(line: &str) -> Result<JobResponse, ApiError> {
                 bank_replays: u64_or(&v, "bank_replays", 0),
                 bank_fallbacks: u64_or(&v, "bank_fallbacks", 0),
                 bank_bytes_resident: u64_or(&v, "bank_bytes_resident", 0),
+                rejected_overloaded: u64_or(&v, "rejected_overloaded", 0),
+                deadline_exceeded: u64_or(&v, "deadline_exceeded", 0),
+                panics_contained: u64_or(&v, "panics_contained", 0),
+                client_retries: u64_or(&v, "client_retries", 0),
                 batcher,
             }))
         }

@@ -1,0 +1,313 @@
+//! Deterministic, seeded fault-injection harness.
+//!
+//! The paper argues fault-handling discipline must be *analyzed, not
+//! assumed*; this module applies the same standard to the service's own
+//! degradation paths. Production code registers named injection points
+//! (`Point`) at the spots where the outside world can hurt us — the
+//! service read/write path, pool task entry, trace-bank reservation and
+//! replay — and a test installs a [`ChaosPlan`] describing which hits of
+//! which point misbehave and how ([`Action`]). Everything is counted
+//! and seeded, so a failing chaos test replays exactly.
+//!
+//! The whole module (and every call site, via the same `cfg`) compiles
+//! only under `cfg(any(test, feature = "chaos"))`: release builds carry
+//! zero chaos code and the clean path stays bit-identical.
+//!
+//! With no plan installed every hook is a no-op, which is what the
+//! clean-path golden test in `tests/test_chaos.rs` pins.
+
+use std::collections::BTreeMap;
+use std::sync::{Mutex, MutexGuard};
+use std::time::Duration;
+
+use crate::rng::Pcg64;
+
+/// A named injection point in production code.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Point {
+    /// A full line received by the service, before decoding.
+    ServiceRead,
+    /// Just before the service writes a response line.
+    ServiceWrite,
+    /// Entry of a pool worker task (`run_parallel*` closures).
+    PoolTask,
+    /// `TraceBank::try_reserve` admission decision.
+    BankReserve,
+    /// `ReplaySource::reset` span lookup.
+    BankReplay,
+}
+
+impl Point {
+    fn id(self) -> u64 {
+        match self {
+            Point::ServiceRead => 1,
+            Point::ServiceWrite => 2,
+            Point::PoolTask => 3,
+            Point::BankReserve => 4,
+            Point::BankReplay => 5,
+        }
+    }
+}
+
+/// What a tripped injection point does.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Action {
+    /// Truncate the line mid-byte (ServiceRead).
+    TornLine,
+    /// Pad the line past `wire::MAX_LINE_BYTES` (ServiceRead).
+    OversizedLine,
+    /// Sleep this many milliseconds first (ServiceRead/ServiceWrite):
+    /// a slow-loris peer.
+    SlowRead(u64),
+    /// Panic at the point (PoolTask, ServiceRead).
+    Panic,
+    /// Refuse the reservation as if over the 256 MiB budget
+    /// (BankReserve).
+    DeclineBank,
+    /// Report a missing span, forcing the underrun path (BankReplay).
+    Underrun,
+}
+
+#[derive(Debug, Clone)]
+enum HitSpec {
+    /// Fire on these exact hit indices (0-based).
+    At(Vec<u64>),
+    /// Fire on each hit independently with probability `p`, from a
+    /// PCG stream keyed on (seed, point, hit) — deterministic across
+    /// runs and independent of thread interleaving.
+    Prob { seed: u64, p: f64 },
+}
+
+#[derive(Debug, Clone)]
+struct Rule {
+    point: Point,
+    hits: HitSpec,
+    action: Action,
+}
+
+/// A schedule of injections: which hits of which points misbehave.
+#[derive(Debug, Clone, Default)]
+pub struct ChaosPlan {
+    rules: Vec<Rule>,
+}
+
+impl ChaosPlan {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fire `action` on the given 0-based hit indices of `point`.
+    pub fn at(mut self, point: Point, hits: &[u64], action: Action) -> Self {
+        self.rules.push(Rule { point, hits: HitSpec::At(hits.to_vec()), action });
+        self
+    }
+
+    /// Fire `action` on each hit of `point` independently with
+    /// probability `p`, deterministically derived from `seed`.
+    pub fn with_prob(mut self, point: Point, seed: u64, p: f64, action: Action) -> Self {
+        self.rules.push(Rule { point, hits: HitSpec::Prob { seed, p }, action });
+        self
+    }
+
+    fn action_for(&self, point: Point, hit: u64) -> Option<Action> {
+        self.rules.iter().find_map(|r| {
+            if r.point != point {
+                return None;
+            }
+            let fire = match &r.hits {
+                HitSpec::At(idxs) => idxs.contains(&hit),
+                HitSpec::Prob { seed, p } => {
+                    Pcg64::new(seed ^ point.id().wrapping_mul(0x9e3779b97f4a7c15), hit).next_f64()
+                        < *p
+                }
+            };
+            fire.then_some(r.action)
+        })
+    }
+}
+
+struct ChaosState {
+    plan: ChaosPlan,
+    hits: BTreeMap<Point, u64>,
+    fired: Vec<(Point, u64, Action)>,
+}
+
+static STATE: Mutex<Option<ChaosState>> = Mutex::new(None);
+
+fn state() -> MutexGuard<'static, Option<ChaosState>> {
+    // A panic injected *while holding* this lock never happens (hooks
+    // release it before acting), but a panicking test elsewhere must
+    // not wedge the harness: tolerate poison.
+    STATE.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Install a plan, replacing any previous one and zeroing hit counters.
+pub fn install(plan: ChaosPlan) {
+    *state() = Some(ChaosState { plan, hits: BTreeMap::new(), fired: Vec::new() });
+}
+
+/// Remove the plan: every hook becomes a no-op again.
+pub fn reset() {
+    *state() = None;
+}
+
+/// The injections that actually fired, in order: (point, hit, action).
+pub fn fired() -> Vec<(Point, u64, Action)> {
+    state().as_ref().map(|s| s.fired.clone()).unwrap_or_default()
+}
+
+/// Record a hit at `point` and return the scheduled action, if any.
+/// With no plan installed this is a no-op returning `None`.
+pub fn hit(point: Point) -> Option<Action> {
+    let mut guard = state();
+    let s = guard.as_mut()?;
+    let n = s.hits.entry(point).or_insert(0);
+    let idx = *n;
+    *n += 1;
+    let action = s.plan.action_for(point, idx)?;
+    s.fired.push((point, idx, action));
+    Some(action)
+}
+
+// ---------------------------------------------------------------------------
+// Convenience wrappers, one per production call site.
+// ---------------------------------------------------------------------------
+
+/// ServiceRead hook: possibly mangle (or stall on, or panic over) a
+/// decoded request line.
+pub fn mangle_service_read(line: String) -> String {
+    match hit(Point::ServiceRead) {
+        None => line,
+        Some(Action::TornLine) => {
+            let cut = line.len() / 2;
+            let mut cut_at = cut.min(line.len());
+            // Tear on a char boundary so the result is still a String.
+            while cut_at > 0 && !line.is_char_boundary(cut_at) {
+                cut_at -= 1;
+            }
+            line[..cut_at].to_string()
+        }
+        Some(Action::OversizedLine) => {
+            let mut big = line;
+            let target = crate::api::wire::MAX_LINE_BYTES + 1;
+            while big.len() <= target {
+                big.push(' ');
+            }
+            big
+        }
+        Some(Action::SlowRead(ms)) => {
+            std::thread::sleep(Duration::from_millis(ms));
+            line
+        }
+        Some(Action::Panic) => panic!("chaos: injected panic at ServiceRead"),
+        Some(_) => line,
+    }
+}
+
+/// ServiceWrite hook: stall or panic just before a response goes out.
+pub fn on_service_write() {
+    match hit(Point::ServiceWrite) {
+        Some(Action::SlowRead(ms)) => std::thread::sleep(Duration::from_millis(ms)),
+        Some(Action::Panic) => panic!("chaos: injected panic at ServiceWrite"),
+        _ => {}
+    }
+}
+
+/// PoolTask hook: panic inside a worker task.
+pub fn on_pool_task() {
+    if let Some(Action::Panic) = hit(Point::PoolTask) {
+        panic!("chaos: injected panic at PoolTask");
+    }
+}
+
+/// BankReserve hook: true means "pretend the 256 MiB budget is blown".
+pub fn deny_bank_reserve() -> bool {
+    matches!(hit(Point::BankReserve), Some(Action::DeclineBank))
+}
+
+/// BankReplay hook: true forces the missing-span (underrun) path.
+pub fn force_underrun() -> bool {
+    matches!(hit(Point::BankReplay), Some(Action::Underrun))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Unit tests share the process-global plan with every other test in
+    /// this binary (pool/bank tests hit `PoolTask`/`BankReserve`/
+    /// `BankReplay` concurrently), so the plans installed here touch only
+    /// the `ServiceRead`/`ServiceWrite` points, which nothing else in the
+    /// lib test binary exercises. Chaos tests themselves serialize on a
+    /// gate. (`tests/test_chaos.rs` is a separate process, so no
+    /// cross-talk there.)
+    static GATE: Mutex<()> = Mutex::new(());
+
+    fn locked() -> MutexGuard<'static, ()> {
+        GATE.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    #[test]
+    fn no_plan_is_a_noop() {
+        let _g = locked();
+        reset();
+        assert_eq!(hit(Point::ServiceWrite), None);
+        assert_eq!(mangle_service_read("hello".into()), "hello");
+        assert!(!deny_bank_reserve());
+        assert!(!force_underrun());
+        reset();
+    }
+
+    #[test]
+    fn explicit_hits_fire_in_order() {
+        let _g = locked();
+        install(ChaosPlan::new().at(Point::ServiceWrite, &[1, 3], Action::Panic));
+        assert_eq!(hit(Point::ServiceWrite), None); // hit 0
+        assert_eq!(hit(Point::ServiceWrite), Some(Action::Panic)); // hit 1
+        assert_eq!(hit(Point::ServiceWrite), None); // hit 2
+        assert_eq!(hit(Point::ServiceWrite), Some(Action::Panic)); // hit 3
+        let service_fires: Vec<_> =
+            fired().into_iter().filter(|(p, _, _)| *p == Point::ServiceWrite).collect();
+        assert_eq!(
+            service_fires,
+            vec![
+                (Point::ServiceWrite, 1, Action::Panic),
+                (Point::ServiceWrite, 3, Action::Panic),
+            ]
+        );
+        reset();
+    }
+
+    #[test]
+    fn probabilistic_schedule_is_reproducible() {
+        let _g = locked();
+        let run = || {
+            install(ChaosPlan::new().with_prob(Point::ServiceWrite, 42, 0.3, Action::Panic));
+            let pattern: Vec<bool> =
+                (0..64).map(|_| hit(Point::ServiceWrite).is_some()).collect();
+            reset();
+            pattern
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "same seed must give the same schedule");
+        let fires = a.iter().filter(|x| **x).count();
+        assert!(fires > 5 && fires < 40, "p=0.3 over 64 hits fired {fires} times");
+        reset();
+    }
+
+    #[test]
+    fn torn_and_oversized_lines() {
+        let _g = locked();
+        install(
+            ChaosPlan::new()
+                .at(Point::ServiceRead, &[0], Action::TornLine)
+                .at(Point::ServiceRead, &[1], Action::OversizedLine),
+        );
+        let torn = mangle_service_read(r#"{"op":"ping"}"#.into());
+        assert!(torn.len() < 13, "torn: {torn:?}");
+        let big = mangle_service_read("{}".into());
+        assert!(big.len() > crate::api::wire::MAX_LINE_BYTES);
+        reset();
+    }
+}

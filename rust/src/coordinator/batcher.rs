@@ -18,6 +18,7 @@ use std::time::{Duration, Instant};
 use crate::model::Params;
 use crate::runtime::{HloPlanner, PlanOutput};
 
+use super::metrics::lock_unpoisoned;
 use super::Metrics;
 
 #[derive(Debug, Clone)]
@@ -142,7 +143,9 @@ impl Batcher {
     }
 
     pub fn stats(&self) -> BatcherStats {
-        self.stats.lock().unwrap().clone()
+        // Poison-tolerant: a panicking request thread must not take the
+        // stats surface down with it.
+        lock_unpoisoned(&self.stats).clone()
     }
 
     pub fn metrics(&self) -> &Metrics {
@@ -203,7 +206,7 @@ fn owner_loop(
 
         let params: Vec<Params> = batch.iter().map(|(p, _)| *p).collect();
         {
-            let mut s = stats.lock().unwrap();
+            let mut s = lock_unpoisoned(&stats);
             s.requests += batch.len() as u64;
             s.batches += 1;
             s.max_batch_seen = s.max_batch_seen.max(batch.len() as u64);

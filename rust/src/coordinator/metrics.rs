@@ -2,7 +2,16 @@
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard};
+
+/// Lock a mutex, tolerating poison. Metrics and batcher state must
+/// survive a panicking request thread (the service catches the panic
+/// and answers `internal`); the guarded data here is a counter map /
+/// sample vector that stays structurally valid at every await-free
+/// point, so adopting a poisoned lock is safe.
+pub(crate) fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
 
 /// Thread-safe metrics registry.
 #[derive(Debug, Default)]
@@ -17,20 +26,18 @@ impl Metrics {
     }
 
     pub fn incr(&self, name: &str, by: u64) {
-        let map = self.counters.lock().unwrap();
+        let map = lock_unpoisoned(&self.counters);
         if let Some(c) = map.get(name) {
             c.fetch_add(by, Ordering::Relaxed);
             return;
         }
         drop(map);
-        let mut map = self.counters.lock().unwrap();
+        let mut map = lock_unpoisoned(&self.counters);
         map.entry(name.to_string()).or_insert_with(|| AtomicU64::new(0)).fetch_add(by, Ordering::Relaxed);
     }
 
     pub fn get(&self, name: &str) -> u64 {
-        self.counters
-            .lock()
-            .unwrap()
+        lock_unpoisoned(&self.counters)
             .get(name)
             .map(|c| c.load(Ordering::Relaxed))
             .unwrap_or(0)
@@ -39,7 +46,7 @@ impl Metrics {
     /// Record one request latency (seconds). Bounded reservoir: the
     /// most recent 65536 samples.
     pub fn observe_latency(&self, seconds: f64) {
-        let mut v = self.latencies.lock().unwrap();
+        let mut v = lock_unpoisoned(&self.latencies);
         if v.len() >= 65536 {
             let len = v.len();
             v.copy_within(len / 2.., 0);
@@ -50,7 +57,7 @@ impl Metrics {
 
     /// (p50, p95, p99, count) of recorded latencies.
     pub fn latency_quantiles(&self) -> (f64, f64, f64, usize) {
-        let mut v = self.latencies.lock().unwrap().clone();
+        let mut v = lock_unpoisoned(&self.latencies).clone();
         if v.is_empty() {
             return (f64::NAN, f64::NAN, f64::NAN, 0);
         }
@@ -61,9 +68,7 @@ impl Metrics {
 
     /// Render this instance's counters for the service `stats` verb.
     pub fn snapshot(&self) -> BTreeMap<String, u64> {
-        self.counters
-            .lock()
-            .unwrap()
+        lock_unpoisoned(&self.counters)
             .iter()
             .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
             .collect()
@@ -142,6 +147,26 @@ mod tests {
         }
         let (_, _, _, n) = m.latency_quantiles();
         assert!(n <= 65536);
+    }
+
+    #[test]
+    fn survives_poisoned_locks() {
+        let m = std::sync::Arc::new(Metrics::new());
+        m.incr("x", 1);
+        let mc = std::sync::Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _counters = mc.counters.lock().unwrap();
+            let _latencies = mc.latencies.lock().unwrap();
+            panic!("poison both metric locks");
+        })
+        .join();
+        // Every accessor keeps working on the poisoned mutexes.
+        m.incr("x", 1);
+        assert_eq!(m.get("x"), 2);
+        m.observe_latency(0.5);
+        let (_, _, _, n) = m.latency_quantiles();
+        assert_eq!(n, 1);
+        assert_eq!(m.snapshot()["x"], 2);
     }
 
     #[test]

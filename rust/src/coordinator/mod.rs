@@ -11,5 +11,8 @@ mod service;
 
 pub use batcher::{Batcher, BatcherConfig, BatcherStats};
 pub use metrics::{bank_snapshot, Metrics};
-pub use pool::{available_workers, run_parallel, run_parallel_fold};
+pub use pool::{
+    available_workers, run_parallel, run_parallel_fold, try_run_parallel, try_run_parallel_fold,
+    PoolPanic,
+};
 pub use service::{serve, PlannerClient, ServiceConfig, ServiceHandle};

@@ -3,7 +3,14 @@
 //! balancing without channels — replication workloads are embarrassingly
 //! parallel but very uneven (BestPeriod candidates differ by 10x in
 //! simulated events), so static chunking would waste cores.
+//!
+//! Worker panics are captured at the pool boundary: the `try_*` variants
+//! return a structured [`PoolPanic`] naming the worker, while the plain
+//! variants re-raise the original payload after all workers stop. A
+//! panicked worker never turns into a second, misleading panic about an
+//! unfilled result slot.
 
+use std::any::Any;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Worker count: `CKPTFP_WORKERS` env override, else available
@@ -17,6 +24,38 @@ pub fn available_workers() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
 }
 
+/// A worker panic captured at the pool boundary: which worker died and
+/// what it said, as a value instead of a propagating unwind.
+#[derive(Debug, Clone)]
+pub struct PoolPanic {
+    /// Index of the worker (spawn order) whose task panicked first.
+    pub worker: usize,
+    /// The panic payload rendered as text (`&str`/`String` payloads;
+    /// anything else becomes a placeholder).
+    pub message: String,
+}
+
+impl PoolPanic {
+    fn from_payload(worker: usize, payload: &(dyn Any + Send)) -> Self {
+        let message = payload
+            .downcast_ref::<&str>()
+            .map(|s| s.to_string())
+            .or_else(|| payload.downcast_ref::<String>().cloned())
+            .unwrap_or_else(|| "non-string panic payload".to_string());
+        PoolPanic { worker, message }
+    }
+}
+
+impl std::fmt::Display for PoolPanic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "worker {} panicked: {}", self.worker, self.message)
+    }
+}
+
+impl std::error::Error for PoolPanic {}
+
+type Caught = (usize, Box<dyn Any + Send>);
+
 /// Apply `f` to every item on `workers` threads; returns results in
 /// input order. Panics in `f` propagate after all workers stop.
 pub fn run_parallel<T, R, F>(items: Vec<T>, workers: usize, f: F) -> Vec<R>
@@ -25,41 +64,86 @@ where
     R: Send,
     F: Fn(&T) -> R + Sync,
 {
+    match run_parallel_impl(items, workers, f) {
+        Ok(out) => out,
+        Err((_, payload)) => std::panic::resume_unwind(payload),
+    }
+}
+
+/// [`run_parallel`] with panic isolation: a worker panic becomes
+/// `Err(PoolPanic)` naming the worker instead of unwinding the caller.
+pub fn try_run_parallel<T, R, F>(items: Vec<T>, workers: usize, f: F) -> Result<Vec<R>, PoolPanic>
+where
+    T: Send + Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    run_parallel_impl(items, workers, f)
+        .map_err(|(w, payload)| PoolPanic::from_payload(w, payload.as_ref()))
+}
+
+fn run_parallel_impl<T, R, F>(items: Vec<T>, workers: usize, f: F) -> Result<Vec<R>, Caught>
+where
+    T: Send + Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
     let n = items.len();
     if n == 0 {
-        return Vec::new();
+        return Ok(Vec::new());
     }
     let workers = workers.max(1).min(n);
     if workers == 1 {
-        return items.iter().map(|t| f(t)).collect();
+        return std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            #[cfg(any(test, feature = "chaos"))]
+            crate::chaos::on_pool_task();
+            items.iter().map(|t| f(t)).collect()
+        }))
+        .map_err(|payload| (0, payload));
     }
     let next = AtomicUsize::new(0);
     let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
     let slot_ptr = SlotsPtr(slots.as_mut_ptr());
+    let mut first_panic: Option<Caught> = None;
 
     std::thread::scope(|scope| {
-        for _ in 0..workers {
-            let next = &next;
-            let items = &items;
-            let f = &f;
-            let slot_ptr = &slot_ptr;
-            scope.spawn(move || loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let r = f(&items[i]);
-                // SAFETY: each index i is claimed by exactly one worker
-                // (fetch_add is unique), and `slots` outlives the scope.
-                unsafe { *slot_ptr.0.add(i) = Some(r) };
-            });
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                let next = &next;
+                let items = &items;
+                let f = &f;
+                let slot_ptr = &slot_ptr;
+                scope.spawn(move || {
+                    #[cfg(any(test, feature = "chaos"))]
+                    crate::chaos::on_pool_task();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        let r = f(&items[i]);
+                        // SAFETY: each index i is claimed by exactly one worker
+                        // (fetch_add is unique), and `slots` outlives the scope.
+                        unsafe { *slot_ptr.0.add(i) = Some(r) };
+                    }
+                })
+            })
+            .collect();
+        for (w, h) in handles.into_iter().enumerate() {
+            if let Err(payload) = h.join() {
+                first_panic.get_or_insert((w, payload));
+            }
         }
     });
-    slots.into_iter().map(|s| s.expect("worker failed to fill slot")).collect()
+    if let Some(p) = first_panic {
+        return Err(p);
+    }
+    // All workers exited cleanly, so every claimed index was filled.
+    Ok(slots.into_iter().map(|s| s.expect("clean workers fill every slot")).collect())
 }
 
 /// Send+Sync wrapper for the raw result pointer; soundness argument in
-/// `run_parallel` (disjoint writes, scoped lifetime).
+/// `run_parallel_impl` (disjoint writes, scoped lifetime).
 struct SlotsPtr<R>(*mut Option<R>);
 unsafe impl<R: Send> Send for SlotsPtr<R> {}
 unsafe impl<R: Send> Sync for SlotsPtr<R> {}
@@ -94,21 +178,71 @@ where
     F: Fn(A, &T) -> A + Sync,
     M: Fn(A, A) -> A,
 {
+    match run_parallel_fold_impl(items, workers, init, fold, merge) {
+        Ok(a) => a,
+        Err((_, payload)) => std::panic::resume_unwind(payload),
+    }
+}
+
+/// [`run_parallel_fold`] with panic isolation: a worker panic becomes
+/// `Err(PoolPanic)` naming the worker instead of unwinding the caller.
+/// Partial accumulators from surviving workers are discarded — the
+/// reduction either completes exactly or reports the failure.
+pub fn try_run_parallel_fold<T, A, I, F, M>(
+    items: &[T],
+    workers: usize,
+    init: I,
+    fold: F,
+    merge: M,
+) -> Result<A, PoolPanic>
+where
+    T: Sync,
+    A: Send,
+    I: Fn() -> A + Sync,
+    F: Fn(A, &T) -> A + Sync,
+    M: Fn(A, A) -> A,
+{
+    run_parallel_fold_impl(items, workers, init, fold, merge)
+        .map_err(|(w, payload)| PoolPanic::from_payload(w, payload.as_ref()))
+}
+
+fn run_parallel_fold_impl<T, A, I, F, M>(
+    items: &[T],
+    workers: usize,
+    init: I,
+    fold: F,
+    merge: M,
+) -> Result<A, Caught>
+where
+    T: Sync,
+    A: Send,
+    I: Fn() -> A + Sync,
+    F: Fn(A, &T) -> A + Sync,
+    M: Fn(A, A) -> A,
+{
     let n = items.len();
     if n == 0 {
-        return init();
+        return Ok(init());
     }
     let workers = workers.max(1).min(n);
     if workers == 1 {
-        return items.iter().fold(init(), &fold);
+        return std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            #[cfg(any(test, feature = "chaos"))]
+            crate::chaos::on_pool_task();
+            items.iter().fold(init(), &fold)
+        }))
+        .map_err(|payload| (0, payload));
     }
     let mut partials: Vec<A> = Vec::with_capacity(workers);
+    let mut first_panic: Option<Caught> = None;
     std::thread::scope(|scope| {
         let handles: Vec<_> = (0..workers)
             .map(|w| {
                 let init = &init;
                 let fold = &fold;
                 scope.spawn(move || {
+                    #[cfg(any(test, feature = "chaos"))]
+                    crate::chaos::on_pool_task();
                     let mut acc = init();
                     let mut i = w;
                     while i < n {
@@ -119,18 +253,21 @@ where
                 })
             })
             .collect();
-        for h in handles {
+        for (w, h) in handles.into_iter().enumerate() {
             match h.join() {
                 Ok(a) => partials.push(a),
-                // Re-raise the worker's payload; the scope joins the
-                // remaining workers before unwinding past it.
-                Err(payload) => std::panic::resume_unwind(payload),
+                Err(payload) => {
+                    first_panic.get_or_insert((w, payload));
+                }
             }
         }
     });
+    if let Some(p) = first_panic {
+        return Err(p);
+    }
     let mut iter = partials.into_iter();
     let first = iter.next().expect("at least one worker ran");
-    iter.fold(first, merge)
+    Ok(iter.fold(first, merge))
 }
 
 #[cfg(test)]
@@ -175,6 +312,41 @@ mod tests {
     #[test]
     fn workers_env_override() {
         assert!(available_workers() >= 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "map boom")]
+    fn run_parallel_propagates_original_payload() {
+        let items: Vec<u64> = (0..32).collect();
+        let _ = run_parallel(items, 4, |&x| {
+            if x == 9 {
+                panic!("map boom");
+            }
+            x
+        });
+    }
+
+    #[test]
+    fn try_run_parallel_names_the_failure() {
+        let items: Vec<u64> = (0..32).collect();
+        let err = try_run_parallel(items, 4, |&x| {
+            if x == 9 {
+                panic!("map boom");
+            }
+            x
+        })
+        .unwrap_err();
+        assert!(err.message.contains("map boom"), "{err}");
+        assert!(err.worker < 4);
+        assert!(err.to_string().contains("panicked"), "{err}");
+    }
+
+    #[test]
+    fn try_run_parallel_single_worker_catches() {
+        let err = try_run_parallel(vec![1u64], 1, |_| -> u64 { panic!("solo boom") })
+            .unwrap_err();
+        assert_eq!(err.worker, 0);
+        assert!(err.message.contains("solo boom"));
     }
 
     #[test]
@@ -246,5 +418,34 @@ mod tests {
             },
             |a, b| a + b,
         );
+    }
+
+    #[test]
+    fn try_fold_reports_structured_panic() {
+        let items: Vec<u64> = (0..64).collect();
+        let err = try_run_parallel_fold(
+            &items,
+            4,
+            || 0u64,
+            |a, &x| {
+                if x == 17 {
+                    panic!("boom at 17");
+                }
+                a + x
+            },
+            |a, b| a + b,
+        )
+        .unwrap_err();
+        // Item 17 lands on worker 17 % 4 = 1 under the stride schedule.
+        assert_eq!(err.worker, 1);
+        assert!(err.message.contains("boom at 17"), "{err}");
+    }
+
+    #[test]
+    fn try_fold_clean_path_matches_plain_fold() {
+        let items: Vec<u64> = (0..100).collect();
+        let a = try_run_parallel_fold(&items, 4, || 0u64, |a, x| a + x, |a, b| a + b).unwrap();
+        let b = run_parallel_fold(&items, 4, || 0u64, |a, x| a + x, |a, b| a + b);
+        assert_eq!(a, b);
     }
 }

@@ -3,38 +3,137 @@
 //! per connection, every request dispatched through a shared
 //! [`Executor`] — the same entry points the CLI and the experiment
 //! harness use in-process.
+//!
+//! The service practices what the paper preaches about fault
+//! tolerance:
+//!
+//! * **Admission control** — connection and in-flight-job gates shed
+//!   load with a structured `overloaded` error (carrying
+//!   `retry_after_ms`) instead of queueing without bound.
+//! * **Request guards** — a per-request deadline rides the executor's
+//!   [`crate::util::cancel::CancelToken`]; oversized lines are
+//!   rejected without decoding; idle connections time out.
+//! * **Panic isolation** — `catch_unwind` at the request and
+//!   connection boundaries turns a poisoned request into an `internal`
+//!   error on that one response, never a dead service.
+//! * **Graceful drain** — [`ServiceHandle::stop`] stops accepting,
+//!   lets in-flight jobs finish up to a drain deadline, then cancels
+//!   cooperatively and joins every connection thread.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
-use std::time::Duration;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
-use crate::api::{wire, Executor, JobResponse};
+use super::metrics::lock_unpoisoned;
+use crate::api::{wire, ApiError, ErrorCode, Executor, JobRequest, JobResponse};
+use crate::util::cancel::CancelToken;
 use crate::util::json::Json;
+
+/// How often blocked reads wake to check the stop flags and the idle
+/// budget. Bounds both shutdown latency and idle-check granularity.
+const POLL_INTERVAL: Duration = Duration::from_millis(100);
+
+/// Reads hard-close past this much buffered line data: beyond it there
+/// is no trustworthy message boundary to resync on. Lines between
+/// [`wire::MAX_LINE_BYTES`] and this bound still get a structured
+/// `bad_request` and a surviving connection.
+const HARD_LINE_LIMIT: usize = wire::MAX_LINE_BYTES * 4;
 
 #[derive(Debug, Clone)]
 pub struct ServiceConfig {
     /// Bind address, e.g. "127.0.0.1:7471". Port 0 picks a free port.
     pub addr: String,
+    /// Connection gate: accepts past this many live connections are
+    /// answered `overloaded` and closed.
+    pub max_conns: usize,
+    /// Job gate: requests (other than `ping`/`stats`) past this many
+    /// concurrently executing jobs are answered `overloaded`; the
+    /// connection survives.
+    pub max_inflight: usize,
+    /// Per-request wall-clock budget threaded into the executor.
+    /// `None` disables the guard.
+    pub deadline: Option<Duration>,
+    /// How long [`ServiceHandle::stop`] waits for in-flight jobs
+    /// before cancelling them cooperatively.
+    pub drain: Duration,
+    /// Connections with no traffic for this long are closed.
+    pub idle_timeout: Duration,
+    /// Retry hint carried by `overloaded` responses.
+    pub retry_after_ms: u64,
 }
 
 impl Default for ServiceConfig {
     fn default() -> Self {
-        ServiceConfig { addr: "127.0.0.1:7471".into() }
+        ServiceConfig {
+            addr: "127.0.0.1:7471".into(),
+            max_conns: 256,
+            max_inflight: 32,
+            deadline: None,
+            drain: Duration::from_secs(5),
+            idle_timeout: Duration::from_secs(300),
+            retry_after_ms: 250,
+        }
     }
 }
 
-/// Running service handle: local address + shutdown flag.
+/// State shared by the accept loop, every connection thread and the
+/// handle.
+struct Shared {
+    /// Graceful-stop flag: stop accepting, close idle connections.
+    stop: AtomicBool,
+    /// Hard-cancel flag, set once the drain deadline passes; also the
+    /// cancel flag threaded into executing jobs.
+    hard_cancel: Arc<AtomicBool>,
+    /// Live connection threads (admission gate).
+    active: AtomicUsize,
+    /// Currently executing gated jobs (drain + in-flight gate).
+    inflight: AtomicUsize,
+    /// Connection thread handles, joined on stop.
+    conns: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    cfg: ServiceConfig,
+}
+
+impl Shared {
+    fn try_admit(&self, gate: &AtomicUsize, limit: usize) -> bool {
+        gate.fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| {
+            (n < limit).then_some(n + 1)
+        })
+        .is_ok()
+    }
+
+    fn register(&self, handle: std::thread::JoinHandle<()>) {
+        let mut conns = lock_unpoisoned(&self.conns);
+        conns.retain(|h| !h.is_finished());
+        conns.push(handle);
+    }
+}
+
+/// Decrements a [`Shared`] counter on drop — panic-safe accounting for
+/// connections and in-flight jobs.
+struct CountGuard<'a>(&'a AtomicUsize);
+
+impl Drop for CountGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Running service handle: local address + shutdown control.
 pub struct ServiceHandle {
     pub addr: SocketAddr,
-    stop: Arc<AtomicBool>,
+    shared: Arc<Shared>,
     join: Option<std::thread::JoinHandle<()>>,
 }
 
 impl ServiceHandle {
+    /// Graceful drain: stop accepting, let in-flight jobs finish up to
+    /// the configured drain deadline, then cancel cooperatively and
+    /// join every connection thread.
     pub fn stop(mut self) {
-        self.stop.store(true, Ordering::SeqCst);
+        self.shared.stop.store(true, Ordering::SeqCst);
         // Nudge the accept loop with a dummy connection. The bound
         // address may be unconnectable (0.0.0.0 / ::), so aim the nudge
         // at the loopback of the same family, same port.
@@ -49,6 +148,15 @@ impl ServiceHandle {
         if let Some(j) = self.join.take() {
             let _ = j.join();
         }
+        let deadline = Instant::now() + self.shared.cfg.drain;
+        while self.shared.inflight.load(Ordering::SeqCst) > 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        self.shared.hard_cancel.store(true, Ordering::SeqCst);
+        let handles = std::mem::take(&mut *lock_unpoisoned(&self.shared.conns));
+        for h in handles {
+            let _ = h.join();
+        }
     }
 }
 
@@ -57,38 +165,198 @@ impl ServiceHandle {
 pub fn serve(executor: Executor, cfg: ServiceConfig) -> anyhow::Result<ServiceHandle> {
     let listener = TcpListener::bind(&cfg.addr)?;
     let addr = listener.local_addr()?;
-    let stop = Arc::new(AtomicBool::new(false));
-    let stop2 = Arc::clone(&stop);
+    let shared = Arc::new(Shared {
+        stop: AtomicBool::new(false),
+        hard_cancel: Arc::new(AtomicBool::new(false)),
+        active: AtomicUsize::new(0),
+        inflight: AtomicUsize::new(0),
+        conns: Mutex::new(Vec::new()),
+        cfg,
+    });
+    let shared2 = Arc::clone(&shared);
     let join = std::thread::Builder::new().name("ckptfp-accept".into()).spawn(move || {
         for conn in listener.incoming() {
-            if stop2.load(Ordering::SeqCst) {
+            if shared2.stop.load(Ordering::SeqCst) {
                 break;
             }
-            match conn {
-                Ok(stream) => {
-                    let executor = executor.clone();
-                    let _ = std::thread::Builder::new()
-                        .name("ckptfp-conn".into())
-                        .spawn(move || handle_connection(stream, executor));
-                }
+            let stream = match conn {
+                Ok(s) => s,
                 Err(_) => break,
+            };
+            let executor = executor.clone();
+            let shared3 = Arc::clone(&shared2);
+            if shared2.try_admit(&shared2.active, shared2.cfg.max_conns) {
+                let spawned = std::thread::Builder::new().name("ckptfp-conn".into()).spawn(
+                    move || {
+                        let _guard = CountGuard(&shared3.active);
+                        let caught = catch_unwind(AssertUnwindSafe(|| {
+                            handle_connection(stream, &executor, &shared3)
+                        }));
+                        if caught.is_err() {
+                            executor.note_panic_contained();
+                        }
+                    },
+                );
+                match spawned {
+                    Ok(h) => shared2.register(h),
+                    // The closure never ran: undo the admission.
+                    Err(_) => {
+                        shared2.active.fetch_sub(1, Ordering::SeqCst);
+                    }
+                }
+            } else {
+                // Over the connection gate: a short-lived thread reads
+                // one line (to answer in its dialect) and sheds the
+                // load with a structured `overloaded`.
+                let spawned = std::thread::Builder::new().name("ckptfp-shed".into()).spawn(
+                    move || reject_connection(stream, &executor, &shared3),
+                );
+                if let Ok(h) = spawned {
+                    shared2.register(h);
+                }
             }
         }
     })?;
-    Ok(ServiceHandle { addr, stop, join: Some(join) })
+    Ok(ServiceHandle { addr, shared, join: Some(join) })
 }
 
-fn handle_connection(stream: TcpStream, executor: Executor) {
+fn overloaded_error(cfg: &ServiceConfig, what: &str, limit: usize) -> ApiError {
+    ApiError::overloaded(
+        format!(
+            "service at capacity ({limit} {what}); retry after {} ms",
+            cfg.retry_after_ms
+        ),
+        cfg.retry_after_ms,
+    )
+}
+
+/// Shed one over-limit connection: read a single line (briefly) so the
+/// rejection can speak the caller's dialect, answer `overloaded`,
+/// close.
+fn reject_connection(stream: TcpStream, executor: &Executor, shared: &Shared) {
+    executor.note_overloaded();
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(1)));
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
         Err(_) => return,
     };
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = match line {
-            Ok(l) => l,
-            Err(_) => break,
+    let mut reader = BufReader::new(stream);
+    let mut buf = Vec::new();
+    let legacy = match reader.read_until(b'\n', &mut buf) {
+        Ok(n) if n > 0 => wire::line_is_legacy(&String::from_utf8_lossy(&buf)),
+        _ => false,
+    };
+    let e = overloaded_error(&shared.cfg, "connections", shared.cfg.max_conns);
+    let line = wire::encode_response(&JobResponse::Error(e), legacy);
+    let _ = writer.write_all(line.as_bytes());
+    let _ = writer.write_all(b"\n");
+    let _ = writer.flush();
+}
+
+/// What one poll-driven line read produced.
+enum ReadOutcome {
+    /// A complete line, trailing `\n` (and `\r`) stripped — raw bytes,
+    /// because the length guard must run before UTF-8 validation.
+    Line(Vec<u8>),
+    /// Peer closed, connection errored, or the line outgrew
+    /// [`HARD_LINE_LIMIT`].
+    Closed,
+    /// A stop flag tripped between requests, or the idle budget ran
+    /// out.
+    Done,
+}
+
+/// Read one `\n`-terminated line, waking every [`POLL_INTERVAL`] to
+/// check the stop flags and the idle budget. `read_until` keeps
+/// already-consumed bytes in `buf` across timeout ticks, so a slow
+/// (or slow-loris) sender costs patience, not correctness.
+fn read_line_polled(reader: &mut BufReader<TcpStream>, shared: &Shared) -> ReadOutcome {
+    let mut buf: Vec<u8> = Vec::new();
+    let idle_deadline = Instant::now() + shared.cfg.idle_timeout;
+    loop {
+        match reader.read_until(b'\n', &mut buf) {
+            Ok(0) => return ReadOutcome::Closed,
+            Ok(_) => {
+                if buf.last() == Some(&b'\n') {
+                    buf.pop();
+                    if buf.last() == Some(&b'\r') {
+                        buf.pop();
+                    }
+                    return ReadOutcome::Line(buf);
+                }
+                // Delimiter not found but bytes arrived: EOF mid-line.
+                return ReadOutcome::Closed;
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::Interrupted
+                ) =>
+            {
+                if shared.hard_cancel.load(Ordering::SeqCst) {
+                    return ReadOutcome::Done;
+                }
+                if shared.stop.load(Ordering::SeqCst) && buf.is_empty() {
+                    return ReadOutcome::Done;
+                }
+                if buf.len() > HARD_LINE_LIMIT {
+                    return ReadOutcome::Closed;
+                }
+                if buf.is_empty() && Instant::now() >= idle_deadline {
+                    return ReadOutcome::Done;
+                }
+            }
+            Err(_) => return ReadOutcome::Closed,
+        }
+    }
+}
+
+fn handle_connection(stream: TcpStream, executor: &Executor, shared: &Shared) {
+    if stream.set_read_timeout(Some(POLL_INTERVAL)).is_err() {
+        return;
+    }
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    loop {
+        let raw = match read_line_polled(&mut reader, shared) {
+            ReadOutcome::Line(raw) => raw,
+            ReadOutcome::Closed | ReadOutcome::Done => return,
         };
+        if raw.len() > wire::MAX_LINE_BYTES {
+            // Reject before decoding (and before requiring valid
+            // UTF-8); sniff the dialect from the prefix only.
+            executor.note_rejected();
+            let head = String::from_utf8_lossy(&raw[..raw.len().min(256)]).into_owned();
+            let e = ApiError::bad_request(format!(
+                "request line of {} bytes exceeds the {} byte limit",
+                raw.len(),
+                wire::MAX_LINE_BYTES
+            ));
+            let resp = wire::encode_response(&JobResponse::Error(e), wire::line_is_legacy(&head));
+            if !write_response(&mut writer, &resp) {
+                return;
+            }
+            continue;
+        }
+        let line = match String::from_utf8(raw) {
+            Ok(l) => l,
+            Err(_) => {
+                executor.note_rejected();
+                let e = ApiError::invalid_json("request line is not valid UTF-8");
+                let resp = wire::encode_response(&JobResponse::Error(e), false);
+                if !write_response(&mut writer, &resp) {
+                    return;
+                }
+                continue;
+            }
+        };
+        #[cfg(any(test, feature = "chaos"))]
+        let line = crate::chaos::mangle_service_read(line);
         if line.trim().is_empty() {
             continue;
         }
@@ -102,16 +370,56 @@ fn handle_connection(stream: TcpStream, executor: Executor) {
                 wire::encode_response(&JobResponse::Error(e), wire::line_is_legacy(&line))
             }
             Ok(decoded) => {
-                wire::encode_response(&executor.execute(&decoded.request), decoded.legacy)
+                let resp = dispatch(executor, shared, &decoded.request);
+                wire::encode_response(&resp, decoded.legacy)
             }
         };
-        if writer.write_all(response.as_bytes()).is_err()
-            || writer.write_all(b"\n").is_err()
-            || writer.flush().is_err()
-        {
-            break;
+        if !write_response(&mut writer, &response) {
+            return;
         }
     }
+}
+
+/// Run one decoded request through the gates: in-flight admission,
+/// cooperative cancellation, per-request panic containment.
+fn dispatch(executor: &Executor, shared: &Shared, req: &JobRequest) -> JobResponse {
+    // `ping` and `stats` stay answerable under full load — they are
+    // the probes an operator uses to see *why* the service is shedding.
+    let gated = !matches!(req, JobRequest::Ping | JobRequest::Stats);
+    if gated && !shared.try_admit(&shared.inflight, shared.cfg.max_inflight) {
+        executor.note_overloaded();
+        return JobResponse::Error(overloaded_error(
+            &shared.cfg,
+            "jobs in flight",
+            shared.cfg.max_inflight,
+        ));
+    }
+    let _guard = gated.then(|| CountGuard(&shared.inflight));
+    let cancel = CancelToken::with_flag(Arc::clone(&shared.hard_cancel));
+    let caught = catch_unwind(AssertUnwindSafe(|| executor.execute_cancellable(req, &cancel)));
+    match caught {
+        Ok(resp) => resp,
+        Err(payload) => {
+            executor.note_panic_contained();
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "non-string panic payload".into());
+            JobResponse::Error(ApiError::new(
+                ErrorCode::Internal,
+                format!("request handler panicked: {msg}"),
+            ))
+        }
+    }
+}
+
+fn write_response(writer: &mut TcpStream, response: &str) -> bool {
+    #[cfg(any(test, feature = "chaos"))]
+    crate::chaos::on_service_write();
+    writer.write_all(response.as_bytes()).is_ok()
+        && writer.write_all(b"\n").is_ok()
+        && writer.flush().is_ok()
 }
 
 /// Minimal blocking *raw-line* client, for tests and tools that need
@@ -124,8 +432,13 @@ pub struct PlannerClient {
 }
 
 impl PlannerClient {
+    /// Read timeout applied to every [`PlannerClient`] connection — a
+    /// wedged server is a clear error, not a hang.
+    pub const READ_TIMEOUT: Duration = Duration::from_secs(30);
+
     pub fn connect(addr: &str) -> anyhow::Result<PlannerClient> {
         let stream = TcpStream::connect(addr)?;
+        stream.set_read_timeout(Some(Self::READ_TIMEOUT))?;
         let writer = stream.try_clone()?;
         Ok(PlannerClient { reader: BufReader::new(stream), writer })
     }
@@ -136,7 +449,19 @@ impl PlannerClient {
         self.writer.write_all(b"\n")?;
         self.writer.flush()?;
         let mut line = String::new();
-        self.reader.read_line(&mut line)?;
+        self.reader.read_line(&mut line).map_err(|e| {
+            if matches!(
+                e.kind(),
+                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+            ) {
+                anyhow::anyhow!(
+                    "no response within the {:.0}s read timeout",
+                    Self::READ_TIMEOUT.as_secs_f64()
+                )
+            } else {
+                anyhow::Error::from(e)
+            }
+        })?;
         anyhow::ensure!(!line.is_empty(), "server closed the connection");
         crate::util::json::parse(line.trim())
     }

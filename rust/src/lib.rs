@@ -41,6 +41,8 @@
 //! the job service falls back to the closed-form planner).
 
 pub mod api;
+#[cfg(any(test, feature = "chaos"))]
+pub mod chaos;
 pub mod cli;
 pub mod config;
 pub mod coordinator;

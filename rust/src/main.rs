@@ -9,7 +9,7 @@
 //! ckptfp best-period [--strategy NAME | --policy P] [--reps K] [--candidates N] [--prune] [scenario flags]
 //! ckptfp verify      [--grid quick|full] [--policy P] [--reps K] [--budget B] [--workers W] [--out FILE] [--json]
 //! ckptfp experiment  <fig4..fig11|tab1..tab3|policy-comparison|conformance|all> [--reps K] [--best-period] [--out DIR]
-//! ckptfp serve       [--addr HOST:PORT] [--workers W] [--reps-default K]
+//! ckptfp serve       [--addr HOST:PORT] [--workers W] [--reps-default K] [--max-conns N] [--max-inflight N] [--deadline-ms MS] [--drain-ms MS]
 //! ckptfp client      <plan|simulate|best-period|verify|ping|stats> --addr HOST:PORT [job flags]
 //! ckptfp trace       [--out FILE] [--horizon SECONDS] [--n-procs N]
 //! ckptfp config      <file.toml> — validate and print a scenario (+ optional [policy])
@@ -107,6 +107,7 @@ commands:
   experiment   regenerate a paper figure/table (fig4..fig11, tab1..tab3,
                policy-comparison, conformance, all)
   serve        TCP/JSONL job service (protocol v2; v1 planner dialect adapted)
+               [--max-conns N] [--max-inflight N] [--deadline-ms MS] [--drain-ms MS]
   client       run plan/simulate/best-period/verify jobs against a remote service
   trace        dump a generated fault/prediction trace
   config       validate a TOML scenario file
@@ -353,8 +354,14 @@ fn cmd_serve(args: &mut Args) -> anyhow::Result<()> {
     let max_delay_ms: u64 = args.get("max-delay-ms", 2)?;
     let workers: usize = args.get("workers", ckptfp::coordinator::available_workers())?;
     let reps_default: u64 = args.get("reps-default", 100)?;
+    let svc_defaults = ServiceConfig::default();
+    let max_conns: usize = args.get("max-conns", svc_defaults.max_conns)?;
+    let max_inflight: usize = args.get("max-inflight", svc_defaults.max_inflight)?;
+    let deadline_ms: u64 = args.get("deadline-ms", 0)?;
+    let drain_ms: u64 = args.get("drain-ms", svc_defaults.drain.as_millis() as u64)?;
     args.finish()?;
-    let exec_cfg = ExecutorConfig { workers, reps_default, ..Default::default() };
+    let deadline = (deadline_ms > 0).then(|| std::time::Duration::from_millis(deadline_ms));
+    let exec_cfg = ExecutorConfig { workers, reps_default, deadline, ..Default::default() };
     let executor = match Batcher::spawn_default(BatcherConfig {
         max_batch,
         max_delay: std::time::Duration::from_millis(max_delay_ms),
@@ -370,10 +377,27 @@ fn cmd_serve(args: &mut Args) -> anyhow::Result<()> {
             Executor::new(exec_cfg)
         }
     };
-    let handle = serve(executor, ServiceConfig { addr })?;
+    let handle = serve(
+        executor,
+        ServiceConfig {
+            addr,
+            max_conns,
+            max_inflight,
+            deadline,
+            drain: std::time::Duration::from_millis(drain_ms),
+            ..Default::default()
+        },
+    )?;
     println!("ckptfp job service listening on {}", handle.addr);
     println!("protocol: one JSON object per line (v2; v1 plan dialect accepted) — docs/PROTOCOL.md");
     println!("simulation pool: {workers} workers, default {reps_default} replications");
+    println!(
+        "guards: {max_conns} connections, {max_inflight} jobs in flight, deadline {}",
+        match deadline {
+            Some(d) => format!("{} ms", d.as_millis()),
+            None => "off".into(),
+        }
+    );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
@@ -431,6 +455,10 @@ fn cmd_client(args: &mut Args) -> anyhow::Result<()> {
             println!(
                 "latency p50 {:.4}s p95 {:.4}s p99 {:.4}s over {} samples",
                 s.lat_p50_s, s.lat_p95_s, s.lat_p99_s, s.lat_n
+            );
+            println!(
+                "robustness: overloaded {} deadline_exceeded {} panics_contained {} client_retries {}",
+                s.rejected_overloaded, s.deadline_exceeded, s.panics_contained, s.client_retries
             );
             if let Some(b) = s.batcher {
                 println!(

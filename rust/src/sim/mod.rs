@@ -21,7 +21,7 @@ pub use outcome::Outcome;
 pub use policy::{Policy, PolicyCtx};
 pub use runner::{
     fold_waste_product, fold_waste_product_retaining, rep_blocks,
-    run_replication_range_with, run_replications,
+    run_replication_range_with, run_replication_range_with_cancel, run_replications,
     run_replications_parallel, run_replications_parallel_with, run_replications_with,
     simulate_once, ReplicationAgg, ReplicationReport, Retain,
 };

@@ -4,8 +4,9 @@
 
 use super::{Outcome, SimSession};
 use crate::config::Scenario;
-use crate::coordinator::run_parallel_fold;
+use crate::coordinator::{run_parallel_fold, try_run_parallel_fold};
 use crate::strategies::StrategySpec;
+use crate::util::cancel::CancelToken;
 use crate::util::stats::Summary;
 
 /// Streaming accumulator over outcomes: Welford summaries for the
@@ -220,21 +221,46 @@ pub fn run_replication_range_with<M>(
 where
     M: Fn() -> anyhow::Result<SimSession> + Sync,
 {
+    run_replication_range_with_cancel(rep_lo, rep_hi, workers, &CancelToken::unbounded(), make)
+}
+
+/// [`run_replication_range_with`] under a cooperative [`CancelToken`]:
+/// each worker re-checks the token before picking up its next
+/// replication and simply stops folding once it trips, so a tripped
+/// deadline yields the *partial* aggregate of the replications that
+/// completed (check `agg.n_reps` against the requested range). Worker
+/// panics surface as a structured
+/// [`crate::coordinator::PoolPanic`] error (downcastable through the
+/// anyhow chain) instead of unwinding the caller.
+pub fn run_replication_range_with_cancel<M>(
+    rep_lo: u64,
+    rep_hi: u64,
+    workers: usize,
+    cancel: &CancelToken,
+    make: M,
+) -> anyhow::Result<ReplicationAgg>
+where
+    M: Fn() -> anyhow::Result<SimSession> + Sync,
+{
     // Surface configuration errors here, once, instead of panicking in
     // a worker.
     drop(make()?);
     let rep_ids: Vec<u64> = (rep_lo..rep_hi).collect();
-    let (_, agg) = run_parallel_fold(
+    let (_, agg) = try_run_parallel_fold(
         &rep_ids,
         workers,
         || (None::<SimSession>, ReplicationAgg::default()),
         |(mut session, mut agg), &rep| {
+            if cancel.cancelled() {
+                return (session, agg);
+            }
             let s = session.get_or_insert_with(|| make().expect("session validated above"));
             agg.push(&s.run(rep));
             (session, agg)
         },
         |(_, a), (_, b)| (None, a.merge(b)),
-    );
+    )
+    .map_err(anyhow::Error::new)?;
     Ok(agg)
 }
 
@@ -468,6 +494,55 @@ mod tests {
         assert_eq!(full.n_ckpts, merged.n_ckpts);
         assert!(approx_eq(full.waste.mean(), merged.waste.mean(), 1e-12));
         assert!(approx_eq(full.makespan.mean(), merged.makespan.mean(), 1e-12));
+    }
+
+    #[test]
+    fn pre_cancelled_token_runs_no_replications() {
+        let s = small_scenario();
+        let spec = spec_for(StrategyKind::Young, &s, Capping::Uncapped);
+        let flag = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(true));
+        let cancel = CancelToken::with_flag(flag);
+        let agg =
+            run_replication_range_with_cancel(0, 50, 3, &cancel, || SimSession::new(&s, &spec))
+                .unwrap();
+        assert_eq!(agg.n_reps, 0, "a tripped token must stop the fold immediately");
+    }
+
+    #[test]
+    fn unbounded_cancel_matches_plain_range() {
+        let s = small_scenario();
+        let spec = spec_for(StrategyKind::Young, &s, Capping::Uncapped);
+        let make = || SimSession::new(&s, &spec);
+        let plain = run_replication_range_with(0, 8, 3, make).unwrap();
+        let cancelled =
+            run_replication_range_with_cancel(0, 8, 3, &CancelToken::unbounded(), make).unwrap();
+        assert_eq!(plain.n_reps, cancelled.n_reps);
+        assert_eq!(plain.n_faults, cancelled.n_faults);
+        assert_eq!(plain.waste.mean(), cancelled.waste.mean());
+    }
+
+    #[test]
+    fn worker_panic_is_a_structured_error() {
+        // A panicking session (simulated via a factory that validates
+        // once then panics inside the fold) must surface as a PoolPanic
+        // error value, not an unwind.
+        let s = small_scenario();
+        let spec = spec_for(StrategyKind::Young, &s, Capping::Uncapped);
+        let calls = std::sync::atomic::AtomicU64::new(0);
+        let err = run_replication_range_with(0, 8, 2, || {
+            // First call is the up-front validation; later (per-worker)
+            // calls panic like a poisoned session build would.
+            if calls.fetch_add(1, std::sync::atomic::Ordering::SeqCst) == 0 {
+                SimSession::new(&s, &spec)
+            } else {
+                panic!("chaotic session build");
+            }
+        })
+        .unwrap_err();
+        let pp = err
+            .downcast_ref::<crate::coordinator::PoolPanic>()
+            .expect("error must carry PoolPanic");
+        assert!(pp.message.contains("chaotic session build"), "{pp}");
     }
 
     #[test]

@@ -196,6 +196,13 @@ impl TraceBank {
         planned_reps: u64,
     ) -> anyhow::Result<Option<TraceBank>> {
         let horizon = HORIZON_FACTOR * scenario.work;
+        // Chaos: a plan may force the over-budget decline path without
+        // needing a genuinely 256 MiB scenario.
+        #[cfg(any(test, feature = "chaos"))]
+        if crate::chaos::deny_bank_reserve() {
+            note_fallback_taken();
+            return Ok(None);
+        }
         if estimate_bytes(scenario, horizon, planned_reps) > MAX_RESIDENT_BYTES {
             note_fallback_taken();
             return Ok(None);
@@ -382,7 +389,17 @@ impl ReplaySource {
     /// cover `rep` — the caller should fall back to live generation.
     pub fn reset(&mut self, rep: u64) -> bool {
         self.pending_trust = None;
-        match self.bank.spans.get(rep as usize) {
+        // Chaos: pretend the span is missing, forcing the underrun
+        // (fall-back-to-live) path the consumer must handle.
+        #[cfg(any(test, feature = "chaos"))]
+        let span = if crate::chaos::force_underrun() {
+            None
+        } else {
+            self.bank.spans.get(rep as usize)
+        };
+        #[cfg(not(any(test, feature = "chaos")))]
+        let span = self.bank.spans.get(rep as usize);
+        match span {
             Some(span) => {
                 self.fi = span.fault_lo as usize;
                 self.fhi = span.fault_hi as usize;

@@ -1,0 +1,116 @@
+//! Cooperative cancellation for long-running jobs.
+//!
+//! A [`CancelToken`] carries an optional wall-clock deadline and an
+//! optional shared stop flag. Work that may run for a long time (the
+//! replication loop in `sim::runner`, most importantly) polls
+//! [`CancelToken::cancelled`] between units of work and winds down
+//! early instead of hanging a worker thread on a runaway request.
+//!
+//! Tokens are cheap to clone and purely cooperative: nothing is
+//! interrupted, the running code simply stops picking up new units
+//! once the token trips. This lives in `util` (the lowest layer) so
+//! `api`, `sim`, and `coordinator` can all share the same type
+//! without a dependency cycle.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// A cooperative cancellation handle: deadline, stop flag, both, or
+/// neither (the default token never cancels).
+#[derive(Debug, Clone, Default)]
+pub struct CancelToken {
+    deadline: Option<Instant>,
+    flag: Option<Arc<AtomicBool>>,
+}
+
+impl CancelToken {
+    /// A token that never cancels.
+    pub fn unbounded() -> Self {
+        Self::default()
+    }
+
+    /// A token that trips once `budget` of wall-clock time has elapsed.
+    pub fn with_deadline(budget: Duration) -> Self {
+        CancelToken { deadline: Some(Instant::now() + budget), flag: None }
+    }
+
+    /// A token that trips when `flag` becomes true (e.g. service
+    /// shutdown ordering every in-flight job to wind down).
+    pub fn with_flag(flag: Arc<AtomicBool>) -> Self {
+        CancelToken { deadline: None, flag: Some(flag) }
+    }
+
+    /// Derive a child token sharing this token's stop flag, with the
+    /// tighter of this token's deadline and a fresh `budget` (when
+    /// given). Used to scope a per-request deadline under a
+    /// service-wide shutdown flag.
+    pub fn child_with_deadline(&self, budget: Option<Duration>) -> Self {
+        let fresh = budget.map(|b| Instant::now() + b);
+        let deadline = match (self.deadline, fresh) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        };
+        CancelToken { deadline, flag: self.flag.clone() }
+    }
+
+    /// True once the deadline has passed or the stop flag is set.
+    pub fn cancelled(&self) -> bool {
+        self.deadline_exceeded()
+            || self.flag.as_ref().is_some_and(|f| f.load(Ordering::Relaxed))
+    }
+
+    /// True once the deadline (if any) has passed, regardless of the
+    /// stop flag. Lets callers distinguish "ran out of budget" from
+    /// "service shutting down" when classifying a partial result.
+    pub fn deadline_exceeded(&self) -> bool {
+        self.deadline.is_some_and(|d| Instant::now() >= d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unbounded_never_cancels() {
+        let t = CancelToken::unbounded();
+        assert!(!t.cancelled());
+        assert!(!t.deadline_exceeded());
+    }
+
+    #[test]
+    fn deadline_trips_after_budget() {
+        let t = CancelToken::with_deadline(Duration::from_millis(10));
+        assert!(!t.cancelled());
+        std::thread::sleep(Duration::from_millis(25));
+        assert!(t.cancelled());
+        assert!(t.deadline_exceeded());
+    }
+
+    #[test]
+    fn flag_trips_without_deadline() {
+        let flag = Arc::new(AtomicBool::new(false));
+        let t = CancelToken::with_flag(flag.clone());
+        assert!(!t.cancelled());
+        flag.store(true, Ordering::Relaxed);
+        assert!(t.cancelled());
+        assert!(!t.deadline_exceeded(), "flag cancellation is not a deadline");
+    }
+
+    #[test]
+    fn child_takes_tighter_deadline_and_shares_flag() {
+        let flag = Arc::new(AtomicBool::new(false));
+        let parent = CancelToken::with_flag(flag.clone());
+        let child = parent.child_with_deadline(Some(Duration::from_secs(3600)));
+        assert!(!child.cancelled());
+        flag.store(true, Ordering::Relaxed);
+        assert!(child.cancelled(), "child must observe the parent flag");
+
+        let wide = CancelToken::with_deadline(Duration::from_secs(3600));
+        let tight = wide.child_with_deadline(Some(Duration::from_millis(5)));
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(tight.deadline_exceeded());
+        assert!(!wide.deadline_exceeded());
+    }
+}

@@ -121,8 +121,14 @@ fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
 }
 
+/// Maximum container nesting accepted by [`parse`]. The recursive-descent
+/// parser uses one stack frame per level, so unbounded depth would let a
+/// hostile line (`[[[[…`) overflow the thread stack instead of returning a
+/// structured error.
+const MAX_DEPTH: usize = 512;
+
 pub fn parse(input: &str) -> anyhow::Result<Json> {
-    let mut p = Parser { bytes: input.as_bytes(), pos: 0 };
+    let mut p = Parser { bytes: input.as_bytes(), pos: 0, depth: 0 };
     p.skip_ws();
     let v = p.value()?;
     p.skip_ws();
@@ -133,11 +139,18 @@ pub fn parse(input: &str) -> anyhow::Result<Json> {
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
     fn peek(&self) -> Option<u8> {
         self.bytes.get(self.pos).copied()
+    }
+
+    fn enter(&mut self) -> anyhow::Result<()> {
+        self.depth += 1;
+        anyhow::ensure!(self.depth <= MAX_DEPTH, "nesting deeper than {} levels", MAX_DEPTH);
+        Ok(())
     }
 
     fn bump(&mut self) -> anyhow::Result<u8> {
@@ -243,10 +256,12 @@ impl<'a> Parser<'a> {
 
     fn array(&mut self) -> anyhow::Result<Json> {
         self.expect(b'[')?;
+        self.enter()?;
         let mut items = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(items));
         }
         loop {
@@ -254,7 +269,10 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             match self.bump()? {
                 b',' => continue,
-                b']' => return Ok(Json::Arr(items)),
+                b']' => {
+                    self.depth -= 1;
+                    return Ok(Json::Arr(items));
+                }
                 c => anyhow::bail!("expected ',' or ']' got '{}'", c as char),
             }
         }
@@ -262,10 +280,12 @@ impl<'a> Parser<'a> {
 
     fn object(&mut self) -> anyhow::Result<Json> {
         self.expect(b'{')?;
+        self.enter()?;
         let mut map = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(map));
         }
         loop {
@@ -277,7 +297,10 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             match self.bump()? {
                 b',' => continue,
-                b'}' => return Ok(Json::Obj(map)),
+                b'}' => {
+                    self.depth -= 1;
+                    return Ok(Json::Obj(map));
+                }
                 c => anyhow::bail!("expected ',' or '}}' got '{}'", c as char),
             }
         }
@@ -339,5 +362,15 @@ mod tests {
     #[test]
     fn nonfinite_serializes_null() {
         assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+    }
+
+    #[test]
+    fn deep_nesting_is_rejected_not_overflowed() {
+        let hostile = "[".repeat(10_000) + &"]".repeat(10_000);
+        let err = parse(&hostile).unwrap_err();
+        assert!(err.to_string().contains("nesting"), "{err}");
+        // Reasonable nesting still parses.
+        let sane = "[".repeat(64) + &"]".repeat(64);
+        assert!(parse(&sane).is_ok());
     }
 }

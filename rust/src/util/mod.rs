@@ -1,5 +1,6 @@
-//! Shared utilities: statistics, logging, JSON, time units.
+//! Shared utilities: statistics, logging, JSON, time units, cancellation.
 
+pub mod cancel;
 pub mod json;
 pub mod logging;
 pub mod stats;

@@ -28,7 +28,11 @@ fn small_scenario() -> Scenario {
 
 fn start_local_service() -> (ServiceHandle, String) {
     let executor = Executor::new(ExecutorConfig { reps_default: 4, ..Default::default() });
-    let handle = serve(executor, ServiceConfig { addr: "127.0.0.1:0".into() }).unwrap();
+    let handle = serve(
+        executor,
+        ServiceConfig { addr: "127.0.0.1:0".into(), ..Default::default() },
+    )
+    .unwrap();
     let addr = handle.addr.to_string();
     (handle, addr)
 }
@@ -186,6 +190,10 @@ fn every_response_variant_round_trips() {
             bank_replays: 1536,
             bank_fallbacks: 3,
             bank_bytes_resident: 1 << 20,
+            rejected_overloaded: 5,
+            deadline_exceeded: 1,
+            panics_contained: 2,
+            client_retries: 7,
             batcher: Some(BatcherSnapshot { requests: 3, batches: 1, max_batch: 3 }),
         }),
         JobResponse::Stats(ServiceStats::default()),
@@ -515,7 +523,11 @@ fn typed_client_runs_plan_best_period_and_sweep() {
 #[test]
 fn stop_works_when_bound_to_unspecified_address() {
     let executor = Executor::new(ExecutorConfig::default());
-    let handle = serve(executor, ServiceConfig { addr: "0.0.0.0:0".into() }).unwrap();
+    let handle = serve(
+        executor,
+        ServiceConfig { addr: "0.0.0.0:0".into(), ..Default::default() },
+    )
+    .unwrap();
     assert!(handle.addr.ip().is_unspecified());
     // Connectable via loopback even though 0.0.0.0 itself is not.
     let mut client = ServiceClient::connect(&format!("127.0.0.1:{}", handle.addr.port())).unwrap();

@@ -1,0 +1,375 @@
+#![cfg(feature = "chaos")]
+//! Deterministic chaos harness: every fault in this suite is injected
+//! by an installed [`ckptfp::chaos::ChaosPlan`], so each failure mode
+//! reproduces bit-for-bit — no sleeps-and-hope, no random kill signals.
+//!
+//! The plan registry is process-global, so the tests serialize on one
+//! gate and always clear the plan through a drop guard: a failing
+//! assertion cannot leak injections into the next test.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use ckptfp::api::{
+    wire, ErrorCode, Executor, ExecutorConfig, JobRequest, JobResponse, PlanJob, ServiceClient,
+    ServiceStats, SimulateJob,
+};
+use ckptfp::chaos::{self, Action, ChaosPlan, Point};
+use ckptfp::config::{Predictor, Scenario};
+use ckptfp::coordinator::{serve, ServiceConfig, ServiceHandle};
+use ckptfp::dist::DistSpec;
+use ckptfp::model::StrategyKind;
+use ckptfp::trace::{ReplaySource, TraceBank};
+
+static GATE: Mutex<()> = Mutex::new(());
+
+/// Holds the inter-test gate and clears the global plan on drop, even
+/// when the test body panics.
+struct ChaosSession {
+    _gate: MutexGuard<'static, ()>,
+}
+
+impl Drop for ChaosSession {
+    fn drop(&mut self) {
+        chaos::reset();
+    }
+}
+
+fn begin() -> ChaosSession {
+    let gate = GATE.lock().unwrap_or_else(|p| p.into_inner());
+    chaos::reset();
+    ChaosSession { _gate: gate }
+}
+
+fn small_scenario() -> Scenario {
+    let mut s = Scenario::paper(1 << 16, Predictor::exact(0.85, 0.82));
+    s.fault_dist = DistSpec::Exp;
+    s.work = 2.0e5;
+    s
+}
+
+fn start_service(exec_cfg: ExecutorConfig, svc_cfg: ServiceConfig) -> (ServiceHandle, String) {
+    let handle = serve(Executor::new(exec_cfg), svc_cfg).unwrap();
+    let addr = handle.addr.to_string();
+    (handle, addr)
+}
+
+fn local_cfg() -> ServiceConfig {
+    ServiceConfig { addr: "127.0.0.1:0".into(), ..Default::default() }
+}
+
+/// Raw line-per-request connection, for byte-exact assertions and for
+/// driving several requests down one TCP stream.
+struct RawConn {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl RawConn {
+    fn connect(addr: &str) -> RawConn {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        RawConn { reader: BufReader::new(stream.try_clone().unwrap()), writer: stream }
+    }
+
+    fn send_line(&mut self, line: &str) {
+        self.writer.write_all(line.as_bytes()).unwrap();
+        self.writer.write_all(b"\n").unwrap();
+        self.writer.flush().unwrap();
+    }
+
+    fn recv_line(&mut self) -> String {
+        let mut out = String::new();
+        self.reader.read_line(&mut out).unwrap();
+        assert!(!out.is_empty(), "server closed the connection");
+        out.trim_end_matches('\n').to_string()
+    }
+
+    fn roundtrip(&mut self, line: &str) -> String {
+        self.send_line(line);
+        self.recv_line()
+    }
+}
+
+/// Poll `stats` over fresh connections until one gets through; sheds
+/// from a still-draining gate are retried, anything else is fatal.
+fn stats_eventually(addr: &str) -> ServiceStats {
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        let mut client = ServiceClient::connect(addr).unwrap();
+        match client.stats() {
+            Ok(s) => return s,
+            Err(_) if Instant::now() < deadline => std::thread::sleep(Duration::from_millis(50)),
+            Err(e) => panic!("stats never got through: {e:#}"),
+        }
+    }
+}
+
+fn expect_error(line: &str) -> ckptfp::api::ApiError {
+    match wire::decode_response(line).unwrap() {
+        JobResponse::Error(e) => e,
+        other => panic!("expected an error response, got {other:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Clean path: the chaos build with zero injections is the plain build
+// ---------------------------------------------------------------------------
+
+#[test]
+fn zero_injection_chaos_build_matches_plain_responses() {
+    let _s = begin(); // no plan installed: every hook is a no-op
+    let exec_cfg =
+        ExecutorConfig { workers: 2, reps_default: 4, ..Default::default() };
+    let (handle, addr) = start_service(exec_cfg.clone(), local_cfg());
+    let local = Executor::new(exec_cfg);
+    let mut conn = RawConn::connect(&addr);
+
+    // Deterministic jobs pin exact response bytes against the
+    // in-process encoding.
+    for req in [JobRequest::Ping, JobRequest::Plan(PlanJob::new(small_scenario()))] {
+        let served = conn.roundtrip(&wire::encode_request(&req));
+        let expect = wire::encode_response(&local.execute(&req), false);
+        assert_eq!(served, expect, "served bytes must match the in-process encoding");
+    }
+
+    // Simulate carries wall-clock `sim_seconds`; compare everything
+    // else bit-for-bit.
+    let mut job = SimulateJob::new(small_scenario(), StrategyKind::Young);
+    job.reps = 6;
+    job.workers = Some(2);
+    let served = conn.roundtrip(&wire::encode_request(&JobRequest::Simulate(job.clone())));
+    let mut served = match wire::decode_response(&served).unwrap() {
+        JobResponse::Simulate(r) => r,
+        other => panic!("expected a simulate response, got {other:?}"),
+    };
+    let mut expect = match local.execute(&JobRequest::Simulate(job)) {
+        JobResponse::Simulate(r) => r,
+        other => panic!("expected a simulate response, got {other:?}"),
+    };
+    served.sim_seconds = 0.0;
+    expect.sim_seconds = 0.0;
+    assert_eq!(served, expect);
+
+    assert!(chaos::fired().is_empty(), "nothing may fire without a plan");
+    drop(conn);
+    handle.stop();
+}
+
+// ---------------------------------------------------------------------------
+// Admission control
+// ---------------------------------------------------------------------------
+
+#[test]
+fn connection_burst_past_the_gate_is_shed_not_hung() {
+    let _s = begin();
+    let (handle, addr) = start_service(
+        ExecutorConfig { workers: 1, ..Default::default() },
+        ServiceConfig { addr: "127.0.0.1:0".into(), max_conns: 1, ..Default::default() },
+    );
+
+    // The ping proves connection A owns the only slot before B arrives.
+    let ping = wire::encode_request(&JobRequest::Ping);
+    let mut first = RawConn::connect(&addr);
+    assert!(first.roundtrip(&ping).contains("\"pong\""));
+
+    let started = Instant::now();
+    let mut second = RawConn::connect(&addr);
+    let err = expect_error(&second.roundtrip(&ping));
+    assert!(
+        started.elapsed() < Duration::from_secs(10),
+        "shed must be prompt, took {:?}",
+        started.elapsed()
+    );
+    assert_eq!(err.code, ErrorCode::Overloaded);
+    let hint = err.retry_after_ms.expect("overloaded must carry a retry hint");
+    assert!(hint > 0, "retry_after_ms = {hint}");
+
+    // Closing A frees the slot; stats (its own connection) gets
+    // through once the conn thread notices, and counts the shed.
+    drop(second);
+    drop(first);
+    let stats = stats_eventually(&addr);
+    assert!(stats.rejected_overloaded >= 1, "stats: {stats:?}");
+    handle.stop();
+}
+
+// ---------------------------------------------------------------------------
+// Panic isolation
+// ---------------------------------------------------------------------------
+
+#[test]
+fn injected_worker_panic_is_contained_to_one_response() {
+    let _s = begin();
+    let (handle, addr) = start_service(ExecutorConfig::default(), local_cfg());
+    chaos::install(ChaosPlan::new().at(Point::PoolTask, &[0], Action::Panic));
+
+    let mut job = SimulateJob::new(small_scenario(), StrategyKind::Young);
+    job.reps = 2;
+    job.workers = Some(1);
+    let line = wire::encode_request(&JobRequest::Simulate(job));
+    let mut conn = RawConn::connect(&addr);
+
+    // Hit 0 panics inside the replication worker: the client sees a
+    // structured internal error, not a dropped connection.
+    let err = expect_error(&conn.roundtrip(&line));
+    assert_eq!(err.code, ErrorCode::Internal);
+    assert!(err.message.contains("panic"), "{}", err.message);
+
+    // The very same connection serves the identical job next; later
+    // hits have no scheduled action.
+    match wire::decode_response(&conn.roundtrip(&line)).unwrap() {
+        JobResponse::Simulate(r) => assert_eq!(r.reps, 2),
+        other => panic!("expected success after the contained panic, got {other:?}"),
+    }
+    assert!(
+        chaos::fired().iter().any(|(p, _, a)| *p == Point::PoolTask && *a == Action::Panic),
+        "the injection must be on record: {:?}",
+        chaos::fired()
+    );
+    chaos::reset();
+
+    let stats = stats_eventually(&addr);
+    assert_eq!(stats.panics_contained, 1, "stats: {stats:?}");
+    drop(conn);
+    handle.stop();
+}
+
+// ---------------------------------------------------------------------------
+// Deadlines
+// ---------------------------------------------------------------------------
+
+#[test]
+fn oversized_simulate_trips_the_deadline_within_twice_the_budget() {
+    let _s = begin();
+    let budget = Duration::from_millis(500);
+    let (handle, addr) = start_service(
+        ExecutorConfig { workers: 2, deadline: Some(budget), ..Default::default() },
+        local_cfg(),
+    );
+    let mut job = SimulateJob::new(small_scenario(), StrategyKind::Young);
+    job.reps = 1_000_000; // far beyond a 500 ms budget, under the reps cap
+    job.workers = Some(2);
+
+    let mut conn = RawConn::connect(&addr);
+    let started = Instant::now();
+    let err = expect_error(&conn.roundtrip(&wire::encode_request(&JobRequest::Simulate(job))));
+    let elapsed = started.elapsed();
+
+    assert_eq!(err.code, ErrorCode::DeadlineExceeded);
+    assert!(err.message.contains("before the deadline"), "{}", err.message);
+    assert!(err.message.contains("of 1000000"), "{}", err.message);
+    assert!(elapsed < budget * 2, "replied in {elapsed:?} against a {budget:?} budget");
+
+    let stats = stats_eventually(&addr);
+    assert_eq!(stats.deadline_exceeded, 1, "stats: {stats:?}");
+    drop(conn);
+    handle.stop();
+}
+
+// ---------------------------------------------------------------------------
+// Graceful drain
+// ---------------------------------------------------------------------------
+
+#[test]
+fn stop_drains_the_in_flight_job() {
+    let _s = begin();
+    let (handle, addr) = start_service(
+        ExecutorConfig { workers: 2, ..Default::default() },
+        ServiceConfig {
+            addr: "127.0.0.1:0".into(),
+            drain: Duration::from_secs(30),
+            ..Default::default()
+        },
+    );
+    let mut job = SimulateJob::new(small_scenario(), StrategyKind::Young);
+    job.reps = 2000; // long enough that stop() lands mid-job
+    job.workers = Some(2);
+
+    let mut conn = RawConn::connect(&addr);
+    conn.send_line(&wire::encode_request(&JobRequest::Simulate(job)));
+    // Give the service time to pick the job up, then stop underneath it.
+    std::thread::sleep(Duration::from_millis(150));
+    let stopper = std::thread::spawn(move || handle.stop());
+
+    // Drain semantics: the in-flight response is still delivered whole.
+    match wire::decode_response(&conn.recv_line()).unwrap() {
+        JobResponse::Simulate(r) => assert_eq!(r.reps, 2000),
+        other => panic!("drain must deliver the in-flight response, got {other:?}"),
+    }
+    stopper.join().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Wire-level injections
+// ---------------------------------------------------------------------------
+
+#[test]
+fn torn_and_ballooned_lines_err_but_the_connection_survives() {
+    let _s = begin();
+    let (handle, addr) = start_service(ExecutorConfig::default(), local_cfg());
+    chaos::install(
+        ChaosPlan::new()
+            .at(Point::ServiceRead, &[0], Action::TornLine)
+            .at(Point::ServiceRead, &[1], Action::OversizedLine),
+    );
+    let ping = wire::encode_request(&JobRequest::Ping);
+    let mut conn = RawConn::connect(&addr);
+
+    // Hit 0: the line is torn mid-JSON.
+    let err = expect_error(&conn.roundtrip(&ping));
+    assert_eq!(err.code, ErrorCode::InvalidJson);
+
+    // Hit 1: the line balloons past the wire limit.
+    let err = expect_error(&conn.roundtrip(&ping));
+    assert_eq!(err.code, ErrorCode::BadRequest);
+    assert!(err.message.contains("exceeds"), "{}", err.message);
+
+    // Hit 2: no scheduled action — the same connection still answers.
+    match wire::decode_response(&conn.roundtrip(&ping)).unwrap() {
+        JobResponse::Pong => {}
+        other => panic!("expected pong after the injections, got {other:?}"),
+    }
+    assert_eq!(chaos::fired().len(), 2, "{:?}", chaos::fired());
+    drop(conn);
+    handle.stop();
+}
+
+// ---------------------------------------------------------------------------
+// Trace-bank injections (in process)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn forced_bank_decline_and_replay_underrun_take_the_fallback_paths() {
+    let _s = begin();
+    let s = small_scenario();
+    let lead = s.platform.c;
+
+    // Sanity: this scenario normally gets a bank.
+    let bank = TraceBank::try_build(&s, lead, 4).unwrap().expect("bank fits the budget");
+    assert_eq!(bank.reps(), 4);
+
+    // A forced decline looks exactly like the over-budget path: the
+    // caller gets Ok(None) and must keep live sessions.
+    chaos::install(ChaosPlan::new().at(Point::BankReserve, &[0], Action::DeclineBank));
+    assert!(TraceBank::try_reserve(&s, lead, 4).unwrap().is_none());
+    // Hit 1 has no action: the same call succeeds again.
+    assert!(TraceBank::try_reserve(&s, lead, 4).unwrap().is_some());
+
+    // A forced underrun reports a missing span even though rep 0 is
+    // materialized; the consumer's fall-back-to-live contract applies.
+    chaos::install(ChaosPlan::new().at(Point::BankReplay, &[0], Action::Underrun));
+    let mut source = ReplaySource::new(Arc::new(bank));
+    assert!(!source.reset(0), "hit 0 must be forced to underrun");
+    assert!(source.underrun());
+    assert!(source.reset(0), "hit 1 is clean: the span is really there");
+    assert!(!source.underrun());
+
+    let fired = chaos::fired();
+    assert!(
+        fired.iter().any(|(p, _, a)| *p == Point::BankReplay && *a == Action::Underrun),
+        "{fired:?}"
+    );
+}

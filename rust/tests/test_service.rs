@@ -27,7 +27,11 @@ fn spawn_batcher() -> Option<Batcher> {
 fn start_service() -> Option<(ckptfp::coordinator::ServiceHandle, String, Batcher)> {
     let batcher = spawn_batcher()?;
     let executor = Executor::with_batcher(batcher.clone(), ExecutorConfig::default());
-    let handle = serve(executor, ServiceConfig { addr: "127.0.0.1:0".into() }).unwrap();
+    let handle = serve(
+        executor,
+        ServiceConfig { addr: "127.0.0.1:0".into(), ..Default::default() },
+    )
+    .unwrap();
     let addr = handle.addr.to_string();
     Some((handle, addr, batcher))
 }

@@ -18,7 +18,11 @@ use ckptfp::verify::{
 
 fn start_local_service() -> (ServiceHandle, String) {
     let executor = Executor::new(ExecutorConfig::default());
-    let handle = serve(executor, ServiceConfig { addr: "127.0.0.1:0".into() }).unwrap();
+    let handle = serve(
+        executor,
+        ServiceConfig { addr: "127.0.0.1:0".into(), ..Default::default() },
+    )
+    .unwrap();
     let addr = handle.addr.to_string();
     (handle, addr)
 }

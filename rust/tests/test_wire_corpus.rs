@@ -1,0 +1,176 @@
+//! Malformed-wire corpus: hostile request lines against both the
+//! decoder (in process) and a live service (over TCP). The contract
+//! under test is uniform — every bad line yields a *structured* error
+//! in the caller's dialect, and the connection survives to serve the
+//! next request. Nothing here panics, hangs, or closes early.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use ckptfp::api::{wire, ErrorCode, Executor, ExecutorConfig, JobRequest, JobResponse};
+use ckptfp::coordinator::{serve, ServiceConfig, ServiceHandle};
+
+// ---------------------------------------------------------------------------
+// Decoder corpus
+// ---------------------------------------------------------------------------
+
+fn decode_err(line: &str) -> ckptfp::api::ApiError {
+    wire::decode_request(line).expect_err("hostile line must not decode")
+}
+
+#[test]
+fn oversized_line_is_rejected_with_the_limit_named() {
+    let line = format!(
+        "{{\"v\": 2, \"op\": \"ping\", \"pad\": \"{}\"}}",
+        "x".repeat(wire::MAX_LINE_BYTES)
+    );
+    let err = decode_err(&line);
+    assert_eq!(err.code, ErrorCode::BadRequest);
+    assert!(err.message.contains("exceeds"), "{}", err.message);
+    assert!(
+        err.message.contains(&wire::MAX_LINE_BYTES.to_string()),
+        "the limit must be named: {}",
+        err.message
+    );
+}
+
+#[test]
+fn truncated_json_is_invalid_json() {
+    for line in ["{\"v\": 2, \"op\":", "{\"v\": 2, \"op\": \"ping\"", "{", "[1, 2", "\"unterminated"] {
+        let err = decode_err(line);
+        assert_eq!(err.code, ErrorCode::InvalidJson, "{line}");
+    }
+}
+
+#[test]
+fn deep_nesting_is_rejected_not_overflowed() {
+    // 10k open brackets: a recursion bomb the parser's depth guard
+    // must catch long before the stack does.
+    let line = format!("{{\"v\": 2, \"op\": \"plan\", \"scenario\": {}", "[".repeat(10_000));
+    let err = decode_err(&line);
+    assert_eq!(err.code, ErrorCode::InvalidJson);
+    assert!(err.message.contains("nesting"), "{}", err.message);
+}
+
+#[test]
+fn wrong_typed_fields_are_structured_errors() {
+    // A number where the op string belongs.
+    let err = decode_err("{\"v\": 2, \"op\": 42}");
+    assert_eq!(err.code, ErrorCode::UnknownOp, "{}", err.message);
+
+    // An array where the scenario object belongs.
+    let err = decode_err("{\"v\": 2, \"op\": \"plan\", \"scenario\": [1, 2]}");
+    assert_eq!(err.code, ErrorCode::BadRequest);
+    assert!(err.message.contains("scenario"), "{}", err.message);
+
+    // A scalar at the top level is not a request object at all.
+    let err = decode_err("42");
+    assert_eq!(err.code, ErrorCode::BadRequest);
+
+    // A future protocol version is refused, not half-parsed.
+    let err = decode_err("{\"v\": 3, \"op\": \"ping\"}");
+    assert_eq!(err.code, ErrorCode::UnsupportedVersion);
+}
+
+// ---------------------------------------------------------------------------
+// Live-service corpus: the connection survives every bad line
+// ---------------------------------------------------------------------------
+
+struct RawConn {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl RawConn {
+    fn connect(addr: &str) -> RawConn {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        RawConn { reader: BufReader::new(stream.try_clone().unwrap()), writer: stream }
+    }
+
+    /// Send raw bytes (a trailing newline is appended) and read one
+    /// response line.
+    fn roundtrip_bytes(&mut self, payload: &[u8]) -> String {
+        self.writer.write_all(payload).unwrap();
+        self.writer.write_all(b"\n").unwrap();
+        self.writer.flush().unwrap();
+        let mut out = String::new();
+        self.reader.read_line(&mut out).unwrap();
+        assert!(!out.is_empty(), "server closed the connection");
+        out.trim_end_matches('\n').to_string()
+    }
+
+    fn expect_pong(&mut self) {
+        let line = self.roundtrip_bytes(wire::encode_request(&JobRequest::Ping).as_bytes());
+        match wire::decode_response(&line).unwrap() {
+            JobResponse::Pong => {}
+            other => panic!("expected pong, got {other:?}"),
+        }
+    }
+}
+
+fn start_service() -> (ServiceHandle, String) {
+    let handle = serve(
+        Executor::new(ExecutorConfig::default()),
+        ServiceConfig { addr: "127.0.0.1:0".into(), ..Default::default() },
+    )
+    .unwrap();
+    let addr = handle.addr.to_string();
+    (handle, addr)
+}
+
+#[test]
+fn connection_survives_the_whole_hostile_corpus() {
+    let (handle, addr) = start_service();
+    let mut conn = RawConn::connect(&addr);
+
+    // Invalid UTF-8: never reaches the decoder, still answered.
+    let line = conn.roundtrip_bytes(b"\xff\xfe{\"op\": \"ping\"}");
+    match wire::decode_response(&line).unwrap() {
+        JobResponse::Error(e) => {
+            assert_eq!(e.code, ErrorCode::InvalidJson);
+            assert!(e.message.contains("UTF-8"), "{}", e.message);
+        }
+        other => panic!("expected an error for invalid UTF-8, got {other:?}"),
+    }
+    conn.expect_pong();
+
+    // Truncated JSON over the wire.
+    let line = conn.roundtrip_bytes(b"{\"v\": 2, \"op\":");
+    match wire::decode_response(&line).unwrap() {
+        JobResponse::Error(e) => assert_eq!(e.code, ErrorCode::InvalidJson),
+        other => panic!("expected an error for truncated JSON, got {other:?}"),
+    }
+    conn.expect_pong();
+
+    // Oversized line: past the wire limit but below the hard cutoff
+    // where the service gives up on the connection entirely.
+    let big = vec![b'x'; wire::MAX_LINE_BYTES + 10];
+    let line = conn.roundtrip_bytes(&big);
+    match wire::decode_response(&line).unwrap() {
+        JobResponse::Error(e) => {
+            assert_eq!(e.code, ErrorCode::BadRequest);
+            assert!(e.message.contains("exceeds"), "{}", e.message);
+        }
+        other => panic!("expected an error for the oversized line, got {other:?}"),
+    }
+    conn.expect_pong();
+
+    // Wrong-typed op, this time in the legacy dialect: the error comes
+    // back in the legacy shape (no "v" marker).
+    let line = conn.roundtrip_bytes(b"{\"op\": 42}");
+    assert!(line.contains("\"ok\":false"), "{line}");
+    assert!(!line.contains("\"v\":"), "legacy dialect must not carry 'v': {line}");
+    conn.expect_pong();
+
+    // The error tally reflects the corpus.
+    let line = conn.roundtrip_bytes(wire::encode_request(&JobRequest::Stats).as_bytes());
+    match wire::decode_response(&line).unwrap() {
+        JobResponse::Stats(s) => assert!(s.errors >= 4, "stats: {s:?}"),
+        other => panic!("expected stats, got {other:?}"),
+    }
+
+    drop(conn);
+    handle.stop();
+}

@@ -147,6 +147,10 @@ fn golden_stats() -> ServiceStats {
         bank_replays: 1536,
         bank_fallbacks: 3,
         bank_bytes_resident: 1 << 20,
+        rejected_overloaded: 5,
+        deadline_exceeded: 1,
+        panics_contained: 2,
+        client_retries: 7,
         batcher: Some(BatcherSnapshot { requests: 3, batches: 1, max_batch: 3 }),
     }
 }
@@ -235,6 +239,13 @@ fn golden_responses() -> Vec<JobResponse> {
         JobResponse::Stats(ServiceStats::default()),
         JobResponse::Pong,
         JobResponse::Error(ApiError::bad_request("work must be positive")),
+        JobResponse::Error(ApiError::overloaded(
+            "service at capacity (32 jobs in flight); retry after 250 ms",
+            250,
+        )),
+        JobResponse::Error(ApiError::deadline_exceeded(
+            "simulate finished 96 of 1000000 replications before the deadline",
+        )),
     ]
 }
 

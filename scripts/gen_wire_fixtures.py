@@ -189,6 +189,12 @@ STATS_PAYLOAD = {
     "bank_replays": 1536,
     "bank_fallbacks": 3,
     "bank_bytes_resident": 1048576,
+    # Additive robustness counters (v2 only): shed load, tripped
+    # deadlines, contained panics, client-side transport retries.
+    "rejected_overloaded": 5,
+    "deadline_exceeded": 1,
+    "panics_contained": 2,
+    "client_retries": 7,
     "batcher": {"requests": 3, "batches": 1, "max_batch": 3},
 }
 
@@ -196,7 +202,8 @@ STATS_DEFAULT = {
     "requests": 0, "errors": 0, "plans": 0, "simulates": 0, "best_periods": 0,
     "sweeps": 0, "verifies": 0, "lat_p50_s": 0, "lat_p95_s": 0, "lat_p99_s": 0,
     "lat_n": 0, "banks_built": 0, "bank_replays": 0, "bank_fallbacks": 0,
-    "bank_bytes_resident": 0,
+    "bank_bytes_resident": 0, "rejected_overloaded": 0, "deadline_exceeded": 0,
+    "panics_contained": 0, "client_retries": 0,
 }
 
 RESPONSES_V2 = [
@@ -209,6 +216,13 @@ RESPONSES_V2 = [
     {"v": 2, "ok": True, "job": "stats", **STATS_DEFAULT},
     {"v": 2, "ok": True, "job": "ping", "pong": True},
     {"v": 2, "ok": False, "code": "bad_request", "error": "work must be positive"},
+    # Robustness errors: `overloaded` carries an additive retry hint;
+    # `deadline_exceeded` reports partial progress in its message.
+    {"v": 2, "ok": False, "code": "overloaded",
+     "error": "service at capacity (32 jobs in flight); retry after 250 ms",
+     "retry_after_ms": 250},
+    {"v": 2, "ok": False, "code": "deadline_exceeded",
+     "error": "simulate finished 96 of 1000000 replications before the deadline"},
 ]
 
 # Legacy (v1) response shapes: no "v"/"job"/"planner" markers; stats
