@@ -9,6 +9,7 @@
 //!   pool                 worker-pool scaling (streaming fold + sessions)
 //!   best_period          brute-force period search, 1 worker vs all
 //!   best_period_crn      replay-backed sweep vs live sweep at equal reps
+//!   platform_step        multi-node platform source vs the classic engine
 //!   model                closed-form planner throughput (the non-AOT baseline)
 //!
 //! Every run also emits `BENCH_perf.json` (one object per executed
@@ -391,6 +392,37 @@ fn bench_best_period_crn(rec: &mut Recorder) {
     rec.push("best_period_crn", fields);
 }
 
+fn bench_platform_step(rec: &mut Recorder) {
+    println!("== platform layer (multi-node event merge overhead) ==");
+    // The same NoCkptI workload as `sim`, stepped through the platform
+    // source at K = 1, 4 and 16 nodes. K = 1 vs the classic session is
+    // the abstraction tax (bit-identical outcomes, so the delta is pure
+    // heap/indirection cost); K > 1 adds the per-node stream merge.
+    let mut s = Scenario::paper(1 << 19, predictor_yu(300.0));
+    s.fault_dist = DistSpec::Exp;
+    let spec = spec_for(StrategyKind::NoCkptI, &s, Capping::Uncapped);
+    let mut fields: Vec<(&str, Json)> = Vec::new();
+
+    let mut classic = SimSession::new(&s, &spec).expect("session");
+    let (classic_msegs, classic_runs, _) =
+        segment_throughput(|rep| classic.run(rep).n_segments, 1.0);
+    println!("  classic engine               {classic_msegs:>6.2} M segments/s ({classic_runs} runs)");
+    fields.push(("classic_msegments_per_s", Json::Num(classic_msegs)));
+
+    for (k, key) in [(1u64, "msegs_k1"), (4, "msegs_k4"), (16, "msegs_k16")] {
+        let pspec = ckptfp::sim::PlatformSpec { nodes: k, ..Default::default() };
+        let mut session =
+            SimSession::new_on_platform(&s, &spec, &pspec).expect("platform session");
+        let (msegs, runs, _) = segment_throughput(|rep| session.run(rep).n_segments, 1.0);
+        println!("  platform K={k:<2}                {msegs:>6.2} M segments/s ({runs} runs)");
+        fields.push((key, Json::Num(msegs)));
+        if k == 1 {
+            println!("  K=1 abstraction tax: {:.1}%", (1.0 - msegs / classic_msegs) * 100.0);
+        }
+    }
+    rec.push("platform_step", fields);
+}
+
 fn bench_model(rec: &mut Recorder) {
     println!("== closed-form planner (Rust baseline) ==");
     let batch = params_batch(64);
@@ -430,6 +462,9 @@ fn main() {
     }
     if run("best_period_crn") {
         bench_best_period_crn(&mut rec);
+    }
+    if run("platform_step") {
+        bench_platform_step(&mut rec);
     }
     if run("model") {
         bench_model(&mut rec);

@@ -21,9 +21,10 @@ use crate::model::{self, Params, StrategyKind};
 use crate::sim::{run_replication_range_with_cancel, SimSession};
 use crate::util::cancel::CancelToken;
 use crate::strategies::{
-    best_period_with, best_policy_with, resolve_policy, spec_for, BestPeriodOptions, PolicySpec,
+    best_period_on_platform, best_period_with, best_policy_with, resolve_policy, spec_for,
+    BestPeriodOptions, PolicySpec,
 };
-use crate::verify::{run_conformance, VerifyOptions, VerifyReport};
+use crate::verify::{run_conformance_filtered, VerifyOptions, VerifyReport};
 
 /// Tuning for an [`Executor`].
 #[derive(Debug, Clone)]
@@ -229,6 +230,10 @@ impl Executor {
                 self.cfg.reps_cap
             )));
         }
+        // The additive platform field: a non-`single` spec swaps the
+        // session factory to the multi-node engine; `single` (or no
+        // platform at all) keeps the classic path bit-identical.
+        let platform = job.platform.as_ref().filter(|p| !p.is_single());
         let (name, agg) = match &job.policy {
             // The policy layer: resolve against the scenario and run on
             // the same pool path. A Strategy(...) policy is
@@ -237,7 +242,10 @@ impl Executor {
             Some(pspec) => {
                 let rp = resolve_policy(pspec, &job.scenario).map_err(ApiError::from_invalid)?;
                 let agg = run_replication_range_with_cancel(0, reps, workers, cancel, || {
-                    SimSession::from_policy(&rp.scenario, rp.policy)
+                    match platform {
+                        Some(p) => SimSession::on_platform(&rp.scenario, rp.policy, p),
+                        None => SimSession::from_policy(&rp.scenario, rp.policy),
+                    }
                 })
                 .map_err(|e| self.classify_pool_error(e))?;
                 (rp.name, agg)
@@ -248,7 +256,10 @@ impl Executor {
                 let s = scenario_for(job.strategy, &job.scenario);
                 let spec = spec_for(job.strategy, &s, model::Capping::Uncapped);
                 let agg = run_replication_range_with_cancel(0, reps, workers, cancel, || {
-                    SimSession::new(&s, &spec)
+                    match platform {
+                        Some(p) => SimSession::new_on_platform(&s, &spec, p),
+                        None => SimSession::new(&s, &spec),
+                    }
                 })
                 .map_err(|e| self.classify_pool_error(e))?;
                 (spec.name, agg)
@@ -285,17 +296,38 @@ impl Executor {
             return Err(ApiError::bad_request("best_period needs at least 2 candidates"));
         }
         let opts = BestPeriodOptions { workers, prune: job.prune, replay: true };
-        let (name, res) = match &job.policy {
-            Some(pspec) => {
+        let platform = job.platform.as_ref().filter(|p| !p.is_single());
+        let (name, res) = match (&job.policy, platform) {
+            (Some(pspec), None) => {
                 let res = best_policy_with(&job.scenario, pspec, reps, candidates as usize, &opts)
                     .map_err(ApiError::from_invalid)?;
                 (pspec.to_string(), res)
             }
-            None => {
+            // A platform search sweeps a strategy's period; the
+            // non-paper policies have no platform search (their tuning
+            // parameter is entangled with the single-stream hazard).
+            (Some(PolicySpec::Strategy(kind)), Some(p)) => {
+                let s = scenario_for(*kind, &job.scenario);
+                let spec = spec_for(*kind, &s, model::Capping::Uncapped);
+                let res =
+                    best_period_on_platform(&s, &spec, p, reps, candidates as usize, &opts)
+                        .map_err(ApiError::from_invalid)?;
+                (spec.name, res)
+            }
+            (Some(other), Some(p)) => {
+                return Err(ApiError::new(
+                    ErrorCode::Unsupported,
+                    format!("policy '{other}' cannot be searched on platform '{p}'"),
+                ))
+            }
+            (None, _) => {
                 let s = scenario_for(job.strategy, &job.scenario);
                 let spec = spec_for(job.strategy, &s, model::Capping::Uncapped);
-                let res = best_period_with(&s, &spec, reps, candidates as usize, &opts)
-                    .map_err(ApiError::from_invalid)?;
+                let res = match platform {
+                    Some(p) => best_period_on_platform(&s, &spec, p, reps, candidates as usize, &opts),
+                    None => best_period_with(&s, &spec, reps, candidates as usize, &opts),
+                }
+                .map_err(ApiError::from_invalid)?;
                 (spec.name, res)
             }
         };
@@ -366,7 +398,8 @@ impl Executor {
         let reps0 = if job.reps == 0 { d_reps } else { job.reps };
         let budget = if job.budget == 0 { d_budget.max(reps0) } else { job.budget.max(reps0) };
         let opts = VerifyOptions { reps0, budget, workers };
-        run_conformance(job.grid, job.policy.as_ref(), &opts).map_err(ApiError::from_invalid)
+        run_conformance_filtered(job.grid, job.policy.as_ref(), job.platform.as_ref(), &opts)
+            .map_err(ApiError::from_invalid)
     }
 
     pub fn stats(&self) -> ServiceStats {
@@ -590,6 +623,55 @@ mod tests {
         // empty (vacuously green) report.
         job.policy = Some(PolicySpec::AdaptivePeriod { gain: 9.0 });
         assert_eq!(exec.verify(&job).unwrap_err().code, ErrorCode::BadRequest);
+    }
+
+    #[test]
+    fn simulate_on_a_single_platform_is_the_classic_path() {
+        // platform: "single" must not perturb a bit of the classic result.
+        let exec = Executor::local();
+        let mut classic = SimulateJob::new(small_scenario(), StrategyKind::Young);
+        classic.reps = 6;
+        classic.workers = Some(2);
+        let mut on_platform = classic.clone();
+        on_platform.platform = Some(crate::sim::PlatformSpec::default());
+        let a = exec.simulate(&classic).unwrap();
+        let b = exec.simulate(&on_platform).unwrap();
+        assert_eq!(a.mean_waste.to_bits(), b.mean_waste.to_bits());
+        assert_eq!(a.n_faults, b.n_faults);
+        assert_eq!(a.n_ckpts, b.n_ckpts);
+    }
+
+    #[test]
+    fn simulate_runs_multi_node_platforms_end_to_end() {
+        let exec = Executor::local();
+        let mut job = SimulateJob::new(small_scenario(), StrategyKind::Young);
+        job.reps = 6;
+        job.workers = Some(2);
+        job.platform = Some("nodes=4".parse().unwrap());
+        let res = exec.simulate(&job).unwrap();
+        assert_eq!(res.completion_rate, 1.0);
+        assert!(res.mean_waste > 0.0 && res.mean_waste < 1.0);
+        assert!(res.n_faults > 0);
+        // The policy path reaches the platform engine too.
+        job.policy = Some(PolicySpec::RiskThreshold { kappa: 1.0 });
+        let res = exec.simulate(&job).unwrap();
+        assert!(res.mean_waste > 0.0 && res.mean_waste < 1.0);
+    }
+
+    #[test]
+    fn best_period_platform_rejects_non_strategy_policies() {
+        let exec = Executor::local();
+        let mut job = BestPeriodJob::new(small_scenario(), StrategyKind::Young);
+        job.reps = 2;
+        job.candidates = 3;
+        job.platform = Some("nodes=4".parse().unwrap());
+        job.policy = Some(PolicySpec::RiskThreshold { kappa: 1.0 });
+        let err = exec.best_period(&job).unwrap_err();
+        assert_eq!(err.code, ErrorCode::Unsupported);
+        assert!(err.message.contains("nodes=4"), "{}", err.message);
+        // A Strategy(...) policy (and the plain strategy field) search fine.
+        job.policy = Some(PolicySpec::Strategy(StrategyKind::Young));
+        assert!(exec.best_period(&job).is_ok());
     }
 
     #[test]

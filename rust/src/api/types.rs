@@ -15,6 +15,7 @@
 
 use crate::config::Scenario;
 use crate::model::{Capping, StrategyKind};
+use crate::sim::PlatformSpec;
 use crate::strategies::PolicySpec;
 use crate::verify::{GridKind, VerifyReport};
 
@@ -88,11 +89,15 @@ pub struct SimulateJob {
     /// how the non-paper policies (`adaptive`, `risk`) are reached
     /// over the wire.
     pub policy: Option<PolicySpec>,
+    /// Additive v2 field: simulate on this multi-node platform
+    /// instead of the classic single-stream engine. `None` and the
+    /// `single` spec both mean the classic path.
+    pub platform: Option<PlatformSpec>,
 }
 
 impl SimulateJob {
     pub fn new(scenario: Scenario, strategy: StrategyKind) -> SimulateJob {
-        SimulateJob { scenario, strategy, reps: 0, workers: None, policy: None }
+        SimulateJob { scenario, strategy, reps: 0, workers: None, policy: None, platform: None }
     }
 }
 
@@ -114,6 +119,10 @@ pub struct BestPeriodJob {
     /// response's `t_r`/sweep carry the parameter in the policy's own
     /// units (T_R seconds, adaptive gain, or risk kappa).
     pub policy: Option<PolicySpec>,
+    /// Additive v2 field: search on this multi-node platform. Only
+    /// plain strategies (and `Strategy(..)` policies) support a
+    /// platform search; other policies answer `unsupported`.
+    pub platform: Option<PlatformSpec>,
 }
 
 impl BestPeriodJob {
@@ -126,6 +135,7 @@ impl BestPeriodJob {
             workers: None,
             prune: false,
             policy: None,
+            platform: None,
         }
     }
 }
@@ -151,11 +161,14 @@ pub struct VerifyJob {
     pub budget: u64,
     /// Pool width; `None` = the executor's configured default.
     pub workers: Option<u64>,
+    /// Additive v2 field: restrict to cases whose platform equals
+    /// this spec (use `single` to keep only the classic cases).
+    pub platform: Option<PlatformSpec>,
 }
 
 impl VerifyJob {
     pub fn new(grid: GridKind) -> VerifyJob {
-        VerifyJob { grid, policy: None, reps: 0, budget: 0, workers: None }
+        VerifyJob { grid, policy: None, reps: 0, budget: 0, workers: None, platform: None }
     }
 }
 

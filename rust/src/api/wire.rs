@@ -82,6 +82,7 @@ pub fn decode_request(line: &str) -> Result<Decoded, ApiError> {
                 reps: u64_or(&v, "reps", 0),
                 workers: opt_u64(&v, "workers"),
                 policy,
+                platform: platform_from_json(&v)?,
             })
         }
         "best_period" | "best-period" => {
@@ -94,6 +95,7 @@ pub fn decode_request(line: &str) -> Result<Decoded, ApiError> {
                 workers: opt_u64(&v, "workers"),
                 prune: v.get("prune").and_then(Json::as_bool).unwrap_or(false),
                 policy,
+                platform: platform_from_json(&v)?,
             })
         }
         "sweep" => {
@@ -122,6 +124,7 @@ pub fn decode_request(line: &str) -> Result<Decoded, ApiError> {
                 reps: u64_or(&v, "reps", 0),
                 budget: u64_or(&v, "budget", 0),
                 workers: opt_u64(&v, "workers"),
+                platform: platform_from_json(&v)?,
             })
         }
         "stats" => JobRequest::Stats,
@@ -204,6 +207,9 @@ pub fn encode_request(req: &JobRequest) -> String {
             if let Some(p) = &job.policy {
                 fields.push(("policy", Json::Str(p.to_string())));
             }
+            if let Some(p) = &job.platform {
+                fields.push(("platform", Json::Str(p.to_string())));
+            }
         }
         JobRequest::BestPeriod(job) => {
             fields.push(("scenario", scenario_to_json(&job.scenario)));
@@ -216,6 +222,9 @@ pub fn encode_request(req: &JobRequest) -> String {
             fields.push(("prune", Json::Bool(job.prune)));
             if let Some(p) = &job.policy {
                 fields.push(("policy", Json::Str(p.to_string())));
+            }
+            if let Some(p) = &job.platform {
+                fields.push(("platform", Json::Str(p.to_string())));
             }
         }
         JobRequest::Sweep(job) => {
@@ -235,6 +244,9 @@ pub fn encode_request(req: &JobRequest) -> String {
             }
             if let Some(p) = &job.policy {
                 fields.push(("policy", Json::Str(p.to_string())));
+            }
+            if let Some(p) = &job.platform {
+                fields.push(("platform", Json::Str(p.to_string())));
             }
         }
         JobRequest::Stats | JobRequest::Ping => {}
@@ -722,6 +734,22 @@ fn policy_from_json(v: &Json) -> Result<Option<PolicySpec>, ApiError> {
         Some(j) => match j.as_str() {
             Some(s) => s.parse::<PolicySpec>().map(Some).map_err(ApiError::from_invalid),
             None => Err(ApiError::bad_request("'policy' must be a policy spec string")),
+        },
+    }
+}
+
+/// The additive v2 `platform` field: a platform spec string
+/// (`"single"`, `"nodes=4"`, `"nodes=8,commit=0.1"`, …); absent means
+/// the classic single-stream engine.
+fn platform_from_json(v: &Json) -> Result<Option<crate::sim::PlatformSpec>, ApiError> {
+    match v.get("platform") {
+        None => Ok(None),
+        Some(j) => match j.as_str() {
+            Some(s) => s
+                .parse::<crate::sim::PlatformSpec>()
+                .map(Some)
+                .map_err(ApiError::from_invalid),
+            None => Err(ApiError::bad_request("'platform' must be a platform spec string")),
         },
     }
 }

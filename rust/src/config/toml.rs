@@ -201,6 +201,62 @@ pub fn policy_from_table(t: &Table) -> anyhow::Result<Option<crate::strategies::
     Ok(Some(spec))
 }
 
+/// Read the multi-node keys of the `[platform]` table into a
+/// [`crate::sim::PlatformSpec`]. The section is shared with the
+/// hardware keys (`n_procs`, `c`, `d`, `r`) consumed by
+/// [`scenario_from_table`]; the platform-subsystem keys are additive
+/// and gated on `nodes` — naming any of them without `nodes` is an
+/// error rather than a silently single-node run:
+///
+/// ```toml
+/// [platform]
+/// nodes = 8
+/// commit = 0.05
+/// restart = "partial"
+/// group = 4
+/// spatial = 0.25
+/// cascade = 0.1
+/// delta = 300
+/// ```
+pub fn platform_from_table(t: &Table) -> anyhow::Result<Option<crate::sim::PlatformSpec>> {
+    use crate::sim::{PlatformSpec, RestartScope};
+    let Some(nodes) = t.num("platform.nodes") else {
+        let orphans = ["commit", "restart", "group", "spatial", "cascade", "delta"];
+        for key in orphans {
+            anyhow::ensure!(
+                t.get(&format!("platform.{key}")).is_none(),
+                "platform.{key} needs platform.nodes"
+            );
+        }
+        return Ok(None);
+    };
+    let mut spec = PlatformSpec { nodes: nodes as u64, ..PlatformSpec::default() };
+    if let Some(x) = t.num("platform.commit") {
+        spec.commit = x;
+    }
+    if let Some(x) = t.str("platform.restart") {
+        spec.restart = match x {
+            "full" => RestartScope::Full,
+            "partial" => RestartScope::Partial,
+            other => anyhow::bail!("platform.restart must be \"full\" or \"partial\", got '{other}'"),
+        };
+    }
+    if let Some(x) = t.num("platform.group") {
+        spec.group = x as u64;
+    }
+    if let Some(x) = t.num("platform.spatial") {
+        spec.spatial = x;
+    }
+    if let Some(x) = t.num("platform.cascade") {
+        spec.cascade = x;
+    }
+    if let Some(x) = t.num("platform.delta") {
+        spec.delta = x;
+    }
+    spec.validate()?;
+    Ok(Some(spec))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -297,5 +353,40 @@ work = 1.0e6
         assert!(policy_from_table(&t).is_err());
         let t = Table::parse("[policy]\nkappa = 2").unwrap();
         assert!(policy_from_table(&t).is_err());
+    }
+
+    #[test]
+    fn platform_table_forms() {
+        use crate::sim::{PlatformSpec, RestartScope};
+        // Absent keys: no platform (the hardware keys don't count).
+        let t = Table::parse(SAMPLE).unwrap();
+        assert_eq!(platform_from_table(&t).unwrap(), None);
+        // Nodes alone.
+        let t = Table::parse("[platform]\nnodes = 4").unwrap();
+        assert_eq!(
+            platform_from_table(&t).unwrap(),
+            Some(PlatformSpec { nodes: 4, ..PlatformSpec::default() })
+        );
+        // The full key set.
+        let t = Table::parse(
+            "[platform]\nnodes = 8\ncommit = 0.05\nrestart = \"partial\"\n\
+             group = 4\nspatial = 0.25\ncascade = 0.1\ndelta = 120",
+        )
+        .unwrap();
+        let spec = platform_from_table(&t).unwrap().unwrap();
+        assert_eq!(spec.nodes, 8);
+        assert_eq!(spec.commit, 0.05);
+        assert_eq!(spec.restart, RestartScope::Partial);
+        assert_eq!(spec.group, 4);
+        assert_eq!(spec.spatial, 0.25);
+        assert_eq!(spec.cascade, 0.1);
+        assert_eq!(spec.delta, 120.0);
+        // Orphaned parameters, bad restart, and invalid specs error.
+        let t = Table::parse("[platform]\nspatial = 0.5").unwrap();
+        assert!(platform_from_table(&t).is_err());
+        let t = Table::parse("[platform]\nnodes = 4\nrestart = \"half\"").unwrap();
+        assert!(platform_from_table(&t).is_err());
+        let t = Table::parse("[platform]\nnodes = 0").unwrap();
+        assert!(platform_from_table(&t).is_err());
     }
 }

@@ -8,6 +8,7 @@ pub mod ablations;
 pub mod catalog;
 pub mod conformance;
 pub mod figures;
+pub mod platform;
 pub mod policies;
 pub mod sweep;
 pub mod tables;
@@ -226,8 +227,9 @@ pub fn run_experiment(id: &str, opts: &ExpOptions) -> anyhow::Result<ExperimentR
         "abl-cap" => ablations::ablation_cap(opts),
         "policy-comparison" | "policy_comparison" => policies::policy_comparison(opts),
         "conformance" => conformance::conformance(opts),
+        "platform-scaling" | "platform_scaling" => platform::platform_scaling(opts),
         other => anyhow::bail!(
-            "unknown experiment '{other}' (expected fig4..fig11 | tab1..tab3 | abl-q | abl-daly | abl-lead | abl-cap | policy-comparison | conformance)"
+            "unknown experiment '{other}' (expected fig4..fig11 | tab1..tab3 | abl-q | abl-daly | abl-lead | abl-cap | policy-comparison | conformance | platform-scaling)"
         ),
     }
 }
@@ -238,10 +240,19 @@ pub fn paper_experiments() -> Vec<&'static str> {
 }
 
 /// Everything: the paper's figures/tables, the ablations, the
-/// policy-layer comparison, and the conformance grid.
+/// policy-layer comparison, the conformance grid, and the platform
+/// node-count scaling study.
 pub fn all_experiments() -> Vec<&'static str> {
     let mut v = paper_experiments();
-    v.extend(["abl-q", "abl-daly", "abl-lead", "abl-cap", "policy-comparison", "conformance"]);
+    v.extend([
+        "abl-q",
+        "abl-daly",
+        "abl-lead",
+        "abl-cap",
+        "policy-comparison",
+        "conformance",
+        "platform-scaling",
+    ]);
     v
 }
 
@@ -293,11 +304,12 @@ mod tests {
     #[test]
     fn experiment_ids_complete() {
         // One per figure and table of §5 — the (d) deliverable checklist —
-        // plus the four ablations, the policy comparison and the
-        // conformance grid.
+        // plus the four ablations, the policy comparison, the
+        // conformance grid and the platform scaling study.
         assert_eq!(paper_experiments().len(), 11);
-        assert_eq!(all_experiments().len(), 17);
+        assert_eq!(all_experiments().len(), 18);
         assert!(all_experiments().contains(&"policy-comparison"));
         assert!(all_experiments().contains(&"conformance"));
+        assert!(all_experiments().contains(&"platform-scaling"));
     }
 }

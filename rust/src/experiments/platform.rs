@@ -1,0 +1,145 @@
+//! Platform scaling — the multi-node subsystem's headline experiment:
+//! simulated waste as the same aggregate failure rate is spread over
+//! K nodes of the `sim::platform` layer.
+//!
+//! Setting: Exponential faults at the paper's N = 2^16 aggregate MTBF,
+//! the Yu predictor (p = 0.82, r = 0.85, I = 300 s). Three series per
+//! node count:
+//!
+//! * `Young` / `ExactPrediction` on an *uncorrelated* K-node platform —
+//!   by Poisson superposition these should be flat in K (the aggregate
+//!   law is invariant), which is exactly the conformance subsystem's
+//!   N-node acceptance criterion re-plotted as an experiment;
+//! * `Young@correlated` on a spatially-correlated platform with a
+//!   cascade kernel — the waste excess over the flat series is the
+//!   measured cost of correlated failures the closed forms cannot see.
+
+use super::{replicate_stat_with, scenario_for, ExpOptions, ExperimentResult};
+use crate::config::{predictor_yu, Scenario};
+use crate::model::{Capping, StrategyKind};
+use crate::report::{FigureData, Table};
+use crate::sim::{Outcome, PlatformSpec, SimSession};
+use crate::strategies::spec_for;
+
+/// Node counts swept by the experiment.
+pub fn node_counts() -> Vec<u64> {
+    vec![1, 2, 4, 8, 16]
+}
+
+/// The correlated variant at `nodes`: groups of 4, a 25% spatial
+/// sympathy and a 10% cascade boost over a 5-minute window.
+pub fn correlated_spec(nodes: u64) -> PlatformSpec {
+    PlatformSpec {
+        nodes,
+        group: nodes.min(4),
+        spatial: 0.25,
+        cascade: 0.1,
+        ..PlatformSpec::default()
+    }
+}
+
+/// The base scenario: §5 platform at N = 2^16 under Exponential faults
+/// (so the uncorrelated series has a closed-form reference).
+fn base_scenario() -> Scenario {
+    let mut s = Scenario::paper(1 << 16, predictor_yu(300.0));
+    s.fault_dist = crate::dist::DistSpec::Exp;
+    s
+}
+
+/// Waste of Young and EXACTPREDICTION over the node-count sweep, on
+/// uncorrelated and correlated platforms, plus a summary table.
+pub fn platform_scaling(opts: &ExpOptions) -> anyhow::Result<ExperimentResult> {
+    let mut fig = FigureData::new("platform-scaling", "nodes", "waste");
+    let mut t = Table::new(["nodes", "platform", "strategy", "waste", "ci95"]);
+    let base = base_scenario();
+
+    let mut run = |label: &str, kind: StrategyKind, pspec: &PlatformSpec| {
+        let s = scenario_for(kind, &base);
+        let spec = spec_for(kind, &s, Capping::Uncapped);
+        let sum = replicate_stat_with(
+            opts.reps,
+            opts.workers,
+            || {
+                SimSession::new_on_platform(&s, &spec, pspec)
+                    .expect("platform specs built by this experiment are valid")
+            },
+            Outcome::waste,
+        );
+        fig.series_mut(label).push(pspec.nodes as f64, sum.mean());
+        t.row([
+            pspec.nodes.to_string(),
+            pspec.to_string(),
+            kind.name().to_string(),
+            format!("{:.4}", sum.mean()),
+            format!("{:.4}", sum.ci95()),
+        ]);
+    };
+
+    for k in node_counts() {
+        let flat = PlatformSpec { nodes: k, ..PlatformSpec::default() };
+        run("Young", StrategyKind::Young, &flat);
+        run("ExactPrediction", StrategyKind::ExactPrediction, &flat);
+        run("Young@correlated", StrategyKind::Young, &correlated_spec(k));
+    }
+
+    let mut result = ExperimentResult::default();
+    result.figures.push(fig);
+    result.tables.push(("platform-scaling".into(), t));
+    Ok(result)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn platform_scaling_structure() {
+        let opts = ExpOptions { reps: 2, ..ExpOptions::quick() };
+        let r = platform_scaling(&opts).unwrap();
+        assert_eq!(r.figures.len(), 1);
+        let fig = &r.figures[0];
+        assert_eq!(fig.series.len(), 3);
+        for s in &fig.series {
+            assert_eq!(s.points.len(), node_counts().len(), "{}", s.label);
+            for &(_, w) in &s.points {
+                assert!((0.0..=1.0).contains(&w), "{}: waste {w}", s.label);
+            }
+        }
+        assert!(fig.get("Young").is_some());
+        assert!(fig.get("ExactPrediction").is_some());
+        assert!(fig.get("Young@correlated").is_some());
+        assert_eq!(r.tables.len(), 1);
+        // Header + separator + 3 rows per node count.
+        let rendered = r.tables[0].1.render();
+        assert_eq!(rendered.lines().count(), 2 + 3 * node_counts().len());
+    }
+
+    #[test]
+    fn uncorrelated_series_is_flat_in_k() {
+        // Poisson superposition: the aggregate failure law is the same
+        // at every K, so the Young waste at K = 8 must sit within a few
+        // CI widths of K = 1. A coarse check with few reps — the tight
+        // version lives in the conformance grid.
+        let opts = ExpOptions { reps: 6, ..ExpOptions::quick() };
+        let base = base_scenario();
+        let spec = spec_for(StrategyKind::Young, &base, Capping::Uncapped);
+        let mut at = |k: u64| {
+            let p = PlatformSpec { nodes: k, ..PlatformSpec::default() };
+            replicate_stat_with(
+                opts.reps,
+                opts.workers,
+                || SimSession::new_on_platform(&base, &spec, &p).unwrap(),
+                Outcome::waste,
+            )
+        };
+        let one = at(1);
+        let eight = at(8);
+        let slack = 4.0 * (one.ci95() + eight.ci95()).max(0.02);
+        assert!(
+            (one.mean() - eight.mean()).abs() < slack,
+            "K=1 {} vs K=8 {} (slack {slack})",
+            one.mean(),
+            eight.mean()
+        );
+    }
+}

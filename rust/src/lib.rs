@@ -72,7 +72,10 @@ pub mod prelude {
     pub use crate::dist::{Dist, DistSpec, Distribution, Exponential, Uniform, Weibull};
     pub use crate::model::{Capping, OptimalPlan, StrategyKind};
     pub use crate::rng::Pcg64;
-    pub use crate::sim::{Outcome, Policy, PolicyCtx, SimConfig, SimSession};
+    pub use crate::sim::{
+        Outcome, PlatformSource, PlatformSpec, Policy, PolicyCtx, RestartScope, SimConfig,
+        SimSession,
+    };
     pub use crate::strategies::{
         resolve_policy, PolicySpec, ProactiveMode, ResolvedPolicy, StrategySpec,
     };

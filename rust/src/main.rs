@@ -5,19 +5,23 @@
 //!
 //! ```text
 //! ckptfp plan        [--n-procs N | --mu-mn M] [--recall R --precision P --window I] [--policy P] [--hlo] [--json]
-//! ckptfp simulate    [--strategy NAME | --policy P] [--n-procs N] [--reps K] [--workers W] [--dist exp|weibull:K]
-//! ckptfp best-period [--strategy NAME | --policy P] [--reps K] [--candidates N] [--prune] [scenario flags]
-//! ckptfp verify      [--grid quick|full] [--policy P] [--reps K] [--budget B] [--workers W] [--out FILE] [--json]
-//! ckptfp experiment  <fig4..fig11|tab1..tab3|policy-comparison|conformance|all> [--reps K] [--best-period] [--out DIR]
+//! ckptfp simulate    [--strategy NAME | --policy P] [--platform SPEC] [--n-procs N] [--reps K] [--workers W] [--dist exp|weibull:K]
+//! ckptfp best-period [--strategy NAME | --policy P] [--platform SPEC] [--reps K] [--candidates N] [--prune] [scenario flags]
+//! ckptfp verify      [--grid quick|full] [--policy P] [--platform SPEC] [--reps K] [--budget B] [--workers W] [--out FILE] [--json]
+//! ckptfp experiment  <fig4..fig11|tab1..tab3|policy-comparison|conformance|platform-scaling|all> [--reps K] [--best-period] [--out DIR]
 //! ckptfp serve       [--addr HOST:PORT] [--workers W] [--reps-default K] [--max-conns N] [--max-inflight N] [--deadline-ms MS] [--drain-ms MS]
 //! ckptfp client      <plan|simulate|best-period|verify|ping|stats> --addr HOST:PORT [job flags]
 //! ckptfp trace       [--out FILE] [--horizon SECONDS] [--n-procs N]
-//! ckptfp config      <file.toml> — validate and print a scenario (+ optional [policy])
+//! ckptfp config      <file.toml> — validate and print a scenario (+ optional [policy] / platform keys)
 //! ```
 //!
 //! `--policy` takes a policy spec: a strategy name (`Young`,
 //! `ExactPrediction`, …) or one of the non-paper policies
 //! (`adaptive[:gain]`, `risk[:kappa]`).
+//!
+//! `--platform` takes a platform spec: `single` or comma-separated
+//! `key=value` pairs (`nodes=8,commit=0.05,restart=partial,group=4,`
+//! `spatial=0.25,cascade=0.1,delta=300`) — see `sim::platform`.
 
 use anyhow::Context;
 use ckptfp::api::{
@@ -31,6 +35,7 @@ use ckptfp::dist::DistSpec;
 use ckptfp::experiments::{all_experiments, run_experiment, ExpOptions};
 use ckptfp::model::{Capping, Params, StrategyKind};
 use ckptfp::report::Table;
+use ckptfp::sim::PlatformSpec;
 use ckptfp::strategies::PolicySpec;
 use ckptfp::trace::TraceGen;
 use ckptfp::util::units::MIN;
@@ -103,15 +108,18 @@ commands:
   verify       conformance grid: cross-check the analytic model against the
                simulator with CI-aware verdicts; writes CONFORMANCE.json and
                exits nonzero on any 'fail' verdict
-               [--grid quick|full] [--policy P] [--reps N] [--budget N] [--out FILE]
+               [--grid quick|full] [--policy P] [--platform SPEC] [--reps N] [--budget N] [--out FILE]
   experiment   regenerate a paper figure/table (fig4..fig11, tab1..tab3,
-               policy-comparison, conformance, all)
+               policy-comparison, conformance, platform-scaling, all)
   serve        TCP/JSONL job service (protocol v2; v1 planner dialect adapted)
                [--max-conns N] [--max-inflight N] [--deadline-ms MS] [--drain-ms MS]
   client       run plan/simulate/best-period/verify jobs against a remote service
   trace        dump a generated fault/prediction trace
   config       validate a TOML scenario file
 policies (--policy): a strategy name, adaptive[:gain], or risk[:kappa]
+platforms (--platform): 'single' or nodes=K[,commit=F][,restart=full|partial]
+               [,group=G][,spatial=P][,cascade=P][,delta=S] — multi-node
+               discrete-event platform with coordinated checkpoints
 ";
 
 fn print_plan(s: &Scenario, out: &PlanResult) {
@@ -191,8 +199,9 @@ fn simulate_job_from_args(args: &mut Args) -> anyhow::Result<SimulateJob> {
     let policy = args.get_opt::<PolicySpec>("policy")?;
     let reps: u64 = args.get("reps", 20)?;
     let workers = args.get_opt::<u64>("workers")?;
+    let platform = args.get_opt::<PlatformSpec>("platform")?;
     let scenario = scenario_from_args(args)?;
-    Ok(SimulateJob { scenario, strategy, reps, workers, policy })
+    Ok(SimulateJob { scenario, strategy, reps, workers, policy, platform })
 }
 
 fn cmd_simulate(args: &mut Args) -> anyhow::Result<()> {
@@ -240,8 +249,9 @@ fn best_period_job_from_args(args: &mut Args) -> anyhow::Result<BestPeriodJob> {
     let candidates: u64 = args.get("candidates", 16)?;
     let workers = args.get_opt::<u64>("workers")?;
     let prune = args.switch("prune");
+    let platform = args.get_opt::<PlatformSpec>("platform")?;
     let scenario = scenario_from_args(args)?;
-    Ok(BestPeriodJob { scenario, strategy, reps, candidates, workers, prune, policy })
+    Ok(BestPeriodJob { scenario, strategy, reps, candidates, workers, prune, policy, platform })
 }
 
 fn cmd_best_period(args: &mut Args) -> anyhow::Result<()> {
@@ -258,7 +268,8 @@ fn verify_job_from_args(args: &mut Args) -> anyhow::Result<VerifyJob> {
     let reps: u64 = args.get("reps", 0)?;
     let budget: u64 = args.get("budget", 0)?;
     let workers = args.get_opt::<u64>("workers")?;
-    Ok(VerifyJob { grid, policy, reps, budget, workers })
+    let platform = args.get_opt::<PlatformSpec>("platform")?;
+    Ok(VerifyJob { grid, policy, reps, budget, workers, platform })
 }
 
 fn print_verify(report: &ckptfp::verify::VerifyReport) {
@@ -499,6 +510,11 @@ fn cmd_config(args: &mut Args) -> anyhow::Result<()> {
     if let Some(p) = ckptfp::config::toml::policy_from_table(&table)? {
         let rp = ckptfp::strategies::resolve_policy(&p, &s)?;
         println!("policy: {p} -> {:?}", rp.policy);
+    }
+    if let Some(p) = ckptfp::config::toml::platform_from_table(&table)? {
+        let (c_eff, r_eff) =
+            ckptfp::sim::platform::store::effective_costs(&p, s.platform.c, s.platform.r);
+        println!("platform: {p} (C_eff {c_eff:.1} s, R_eff {r_eff:.1} s)");
     }
     Ok(())
 }

@@ -8,16 +8,20 @@
 //! from a [`crate::strategies::StrategySpec`]. [`SimSession`]
 //! amortizes the per-replication setup (spec parsing, validation,
 //! buffers) across a whole batch; [`runner`] replicates across seeds
-//! and streams the aggregation.
+//! and streams the aggregation. [`platform`] generalizes the fault
+//! process to a multi-node platform (per-node streams, coordinated
+//! checkpoints, correlated failures) behind the same engine.
 
 mod engine;
 mod outcome;
+pub mod platform;
 pub mod policy;
 mod runner;
 mod session;
 
 pub use engine::Engine;
 pub use outcome::Outcome;
+pub use platform::{PlatformSource, PlatformSpec, RestartScope};
 pub use policy::{Policy, PolicyCtx};
 pub use runner::{
     fold_waste_product, fold_waste_product_retaining, rep_blocks,

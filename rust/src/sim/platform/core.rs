@@ -1,0 +1,221 @@
+//! The platform subsystem's discrete-event core: a deterministic
+//! min-heap of `(next_tick, component_id)` pairs.
+//!
+//! Components (per-node fault streams, the predictor's per-node
+//! prediction streams, the correlation layer's induced-fault queue)
+//! advertise the time of their next event; the scheduler repeatedly
+//! pops the earliest one. Determinism is the whole point:
+//!
+//! * ordering is `f64::total_cmp` on the tick — no `PartialOrd`
+//!   ambiguity, NaN ticks order last instead of poisoning the heap;
+//! * ties at a shared tick break on the *component id*, ascending — so
+//!   two nodes failing at the identical instant always replay in the
+//!   same order regardless of insertion history;
+//! * components can be inserted or removed mid-run (node join/leave),
+//!   and removal re-establishes the heap invariant in place.
+//!
+//! The heap is a plain binary sift-up/sift-down array — no allocation
+//! after warm-up, O(log n) push/pop, O(n) targeted removal (n is the
+//! component count, a handful of nodes, not the event count).
+
+/// A pending component activation: (next_tick, component_id).
+pub type Entry = (f64, u64);
+
+/// Deterministic binary min-heap over [`Entry`] with stable
+/// tie-breaking (tick first via `total_cmp`, then component id).
+#[derive(Debug, Clone, Default)]
+pub struct EventHeap {
+    entries: Vec<Entry>,
+}
+
+/// The scheduler's total order: earliest tick first, component id as
+/// the deterministic tiebreaker.
+fn before(a: &Entry, b: &Entry) -> bool {
+    match a.0.total_cmp(&b.0) {
+        std::cmp::Ordering::Less => true,
+        std::cmp::Ordering::Greater => false,
+        std::cmp::Ordering::Equal => a.1 < b.1,
+    }
+}
+
+impl EventHeap {
+    pub fn new() -> EventHeap {
+        EventHeap { entries: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Drop every entry, keeping the allocation for reuse.
+    pub fn clear(&mut self) {
+        self.entries.clear();
+    }
+
+    /// Schedule component `id` at `tick`. A component may appear more
+    /// than once; the scheduler does not deduplicate (callers that
+    /// reschedule should [`EventHeap::remove`] the stale entry first).
+    pub fn push(&mut self, tick: f64, id: u64) {
+        self.entries.push((tick, id));
+        self.sift_up(self.entries.len() - 1);
+    }
+
+    /// The earliest entry without removing it.
+    pub fn peek(&self) -> Option<Entry> {
+        self.entries.first().copied()
+    }
+
+    /// Pop the earliest entry (ties by component id).
+    pub fn pop(&mut self) -> Option<Entry> {
+        if self.entries.is_empty() {
+            return None;
+        }
+        let last = self.entries.len() - 1;
+        self.entries.swap(0, last);
+        let top = self.entries.pop();
+        if !self.entries.is_empty() {
+            self.sift_down(0);
+        }
+        top
+    }
+
+    /// Remove every entry of component `id` mid-run (node leave).
+    /// Returns how many entries were dropped.
+    pub fn remove(&mut self, id: u64) -> usize {
+        let before_len = self.entries.len();
+        let mut i = 0;
+        while i < self.entries.len() {
+            if self.entries[i].1 == id {
+                let last = self.entries.len() - 1;
+                self.entries.swap(i, last);
+                self.entries.pop();
+                // The swapped-in entry may violate the invariant in
+                // either direction relative to its new position.
+                if i < self.entries.len() {
+                    self.sift_down(i);
+                    self.sift_up(i);
+                }
+            } else {
+                i += 1;
+            }
+        }
+        before_len - self.entries.len()
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if before(&self.entries[i], &self.entries[parent]) {
+                self.entries.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        loop {
+            let (l, r) = (2 * i + 1, 2 * i + 2);
+            let mut best = i;
+            if l < self.entries.len() && before(&self.entries[l], &self.entries[best]) {
+                best = l;
+            }
+            if r < self.entries.len() && before(&self.entries[r], &self.entries[best]) {
+                best = r;
+            }
+            if best == i {
+                return;
+            }
+            self.entries.swap(i, best);
+            i = best;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut h = EventHeap::new();
+        for (t, id) in [(5.0, 0), (1.0, 1), (3.0, 2), (2.0, 3), (4.0, 4)] {
+            h.push(t, id);
+        }
+        let order: Vec<u64> = std::iter::from_fn(|| h.pop()).map(|(_, id)| id).collect();
+        assert_eq!(order, [1, 3, 2, 4, 0]);
+        assert!(h.is_empty());
+    }
+
+    #[test]
+    fn shared_tick_breaks_ties_by_component_id() {
+        // The determinism contract: identical ticks pop in ascending
+        // component order no matter the insertion order.
+        for perm in [[3u64, 1, 2, 0], [0, 1, 2, 3], [2, 0, 3, 1]] {
+            let mut h = EventHeap::new();
+            for id in perm {
+                h.push(100.0, id);
+            }
+            h.push(50.0, 9);
+            let order: Vec<u64> = std::iter::from_fn(|| h.pop()).map(|(_, id)| id).collect();
+            assert_eq!(order, [9, 0, 1, 2, 3], "insertion order {perm:?}");
+        }
+    }
+
+    #[test]
+    fn mid_run_insertion_lands_in_order() {
+        let mut h = EventHeap::new();
+        h.push(10.0, 0);
+        h.push(30.0, 1);
+        assert_eq!(h.pop(), Some((10.0, 0)));
+        // A component joining mid-run with an earlier tick than the
+        // survivors is served first.
+        h.push(20.0, 2);
+        assert_eq!(h.pop(), Some((20.0, 2)));
+        assert_eq!(h.pop(), Some((30.0, 1)));
+    }
+
+    #[test]
+    fn mid_run_removal_keeps_the_invariant() {
+        let mut h = EventHeap::new();
+        for (t, id) in [(1.0, 0), (2.0, 1), (3.0, 2), (2.5, 1), (4.0, 3)] {
+            h.push(t, id);
+        }
+        // Component 1 leaves: both of its entries go.
+        assert_eq!(h.remove(1), 2);
+        assert_eq!(h.len(), 3);
+        let order: Vec<Entry> = std::iter::from_fn(|| h.pop()).collect();
+        assert_eq!(order, [(1.0, 0), (3.0, 2), (4.0, 3)]);
+        // Removing an absent component is a no-op.
+        assert_eq!(h.remove(42), 0);
+    }
+
+    #[test]
+    fn heap_agrees_with_a_sorted_reference() {
+        // Deterministic pseudo-random workload against sort-by-(t, id).
+        let mut h = EventHeap::new();
+        let mut reference: Vec<Entry> = Vec::new();
+        let mut x: u64 = 0x9E3779B97F4A7C15;
+        for i in 0..200u64 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let t = ((x >> 11) % 50) as f64 * 0.5; // many deliberate ties
+            h.push(t, i % 7);
+            reference.push((t, i % 7));
+        }
+        reference.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        let drained: Vec<Entry> = std::iter::from_fn(|| h.pop()).collect();
+        assert_eq!(drained, reference);
+    }
+
+    #[test]
+    fn empty_heap_pops_none() {
+        let mut h = EventHeap::new();
+        assert_eq!(h.pop(), None);
+        assert_eq!(h.peek(), None);
+    }
+}

@@ -1,0 +1,213 @@
+//! The correlation layer: spatially correlated failure groups and a
+//! cascade kernel.
+//!
+//! Real platforms fail in bursts — a PSU, a rack switch, a cooling
+//! loop takes neighbors down together — which is exactly the regime
+//! where the independent-exponential closed form stops applying. The
+//! model here is deliberately small:
+//!
+//! * nodes are partitioned into *groups* of `group` consecutive
+//!   indices (a rack);
+//! * when a fault strikes node `j` at time `t`, every other node `k`
+//!   in `j`'s group draws once from `j`'s per-node `"corr"` substream:
+//!   with probability `spatial` an *induced* fault is scheduled on `k`
+//!   at `t + v·delta`, `v` uniform — the cascade kernel's boosted
+//!   hazard for a Δt after a neighbor's fault, collapsed to the
+//!   induced event itself;
+//! * induced faults can propagate further with probability `cascade`
+//!   per hop, chain depth capped at [`MAX_CHAIN`] so a hot group
+//!   cannot recurse forever.
+//!
+//! Induced faults are *unpredicted* (the §5 predictor is trained on
+//! the base hazard, not on failure propagation) and carry ids from a
+//! disjoint high range so they can never collide with — or be linked
+//! to — the natural streams' predictions.
+//!
+//! Determinism: draws happen at the instant the triggering fault is
+//! *emitted*, iterating group members in ascending node order, from
+//! per-node substreams derived by the existing `rng` discipline. With
+//! `spatial = 0` (the default) the layer performs **zero** RNG draws —
+//! part of the 1-node/uncorrelated bit-identity contract.
+
+use crate::rng::{substream, Pcg64};
+
+use super::node::node_seed;
+use super::PlatformSpec;
+
+/// Maximum fault-chain depth (natural fault = depth 0); propagation
+/// stops here even at `cascade` close to 1.
+pub const MAX_CHAIN: u32 = 4;
+
+/// An induced (correlated) fault waiting to strike.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Induced {
+    /// Strike time (> the trigger's time).
+    pub t: f64,
+    /// Victim node.
+    pub node: u64,
+    /// Chain depth: 1 for spatially induced, +1 per cascade hop.
+    pub depth: u32,
+}
+
+/// The correlation component: per-node draw streams plus the queue of
+/// induced faults not yet emitted, kept sorted by strike time (FIFO
+/// within a tie — insertion order is deterministic).
+#[derive(Debug)]
+pub struct Correlator {
+    spatial: f64,
+    cascade: f64,
+    delta: f64,
+    group: u64,
+    nodes: u64,
+    rngs: Vec<Pcg64>,
+    queue: Vec<Induced>,
+}
+
+impl Correlator {
+    pub fn new(spec: &PlatformSpec, seed: u64, rep: u64) -> Correlator {
+        Correlator {
+            spatial: spec.spatial,
+            cascade: spec.cascade,
+            delta: spec.delta,
+            group: spec.group.max(1),
+            nodes: spec.nodes,
+            rngs: Self::draw_streams(spec.nodes, seed, rep),
+            queue: Vec::new(),
+        }
+    }
+
+    fn draw_streams(nodes: u64, seed: u64, rep: u64) -> Vec<Pcg64> {
+        (0..nodes).map(|j| substream(node_seed(seed, j), "corr", rep)).collect()
+    }
+
+    /// Rewind to replication `rep` of `seed`.
+    pub fn reset(&mut self, seed: u64, rep: u64) {
+        self.rngs = Self::draw_streams(self.nodes, seed, rep);
+        self.queue.clear();
+    }
+
+    /// React to a fault striking `node` at `t`. `depth` is the chain
+    /// depth of the striking fault (0 = natural). Draws once per other
+    /// group member, in ascending node order, from the *striking*
+    /// node's stream.
+    pub fn on_fault(&mut self, node: u64, t: f64, depth: u32) {
+        if depth >= MAX_CHAIN {
+            return;
+        }
+        let prob = if depth == 0 { self.spatial } else { self.cascade };
+        if prob <= 0.0 {
+            return;
+        }
+        let lo = (node / self.group) * self.group;
+        let hi = (lo + self.group).min(self.nodes);
+        for k in lo..hi {
+            if k == node {
+                continue;
+            }
+            let rng = &mut self.rngs[node as usize];
+            if rng.next_f64() < prob {
+                let v = rng.next_f64();
+                let induced = Induced { t: t + v * self.delta, node: k, depth: depth + 1 };
+                // Insert keeping the queue sorted by strike time,
+                // stable for ties.
+                let pos = self
+                    .queue
+                    .iter()
+                    .position(|q| q.t > induced.t)
+                    .unwrap_or(self.queue.len());
+                self.queue.insert(pos, induced);
+            }
+        }
+    }
+
+    /// Strike time of the earliest pending induced fault.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.queue.first().map(|q| q.t)
+    }
+
+    /// Emit the earliest pending induced fault.
+    pub fn pop(&mut self) -> Option<Induced> {
+        if self.queue.is_empty() {
+            None
+        } else {
+            Some(self.queue.remove(0))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(nodes: u64, group: u64, spatial: f64, cascade: f64) -> PlatformSpec {
+        PlatformSpec { nodes, group, spatial, cascade, delta: 120.0, ..PlatformSpec::default() }
+    }
+
+    #[test]
+    fn zero_spatial_never_queues() {
+        let mut c = Correlator::new(&spec(8, 4, 0.0, 0.5), 1, 0);
+        for j in 0..8 {
+            c.on_fault(j, 1000.0, 0);
+        }
+        assert_eq!(c.peek_time(), None);
+    }
+
+    #[test]
+    fn induced_faults_stay_in_the_group_and_after_the_trigger() {
+        let mut c = Correlator::new(&spec(8, 4, 1.0, 0.0), 2, 0);
+        // Node 5 lives in group {4..8}; spatial = 1 hits every neighbor.
+        c.on_fault(5, 500.0, 0);
+        let mut victims = Vec::new();
+        while let Some(i) = c.pop() {
+            assert!(i.t > 500.0 && i.t <= 500.0 + 120.0, "delay in (0, delta]: {}", i.t);
+            assert_eq!(i.depth, 1);
+            victims.push(i.node);
+        }
+        victims.sort_unstable();
+        assert_eq!(victims, [4, 6, 7]);
+    }
+
+    #[test]
+    fn queue_pops_in_time_order() {
+        let mut c = Correlator::new(&spec(6, 3, 1.0, 0.0), 3, 0);
+        c.on_fault(0, 900.0, 0);
+        c.on_fault(4, 100.0, 0);
+        let mut last = f64::NEG_INFINITY;
+        while let Some(i) = c.pop() {
+            assert!(i.t >= last);
+            last = i.t;
+        }
+    }
+
+    #[test]
+    fn chain_depth_is_capped() {
+        let mut c = Correlator::new(&spec(2, 2, 1.0, 1.0), 4, 0);
+        // At the cap nothing propagates, below it everything does.
+        c.on_fault(0, 10.0, MAX_CHAIN);
+        assert_eq!(c.peek_time(), None);
+        c.on_fault(0, 10.0, MAX_CHAIN - 1);
+        let i = c.pop().unwrap();
+        assert_eq!(i.depth, MAX_CHAIN);
+    }
+
+    #[test]
+    fn draws_are_reproducible_across_reset() {
+        let s = spec(8, 4, 0.4, 0.2, );
+        let mut a = Correlator::new(&s, 9, 3);
+        let mut b = Correlator::new(&s, 9, 3);
+        for j in [1u64, 6, 2, 5] {
+            a.on_fault(j, 50.0 * j as f64, 0);
+            b.on_fault(j, 50.0 * j as f64, 0);
+        }
+        let qa: Vec<Induced> = std::iter::from_fn(|| a.pop()).collect();
+        let qb: Vec<Induced> = std::iter::from_fn(|| b.pop()).collect();
+        assert_eq!(qa, qb);
+        // Reset rewinds to the same stream.
+        a.reset(9, 3);
+        for j in [1u64, 6, 2, 5] {
+            a.on_fault(j, 50.0 * j as f64, 0);
+        }
+        let qa2: Vec<Induced> = std::iter::from_fn(|| a.pop()).collect();
+        assert_eq!(qa, qa2);
+    }
+}

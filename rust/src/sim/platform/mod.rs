@@ -1,0 +1,530 @@
+//! Multi-node platform subsystem: a component-based discrete-event
+//! layer in front of the unchanged [`crate::sim::Engine`].
+//!
+//! The paper's analysis targets platforms whose MTBF is the
+//! superposition of N per-node fault streams (`mu = mu_ind / N`); the
+//! engine historically simulated one aggregated stream. This module
+//! simulates the platform *as components*:
+//!
+//! * [`core::EventHeap`] — the deterministic `(next_tick, component)`
+//!   scheduler with stable tie-breaking;
+//! * [`node::NodeStream`] — one per-node fault/prediction stream
+//!   (K-scaled individual law, per-node seeded substreams);
+//! * [`store::CheckpointStore`] — coordinated commits: all nodes
+//!   quiesce, commit cost can scale with K and contend on the store,
+//!   restarts are full or partial;
+//! * [`correlate::Correlator`] — spatially correlated failure groups
+//!   plus a depth-capped cascade kernel.
+//!
+//! [`PlatformSource`] merges it all into one [`EventSource`], so the
+//! engine's event loop, policy layer and outcome accounting are reused
+//! verbatim — the platform owns the *fault process*, not the
+//! execution semantics. Two contracts fall out of the construction and
+//! are pinned by tests:
+//!
+//! * **1-node identity**: `nodes = 1` replays the scenario seed's own
+//!   substreams through an identity id-map and cost model — bit-
+//!   identical to [`crate::sim::SimSession::from_policy`] on every
+//!   [`crate::sim::Outcome`] field (`tests/test_platform.rs`);
+//! * **superposition**: for exponential laws the merged K-node stream
+//!   is statistically the single aggregated stream at `mu_ind / N`
+//!   for *every* K (property-tested in `tests/test_properties.rs`),
+//!   so the uncorrelated platform stays inside the closed form's
+//!   domain and `verify::grid` asserts CI-band agreement; correlated
+//!   and store-contended cases assert divergence bounds only.
+//!
+//! Multi-node platforms decline [`crate::trace::TraceBank`] replay
+//! (live sessions only): a bank materializes one aggregated stream,
+//! which is a different experiment than K merged per-node streams.
+
+pub mod core;
+pub mod correlate;
+pub mod node;
+pub mod store;
+
+use std::fmt;
+use std::str::FromStr;
+
+use crate::config::Scenario;
+use crate::trace::{EventSource, Fault, Prediction};
+
+use self::core::EventHeap;
+use self::correlate::Correlator;
+use self::node::NodeStream;
+
+/// Induced (correlated) faults carry ids from this disjoint high range
+/// so they can never collide with the natural streams' remapped ids or
+/// be linked to a prediction.
+pub const INDUCED_ID_BASE: u64 = 1 << 62;
+
+/// How a platform recovers after a fault.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RestartScope {
+    /// Every node reloads its image from the store (contends like a
+    /// commit).
+    Full,
+    /// Only the failed nodes reload; survivors roll back in place at
+    /// constant cost.
+    Partial,
+}
+
+/// Typed description of a simulated platform — the `--platform` /
+/// wire-v2 `platform` / TOML `[platform]` surface, with the same
+/// `FromStr`/`Display` discipline as [`crate::strategies::PolicySpec`].
+///
+/// The canonical string forms:
+///
+/// * `single` — the default: one node, no contention, no correlation;
+///   exactly the classic single-stream engine (pinned bit-identical);
+/// * `nodes=K[,commit=G][,restart=partial][,group=N][,spatial=P][,cascade=P][,delta=S]`
+///   — only non-default keys are printed, every key is accepted.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlatformSpec {
+    /// Number of nodes K (>= 1; 0 is rejected, not hung on).
+    pub nodes: u64,
+    /// Store-contention factor γ: a coordinated commit costs
+    /// `C · (1 + γ·(K−1))` (0 = perfectly parallel store).
+    pub commit: f64,
+    /// Recovery scope after a fault.
+    pub restart: RestartScope,
+    /// Correlation group size (consecutive node indices; 1 = no
+    /// grouping).
+    pub group: u64,
+    /// Probability a fault induces a fault on each other group member.
+    pub spatial: f64,
+    /// Probability an *induced* fault propagates one more hop.
+    pub cascade: f64,
+    /// Maximum induced-fault delay Δt (s): induced faults strike
+    /// uniformly in `(t, t + delta]` after their trigger.
+    pub delta: f64,
+}
+
+impl Default for PlatformSpec {
+    fn default() -> PlatformSpec {
+        PlatformSpec {
+            nodes: 1,
+            commit: 0.0,
+            restart: RestartScope::Full,
+            group: 1,
+            spatial: 0.0,
+            cascade: 0.0,
+            delta: 300.0,
+        }
+    }
+}
+
+impl PlatformSpec {
+    /// Whether this spec is the exact single-stream special case (the
+    /// classic engine path; no platform layer needed).
+    pub fn is_single(&self) -> bool {
+        *self == PlatformSpec::default()
+    }
+
+    /// Whether the correlation layer is live (induced faults possible).
+    pub fn correlated(&self) -> bool {
+        self.spatial > 0.0 && self.nodes > 1 && self.group > 1
+    }
+
+    /// Reject parameterizations the platform cannot honor. `FromStr`
+    /// calls this, so parsed specs are always valid.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.nodes >= 1, "platform needs at least one node (nodes = 0)");
+        anyhow::ensure!(
+            self.commit.is_finite() && self.commit >= 0.0,
+            "platform commit factor must be finite and >= 0, got {}",
+            self.commit
+        );
+        anyhow::ensure!(self.group >= 1, "platform correlation group must be >= 1");
+        anyhow::ensure!(
+            (0.0..1.0).contains(&self.spatial),
+            "platform spatial probability must be in [0, 1), got {}",
+            self.spatial
+        );
+        anyhow::ensure!(
+            (0.0..1.0).contains(&self.cascade),
+            "platform cascade probability must be in [0, 1), got {}",
+            self.cascade
+        );
+        anyhow::ensure!(
+            self.delta.is_finite() && self.delta > 0.0,
+            "platform delta must be finite and > 0, got {}",
+            self.delta
+        );
+        Ok(())
+    }
+}
+
+impl fmt::Display for PlatformSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.is_single() {
+            return write!(f, "single");
+        }
+        let d = PlatformSpec::default();
+        write!(f, "nodes={}", self.nodes)?;
+        if self.commit != d.commit {
+            write!(f, ",commit={}", self.commit)?;
+        }
+        if self.restart == RestartScope::Partial {
+            write!(f, ",restart=partial")?;
+        }
+        if self.group != d.group {
+            write!(f, ",group={}", self.group)?;
+        }
+        if self.spatial != d.spatial {
+            write!(f, ",spatial={}", self.spatial)?;
+        }
+        if self.cascade != d.cascade {
+            write!(f, ",cascade={}", self.cascade)?;
+        }
+        if self.delta != d.delta {
+            write!(f, ",delta={}", self.delta)?;
+        }
+        Ok(())
+    }
+}
+
+impl FromStr for PlatformSpec {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<PlatformSpec> {
+        let s = s.trim();
+        if s.eq_ignore_ascii_case("single") {
+            return Ok(PlatformSpec::default());
+        }
+        let mut spec = PlatformSpec::default();
+        for part in s.split(',') {
+            let part = part.trim();
+            let (key, val) = part.split_once('=').ok_or_else(|| {
+                anyhow::anyhow!("platform spec needs key=value pairs, got '{part}'")
+            })?;
+            let (key, val) = (key.trim().to_ascii_lowercase(), val.trim());
+            match key.as_str() {
+                "nodes" => spec.nodes = val.parse().map_err(|_| bad(&key, val))?,
+                "commit" => spec.commit = val.parse().map_err(|_| bad(&key, val))?,
+                "restart" => {
+                    spec.restart = match val.to_ascii_lowercase().as_str() {
+                        "full" => RestartScope::Full,
+                        "partial" => RestartScope::Partial,
+                        _ => anyhow::bail!("platform restart must be 'full' or 'partial', got '{val}'"),
+                    }
+                }
+                "group" => spec.group = val.parse().map_err(|_| bad(&key, val))?,
+                "spatial" => spec.spatial = val.parse().map_err(|_| bad(&key, val))?,
+                "cascade" => spec.cascade = val.parse().map_err(|_| bad(&key, val))?,
+                "delta" => spec.delta = val.parse().map_err(|_| bad(&key, val))?,
+                _ => anyhow::bail!(
+                    "unknown platform key '{key}' (known: nodes, commit, restart, group, spatial, cascade, delta)"
+                ),
+            }
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+fn bad(key: &str, val: &str) -> anyhow::Error {
+    anyhow::anyhow!("platform {key}: cannot parse '{val}'")
+}
+
+/// The merged platform event source: K [`NodeStream`] components
+/// scheduled by two [`EventHeap`]s (faults by strike time, predictions
+/// by availability), with the [`Correlator`]'s induced-fault queue
+/// racing the natural fault stream. Implements [`EventSource`], so the
+/// engine cannot tell a platform from a single generator.
+#[derive(Debug)]
+pub struct PlatformSource {
+    nodes: Vec<NodeStream>,
+    // Peeked next event per node; the heaps index into these.
+    peeked_faults: Vec<Option<Fault>>,
+    peeked_preds: Vec<Option<Prediction>>,
+    fault_heap: EventHeap,
+    pred_heap: EventHeap,
+    correlator: Option<Correlator>,
+    induced_seq: u64,
+}
+
+impl PlatformSource {
+    /// Build the platform for one replication. Mirrors
+    /// [`crate::trace::TraceGen::new`]'s signature, extended by the
+    /// spec; rejects `nodes = 0` with an error instead of an empty
+    /// heap that would starve the engine.
+    pub fn new(
+        scenario: &Scenario,
+        spec: &PlatformSpec,
+        lead: f64,
+        seed: u64,
+        rep: u64,
+    ) -> anyhow::Result<PlatformSource> {
+        spec.validate()?;
+        let mut nodes = Vec::with_capacity(spec.nodes as usize);
+        for j in 0..spec.nodes {
+            nodes.push(NodeStream::new(scenario, spec, lead, seed, rep, j)?);
+        }
+        let correlator = spec.correlated().then(|| Correlator::new(spec, seed, rep));
+        let mut src = PlatformSource {
+            peeked_faults: vec![None; nodes.len()],
+            peeked_preds: vec![None; nodes.len()],
+            nodes,
+            fault_heap: EventHeap::new(),
+            pred_heap: EventHeap::new(),
+            correlator,
+            induced_seq: 0,
+        };
+        src.prime();
+        Ok(src)
+    }
+
+    /// Rewind to replication `rep` of `seed` — same contract as
+    /// [`crate::trace::TraceGen::reset`], platform-wide.
+    pub fn reset(&mut self, seed: u64, rep: u64) {
+        for node in &mut self.nodes {
+            node.reset(seed, rep);
+        }
+        if let Some(c) = &mut self.correlator {
+            c.reset(seed, rep);
+        }
+        self.fault_heap.clear();
+        self.pred_heap.clear();
+        self.peeked_faults.iter_mut().for_each(|p| *p = None);
+        self.peeked_preds.iter_mut().for_each(|p| *p = None);
+        self.induced_seq = 0;
+        self.prime();
+    }
+
+    /// Number of nodes.
+    pub fn nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Peek each node's first fault/prediction into the heaps.
+    fn prime(&mut self) {
+        for j in 0..self.nodes.len() {
+            self.refill_fault(j);
+            self.refill_pred(j);
+        }
+    }
+
+    fn refill_fault(&mut self, j: usize) {
+        // Node generators are infinite, so this always schedules.
+        if let Some(f) = self.nodes[j].next_fault() {
+            self.fault_heap.push(f.t, j as u64);
+            self.peeked_faults[j] = Some(f);
+        }
+    }
+
+    fn refill_pred(&mut self, j: usize) {
+        // A never-firing predictor yields None: the node simply never
+        // appears in the prediction heap.
+        if let Some(p) = self.nodes[j].next_prediction() {
+            self.pred_heap.push(p.avail, j as u64);
+            self.peeked_preds[j] = Some(p);
+        }
+    }
+}
+
+impl EventSource for PlatformSource {
+    fn next_fault(&mut self) -> Option<Fault> {
+        let natural_t = self.fault_heap.peek().map(|(t, _)| t).unwrap_or(f64::INFINITY);
+        let induced_t = self
+            .correlator
+            .as_ref()
+            .and_then(Correlator::peek_time)
+            .unwrap_or(f64::INFINITY);
+        // Ties go to the natural stream (deterministic; induced faults
+        // are strictly later than their triggers anyway).
+        if induced_t < natural_t {
+            let correlator = self.correlator.as_mut().expect("peeked above");
+            let i = correlator.pop().expect("peeked above");
+            correlator.on_fault(i.node, i.t, i.depth);
+            let id = INDUCED_ID_BASE + self.induced_seq;
+            self.induced_seq += 1;
+            return Some(Fault { t: i.t, id, predicted: false });
+        }
+        let (_, j) = self.fault_heap.pop()?;
+        let j = j as usize;
+        let fault = self.peeked_faults[j].take().expect("heap entry implies a peeked fault");
+        if let Some(c) = &mut self.correlator {
+            // node index = global id modulo K by the remap.
+            c.on_fault(fault.id % self.nodes.len() as u64, fault.t, 0);
+        }
+        self.refill_fault(j);
+        Some(fault)
+    }
+
+    fn next_prediction(&mut self) -> Option<Prediction> {
+        let (_, j) = self.pred_heap.pop()?;
+        let j = j as usize;
+        let pred = self.peeked_preds[j].take().expect("heap entry implies a peeked prediction");
+        self.refill_pred(j);
+        Some(pred)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Predictor;
+    use crate::trace::TraceGen;
+
+    fn scenario(recall: f64, precision: f64, window: f64) -> Scenario {
+        let pred = if window > 0.0 {
+            Predictor::windowed(recall, precision, window)
+        } else {
+            Predictor::exact(recall, precision)
+        };
+        let mut s = Scenario::paper(1 << 16, pred);
+        s.fault_dist = crate::dist::DistSpec::Exp;
+        s.work = 2.0e5;
+        s
+    }
+
+    #[test]
+    fn spec_default_displays_as_single_and_round_trips() {
+        let d = PlatformSpec::default();
+        assert!(d.is_single());
+        assert_eq!(d.to_string(), "single");
+        assert_eq!("single".parse::<PlatformSpec>().unwrap(), d);
+        assert_eq!("SINGLE".parse::<PlatformSpec>().unwrap(), d);
+    }
+
+    #[test]
+    fn spec_round_trips_non_default_keys_only() {
+        let specs = [
+            PlatformSpec { nodes: 4, ..PlatformSpec::default() },
+            PlatformSpec { nodes: 8, commit: 0.05, ..PlatformSpec::default() },
+            PlatformSpec {
+                nodes: 16,
+                commit: 0.5,
+                restart: RestartScope::Partial,
+                group: 4,
+                spatial: 0.25,
+                cascade: 0.1,
+                delta: 120.0,
+            },
+        ];
+        for spec in specs {
+            let s = spec.to_string();
+            assert_eq!(s.parse::<PlatformSpec>().unwrap(), spec, "round-trip of '{s}'");
+        }
+        assert_eq!(
+            PlatformSpec { nodes: 4, ..PlatformSpec::default() }.to_string(),
+            "nodes=4"
+        );
+        assert_eq!(
+            PlatformSpec { nodes: 8, commit: 0.05, ..PlatformSpec::default() }.to_string(),
+            "nodes=8,commit=0.05"
+        );
+    }
+
+    #[test]
+    fn spec_rejects_bad_forms() {
+        assert!("nodes=0".parse::<PlatformSpec>().is_err(), "empty platform");
+        assert!("nodes=4,spatial=1.5".parse::<PlatformSpec>().is_err());
+        assert!("nodes=4,restart=maybe".parse::<PlatformSpec>().is_err());
+        assert!("nodes=4,bogus=1".parse::<PlatformSpec>().is_err());
+        assert!("nodes=four".parse::<PlatformSpec>().is_err());
+        assert!("nodes=4,delta=0".parse::<PlatformSpec>().is_err());
+        assert!("".parse::<PlatformSpec>().is_err());
+    }
+
+    #[test]
+    fn zero_nodes_is_an_error_not_a_hang() {
+        let s = scenario(0.0, 1.0, 0.0);
+        let spec = PlatformSpec { nodes: 0, ..PlatformSpec::default() };
+        let err = PlatformSource::new(&s, &spec, 600.0, 1, 0).unwrap_err().to_string();
+        assert!(err.contains("at least one node"), "{err}");
+    }
+
+    #[test]
+    fn one_node_platform_is_the_plain_generator() {
+        // Stream-level bit-identity at K = 1 (the session/outcome-level
+        // pin lives in tests/test_platform.rs).
+        let s = scenario(0.85, 0.82, 300.0);
+        let spec = PlatformSpec::default();
+        let mut platform = PlatformSource::new(&s, &spec, 600.0, s.seed, 0).unwrap();
+        let mut plain = TraceGen::new(&s, 600.0, s.seed, 0).unwrap();
+        for _ in 0..300 {
+            assert_eq!(platform.next_fault(), plain.next_fault());
+        }
+        for _ in 0..100 {
+            assert_eq!(platform.next_prediction(), plain.next_prediction());
+        }
+    }
+
+    #[test]
+    fn merged_streams_are_monotone() {
+        let s = scenario(0.85, 0.82, 300.0);
+        let spec = PlatformSpec { nodes: 6, ..PlatformSpec::default() };
+        let mut src = PlatformSource::new(&s, &spec, 600.0, 3, 0).unwrap();
+        let mut last = 0.0;
+        for _ in 0..2000 {
+            let f = src.next_fault().unwrap();
+            assert!(f.t >= last, "fault stream went back in time");
+            last = f.t;
+        }
+        let mut last = f64::NEG_INFINITY;
+        for _ in 0..500 {
+            let p = src.next_prediction().unwrap();
+            assert!(p.avail >= last, "prediction stream went back in time");
+            last = p.avail;
+        }
+    }
+
+    #[test]
+    fn correlated_platform_injects_unpredicted_high_id_faults() {
+        let s = scenario(0.85, 0.82, 300.0);
+        let spec = PlatformSpec {
+            nodes: 8,
+            group: 4,
+            spatial: 0.5,
+            cascade: 0.2,
+            delta: 120.0,
+            ..PlatformSpec::default()
+        };
+        let mut src = PlatformSource::new(&s, &spec, 600.0, 5, 0).unwrap();
+        let mut induced = 0;
+        let mut last = 0.0;
+        for _ in 0..4000 {
+            let f = src.next_fault().unwrap();
+            assert!(f.t >= last, "induced faults must merge monotonically");
+            last = f.t;
+            if f.id >= INDUCED_ID_BASE {
+                induced += 1;
+                assert!(!f.predicted, "induced faults are unpredicted");
+            }
+        }
+        assert!(induced > 100, "spatial=0.5 over groups of 4 must induce plenty, got {induced}");
+    }
+
+    #[test]
+    fn uncorrelated_spec_never_builds_a_correlator() {
+        let s = scenario(0.0, 1.0, 0.0);
+        // spatial > 0 but group = 1: no neighbors, the layer is inert.
+        let spec = PlatformSpec { nodes: 4, spatial: 0.5, ..PlatformSpec::default() };
+        let src = PlatformSource::new(&s, &spec, 600.0, 1, 0).unwrap();
+        assert!(src.correlator.is_none());
+    }
+
+    #[test]
+    fn reset_matches_fresh_platform() {
+        let s = scenario(0.85, 0.82, 300.0);
+        let spec = PlatformSpec {
+            nodes: 4,
+            group: 2,
+            spatial: 0.3,
+            delta: 200.0,
+            ..PlatformSpec::default()
+        };
+        let mut reused = PlatformSource::new(&s, &spec, 600.0, 13, 0).unwrap();
+        for rep in [5u64, 0, 2] {
+            reused.reset(13, rep);
+            let mut fresh = PlatformSource::new(&s, &spec, 600.0, 13, rep).unwrap();
+            for _ in 0..400 {
+                assert_eq!(reused.next_fault(), fresh.next_fault());
+            }
+            for _ in 0..100 {
+                assert_eq!(reused.next_prediction(), fresh.next_prediction());
+            }
+        }
+    }
+}

@@ -1,0 +1,197 @@
+//! Node components: one fault/prediction stream per node.
+//!
+//! Each node runs its own [`TraceGen`] over an *individual* failure law
+//! whose MTBF is `K × mu` (K nodes, platform MTBF `mu = mu_ind / N`) —
+//! the Poisson-superposition discipline: merging the K per-node streams
+//! reproduces the aggregate platform rate exactly, for every K, so the
+//! closed form evaluated at `mu_ind / N` stays the reference for the
+//! uncorrelated-exponential platform (pinned by the `verify` grid and
+//! the superposition property test). The per-node false-prediction
+//! interval scales by the same K, keeping the aggregate predictor rate
+//! at the §5 value.
+//!
+//! Seeding follows the existing `rng` discipline: node 0 uses the
+//! scenario seed *unchanged* — same `"fault"/"mark"/"win"/"false"`
+//! substreams of `(seed, rep)` as the single-stream engine — which is
+//! what makes the 1-node platform bit-identical to [`crate::sim::Engine`]
+//! over a plain [`TraceGen`] by construction. Nodes `i > 0` derive
+//! their own seeds through [`SplitMix64`].
+//!
+//! Fault ids are remapped `id_global = id_local · K + node` so the K
+//! per-node counters interleave into one collision-free id space (the
+//! identity map at K = 1), keeping true predictions linked to their
+//! faults across the merge.
+
+use crate::config::Scenario;
+use crate::rng::SplitMix64;
+use crate::trace::{EventSource, Fault, Prediction, TraceGen};
+
+use super::PlatformSpec;
+
+/// Per-node seed: node 0 keeps the scenario seed (the bit-identity
+/// anchor); other nodes get a SplitMix64-derived substream seed.
+pub fn node_seed(seed: u64, node: u64) -> u64 {
+    if node == 0 {
+        seed
+    } else {
+        SplitMix64::new(seed ^ node.wrapping_mul(0x9E3779B97F4A7C15)).next_u64()
+    }
+}
+
+/// One node's fault/prediction component: a [`TraceGen`] over the
+/// K-scaled individual law, with fault ids remapped into the global
+/// `id · K + node` space.
+#[derive(Debug)]
+pub struct NodeStream {
+    gen: TraceGen,
+    node: u64,
+    stride: u64,
+}
+
+impl NodeStream {
+    /// Build node `node` of a `spec.nodes`-node platform for one
+    /// replication. `lead` is the consumer's proactive lead, exactly as
+    /// in [`TraceGen::new`].
+    pub fn new(
+        scenario: &Scenario,
+        spec: &PlatformSpec,
+        lead: f64,
+        seed: u64,
+        rep: u64,
+        node: u64,
+    ) -> anyhow::Result<NodeStream> {
+        let k = spec.nodes as f64;
+        let mu = scenario.mu();
+        let pred = &scenario.predictor;
+        let fault_dist = scenario.fault_dist.dist()?.with_mean(mu * k);
+        // Infinite stays infinite under the K-scaling (never-firing
+        // predictors stay never-firing on every node).
+        let false_interval = pred.false_pred_interval(mu) * k;
+        let false_dist = if false_interval.is_finite() {
+            Some(scenario.false_dist_spec().dist()?.with_mean(false_interval))
+        } else {
+            None
+        };
+        let gen = TraceGen::from_dists(
+            fault_dist,
+            false_dist,
+            pred.recall,
+            pred.window,
+            lead,
+            node_seed(seed, node),
+            rep,
+        );
+        Ok(NodeStream { gen, node, stride: spec.nodes })
+    }
+
+    /// Rewind to replication `rep` of `seed` (same contract as
+    /// [`TraceGen::reset`]; the node re-derives its own substream seed).
+    pub fn reset(&mut self, seed: u64, rep: u64) {
+        self.gen.reset(node_seed(seed, self.node), rep);
+    }
+
+    /// Next fault on this node, id remapped to the global space. The
+    /// generator is infinite, so this always yields.
+    pub fn next_fault(&mut self) -> Option<Fault> {
+        self.gen.next_fault().map(|mut f| {
+            f.id = f.id * self.stride + self.node;
+            f
+        })
+    }
+
+    /// Next prediction announced on this node (avail-monotone within
+    /// the node), true-positive links remapped alongside the faults.
+    pub fn next_prediction(&mut self) -> Option<Prediction> {
+        self.gen.next_prediction().map(|mut p| {
+            p.fault_id = p.fault_id.map(|id| id * self.stride + self.node);
+            p
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Predictor;
+
+    fn scenario() -> Scenario {
+        let mut s = Scenario::paper(1 << 16, Predictor::windowed(0.85, 0.82, 300.0));
+        s.fault_dist = crate::dist::DistSpec::Exp;
+        s.work = 2.0e5;
+        s
+    }
+
+    #[test]
+    fn node_zero_is_the_plain_tracegen() {
+        // The bit-identity anchor: node 0 of a 1-node platform emits
+        // exactly the single-stream generator's events.
+        let s = scenario();
+        let spec = PlatformSpec::default();
+        let mut node = NodeStream::new(&s, &spec, 600.0, s.seed, 0, 0).unwrap();
+        let mut plain = TraceGen::new(&s, 600.0, s.seed, 0).unwrap();
+        for _ in 0..200 {
+            assert_eq!(node.next_fault(), plain.next_fault());
+        }
+        for _ in 0..50 {
+            assert_eq!(node.next_prediction(), plain.next_prediction());
+        }
+    }
+
+    #[test]
+    fn node_seeds_are_distinct_and_stable() {
+        let s0 = node_seed(42, 0);
+        assert_eq!(s0, 42);
+        let mut seen = std::collections::HashSet::new();
+        for node in 0..64 {
+            assert!(seen.insert(node_seed(42, node)), "seed collision at node {node}");
+            assert_eq!(node_seed(42, node), node_seed(42, node));
+        }
+    }
+
+    #[test]
+    fn ids_interleave_without_collision() {
+        let s = scenario();
+        let spec = PlatformSpec { nodes: 4, ..PlatformSpec::default() };
+        let mut seen = std::collections::HashSet::new();
+        for node in 0..4 {
+            let mut ns = NodeStream::new(&s, &spec, 600.0, 7, 0, node).unwrap();
+            for _ in 0..100 {
+                let f = ns.next_fault().unwrap();
+                assert_eq!(f.id % 4, node, "remap must encode the node");
+                assert!(seen.insert(f.id), "global id collision: {}", f.id);
+            }
+        }
+    }
+
+    #[test]
+    fn per_node_mean_scales_with_k() {
+        let s = scenario();
+        let spec = PlatformSpec { nodes: 8, ..PlatformSpec::default() };
+        let mut ns = NodeStream::new(&s, &spec, 600.0, 3, 0, 2).unwrap();
+        let n = 4000;
+        let mut last = 0.0;
+        for _ in 0..n {
+            last = ns.next_fault().unwrap().t;
+        }
+        let emp = last / n as f64;
+        let want = s.mu() * 8.0;
+        assert!((emp - want).abs() / want < 0.1, "per-node MTBF {emp} vs {want}");
+    }
+
+    #[test]
+    fn reset_matches_fresh_node() {
+        let s = scenario();
+        let spec = PlatformSpec { nodes: 3, ..PlatformSpec::default() };
+        let mut reused = NodeStream::new(&s, &spec, 600.0, 11, 0, 1).unwrap();
+        for rep in [4u64, 0, 9] {
+            reused.reset(11, rep);
+            let mut fresh = NodeStream::new(&s, &spec, 600.0, 11, rep, 1).unwrap();
+            for _ in 0..80 {
+                assert_eq!(reused.next_fault(), fresh.next_fault());
+            }
+            for _ in 0..20 {
+                assert_eq!(reused.next_prediction(), fresh.next_prediction());
+            }
+        }
+    }
+}

@@ -1,0 +1,111 @@
+//! The coordinated checkpoint store component.
+//!
+//! Checkpoint commits are *coordinated*: every node quiesces, the K
+//! node images are committed together, and the commit contends on the
+//! shared store. The contention model is linear in the extra nodes —
+//! a commit (or a full restart) of a K-node platform costs
+//!
+//! ```text
+//! C_eff = C · (1 + γ · (K − 1))      γ = PlatformSpec::commit
+//! R_eff = R · (1 + γ · (K − 1))      (restart = full)
+//! R_eff = R                          (restart = partial)
+//! ```
+//!
+//! `γ = 0` is a perfectly parallel store (commit cost independent of
+//! K); `γ = 1` is a fully serialized one (cost linear in K). Partial
+//! restart models the scenario where only the *failed* nodes reload
+//! their images from the last coordinated checkpoint while the
+//! survivors roll back in place — the rollback itself is still global
+//! (coordinated checkpointing has no message logging), so only the
+//! recovery *cost* changes, not the lost work.
+//!
+//! Both effects are static scalings of the engine's `C`/`R`
+//! parameters, applied once at session build (the engine's event loop
+//! is unchanged). At K = 1 every mode collapses to the scenario's own
+//! C and R — part of the 1-node bit-identity contract.
+
+use super::{PlatformSpec, RestartScope};
+
+/// The store's coordination cost model for one platform spec.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CheckpointStore {
+    nodes: u64,
+    commit: f64,
+    restart: RestartScope,
+}
+
+impl CheckpointStore {
+    pub fn new(spec: &PlatformSpec) -> CheckpointStore {
+        CheckpointStore { nodes: spec.nodes, commit: spec.commit, restart: spec.restart }
+    }
+
+    /// Contention factor for a coordinated K-node commit.
+    fn factor(&self) -> f64 {
+        1.0 + self.commit * (self.nodes.saturating_sub(1)) as f64
+    }
+
+    /// Effective duration of one coordinated checkpoint commit.
+    pub fn commit_cost(&self, c: f64) -> f64 {
+        c * self.factor()
+    }
+
+    /// Effective recovery duration after a fault.
+    pub fn restart_cost(&self, r: f64) -> f64 {
+        match self.restart {
+            RestartScope::Full => r * self.factor(),
+            // Only the failed nodes reload their images; the store
+            // serves a constant number of readers regardless of K.
+            RestartScope::Partial => r,
+        }
+    }
+}
+
+/// The `(C_eff, R_eff)` pair a platform session installs into its
+/// [`crate::sim::SimConfig`].
+pub fn effective_costs(spec: &PlatformSpec, c: f64, r: f64) -> (f64, f64) {
+    let store = CheckpointStore::new(spec);
+    (store.commit_cost(c), store.restart_cost(r))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_node_is_cost_neutral() {
+        // K = 1: every (γ, restart) combination collapses to (C, R).
+        for commit in [0.0, 0.3, 1.0] {
+            for restart in [RestartScope::Full, RestartScope::Partial] {
+                let spec = PlatformSpec { nodes: 1, commit, restart, ..PlatformSpec::default() };
+                assert_eq!(effective_costs(&spec, 600.0, 450.0), (600.0, 450.0));
+            }
+        }
+    }
+
+    #[test]
+    fn commit_contention_scales_linearly() {
+        let spec = PlatformSpec { nodes: 5, commit: 0.25, ..PlatformSpec::default() };
+        let (c_eff, r_eff) = effective_costs(&spec, 600.0, 600.0);
+        assert_eq!(c_eff, 600.0 * 2.0); // 1 + 0.25 * 4
+        assert_eq!(r_eff, 600.0 * 2.0); // full restart pays the same factor
+    }
+
+    #[test]
+    fn partial_restart_only_reloads_the_failed_nodes() {
+        let spec = PlatformSpec {
+            nodes: 8,
+            commit: 0.5,
+            restart: RestartScope::Partial,
+            ..PlatformSpec::default()
+        };
+        let (c_eff, r_eff) = effective_costs(&spec, 600.0, 450.0);
+        assert_eq!(c_eff, 600.0 * 4.5); // commits still coordinate all 8
+        assert_eq!(r_eff, 450.0); // recovery reads one image
+    }
+
+    #[test]
+    fn zero_gamma_is_a_parallel_store() {
+        let spec = PlatformSpec { nodes: 64, ..PlatformSpec::default() };
+        assert_eq!(effective_costs(&spec, 600.0, 600.0), (600.0, 600.0));
+    }
+}

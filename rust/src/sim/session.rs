@@ -15,6 +15,7 @@
 use std::sync::Arc;
 use std::time::Instant;
 
+use super::platform::{store, PlatformSource, PlatformSpec};
 use super::{Engine, Outcome, Policy, SimConfig};
 use crate::config::Scenario;
 use crate::rng::trust_seed;
@@ -37,6 +38,9 @@ pub struct SimSession {
 
 enum Backing {
     Live(Engine<TraceGen>),
+    /// Multi-node platform engine ([`SimSession::on_platform`]). Live
+    /// only — platforms decline trace-bank replay.
+    Platform(Engine<PlatformSource>),
     Replay {
         engine: Engine<ReplaySource>,
         /// Live fallback engine, built on first use.
@@ -124,9 +128,52 @@ impl SimSession {
         })
     }
 
+    /// Platform-backed session: the engine consumes a
+    /// [`PlatformSource`] (K merged per-node streams, optional
+    /// correlation) and the store's coordination costs replace the
+    /// scenario's raw C/R. At `spec == PlatformSpec::default()` this is
+    /// bit-identical to [`SimSession::from_policy`] on every outcome
+    /// field (pinned in `tests/test_platform.rs`).
+    pub fn on_platform(
+        scenario: &Scenario,
+        policy: Policy,
+        pspec: &PlatformSpec,
+    ) -> anyhow::Result<SimSession> {
+        pspec.validate()?;
+        let mut cfg = SimConfig::from_scenario(scenario);
+        let (c_eff, r_eff) = store::effective_costs(pspec, cfg.c, cfg.r);
+        cfg.c = c_eff;
+        cfg.r = r_eff;
+        cfg.validate()?;
+        // Lead against the *effective* commit cost: proactive actions
+        // must fit the coordinated checkpoint they trigger. At the
+        // default spec this is the raw C — the from_policy path.
+        let lead = policy.required_lead(cfg.c);
+        let source = PlatformSource::new(scenario, pspec, lead, scenario.seed, 0)?;
+        let engine = Engine::with_policy(&cfg, policy, source, 0);
+        Ok(SimSession { seed: scenario.seed, inner: Backing::Platform(engine) })
+    }
+
+    /// [`SimSession::on_platform`] from a strategy spec — the policy is
+    /// built against the platform's effective commit cost, mirroring
+    /// [`SimSession::new`]'s use of the scenario's C.
+    pub fn new_on_platform(
+        scenario: &Scenario,
+        spec: &StrategySpec,
+        pspec: &PlatformSpec,
+    ) -> anyhow::Result<SimSession> {
+        let (c_eff, _) = store::effective_costs(pspec, scenario.platform.c, scenario.platform.r);
+        Self::on_platform(scenario, Policy::from_spec(spec, c_eff), pspec)
+    }
+
     /// Whether this session serves replications from a trace bank.
     pub fn is_replay(&self) -> bool {
         matches!(self.inner, Backing::Replay { .. })
+    }
+
+    /// Whether this session runs a multi-node platform engine.
+    pub fn is_platform(&self) -> bool {
+        matches!(self.inner, Backing::Platform(_))
     }
 
     /// Execute replication `rep`. Reuses the session's engine and
@@ -137,6 +184,11 @@ impl SimSession {
         let started = Instant::now();
         let mut out = match &mut self.inner {
             Backing::Live(engine) => {
+                engine.source_mut().reset(self.seed, rep);
+                engine.reset(trust_seed(self.seed, rep));
+                engine.run_to_completion()
+            }
+            Backing::Platform(engine) => {
                 engine.source_mut().reset(self.seed, rep);
                 engine.reset(trust_seed(self.seed, rep));
                 engine.run_to_completion()
@@ -303,6 +355,36 @@ mod tests {
             proactive: crate::strategies::ProactiveMode::Migrate { m: lead * 2.0 },
         };
         assert!(SimSession::replay(bank, &s, mig).is_err());
+    }
+
+    #[test]
+    fn single_platform_session_matches_the_classic_engine() {
+        // The 1-node special case is the classic session, bit for bit.
+        let s0 = scenario(300.0);
+        let s = crate::experiments::scenario_for(StrategyKind::NoCkptI, &s0);
+        let spec = spec_for(StrategyKind::NoCkptI, &s, Capping::Uncapped);
+        let policy = Policy::from_spec(&spec, s.platform.c);
+        let pspec = PlatformSpec::default();
+        let mut platform = SimSession::on_platform(&s, policy, &pspec).unwrap();
+        let mut classic = SimSession::from_policy(&s, policy).unwrap();
+        assert!(platform.is_platform() && !classic.is_platform());
+        for rep in [0u64, 3, 1] {
+            let a = platform.run(rep);
+            let b = classic.run(rep);
+            assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "rep {rep}");
+            assert_eq!(a.n_segments, b.n_segments, "rep {rep}");
+            assert_eq!(a.n_preds, b.n_preds, "rep {rep}");
+            assert_eq!(a.lost_work.to_bits(), b.lost_work.to_bits(), "rep {rep}");
+        }
+    }
+
+    #[test]
+    fn platform_session_rejects_zero_nodes() {
+        let s = scenario(0.0);
+        let spec = spec_for(StrategyKind::Young, &s, Capping::Uncapped);
+        let pspec = PlatformSpec { nodes: 0, ..PlatformSpec::default() };
+        let err = SimSession::new_on_platform(&s, &spec, &pspec).unwrap_err().to_string();
+        assert!(err.contains("at least one node"), "{err}");
     }
 
     #[test]

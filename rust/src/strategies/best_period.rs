@@ -144,6 +144,40 @@ pub fn best_period_with(
     }))
 }
 
+/// [`best_period_with`] on a multi-node platform: the same bracket
+/// around `sqrt(2 mu C)` — the platform's aggregate MTBF equals the
+/// scenario's `mu` by Poisson superposition, so the closed-form anchor
+/// is unchanged — with every candidate simulated through
+/// [`SimSession::new_on_platform`]. Platform sessions decline
+/// trace-bank replay (a bank materializes one aggregated stream, not K
+/// merged per-node streams), so the sweep always runs live and the
+/// paired-CI fields stay NaN.
+pub fn best_period_on_platform(
+    scenario: &Scenario,
+    base: &StrategySpec,
+    pspec: &crate::sim::PlatformSpec,
+    reps: u64,
+    n_candidates: usize,
+    opts: &BestPeriodOptions,
+) -> anyhow::Result<BestPeriodResult> {
+    anyhow::ensure!(reps > 0, "best_period needs at least one replication");
+    pspec.validate()?;
+    let c = scenario.platform.c;
+    let mu = scenario.mu();
+    let formula = (2.0 * mu * c).sqrt();
+    let lo = (formula / 6.0).max(2.0 * c);
+    let hi = (4.0 * formula).max(lo * 4.0);
+    let grid = period_grid(lo, hi, n_candidates);
+    let specs: Vec<StrategySpec> =
+        grid.iter().map(|&t_r| StrategySpec { t_r, ..base.clone() }).collect();
+    // Surface configuration errors once, before any worker runs.
+    drop(SimSession::new_on_platform(scenario, &specs[0], pspec)?);
+    Ok(search_grid(&grid, reps, opts, false, |ci| {
+        SimSession::new_on_platform(scenario, &specs[ci], pspec)
+            .expect("platform spec validated above")
+    }))
+}
+
 /// Parameter search for a [`PolicySpec`]: the same brute-force
 /// machinery as [`best_period_with`], sweeping the policy's natural
 /// tuning axis. Paper strategies sweep their regular period T_R
@@ -608,6 +642,46 @@ mod tests {
         // The paired CIs exist exactly when CRN pruning ran.
         assert_eq!(pruned.paired_ci.len(), 8);
         assert!(pruned.paired_ci.iter().any(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn single_platform_search_matches_the_live_search() {
+        // nodes = 1 platform sweeps are the classic live sweep, bit for
+        // bit (platform sessions never replay, so compare to replay=false).
+        let (s, base) = small_study();
+        let opts = BestPeriodOptions { workers: 2, prune: false, replay: false };
+        let live = best_period_with(&s, &base, 5, 5, &opts).unwrap();
+        let platform = best_period_on_platform(
+            &s,
+            &base,
+            &crate::sim::PlatformSpec::default(),
+            5,
+            5,
+            &opts,
+        )
+        .unwrap();
+        assert_eq!(live.t_r.to_bits(), platform.t_r.to_bits());
+        assert_eq!(live.waste.to_bits(), platform.waste.to_bits());
+        for (a, b) in live.sweep.iter().zip(&platform.sweep) {
+            assert_eq!(a.1.to_bits(), b.1.to_bits());
+        }
+    }
+
+    #[test]
+    fn platform_search_finds_a_sane_optimum_at_n_nodes() {
+        // Superposition keeps the aggregate MTBF at mu, so the winner
+        // still lands near sqrt(2 mu C) for an uncorrelated platform.
+        let (s, base) = small_study();
+        let pspec = crate::sim::PlatformSpec { nodes: 4, ..Default::default() };
+        let opts = BestPeriodOptions { workers: 2, prune: false, replay: false };
+        let res = best_period_on_platform(&s, &base, &pspec, 10, 8, &opts).unwrap();
+        let formula = (2.0 * s.mu() * s.platform.c).sqrt();
+        assert!(
+            res.t_r > formula / 2.0 && res.t_r < formula * 2.0,
+            "best {} vs formula {formula}",
+            res.t_r
+        );
+        assert!(res.paired_ci.iter().all(|x| x.is_nan()), "no CRN on platforms");
     }
 
     #[test]

@@ -14,8 +14,8 @@ mod best_period;
 mod policy;
 
 pub use best_period::{
-    best_period, best_period_with, best_policy_with, period_grid, BestPeriodOptions,
-    BestPeriodResult,
+    best_period, best_period_on_platform, best_period_with, best_policy_with, period_grid,
+    BestPeriodOptions, BestPeriodResult,
 };
 pub use policy::{resolve_policy, PolicySpec, ResolvedPolicy};
 

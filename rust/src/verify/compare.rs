@@ -128,9 +128,15 @@ pub fn judge_case(case: &ConformanceCase, opts: &VerifyOptions) -> anyhow::Resul
 
     // Reserve the bank against the full escalation budget (a bank that
     // would blow the arena cap at the deepest doubling is declined up
-    // front), but materialize lazily, one round at a time.
+    // front), but materialize lazily, one round at a time. Multi-node
+    // platform cases always run live: the bank stores one flat trace
+    // per replication, not K per-node substreams.
     let lead = rp.policy.required_lead(rp.scenario.platform.c);
-    let mut bank = TraceBank::try_reserve(&rp.scenario, lead, budget)?;
+    let mut bank = if case.platform.is_single() {
+        TraceBank::try_reserve(&rp.scenario, lead, budget)?
+    } else {
+        None
+    };
 
     let mut agg = ReplicationAgg::default();
     let mut done = 0u64;
@@ -144,6 +150,10 @@ pub fn judge_case(case: &ConformanceCase, opts: &VerifyOptions) -> anyhow::Resul
         let shared = bank.take().map(Arc::new);
         let chunk = run_replication_range_with(done, target, opts.workers, || match &shared {
             Some(b) => SimSession::replay(b.clone(), &rp.scenario, rp.policy),
+            None if !case.platform.is_single() => {
+                SimSession::on_platform(&rp.scenario, rp.policy, &case.platform)
+                    .expect("platform spec validated when the grid was built")
+            }
             None => SimSession::from_policy(&rp.scenario, rp.policy),
         })?;
         bank = shared.and_then(|a| Arc::try_unwrap(a).ok());
@@ -229,6 +239,24 @@ mod tests {
         assert_eq!(a.completion_rate, 1.0);
         let b = judge_case(&case, &opts).unwrap();
         assert_eq!(a, b, "judgement must be deterministic for fixed options");
+    }
+
+    #[test]
+    fn judge_runs_platform_cases_live() {
+        // The multi-node case declines the trace bank and still judges
+        // deterministically; Poisson superposition keeps it in the same
+        // first-order band as its single-stream twin, so with a real
+        // budget it must not confidently fail.
+        let case = conformance_grid(GridKind::Quick)
+            .into_iter()
+            .find(|c| c.name == "exp-n16-none-Young@nodes=4")
+            .unwrap();
+        let opts = VerifyOptions { reps0: 16, budget: 64, workers: 2 };
+        let a = judge_case(&case, &opts).unwrap();
+        assert_ne!(a.verdict, Verdict::Fail, "{a:?}");
+        assert_eq!(a.completion_rate, 1.0);
+        let b = judge_case(&case, &opts).unwrap();
+        assert_eq!(a, b, "platform judgement must be deterministic");
     }
 
     #[test]

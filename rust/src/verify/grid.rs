@@ -17,6 +17,7 @@
 use crate::config::{Predictor, Scenario};
 use crate::dist::DistSpec;
 use crate::model::StrategyKind;
+use crate::sim::{PlatformSpec, RestartScope};
 use crate::strategies::PolicySpec;
 
 /// Which conformance grid to enumerate.
@@ -68,10 +69,17 @@ impl std::str::FromStr for GridKind {
 /// simulated waste is checked against the analytic oracle.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ConformanceCase {
-    /// Stable identifier, e.g. `exp-n16-yu:exact-ExactPrediction`.
+    /// Stable identifier, e.g. `exp-n16-yu:exact-ExactPrediction`;
+    /// platform cases carry an `@<platform>` suffix.
     pub name: String,
     pub scenario: Scenario,
     pub subject: PolicySpec,
+    /// The simulated platform; `single` for the classic engine cases.
+    /// Uncorrelated multi-node platforms keep the aggregate MTBF at the
+    /// scenario's `mu` (Poisson superposition), so the oracle's closed
+    /// form applies unchanged; correlated or store-contended specs are
+    /// judged out-of-domain with divergence bounds.
+    pub platform: PlatformSpec,
 }
 
 /// FNV-1a over the case name — a stable per-case master seed, so the
@@ -162,6 +170,21 @@ struct GridBuilder {
 
 impl GridBuilder {
     fn push(&mut self, dist: DistSpec, n_exp: u32, pred: Pred, tweak: Tweak, subject: PolicySpec) {
+        self.push_on(dist, n_exp, pred, tweak, subject, PlatformSpec::default());
+    }
+
+    /// Push a case simulated on `platform`; non-`single` specs suffix
+    /// the name with `@<platform>` (part of the seed derivation, so a
+    /// platform case and its classic twin replay different traces).
+    fn push_on(
+        &mut self,
+        dist: DistSpec,
+        n_exp: u32,
+        pred: Pred,
+        tweak: Tweak,
+        subject: PolicySpec,
+        platform: PlatformSpec,
+    ) {
         let mut name = format!("{dist}-n{n_exp}-{}", pred.label());
         if let Some(t) = tweak.label() {
             name.push('-');
@@ -169,6 +192,10 @@ impl GridBuilder {
         }
         name.push('-');
         name.push_str(&subject.to_string());
+        if !platform.is_single() {
+            name.push('@');
+            name.push_str(&platform.to_string());
+        }
 
         let mut s = Scenario::paper(1u64 << n_exp, pred.build());
         s.fault_dist = dist;
@@ -185,7 +212,7 @@ impl GridBuilder {
         // floored so large-mu platforms still see events.
         s.work = (10.0 * s.mu()).max(4.0e5);
         s.seed = case_seed(&name);
-        self.cases.push(ConformanceCase { name, scenario: s, subject });
+        self.cases.push(ConformanceCase { name, scenario: s, subject, platform });
     }
 }
 
@@ -229,6 +256,28 @@ pub fn conformance_grid(kind: GridKind) -> Vec<ConformanceCase> {
     b.push(exp, 16, Pred::None, Tweak::None, PolicySpec::RiskThreshold { kappa: 1.0 });
     b.push(exp, 16, Pred::YuExact, Tweak::None, PolicySpec::RiskThreshold { kappa: 1.0 });
 
+    // --- Platform cases: the multi-node engine against the closed form.
+    // Uncorrelated exponential at nodes=4: Poisson superposition keeps
+    // the aggregate MTBF at mu, so the oracle's first-order band
+    // applies unchanged — the N-node acceptance criterion.
+    b.push_on(exp, 16, Pred::None, Tweak::None, strat(Young), PlatformSpec {
+        nodes: 4,
+        ..PlatformSpec::default()
+    });
+    b.push_on(exp, 16, Pred::YuExact, Tweak::None, strat(ExactPrediction), PlatformSpec {
+        nodes: 4,
+        ..PlatformSpec::default()
+    });
+    // Correlated failure groups: out of the closed form's domain, the
+    // oracle asserts divergence bounds only.
+    b.push_on(exp, 16, Pred::None, Tweak::None, strat(Young), PlatformSpec {
+        nodes: 8,
+        group: 4,
+        spatial: 0.25,
+        cascade: 0.1,
+        ..PlatformSpec::default()
+    });
+
     if kind == GridKind::Quick {
         return b.cases;
     }
@@ -262,6 +311,31 @@ pub fn conformance_grid(kind: GridKind) -> Vec<ConformanceCase> {
     b.push(exp, 16, Pred::None, Tweak::None, PolicySpec::AdaptivePeriod { gain: 2.0 });
     b.push(exp, 16, Pred::None, Tweak::None, PolicySpec::RiskThreshold { kappa: 0.5 });
     b.push(exp, 16, Pred::None, Tweak::None, PolicySpec::RiskThreshold { kappa: 2.0 });
+
+    // --- Full grid: platform sweep and coordination variants ---------
+    // Larger uncorrelated platforms: superposition must hold at every K.
+    b.push_on(exp, 16, Pred::None, Tweak::None, strat(Young), PlatformSpec {
+        nodes: 16,
+        ..PlatformSpec::default()
+    });
+    b.push_on(exp, 16, Pred::Yu(300.0), Tweak::None, strat(NoCkptI), PlatformSpec {
+        nodes: 4,
+        ..PlatformSpec::default()
+    });
+    // Store contention on commits: out of domain (C_eff != C).
+    b.push_on(exp, 16, Pred::None, Tweak::None, strat(Young), PlatformSpec {
+        nodes: 8,
+        commit: 0.1,
+        ..PlatformSpec::default()
+    });
+    // Partial restart under correlated groups.
+    b.push_on(exp, 16, Pred::None, Tweak::None, strat(Young), PlatformSpec {
+        nodes: 8,
+        restart: RestartScope::Partial,
+        group: 4,
+        spatial: 0.25,
+        ..PlatformSpec::default()
+    });
 
     b.cases
 }
@@ -325,13 +399,39 @@ mod tests {
     }
 
     #[test]
+    fn quick_includes_platform_cases() {
+        // The N-node acceptance criterion needs an uncorrelated
+        // multi-node case in the CI gate, plus one correlated case for
+        // the divergence-bound side; every platform spec must validate.
+        let quick = conformance_grid(GridKind::Quick);
+        assert!(quick.iter().any(|c| c.platform.nodes > 1 && !c.platform.correlated()));
+        assert!(quick.iter().any(|c| c.platform.correlated()));
+        for c in conformance_grid(GridKind::Full) {
+            c.platform.validate().unwrap_or_else(|e| panic!("{}: {e:#}", c.name));
+            if !c.platform.is_single() {
+                assert!(c.name.contains('@'), "platform case {} must carry the suffix", c.name);
+            }
+        }
+    }
+
+    #[test]
     fn seeds_derive_from_names() {
         let quick = conformance_grid(GridKind::Quick);
         assert_eq!(quick[0].scenario.seed, case_seed(&quick[0].name));
-        // Distinct names, distinct seeds (FNV collisions are possible in
-        // principle but must not happen on the actual grid).
-        let seeds: std::collections::HashSet<u64> =
-            quick.iter().map(|c| c.scenario.seed).collect();
-        assert_eq!(seeds.len(), quick.len());
+    }
+
+    #[test]
+    fn no_seed_collisions_across_the_full_grid() {
+        // Names are the FNV-1a seed source; an FNV collision between
+        // two case names would silently correlate their traces. Check
+        // the FULL grid (the quick grid is a prefix), name by name.
+        let full = conformance_grid(GridKind::Full);
+        let mut seen: std::collections::HashMap<u64, &str> = std::collections::HashMap::new();
+        for c in &full {
+            assert_eq!(c.scenario.seed, case_seed(&c.name), "{}", c.name);
+            if let Some(prev) = seen.insert(c.scenario.seed, &c.name) {
+                panic!("seed collision: '{}' and '{}' share seed {}", prev, c.name, c.scenario.seed);
+            }
+        }
     }
 }

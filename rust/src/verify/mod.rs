@@ -36,6 +36,7 @@ pub use compare::{judge_case, CaseVerdict, Verdict, VerifyOptions};
 pub use grid::{conformance_grid, ConformanceCase, GridKind};
 pub use oracle::{oracle_for, Domain, Oracle, FIRST_ORDER_RATIO_CAP};
 
+use crate::sim::PlatformSpec;
 use crate::strategies::PolicySpec;
 use crate::util::json::Json;
 
@@ -69,12 +70,33 @@ pub fn run_conformance(
     filter: Option<&PolicySpec>,
     opts: &VerifyOptions,
 ) -> anyhow::Result<VerifyReport> {
+    run_conformance_filtered(grid, filter, None, opts)
+}
+
+/// [`run_conformance`] with an additional platform filter: when
+/// `platform` is given, only cases pinned to exactly that
+/// [`PlatformSpec`] are judged (the CLI `--platform` flag and the wire
+/// v2 `verify` field). Both filters compose; an empty selection is an
+/// error, not a vacuous pass.
+pub fn run_conformance_filtered(
+    grid: GridKind,
+    policy: Option<&PolicySpec>,
+    platform: Option<&PlatformSpec>,
+    opts: &VerifyOptions,
+) -> anyhow::Result<VerifyReport> {
     let mut cases = conformance_grid(grid);
-    if let Some(f) = filter {
+    if let Some(f) = policy {
         cases.retain(|c| c.subject == *f);
         anyhow::ensure!(
             !cases.is_empty(),
             "no conformance case in the {grid} grid has subject policy '{f}'"
+        );
+    }
+    if let Some(p) = platform {
+        cases.retain(|c| c.platform == *p);
+        anyhow::ensure!(
+            !cases.is_empty(),
+            "no conformance case in the {grid} grid runs on platform '{p}'"
         );
     }
     let mut out = Vec::with_capacity(cases.len());
@@ -268,6 +290,18 @@ mod tests {
         let young = PolicySpec::Strategy(StrategyKind::Young);
         let r = run_conformance(GridKind::Quick, Some(&young), &opts).unwrap();
         assert!(r.cases.len() >= 4, "Young appears across laws and tweaks");
+    }
+
+    #[test]
+    fn run_conformance_filters_by_platform() {
+        let opts = VerifyOptions { reps0: 2, budget: 2, workers: 2 };
+        let p: PlatformSpec = "nodes=4".parse().unwrap();
+        let r = run_conformance_filtered(GridKind::Quick, None, Some(&p), &opts).unwrap();
+        assert!(!r.cases.is_empty());
+        assert!(r.cases.iter().all(|c| c.name.ends_with("@nodes=4")), "{:?}", r.cases);
+        // A platform absent from the grid is an error, not an empty pass.
+        let missing: PlatformSpec = "nodes=77".parse().unwrap();
+        assert!(run_conformance_filtered(GridKind::Quick, None, Some(&missing), &opts).is_err());
     }
 
     #[test]

@@ -74,6 +74,42 @@ pub fn oracle_for(case: &ConformanceCase) -> anyhow::Result<Oracle> {
             let spec = spec_for(kind, &rp.scenario, Capping::Uncapped);
             let w = waste_of(&p, kind, spec.t_r, tp_opt(&p)).min(1.0);
             let ratio = (spec.t_r + p.c) / p.mu;
+            // Platform classification. An *uncorrelated, contention-free*
+            // multi-node platform stays in domain: K merged per-node
+            // exponential streams superpose to the same aggregate law at
+            // the same mu, and with commit = 0 the coordinated costs
+            // equal the scenario's C/R — so the first-order logic below
+            // applies unchanged (the N-node acceptance criterion).
+            // Correlation or store contention changes the experiment the
+            // closed form describes, so those assert divergence bounds.
+            if case.platform.spatial > 0.0 || case.platform.cascade > 0.0 {
+                let (lo, hi) = clamp_band(w / 4.0, 6.0 * w);
+                return Ok(Oracle {
+                    analytic: w,
+                    band: (lo, hi),
+                    domain: Domain::OutOfDomain {
+                        reason: format!(
+                            "platform '{}' correlates failures; the closed forms assume \
+                             independent streams",
+                            case.platform
+                        ),
+                    },
+                });
+            }
+            if case.platform.commit > 0.0 {
+                let (lo, hi) = clamp_band(w / 4.0, 6.0 * w);
+                return Ok(Oracle {
+                    analytic: w,
+                    band: (lo, hi),
+                    domain: Domain::OutOfDomain {
+                        reason: format!(
+                            "platform '{}' contends on the checkpoint store; \
+                             C_eff differs from the modeled C",
+                            case.platform
+                        ),
+                    },
+                });
+            }
             if case.scenario.fault_dist != DistSpec::Exp {
                 let (lo, hi) = clamp_band(w / 4.0, 4.0 * w);
                 return Ok(Oracle {
@@ -205,6 +241,35 @@ mod tests {
             with_pred.band.0 < o.band.0,
             "a prediction-trusting policy may undercut Young further"
         );
+    }
+
+    #[test]
+    fn uncorrelated_platforms_stay_first_order() {
+        // Poisson superposition: the K-node uncorrelated case keeps the
+        // aggregate law, so it is judged by the same agreement band as
+        // its single-stream twin.
+        let platform = oracle_for(&case_named("exp-n16-none-Young@nodes=4")).unwrap();
+        assert_eq!(platform.domain, Domain::FirstOrder);
+        let classic = oracle_for(&case_named("exp-n16-none-Young")).unwrap();
+        assert_eq!(platform.analytic, classic.analytic);
+        assert_eq!(platform.band, classic.band);
+    }
+
+    #[test]
+    fn correlated_and_contended_platforms_are_out_of_domain() {
+        let o = oracle_for(&case_named(
+            "exp-n16-none-Young@nodes=8,group=4,spatial=0.25,cascade=0.1",
+        ))
+        .unwrap();
+        match &o.domain {
+            Domain::OutOfDomain { reason } => assert!(reason.contains("correlates"), "{reason}"),
+            d => panic!("wrong domain {d:?}"),
+        }
+        let o = oracle_for(&case_named("exp-n16-none-Young@nodes=8,commit=0.1")).unwrap();
+        match &o.domain {
+            Domain::OutOfDomain { reason } => assert!(reason.contains("store"), "{reason}"),
+            d => panic!("wrong domain {d:?}"),
+        }
     }
 
     #[test]

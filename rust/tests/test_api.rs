@@ -58,6 +58,7 @@ fn every_request_variant_round_trips() {
             reps: 17,
             workers: Some(3),
             policy: None,
+            platform: None,
         }),
         JobRequest::Simulate(SimulateJob {
             scenario: s.clone(),
@@ -65,6 +66,7 @@ fn every_request_variant_round_trips() {
             reps: 5,
             workers: None,
             policy: Some(PolicySpec::RiskThreshold { kappa: 2.5 }),
+            platform: None,
         }),
         JobRequest::Simulate(SimulateJob::new(s.clone(), StrategyKind::Young)),
         JobRequest::BestPeriod(BestPeriodJob {
@@ -75,6 +77,7 @@ fn every_request_variant_round_trips() {
             workers: None,
             prune: true,
             policy: None,
+            platform: None,
         }),
         JobRequest::BestPeriod(BestPeriodJob {
             scenario: s.clone(),
@@ -84,6 +87,7 @@ fn every_request_variant_round_trips() {
             workers: Some(2),
             prune: false,
             policy: Some(PolicySpec::AdaptivePeriod { gain: 0.75 }),
+            platform: None,
         }),
         JobRequest::Sweep(SweepJob {
             base: s.clone(),
@@ -409,6 +413,7 @@ fn simulate_over_tcp_is_bit_identical_to_in_process() {
             reps,
             workers: Some(workers),
             policy: None,
+            platform: None,
         })
         .unwrap();
 
@@ -445,6 +450,7 @@ fn concurrent_clients_simulate_against_one_service() {
                             reps: 4,
                             workers: Some(2),
                             policy: None,
+                            platform: None,
                         })
                         .unwrap()
                 })
@@ -491,6 +497,7 @@ fn typed_client_runs_plan_best_period_and_sweep() {
             workers: Some(2),
             prune: false,
             policy: None,
+            platform: None,
         })
         .unwrap();
     assert_eq!(bp.sweep.len(), 6);

@@ -1,0 +1,151 @@
+//! Integration tests of the `sim::platform` subsystem through the
+//! public API: the 1-node golden equivalence against the classic
+//! engine, multi-node sanity, and error paths.
+
+use ckptfp::config::{Predictor, Scenario};
+use ckptfp::model::{Capping, StrategyKind};
+use ckptfp::sim::{Outcome, PlatformSpec, SimSession};
+use ckptfp::strategies::spec_for;
+
+fn scenario(window: f64) -> Scenario {
+    let pred = if window > 0.0 {
+        Predictor::windowed(0.85, 0.82, window)
+    } else {
+        Predictor::exact(0.85, 0.82)
+    };
+    let mut s = Scenario::paper(1 << 16, pred);
+    s.fault_dist = ckptfp::dist::DistSpec::Exp;
+    s.work = 2.0e5;
+    s
+}
+
+/// Every Outcome field except the wall-clock `sim_seconds` timer.
+fn fields(o: &Outcome) -> Vec<u64> {
+    vec![
+        o.makespan.to_bits(),
+        o.work.to_bits(),
+        o.completed as u64,
+        o.n_faults,
+        o.n_faults_unpredicted,
+        o.n_preds,
+        o.n_true_preds,
+        o.n_trusted,
+        o.n_ckpts,
+        o.n_proactive_ckpts,
+        o.n_migrations,
+        o.n_faults_avoided,
+        o.lost_work.to_bits(),
+        o.n_segments,
+    ]
+}
+
+#[test]
+fn golden_one_node_platform_is_bit_identical_to_the_classic_engine() {
+    // The ISSUE's acceptance pin: at the default (single) spec the
+    // platform layer must be the identity — every Outcome field, every
+    // strategy, several replications.
+    for kind in StrategyKind::ALL {
+        let s = ckptfp::experiments::scenario_for(kind, &scenario(300.0));
+        let spec = spec_for(kind, &s, Capping::Uncapped);
+        let mut classic = SimSession::new(&s, &spec).unwrap();
+        let mut platform =
+            SimSession::new_on_platform(&s, &spec, &PlatformSpec::default()).unwrap();
+        assert!(platform.is_platform());
+        for rep in [0u64, 1, 5, 2] {
+            let a = classic.run(rep);
+            let b = platform.run(rep);
+            assert_eq!(fields(&a), fields(&b), "{} rep {rep}", kind.name());
+        }
+    }
+}
+
+#[test]
+fn multi_node_uncorrelated_platform_matches_the_single_stream_statistically() {
+    // Poisson superposition at the outcome level: waste on K merged
+    // per-node streams tracks the classic single-stream waste.
+    let s = scenario(0.0);
+    let spec = spec_for(StrategyKind::Young, &s, Capping::Uncapped);
+    let reps = 24;
+    let mean = |session: &mut SimSession| -> f64 {
+        (0..reps).map(|r| session.run(r).waste()).sum::<f64>() / reps as f64
+    };
+    let mut classic = SimSession::new(&s, &spec).unwrap();
+    let w1 = mean(&mut classic);
+    let pspec: PlatformSpec = "nodes=8".parse().unwrap();
+    let mut platform = SimSession::new_on_platform(&s, &spec, &pspec).unwrap();
+    let w8 = mean(&mut platform);
+    assert!(w1 > 0.0 && w8 > 0.0);
+    assert!(
+        (w1 - w8).abs() < 0.35 * w1.max(w8),
+        "classic waste {w1} vs 8-node {w8}"
+    );
+}
+
+#[test]
+fn commit_contention_raises_waste() {
+    // A store whose commit cost scales with K makes checkpoints more
+    // expensive, so waste at the same period must go up.
+    let s = scenario(0.0);
+    let spec = spec_for(StrategyKind::Young, &s, Capping::Uncapped);
+    let reps = 16;
+    let run = |p: &PlatformSpec| -> f64 {
+        let mut session = SimSession::new_on_platform(&s, &spec, p).unwrap();
+        (0..reps).map(|r| session.run(r).waste()).sum::<f64>() / reps as f64
+    };
+    let flat = run(&"nodes=8".parse().unwrap());
+    let contended = run(&"nodes=8,commit=0.5".parse().unwrap());
+    assert!(
+        contended > flat,
+        "contended waste {contended} <= flat {flat}"
+    );
+}
+
+#[test]
+fn correlated_platform_wastes_more_than_uncorrelated() {
+    // Spatially-correlated failures inject extra (unpredicted) faults,
+    // which can only hurt.
+    let s = scenario(0.0);
+    let spec = spec_for(StrategyKind::Young, &s, Capping::Uncapped);
+    let reps = 16;
+    let run = |p: &PlatformSpec| -> f64 {
+        let mut session = SimSession::new_on_platform(&s, &spec, p).unwrap();
+        (0..reps).map(|r| session.run(r).waste()).sum::<f64>() / reps as f64
+    };
+    let flat = run(&"nodes=8".parse().unwrap());
+    let corr = run(&"nodes=8,group=4,spatial=0.5,cascade=0.2".parse().unwrap());
+    assert!(corr > flat, "correlated waste {corr} <= uncorrelated {flat}");
+}
+
+#[test]
+fn bad_platform_specs_error_through_the_public_api() {
+    let s = scenario(0.0);
+    let spec = spec_for(StrategyKind::Young, &s, Capping::Uncapped);
+    let err = SimSession::new_on_platform(
+        &s,
+        &spec,
+        &PlatformSpec { nodes: 0, ..PlatformSpec::default() },
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("at least one node"), "{err}");
+    assert!("nodes=4,spatial=1.5".parse::<PlatformSpec>().is_err());
+    assert!("nodes=4,restart=half".parse::<PlatformSpec>().is_err());
+    assert!("bogus".parse::<PlatformSpec>().is_err());
+}
+
+#[test]
+fn platform_spec_round_trips_through_display() {
+    for raw in [
+        "single",
+        "nodes=4",
+        "nodes=8,commit=0.05",
+        "nodes=8,restart=partial",
+        "nodes=8,group=4,spatial=0.25,cascade=0.1",
+        "nodes=16,commit=0.1,restart=partial,group=4,spatial=0.25,cascade=0.1,delta=120",
+    ] {
+        let spec: PlatformSpec = raw.parse().unwrap();
+        assert_eq!(spec.to_string(), raw, "canonical form");
+        let again: PlatformSpec = spec.to_string().parse().unwrap();
+        assert_eq!(again, spec);
+    }
+}

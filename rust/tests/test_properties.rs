@@ -306,6 +306,60 @@ fn prop_substream_independence() {
 }
 
 #[test]
+fn prop_platform_superposition_preserves_the_aggregate_law() {
+    // Poisson superposition: K per-node Exponential streams at MTBF
+    // mu·K merged by the platform layer must look like one stream at
+    // mu — same inter-arrival mean AND variance (an Exponential has
+    // var = mu², so matching both pins the law, not just the rate).
+    // Gates sit at ~4 sigma for the sample sizes used.
+    check(Config { cases: 8, seed: 26 }, |g| {
+        use ckptfp::sim::{PlatformSource, PlatformSpec};
+        let k = *g.choose(&[2u64, 4, 8, 16]);
+        let mut s = Scenario::paper(1 << 16, Predictor::none());
+        s.fault_dist = DistSpec::Exp;
+        s.seed = g.u64(0, 1 << 40);
+        let spec = PlatformSpec { nodes: k, ..PlatformSpec::default() };
+        let mut src = PlatformSource::new(&s, &spec, s.platform.c, s.seed, 0).unwrap();
+        let n = 6000u64;
+        let mut inter = |next: &mut dyn FnMut() -> f64| -> (f64, f64) {
+            let (mut prev, mut sum, mut sum2) = (0.0, 0.0, 0.0);
+            for _ in 0..n {
+                let t = next();
+                let dt = t - prev;
+                prev = t;
+                sum += dt;
+                sum2 += dt * dt;
+            }
+            let mean = sum / n as f64;
+            (mean, sum2 / n as f64 - mean * mean)
+        };
+        let (m_merged, v_merged) = inter(&mut || src.next_fault().unwrap().t);
+        let mu = s.mu();
+        assert!(
+            (m_merged - mu).abs() / mu < 0.05,
+            "K={k}: merged mean {m_merged} vs mu {mu}"
+        );
+        assert!(
+            (v_merged / (mu * mu) - 1.0).abs() < 0.15,
+            "K={k}: merged var {v_merged} vs mu^2 {}",
+            mu * mu
+        );
+        // And against the single-stream generator at the same aggregate
+        // MTBF (an independent fixed-seed sample of the same law).
+        let mut single = TraceGen::new(&s, s.platform.c, s.seed, 0).unwrap();
+        let (m_single, v_single) = inter(&mut || single.next_fault().unwrap().t);
+        assert!(
+            (m_merged - m_single).abs() / mu < 0.07,
+            "K={k}: merged mean {m_merged} vs single {m_single}"
+        );
+        assert!(
+            (v_merged - v_single).abs() / (mu * mu) < 0.25,
+            "K={k}: merged var {v_merged} vs single {v_single}"
+        );
+    });
+}
+
+#[test]
 fn prop_simulation_seed_determinism() {
     check(Config { cases: 8, seed: 18 }, |g| {
         let mut s = Scenario::paper(1 << 16, Predictor::windowed(0.7, 0.4, 300.0));

@@ -156,6 +156,7 @@ fn verify_job_round_trips_on_the_wire() {
             reps: 12,
             budget: 48,
             workers: Some(3),
+            platform: None,
         },
     ];
     for job in jobs {
@@ -204,6 +205,7 @@ fn verify_over_tcp_is_bit_identical_to_in_process() {
         reps: 8,
         budget: 16,
         workers: Some(2),
+        platform: None,
     };
     let mut client = ServiceClient::connect(&addr).unwrap();
     let served = client.verify(job.clone()).unwrap();

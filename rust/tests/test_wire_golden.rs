@@ -19,6 +19,7 @@ use ckptfp::api::{
 use ckptfp::config::{Predictor, Scenario};
 use ckptfp::dist::DistSpec;
 use ckptfp::model::{Capping, StrategyKind};
+use ckptfp::sim::PlatformSpec;
 use ckptfp::strategies::PolicySpec;
 use ckptfp::verify::{CaseVerdict, Domain, GridKind, Verdict, VerifyReport};
 
@@ -75,6 +76,7 @@ fn golden_requests() -> Vec<JobRequest> {
             reps: 17,
             workers: Some(3),
             policy: None,
+            platform: None,
         }),
         JobRequest::Simulate(SimulateJob {
             scenario: weibull_scenario(),
@@ -82,6 +84,7 @@ fn golden_requests() -> Vec<JobRequest> {
             reps: 5,
             workers: None,
             policy: Some(PolicySpec::RiskThreshold { kappa: 2.5 }),
+            platform: Some("nodes=4,commit=0.05".parse::<PlatformSpec>().unwrap()),
         }),
         JobRequest::BestPeriod(BestPeriodJob {
             scenario: golden_scenario(),
@@ -91,6 +94,7 @@ fn golden_requests() -> Vec<JobRequest> {
             workers: None,
             prune: true,
             policy: None,
+            platform: Some("nodes=8".parse::<PlatformSpec>().unwrap()),
         }),
         JobRequest::BestPeriod(BestPeriodJob {
             scenario: golden_scenario(),
@@ -100,6 +104,7 @@ fn golden_requests() -> Vec<JobRequest> {
             workers: Some(2),
             prune: false,
             policy: Some(PolicySpec::AdaptivePeriod { gain: 0.75 }),
+            platform: None,
         }),
         JobRequest::Sweep(SweepJob {
             base: golden_scenario(),
@@ -112,6 +117,7 @@ fn golden_requests() -> Vec<JobRequest> {
             reps: 32,
             budget: 128,
             workers: Some(2),
+            platform: Some("nodes=4".parse::<PlatformSpec>().unwrap()),
         }),
         JobRequest::Stats,
         JobRequest::Ping,

@@ -86,16 +86,17 @@ REQUESTS_V2 = [
     {"v": 2, "op": "plan", "scenario": scenario(), "capped": False, "policy": "NoCkptI"},
     {"v": 2, "op": "simulate", "scenario": scenario(), "strategy": "NoCkptI", "reps": 17,
      "workers": 3},
+    # Additive v2 "platform" field: canonical PlatformSpec display form.
     {"v": 2, "op": "simulate", "scenario": WEIBULL_SCENARIO, "strategy": "Young", "reps": 5,
-     "policy": "risk:2.5"},
+     "policy": "risk:2.5", "platform": "nodes=4,commit=0.05"},
     {"v": 2, "op": "best_period", "scenario": scenario(), "strategy": "Migration", "reps": 9,
-     "candidates": 12, "prune": True},
+     "candidates": 12, "prune": True, "platform": "nodes=8"},
     {"v": 2, "op": "best_period", "scenario": scenario(), "strategy": "Young", "reps": 3,
      "candidates": 4, "workers": 2, "prune": False, "policy": "adaptive:0.75"},
     {"v": 2, "op": "sweep", "scenario": scenario(), "n_procs": [16384, 65536, 524288],
      "capped": False},
     {"v": 2, "op": "verify", "grid": "quick", "reps": 32, "budget": 128, "workers": 2,
-     "policy": "risk:1"},
+     "policy": "risk:1", "platform": "nodes=4"},
     {"v": 2, "op": "stats"},
     {"v": 2, "op": "ping"},
 ]
