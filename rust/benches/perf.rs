@@ -9,8 +9,10 @@
 //!   pool                 worker-pool scaling (streaming fold + sessions)
 //!   best_period          brute-force period search, 1 worker vs all
 //!   best_period_crn      replay-backed sweep vs live sweep at equal reps
+//!   lockstep_vs_scalar   lockstep batch engine vs scalar replay over one bank
 //!   platform_step        multi-node platform source vs the classic engine
 //!   model                closed-form planner throughput (the non-AOT baseline)
+//!   waste_grid_batched   batched closed-form grid vs the per-row plan loop
 //!
 //! Every run also emits `BENCH_perf.json` (one object per executed
 //! bench, schema documented in EXPERIMENTS.md §Perf) so the perf
@@ -23,7 +25,7 @@ use ckptfp::dist::DistSpec;
 use ckptfp::coordinator::{run_parallel_fold, Batcher, BatcherConfig};
 use ckptfp::model::{plan, Capping, Params, StrategyKind};
 use ckptfp::runtime::HloPlanner;
-use ckptfp::sim::{simulate_once, SimSession};
+use ckptfp::sim::{simulate_once, BatchEngine, BatchOptions, BatchRunner, SimSession};
 use ckptfp::strategies::{best_period_with, spec_for, BestPeriodOptions};
 use ckptfp::util::json::Json;
 use ckptfp::util::stats::Summary;
@@ -333,8 +335,14 @@ fn bench_best_period(rec: &mut Recorder) {
         ("all workers, pruned", "parallel_pruned_s", all, true),
     ] {
         let t0 = Instant::now();
-        let res = best_period_with(&s, &base, 12, 12, &BestPeriodOptions { workers, prune, replay: true })
-            .expect("search");
+        let res = best_period_with(
+            &s,
+            &base,
+            12,
+            12,
+            &BestPeriodOptions { workers, prune, replay: true, ..Default::default() },
+        )
+        .expect("search");
         let dt = t0.elapsed().as_secs_f64();
         println!(
             "  {label:<22} {dt:>6.2}s  (T* = {:.0}, {} pruned)",
@@ -375,7 +383,9 @@ fn bench_best_period_crn(rec: &mut Recorder) {
             &base,
             24,
             12,
-            &BestPeriodOptions { workers, prune: false, replay },
+            // Scalar lanes on both arms: this bench isolates the CRN
+            // sampling win; the lockstep delta has its own bench below.
+            &BestPeriodOptions { workers, prune: false, replay, batch: BatchOptions::scalar() },
         )
         .expect("search");
         let dt = t0.elapsed().as_secs_f64();
@@ -390,6 +400,78 @@ fn bench_best_period_crn(rec: &mut Recorder) {
         }
     }
     rec.push("best_period_crn", fields);
+}
+
+fn bench_lockstep(rec: &mut Recorder) {
+    println!("== lockstep batch engine vs scalar replay (one shared bank) ==");
+    // The BestPeriod inner loop in isolation: the same banked
+    // replications advanced by a scalar replay session and by the
+    // lockstep engine at 1/4/16 lanes. Outcomes are bit-identical
+    // (pinned by tests/test_batch.rs), so the deltas are pure driver
+    // cost; lanes=1 vs scalar is the chunked driver's abstraction tax.
+    let mut s = Scenario::paper(1 << 19, predictor_yu(300.0));
+    s.fault_dist = DistSpec::weibull(0.7);
+    let spec = spec_for(StrategyKind::NoCkptI, &s, Capping::Uncapped);
+    let policy = ckptfp::sim::Policy::from_spec(&spec, s.platform.c);
+    let lead = spec.required_lead(s.platform.c);
+    let bank_reps = 256u64;
+    let bank = match ckptfp::trace::TraceBank::try_build(&s, lead, bank_reps).expect("bank build")
+    {
+        Some(b) => std::sync::Arc::new(b),
+        None => {
+            println!("  skipped: bank declined (arena cap)");
+            rec.push("lockstep_vs_scalar", vec![("skipped", Json::Bool(true))]);
+            return;
+        }
+    };
+    let reps: Vec<u64> = (0..bank_reps).collect();
+    let mut fields: Vec<(&str, Json)> = Vec::new();
+
+    // Replications per second over repeated full passes of the bank.
+    let mut rate_of = |runner: &mut BatchRunner| -> f64 {
+        runner.run_reps(&reps, |_, out| {
+            std::hint::black_box(out.n_segments);
+        }); // warmup
+        let t0 = Instant::now();
+        let mut passes = 0u64;
+        while t0.elapsed().as_secs_f64() < 1.0 {
+            runner.run_reps(&reps, |_, out| {
+                std::hint::black_box(out.n_segments);
+            });
+            passes += 1;
+        }
+        passes as f64 * bank_reps as f64 / t0.elapsed().as_secs_f64()
+    };
+
+    let mut scalar = BatchRunner::Scalar(
+        SimSession::replay(bank.clone(), &s, policy).expect("replay session"),
+    );
+    let scalar_rate = rate_of(&mut scalar);
+    println!("  scalar replay session        {scalar_rate:>8.0} reps/s");
+    fields.push(("scalar_reps_per_s", Json::Num(scalar_rate)));
+
+    for (lanes, key) in
+        [(1usize, "reps_per_s_lanes1"), (4, "reps_per_s_lanes4"), (16, "reps_per_s_lanes16")]
+    {
+        let mut runner = BatchRunner::Lockstep(
+            BatchEngine::new(bank.clone(), &s, policy, lanes).expect("batch engine"),
+        );
+        let r = rate_of(&mut runner);
+        println!(
+            "  lockstep lanes={lanes:<2}           {r:>8.0} reps/s  ({:.2}x vs scalar)",
+            r / scalar_rate
+        );
+        fields.push((key, Json::Num(r)));
+        if lanes == 1 {
+            let tax = (1.0 - r / scalar_rate) * 100.0;
+            println!("  lanes=1 abstraction tax: {tax:.1}%");
+            fields.push(("abstraction_tax_pct", Json::Num(tax)));
+        }
+        if lanes == 16 {
+            fields.push(("speedup_lanes16", Json::Num(r / scalar_rate)));
+        }
+    }
+    rec.push("lockstep_vs_scalar", fields);
 }
 
 fn bench_platform_step(rec: &mut Recorder) {
@@ -434,6 +516,38 @@ fn bench_model(rec: &mut Recorder) {
     rec.push("model", vec![("plan64_ms", Json::Num(per * 1e3))]);
 }
 
+fn bench_waste_grid_batched(rec: &mut Recorder) {
+    println!("== batched waste grid vs per-row plan loop ==");
+    // A §5-scale analytic grid: 4096 Params rows × all six strategies.
+    // The scalar baseline calls model::plan once per row; the batched
+    // pass evaluates GRID_CHUNK-row blocks over flat columns in one
+    // sweep. Results are bit-identical (pinned in model::batched).
+    let rows = params_batch(4096);
+    let t_scalar = time("model::plan per-row x4096", 20, || {
+        for p in &rows {
+            std::hint::black_box(plan(p, Capping::Capped, true));
+        }
+    });
+    let t_batched = time("model::plan_batched x4096", 20, || {
+        std::hint::black_box(ckptfp::model::plan_batched(&rows, Capping::Capped, true));
+    });
+    let speedup = t_scalar / t_batched;
+    println!(
+        "  batched speedup: {speedup:.2}x  ({:.0} rows/s batched)",
+        rows.len() as f64 / t_batched
+    );
+    rec.push(
+        "waste_grid_batched",
+        vec![
+            ("scalar_s", Json::Num(t_scalar)),
+            ("batched_s", Json::Num(t_batched)),
+            ("rows_per_s_scalar", Json::Num(rows.len() as f64 / t_scalar)),
+            ("rows_per_s_batched", Json::Num(rows.len() as f64 / t_batched)),
+            ("speedup", Json::Num(speedup)),
+        ],
+    );
+}
+
 fn main() {
     let which: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with("--")).collect();
     let run = |name: &str| which.is_empty() || which.iter().any(|w| w == name);
@@ -463,11 +577,17 @@ fn main() {
     if run("best_period_crn") {
         bench_best_period_crn(&mut rec);
     }
+    if run("lockstep_vs_scalar") {
+        bench_lockstep(&mut rec);
+    }
     if run("platform_step") {
         bench_platform_step(&mut rec);
     }
     if run("model") {
         bench_model(&mut rec);
+    }
+    if run("waste_grid_batched") {
+        bench_waste_grid_batched(&mut rec);
     }
     if which.is_empty() {
         rec.write("BENCH_perf.json");

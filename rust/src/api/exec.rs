@@ -188,7 +188,11 @@ impl Executor {
                 via_hlo: true,
             }
         } else {
-            let p = model::plan(&params, job.capping, true);
+            // The batched evaluator on a one-row grid — bit-identical to
+            // the scalar `model::plan` (pinned in model::batched tests).
+            let p = model::plan_batched(std::slice::from_ref(&params), job.capping, true)
+                .pop()
+                .expect("one row in, one plan out");
             PlanResult {
                 waste: p.waste,
                 period: p.period,
@@ -295,7 +299,8 @@ impl Executor {
         if candidates < 2 {
             return Err(ApiError::bad_request("best_period needs at least 2 candidates"));
         }
-        let opts = BestPeriodOptions { workers, prune: job.prune, replay: true };
+        let opts =
+            BestPeriodOptions { workers, prune: job.prune, replay: true, ..Default::default() };
         let platform = job.platform.as_ref().filter(|p| !p.is_single());
         let (name, res) = match (&job.policy, platform) {
             (Some(pspec), None) => {
@@ -365,12 +370,11 @@ impl Executor {
                 .collect::<Vec<_>>();
             (rows, true)
         } else {
-            let rows = params
-                .iter()
-                .map(|p| {
-                    let plan = model::plan(p, job.capping, true);
-                    (plan.winner, plan.winner_waste(), plan.winner_period())
-                })
+            // One vectorized pass over the whole parameter grid instead
+            // of a per-row scalar plan; bit-identical (model::batched).
+            let rows = model::plan_batched(&params, job.capping, true)
+                .into_iter()
+                .map(|plan| (plan.winner, plan.winner_waste(), plan.winner_period()))
                 .collect::<Vec<_>>();
             (rows, false)
         };
@@ -397,7 +401,7 @@ impl Executor {
         let (d_reps, d_budget) = job.grid.default_budget();
         let reps0 = if job.reps == 0 { d_reps } else { job.reps };
         let budget = if job.budget == 0 { d_budget.max(reps0) } else { job.budget.max(reps0) };
-        let opts = VerifyOptions { reps0, budget, workers };
+        let opts = VerifyOptions { reps0, budget, workers, ..Default::default() };
         run_conformance_filtered(job.grid, job.policy.as_ref(), job.platform.as_ref(), &opts)
             .map_err(ApiError::from_invalid)
     }
@@ -406,6 +410,7 @@ impl Executor {
         let (p50, p95, p99, n) = self.metrics.latency_quantiles();
         let finite = |x: f64| if x.is_finite() { x } else { 0.0 };
         let bank = crate::trace::bank::counters();
+        let batch = crate::sim::batch::counters();
         ServiceStats {
             requests: self.metrics.get("requests"),
             errors: self.metrics.get("errors"),
@@ -426,6 +431,8 @@ impl Executor {
             deadline_exceeded: self.metrics.get("service.deadline_exceeded"),
             panics_contained: self.metrics.get("service.panics_contained"),
             client_retries: super::client::client_retries(),
+            batch_lanes_run: batch.lanes_run,
+            batch_lane_fallbacks: batch.lane_fallbacks,
             batcher: self.batcher.as_ref().map(|b| {
                 let s = b.stats();
                 BatcherSnapshot {

@@ -304,6 +304,12 @@ pub struct ServiceStats {
     pub deadline_exceeded: u64,
     pub panics_contained: u64,
     pub client_retries: u64,
+    /// Lockstep batch-engine counters (additive v2 fields;
+    /// process-global, see [`crate::sim::batch::counters`]): lanes run
+    /// through batch chunks, and lanes that fell back to live
+    /// generation on a bank underrun.
+    pub batch_lanes_run: u64,
+    pub batch_lane_fallbacks: u64,
     /// Present only when the service runs an HLO batcher.
     pub batcher: Option<BatcherSnapshot>,
 }

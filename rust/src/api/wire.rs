@@ -418,6 +418,8 @@ pub fn encode_response(resp: &JobResponse, legacy: bool) -> String {
                     ("deadline_exceeded", Json::Num(s.deadline_exceeded as f64)),
                     ("panics_contained", Json::Num(s.panics_contained as f64)),
                     ("client_retries", Json::Num(s.client_retries as f64)),
+                    ("batch_lanes_run", Json::Num(s.batch_lanes_run as f64)),
+                    ("batch_lane_fallbacks", Json::Num(s.batch_lane_fallbacks as f64)),
                 ]);
                 if let Some(b) = &s.batcher {
                     fields.push((
@@ -601,6 +603,8 @@ pub fn decode_response(line: &str) -> Result<JobResponse, ApiError> {
                 deadline_exceeded: u64_or(&v, "deadline_exceeded", 0),
                 panics_contained: u64_or(&v, "panics_contained", 0),
                 client_retries: u64_or(&v, "client_retries", 0),
+                batch_lanes_run: u64_or(&v, "batch_lanes_run", 0),
+                batch_lane_fallbacks: u64_or(&v, "batch_lane_fallbacks", 0),
                 batcher,
             }))
         }

@@ -12,7 +12,7 @@ use crate::verify::{run_conformance, GridKind, VerifyOptions};
 /// `opts.reps` is the base batch, the escalation budget is 8×.
 pub fn conformance(opts: &ExpOptions) -> anyhow::Result<ExperimentResult> {
     let reps0 = opts.reps.max(8);
-    let vopts = VerifyOptions { reps0, budget: reps0 * 8, workers: opts.workers };
+    let vopts = VerifyOptions { reps0, budget: reps0 * 8, workers: opts.workers, ..Default::default() };
     let report = run_conformance(GridKind::Quick, None, &vopts)?;
 
     let mut t = Table::new([

@@ -6,7 +6,7 @@
 
 use super::{paper_heuristics, scenario_for, sim_waste_grid, ExpOptions, ExperimentResult};
 use crate::config::{paper_proc_counts, Predictor, Scenario};
-use crate::model::{optimize, Capping, Params, StrategyKind};
+use crate::model::{optimize_batched, Capping, Params, StrategyKind};
 use crate::report::FigureData;
 use crate::strategies::{best_period_with, spec_for, BestPeriodOptions, StrategySpec};
 
@@ -43,13 +43,20 @@ fn analytic_figure(
         Capping::Uncapped => "uncapped",
     };
     let mut fig = FigureData::new(format!("{id}-I{i_win}-analytic-{tag}"), "N", "waste");
-    for n in paper_proc_counts() {
-        let s = base_scenario(n, precision, recall, i_win, false);
-        for kind in paper_heuristics(i_win, s.platform.c) {
-            let sk = scenario_for(kind, &s);
-            let p = Params::from_scenario(&sk);
-            let (_, w) = optimize(&p, kind, capping);
-            fig.series_mut(kind.name()).push(n as f64, w);
+    // One batched evaluation per heuristic across the whole N axis —
+    // bit-identical to the per-point scalar `optimize` (model::batched).
+    let c = 600.0;
+    let ns = paper_proc_counts();
+    for kind in paper_heuristics(i_win, c) {
+        let params: Vec<Params> = ns
+            .iter()
+            .map(|&n| {
+                let s = base_scenario(n, precision, recall, i_win, false);
+                Params::from_scenario(&scenario_for(kind, &s))
+            })
+            .collect();
+        for (n, (_, w)) in ns.iter().zip(optimize_batched(&params, kind, capping)) {
+            fig.series_mut(kind.name()).push(*n as f64, w);
         }
     }
     fig
@@ -94,7 +101,12 @@ fn simulated_figure(
     // BestPeriod counterparts (brute-force; §5's quality check). Each
     // search parallelizes its own (candidate × rep) product internally.
     if opts.best_period {
-        let bp_opts = BestPeriodOptions { workers: opts.workers, prune: true, replay: true };
+        let bp_opts = BestPeriodOptions {
+            workers: opts.workers,
+            prune: true,
+            replay: true,
+            ..Default::default()
+        };
         for ((n, kind), (s, spec)) in keys.iter().zip(&points) {
             let res = best_period_with(s, spec, opts.bp_reps, opts.bp_candidates, &bp_opts)
                 .expect("best-period search failed");

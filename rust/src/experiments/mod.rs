@@ -16,7 +16,7 @@ pub mod tables;
 use crate::config::Scenario;
 use crate::coordinator::{available_workers, run_parallel_fold};
 use crate::model::{Capping, StrategyKind};
-use crate::sim::{fold_waste_product, rep_blocks, Outcome, Policy, SimSession};
+use crate::sim::{fold_waste_grid, rep_blocks, BatchRunner, Outcome, Policy, SimSession};
 use crate::strategies::{exactify, spec_for, StrategySpec};
 use crate::util::stats::Summary;
 
@@ -159,14 +159,18 @@ pub fn sim_policy_grid(points: &[(Scenario, Policy)], reps: u64, workers: usize)
 }
 
 /// The shared grid core: block the (point × rep) product and fold it
-/// through the pool, one reused session per worker per point.
+/// through the pool, one reused session per worker per point. Routes
+/// through the batch fold with scalar-lane runners: each point draws a
+/// fresh live trace per replication, so there is no shared arena to
+/// advance in lockstep (per-point banks would cost more than they
+/// save).
 fn waste_grid_with<F>(n_points: usize, reps: u64, workers: usize, make: F) -> Vec<Summary>
 where
     F: Fn(usize) -> SimSession + Sync,
 {
     let all: Vec<usize> = (0..n_points).collect();
     let tasks = rep_blocks(&all, 0, reps, workers);
-    fold_waste_product(&tasks, n_points, workers, make)
+    fold_waste_grid(&tasks, n_points, workers, |pi| BatchRunner::Scalar(make(pi)))
 }
 
 /// Mean simulated waste of `kind` on `scenario`: `reps` paired

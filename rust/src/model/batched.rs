@@ -1,0 +1,448 @@
+//! Batched closed-form evaluation: the (strategy × period × scenario)
+//! grid in chunked, auto-vectorization-friendly flat passes.
+//!
+//! [`super::optimize`] answers one `(Params, StrategyKind)` cell at a
+//! time; a platform sweep or figure grid calls it thousands of times,
+//! re-deriving every shared subexpression per call. This module lays a
+//! block of scenarios out as struct-of-arrays columns (one `f64`
+//! column per [`Params`] field, same order as
+//! [`Params::to_raw_row`], plus the derived columns the waste
+//! equations share), then evaluates each strategy's optimal period and
+//! waste as flat elementwise loops over the block.
+//!
+//! Every expression mirrors the scalar path term for term —
+//! [`super::t_extr`]/[`super::t_cap`] for the periods,
+//! [`super::waste_of`] for the waste, [`super::tp_opt`]'s snapping for
+//! the proactive period — so the documented tolerance contract
+//! (≤ 1e-12 relative vs. the scalar closed form, f64 throughout,
+//! unlike the f32 `to_raw_row` HLO path) holds trivially: in practice
+//! the outputs are bit-identical, which the unit tests pin. The
+//! `pjrt`-gated HLO batcher remains the preferred backend when
+//! artifacts are present ([`crate::api::Executor`] tries it first);
+//! this is the fast CPU fallback that replaces the scalar loop.
+
+use super::{Capping, OptimalPlan, Params, StrategyKind, NSTRAT_USIZE};
+
+/// Scenarios evaluated per struct-of-arrays block. Sized so the whole
+/// working set (17 columns × 64 lanes × 8 bytes ≈ 9 KB) stays in L1.
+pub const GRID_CHUNK: usize = 64;
+
+/// One struct-of-arrays block of scenario parameters: the raw columns
+/// in [`Params::to_raw_row`] order plus the derived quantities every
+/// waste equation shares, computed once per block in flat loops.
+struct ParamsBlock {
+    len: usize,
+    mu: [f64; GRID_CHUNK],
+    c: [f64; GRID_CHUNK],
+    d: [f64; GRID_CHUNK],
+    r_rec: [f64; GRID_CHUNK],
+    recall: [f64; GRID_CHUNK],
+    precision: [f64; GRID_CHUNK],
+    i: [f64; GRID_CHUNK],
+    ef: [f64; GRID_CHUNK],
+    alpha: [f64; GRID_CHUNK],
+    m: [f64; GRID_CHUNK],
+    // Derived columns (same expressions as the `Params` accessors).
+    dr: [f64; GRID_CHUNK],
+    inv_mu_p: [f64; GRID_CHUNK],
+    inv_mu_np: [f64; GRID_CHUNK],
+    mu_e: [f64; GRID_CHUNK],
+    i1: [f64; GRID_CHUNK],
+    frac_reg: [f64; GRID_CHUNK],
+    tp: [f64; GRID_CHUNK],
+}
+
+impl ParamsBlock {
+    fn load(params: &[Params]) -> ParamsBlock {
+        debug_assert!(params.len() <= GRID_CHUNK);
+        let mut b = ParamsBlock {
+            len: params.len(),
+            mu: [0.0; GRID_CHUNK],
+            c: [0.0; GRID_CHUNK],
+            d: [0.0; GRID_CHUNK],
+            r_rec: [0.0; GRID_CHUNK],
+            recall: [0.0; GRID_CHUNK],
+            precision: [0.0; GRID_CHUNK],
+            i: [0.0; GRID_CHUNK],
+            ef: [0.0; GRID_CHUNK],
+            alpha: [0.0; GRID_CHUNK],
+            m: [0.0; GRID_CHUNK],
+            dr: [0.0; GRID_CHUNK],
+            inv_mu_p: [0.0; GRID_CHUNK],
+            inv_mu_np: [0.0; GRID_CHUNK],
+            mu_e: [0.0; GRID_CHUNK],
+            i1: [0.0; GRID_CHUNK],
+            frac_reg: [0.0; GRID_CHUNK],
+            tp: [0.0; GRID_CHUNK],
+        };
+        for (l, p) in params.iter().enumerate() {
+            b.mu[l] = p.mu;
+            b.c[l] = p.c;
+            b.d[l] = p.d;
+            b.r_rec[l] = p.r_rec;
+            b.recall[l] = p.recall;
+            b.precision[l] = p.precision;
+            b.i[l] = p.i;
+            b.ef[l] = p.ef;
+            b.alpha[l] = p.alpha;
+            b.m[l] = p.m;
+        }
+        let n = b.len;
+        for l in 0..n {
+            b.dr[l] = b.d[l] + b.r_rec[l];
+        }
+        for l in 0..n {
+            b.inv_mu_p[l] = if b.recall[l] == 0.0 {
+                0.0
+            } else {
+                b.recall[l] / (b.precision[l] * b.mu[l])
+            };
+        }
+        for l in 0..n {
+            b.inv_mu_np[l] = (1.0 - b.recall[l]) / b.mu[l];
+        }
+        for l in 0..n {
+            let inv = b.inv_mu_p[l] + b.inv_mu_np[l];
+            b.mu_e[l] = if inv == 0.0 { f64::INFINITY } else { 1.0 / inv };
+        }
+        for l in 0..n {
+            b.i1[l] = (1.0 - b.precision[l]) * b.i[l] + b.precision[l] * b.ef[l];
+        }
+        for l in 0..n {
+            b.frac_reg[l] = (1.0 - b.i1[l] * b.inv_mu_p[l]).clamp(0.0, 1.0);
+        }
+        for l in 0..n {
+            b.tp[l] = tp_opt_lane(b.i[l], b.c[l], b.precision[l], b.i1[l]);
+        }
+        b
+    }
+
+    /// Lane mirror of [`super::t_extr`].
+    fn t_extr(&self, l: usize, q: f64) -> f64 {
+        let denom = 1.0 - self.recall[l] * q;
+        if denom <= 0.0 {
+            f64::INFINITY
+        } else {
+            (2.0 * self.mu[l] * self.c[l] / denom).sqrt()
+        }
+    }
+
+    /// Lane mirror of [`super::t_cap`].
+    fn t_cap(&self, l: usize, kind: StrategyKind) -> f64 {
+        match kind {
+            StrategyKind::Young => self.alpha[l] * self.mu[l],
+            StrategyKind::ExactPrediction | StrategyKind::Migration => {
+                self.alpha[l] * self.mu_e[l]
+            }
+            StrategyKind::Instant | StrategyKind::NoCkptI | StrategyKind::WithCkptI => {
+                self.alpha[l] * self.mu_e[l] - self.i[l]
+            }
+        }
+    }
+
+    /// Lane mirror of [`super::waste_exact_q`].
+    fn waste_exact_q(&self, l: usize, t: f64, q: f64) -> f64 {
+        let rq = self.recall[l] * q;
+        self.c[l] / t
+            + (1.0 / self.mu[l])
+                * ((1.0 - rq) * t / 2.0
+                    + self.dr[l]
+                    + rq / self.precision[l].max(1e-12) * self.c[l])
+    }
+
+    /// Lane mirror of [`super::waste_of`] (q = 1, q = 0 for Young; the
+    /// block's snapped `tp` column feeds WithCkptI).
+    fn waste_of(&self, l: usize, kind: StrategyKind, t: f64) -> f64 {
+        match kind {
+            StrategyKind::Young => {
+                self.c[l] / t + (t / 2.0 + self.dr[l]) / self.mu[l]
+            }
+            StrategyKind::ExactPrediction => self.waste_exact_q(l, t, 1.0),
+            StrategyKind::Instant => {
+                self.waste_exact_q(l, t, 1.0)
+                    + self.recall[l] / self.mu[l] * self.ef[l].min(t / 2.0)
+            }
+            StrategyKind::NoCkptI => {
+                let inv_mup = self.inv_mu_p[l];
+                let inv_munp = self.inv_mu_np[l];
+                let frac_reg = self.frac_reg[l];
+                (frac_reg / t + inv_mup) * self.c[l]
+                    + self.precision[l] * inv_mup * self.ef[l]
+                    + frac_reg * inv_munp * t / 2.0
+                    + (self.precision[l] * inv_mup + frac_reg * inv_munp) * self.dr[l]
+            }
+            StrategyKind::WithCkptI => {
+                let inv_mup = self.inv_mu_p[l];
+                let inv_munp = self.inv_mu_np[l];
+                let frac_reg = self.frac_reg[l];
+                (frac_reg / t + self.i1[l] * inv_mup / self.tp[l] + inv_mup) * self.c[l]
+                    + self.precision[l] * inv_mup * self.tp[l]
+                    + frac_reg * inv_munp * t / 2.0
+                    + (self.precision[l] * inv_mup + frac_reg * inv_munp) * self.dr[l]
+            }
+            StrategyKind::Migration => {
+                let rq = self.recall[l] * 1.0;
+                self.c[l] / t
+                    + (1.0 / self.mu[l])
+                        * ((1.0 - rq) * (t / 2.0 + self.dr[l])
+                            + rq / self.precision[l].max(1e-12) * self.m[l])
+            }
+        }
+    }
+
+    /// Fill `(t_out, w_out)` for one strategy over the block — the
+    /// lane-wise mirror of [`super::optimize`], including Instant's
+    /// piecewise three-candidate argmin and the inadmissibility masks.
+    fn optimize_kind(
+        &self,
+        kind: StrategyKind,
+        capping: Capping,
+        t_out: &mut [f64],
+        w_out: &mut [f64],
+    ) {
+        for l in 0..self.len {
+            if kind == StrategyKind::Instant && self.ef[l] > 0.0 {
+                let cap = self.t_cap(l, kind);
+                let clamp = |t: f64| match capping {
+                    Capping::Uncapped => t.max(self.c[l]),
+                    Capping::Capped => t.max(self.c[l]).min(cap).max(self.c[l]),
+                };
+                let kink = 2.0 * self.ef[l];
+                let candidates = [
+                    clamp(self.t_extr(l, 1.0)),
+                    clamp(self.t_extr(l, 0.0)),
+                    clamp(kink),
+                ];
+                let (mut best_t, mut best_w) = (candidates[0], f64::INFINITY);
+                for t in candidates {
+                    let w = self.waste_of(l, kind, t);
+                    if w < best_w {
+                        best_w = w;
+                        best_t = t;
+                    }
+                }
+                let mut w = best_w;
+                if capping == Capping::Capped && cap < self.c[l] {
+                    w = 1.0;
+                }
+                t_out[l] = best_t;
+                w_out[l] = w.min(1.0);
+                continue;
+            }
+            let q = if kind == StrategyKind::Young { 0.0 } else { 1.0 };
+            let extr = self.t_extr(l, q);
+            let t = match capping {
+                Capping::Uncapped => extr.max(self.c[l]).min(1e18),
+                Capping::Capped => {
+                    let cap = self.t_cap(l, kind);
+                    extr.max(self.c[l]).min(cap).max(self.c[l])
+                }
+            };
+            let mut w = self.waste_of(l, kind, t);
+            if capping == Capping::Capped && self.t_cap(l, kind) < self.c[l] {
+                w = 1.0;
+            }
+            if kind == StrategyKind::WithCkptI && self.i[l] < self.c[l] {
+                w = 1.0;
+            }
+            t_out[l] = t;
+            w_out[l] = w.min(1.0);
+        }
+    }
+}
+
+/// Lane mirror of [`super::tp_opt`] (via [`super::tp_extr`] and
+/// [`super::tp_share`]) over raw column values.
+fn tp_opt_lane(i: f64, c: f64, precision: f64, i1: f64) -> f64 {
+    let extr = (i1 / precision.max(1e-12) * c).max(0.0).sqrt().max(1e-9);
+    if i <= 0.0 {
+        return c.max(extr);
+    }
+    let share = |tp: f64| i1 / precision.max(1e-12) * c / tp + tp;
+    let k = (i / extr).floor().max(1.0);
+    let cand1 = i / k;
+    let cand2 = i / (k + 1.0);
+    let mut tp = if share(cand1) <= share(cand2) { cand1 } else { cand2 };
+    if tp < c {
+        tp = cand1.max(c);
+    }
+    tp.max(c)
+}
+
+/// The full (strategy × scenario) optimum grid as flat row-major
+/// arrays: `period[row * NSTRAT + kind]` / `waste[row * NSTRAT + kind]`.
+#[derive(Debug, Clone)]
+pub struct WasteGrid {
+    /// Scenario rows evaluated.
+    pub n: usize,
+    /// Row-major optimal period per (scenario, strategy).
+    pub period: Vec<f64>,
+    /// Row-major waste at the optimal period, clamped to 1.
+    pub waste: Vec<f64>,
+}
+
+/// Evaluate the full (strategy × period × scenario) grid in chunked
+/// struct-of-arrays passes: for each scenario row, every strategy's
+/// optimal period and the waste there. One call replaces
+/// `params.len() × 6` scalar [`super::optimize`] calls; the outputs
+/// agree with the scalar path within the documented tolerance
+/// (≤ 1e-12 relative; bit-identical in practice).
+pub fn waste_grid_batched(params: &[Params], capping: Capping) -> WasteGrid {
+    let n = params.len();
+    let mut period = vec![0.0; n * NSTRAT_USIZE];
+    let mut waste = vec![1.0; n * NSTRAT_USIZE];
+    let mut t_col = [0.0; GRID_CHUNK];
+    let mut w_col = [0.0; GRID_CHUNK];
+    for (ci, chunk) in params.chunks(GRID_CHUNK).enumerate() {
+        let block = ParamsBlock::load(chunk);
+        let base = ci * GRID_CHUNK;
+        for kind in StrategyKind::ALL {
+            block.optimize_kind(kind, capping, &mut t_col[..block.len], &mut w_col[..block.len]);
+            for l in 0..block.len {
+                period[(base + l) * NSTRAT_USIZE + kind as usize] = t_col[l];
+                waste[(base + l) * NSTRAT_USIZE + kind as usize] = w_col[l];
+            }
+        }
+    }
+    WasteGrid { n, period, waste }
+}
+
+/// Batched [`super::optimize`] for a single strategy: per-row
+/// `(period, waste)` pairs. The figure grids use this to evaluate one
+/// strategy across a whole scenario axis in chunked flat passes.
+pub fn optimize_batched(
+    params: &[Params],
+    kind: StrategyKind,
+    capping: Capping,
+) -> Vec<(f64, f64)> {
+    let mut out = Vec::with_capacity(params.len());
+    let mut t_col = [0.0; GRID_CHUNK];
+    let mut w_col = [0.0; GRID_CHUNK];
+    for chunk in params.chunks(GRID_CHUNK) {
+        let block = ParamsBlock::load(chunk);
+        block.optimize_kind(kind, capping, &mut t_col[..block.len], &mut w_col[..block.len]);
+        for l in 0..block.len {
+            out.push((t_col[l], w_col[l]));
+        }
+    }
+    out
+}
+
+/// Batched [`super::plan`]: one [`OptimalPlan`] per scenario row, with
+/// the same winner rule (argmin by `total_cmp`, migration filtered
+/// unless requested) applied to the batched grid.
+pub fn plan_batched(
+    params: &[Params],
+    capping: Capping,
+    include_migration: bool,
+) -> Vec<OptimalPlan> {
+    let grid = waste_grid_batched(params, capping);
+    (0..grid.n)
+        .map(|row| {
+            let mut period = [0.0; 6];
+            let mut waste = [1.0; 6];
+            let base = row * NSTRAT_USIZE;
+            period.copy_from_slice(&grid.period[base..base + NSTRAT_USIZE]);
+            waste.copy_from_slice(&grid.waste[base..base + NSTRAT_USIZE]);
+            let winner = StrategyKind::ALL
+                .into_iter()
+                .filter(|k| include_migration || *k != StrategyKind::Migration)
+                .min_by(|a, b| waste[*a as usize].total_cmp(&waste[*b as usize]))
+                .unwrap();
+            let q = if winner == StrategyKind::Young { 0 } else { 1 };
+            OptimalPlan { period, waste, winner, q }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{paper_proc_counts, Predictor, Scenario};
+    use crate::model::{optimize, plan};
+
+    /// The §5 study grid: every paper platform size × both predictors ×
+    /// exact/short-window/long-window, under both cappings.
+    fn study_params() -> Vec<Params> {
+        let mut out = Vec::new();
+        for n in paper_proc_counts() {
+            for (recall, precision) in [(0.85, 0.82), (0.7, 0.4)] {
+                for window in [0.0, 300.0, 3000.0] {
+                    let pred = if window > 0.0 {
+                        Predictor::windowed(recall, precision, window)
+                    } else {
+                        Predictor::exact(recall, precision)
+                    };
+                    out.push(Params::from_scenario(&Scenario::paper(n, pred)));
+                }
+            }
+        }
+        // Degenerate corners: no predictor, perfect predictor.
+        out.push(Params::from_scenario(&Scenario::paper(1 << 16, Predictor::none())));
+        out.push(Params::from_scenario(&Scenario::paper(1 << 16, Predictor::exact(1.0, 1.0))));
+        out
+    }
+
+    #[test]
+    fn batched_grid_is_bit_identical_to_scalar_optimize() {
+        // The documented contract is ≤ 1e-12 relative; the pin is the
+        // stronger property the mirrored expressions actually deliver.
+        let params = study_params();
+        for capping in [Capping::Uncapped, Capping::Capped] {
+            let grid = waste_grid_batched(&params, capping);
+            for (row, p) in params.iter().enumerate() {
+                for kind in StrategyKind::ALL {
+                    let (t, w) = optimize(p, kind, capping);
+                    let bt = grid.period[row * NSTRAT_USIZE + kind as usize];
+                    let bw = grid.waste[row * NSTRAT_USIZE + kind as usize];
+                    assert_eq!(bt.to_bits(), t.to_bits(), "{kind} row {row} {capping:?}");
+                    assert_eq!(bw.to_bits(), w.to_bits(), "{kind} row {row} {capping:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn plan_batched_matches_scalar_plan() {
+        let params = study_params();
+        for capping in [Capping::Uncapped, Capping::Capped] {
+            for include_migration in [false, true] {
+                let batched = plan_batched(&params, capping, include_migration);
+                assert_eq!(batched.len(), params.len());
+                for (p, b) in params.iter().zip(&batched) {
+                    let s = plan(p, capping, include_migration);
+                    assert_eq!(b.winner, s.winner, "{capping:?}");
+                    assert_eq!(b.q, s.q);
+                    for k in 0..NSTRAT_USIZE {
+                        assert_eq!(b.waste[k].to_bits(), s.waste[k].to_bits());
+                        assert_eq!(b.period[k].to_bits(), s.period[k].to_bits());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn optimize_batched_single_kind_matches() {
+        let params = study_params();
+        let rows = optimize_batched(&params, StrategyKind::WithCkptI, Capping::Capped);
+        for (p, (t, w)) in params.iter().zip(&rows) {
+            let (st, sw) = optimize(p, StrategyKind::WithCkptI, Capping::Capped);
+            assert_eq!(t.to_bits(), st.to_bits());
+            assert_eq!(w.to_bits(), sw.to_bits());
+        }
+    }
+
+    #[test]
+    fn chunk_boundaries_do_not_perturb_rows() {
+        // More rows than one chunk: the block split is invisible.
+        let one = Params::from_scenario(&Scenario::paper(1 << 16, Predictor::exact(0.85, 0.82)));
+        let many = vec![one; GRID_CHUNK + 7];
+        let grid = waste_grid_batched(&many, Capping::Uncapped);
+        let first = &grid.waste[..NSTRAT_USIZE];
+        for row in 1..many.len() {
+            let w = &grid.waste[row * NSTRAT_USIZE..(row + 1) * NSTRAT_USIZE];
+            assert_eq!(w, first, "row {row}");
+        }
+    }
+}

@@ -7,10 +7,12 @@
 //! fallback when `artifacts/` is absent, (iii) the uncapped-period
 //! formulas the §5 simulations use directly.
 
+mod batched;
 mod optimal;
 mod waste;
 mod window;
 
+pub use batched::*;
 pub use optimal::*;
 pub use waste::*;
 pub use window::*;

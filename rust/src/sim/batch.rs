@@ -1,0 +1,596 @@
+//! Lockstep batch replay: advance a block of replications together
+//! over one shared [`TraceBank`] arena.
+//!
+//! The scalar replay path ([`SimSession::replay`]) walks one
+//! replication at a time: reset the replay cursor, run the engine to
+//! completion, fall back to a live engine on underrun. A
+//! [`BatchEngine`] keeps `lanes` replay engines over the *same*
+//! `Arc<TraceBank>` and advances a chunk of replications in three
+//! struct-of-arrays phases — reset every lane's cursor, run every
+//! covered lane to completion, then collect outcomes in chunk order
+//! with a per-lane fallback to a shared lazily-built live engine on
+//! bank underrun, exactly the rule the scalar replay arm applies.
+//!
+//! Replications are independent by construction (every per-rep stream
+//! is re-derived from `(seed, rep)`), so the lane interleaving is
+//! unobservable: a lockstep chunk produces the same outcomes, pushed
+//! into the same accumulators in the same order, as the scalar loop —
+//! bit for bit. That identity is the contract (pinned in
+//! `tests/test_batch.rs`); the win is locality: the chunk's replay
+//! cursors walk one contiguous arena front-to-back instead of
+//! ping-ponging a single engine across the whole bank.
+//!
+//! [`BatchRunner`] is the knob surface: `Lockstep` wraps a
+//! [`BatchEngine`], `Scalar` wraps a plain [`SimSession`], and the
+//! grid folds ([`fold_waste_grid`], [`fold_waste_grid_retaining`]) and
+//! the range runner ([`run_replication_range_batched`]) consume either
+//! through one interface, so callers pick the backing with
+//! [`BatchOptions`] and nothing downstream changes shape.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::runner::ReplicationAgg;
+use super::{Engine, Outcome, Policy, SimConfig, SimSession};
+use crate::config::Scenario;
+use crate::coordinator::{run_parallel_fold, try_run_parallel_fold};
+use crate::rng::trust_seed;
+use crate::trace::{bank, ReplaySource, TraceBank, TraceGen};
+use crate::util::stats::Summary;
+
+/// How many replications a lockstep chunk advances together when no
+/// caller overrides it. Wide enough to amortize the chunk bookkeeping,
+/// small enough that a chunk's replay cursors stay within a few arena
+/// pages of each other.
+pub const DEFAULT_LANES: usize = 8;
+
+/// Lane-count knob for the batch engine. `lanes = 0` selects the
+/// pinned scalar path (one [`SimSession`] per worker, exactly the
+/// pre-batch code shape); any other value runs lockstep chunks of that
+/// width over the trace bank.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchOptions {
+    /// Replications advanced per lockstep chunk; `0` = scalar path.
+    pub lanes: usize,
+}
+
+impl Default for BatchOptions {
+    fn default() -> Self {
+        BatchOptions { lanes: DEFAULT_LANES }
+    }
+}
+
+impl BatchOptions {
+    /// The pinned scalar path: no lockstep chunks anywhere.
+    pub fn scalar() -> BatchOptions {
+        BatchOptions { lanes: 0 }
+    }
+
+    /// Whether this configuration disables the lockstep engine.
+    pub fn is_scalar(&self) -> bool {
+        self.lanes == 0
+    }
+}
+
+// Crate-wide batch counters, surfaced on the service `stats` op next
+// to the bank counters (same pattern as `trace::bank`).
+static LANES_RUN: AtomicU64 = AtomicU64::new(0);
+static LANE_FALLBACKS: AtomicU64 = AtomicU64::new(0);
+
+/// Snapshot of the lockstep counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct BatchCounters {
+    /// Replications that went through a lockstep chunk (served or
+    /// fallen back — every lane a [`BatchEngine`] advanced).
+    pub lanes_run: u64,
+    /// Lanes that hit bank underrun (or an un-materialized rep) inside
+    /// a chunk and were re-run on the live fallback engine.
+    pub lane_fallbacks: u64,
+}
+
+/// Read the crate-wide lockstep counters.
+pub fn counters() -> BatchCounters {
+    BatchCounters {
+        lanes_run: LANES_RUN.load(Ordering::Relaxed),
+        lane_fallbacks: LANE_FALLBACKS.load(Ordering::Relaxed),
+    }
+}
+
+/// The lockstep engine: `width` replay engines over one shared bank,
+/// advanced a chunk of replications at a time.
+///
+/// Construction mirrors [`SimSession::replay`]'s validation — the bank
+/// must match the scenario's seed and the policy's required lead — and
+/// the per-lane fallback mirrors its underrun rule, so every
+/// replication's outcome is bit-identical to the scalar replay path.
+pub struct BatchEngine {
+    seed: u64,
+    width: usize,
+    lanes: Vec<Engine<ReplaySource>>,
+    /// SoA phase state: which lanes the bank covers this chunk.
+    covered: Vec<bool>,
+    /// SoA phase state: per-lane replayed outcomes, pending collection.
+    replayed: Vec<Option<Outcome>>,
+    /// Live fallback engine, built on first underrun, shared by all
+    /// lanes (the fallback runs one lane at a time, in chunk order).
+    fallback: Option<Box<Engine<TraceGen>>>,
+    scenario: Box<Scenario>,
+    policy: Policy,
+    lead: f64,
+}
+
+impl BatchEngine {
+    /// Build a lockstep engine of `lanes.max(1)` lanes over `bank`.
+    /// Rejects bank/scenario seed mismatches and bank/policy lead
+    /// mismatches, exactly like [`SimSession::replay`].
+    pub fn new(
+        bank: Arc<TraceBank>,
+        scenario: &Scenario,
+        policy: Policy,
+        lanes: usize,
+    ) -> anyhow::Result<BatchEngine> {
+        let cfg = SimConfig::from_scenario(scenario);
+        cfg.validate()?;
+        let lead = policy.sanitized(cfg.c).required_lead(cfg.c);
+        anyhow::ensure!(
+            bank.seed() == scenario.seed,
+            "trace bank was built for seed {} but the scenario uses seed {}",
+            bank.seed(),
+            scenario.seed
+        );
+        anyhow::ensure!(
+            bank.lead() == lead,
+            "trace bank was built with lead {} but the policy requires lead {}",
+            bank.lead(),
+            lead
+        );
+        let width = lanes.max(1);
+        let lanes = (0..width)
+            .map(|_| Engine::with_policy(&cfg, policy, ReplaySource::new(bank.clone()), 0))
+            .collect();
+        Ok(BatchEngine {
+            seed: scenario.seed,
+            width,
+            lanes,
+            covered: Vec::with_capacity(width),
+            replayed: Vec::with_capacity(width),
+            fallback: None,
+            scenario: Box::new(scenario.clone()),
+            policy,
+            lead,
+        })
+    }
+
+    /// Chunk width (the `lanes` this engine was built with).
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Advance one chunk of at most `width` replications in lockstep
+    /// and hand each `(rep, outcome)` to `sink` in chunk order.
+    ///
+    /// Three phases over the lane block:
+    /// 1. point every lane's replay cursor at its replication,
+    /// 2. run every covered lane to completion,
+    /// 3. collect in chunk order, re-running any lane whose replay
+    ///    underran the bank on the shared live fallback engine —
+    ///    the same per-rep rule as the scalar replay session.
+    fn run_chunk<F: FnMut(u64, &Outcome)>(&mut self, reps: &[u64], sink: &mut F) {
+        debug_assert!(reps.len() <= self.width, "chunk wider than the engine");
+        // Phase 1: reset replay cursors; note which reps the bank holds.
+        self.covered.clear();
+        for (lane, &rep) in reps.iter().enumerate() {
+            self.covered.push(self.lanes[lane].source_mut().reset(rep));
+        }
+        // Phase 2: advance covered lanes to completion.
+        self.replayed.clear();
+        for (lane, &rep) in reps.iter().enumerate() {
+            let out = self.covered[lane].then(|| {
+                let started = Instant::now();
+                let engine = &mut self.lanes[lane];
+                engine.reset(trust_seed(self.seed, rep));
+                let mut out = engine.run_to_completion();
+                out.sim_seconds = started.elapsed().as_secs_f64();
+                out
+            });
+            self.replayed.push(out);
+        }
+        // Phase 3: collect in chunk order; underrun lanes re-run live.
+        for (lane, &rep) in reps.iter().enumerate() {
+            match self.replayed[lane].take() {
+                // The lane stayed inside the bank's horizon: its
+                // outcome is the live outcome, to the bit.
+                Some(out) if !self.lanes[lane].source_mut().underrun() => {
+                    bank::note_replay_served();
+                    sink(rep, &out);
+                }
+                // Underrun or un-materialized rep: the replayed
+                // outcome (if any) may have diverged past the horizon
+                // — discard it and re-run live.
+                _ => {
+                    LANE_FALLBACKS.fetch_add(1, Ordering::Relaxed);
+                    bank::note_fallback_taken();
+                    let started = Instant::now();
+                    let fallback = &mut self.fallback;
+                    let live = match fallback {
+                        Some(live) => live,
+                        None => {
+                            let cfg = SimConfig::from_scenario(&self.scenario);
+                            let source =
+                                TraceGen::new(&self.scenario, self.lead, self.seed, rep)
+                                    .expect("scenario validated at batch build");
+                            fallback
+                                .insert(Box::new(Engine::with_policy(&cfg, self.policy, source, 0)))
+                        }
+                    };
+                    live.source_mut().reset(self.seed, rep);
+                    live.reset(trust_seed(self.seed, rep));
+                    let mut out = live.run_to_completion();
+                    out.sim_seconds = started.elapsed().as_secs_f64();
+                    sink(rep, &out);
+                }
+            }
+        }
+        LANES_RUN.fetch_add(reps.len() as u64, Ordering::Relaxed);
+    }
+}
+
+/// One replication backend for the grid folds and the range runner:
+/// either a lockstep [`BatchEngine`] or the pinned scalar
+/// [`SimSession`] path. Both deliver `(rep, outcome)` pairs in the
+/// order the replications were requested, so swapping one for the
+/// other cannot change a downstream accumulator by a bit.
+pub enum BatchRunner {
+    /// Lockstep chunks over a trace bank.
+    Lockstep(BatchEngine),
+    /// One scalar session — replay-backed or live, the caller decides.
+    Scalar(SimSession),
+}
+
+impl BatchRunner {
+    /// Run an arbitrary replication list (the range runner's strided
+    /// per-worker schedule), delivering outcomes in list order.
+    pub fn run_reps<F: FnMut(u64, &Outcome)>(&mut self, reps: &[u64], mut sink: F) {
+        match self {
+            BatchRunner::Scalar(session) => {
+                for &rep in reps {
+                    let out = session.run(rep);
+                    sink(rep, &out);
+                }
+            }
+            BatchRunner::Lockstep(engine) => {
+                for chunk in reps.chunks(engine.width()) {
+                    engine.run_chunk(chunk, &mut sink);
+                }
+            }
+        }
+    }
+
+    /// Run the contiguous block `[rep_lo, rep_hi)` in ascending rep
+    /// order — the grid folds' unit of work.
+    pub fn run_block<F: FnMut(u64, &Outcome)>(&mut self, rep_lo: u64, rep_hi: u64, mut sink: F) {
+        match self {
+            BatchRunner::Scalar(session) => {
+                for rep in rep_lo..rep_hi {
+                    let out = session.run(rep);
+                    sink(rep, &out);
+                }
+            }
+            BatchRunner::Lockstep(engine) => {
+                let width = engine.width() as u64;
+                let mut chunk = Vec::with_capacity(engine.width());
+                let mut lo = rep_lo;
+                while lo < rep_hi {
+                    let hi = (lo + width).min(rep_hi);
+                    chunk.clear();
+                    chunk.extend(lo..hi);
+                    engine.run_chunk(&chunk, &mut sink);
+                    lo = hi;
+                }
+            }
+        }
+    }
+}
+
+/// Batch-runner counterpart of
+/// [`crate::sim::runner::fold_waste_product`]: fold point-major
+/// `(point, rep_lo, rep_hi)` blocks through the pool with one cached
+/// runner per worker per point. Per-point waste summaries are pushed
+/// in ascending rep order within each block and merged in worker
+/// order — the same push and merge sequence as the scalar fold, so a
+/// `Scalar` factory reproduces it bit for bit and a `Lockstep` factory
+/// is pinned to match.
+pub fn fold_waste_grid<F>(
+    tasks: &[(usize, u64, u64)],
+    n_points: usize,
+    workers: usize,
+    make: F,
+) -> Vec<Summary>
+where
+    F: Fn(usize) -> BatchRunner + Sync,
+{
+    run_parallel_fold(
+        tasks,
+        workers,
+        || (vec![Summary::new(); n_points], None::<(usize, BatchRunner)>),
+        |(mut sums, mut cache), &(pi, rep_lo, rep_hi)| {
+            let stale = cache.as_ref().map(|(cached, _)| *cached != pi).unwrap_or(true);
+            if stale {
+                cache = Some((pi, make(pi)));
+            }
+            let (_, runner) = cache.as_mut().expect("cache filled above");
+            runner.run_block(rep_lo, rep_hi, |_, out| sums[pi].push(out.waste()));
+            (sums, cache)
+        },
+        |(a, _), (b, _)| (a.iter().zip(&b).map(|(x, y)| x.merge(y)).collect(), None),
+    )
+    .0
+}
+
+/// Batch-runner counterpart of
+/// [`crate::sim::runner::fold_waste_product_retaining`]: the same fold
+/// as [`fold_waste_grid`] plus a point-major per-replication waste
+/// matrix (`matrix[pi * span + (rep - rep_lo)]`) for the CRN
+/// paired-difference prune. Each slot is written exactly once, so the
+/// matrix is deterministic regardless of worker scheduling.
+pub fn fold_waste_grid_retaining<F>(
+    tasks: &[(usize, u64, u64)],
+    n_points: usize,
+    rep_lo: u64,
+    rep_hi: u64,
+    workers: usize,
+    make: F,
+) -> (Vec<Summary>, Vec<f64>)
+where
+    F: Fn(usize) -> BatchRunner + Sync,
+{
+    let span = (rep_hi - rep_lo) as usize;
+    let (sums, cells, _) = run_parallel_fold(
+        tasks,
+        workers,
+        || {
+            (
+                vec![Summary::new(); n_points],
+                Vec::<(usize, f64)>::new(),
+                None::<(usize, BatchRunner)>,
+            )
+        },
+        |(mut sums, mut cells, mut cache), &(pi, lo, hi)| {
+            let stale = cache.as_ref().map(|(cached, _)| *cached != pi).unwrap_or(true);
+            if stale {
+                cache = Some((pi, make(pi)));
+            }
+            let (_, runner) = cache.as_mut().expect("cache filled above");
+            runner.run_block(lo, hi, |rep, out| {
+                let w = out.waste();
+                sums[pi].push(w);
+                cells.push((pi * span + (rep - rep_lo) as usize, w));
+            });
+            (sums, cells, cache)
+        },
+        |(a, mut ca, _), (b, cb, _)| {
+            ca.extend(cb);
+            (a.iter().zip(&b).map(|(x, y)| x.merge(y)).collect(), ca, None)
+        },
+    );
+    let mut matrix = vec![f64::NAN; n_points * span];
+    for (slot, w) in cells {
+        matrix[slot] = w;
+    }
+    (sums, matrix)
+}
+
+/// Batch-runner counterpart of
+/// [`crate::sim::run_replication_range_with`]: aggregate replications
+/// `[rep_lo, rep_hi)` across the pool through [`BatchRunner`]s.
+///
+/// The scalar range runner folds the rep list with a deterministic
+/// stride — worker `w` runs reps `w, w + W, …` in order and partials
+/// merge in worker order. This runner reproduces that schedule
+/// exactly: it folds over *worker indices*, each worker materializing
+/// its own strided rep list and pushing outcomes in stride order, so
+/// for a fixed worker count the aggregate matches the scalar runner
+/// bit for bit (counters exactly, summaries to the bit) whatever the
+/// lane width.
+pub fn run_replication_range_batched<M>(
+    rep_lo: u64,
+    rep_hi: u64,
+    workers: usize,
+    make: M,
+) -> anyhow::Result<ReplicationAgg>
+where
+    M: Fn() -> anyhow::Result<BatchRunner> + Sync,
+{
+    // Surface configuration errors here, once, instead of panicking in
+    // a worker.
+    drop(make()?);
+    let n_reps = rep_hi.saturating_sub(rep_lo);
+    if n_reps == 0 {
+        return Ok(ReplicationAgg::default());
+    }
+    // Same clamp as the scalar fold (workers capped at the item count),
+    // so the per-worker stride — and with it the merge order — agrees.
+    let w_eff = workers.max(1).min(n_reps.min(usize::MAX as u64) as usize);
+    let worker_ids: Vec<usize> = (0..w_eff).collect();
+    let agg = try_run_parallel_fold(
+        &worker_ids,
+        w_eff,
+        ReplicationAgg::default,
+        |mut agg, &w| {
+            let mut runner = make().expect("runner validated above");
+            let reps: Vec<u64> = (rep_lo + w as u64..rep_hi).step_by(w_eff).collect();
+            runner.run_reps(&reps, |_, out| agg.push(out));
+            agg
+        },
+        |a, b| a.merge(b),
+    )
+    .map_err(anyhow::Error::new)?;
+    Ok(agg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Predictor, Scenario};
+    use crate::model::{Capping, StrategyKind};
+    use crate::sim::run_replication_range_with;
+    use crate::strategies::spec_for;
+
+    fn scenario() -> Scenario {
+        let mut s = Scenario::paper(1 << 16, Predictor::exact(0.85, 0.82));
+        s.fault_dist = crate::dist::DistSpec::Exp;
+        s.work = 2.0e5;
+        s
+    }
+
+    /// Everything except wall-clock `sim_seconds` must agree exactly.
+    fn assert_agg_bit_identical(a: &ReplicationAgg, b: &ReplicationAgg) {
+        assert_eq!(a.n_reps, b.n_reps);
+        assert_eq!(a.n_completed, b.n_completed);
+        assert_eq!(a.n_faults, b.n_faults);
+        assert_eq!(a.n_faults_unpredicted, b.n_faults_unpredicted);
+        assert_eq!(a.n_preds, b.n_preds);
+        assert_eq!(a.n_true_preds, b.n_true_preds);
+        assert_eq!(a.n_trusted, b.n_trusted);
+        assert_eq!(a.n_ckpts, b.n_ckpts);
+        assert_eq!(a.n_proactive_ckpts, b.n_proactive_ckpts);
+        assert_eq!(a.n_migrations, b.n_migrations);
+        assert_eq!(a.n_faults_avoided, b.n_faults_avoided);
+        assert_eq!(a.n_segments, b.n_segments);
+        assert_eq!(a.lost_work.to_bits(), b.lost_work.to_bits());
+        assert_eq!(a.waste.mean().to_bits(), b.waste.mean().to_bits());
+        assert_eq!(a.waste.ci95().to_bits(), b.waste.ci95().to_bits());
+        assert_eq!(a.makespan.mean().to_bits(), b.makespan.mean().to_bits());
+    }
+
+    #[test]
+    fn lockstep_chunks_match_the_scalar_replay_loop() {
+        let s0 = scenario();
+        let s = crate::experiments::scenario_for(StrategyKind::ExactPrediction, &s0);
+        let spec = spec_for(StrategyKind::ExactPrediction, &s, Capping::Uncapped);
+        let policy = Policy::from_spec(&spec, s.platform.c);
+        let lead = policy.required_lead(s.platform.c);
+        let bank = Arc::new(TraceBank::try_build(&s, lead, 10).unwrap().expect("bank fits"));
+        let mut scalar = ReplicationAgg::default();
+        let mut session = SimSession::replay(bank.clone(), &s, policy).unwrap();
+        for rep in 0..10 {
+            scalar.push(&session.run(rep));
+        }
+        for lanes in [1usize, 3, 8] {
+            let mut agg = ReplicationAgg::default();
+            let mut runner =
+                BatchRunner::Lockstep(BatchEngine::new(bank.clone(), &s, policy, lanes).unwrap());
+            runner.run_block(0, 10, |_, out| agg.push(out));
+            assert_agg_bit_identical(&agg, &scalar);
+        }
+    }
+
+    #[test]
+    fn batched_range_matches_the_scalar_range_runner() {
+        let s = scenario();
+        let spec = spec_for(StrategyKind::Young, &s, Capping::Uncapped);
+        let policy = Policy::from_spec(&spec, s.platform.c);
+        let lead = policy.required_lead(s.platform.c);
+        let bank = Arc::new(TraceBank::try_build(&s, lead, 12).unwrap().expect("bank fits"));
+        for workers in [1usize, 3] {
+            let scalar = run_replication_range_with(0, 12, workers, || {
+                SimSession::replay(bank.clone(), &s, policy)
+            })
+            .unwrap();
+            let batched = run_replication_range_batched(0, 12, workers, || {
+                BatchEngine::new(bank.clone(), &s, policy, 4).map(BatchRunner::Lockstep)
+            })
+            .unwrap();
+            assert_agg_bit_identical(&batched, &scalar);
+        }
+    }
+
+    #[test]
+    fn underrun_lanes_fall_back_mid_chunk() {
+        // A bank holding only reps 0..3 forces the back half of every
+        // chunk onto the live fallback — outcomes must still match the
+        // scalar replay session (which falls back the same way).
+        let s = scenario();
+        let spec = spec_for(StrategyKind::Young, &s, Capping::Uncapped);
+        let policy = Policy::from_spec(&spec, s.platform.c);
+        let lead = policy.required_lead(s.platform.c);
+        let bank = Arc::new(TraceBank::try_build(&s, lead, 3).unwrap().expect("bank fits"));
+        let before = counters();
+        let mut scalar = ReplicationAgg::default();
+        let mut session = SimSession::replay(bank.clone(), &s, policy).unwrap();
+        for rep in 0..8 {
+            scalar.push(&session.run(rep));
+        }
+        let mut agg = ReplicationAgg::default();
+        let mut runner =
+            BatchRunner::Lockstep(BatchEngine::new(bank, &s, policy, 4).unwrap());
+        runner.run_block(0, 8, |_, out| agg.push(out));
+        assert_agg_bit_identical(&agg, &scalar);
+        let after = counters();
+        assert!(after.lanes_run >= before.lanes_run + 8);
+        assert!(after.lane_fallbacks >= before.lane_fallbacks + 5, "reps 3..8 fell back");
+    }
+
+    #[test]
+    fn scalar_runner_is_the_session_verbatim() {
+        let s = scenario();
+        let spec = spec_for(StrategyKind::Young, &s, Capping::Uncapped);
+        let mut direct = SimSession::new(&s, &spec).unwrap();
+        let mut via_runner = BatchRunner::Scalar(SimSession::new(&s, &spec).unwrap());
+        let mut got = Vec::new();
+        via_runner.run_reps(&[2, 0, 5], |rep, out| got.push((rep, out.makespan)));
+        assert_eq!(got.len(), 3);
+        for (rep, makespan) in got {
+            assert_eq!(makespan.to_bits(), direct.run(rep).makespan.to_bits(), "rep {rep}");
+        }
+    }
+
+    #[test]
+    fn batch_engine_rejects_mismatched_banks() {
+        let s = scenario();
+        let spec = spec_for(StrategyKind::Young, &s, Capping::Uncapped);
+        let policy = Policy::from_spec(&spec, s.platform.c);
+        let lead = policy.required_lead(s.platform.c);
+        let bank = Arc::new(TraceBank::try_build(&s, lead, 1).unwrap().unwrap());
+        let mut other = s.clone();
+        other.seed += 1;
+        assert!(BatchEngine::new(bank, &other, policy, 4).is_err());
+    }
+
+    #[test]
+    fn options_default_and_scalar_knob() {
+        assert_eq!(BatchOptions::default().lanes, DEFAULT_LANES);
+        assert!(!BatchOptions::default().is_scalar());
+        assert!(BatchOptions::scalar().is_scalar());
+    }
+
+    #[test]
+    fn fold_waste_grid_matches_the_scalar_product_fold() {
+        use crate::sim::runner::{fold_waste_product, rep_blocks};
+        let s = scenario();
+        let spec = spec_for(StrategyKind::Young, &s, Capping::Uncapped);
+        let policy = Policy::from_spec(&spec, s.platform.c);
+        let lead = policy.required_lead(s.platform.c);
+        let bank = Arc::new(TraceBank::try_build(&s, lead, 6).unwrap().expect("bank fits"));
+        let points: Vec<usize> = (0..3).collect();
+        let tasks = rep_blocks(&points, 0, 6, 2);
+        let scalar = fold_waste_product(&tasks, 3, 2, |_| {
+            SimSession::replay(bank.clone(), &s, policy).unwrap()
+        });
+        let batched = fold_waste_grid(&tasks, 3, 2, |_| {
+            BatchRunner::Lockstep(BatchEngine::new(bank.clone(), &s, policy, 4).unwrap())
+        });
+        for (a, b) in scalar.iter().zip(&batched) {
+            assert_eq!(a.mean().to_bits(), b.mean().to_bits());
+            assert_eq!(a.ci95().to_bits(), b.ci95().to_bits());
+        }
+        let (sums, matrix) = fold_waste_grid_retaining(&tasks, 3, 0, 6, 2, |_| {
+            BatchRunner::Lockstep(BatchEngine::new(bank.clone(), &s, policy, 4).unwrap())
+        });
+        assert!(matrix.iter().all(|w| w.is_finite()));
+        for (a, b) in scalar.iter().zip(&sums) {
+            assert_eq!(a.mean().to_bits(), b.mean().to_bits());
+        }
+    }
+}

@@ -11,7 +11,11 @@
 //! and streams the aggregation. [`platform`] generalizes the fault
 //! process to a multi-node platform (per-node streams, coordinated
 //! checkpoints, correlated failures) behind the same engine.
+//! [`batch`] advances a block of replications in lockstep over a
+//! shared trace-bank arena, pinned bit-identical to the scalar replay
+//! path.
 
+pub mod batch;
 mod engine;
 mod outcome;
 pub mod platform;
@@ -19,6 +23,10 @@ pub mod policy;
 mod runner;
 mod session;
 
+pub use batch::{
+    fold_waste_grid, fold_waste_grid_retaining, run_replication_range_batched, BatchEngine,
+    BatchOptions, BatchRunner,
+};
 pub use engine::Engine;
 pub use outcome::Outcome;
 pub use platform::{PlatformSource, PlatformSpec, RestartScope};

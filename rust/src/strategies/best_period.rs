@@ -7,7 +7,9 @@
 //! This is by far the most expensive operation in the study, so it gets
 //! the full hot-path treatment: the (candidate × replication) product
 //! is strided across the worker pool with per-candidate streaming
-//! merges (one reused [`SimSession`] per worker per candidate), and an
+//! merges (one reused [`BatchRunner`] per worker per candidate —
+//! lockstep chunks over the shared trace bank by default, the scalar
+//! [`SimSession`] path behind [`BatchOptions::scalar`]), and an
 //! optional coarse pass prunes clearly dominated periods before the
 //! fine pass spends the remaining replications on the contenders.
 
@@ -15,7 +17,10 @@ use std::sync::Arc;
 
 use crate::config::Scenario;
 use crate::coordinator::available_workers;
-use crate::sim::{fold_waste_product, rep_blocks, Policy, SimSession};
+use crate::sim::{
+    fold_waste_grid, fold_waste_grid_retaining, rep_blocks, BatchEngine, BatchOptions,
+    BatchRunner, Policy, SimSession,
+};
 use crate::strategies::{resolve_policy, PolicySpec, StrategySpec};
 use crate::trace::TraceBank;
 use crate::util::stats::{PairedDiff, Summary};
@@ -71,11 +76,24 @@ pub struct BestPeriodOptions {
     /// search transparently runs live) when its arena would exceed
     /// [`crate::trace::bank::MAX_RESIDENT_BYTES`].
     pub replay: bool,
+    /// Lockstep lane width for bank-backed sweeps: when a trace bank is
+    /// attached and `batch.lanes > 0`, each worker advances a chunk of
+    /// replications in lockstep over the arena
+    /// ([`crate::sim::BatchEngine`]) instead of one at a time. Pinned
+    /// bit-identical to the scalar path; `BatchOptions::scalar()`
+    /// selects that path explicitly. Ignored when no bank serves the
+    /// sweep (live and platform searches are always scalar).
+    pub batch: BatchOptions,
 }
 
 impl Default for BestPeriodOptions {
     fn default() -> Self {
-        BestPeriodOptions { workers: available_workers(), prune: false, replay: true }
+        BestPeriodOptions {
+            workers: available_workers(),
+            prune: false,
+            replay: true,
+            batch: BatchOptions::default(),
+        }
     }
 }
 
@@ -135,12 +153,19 @@ pub fn best_period_with(
     } else {
         None
     };
+    let lanes = opts.batch.lanes;
     Ok(search_grid(&grid, reps, opts, bank.is_some(), |ci| match &bank {
-        Some(b) => {
+        Some(b) if lanes > 0 => BatchRunner::Lockstep(
+            BatchEngine::new(b.clone(), scenario, Policy::from_spec(&specs[ci], c), lanes)
+                .expect("bank lead/seed derived from this scenario"),
+        ),
+        Some(b) => BatchRunner::Scalar(
             SimSession::replay(b.clone(), scenario, Policy::from_spec(&specs[ci], c))
-                .expect("bank lead/seed derived from this scenario")
-        }
-        None => SimSession::new(scenario, &specs[ci]).expect("scenario validated above"),
+                .expect("bank lead/seed derived from this scenario"),
+        ),
+        None => BatchRunner::Scalar(
+            SimSession::new(scenario, &specs[ci]).expect("scenario validated above"),
+        ),
     }))
 }
 
@@ -173,8 +198,10 @@ pub fn best_period_on_platform(
     // Surface configuration errors once, before any worker runs.
     drop(SimSession::new_on_platform(scenario, &specs[0], pspec)?);
     Ok(search_grid(&grid, reps, opts, false, |ci| {
-        SimSession::new_on_platform(scenario, &specs[ci], pspec)
-            .expect("platform spec validated above")
+        BatchRunner::Scalar(
+            SimSession::new_on_platform(scenario, &specs[ci], pspec)
+                .expect("platform spec validated above"),
+        )
     }))
 }
 
@@ -257,10 +284,19 @@ fn search_policy_param(
     } else {
         None
     };
+    let lanes = opts.batch.lanes;
     Ok(search_grid(&grid, reps, opts, bank.is_some(), |ci| match &bank {
-        Some(b) => SimSession::replay(b.clone(), scenario, policies[ci])
-            .expect("bank lead/seed derived from this scenario"),
-        None => SimSession::from_policy(scenario, policies[ci]).expect("policy validated above"),
+        Some(b) if lanes > 0 => BatchRunner::Lockstep(
+            BatchEngine::new(b.clone(), scenario, policies[ci], lanes)
+                .expect("bank lead/seed derived from this scenario"),
+        ),
+        Some(b) => BatchRunner::Scalar(
+            SimSession::replay(b.clone(), scenario, policies[ci])
+                .expect("bank lead/seed derived from this scenario"),
+        ),
+        None => BatchRunner::Scalar(
+            SimSession::from_policy(scenario, policies[ci]).expect("policy validated above"),
+        ),
     }))
 }
 
@@ -279,14 +315,14 @@ fn search_grid<F>(
     make: F,
 ) -> BestPeriodResult
 where
-    F: Fn(usize) -> SimSession + Sync,
+    F: Fn(usize) -> BatchRunner + Sync,
 {
     // A pool pass over `candidates × [rep_lo, rep_hi)`: per-candidate
     // streaming waste summaries through the shared product folder
-    // (candidate-major rep blocks, one reused session per block).
+    // (candidate-major rep blocks, one reused runner per block).
     let simulate = |candidates: &[usize], rep_lo: u64, rep_hi: u64| -> Vec<Summary> {
         let tasks = rep_blocks(candidates, rep_lo, rep_hi, opts.workers);
-        fold_waste_product(&tasks, grid.len(), opts.workers, &make)
+        fold_waste_grid(&tasks, grid.len(), opts.workers, &make)
     };
 
     let all: Vec<usize> = (0..grid.len()).collect();
@@ -305,7 +341,7 @@ where
         && grid.len() as u64 * coarse_reps <= (1 << 22);
     let (coarse, coarse_matrix) = if retain_matrix {
         let tasks = rep_blocks(&all, 0, coarse_reps, opts.workers);
-        let (sums, matrix) = crate::sim::fold_waste_product_retaining(
+        let (sums, matrix) = fold_waste_grid_retaining(
             &tasks,
             grid.len(),
             0,
@@ -490,7 +526,7 @@ mod tests {
             &base,
             12,
             8,
-            &BestPeriodOptions { workers: 2, prune: false, replay: true },
+            &BestPeriodOptions { workers: 2, prune: false, replay: true, ..Default::default() },
         )
         .unwrap();
         let pruned = best_period_with(
@@ -498,7 +534,7 @@ mod tests {
             &base,
             12,
             8,
-            &BestPeriodOptions { workers: 2, prune: true, replay: true },
+            &BestPeriodOptions { workers: 2, prune: true, replay: true, ..Default::default() },
         )
         .unwrap();
         assert_eq!(exhaustive.n_pruned, 0);
@@ -534,7 +570,7 @@ mod tests {
         // A Strategy(...) policy spec must return the classic T_R
         // search, bit for bit.
         let (s, base) = small_study();
-        let opts = BestPeriodOptions { workers: 2, prune: false, replay: true };
+        let opts = BestPeriodOptions { workers: 2, prune: false, replay: true, ..Default::default() };
         let direct = best_period_with(&s, &base, 6, 5, &opts).unwrap();
         let via_policy = best_policy_with(
             &s,
@@ -552,7 +588,7 @@ mod tests {
     #[test]
     fn policy_search_sweeps_the_risk_kappa() {
         let (s, _) = small_study();
-        let opts = BestPeriodOptions { workers: 2, prune: false, replay: true };
+        let opts = BestPeriodOptions { workers: 2, prune: false, replay: true, ..Default::default() };
         let res =
             best_policy_with(&s, &PolicySpec::RiskThreshold { kappa: 1.0 }, 6, 5, &opts).unwrap();
         assert_eq!(res.sweep.len(), 5);
@@ -569,7 +605,7 @@ mod tests {
         // Denormal kappa: finite and positive (so validate admits it)
         // but kappa/4 underflows to 0 — must be an error, not a panic.
         let (s, _) = small_study();
-        let opts = BestPeriodOptions { workers: 2, prune: false, replay: true };
+        let opts = BestPeriodOptions { workers: 2, prune: false, replay: true, ..Default::default() };
         let tiny = PolicySpec::RiskThreshold { kappa: 5e-324 };
         let err = best_policy_with(&s, &tiny, 2, 4, &opts).unwrap_err();
         assert!(err.to_string().contains("too extreme"), "{err:#}");
@@ -589,7 +625,7 @@ mod tests {
             &base,
             6,
             6,
-            &BestPeriodOptions { workers: 2, prune: false, replay: false },
+            &BestPeriodOptions { workers: 2, prune: false, replay: false, ..Default::default() },
         )
         .unwrap();
         let replay = best_period_with(
@@ -597,7 +633,7 @@ mod tests {
             &base,
             6,
             6,
-            &BestPeriodOptions { workers: 2, prune: false, replay: true },
+            &BestPeriodOptions { workers: 2, prune: false, replay: true, ..Default::default() },
         )
         .unwrap();
         assert_eq!(live.t_r.to_bits(), replay.t_r.to_bits());
@@ -620,7 +656,7 @@ mod tests {
             &base,
             6,
             5,
-            &BestPeriodOptions { workers: 2, prune: false, replay: true },
+            &BestPeriodOptions { workers: 2, prune: false, replay: true, ..Default::default() },
         )
         .unwrap();
         assert_eq!(full.reps_used, 6 * 5);
@@ -631,7 +667,7 @@ mod tests {
             &base,
             16,
             8,
-            &BestPeriodOptions { workers: 2, prune: true, replay: true },
+            &BestPeriodOptions { workers: 2, prune: true, replay: true, ..Default::default() },
         )
         .unwrap();
         let coarse = (16u64 / 4).max(2);
@@ -649,7 +685,7 @@ mod tests {
         // nodes = 1 platform sweeps are the classic live sweep, bit for
         // bit (platform sessions never replay, so compare to replay=false).
         let (s, base) = small_study();
-        let opts = BestPeriodOptions { workers: 2, prune: false, replay: false };
+        let opts = BestPeriodOptions { workers: 2, prune: false, replay: false, ..Default::default() };
         let live = best_period_with(&s, &base, 5, 5, &opts).unwrap();
         let platform = best_period_on_platform(
             &s,
@@ -673,7 +709,7 @@ mod tests {
         // still lands near sqrt(2 mu C) for an uncorrelated platform.
         let (s, base) = small_study();
         let pspec = crate::sim::PlatformSpec { nodes: 4, ..Default::default() };
-        let opts = BestPeriodOptions { workers: 2, prune: false, replay: false };
+        let opts = BestPeriodOptions { workers: 2, prune: false, replay: false, ..Default::default() };
         let res = best_period_on_platform(&s, &base, &pspec, 10, 8, &opts).unwrap();
         let formula = (2.0 * s.mu() * s.platform.c).sqrt();
         assert!(
@@ -687,7 +723,7 @@ mod tests {
     #[test]
     fn policy_search_is_reproducible() {
         let (s, _) = small_study();
-        let opts = BestPeriodOptions { workers: 3, prune: false, replay: true };
+        let opts = BestPeriodOptions { workers: 3, prune: false, replay: true, ..Default::default() };
         let spec = PolicySpec::AdaptivePeriod { gain: 1.0 };
         let a = best_policy_with(&s, &spec, 5, 4, &opts).unwrap();
         let b = best_policy_with(&s, &spec, 5, 4, &opts).unwrap();
@@ -698,7 +734,7 @@ mod tests {
     #[test]
     fn parallel_search_is_reproducible() {
         let (s, base) = small_study();
-        let opts = BestPeriodOptions { workers: 4, prune: true, replay: true };
+        let opts = BestPeriodOptions { workers: 4, prune: true, replay: true, ..Default::default() };
         let a = best_period_with(&s, &base, 8, 6, &opts).unwrap();
         let b = best_period_with(&s, &base, 8, 6, &opts).unwrap();
         assert_eq!(a.t_r, b.t_r);

@@ -50,9 +50,10 @@
 //! * **per-replication**: underrun (run outlived `horizon`, e.g. a
 //!   pathological waste near 1) → that rep re-runs live;
 //! * **whole-bank**: the estimated arena footprint for the requested
-//!   replication count exceeds [`MAX_RESIDENT_BYTES`] →
-//!   [`TraceBank::try_build`] returns `None` and the caller keeps the
-//!   classic live sessions.
+//!   replication count exceeds the cap ([`MAX_RESIDENT_BYTES`] by
+//!   default; [`BankOptions::max_bytes`] / the `CKPTFP_BANK_MAX_BYTES`
+//!   env var to override) → [`TraceBank::try_build`] returns `None`
+//!   and the caller keeps the classic live sessions.
 //!
 //! Event streams whose regeneration would depend on engine decisions
 //! (none exist in-tree today — predictions and faults are exogenous)
@@ -75,8 +76,33 @@ use crate::rng::{trust_seed, Pcg64};
 /// the underrun fallback (correct, just not accelerated).
 pub const HORIZON_FACTOR: f64 = 4.0;
 
-/// Whole-bank decline threshold on the *estimated* arena footprint.
+/// Default whole-bank decline threshold on the *estimated* arena
+/// footprint. Override per call with [`BankOptions::max_bytes`] or
+/// process-wide with the `CKPTFP_BANK_MAX_BYTES` env var.
 pub const MAX_RESIDENT_BYTES: u64 = 256 << 20;
+
+/// Build-time knobs for a [`TraceBank`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BankOptions {
+    /// Decline threshold: a bank whose *estimated* arena footprint for
+    /// the planned replication count exceeds this is never built and
+    /// the caller keeps live sessions.
+    pub max_bytes: u64,
+}
+
+impl Default for BankOptions {
+    /// [`MAX_RESIDENT_BYTES`], overridable via the
+    /// `CKPTFP_BANK_MAX_BYTES` env var (bytes; same discipline as
+    /// `CKPTFP_WORKERS` in the pool). Unparsable values fall back to
+    /// the compiled default.
+    fn default() -> Self {
+        let max_bytes = std::env::var("CKPTFP_BANK_MAX_BYTES")
+            .ok()
+            .and_then(|v| v.trim().parse::<u64>().ok())
+            .unwrap_or(MAX_RESIDENT_BYTES);
+        BankOptions { max_bytes }
+    }
+}
 
 // ---------------------------------------------------------------------------
 // Reuse counters
@@ -176,7 +202,17 @@ impl TraceBank {
         lead: f64,
         reps: u64,
     ) -> anyhow::Result<Option<TraceBank>> {
-        match Self::try_reserve(scenario, lead, reps)? {
+        Self::try_build_with(scenario, lead, reps, &BankOptions::default())
+    }
+
+    /// [`TraceBank::try_build`] with an explicit footprint cap.
+    pub fn try_build_with(
+        scenario: &Scenario,
+        lead: f64,
+        reps: u64,
+        opts: &BankOptions,
+    ) -> anyhow::Result<Option<TraceBank>> {
+        match Self::try_reserve_with(scenario, lead, reps, opts)? {
             Some(mut bank) => {
                 bank.ensure_reps(reps);
                 Ok(Some(bank))
@@ -195,6 +231,16 @@ impl TraceBank {
         lead: f64,
         planned_reps: u64,
     ) -> anyhow::Result<Option<TraceBank>> {
+        Self::try_reserve_with(scenario, lead, planned_reps, &BankOptions::default())
+    }
+
+    /// [`TraceBank::try_reserve`] with an explicit footprint cap.
+    pub fn try_reserve_with(
+        scenario: &Scenario,
+        lead: f64,
+        planned_reps: u64,
+        opts: &BankOptions,
+    ) -> anyhow::Result<Option<TraceBank>> {
         let horizon = HORIZON_FACTOR * scenario.work;
         // Chaos: a plan may force the over-budget decline path without
         // needing a genuinely 256 MiB scenario.
@@ -203,7 +249,7 @@ impl TraceBank {
             note_fallback_taken();
             return Ok(None);
         }
-        if estimate_bytes(scenario, horizon, planned_reps) > MAX_RESIDENT_BYTES {
+        if estimate_bytes(scenario, horizon, planned_reps) > opts.max_bytes {
             note_fallback_taken();
             return Ok(None);
         }
@@ -569,6 +615,22 @@ mod tests {
         s.work = 1.0e9; // horizon 4e9 s, mu ~6e4 s: ~66k faults/rep
         let declined = TraceBank::try_build(&s, s.platform.c, 1_000_000).unwrap();
         assert!(declined.is_none(), "a terabyte-scale bank must decline");
+    }
+
+    #[test]
+    fn tiny_cap_declines_an_otherwise_small_bank() {
+        let s = scenario(0.85, 0.82, 0.0, "exp");
+        // The same bank fits comfortably under the default cap...
+        assert!(TraceBank::try_build(&s, s.platform.c, 4).unwrap().is_some());
+        // ...but declines under a 1 KiB one, taking the fallback path.
+        let tiny = BankOptions { max_bytes: 1 << 10 };
+        let before = counters().fallbacks_taken;
+        let declined = TraceBank::try_build_with(&s, s.platform.c, 4, &tiny).unwrap();
+        assert!(declined.is_none(), "a 1 KiB cap must decline");
+        assert!(counters().fallbacks_taken > before);
+        // A cap explicitly at the default behaves like the default.
+        let dflt = BankOptions { max_bytes: MAX_RESIDENT_BYTES };
+        assert!(TraceBank::try_build_with(&s, s.platform.c, 4, &dflt).unwrap().is_some());
     }
 
     #[test]

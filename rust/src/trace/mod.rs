@@ -13,7 +13,7 @@ mod event;
 mod gen;
 pub mod io;
 
-pub use bank::{BankCounters, ReplaySource, TraceBank};
+pub use bank::{BankCounters, BankOptions, ReplaySource, TraceBank};
 pub use event::{Fault, Prediction};
 pub use gen::TraceGen;
 

@@ -21,17 +21,35 @@ use std::sync::Arc;
 
 use super::grid::ConformanceCase;
 use super::oracle::{oracle_for, Domain};
-use crate::sim::{run_replication_range_with, ReplicationAgg, SimSession};
+use crate::coordinator::available_workers;
+use crate::sim::{
+    run_replication_range_batched, run_replication_range_with, BatchEngine, BatchOptions,
+    BatchRunner, ReplicationAgg, SimSession,
+};
 use crate::strategies::resolve_policy;
 use crate::trace::TraceBank;
 
 /// Comparator tuning. `reps0` is the first batch; escalation doubles
-/// the total until it reaches `budget`.
+/// the total until it reaches `budget`. `batch` sets the lockstep lane
+/// width for bank-backed escalation rounds (pinned bit-identical to the
+/// scalar replay path; `BatchOptions::scalar()` pins the scalar path).
 #[derive(Debug, Clone)]
 pub struct VerifyOptions {
     pub reps0: u64,
     pub budget: u64,
     pub workers: usize,
+    pub batch: BatchOptions,
+}
+
+impl Default for VerifyOptions {
+    fn default() -> Self {
+        VerifyOptions {
+            reps0: 32,
+            budget: 256,
+            workers: available_workers(),
+            batch: BatchOptions::default(),
+        }
+    }
 }
 
 /// Outcome of one conformance case.
@@ -148,14 +166,28 @@ pub fn judge_case(case: &ConformanceCase, opts: &VerifyOptions) -> anyhow::Resul
         // Workers share the bank read-only for the round; it is handed
         // back for extension once the round's sessions are gone.
         let shared = bank.take().map(Arc::new);
-        let chunk = run_replication_range_with(done, target, opts.workers, || match &shared {
-            Some(b) => SimSession::replay(b.clone(), &rp.scenario, rp.policy),
-            None if !case.platform.is_single() => {
-                SimSession::on_platform(&rp.scenario, rp.policy, &case.platform)
-                    .expect("platform spec validated when the grid was built")
+        let chunk = match &shared {
+            // Bank-backed rounds advance in lockstep chunks by default;
+            // bit-identical to the scalar replay fold below.
+            Some(b) if opts.batch.lanes > 0 => {
+                run_replication_range_batched(done, target, opts.workers, || {
+                    Ok(BatchRunner::Lockstep(BatchEngine::new(
+                        b.clone(),
+                        &rp.scenario,
+                        rp.policy,
+                        opts.batch.lanes,
+                    )?))
+                })?
             }
-            None => SimSession::from_policy(&rp.scenario, rp.policy),
-        })?;
+            _ => run_replication_range_with(done, target, opts.workers, || match &shared {
+                Some(b) => SimSession::replay(b.clone(), &rp.scenario, rp.policy),
+                None if !case.platform.is_single() => {
+                    SimSession::on_platform(&rp.scenario, rp.policy, &case.platform)
+                        .expect("platform spec validated when the grid was built")
+                }
+                None => SimSession::from_policy(&rp.scenario, rp.policy),
+            })?,
+        };
         bank = shared.and_then(|a| Arc::try_unwrap(a).ok());
         agg = agg.merge(chunk);
         done = target;
@@ -231,7 +263,7 @@ mod tests {
             .into_iter()
             .find(|c| c.name == "exp-n16-none-Young")
             .unwrap();
-        let opts = VerifyOptions { reps0: 4, budget: 13, workers: 2 };
+        let opts = VerifyOptions { reps0: 4, budget: 13, workers: 2, ..Default::default() };
         let a = judge_case(&case, &opts).unwrap();
         // Escalation path is 4 -> 8 -> 13; whatever the verdict, the
         // spend never exceeds the budget.
@@ -251,7 +283,7 @@ mod tests {
             .into_iter()
             .find(|c| c.name == "exp-n16-none-Young@nodes=4")
             .unwrap();
-        let opts = VerifyOptions { reps0: 16, budget: 64, workers: 2 };
+        let opts = VerifyOptions { reps0: 16, budget: 64, workers: 2, ..Default::default() };
         let a = judge_case(&case, &opts).unwrap();
         assert_ne!(a.verdict, Verdict::Fail, "{a:?}");
         assert_eq!(a.completion_rate, 1.0);
@@ -268,7 +300,7 @@ mod tests {
             .into_iter()
             .find(|c| c.name == "exp-n16-none-Young")
             .unwrap();
-        let opts = VerifyOptions { reps0: 24, budget: 96, workers: 2 };
+        let opts = VerifyOptions { reps0: 24, budget: 96, workers: 2, ..Default::default() };
         let v = judge_case(&case, &opts).unwrap();
         assert_ne!(v.verdict, Verdict::Fail, "{v:?}");
         assert!(v.sim_mean > 0.0 && v.sim_mean < 1.0);

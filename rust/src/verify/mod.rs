@@ -277,7 +277,7 @@ mod tests {
     #[test]
     fn run_conformance_filters_by_policy() {
         // Filtered, tiny-budget run: only the risk:1 cases execute.
-        let opts = VerifyOptions { reps0: 2, budget: 2, workers: 2 };
+        let opts = VerifyOptions { reps0: 2, budget: 2, workers: 2, ..Default::default() };
         let spec = PolicySpec::RiskThreshold { kappa: 1.0 };
         let r = run_conformance(GridKind::Quick, Some(&spec), &opts).unwrap();
         assert!(!r.cases.is_empty());
@@ -294,7 +294,7 @@ mod tests {
 
     #[test]
     fn run_conformance_filters_by_platform() {
-        let opts = VerifyOptions { reps0: 2, budget: 2, workers: 2 };
+        let opts = VerifyOptions { reps0: 2, budget: 2, workers: 2, ..Default::default() };
         let p: PlatformSpec = "nodes=4".parse().unwrap();
         let r = run_conformance_filtered(GridKind::Quick, None, Some(&p), &opts).unwrap();
         assert!(!r.cases.is_empty());

@@ -198,6 +198,8 @@ fn every_response_variant_round_trips() {
             deadline_exceeded: 1,
             panics_contained: 2,
             client_retries: 7,
+            batch_lanes_run: 1024,
+            batch_lane_fallbacks: 2,
             batcher: Some(BatcherSnapshot { requests: 3, batches: 1, max_batch: 3 }),
         }),
         JobResponse::Stats(ServiceStats::default()),

@@ -36,7 +36,7 @@ fn best_period_replay_is_bit_identical_to_live_golden() {
             &base,
             8,
             6,
-            &BestPeriodOptions { workers: 2, prune: false, replay: false },
+            &BestPeriodOptions { workers: 2, prune: false, replay: false, ..Default::default() },
         )
         .unwrap();
         let replay = best_period_with(
@@ -44,7 +44,7 @@ fn best_period_replay_is_bit_identical_to_live_golden() {
             &base,
             8,
             6,
-            &BestPeriodOptions { workers: 2, prune: false, replay: true },
+            &BestPeriodOptions { workers: 2, prune: false, replay: true, ..Default::default() },
         )
         .unwrap();
         assert_eq!(live.t_r.to_bits(), replay.t_r.to_bits(), "{kind:?} winner period");
@@ -102,7 +102,7 @@ fn paired_ci_is_strictly_narrower_than_unpaired_on_shared_traces() {
 fn pruned_replay_search_is_reproducible_and_reports_spend() {
     let s = study(DistSpec::Exp, Predictor::none());
     let base = spec_for(StrategyKind::Young, &s, Capping::Uncapped);
-    let opts = BestPeriodOptions { workers: 3, prune: true, replay: true };
+    let opts = BestPeriodOptions { workers: 3, prune: true, replay: true, ..Default::default() };
     let a = best_period_with(&s, &base, 12, 8, &opts).unwrap();
     let b = best_period_with(&s, &base, 12, 8, &opts).unwrap();
     assert_eq!(a.t_r, b.t_r);
@@ -135,7 +135,7 @@ fn bank_counters_surface_through_stats() {
         &base,
         4,
         4,
-        &BestPeriodOptions { workers: 2, prune: false, replay: true },
+        &BestPeriodOptions { workers: 2, prune: false, replay: true, ..Default::default() },
     )
     .unwrap();
     let after = match exec.execute(&JobRequest::Stats) {

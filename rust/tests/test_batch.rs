@@ -1,0 +1,173 @@
+//! Lockstep batch-engine acceptance tests: the lane width of a
+//! bank-backed sweep must be unobservable in the results. Scalar
+//! replay, lanes=1 and lanes=8 produce bit-identical aggregates for
+//! every policy the repo ships, on Exponential and Weibull faults, and
+//! the contract survives mid-batch underrun fallbacks.
+
+use std::sync::Arc;
+
+use ckptfp::config::{Predictor, Scenario};
+use ckptfp::dist::DistSpec;
+use ckptfp::model::{Capping, StrategyKind};
+use ckptfp::sim::{BatchEngine, BatchRunner, Policy, ReplicationAgg, SimSession};
+use ckptfp::strategies::{resolve_policy, spec_for, PolicySpec};
+use ckptfp::trace::TraceBank;
+
+fn study(dist: DistSpec, predictor: Predictor) -> Scenario {
+    let mut s = Scenario::paper(1 << 16, predictor);
+    s.fault_dist = dist;
+    s.work = 2.0e5;
+    s
+}
+
+/// Run `0..reps` through one runner, folding into a fresh aggregate.
+fn agg_of(mut runner: BatchRunner, reps: u64) -> ReplicationAgg {
+    let ids: Vec<u64> = (0..reps).collect();
+    let mut agg = ReplicationAgg::default();
+    runner.run_reps(&ids, |_, out| agg.push(out));
+    agg
+}
+
+/// Everything except wall-clock `sim_seconds` must match to the bit.
+fn assert_bit_identical(a: &ReplicationAgg, b: &ReplicationAgg, label: &str) {
+    assert_eq!(a.n_reps, b.n_reps, "{label}: n_reps");
+    assert_eq!(a.n_completed, b.n_completed, "{label}: n_completed");
+    assert_eq!(a.n_faults, b.n_faults, "{label}: n_faults");
+    assert_eq!(a.n_faults_unpredicted, b.n_faults_unpredicted, "{label}: n_faults_unpredicted");
+    assert_eq!(a.n_preds, b.n_preds, "{label}: n_preds");
+    assert_eq!(a.n_true_preds, b.n_true_preds, "{label}: n_true_preds");
+    assert_eq!(a.n_trusted, b.n_trusted, "{label}: n_trusted");
+    assert_eq!(a.n_ckpts, b.n_ckpts, "{label}: n_ckpts");
+    assert_eq!(a.n_proactive_ckpts, b.n_proactive_ckpts, "{label}: n_proactive_ckpts");
+    assert_eq!(a.n_migrations, b.n_migrations, "{label}: n_migrations");
+    assert_eq!(a.n_faults_avoided, b.n_faults_avoided, "{label}: n_faults_avoided");
+    assert_eq!(a.n_segments, b.n_segments, "{label}: n_segments");
+    assert_eq!(a.lost_work.to_bits(), b.lost_work.to_bits(), "{label}: lost_work");
+    assert_eq!(a.waste.mean().to_bits(), b.waste.mean().to_bits(), "{label}: waste mean");
+    assert_eq!(a.waste.ci95().to_bits(), b.waste.ci95().to_bits(), "{label}: waste ci95");
+    assert_eq!(a.makespan.mean().to_bits(), b.makespan.mean().to_bits(), "{label}: makespan");
+}
+
+/// Compare scalar replay vs lockstep at lanes 1 and 8 on one bank.
+fn assert_lane_invariant(s: &Scenario, policy: Policy, reps: u64, bank_reps: u64, label: &str) {
+    let lead = policy.required_lead(s.platform.c);
+    let bank =
+        Arc::new(TraceBank::try_build(s, lead, bank_reps).unwrap().expect("study bank fits"));
+    let scalar = agg_of(
+        BatchRunner::Scalar(SimSession::replay(bank.clone(), s, policy).expect("replay")),
+        reps,
+    );
+    for lanes in [1usize, 8] {
+        let lockstep = agg_of(
+            BatchRunner::Lockstep(
+                BatchEngine::new(bank.clone(), s, policy, lanes).expect("batch engine"),
+            ),
+            reps,
+        );
+        assert_bit_identical(&scalar, &lockstep, &format!("{label} lanes={lanes}"));
+    }
+}
+
+/// The golden: all five paper strategies, exp + Weibull faults, lane
+/// widths 1 and 8 vs the scalar replay loop — every aggregate field
+/// (except wall-clock) identical to the bit. The window is 3000 s so
+/// WithCkptI has room for its in-window checkpoint.
+#[test]
+fn paper_strategies_are_lane_invariant() {
+    for dist in [DistSpec::Exp, DistSpec::weibull(0.7)] {
+        let s = study(dist, Predictor::windowed(0.85, 0.82, 3000.0));
+        for kind in [
+            StrategyKind::Young,
+            StrategyKind::ExactPrediction,
+            StrategyKind::Instant,
+            StrategyKind::NoCkptI,
+            StrategyKind::WithCkptI,
+        ] {
+            // resolve_policy applies the §5 EXACTPREDICTION rule (the
+            // exact-date trace variant) exactly as the sweeps do.
+            let rp = resolve_policy(&PolicySpec::Strategy(kind), &s).unwrap();
+            assert_lane_invariant(&rp.scenario, rp.policy, 10, 10, &format!("{kind:?}/{dist}"));
+        }
+    }
+}
+
+/// The non-paper policies ride the same contract: adaptive re-derives
+/// its period online, risk draws on volume-at-risk — both fold through
+/// the lockstep chunks bit-identically.
+#[test]
+fn adaptive_and_risk_policies_are_lane_invariant() {
+    for dist in [DistSpec::Exp, DistSpec::weibull(0.7)] {
+        let s = study(dist, Predictor::windowed(0.85, 0.82, 300.0));
+        for spec in ["adaptive:0.75", "risk:2"] {
+            let pspec: PolicySpec = spec.parse().unwrap();
+            let rp = resolve_policy(&pspec, &s).unwrap();
+            assert_lane_invariant(&rp.scenario, rp.policy, 10, 10, &format!("{spec}/{dist}"));
+        }
+    }
+}
+
+/// Forced mid-batch fallback: a bank that covers only 5 of 12
+/// replications leaves uncovered lanes *inside* a lanes=8 chunk. The
+/// fallback lanes re-run live and the aggregate still matches the
+/// scalar path (whose per-rep fallback is the reference), and the
+/// process-global batch counters move accordingly.
+#[test]
+fn mid_batch_underrun_falls_back_bit_identically() {
+    let s = study(DistSpec::weibull(0.7), Predictor::exact(0.85, 0.82));
+    let spec = spec_for(StrategyKind::ExactPrediction, &s, Capping::Uncapped);
+    let policy = Policy::from_spec(&spec, s.platform.c);
+    let lead = policy.required_lead(s.platform.c);
+    let bank = Arc::new(TraceBank::try_build(&s, lead, 5).unwrap().expect("study bank fits"));
+
+    let before = ckptfp::sim::batch::counters();
+    let scalar =
+        agg_of(BatchRunner::Scalar(SimSession::replay(bank.clone(), &s, policy).unwrap()), 12);
+    let lockstep = agg_of(
+        BatchRunner::Lockstep(BatchEngine::new(bank, &s, policy, 8).unwrap()),
+        12,
+    );
+    assert_bit_identical(&scalar, &lockstep, "underrun lanes=8");
+    let after = ckptfp::sim::batch::counters();
+    // Counters are process-global and other tests run concurrently, so
+    // assert monotone movement: 12 lanes ran, 7 of them fell back.
+    assert!(after.lanes_run >= before.lanes_run + 12, "lanes_run moved");
+    assert!(after.lane_fallbacks >= before.lane_fallbacks + 7, "lane_fallbacks moved");
+}
+
+/// Default-lane `best_period_with` (lockstep) is bit-identical to the
+/// explicitly scalar-pinned search — the end-to-end wiring of the same
+/// contract the unit aggregates pin above.
+#[test]
+fn best_period_default_lanes_match_the_pinned_scalar_path() {
+    use ckptfp::sim::BatchOptions;
+    use ckptfp::strategies::{best_period_with, BestPeriodOptions};
+    let s = study(DistSpec::weibull(0.7), Predictor::windowed(0.85, 0.82, 300.0));
+    let base = spec_for(StrategyKind::NoCkptI, &s, Capping::Uncapped);
+    let lockstep = best_period_with(
+        &s,
+        &base,
+        8,
+        6,
+        &BestPeriodOptions { workers: 2, prune: false, replay: true, ..Default::default() },
+    )
+    .unwrap();
+    let scalar = best_period_with(
+        &s,
+        &base,
+        8,
+        6,
+        &BestPeriodOptions {
+            workers: 2,
+            prune: false,
+            replay: true,
+            batch: BatchOptions::scalar(),
+        },
+    )
+    .unwrap();
+    assert_eq!(lockstep.t_r.to_bits(), scalar.t_r.to_bits());
+    assert_eq!(lockstep.waste.to_bits(), scalar.waste.to_bits());
+    assert_eq!(lockstep.reps_used, scalar.reps_used);
+    for (a, b) in lockstep.sweep.iter().zip(&scalar.sweep) {
+        assert_eq!(a.1.to_bits(), b.1.to_bits());
+    }
+}

@@ -20,7 +20,9 @@ use ckptfp::chaos::{self, Action, ChaosPlan, Point};
 use ckptfp::config::{Predictor, Scenario};
 use ckptfp::coordinator::{serve, ServiceConfig, ServiceHandle};
 use ckptfp::dist::DistSpec;
-use ckptfp::model::StrategyKind;
+use ckptfp::model::{Capping, StrategyKind};
+use ckptfp::sim::{BatchEngine, BatchRunner, Policy, ReplicationAgg, SimSession};
+use ckptfp::strategies::spec_for;
 use ckptfp::trace::{ReplaySource, TraceBank};
 
 static GATE: Mutex<()> = Mutex::new(());
@@ -370,6 +372,55 @@ fn forced_bank_decline_and_replay_underrun_take_the_fallback_paths() {
     let fired = chaos::fired();
     assert!(
         fired.iter().any(|(p, _, a)| *p == Point::BankReplay && *a == Action::Underrun),
+        "{fired:?}"
+    );
+}
+
+#[test]
+fn forced_underrun_inside_a_lockstep_chunk_falls_back_to_the_live_lane() {
+    let _s = begin();
+    let s = small_scenario();
+    let spec = spec_for(StrategyKind::Young, &s, Capping::Uncapped);
+    let policy = Policy::from_spec(&spec, s.platform.c);
+    let lead = policy.required_lead(s.platform.c);
+    let bank = Arc::new(TraceBank::try_build(&s, lead, 4).unwrap().expect("bank fits the budget"));
+
+    // Bank-free live reference: replay is pinned bit-identical to live
+    // generation, so a lane forced off the bank must land on exactly
+    // these numbers.
+    let mut live = ReplicationAgg::default();
+    let mut session = SimSession::from_policy(&s, policy).unwrap();
+    for rep in 0..4 {
+        live.push(&session.run(rep));
+    }
+
+    // Hit 1 is the chunk's second phase-1 cursor reset: lane 1 is
+    // forced to underrun even though rep 1 is fully materialized,
+    // exercising the *mid-chunk* fallback (lanes 0, 2, 3 stay on the
+    // bank around it).
+    chaos::install(ChaosPlan::new().at(Point::BankReplay, &[1], Action::Underrun));
+    let before = ckptfp::sim::batch::counters();
+    let mut agg = ReplicationAgg::default();
+    let mut runner = BatchRunner::Lockstep(BatchEngine::new(bank, &s, policy, 4).unwrap());
+    runner.run_reps(&[0, 1, 2, 3], |_, out| agg.push(out));
+    let after = ckptfp::sim::batch::counters();
+
+    assert_eq!(agg.n_reps, live.n_reps);
+    assert_eq!(agg.n_completed, live.n_completed);
+    assert_eq!(agg.n_faults, live.n_faults);
+    assert_eq!(agg.n_ckpts, live.n_ckpts);
+    assert_eq!(agg.n_segments, live.n_segments);
+    assert_eq!(agg.lost_work.to_bits(), live.lost_work.to_bits());
+    assert_eq!(agg.waste.mean().to_bits(), live.waste.mean().to_bits());
+    assert_eq!(agg.makespan.mean().to_bits(), live.makespan.mean().to_bits());
+
+    assert!(after.lanes_run >= before.lanes_run + 4, "4 lanes ran: {after:?}");
+    assert!(after.lane_fallbacks >= before.lane_fallbacks + 1, "lane 1 fell back: {after:?}");
+    let fired = chaos::fired();
+    assert!(
+        fired.iter().any(|(p, hit, a)| {
+            *p == Point::BankReplay && *hit == 1 && *a == Action::Underrun
+        }),
         "{fired:?}"
     );
 }

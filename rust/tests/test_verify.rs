@@ -72,7 +72,7 @@ fn deliberate_regime_case_takes_the_divergence_bound_path() {
     assert!(od_width > id_width * 1.5, "od {od_width} vs id {id_width}");
     // ...and judging it works: the simulator diverges from the
     // first-order value (that is the point) yet stays inside the bound.
-    let opts = VerifyOptions { reps0: 24, budget: 96, workers: 2 };
+    let opts = VerifyOptions { reps0: 24, budget: 96, workers: 2, ..Default::default() };
     let v = judge_case(&case, &opts).unwrap();
     assert_ne!(v.verdict, Verdict::Fail, "{v:?}");
     assert_eq!(v.completion_rate, 1.0);
@@ -90,7 +90,7 @@ fn escalation_extends_rather_than_restarts() {
         .into_iter()
         .find(|c| c.name == "exp-n16-yu:exact-ExactPrediction")
         .unwrap();
-    let opts = VerifyOptions { reps0: 2, budget: 11, workers: 2 };
+    let opts = VerifyOptions { reps0: 2, budget: 11, workers: 2, ..Default::default() };
     let v = judge_case(&case, &opts).unwrap();
     assert!(v.reps >= 2 && v.reps <= 11, "reps {}", v.reps);
     // reps follows the doubling schedule 2 -> 4 -> 8 -> 11.
@@ -102,7 +102,7 @@ fn quick_grid_small_budget_has_no_failures() {
     // The CI gate in miniature: a reduced-budget pass over the full
     // quick grid must produce zero `fail` verdicts. (CI runs the same
     // gate at full budget via `ckptfp verify --grid quick`.)
-    let opts = VerifyOptions { reps0: 16, budget: 128, workers: 2 };
+    let opts = VerifyOptions { reps0: 16, budget: 128, workers: 2, ..Default::default() };
     let report = run_conformance(GridKind::Quick, None, &opts).unwrap();
     let failed: Vec<&str> = report
         .cases
@@ -132,7 +132,7 @@ fn quick_grid_small_budget_has_no_failures() {
 
 #[test]
 fn conformance_json_document_round_trips() {
-    let opts = VerifyOptions { reps0: 4, budget: 8, workers: 2 };
+    let opts = VerifyOptions { reps0: 4, budget: 8, workers: 2, ..Default::default() };
     let spec = PolicySpec::Strategy(StrategyKind::Migration);
     let report = run_conformance(GridKind::Quick, Some(&spec), &opts).unwrap();
     let doc = conformance_json(&report).to_string();
@@ -181,7 +181,7 @@ fn verify_job_round_trips_on_the_wire() {
 
 #[test]
 fn verify_response_round_trips_on_the_wire() {
-    let opts = VerifyOptions { reps0: 4, budget: 8, workers: 2 };
+    let opts = VerifyOptions { reps0: 4, budget: 8, workers: 2, ..Default::default() };
     let spec = PolicySpec::AdaptivePeriod { gain: 1.0 };
     let report = run_conformance(GridKind::Quick, Some(&spec), &opts).unwrap();
     let resp = JobResponse::Verify(report);

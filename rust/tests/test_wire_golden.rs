@@ -157,6 +157,8 @@ fn golden_stats() -> ServiceStats {
         deadline_exceeded: 1,
         panics_contained: 2,
         client_retries: 7,
+        batch_lanes_run: 512,
+        batch_lane_fallbacks: 4,
         batcher: Some(BatcherSnapshot { requests: 3, batches: 1, max_batch: 3 }),
     }
 }

@@ -11,7 +11,16 @@ New benches are picked up automatically once both runs record them —
 the trace-bank pair (`bank_replay_vs_live.*`, `best_period_crn.*`)
 keys its directions off the standard suffixes: `*_per_s`/`speedup`
 higher-better, `*_s` (incl. `bank_build_s`, `live_s`, `replay_s`)
-lower-better.
+lower-better. The lockstep pair follows the same rule:
+`lockstep_vs_scalar.*` reads `reps_per_s_lanes*`/`speedup_lanes*`
+higher-better and `abstraction_tax_pct` lower-better (it is a
+percentage, caught by the explicit hint below);
+`waste_grid_batched.*` reads `rows_per_s_*`/`speedup` higher-better
+and `scalar_s`/`batched_s` lower-better.
+
+A missing, empty, or unparsable baseline (first run on a fresh branch,
+or the rolling artifact expired) is not an error: the script prints a
+note and exits 0 so the comment job never fails the pipeline.
 
 Warn-only by design: the exit code is always 0. CI runs this as a
 bench-regression *comment*, not a gate — perf numbers on shared
@@ -26,6 +35,9 @@ import sys
 LOWER_BETTER_SUFFIXES = ("_ms", "_s", "_seconds")
 # Metrics where HIGHER is better (throughputs, speedups, efficiencies).
 HIGHER_BETTER_HINTS = ("per_s", "speedup", "efficiency", "msegs", "msegments")
+# Metrics where LOWER is better by explicit name (no suffix match):
+# the lockstep lanes=1 overhead vs the plain scalar path.
+LOWER_BETTER_HINTS = ("abstraction_tax",)
 # Relative move (on the good-direction axis) below which we stay quiet.
 NOISE = 0.10
 
@@ -44,6 +56,8 @@ def direction(key):
     leaf = key.rsplit(".", 1)[-1]
     if any(h in leaf for h in HIGHER_BETTER_HINTS):
         return "higher"
+    if any(h in leaf for h in LOWER_BETTER_HINTS):
+        return "lower"
     if leaf.endswith(LOWER_BETTER_SUFFIXES):
         return "lower"
     return None  # informational only (counters, worker counts)
@@ -53,10 +67,22 @@ def main():
     if len(sys.argv) != 3:
         print(__doc__.strip())
         return
-    with open(sys.argv[1]) as f:
-        base = flatten(json.load(f))
-    with open(sys.argv[2]) as f:
-        cur = flatten(json.load(f))
+    # A fresh branch or an expired rolling artifact has no baseline (or
+    # an empty/truncated one) — that is a note, not a failure.
+    try:
+        with open(sys.argv[1]) as f:
+            base = flatten(json.load(f))
+    except (FileNotFoundError, json.JSONDecodeError) as e:
+        print(f"bench-diff: no usable baseline at {sys.argv[1]} ({e.__class__.__name__}); "
+              "skipping comparison")
+        return
+    try:
+        with open(sys.argv[2]) as f:
+            cur = flatten(json.load(f))
+    except (FileNotFoundError, json.JSONDecodeError) as e:
+        print(f"bench-diff: no usable current run at {sys.argv[2]} ({e.__class__.__name__}); "
+              "skipping comparison")
+        return
 
     shared = sorted(set(base) & set(cur))
     if not shared:

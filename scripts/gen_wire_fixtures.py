@@ -196,6 +196,10 @@ STATS_PAYLOAD = {
     "deadline_exceeded": 1,
     "panics_contained": 2,
     "client_retries": 7,
+    # Additive lockstep batch-engine counters (v2 only): lanes run
+    # through batch chunks, lanes that fell back on a bank underrun.
+    "batch_lanes_run": 512,
+    "batch_lane_fallbacks": 4,
     "batcher": {"requests": 3, "batches": 1, "max_batch": 3},
 }
 
@@ -204,7 +208,8 @@ STATS_DEFAULT = {
     "sweeps": 0, "verifies": 0, "lat_p50_s": 0, "lat_p95_s": 0, "lat_p99_s": 0,
     "lat_n": 0, "banks_built": 0, "bank_replays": 0, "bank_fallbacks": 0,
     "bank_bytes_resident": 0, "rejected_overloaded": 0, "deadline_exceeded": 0,
-    "panics_contained": 0, "client_retries": 0,
+    "panics_contained": 0, "client_retries": 0, "batch_lanes_run": 0,
+    "batch_lane_fallbacks": 0,
 }
 
 RESPONSES_V2 = [
