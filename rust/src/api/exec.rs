@@ -15,7 +15,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use super::types::*;
-use crate::coordinator::{available_workers, Batcher, Metrics, PoolPanic};
+use crate::coordinator::{available_workers, canon, Batcher, Metrics, PlanCache, PoolPanic};
 use crate::experiments::scenario_for;
 use crate::model::{self, Params, StrategyKind};
 use crate::sim::{run_replication_range_with_cancel, SimSession};
@@ -43,6 +43,10 @@ pub struct ExecutorConfig {
     /// are rejected up front as `bad_request` instead of admitted and
     /// later killed by the deadline.
     pub reps_cap: u64,
+    /// Bounded LRU capacity for memoized `Plan`/`BestPeriod`/`Sweep`
+    /// responses ([`crate::coordinator::PlanCache`]); `0` disables the
+    /// cache entirely.
+    pub cache_capacity: usize,
 }
 
 impl Default for ExecutorConfig {
@@ -53,6 +57,7 @@ impl Default for ExecutorConfig {
             bp_candidates_default: 16,
             deadline: None,
             reps_cap: 10_000_000,
+            cache_capacity: 512,
         }
     }
 }
@@ -65,6 +70,7 @@ pub struct Executor {
     batcher: Option<Batcher>,
     cfg: ExecutorConfig,
     metrics: Arc<Metrics>,
+    cache: Arc<PlanCache>,
 }
 
 impl Executor {
@@ -75,12 +81,14 @@ impl Executor {
     }
 
     pub fn new(cfg: ExecutorConfig) -> Executor {
-        Executor { batcher: None, cfg, metrics: Arc::new(Metrics::new()) }
+        let cache = Arc::new(PlanCache::new(cfg.cache_capacity));
+        Executor { batcher: None, cfg, metrics: Arc::new(Metrics::new()), cache }
     }
 
     /// Executor whose `Plan`/`Sweep` jobs ride the HLO batcher.
     pub fn with_batcher(batcher: Batcher, cfg: ExecutorConfig) -> Executor {
-        Executor { batcher: Some(batcher), cfg, metrics: Arc::new(Metrics::new()) }
+        let cache = Arc::new(PlanCache::new(cfg.cache_capacity));
+        Executor { batcher: Some(batcher), cfg, metrics: Arc::new(Metrics::new()), cache }
     }
 
     pub fn batcher(&self) -> Option<&Batcher> {
@@ -89,6 +97,31 @@ impl Executor {
 
     pub fn config(&self) -> &ExecutorConfig {
         &self.cfg
+    }
+
+    /// The shared response cache (one per executor family — clones
+    /// share it, so every service connection sees the same entries).
+    pub fn cache(&self) -> &PlanCache {
+        &self.cache
+    }
+
+    /// Canonical cache key for `req`, or `None` when the request is not
+    /// cacheable (or the cache is disabled). Defaults are resolved
+    /// *before* keying so `reps = 0` and `reps = reps_default` share an
+    /// entry.
+    fn cache_key(&self, req: &JobRequest) -> Option<String> {
+        if !self.cache.enabled() {
+            return None;
+        }
+        let (reps, candidates, workers) = match req {
+            JobRequest::BestPeriod(job) => (
+                if job.reps == 0 { self.cfg.reps_default } else { job.reps },
+                if job.candidates == 0 { self.cfg.bp_candidates_default } else { job.candidates },
+                self.resolve_workers(job.workers),
+            ),
+            _ => (0, 0, 0),
+        };
+        canon::request_key(req, reps, candidates, workers)
     }
 
     /// Execute any job; failures become [`JobResponse::Error`], never a
@@ -106,6 +139,13 @@ impl Executor {
         let started = Instant::now();
         self.metrics.incr("requests", 1);
         self.metrics.incr(req.op(), 1);
+        let key = self.cache_key(req);
+        if let Some(k) = &key {
+            if let Some(resp) = self.cache.get(k) {
+                self.metrics.observe_latency(started.elapsed().as_secs_f64());
+                return resp;
+            }
+        }
         let token = parent.child_with_deadline(self.cfg.deadline);
         let resp = match req {
             JobRequest::Plan(job) => self.plan(job).map(JobResponse::Plan),
@@ -119,13 +159,23 @@ impl Executor {
             JobRequest::Ping => Ok(JobResponse::Pong),
         };
         self.metrics.observe_latency(started.elapsed().as_secs_f64());
-        resp.unwrap_or_else(|e| {
-            self.metrics.incr("errors", 1);
-            if e.code == ErrorCode::DeadlineExceeded {
-                self.metrics.incr("service.deadline_exceeded", 1);
+        match resp {
+            Ok(r) => {
+                // Only successful pure answers are memoized; errors
+                // (validation, overload, deadline) always recompute.
+                if let Some(k) = key {
+                    self.cache.put(k, r.clone());
+                }
+                r
             }
-            JobResponse::Error(e)
-        })
+            Err(e) => {
+                self.metrics.incr("errors", 1);
+                if e.code == ErrorCode::DeadlineExceeded {
+                    self.metrics.incr("service.deadline_exceeded", 1);
+                }
+                JobResponse::Error(e)
+            }
+        }
     }
 
     /// Count a request that failed before reaching [`Executor::execute`]
@@ -411,6 +461,7 @@ impl Executor {
         let finite = |x: f64| if x.is_finite() { x } else { 0.0 };
         let bank = crate::trace::bank::counters();
         let batch = crate::sim::batch::counters();
+        let cache = self.cache.snapshot();
         ServiceStats {
             requests: self.metrics.get("requests"),
             errors: self.metrics.get("errors"),
@@ -433,6 +484,10 @@ impl Executor {
             client_retries: super::client::client_retries(),
             batch_lanes_run: batch.lanes_run,
             batch_lane_fallbacks: batch.lane_fallbacks,
+            cache_hits: cache.hits,
+            cache_misses: cache.misses,
+            cache_evictions: cache.evictions,
+            cache_entries: cache.entries,
             batcher: self.batcher.as_ref().map(|b| {
                 let s = b.stats();
                 BatcherSnapshot {
@@ -728,6 +783,71 @@ mod tests {
             .unwrap();
         assert_eq!(res.reps, 4);
         assert_eq!(res.n_faults, 0, "no replication ran under a pre-tripped flag");
+    }
+
+    #[test]
+    fn repeat_plans_are_served_from_cache_bit_identically() {
+        let exec = Executor::local();
+        let req = JobRequest::Plan(PlanJob::new(small_scenario()));
+        let cold = exec.execute(&req);
+        let hot = exec.execute(&req);
+        // The acceptance pin: a cached response is byte-for-byte the
+        // uncached one on the wire, not merely approximately equal.
+        assert_eq!(
+            crate::api::wire::encode_response(&cold, false),
+            crate::api::wire::encode_response(&hot, false),
+        );
+        let stats = exec.stats();
+        assert_eq!(stats.cache_hits, 1);
+        assert_eq!(stats.cache_misses, 1);
+        assert_eq!(stats.cache_entries, 1);
+        assert_eq!(stats.requests, 2, "a hit still counts as a request");
+    }
+
+    #[test]
+    fn cache_keys_resolve_defaults_before_keying() {
+        // `reps = 0` (use the default) and an explicit `reps =
+        // reps_default` are the same computation, so they must share a
+        // cache entry.
+        let exec = Executor::new(ExecutorConfig {
+            reps_default: 2,
+            bp_candidates_default: 2,
+            ..Default::default()
+        });
+        let implicit = BestPeriodJob::new(small_scenario(), StrategyKind::Young);
+        let mut explicit = implicit.clone();
+        explicit.reps = 2;
+        explicit.candidates = 2;
+        explicit.workers = Some(exec.config().workers as u64);
+        let a = exec.execute(&JobRequest::BestPeriod(implicit));
+        let b = exec.execute(&JobRequest::BestPeriod(explicit));
+        assert_eq!(a, b);
+        assert_eq!(exec.stats().cache_hits, 1);
+    }
+
+    #[test]
+    fn zero_cache_capacity_recomputes_every_request() {
+        let exec = Executor::new(ExecutorConfig { cache_capacity: 0, ..Default::default() });
+        let req = JobRequest::Plan(PlanJob::new(small_scenario()));
+        assert_eq!(exec.execute(&req), exec.execute(&req));
+        let stats = exec.stats();
+        assert_eq!(stats.cache_hits, 0);
+        assert_eq!(stats.cache_misses, 0);
+        assert_eq!(stats.cache_entries, 0);
+    }
+
+    #[test]
+    fn errors_and_impure_jobs_are_never_cached() {
+        let exec = Executor::local();
+        let mut bad = small_scenario();
+        bad.work = -1.0;
+        exec.execute(&JobRequest::Plan(PlanJob::new(bad)));
+        // Simulate is seeded per-replication but reports wall-clock
+        // time, so it is deliberately uncacheable.
+        let mut sim = SimulateJob::new(small_scenario(), StrategyKind::Young);
+        sim.reps = 2;
+        exec.execute(&JobRequest::Simulate(sim));
+        assert_eq!(exec.stats().cache_entries, 0);
     }
 
     #[test]

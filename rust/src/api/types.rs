@@ -310,6 +310,15 @@ pub struct ServiceStats {
     /// generation on a bank underrun.
     pub batch_lanes_run: u64,
     pub batch_lane_fallbacks: u64,
+    /// Plan-cache counters (additive v2 fields; per-executor, see
+    /// [`crate::coordinator::PlanCache`]): lookups served from the
+    /// memoized Plan/BestPeriod/Sweep cache, lookups that missed,
+    /// entries evicted by the LRU capacity bound, and entries
+    /// currently resident.
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_evictions: u64,
+    pub cache_entries: u64,
     /// Present only when the service runs an HLO batcher.
     pub batcher: Option<BatcherSnapshot>,
 }

@@ -37,12 +37,59 @@ pub struct Decoded {
     pub legacy: bool,
 }
 
+/// Additive v2 envelope fields the *service* cares about but the job
+/// itself does not: the tenant a request bills to (fair scheduling)
+/// and whether the caller opted into streaming partial-result frames.
+/// Kept out of [`Decoded`] so its two-field shape (exhaustively
+/// matched by clients and tests) never changes.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct RequestMeta {
+    /// `"tenant"`: queue/billing identity; `None` = the default
+    /// tenant. Validated to 1..=64 bytes when present.
+    pub tenant: Option<String>,
+    /// `"stream"`: ask for partial-result frames on sweep/verify.
+    /// Ignored (harmlessly) on every other op.
+    pub stream: bool,
+}
+
 // ---------------------------------------------------------------------------
 // Requests
 // ---------------------------------------------------------------------------
 
-/// Decode one request line (either dialect).
+/// Decode one request line (either dialect), dropping the service
+/// envelope. Typed clients and tests use this; the service itself
+/// uses [`decode_request_meta`].
 pub fn decode_request(line: &str) -> Result<Decoded, ApiError> {
+    decode_request_meta(line).map(|(decoded, _)| decoded)
+}
+
+/// Envelope fields of an already-parsed v2 request object. Validation
+/// runs *after* op dispatch so op-level errors keep their pre-envelope
+/// shapes.
+fn meta_from_json(v: &Json) -> Result<RequestMeta, ApiError> {
+    let tenant = match v.get("tenant") {
+        None | Some(Json::Null) => None,
+        Some(Json::Str(s)) => {
+            if s.is_empty() || s.len() > 64 {
+                return Err(ApiError::bad_request(
+                    "tenant must be a string of 1 to 64 bytes",
+                ));
+            }
+            Some(s.clone())
+        }
+        Some(_) => return Err(ApiError::bad_request("tenant must be a string")),
+    };
+    let stream = match v.get("stream") {
+        None => false,
+        Some(Json::Bool(b)) => *b,
+        Some(_) => return Err(ApiError::bad_request("stream must be a boolean")),
+    };
+    Ok(RequestMeta { tenant, stream })
+}
+
+/// Decode one request line plus its service envelope ([`RequestMeta`]).
+/// v1 lines get the default envelope: no tenant, no streaming.
+pub fn decode_request_meta(line: &str) -> Result<(Decoded, RequestMeta), ApiError> {
     if line.len() > MAX_LINE_BYTES {
         return Err(ApiError::bad_request(format!(
             "request line of {} bytes exceeds the {} byte limit",
@@ -56,7 +103,10 @@ pub fn decode_request(line: &str) -> Result<Decoded, ApiError> {
     }
     let version = v.num_or("v", 1.0);
     if version == 1.0 {
-        return Ok(Decoded { request: decode_v1(&v)?, legacy: true });
+        return Ok((
+            Decoded { request: decode_v1(&v)?, legacy: true },
+            RequestMeta::default(),
+        ));
     }
     if version != PROTOCOL_VERSION {
         return Err(ApiError::new(
@@ -131,7 +181,7 @@ pub fn decode_request(line: &str) -> Result<Decoded, ApiError> {
         "ping" => JobRequest::Ping,
         other => return Err(ApiError::unknown_op(other)),
     };
-    Ok(Decoded { request, legacy: false })
+    Ok((Decoded { request, legacy: false }, meta_from_json(&v)?))
 }
 
 /// Dialect sniff for lines that failed [`decode_request`]: a
@@ -254,6 +304,29 @@ pub fn encode_request(req: &JobRequest) -> String {
     Json::obj(fields).to_string()
 }
 
+/// Encode one request line with its service envelope: `tenant` and/or
+/// `stream` ride along as additive v2 fields. With a default
+/// [`RequestMeta`] this is byte-identical to [`encode_request`] (the
+/// sorted-object encoding makes field *pushes* order-free).
+pub fn encode_request_tagged(req: &JobRequest, meta: &RequestMeta) -> String {
+    let bare = encode_request(req);
+    if meta.tenant.is_none() && !meta.stream {
+        return bare;
+    }
+    // Re-parse and extend rather than duplicating the field tables:
+    // requests are encoded off the hot path.
+    let mut v = parse(&bare).expect("encode_request emits valid JSON");
+    if let Json::Obj(map) = &mut v {
+        if let Some(t) = &meta.tenant {
+            map.insert("tenant".into(), Json::Str(t.clone()));
+        }
+        if meta.stream {
+            map.insert("stream".into(), Json::Bool(true));
+        }
+    }
+    v.to_string()
+}
+
 // ---------------------------------------------------------------------------
 // Responses
 // ---------------------------------------------------------------------------
@@ -261,7 +334,23 @@ pub fn encode_request(req: &JobRequest) -> String {
 /// Encode one response line. `legacy` selects the v1 shape (no `v` /
 /// `job` markers — exactly what pre-v2 clients parse today).
 pub fn encode_response(resp: &JobResponse, legacy: bool) -> String {
+    encode_response_framed(resp, legacy, None)
+}
+
+/// Encode the **final frame** of a streamed response: the complete
+/// standard v2 payload plus `"frame": "final"` and the frame sequence
+/// number. Non-streamed responses never carry a `frame` field, so
+/// their bytes are untouched by the streaming feature.
+pub fn encode_stream_final(resp: &JobResponse, seq: u64) -> String {
+    encode_response_framed(resp, false, Some(seq))
+}
+
+fn encode_response_framed(resp: &JobResponse, legacy: bool, final_seq: Option<u64>) -> String {
     let mut fields: Vec<(&str, Json)> = Vec::new();
+    if let Some(seq) = final_seq {
+        fields.push(("frame", Json::Str("final".into())));
+        fields.push(("seq", Json::Num(seq as f64)));
+    }
     if !legacy {
         fields.push(("v", Json::Num(PROTOCOL_VERSION)));
     }
@@ -348,23 +437,7 @@ pub fn encode_response(resp: &JobResponse, legacy: bool) -> String {
                 "planner",
                 Json::Str(if r.via_hlo { "hlo" } else { "analytic" }.into()),
             ));
-            fields.push((
-                "rows",
-                Json::Arr(
-                    r.rows
-                        .iter()
-                        .map(|row| {
-                            Json::obj(vec![
-                                ("n_procs", Json::Num(row.n_procs as f64)),
-                                ("mu", Json::Num(row.mu)),
-                                ("winner", Json::Str(row.winner.name().into())),
-                                ("winner_waste", Json::Num(row.winner_waste)),
-                                ("winner_period", Json::Num(row.winner_period)),
-                            ])
-                        })
-                        .collect(),
-                ),
-            ));
+            fields.push(("rows", Json::Arr(r.rows.iter().map(sweep_row_json).collect())));
         }
         JobResponse::Verify(r) => {
             fields.push(("ok", Json::Bool(true)));
@@ -420,6 +493,10 @@ pub fn encode_response(resp: &JobResponse, legacy: bool) -> String {
                     ("client_retries", Json::Num(s.client_retries as f64)),
                     ("batch_lanes_run", Json::Num(s.batch_lanes_run as f64)),
                     ("batch_lane_fallbacks", Json::Num(s.batch_lane_fallbacks as f64)),
+                    ("cache_hits", Json::Num(s.cache_hits as f64)),
+                    ("cache_misses", Json::Num(s.cache_misses as f64)),
+                    ("cache_evictions", Json::Num(s.cache_evictions as f64)),
+                    ("cache_entries", Json::Num(s.cache_entries as f64)),
                 ]);
                 if let Some(b) = &s.batcher {
                     fields.push((
@@ -435,6 +512,101 @@ pub fn encode_response(resp: &JobResponse, legacy: bool) -> String {
         }
     }
     Json::obj(fields).to_string()
+}
+
+/// One sweep row as it appears in the `rows` array — and, verbatim,
+/// as the `item` of a streamed partial frame (one encoder, so the two
+/// shapes cannot diverge).
+fn sweep_row_json(row: &SweepRow) -> Json {
+    Json::obj(vec![
+        ("n_procs", Json::Num(row.n_procs as f64)),
+        ("mu", Json::Num(row.mu)),
+        ("winner", Json::Str(row.winner.name().into())),
+        ("winner_waste", Json::Num(row.winner_waste)),
+        ("winner_period", Json::Num(row.winner_period)),
+    ])
+}
+
+// ---------------------------------------------------------------------------
+// Streaming frames (additive v2)
+// ---------------------------------------------------------------------------
+
+/// Encode one **partial frame** of a streamed response:
+/// `{"v":2,"ok":true,"frame":"partial","job":...,"seq":k,"item":{...}}`.
+/// `item` is one element of the final response's own array (a sweep
+/// row, a verify case) — byte-identical to how it appears there.
+pub fn encode_stream_partial(job: &str, seq: u64, item: Json) -> String {
+    Json::obj(vec![
+        ("v", Json::Num(PROTOCOL_VERSION)),
+        ("ok", Json::Bool(true)),
+        ("frame", Json::Str("partial".into())),
+        ("job", Json::Str(job.into())),
+        ("seq", Json::Num(seq as f64)),
+        ("item", item),
+    ])
+    .to_string()
+}
+
+/// The per-item payloads a response yields as partial frames before
+/// its final frame: sweep rows and verify cases. `None` marks the
+/// response non-streamable — the service answers it as a single
+/// ordinary line even when the caller asked to stream.
+pub fn stream_items(resp: &JobResponse) -> Option<(&'static str, Vec<Json>)> {
+    match resp {
+        JobResponse::Sweep(r) => Some(("sweep", r.rows.iter().map(sweep_row_json).collect())),
+        JobResponse::Verify(r) => {
+            let items = verify::report_fields(r)
+                .into_iter()
+                .find_map(|(k, v)| match (k, v) {
+                    ("cases", Json::Arr(xs)) => Some(xs),
+                    _ => None,
+                })
+                .unwrap_or_default();
+            Some(("verify", items))
+        }
+        _ => None,
+    }
+}
+
+/// One decoded line of a streamed exchange.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StreamEvent {
+    /// A partial frame: one item of the in-progress response.
+    Partial { job: String, seq: u64, item: Json },
+    /// The final frame (or a plain, unframed response — every
+    /// non-streamed line decodes as `Final { seq: None, .. }`).
+    Final { seq: Option<u64>, response: JobResponse },
+}
+
+/// Decode one line of a streamed exchange. Hostile frames (a `frame`
+/// marker that is not `"partial"`/`"final"`, a partial missing its
+/// `seq` or `item`) are structured errors, not panics.
+pub fn decode_stream_event(line: &str) -> Result<StreamEvent, ApiError> {
+    let v = parse(line).map_err(|e| ApiError::invalid_json(format!("{e:#}")))?;
+    match v.get("frame") {
+        Some(Json::Str(f)) if f == "partial" => {
+            let job = v
+                .get("job")
+                .and_then(Json::as_str)
+                .ok_or_else(|| ApiError::bad_request("partial frame missing 'job'"))?
+                .to_string();
+            let seq = opt_u64(&v, "seq")
+                .ok_or_else(|| ApiError::bad_request("partial frame missing 'seq'"))?;
+            let item = v
+                .get("item")
+                .cloned()
+                .ok_or_else(|| ApiError::bad_request("partial frame missing 'item'"))?;
+            Ok(StreamEvent::Partial { job, seq, item })
+        }
+        Some(Json::Str(f)) if f == "final" => Ok(StreamEvent::Final {
+            seq: opt_u64(&v, "seq"),
+            response: decode_response(line)?,
+        }),
+        Some(_) => Err(ApiError::bad_request(
+            "frame must be the string \"partial\" or \"final\"",
+        )),
+        None => Ok(StreamEvent::Final { seq: None, response: decode_response(line)? }),
+    }
 }
 
 /// The plan payload fields shared by both dialects — one builder so the
@@ -605,6 +777,10 @@ pub fn decode_response(line: &str) -> Result<JobResponse, ApiError> {
                 client_retries: u64_or(&v, "client_retries", 0),
                 batch_lanes_run: u64_or(&v, "batch_lanes_run", 0),
                 batch_lane_fallbacks: u64_or(&v, "batch_lane_fallbacks", 0),
+                cache_hits: u64_or(&v, "cache_hits", 0),
+                cache_misses: u64_or(&v, "cache_misses", 0),
+                cache_evictions: u64_or(&v, "cache_evictions", 0),
+                cache_entries: u64_or(&v, "cache_entries", 0),
                 batcher,
             }))
         }

@@ -1,0 +1,180 @@
+//! Bounded LRU memoization of pure job responses.
+//!
+//! Plan, BestPeriod and Sweep answers are pure functions of their
+//! canonicalized request ([`super::canon`]): the closed forms are
+//! deterministic arithmetic, and the Monte Carlo searches are seeded
+//! and keyed on every reproducibility knob (seed, reps, fold width).
+//! **Staleness is therefore impossible** — a cached response can never
+//! disagree with a recomputed one — so the only thing this cache
+//! manages is capacity. Eviction is plain least-recently-used.
+//!
+//! Shared across [`crate::api::Executor`] clones (one cache per
+//! service), panic-safe (a poisoned inner lock is taken over rather
+//! than propagated, like every other coordinator lock), and counted:
+//! hits, misses and evictions feed `ServiceStats` and the CLI.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::metrics::lock_unpoisoned;
+use crate::api::JobResponse;
+
+/// Point-in-time cache counters, as reported on `stats`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CacheSnapshot {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub entries: u64,
+}
+
+struct Entry {
+    resp: JobResponse,
+    /// Logical timestamp of the last touch; the smallest one is the
+    /// LRU victim.
+    used: u64,
+}
+
+struct Inner {
+    map: HashMap<String, Entry>,
+    /// Monotone logical clock for recency stamps.
+    tick: u64,
+}
+
+/// The memoized response store. `capacity == 0` disables it: every
+/// lookup misses without counting, every insert is dropped.
+pub struct PlanCache {
+    inner: Mutex<Inner>,
+    capacity: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl PlanCache {
+    pub fn new(capacity: usize) -> PlanCache {
+        PlanCache {
+            inner: Mutex::new(Inner { map: HashMap::new(), tick: 0 }),
+            capacity,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.capacity > 0
+    }
+
+    /// Look one key up, refreshing its recency on a hit. Counts the
+    /// hit or miss (a disabled cache counts nothing — it is absent,
+    /// not cold).
+    pub fn get(&self, key: &str) -> Option<JobResponse> {
+        if !self.enabled() {
+            return None;
+        }
+        let mut inner = lock_unpoisoned(&self.inner);
+        inner.tick += 1;
+        let tick = inner.tick;
+        match inner.map.get_mut(key) {
+            Some(e) => {
+                e.used = tick;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(e.resp.clone())
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert (or refresh) one entry, evicting the least-recently-used
+    /// entry if the capacity bound would be exceeded.
+    pub fn put(&self, key: String, resp: JobResponse) {
+        if !self.enabled() {
+            return;
+        }
+        let mut inner = lock_unpoisoned(&self.inner);
+        inner.tick += 1;
+        let tick = inner.tick;
+        if !inner.map.contains_key(&key) && inner.map.len() >= self.capacity {
+            // O(n) victim scan: evictions only happen on misses past
+            // capacity, and the map is small (hundreds of entries), so
+            // a scan beats the bookkeeping of an intrusive LRU list.
+            if let Some(victim) =
+                inner.map.iter().min_by_key(|(_, e)| e.used).map(|(k, _)| k.clone())
+            {
+                inner.map.remove(&victim);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        inner.map.insert(key, Entry { resp, used: tick });
+    }
+
+    pub fn snapshot(&self) -> CacheSnapshot {
+        let entries = lock_unpoisoned(&self.inner).map.len() as u64;
+        CacheSnapshot {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            entries,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn resp(tag: &str) -> JobResponse {
+        JobResponse::Error(crate::api::ApiError::bad_request(tag))
+    }
+
+    #[test]
+    fn hit_returns_the_inserted_response_and_counts() {
+        let c = PlanCache::new(4);
+        assert!(c.get("a").is_none());
+        c.put("a".into(), resp("a"));
+        assert_eq!(c.get("a"), Some(resp("a")));
+        let s = c.snapshot();
+        assert_eq!((s.hits, s.misses, s.evictions, s.entries), (1, 1, 0, 1));
+    }
+
+    #[test]
+    fn eviction_removes_the_least_recently_used_entry() {
+        let c = PlanCache::new(2);
+        c.put("a".into(), resp("a"));
+        c.put("b".into(), resp("b"));
+        // Touch "a" so "b" becomes the LRU victim.
+        assert!(c.get("a").is_some());
+        c.put("c".into(), resp("c"));
+        assert!(c.get("a").is_some(), "recently used survives");
+        assert!(c.get("b").is_none(), "LRU entry evicted");
+        assert!(c.get("c").is_some());
+        let s = c.snapshot();
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.entries, 2);
+    }
+
+    #[test]
+    fn refreshing_an_existing_key_does_not_evict() {
+        let c = PlanCache::new(2);
+        c.put("a".into(), resp("a"));
+        c.put("b".into(), resp("b"));
+        c.put("a".into(), resp("a2"));
+        let s = c.snapshot();
+        assert_eq!(s.evictions, 0);
+        assert_eq!(s.entries, 2);
+        assert_eq!(c.get("a"), Some(resp("a2")), "refresh replaces the payload");
+    }
+
+    #[test]
+    fn zero_capacity_disables_everything() {
+        let c = PlanCache::new(0);
+        c.put("a".into(), resp("a"));
+        assert!(c.get("a").is_none());
+        assert_eq!(c.snapshot(), CacheSnapshot::default());
+    }
+}

@@ -1,0 +1,317 @@
+//! Canonical cache keys for memoizable jobs.
+//!
+//! The plan cache ([`super::cache`]) memoizes responses to *pure*
+//! jobs — Plan, BestPeriod and Sweep are deterministic functions of
+//! their typed inputs. A cache is only as good as its key: two
+//! spellings of the same request ("weibull:0.70" vs "weibull:0.7", a
+//! platform spec with defaults elided vs spelled out, fields arriving
+//! in a different order) must collapse to one entry, and two requests
+//! that can produce different bytes must never share one.
+//!
+//! The rules that make that hold:
+//!
+//! * Keys are built from the **typed, validated, default-resolved**
+//!   request — never from raw wire text. Wire-level concerns (field
+//!   order, elided defaults, number spelling) are gone by the time a
+//!   key is built, because `FromStr`/`decode_request` already folded
+//!   them into one struct value.
+//! * Floats are printed with Rust's shortest-round-trip `Display`,
+//!   after normalizing `-0.0` to `0.0` — one spelling per value
+//!   ([`fmt_f64`]). NaN never reaches a key: every keyed field is
+//!   validated finite first.
+//! * Every field that can influence the response is in the key —
+//!   including the scenario seed and worker count for Monte Carlo
+//!   jobs (parallel means are only bit-reproducible per fold width),
+//!   but *excluding* them for closed-form jobs (Plan/Sweep ignore
+//!   seed, reps and workers entirely, so keying on them would only
+//!   split the keyspace).
+
+use crate::api::{BestPeriodJob, JobRequest, PlanJob, SweepJob};
+use crate::config::Scenario;
+use crate::dist::DistSpec;
+use crate::model::Capping;
+use crate::sim::platform::{PlatformSpec, RestartScope};
+use crate::strategies::PolicySpec;
+
+/// One canonical spelling per f64 value: shortest-round-trip
+/// `Display`, with `-0.0` folded into `0.0`. Callers guarantee
+/// finiteness (validated request fields only).
+pub fn fmt_f64(x: f64) -> String {
+    let x = if x == 0.0 { 0.0 } else { x };
+    format!("{x}")
+}
+
+/// Canonical distribution spec: same grammar as `Display`, but with
+/// the shape run through [`fmt_f64`].
+pub fn dist_key(d: &DistSpec) -> String {
+    match d {
+        DistSpec::Exp => "exp".into(),
+        DistSpec::Uniform => "uniform".into(),
+        DistSpec::Weibull { shape } => format!("weibull:{}", fmt_f64(*shape)),
+    }
+}
+
+/// Canonical policy spec. Strategy policies key on the strategy name;
+/// parameterized policies key on their normalized parameter, so
+/// `adaptive` (parsed default gain 1) and `adaptive:1.0` collide as
+/// they must.
+pub fn policy_key(p: &PolicySpec) -> String {
+    match p {
+        PolicySpec::Strategy(k) => format!("strategy:{}", k.name()),
+        PolicySpec::AdaptivePeriod { gain } => format!("adaptive:{}", fmt_f64(*gain)),
+        PolicySpec::RiskThreshold { kappa } => format!("risk:{}", fmt_f64(*kappa)),
+    }
+}
+
+/// Canonical platform spec: every field spelled out, defaults
+/// included, so `Display`'s default-elision ("nodes=4" vs
+/// "nodes=4,commit=0") cannot split the keyspace.
+pub fn platform_key(p: &PlatformSpec) -> String {
+    format!(
+        "nodes={};commit={};restart={};group={};spatial={};cascade={};delta={}",
+        p.nodes,
+        fmt_f64(p.commit),
+        match p.restart {
+            RestartScope::Full => "full",
+            RestartScope::Partial => "partial",
+        },
+        p.group,
+        fmt_f64(p.spatial),
+        fmt_f64(p.cascade),
+        fmt_f64(p.delta),
+    )
+}
+
+/// Canonical scenario: every field, fixed order. `false_pred_dist:
+/// None` keys as `-`, which cannot collide with a real dist spec.
+pub fn scenario_key(s: &Scenario) -> String {
+    format!(
+        "n={};mu_ind={};c={};d={};r={};alpha={};work={};rec={};prec={};win={};ef={};fd={};fpd={};mig={};seed={}",
+        s.platform.n_procs,
+        fmt_f64(s.platform.mu_ind),
+        fmt_f64(s.platform.c),
+        fmt_f64(s.platform.d),
+        fmt_f64(s.platform.r),
+        fmt_f64(s.alpha),
+        fmt_f64(s.work),
+        fmt_f64(s.predictor.recall),
+        fmt_f64(s.predictor.precision),
+        fmt_f64(s.predictor.window),
+        fmt_f64(s.predictor.ef),
+        dist_key(&s.fault_dist),
+        s.false_pred_dist.as_ref().map(|d| dist_key(d)).unwrap_or_else(|| "-".into()),
+        fmt_f64(s.migration),
+        s.seed,
+    )
+}
+
+fn capping_key(c: Capping) -> &'static str {
+    match c {
+        Capping::Capped => "capped",
+        Capping::Uncapped => "uncapped",
+    }
+}
+
+/// Key for a Plan job. Closed-form: the scenario seed is irrelevant to
+/// the answer, so it is *not* excluded — it lives inside
+/// [`scenario_key`] and excluding it there would special-case the
+/// format. Including it costs hit rate only when callers vary seeds on
+/// plan requests, which nothing in the stack does.
+pub fn plan_job_key(job: &PlanJob) -> String {
+    format!(
+        "plan|cap={}|pol={}|scn={}",
+        capping_key(job.capping),
+        job.policy.as_ref().map(policy_key).unwrap_or_else(|| "-".into()),
+        scenario_key(&job.scenario),
+    )
+}
+
+/// Key for a BestPeriod job, from **resolved** values: callers pass
+/// the reps/candidates/workers the executor actually uses (`0` → its
+/// defaults), so "default" and "explicitly the default" collide.
+/// Monte Carlo: reps, workers and the scenario seed all shape the
+/// result bits and are all keyed.
+pub fn best_period_job_key(
+    job: &BestPeriodJob,
+    reps: u64,
+    candidates: u64,
+    workers: usize,
+) -> String {
+    format!(
+        "best_period|strat={}|reps={reps}|cand={candidates}|workers={workers}|prune={}|pol={}|plat={}|scn={}",
+        job.strategy.name(),
+        u8::from(job.prune),
+        job.policy.as_ref().map(policy_key).unwrap_or_else(|| "-".into()),
+        job.platform.as_ref().map(platform_key).unwrap_or_else(|| "-".into()),
+        scenario_key(&job.scenario),
+    )
+}
+
+/// Key for a Sweep job: the base scenario plus the exact row list
+/// (order matters — rows come back in request order).
+pub fn sweep_job_key(job: &SweepJob) -> String {
+    let rows: Vec<String> = job.n_procs.iter().map(|n| n.to_string()).collect();
+    format!(
+        "sweep|cap={}|rows={}|scn={}",
+        capping_key(job.capping),
+        rows.join(","),
+        scenario_key(&job.base),
+    )
+}
+
+/// Key for any request the cache may serve; `None` marks the request
+/// uncacheable (side-effect-free but nondeterministic-by-design stats,
+/// or jobs whose cost profile makes caching pointless). The caller
+/// passes resolved defaults for the Monte Carlo knobs.
+pub fn request_key(
+    req: &JobRequest,
+    reps: u64,
+    candidates: u64,
+    workers: usize,
+) -> Option<String> {
+    match req {
+        JobRequest::Plan(job) => Some(plan_job_key(job)),
+        JobRequest::BestPeriod(job) => {
+            Some(best_period_job_key(job, reps, candidates, workers))
+        }
+        JobRequest::Sweep(job) => Some(sweep_job_key(job)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Predictor;
+    use crate::model::StrategyKind;
+
+    fn scenario() -> Scenario {
+        let mut s = Scenario::paper(4096, Predictor::windowed(0.85, 0.82, 300.0));
+        s.work = 2.0e5;
+        s
+    }
+
+    #[test]
+    fn negative_zero_folds_into_zero() {
+        assert_eq!(fmt_f64(-0.0), "0");
+        assert_eq!(fmt_f64(0.0), "0");
+        assert_ne!(fmt_f64(-1.0e-300), fmt_f64(0.0));
+    }
+
+    #[test]
+    fn float_spelling_is_shortest_round_trip() {
+        // The same bits always print the same way, and the print
+        // round-trips to the same bits.
+        for x in [0.1, 0.85, 1.0 / 3.0, 2.0e5, f64::MIN_POSITIVE] {
+            let printed = fmt_f64(x);
+            assert_eq!(printed.parse::<f64>().unwrap().to_bits(), x.to_bits(), "{printed}");
+        }
+    }
+
+    #[test]
+    fn dist_specs_key_identically_across_spellings() {
+        for (a, b) in [
+            ("weibull:0.7", "weibull:0.70"),
+            ("weibull:0.7", "weibull:.7"),
+            ("exp", "exponential"),
+        ] {
+            let ka = dist_key(&a.parse::<DistSpec>().unwrap());
+            let kb = dist_key(&b.parse::<DistSpec>().unwrap());
+            assert_eq!(ka, kb, "'{a}' vs '{b}'");
+        }
+        assert_ne!(
+            dist_key(&"weibull:0.7".parse::<DistSpec>().unwrap()),
+            dist_key(&"weibull:0.71".parse::<DistSpec>().unwrap()),
+        );
+    }
+
+    #[test]
+    fn policy_default_parameter_collides_with_explicit_default() {
+        let implicit = "adaptive".parse::<PolicySpec>().unwrap();
+        let explicit = "adaptive:1.0".parse::<PolicySpec>().unwrap();
+        assert_eq!(policy_key(&implicit), policy_key(&explicit));
+        assert_ne!(
+            policy_key(&implicit),
+            policy_key(&"adaptive:1.5".parse::<PolicySpec>().unwrap())
+        );
+        assert_ne!(
+            policy_key(&"risk:1".parse::<PolicySpec>().unwrap()),
+            policy_key(&"adaptive:1".parse::<PolicySpec>().unwrap()),
+            "same parameter, different family"
+        );
+    }
+
+    #[test]
+    fn platform_default_elision_cannot_split_the_keyspace() {
+        // "nodes=4" elides every default; the explicit spelling must
+        // key identically.
+        let elided = "nodes=4".parse::<PlatformSpec>().unwrap();
+        let explicit = "nodes=4,commit=0,group=1,spatial=0,cascade=0,delta=300"
+            .parse::<PlatformSpec>()
+            .unwrap();
+        assert_eq!(platform_key(&elided), platform_key(&explicit));
+        assert_ne!(
+            platform_key(&elided),
+            platform_key(&"nodes=4,commit=0.5".parse::<PlatformSpec>().unwrap())
+        );
+    }
+
+    #[test]
+    fn scenario_key_separates_every_field_it_prints() {
+        let base = scenario();
+        let k = scenario_key(&base);
+        // Mutating any keyed field must change the key.
+        let mut m = base.clone();
+        m.seed = base.seed + 1;
+        assert_ne!(scenario_key(&m), k, "seed");
+        let mut m = base.clone();
+        m.work += 1.0;
+        assert_ne!(scenario_key(&m), k, "work");
+        let mut m = base.clone();
+        m.predictor.recall = 0.86;
+        assert_ne!(scenario_key(&m), k, "recall");
+        let mut m = base.clone();
+        m.false_pred_dist = Some(DistSpec::Exp);
+        assert_ne!(scenario_key(&m), k, "false_pred_dist");
+    }
+
+    #[test]
+    fn resolved_defaults_collide_with_explicit_defaults() {
+        use crate::api::BestPeriodJob;
+        let mut implicit = BestPeriodJob::new(scenario(), StrategyKind::Young);
+        implicit.reps = 0; // "use the default"
+        let mut explicit = implicit.clone();
+        explicit.reps = 100;
+        // The executor resolves reps=0 to its default before keying;
+        // both calls arrive here with the same resolved values.
+        assert_eq!(
+            best_period_job_key(&implicit, 100, 16, 4),
+            best_period_job_key(&explicit, 100, 16, 4),
+        );
+        assert_ne!(
+            best_period_job_key(&implicit, 100, 16, 4),
+            best_period_job_key(&implicit, 100, 16, 8),
+            "fold width changes the bits, so it must change the key"
+        );
+    }
+
+    #[test]
+    fn request_key_covers_exactly_the_cacheable_ops() {
+        use crate::api::{PlanJob, SweepJob};
+        let s = scenario();
+        assert!(request_key(&JobRequest::Plan(PlanJob::new(s.clone())), 0, 0, 0).is_some());
+        assert!(request_key(
+            &JobRequest::Sweep(SweepJob {
+                base: s.clone(),
+                n_procs: vec![1 << 14, 1 << 16],
+                capping: Capping::Uncapped,
+            }),
+            0,
+            0,
+            0
+        )
+        .is_some());
+        assert!(request_key(&JobRequest::Ping, 0, 0, 0).is_none());
+        assert!(request_key(&JobRequest::Stats, 0, 0, 0).is_none());
+    }
+}

@@ -1,0 +1,453 @@
+//! Deterministic load-generator harness for the job service.
+//!
+//! [`generate`] expands a [`TraceSpec`] into a reproducible synthetic
+//! request trace — same seed, same bytes — and [`run`] replays it
+//! against a live service address from one client thread per tenant
+//! (windowed pipelining, so queues actually form and the stride
+//! scheduler has something to arbitrate). A second, sequential bench
+//! phase times the same set of expensive `best_period` requests cold
+//! and then cache-hot, which is what backs `BENCH_serve.json` and the
+//! cache speedup acceptance bound.
+//!
+//! The *trace* is deterministic; the *timings* of course are not. The
+//! invariants the harness checks (every request answered exactly once,
+//! identical request lines get byte-identical response lines, no
+//! tenant short-changed, cold/hot responses agree byte-for-byte) hold
+//! for any interleaving, which is what makes them testable across
+//! seeds in `tests/test_load.rs`.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use crate::api::{wire, BestPeriodJob, ErrorCode, JobRequest, JobResponse, PlanJob};
+use crate::config::{DistSpec, Predictor, Scenario};
+use crate::model::StrategyKind;
+use crate::rng::substream;
+
+/// A seeded synthetic workload description. Every field participates
+/// in the substream labels, so two specs differing in any knob
+/// produce unrelated (but individually reproducible) traces.
+#[derive(Debug, Clone)]
+pub struct TraceSpec {
+    /// Master seed for every substream.
+    pub seed: u64,
+    /// Total trace requests, split across tenants by weight.
+    pub requests: usize,
+    /// Tenant names with their traffic weights (also their fair-share
+    /// weights when the service is configured to match).
+    pub tenants: Vec<(String, u64)>,
+    /// Distinct-scenario pool size for repeated (cacheable) requests.
+    pub distinct: usize,
+    /// Probability a request replays a pool scenario instead of a
+    /// fresh one; the cache-hit fraction of the trace, roughly.
+    pub repeat_ratio: f64,
+    /// Pipelining window per tenant connection: this many requests go
+    /// on the wire before the first response is awaited.
+    pub window: usize,
+    /// Distinct `best_period` requests in the bench phase.
+    pub bench_distinct: usize,
+    /// Cache-hot replay rounds over the bench set.
+    pub bench_rounds: usize,
+    /// Replications per candidate for the bench `best_period` jobs —
+    /// the knob that makes the cold path expensive.
+    pub bench_reps: u64,
+    /// Period-grid size for the bench `best_period` jobs.
+    pub bench_candidates: u64,
+}
+
+impl Default for TraceSpec {
+    fn default() -> Self {
+        TraceSpec {
+            seed: 42,
+            requests: 96,
+            tenants: vec![("acme".into(), 3), ("beta".into(), 1), ("solo".into(), 1)],
+            distinct: 8,
+            repeat_ratio: 0.75,
+            window: 8,
+            bench_distinct: 6,
+            bench_rounds: 3,
+            bench_reps: 200,
+            bench_candidates: 8,
+        }
+    }
+}
+
+/// One trace element: the wire line (tenant-tagged v2 JSONL) and the
+/// tenant it belongs to.
+#[derive(Debug, Clone)]
+pub struct TraceRequest {
+    pub tenant: String,
+    pub line: String,
+}
+
+/// What one [`run`] observed. Counters are exact; timings are wall
+/// clock.
+#[derive(Debug, Clone, Default)]
+pub struct LoadReport {
+    /// Trace requests sent.
+    pub requests: u64,
+    /// Response lines received (the exactly-once invariant is
+    /// `answered == requests` plus per-connection ordering).
+    pub answered: u64,
+    /// Responses that decoded to an error (any code).
+    pub errors: u64,
+    /// The subset of `errors` that were `overloaded` rejections.
+    pub overloaded: u64,
+    /// Identical request lines that received differing response
+    /// bytes — must be 0: responses are pure and the cache is pinned
+    /// bit-identical.
+    pub mismatches: u64,
+    /// Responses received per tenant, in `TraceSpec::tenants` order.
+    pub per_tenant: Vec<(String, u64)>,
+    pub elapsed_s: f64,
+    pub trace_per_s: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    /// Bench phase: first pass over the distinct set (cache-cold).
+    pub cold_s: f64,
+    pub cold_per_s: f64,
+    /// Bench phase: replay rounds over the same set (cache-hot).
+    pub hit_s: f64,
+    pub hit_per_s: f64,
+    /// `hit_per_s / cold_per_s` — the headline cache win.
+    pub hit_speedup: f64,
+    /// Every hot response byte-identical to its cold twin.
+    pub bench_bit_identical: bool,
+    /// Service-side cache counter deltas across the whole run.
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+/// Draw one synthetic planning scenario. Exponential failure law so
+/// the `plan` answer is pure closed-form arithmetic — cheap, exact,
+/// and byte-reproducible.
+fn scenario(seed: u64, label: &str, index: u64) -> Scenario {
+    let mut g = substream(seed, label, index);
+    let n_procs = 1u64 << (14 + g.next_u64() % 6);
+    let p = 0.5 + 0.4 * g.next_f64();
+    let r = 0.5 + 0.4 * g.next_f64();
+    let mut s = Scenario::paper(n_procs, Predictor::exact(p, r));
+    s.fault_dist = DistSpec::Exp;
+    s.work = 1.0e5 * (1.0 + 9.0 * g.next_f64());
+    s.seed = g.next_u64();
+    s
+}
+
+fn tagged(req: &JobRequest, tenant: &str) -> String {
+    let meta =
+        wire::RequestMeta { tenant: Some(tenant.to_string()), stream: false };
+    wire::encode_request_tagged(req, &meta)
+}
+
+/// Expand the spec into its trace: a pure function of the spec.
+pub fn generate(spec: &TraceSpec) -> Vec<TraceRequest> {
+    let total_weight: u64 = spec.tenants.iter().map(|&(_, w)| w.max(1)).sum();
+    let pool: Vec<Scenario> = (0..spec.distinct.max(1) as u64)
+        .map(|i| scenario(spec.seed, "loadgen-pool", i))
+        .collect();
+    (0..spec.requests as u64)
+        .map(|i| {
+            let mut g = substream(spec.seed, "loadgen-trace", i);
+            let mut pick = g.next_u64() % total_weight.max(1);
+            let mut tenant = &spec.tenants[0].0;
+            for (name, w) in &spec.tenants {
+                let w = (*w).max(1);
+                if pick < w {
+                    tenant = name;
+                    break;
+                }
+                pick -= w;
+            }
+            let s = if g.next_f64() < spec.repeat_ratio {
+                pool[(g.next_u64() % pool.len() as u64) as usize].clone()
+            } else {
+                scenario(spec.seed, "loadgen-fresh", i)
+            };
+            let req = JobRequest::Plan(PlanJob::new(s));
+            TraceRequest { tenant: tenant.clone(), line: tagged(&req, tenant) }
+        })
+        .collect()
+}
+
+/// The bench phase's distinct `best_period` lines: Monte Carlo period
+/// searches, expensive enough cold that the cache-hot replay measures
+/// the service overhead alone.
+pub fn bench_lines(spec: &TraceSpec) -> Vec<String> {
+    (0..spec.bench_distinct.max(1) as u64)
+        .map(|i| {
+            let mut job = BestPeriodJob::new(
+                scenario(spec.seed, "loadgen-bench", i),
+                StrategyKind::Young,
+            );
+            job.reps = spec.bench_reps;
+            job.candidates = spec.bench_candidates;
+            tagged(&JobRequest::BestPeriod(job), "bench")
+        })
+        .collect()
+}
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: &str) -> anyhow::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+        let writer = stream.try_clone()?;
+        Ok(Client { reader: BufReader::new(stream), writer })
+    }
+
+    fn send(&mut self, line: &str) -> anyhow::Result<()> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        Ok(())
+    }
+
+    fn recv(&mut self) -> anyhow::Result<String> {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line)?;
+        anyhow::ensure!(n > 0, "server closed the connection");
+        Ok(line.trim_end().to_string())
+    }
+
+    fn call(&mut self, line: &str) -> anyhow::Result<String> {
+        self.send(line)?;
+        self.recv()
+    }
+}
+
+/// Replay one tenant's slice of the trace over one connection with
+/// windowed pipelining. Returns `(request line, response line,
+/// latency)` per request, in order.
+fn replay_tenant(
+    addr: &str,
+    lines: &[String],
+    window: usize,
+) -> anyhow::Result<Vec<(String, String, f64)>> {
+    let mut client = Client::connect(addr)?;
+    let mut out = Vec::with_capacity(lines.len());
+    for chunk in lines.chunks(window.max(1)) {
+        let mut sent_at = Vec::with_capacity(chunk.len());
+        for line in chunk {
+            client.send(line)?;
+            sent_at.push(Instant::now());
+        }
+        for (i, line) in chunk.iter().enumerate() {
+            let resp = client.recv()?;
+            let ms = sent_at[i].elapsed().as_secs_f64() * 1e3;
+            out.push((line.clone(), resp, ms));
+        }
+    }
+    Ok(out)
+}
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Fetch the service's cache counters via a `stats` round trip.
+fn cache_counters(client: &mut Client) -> anyhow::Result<(u64, u64)> {
+    let resp = client.call(&wire::encode_request(&JobRequest::Stats))?;
+    match wire::decode_stream_event(&resp) {
+        Ok(wire::StreamEvent::Final { response: JobResponse::Stats(s), .. }) => {
+            Ok((s.cache_hits, s.cache_misses))
+        }
+        other => anyhow::bail!("stats probe got a non-stats response: {other:?}"),
+    }
+}
+
+fn is_error(resp: &str) -> (bool, bool) {
+    match wire::decode_stream_event(resp) {
+        Ok(wire::StreamEvent::Final { response: JobResponse::Error(e), .. }) => {
+            (true, e.code == ErrorCode::Overloaded)
+        }
+        _ => (false, false),
+    }
+}
+
+/// Generate the trace, replay it, run the cold/hot bench phase, and
+/// report. `addr` must be a live service (usually an in-process
+/// [`super::serve`] bound to port 0).
+pub fn run(addr: &str, spec: &TraceSpec) -> anyhow::Result<LoadReport> {
+    let trace = generate(spec);
+    let mut per_tenant_lines: Vec<(String, Vec<String>)> =
+        spec.tenants.iter().map(|(name, _)| (name.clone(), Vec::new())).collect();
+    for tr in &trace {
+        if let Some((_, lines)) =
+            per_tenant_lines.iter_mut().find(|(name, _)| *name == tr.tenant)
+        {
+            lines.push(tr.line.clone());
+        }
+    }
+
+    let mut probe = Client::connect(addr)?;
+    let (hits0, misses0) = cache_counters(&mut probe)?;
+
+    let started = Instant::now();
+    let mut results: Vec<Vec<(String, String, f64)>> = Vec::new();
+    std::thread::scope(|scope| -> anyhow::Result<()> {
+        let mut handles = Vec::new();
+        for (_, lines) in &per_tenant_lines {
+            let window = spec.window;
+            handles.push(scope.spawn(move || replay_tenant(addr, lines, window)));
+        }
+        for h in handles {
+            results.push(h.join().expect("tenant replay thread panicked")?);
+        }
+        Ok(())
+    })?;
+    let elapsed_s = started.elapsed().as_secs_f64().max(1e-9);
+
+    let mut report = LoadReport {
+        requests: trace.len() as u64,
+        elapsed_s,
+        ..LoadReport::default()
+    };
+    let mut latencies: Vec<f64> = Vec::new();
+    let mut canonical: HashMap<&str, &str> = HashMap::new();
+    for (tenant_result, (name, _)) in results.iter().zip(&per_tenant_lines) {
+        report.per_tenant.push((name.clone(), tenant_result.len() as u64));
+        for (line, resp, ms) in tenant_result {
+            report.answered += 1;
+            latencies.push(*ms);
+            let (err, over) = is_error(resp);
+            report.errors += err as u64;
+            report.overloaded += over as u64;
+            match canonical.get(line.as_str()) {
+                Some(first) if *first != resp => report.mismatches += 1,
+                Some(_) => {}
+                None => {
+                    canonical.insert(line, resp);
+                }
+            }
+        }
+    }
+    latencies.sort_by(|a, b| a.total_cmp(b));
+    report.trace_per_s = report.answered as f64 / elapsed_s;
+    report.p50_ms = percentile(&latencies, 0.50);
+    report.p95_ms = percentile(&latencies, 0.95);
+    report.p99_ms = percentile(&latencies, 0.99);
+
+    // Bench phase: sequential, one connection, cold pass then hot
+    // replay rounds over byte-identical request lines.
+    let bench = bench_lines(spec);
+    let mut client = Client::connect(addr)?;
+    let cold_started = Instant::now();
+    let mut cold_resps = Vec::with_capacity(bench.len());
+    for line in &bench {
+        cold_resps.push(client.call(line)?);
+    }
+    report.cold_s = cold_started.elapsed().as_secs_f64().max(1e-9);
+    report.cold_per_s = bench.len() as f64 / report.cold_s;
+
+    report.bench_bit_identical = true;
+    let hot_started = Instant::now();
+    for _ in 0..spec.bench_rounds.max(1) {
+        for (line, cold) in bench.iter().zip(&cold_resps) {
+            let hot = client.call(line)?;
+            if hot != *cold {
+                report.bench_bit_identical = false;
+            }
+        }
+    }
+    report.hit_s = hot_started.elapsed().as_secs_f64().max(1e-9);
+    report.hit_per_s =
+        (bench.len() * spec.bench_rounds.max(1)) as f64 / report.hit_s;
+    report.hit_speedup = report.hit_per_s / report.cold_per_s.max(1e-9);
+
+    let (hits1, misses1) = cache_counters(&mut probe)?;
+    report.cache_hits = hits1.saturating_sub(hits0);
+    report.cache_misses = misses1.saturating_sub(misses0);
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn the_trace_is_a_pure_function_of_the_spec() {
+        let spec = TraceSpec::default();
+        let a = generate(&spec);
+        let b = generate(&spec);
+        assert_eq!(a.len(), spec.requests);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.tenant, y.tenant);
+            assert_eq!(x.line, y.line);
+        }
+        let c = generate(&TraceSpec { seed: 43, ..TraceSpec::default() });
+        assert!(
+            a.iter().zip(&c).any(|(x, y)| x.line != y.line),
+            "different seeds must produce different traces"
+        );
+    }
+
+    #[test]
+    fn every_trace_line_is_a_valid_tenant_tagged_request() {
+        let spec = TraceSpec { requests: 24, ..TraceSpec::default() };
+        for tr in generate(&spec) {
+            let (decoded, meta) = wire::decode_request_meta(&tr.line)
+                .expect("generated lines must decode");
+            assert!(!decoded.legacy, "the harness speaks v2");
+            assert_eq!(meta.tenant.as_deref(), Some(tr.tenant.as_str()));
+            assert!(matches!(decoded.request, JobRequest::Plan(_)));
+        }
+    }
+
+    #[test]
+    fn repeats_reuse_pool_scenarios_byte_for_byte() {
+        // With repeat_ratio 1.0 every line comes from the small pool,
+        // so at most `distinct` unique lines exist per tenant.
+        let spec = TraceSpec {
+            requests: 64,
+            distinct: 4,
+            repeat_ratio: 1.0,
+            ..TraceSpec::default()
+        };
+        let trace = generate(&spec);
+        for (tenant, _) in &spec.tenants {
+            let unique: std::collections::BTreeSet<&str> = trace
+                .iter()
+                .filter(|t| &t.tenant == tenant)
+                .map(|t| t.line.as_str())
+                .collect();
+            assert!(
+                unique.len() <= spec.distinct,
+                "tenant {tenant} saw {} unique lines from a pool of {}",
+                unique.len(),
+                spec.distinct
+            );
+        }
+    }
+
+    #[test]
+    fn bench_lines_are_expensive_distinct_best_period_jobs() {
+        let spec = TraceSpec::default();
+        let lines = bench_lines(&spec);
+        assert_eq!(lines.len(), spec.bench_distinct);
+        let unique: std::collections::BTreeSet<&str> =
+            lines.iter().map(|s| s.as_str()).collect();
+        assert_eq!(unique.len(), lines.len(), "bench jobs must be distinct");
+        for line in &lines {
+            let (decoded, meta) = wire::decode_request_meta(line).unwrap();
+            assert_eq!(meta.tenant.as_deref(), Some("bench"));
+            match decoded.request {
+                JobRequest::BestPeriod(job) => {
+                    assert_eq!(job.reps, spec.bench_reps);
+                    assert_eq!(job.candidates, spec.bench_candidates);
+                }
+                other => panic!("expected best_period, got {other:?}"),
+            }
+        }
+    }
+}

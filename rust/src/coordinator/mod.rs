@@ -2,14 +2,24 @@
 //! batching of planning requests onto the PJRT executable, and the
 //! TCP/JSONL job service (protocol v2 via [`crate::api`]; the v1
 //! planner dialect lives on in [`protocol`] behind an adapter).
+//!
+//! The service layer is an async multiplexed server ([`service`]): one
+//! event loop owns every connection, a stride scheduler spreads the
+//! executor pool fairly across tenants, and a bounded LRU ([`cache`])
+//! memoizes the pure job responses under canonical keys ([`canon`]).
 
 mod batcher;
+pub mod cache;
+pub mod canon;
+pub mod loadgen;
 mod metrics;
 mod pool;
 pub mod protocol;
 mod service;
 
 pub use batcher::{Batcher, BatcherConfig, BatcherStats};
+pub use cache::{CacheSnapshot, PlanCache};
+pub use loadgen::{LoadReport, TraceSpec};
 pub use metrics::{bank_snapshot, Metrics};
 pub use pool::{
     available_workers, run_parallel, run_parallel_fold, try_run_parallel, try_run_parallel_fold,

@@ -1,30 +1,51 @@
-//! The job service: a TCP listener speaking the JSONL job protocol
-//! (v2, with the v1 planner dialect adapted transparently), one thread
-//! per connection, every request dispatched through a shared
-//! [`Executor`] — the same entry points the CLI and the experiment
-//! harness use in-process.
+//! The job service: an async multiplexed TCP server speaking the JSONL
+//! job protocol (v2, with the v1 planner dialect adapted
+//! transparently). One event-loop thread owns the nonblocking listener
+//! and every connection; a small pool of executor lanes drains
+//! per-tenant job queues under stride (weighted-fair) scheduling;
+//! every request is dispatched through a shared [`Executor`] — the
+//! same entry points the CLI and the experiment harness use
+//! in-process.
 //!
 //! The service practices what the paper preaches about fault
 //! tolerance:
 //!
-//! * **Admission control** — connection and in-flight-job gates shed
-//!   load with a structured `overloaded` error (carrying
-//!   `retry_after_ms`) instead of queueing without bound.
+//! * **Admission control** — connection, in-flight and per-tenant
+//!   queue gates shed load with a structured `overloaded` error
+//!   (carrying `retry_after_ms`) instead of queueing without bound.
+//! * **Fair scheduling** — queued jobs are drained by stride
+//!   scheduling across tenants ([`Scheduler`]): each tenant advances a
+//!   virtual "pass" by `STRIDE_ONE / weight` per dispatch, the minimum
+//!   pass runs next, and a global floor stops a returning idle tenant
+//!   from claiming the shares it never used. Deterministic, so the
+//!   fairness property is unit-tested without timing.
 //! * **Request guards** — a per-request deadline rides the executor's
 //!   [`crate::util::cancel::CancelToken`]; oversized lines are
 //!   rejected without decoding; idle connections time out.
 //! * **Panic isolation** — `catch_unwind` at the request and
-//!   connection boundaries turns a poisoned request into an `internal`
-//!   error on that one response, never a dead service.
+//!   per-connection line/flush boundaries turns a poisoned request
+//!   into an `internal` error on that one response (or one dead
+//!   connection), never a dead service.
 //! * **Graceful drain** — [`ServiceHandle::stop`] stops accepting,
-//!   lets in-flight jobs finish up to a drain deadline, then cancels
-//!   cooperatively and joins every connection thread.
+//!   lets admitted jobs finish and their responses flush up to a drain
+//!   deadline, then cancels cooperatively and joins every thread. No
+//!   loopback nudge: the event loop polls its stop flag, so stopping a
+//!   zero-connection service is immediate and leak-free.
+//!
+//! Streaming: a v2 request carrying `"stream": true` gets its
+//! `sweep`/`verify` response as additive partial frames (one per
+//! row/case) followed by a final frame — see `wire::stream_items` and
+//! docs/PROTOCOL.md. Non-streamed responses are byte-identical to the
+//! thread-per-connection era.
 
-use std::io::{BufRead, BufReader, Write};
-use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
+use std::any::Any;
+use std::collections::{BTreeMap, VecDeque};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use super::metrics::lock_unpoisoned;
@@ -32,15 +53,23 @@ use crate::api::{wire, ApiError, ErrorCode, Executor, JobRequest, JobResponse};
 use crate::util::cancel::CancelToken;
 use crate::util::json::Json;
 
-/// How often blocked reads wake to check the stop flags and the idle
-/// budget. Bounds both shutdown latency and idle-check granularity.
-const POLL_INTERVAL: Duration = Duration::from_millis(100);
+/// Event-loop tick: how long the loop sleeps when no socket made
+/// progress. Bounds stop latency and completion-delivery latency.
+const TICK: Duration = Duration::from_millis(1);
 
 /// Reads hard-close past this much buffered line data: beyond it there
 /// is no trustworthy message boundary to resync on. Lines between
 /// [`wire::MAX_LINE_BYTES`] and this bound still get a structured
 /// `bad_request` and a surviving connection.
 const HARD_LINE_LIMIT: usize = wire::MAX_LINE_BYTES * 4;
+
+/// How long a shed (over-`max_conns`) connection is given to present
+/// its first line, so the rejection can speak the caller's dialect.
+const SHED_READ_BUDGET: Duration = Duration::from_secs(1);
+
+/// One stride unit: a tenant's pass advances by `STRIDE_ONE / weight`
+/// per dispatched job, so weight-w tenants run w times as often.
+const STRIDE_ONE: u64 = 1 << 32;
 
 #[derive(Debug, Clone)]
 pub struct ServiceConfig {
@@ -50,19 +79,30 @@ pub struct ServiceConfig {
     /// answered `overloaded` and closed.
     pub max_conns: usize,
     /// Job gate: requests (other than `ping`/`stats`) past this many
-    /// concurrently executing jobs are answered `overloaded`; the
-    /// connection survives.
+    /// admitted (queued + executing) jobs are answered `overloaded`;
+    /// the connection survives.
     pub max_inflight: usize,
     /// Per-request wall-clock budget threaded into the executor.
     /// `None` disables the guard.
     pub deadline: Option<Duration>,
-    /// How long [`ServiceHandle::stop`] waits for in-flight jobs
+    /// How long [`ServiceHandle::stop`] waits for admitted jobs
     /// before cancelling them cooperatively.
     pub drain: Duration,
     /// Connections with no traffic for this long are closed.
     pub idle_timeout: Duration,
     /// Retry hint carried by `overloaded` responses.
     pub retry_after_ms: u64,
+    /// Per-tenant bound on *queued* (admitted, not yet executing)
+    /// jobs; one tenant's burst sheds at this depth instead of
+    /// consuming the whole global `max_inflight` budget.
+    pub queue_depth: usize,
+    /// Executor lanes draining the tenant queues. `0` (the default)
+    /// means one lane per `max_inflight` slot — the same concurrency
+    /// as the old thread-per-connection dispatch.
+    pub sched_workers: usize,
+    /// Fair-share weights by tenant name; unlisted tenants (and the
+    /// anonymous tenant `""`) weigh 1.
+    pub tenant_weights: Vec<(String, u64)>,
 }
 
 impl Default for ServiceConfig {
@@ -75,50 +115,165 @@ impl Default for ServiceConfig {
             drain: Duration::from_secs(5),
             idle_timeout: Duration::from_secs(300),
             retry_after_ms: 250,
+            queue_depth: 32,
+            sched_workers: 0,
+            tenant_weights: Vec::new(),
         }
     }
 }
 
-/// State shared by the accept loop, every connection thread and the
-/// handle.
+// ---------------------------------------------------------------------------
+// Stride scheduler
+// ---------------------------------------------------------------------------
+
+/// One admitted job, queued until an executor lane picks it up.
+struct QueuedJob {
+    conn: u64,
+    slot: u64,
+    request: JobRequest,
+    legacy: bool,
+    stream: bool,
+}
+
+struct TenantQueue {
+    q: VecDeque<QueuedJob>,
+    /// Virtual time: advances by `stride` per dispatched job.
+    pass: u64,
+    stride: u64,
+}
+
+#[derive(Default)]
+struct SchedState {
+    tenants: BTreeMap<String, TenantQueue>,
+    queued: usize,
+    running: usize,
+    /// The largest pass ever dispatched — the scheduler's virtual
+    /// clock. A tenant going from idle to busy starts at this floor,
+    /// so idle time is forfeited, not banked.
+    floor: u64,
+    shutdown: bool,
+}
+
+/// Weighted-fair job queue: stride scheduling over per-tenant FIFOs.
+/// Deterministic — the dispatch order is a pure function of the
+/// enqueue order and the weights — which is what makes the fairness
+/// tests below exact rather than statistical.
+struct Scheduler {
+    state: Mutex<SchedState>,
+    cv: Condvar,
+    weights: Vec<(String, u64)>,
+}
+
+impl Scheduler {
+    fn new(weights: Vec<(String, u64)>) -> Scheduler {
+        Scheduler { state: Mutex::new(SchedState::default()), cv: Condvar::new(), weights }
+    }
+
+    fn weight(&self, tenant: &str) -> u64 {
+        self.weights
+            .iter()
+            .find(|(name, _)| name == tenant)
+            .map(|&(_, w)| w)
+            .filter(|&w| w > 0)
+            .unwrap_or(1)
+    }
+
+    /// Admitted jobs: queued + executing. The global admission gate.
+    fn load(&self) -> usize {
+        let st = lock_unpoisoned(&self.state);
+        st.queued + st.running
+    }
+
+    /// Queued (not yet executing) jobs for one tenant — the per-tenant
+    /// admission gate.
+    fn tenant_depth(&self, tenant: &str) -> usize {
+        lock_unpoisoned(&self.state).tenants.get(tenant).map_or(0, |t| t.q.len())
+    }
+
+    fn enqueue(&self, tenant: &str, job: QueuedJob) {
+        let stride = STRIDE_ONE / self.weight(tenant);
+        let mut st = lock_unpoisoned(&self.state);
+        let floor = st.floor;
+        let tq = st
+            .tenants
+            .entry(tenant.to_string())
+            .or_insert_with(|| TenantQueue { q: VecDeque::new(), pass: 0, stride });
+        tq.stride = stride;
+        if tq.q.is_empty() {
+            // Re-entering the run queue: jump to the virtual clock so
+            // accumulated idle time doesn't turn into a monopoly.
+            tq.pass = tq.pass.max(floor);
+        }
+        tq.q.push_back(job);
+        st.queued += 1;
+        self.cv.notify_one();
+    }
+
+    /// Block until a job is runnable (or shutdown): minimum pass wins,
+    /// ties break to the lexicographically smallest tenant name.
+    fn next(&self) -> Option<QueuedJob> {
+        let mut st = lock_unpoisoned(&self.state);
+        loop {
+            if st.shutdown {
+                return None;
+            }
+            let mut pick: Option<(&String, u64)> = None;
+            for (name, tq) in st.tenants.iter() {
+                if tq.q.is_empty() {
+                    continue;
+                }
+                // Strict `<` keeps the first (smallest-name) tenant on
+                // a pass tie — BTreeMap iterates in key order.
+                if pick.map_or(true, |(_, pass)| tq.pass < pass) {
+                    pick = Some((name, tq.pass));
+                }
+            }
+            if let Some((name, _)) = pick {
+                let name = name.clone();
+                let tq = st.tenants.get_mut(&name).expect("picked tenant exists");
+                let job = tq.q.pop_front().expect("picked tenant has a job");
+                let pass = tq.pass;
+                tq.pass = tq.pass.saturating_add(tq.stride);
+                st.floor = st.floor.max(pass);
+                st.queued -= 1;
+                st.running += 1;
+                return Some(job);
+            }
+            st = self.cv.wait(st).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+
+    fn done(&self) {
+        let mut st = lock_unpoisoned(&self.state);
+        st.running = st.running.saturating_sub(1);
+    }
+
+    fn shutdown(&self) {
+        lock_unpoisoned(&self.state).shutdown = true;
+        self.cv.notify_all();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared state + handle
+// ---------------------------------------------------------------------------
+
+/// State shared by the event loop, the executor lanes and the handle.
 struct Shared {
-    /// Graceful-stop flag: stop accepting, close idle connections.
+    /// Graceful-stop flag: stop accepting, drain admitted jobs.
     stop: AtomicBool,
     /// Hard-cancel flag, set once the drain deadline passes; also the
     /// cancel flag threaded into executing jobs.
     hard_cancel: Arc<AtomicBool>,
-    /// Live connection threads (admission gate).
-    active: AtomicUsize,
-    /// Currently executing gated jobs (drain + in-flight gate).
-    inflight: AtomicUsize,
-    /// Connection thread handles, joined on stop.
-    conns: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    sched: Scheduler,
     cfg: ServiceConfig,
 }
 
-impl Shared {
-    fn try_admit(&self, gate: &AtomicUsize, limit: usize) -> bool {
-        gate.fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| {
-            (n < limit).then_some(n + 1)
-        })
-        .is_ok()
-    }
-
-    fn register(&self, handle: std::thread::JoinHandle<()>) {
-        let mut conns = lock_unpoisoned(&self.conns);
-        conns.retain(|h| !h.is_finished());
-        conns.push(handle);
-    }
-}
-
-/// Decrements a [`Shared`] counter on drop — panic-safe accounting for
-/// connections and in-flight jobs.
-struct CountGuard<'a>(&'a AtomicUsize);
-
-impl Drop for CountGuard<'_> {
-    fn drop(&mut self) {
-        self.0.fetch_sub(1, Ordering::SeqCst);
-    }
+/// A finished job's response lines, headed back to its connection.
+struct Completion {
+    conn: u64,
+    slot: u64,
+    lines: Vec<String>,
 }
 
 /// Running service handle: local address + shutdown control.
@@ -126,98 +281,58 @@ pub struct ServiceHandle {
     pub addr: SocketAddr,
     shared: Arc<Shared>,
     join: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl ServiceHandle {
-    /// Graceful drain: stop accepting, let in-flight jobs finish up to
-    /// the configured drain deadline, then cancel cooperatively and
-    /// join every connection thread.
+    /// Graceful drain: stop accepting, let admitted jobs finish and
+    /// their responses flush up to the configured drain deadline, then
+    /// cancel cooperatively and join every thread. The event loop
+    /// polls the stop flag each tick, so no nudge connection is needed
+    /// and a zero-connection stop returns immediately.
     pub fn stop(mut self) {
         self.shared.stop.store(true, Ordering::SeqCst);
-        // Nudge the accept loop with a dummy connection. The bound
-        // address may be unconnectable (0.0.0.0 / ::), so aim the nudge
-        // at the loopback of the same family, same port.
-        let mut nudge = self.addr;
-        if nudge.ip().is_unspecified() {
-            nudge.set_ip(match nudge.ip() {
-                IpAddr::V4(_) => IpAddr::V4(Ipv4Addr::LOCALHOST),
-                IpAddr::V6(_) => IpAddr::V6(Ipv6Addr::LOCALHOST),
-            });
-        }
-        let _ = TcpStream::connect_timeout(&nudge, Duration::from_millis(250));
         if let Some(j) = self.join.take() {
             let _ = j.join();
         }
-        let deadline = Instant::now() + self.shared.cfg.drain;
-        while self.shared.inflight.load(Ordering::SeqCst) > 0 && Instant::now() < deadline {
-            std::thread::sleep(Duration::from_millis(5));
-        }
-        self.shared.hard_cancel.store(true, Ordering::SeqCst);
-        let handles = std::mem::take(&mut *lock_unpoisoned(&self.shared.conns));
-        for h in handles {
+        self.shared.sched.shutdown();
+        for h in self.workers.drain(..) {
             let _ = h.join();
         }
     }
 }
 
 /// Start serving in background threads. The executor (its batcher
-/// handle and metrics) is shared across connections.
+/// handle, metrics and plan cache) is shared across every lane.
 pub fn serve(executor: Executor, cfg: ServiceConfig) -> anyhow::Result<ServiceHandle> {
     let listener = TcpListener::bind(&cfg.addr)?;
+    listener.set_nonblocking(true)?;
     let addr = listener.local_addr()?;
+    let lanes = if cfg.sched_workers == 0 { cfg.max_inflight.max(1) } else { cfg.sched_workers };
     let shared = Arc::new(Shared {
         stop: AtomicBool::new(false),
         hard_cancel: Arc::new(AtomicBool::new(false)),
-        active: AtomicUsize::new(0),
-        inflight: AtomicUsize::new(0),
-        conns: Mutex::new(Vec::new()),
+        sched: Scheduler::new(cfg.tenant_weights.clone()),
         cfg,
     });
+    let (tx, rx) = std::sync::mpsc::channel::<Completion>();
+    let mut workers = Vec::with_capacity(lanes);
+    for i in 0..lanes {
+        let shared = Arc::clone(&shared);
+        let executor = executor.clone();
+        let tx = tx.clone();
+        workers.push(
+            std::thread::Builder::new()
+                .name(format!("ckptfp-exec-{i}"))
+                .spawn(move || worker_loop(&shared, &executor, &tx))?,
+        );
+    }
+    drop(tx);
     let shared2 = Arc::clone(&shared);
-    let join = std::thread::Builder::new().name("ckptfp-accept".into()).spawn(move || {
-        for conn in listener.incoming() {
-            if shared2.stop.load(Ordering::SeqCst) {
-                break;
-            }
-            let stream = match conn {
-                Ok(s) => s,
-                Err(_) => break,
-            };
-            let executor = executor.clone();
-            let shared3 = Arc::clone(&shared2);
-            if shared2.try_admit(&shared2.active, shared2.cfg.max_conns) {
-                let spawned = std::thread::Builder::new().name("ckptfp-conn".into()).spawn(
-                    move || {
-                        let _guard = CountGuard(&shared3.active);
-                        let caught = catch_unwind(AssertUnwindSafe(|| {
-                            handle_connection(stream, &executor, &shared3)
-                        }));
-                        if caught.is_err() {
-                            executor.note_panic_contained();
-                        }
-                    },
-                );
-                match spawned {
-                    Ok(h) => shared2.register(h),
-                    // The closure never ran: undo the admission.
-                    Err(_) => {
-                        shared2.active.fetch_sub(1, Ordering::SeqCst);
-                    }
-                }
-            } else {
-                // Over the connection gate: a short-lived thread reads
-                // one line (to answer in its dialect) and sheds the
-                // load with a structured `overloaded`.
-                let spawned = std::thread::Builder::new().name("ckptfp-shed".into()).spawn(
-                    move || reject_connection(stream, &executor, &shared3),
-                );
-                if let Ok(h) = spawned {
-                    shared2.register(h);
-                }
-            }
-        }
-    })?;
-    Ok(ServiceHandle { addr, shared, join: Some(join) })
+    let join = std::thread::Builder::new()
+        .name("ckptfp-service".into())
+        .spawn(move || event_loop(listener, &executor, &shared2, &rx))?;
+    Ok(ServiceHandle { addr, shared, join: Some(join), workers })
 }
 
 fn overloaded_error(cfg: &ServiceConfig, what: &str, limit: usize) -> ApiError {
@@ -230,196 +345,473 @@ fn overloaded_error(cfg: &ServiceConfig, what: &str, limit: usize) -> ApiError {
     )
 }
 
-/// Shed one over-limit connection: read a single line (briefly) so the
-/// rejection can speak the caller's dialect, answer `overloaded`,
-/// close.
-fn reject_connection(stream: TcpStream, executor: &Executor, shared: &Shared) {
-    executor.note_overloaded();
-    let _ = stream.set_read_timeout(Some(Duration::from_secs(1)));
-    let mut writer = match stream.try_clone() {
-        Ok(w) => w,
-        Err(_) => return,
-    };
-    let mut reader = BufReader::new(stream);
-    let mut buf = Vec::new();
-    let legacy = match reader.read_until(b'\n', &mut buf) {
-        Ok(n) if n > 0 => wire::line_is_legacy(&String::from_utf8_lossy(&buf)),
-        _ => false,
-    };
-    let e = overloaded_error(&shared.cfg, "connections", shared.cfg.max_conns);
-    let line = wire::encode_response(&JobResponse::Error(e), legacy);
-    let _ = writer.write_all(line.as_bytes());
-    let _ = writer.write_all(b"\n");
-    let _ = writer.flush();
+fn panic_error(payload: Box<dyn Any + Send>) -> ApiError {
+    let msg = payload
+        .downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| payload.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "non-string panic payload".into());
+    ApiError::new(ErrorCode::Internal, format!("request handler panicked: {msg}"))
 }
 
-/// What one poll-driven line read produced.
-enum ReadOutcome {
-    /// A complete line, trailing `\n` (and `\r`) stripped — raw bytes,
-    /// because the length guard must run before UTF-8 validation.
-    Line(Vec<u8>),
-    /// Peer closed, connection errored, or the line outgrew
-    /// [`HARD_LINE_LIMIT`].
-    Closed,
-    /// A stop flag tripped between requests, or the idle budget ran
-    /// out.
-    Done,
-}
-
-/// Read one `\n`-terminated line, waking every [`POLL_INTERVAL`] to
-/// check the stop flags and the idle budget. `read_until` keeps
-/// already-consumed bytes in `buf` across timeout ticks, so a slow
-/// (or slow-loris) sender costs patience, not correctness.
-fn read_line_polled(reader: &mut BufReader<TcpStream>, shared: &Shared) -> ReadOutcome {
-    let mut buf: Vec<u8> = Vec::new();
-    let idle_deadline = Instant::now() + shared.cfg.idle_timeout;
-    loop {
-        match reader.read_until(b'\n', &mut buf) {
-            Ok(0) => return ReadOutcome::Closed,
-            Ok(_) => {
-                if buf.last() == Some(&b'\n') {
-                    buf.pop();
-                    if buf.last() == Some(&b'\r') {
-                        buf.pop();
-                    }
-                    return ReadOutcome::Line(buf);
-                }
-                // Delimiter not found but bytes arrived: EOF mid-line.
-                return ReadOutcome::Closed;
-            }
-            Err(e)
-                if matches!(
-                    e.kind(),
-                    std::io::ErrorKind::WouldBlock
-                        | std::io::ErrorKind::TimedOut
-                        | std::io::ErrorKind::Interrupted
-                ) =>
-            {
-                if shared.hard_cancel.load(Ordering::SeqCst) {
-                    return ReadOutcome::Done;
-                }
-                if shared.stop.load(Ordering::SeqCst) && buf.is_empty() {
-                    return ReadOutcome::Done;
-                }
-                if buf.len() > HARD_LINE_LIMIT {
-                    return ReadOutcome::Closed;
-                }
-                if buf.is_empty() && Instant::now() >= idle_deadline {
-                    return ReadOutcome::Done;
-                }
-            }
-            Err(_) => return ReadOutcome::Closed,
+/// Execute one request under cooperative cancellation and per-request
+/// panic containment — shared by the executor lanes and the inline
+/// (`ping`/`stats`) path.
+fn run_guarded(executor: &Executor, shared: &Shared, req: &JobRequest) -> JobResponse {
+    let cancel = CancelToken::with_flag(Arc::clone(&shared.hard_cancel));
+    match catch_unwind(AssertUnwindSafe(|| executor.execute_cancellable(req, &cancel))) {
+        Ok(resp) => resp,
+        Err(payload) => {
+            executor.note_panic_contained();
+            JobResponse::Error(panic_error(payload))
         }
     }
 }
 
-fn handle_connection(stream: TcpStream, executor: &Executor, shared: &Shared) {
-    if stream.set_read_timeout(Some(POLL_INTERVAL)).is_err() {
+/// Encode one response as its wire line(s): a streamed v2 sweep/verify
+/// becomes partial frames plus a final frame; everything else is the
+/// single line the thread-per-connection service wrote, byte for byte.
+fn response_lines(resp: &JobResponse, legacy: bool, stream: bool) -> Vec<String> {
+    if !legacy && stream {
+        if let Some((job, items)) = wire::stream_items(resp) {
+            let n = items.len() as u64;
+            let mut lines: Vec<String> = items
+                .into_iter()
+                .enumerate()
+                .map(|(i, item)| wire::encode_stream_partial(job, i as u64, item))
+                .collect();
+            lines.push(wire::encode_stream_final(resp, n));
+            return lines;
+        }
+    }
+    vec![wire::encode_response(resp, legacy)]
+}
+
+/// One executor lane: pull jobs off the fair scheduler, run them, send
+/// the encoded lines back to the event loop for in-order delivery.
+fn worker_loop(shared: &Shared, executor: &Executor, tx: &Sender<Completion>) {
+    while let Some(job) = shared.sched.next() {
+        let resp = run_guarded(executor, shared, &job.request);
+        let lines = response_lines(&resp, job.legacy, job.stream);
+        shared.sched.done();
+        // A send error means the event loop is gone, which only
+        // happens after the scheduler drained; drop the lines.
+        let _ = tx.send(Completion { conn: job.conn, slot: job.slot, lines });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Connections
+// ---------------------------------------------------------------------------
+
+/// One multiplexed connection, owned by the event loop.
+struct Conn {
+    stream: TcpStream,
+    /// Unconsumed inbound bytes (at most one partial line after
+    /// processing).
+    buf: Vec<u8>,
+    /// Outbound bytes not yet accepted by the socket.
+    out: Vec<u8>,
+    out_pos: usize,
+    /// Response slots are assigned in request-arrival order and
+    /// delivered strictly in order, so pipelined clients see v1
+    /// semantics.
+    next_slot: u64,
+    deliver_next: u64,
+    ready: BTreeMap<u64, Vec<String>>,
+    /// Slots waiting on an executor-lane completion.
+    outstanding: usize,
+    last_activity: Instant,
+    peer_closed: bool,
+    dead: bool,
+    /// `Some(deadline)`: an over-`max_conns` connection being shed —
+    /// it gets one line's worth of patience (to answer in the caller's
+    /// dialect), an `overloaded` reply, and the boot.
+    shed: Option<Instant>,
+    shed_replied: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Conn {
+        Conn {
+            stream,
+            buf: Vec::new(),
+            out: Vec::new(),
+            out_pos: 0,
+            next_slot: 0,
+            deliver_next: 0,
+            ready: BTreeMap::new(),
+            outstanding: 0,
+            last_activity: Instant::now(),
+            peer_closed: false,
+            dead: false,
+            shed: None,
+            shed_replied: false,
+        }
+    }
+
+    fn alloc_slot(&mut self) -> u64 {
+        let s = self.next_slot;
+        self.next_slot += 1;
+        s
+    }
+
+    /// An immediately-answered slot (errors, ping/stats, admission
+    /// rejections): allocated and completed in one step, so it still
+    /// respects arrival order relative to queued jobs.
+    fn push_inline(&mut self, lines: Vec<String>) {
+        let slot = self.alloc_slot();
+        self.ready.insert(slot, lines);
+    }
+
+    fn has_output(&self) -> bool {
+        self.out_pos < self.out.len() || !self.ready.is_empty()
+    }
+}
+
+/// Decode and act on one complete request line. Mirrors the
+/// thread-per-connection handler's order exactly: length guard before
+/// UTF-8, UTF-8 before the chaos read hook, empty-line skip, then
+/// decode → (inline answer | enqueue).
+fn handle_line(conn: &mut Conn, conn_id: u64, raw: Vec<u8>, executor: &Executor, shared: &Shared) {
+    if raw.len() > wire::MAX_LINE_BYTES {
+        // Reject before decoding (and before requiring valid UTF-8);
+        // sniff the dialect from the prefix only.
+        executor.note_rejected();
+        let head = String::from_utf8_lossy(&raw[..raw.len().min(256)]).into_owned();
+        let e = ApiError::bad_request(format!(
+            "request line of {} bytes exceeds the {} byte limit",
+            raw.len(),
+            wire::MAX_LINE_BYTES
+        ));
+        conn.push_inline(vec![wire::encode_response(
+            &JobResponse::Error(e),
+            wire::line_is_legacy(&head),
+        )]);
         return;
     }
-    let mut writer = match stream.try_clone() {
-        Ok(w) => w,
-        Err(_) => return,
-    };
-    let mut reader = BufReader::new(stream);
-    loop {
-        let raw = match read_line_polled(&mut reader, shared) {
-            ReadOutcome::Line(raw) => raw,
-            ReadOutcome::Closed | ReadOutcome::Done => return,
-        };
-        if raw.len() > wire::MAX_LINE_BYTES {
-            // Reject before decoding (and before requiring valid
-            // UTF-8); sniff the dialect from the prefix only.
+    let line = match String::from_utf8(raw) {
+        Ok(l) => l,
+        Err(_) => {
             executor.note_rejected();
-            let head = String::from_utf8_lossy(&raw[..raw.len().min(256)]).into_owned();
-            let e = ApiError::bad_request(format!(
-                "request line of {} bytes exceeds the {} byte limit",
-                raw.len(),
-                wire::MAX_LINE_BYTES
-            ));
-            let resp = wire::encode_response(&JobResponse::Error(e), wire::line_is_legacy(&head));
-            if !write_response(&mut writer, &resp) {
+            let e = ApiError::invalid_json("request line is not valid UTF-8");
+            conn.push_inline(vec![wire::encode_response(&JobResponse::Error(e), false)]);
+            return;
+        }
+    };
+    #[cfg(any(test, feature = "chaos"))]
+    let line = crate::chaos::mangle_service_read(line);
+    if line.trim().is_empty() {
+        return;
+    }
+    match wire::decode_request_meta(&line) {
+        Err(e) => {
+            executor.note_rejected();
+            // Answer in the dialect the line arrived in: a v1 line
+            // that failed validation still gets the legacy error
+            // shape (no "v" marker). Unparseable lines default to
+            // the v2 shape — both dialects read ok:false + error.
+            conn.push_inline(vec![wire::encode_response(
+                &JobResponse::Error(e),
+                wire::line_is_legacy(&line),
+            )]);
+        }
+        Ok((decoded, meta)) => {
+            // `ping` and `stats` stay answerable under full load —
+            // they are the probes an operator uses to see *why* the
+            // service is shedding — so they bypass the queues.
+            let gated = !matches!(decoded.request, JobRequest::Ping | JobRequest::Stats);
+            if !gated {
+                let resp = run_guarded(executor, shared, &decoded.request);
+                conn.push_inline(vec![wire::encode_response(&resp, decoded.legacy)]);
                 return;
             }
-            continue;
+            if shared.sched.load() >= shared.cfg.max_inflight {
+                executor.note_overloaded();
+                let e =
+                    overloaded_error(&shared.cfg, "jobs in flight", shared.cfg.max_inflight);
+                conn.push_inline(vec![wire::encode_response(&JobResponse::Error(e), decoded.legacy)]);
+                return;
+            }
+            let tenant = meta.tenant.as_deref().unwrap_or("");
+            if shared.sched.tenant_depth(tenant) >= shared.cfg.queue_depth {
+                executor.note_overloaded();
+                let e = overloaded_error(&shared.cfg, "queued jobs", shared.cfg.queue_depth);
+                conn.push_inline(vec![wire::encode_response(&JobResponse::Error(e), decoded.legacy)]);
+                return;
+            }
+            let slot = conn.alloc_slot();
+            conn.outstanding += 1;
+            shared.sched.enqueue(
+                tenant,
+                QueuedJob {
+                    conn: conn_id,
+                    slot,
+                    request: decoded.request,
+                    legacy: decoded.legacy,
+                    stream: meta.stream,
+                },
+            );
         }
-        let line = match String::from_utf8(raw) {
-            Ok(l) => l,
-            Err(_) => {
-                executor.note_rejected();
-                let e = ApiError::invalid_json("request line is not valid UTF-8");
-                let resp = wire::encode_response(&JobResponse::Error(e), false);
-                if !write_response(&mut writer, &resp) {
-                    return;
-                }
-                continue;
-            }
-        };
-        #[cfg(any(test, feature = "chaos"))]
-        let line = crate::chaos::mangle_service_read(line);
-        if line.trim().is_empty() {
-            continue;
+    }
+}
+
+/// Answer a shed connection `overloaded` in the given dialect.
+fn shed_reply(conn: &mut Conn, shared: &Shared, legacy: bool) {
+    let e = overloaded_error(&shared.cfg, "connections", shared.cfg.max_conns);
+    conn.push_inline(vec![wire::encode_response(&JobResponse::Error(e), legacy)]);
+    conn.shed_replied = true;
+}
+
+/// Split complete lines out of `conn.buf` and handle each. A panic in
+/// line handling (e.g. an injected ServiceRead panic) is contained to
+/// this connection.
+fn process_buffer(conn: &mut Conn, conn_id: u64, executor: &Executor, shared: &Shared) {
+    loop {
+        let Some(pos) = conn.buf.iter().position(|&b| b == b'\n') else { break };
+        let mut raw: Vec<u8> = conn.buf.drain(..=pos).collect();
+        raw.pop(); // the '\n'
+        if raw.last() == Some(&b'\r') {
+            raw.pop();
         }
-        let response = match wire::decode_request(&line) {
-            Err(e) => {
-                executor.note_rejected();
-                // Answer in the dialect the line arrived in: a v1 line
-                // that failed validation still gets the legacy error
-                // shape (no "v" marker). Unparseable lines default to
-                // the v2 shape — both dialects read ok:false + error.
-                wire::encode_response(&JobResponse::Error(e), wire::line_is_legacy(&line))
+        if conn.shed.is_some() {
+            // First line decides the rejection dialect; the rest of
+            // the stream is irrelevant.
+            if !conn.shed_replied {
+                let legacy = wire::line_is_legacy(&String::from_utf8_lossy(&raw));
+                shed_reply(conn, shared, legacy);
             }
-            Ok(decoded) => {
-                let resp = dispatch(executor, shared, &decoded.request);
-                wire::encode_response(&resp, decoded.legacy)
-            }
-        };
-        if !write_response(&mut writer, &response) {
+            conn.buf.clear();
+            return;
+        }
+        let caught =
+            catch_unwind(AssertUnwindSafe(|| handle_line(conn, conn_id, raw, executor, shared)));
+        if caught.is_err() {
+            executor.note_panic_contained();
+            conn.dead = true;
+            return;
+        }
+        if conn.dead {
             return;
         }
     }
 }
 
-/// Run one decoded request through the gates: in-flight admission,
-/// cooperative cancellation, per-request panic containment.
-fn dispatch(executor: &Executor, shared: &Shared, req: &JobRequest) -> JobResponse {
-    // `ping` and `stats` stay answerable under full load — they are
-    // the probes an operator uses to see *why* the service is shedding.
-    let gated = !matches!(req, JobRequest::Ping | JobRequest::Stats);
-    if gated && !shared.try_admit(&shared.inflight, shared.cfg.max_inflight) {
-        executor.note_overloaded();
-        return JobResponse::Error(overloaded_error(
-            &shared.cfg,
-            "jobs in flight",
-            shared.cfg.max_inflight,
-        ));
-    }
-    let _guard = gated.then(|| CountGuard(&shared.inflight));
-    let cancel = CancelToken::with_flag(Arc::clone(&shared.hard_cancel));
-    let caught = catch_unwind(AssertUnwindSafe(|| executor.execute_cancellable(req, &cancel)));
-    match caught {
-        Ok(resp) => resp,
-        Err(payload) => {
-            executor.note_panic_contained();
-            let msg = payload
-                .downcast_ref::<&str>()
-                .map(|s| s.to_string())
-                .or_else(|| payload.downcast_ref::<String>().cloned())
-                .unwrap_or_else(|| "non-string panic payload".into());
-            JobResponse::Error(ApiError::new(
-                ErrorCode::Internal,
-                format!("request handler panicked: {msg}"),
-            ))
+/// Drain the socket's readable bytes into the line buffer. Returns
+/// true if any progress was made.
+fn read_conn(conn: &mut Conn, conn_id: u64, executor: &Executor, shared: &Shared) -> bool {
+    let mut busy = false;
+    let mut tmp = [0u8; 16 * 1024];
+    loop {
+        match conn.stream.read(&mut tmp) {
+            Ok(0) => {
+                conn.peer_closed = true;
+                break;
+            }
+            Ok(n) => {
+                busy = true;
+                conn.last_activity = Instant::now();
+                conn.buf.extend_from_slice(&tmp[..n]);
+                process_buffer(conn, conn_id, executor, shared);
+                if conn.dead {
+                    break;
+                }
+                if conn.buf.len() > HARD_LINE_LIMIT {
+                    // Past the resync horizon: no trustworthy message
+                    // boundary remains; drop the connection.
+                    conn.dead = true;
+                    break;
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => {
+                conn.dead = true;
+                break;
+            }
         }
     }
+    busy
 }
 
-fn write_response(writer: &mut TcpStream, response: &str) -> bool {
-    #[cfg(any(test, feature = "chaos"))]
-    crate::chaos::on_service_write();
-    writer.write_all(response.as_bytes()).is_ok()
-        && writer.write_all(b"\n").is_ok()
-        && writer.flush().is_ok()
+/// Move in-order completed slots into the outbound buffer and push
+/// bytes at the socket. Returns true if any progress was made. A panic
+/// from the chaos write hook is contained by the caller.
+fn flush_conn(conn: &mut Conn) -> bool {
+    let mut busy = false;
+    while let Some(lines) = conn.ready.remove(&conn.deliver_next) {
+        conn.deliver_next += 1;
+        busy = true;
+        for line in lines {
+            #[cfg(any(test, feature = "chaos"))]
+            crate::chaos::on_service_write();
+            conn.out.extend_from_slice(line.as_bytes());
+            conn.out.push(b'\n');
+        }
+    }
+    while conn.out_pos < conn.out.len() {
+        match conn.stream.write(&conn.out[conn.out_pos..]) {
+            Ok(0) => {
+                conn.dead = true;
+                break;
+            }
+            Ok(n) => {
+                conn.out_pos += n;
+                conn.last_activity = Instant::now();
+                busy = true;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => {
+                conn.dead = true;
+                break;
+            }
+        }
+    }
+    if conn.out_pos == conn.out.len() && !conn.out.is_empty() {
+        conn.out.clear();
+        conn.out_pos = 0;
+        let _ = conn.stream.flush();
+    }
+    busy
+}
+
+/// The event loop: nonblocking accept, readiness-polled reads, job
+/// admission, in-order response delivery, drain-aware shutdown.
+fn event_loop(
+    listener: TcpListener,
+    executor: &Executor,
+    shared: &Shared,
+    completions: &Receiver<Completion>,
+) {
+    let mut conns: BTreeMap<u64, Conn> = BTreeMap::new();
+    let mut next_id: u64 = 0;
+    let mut draining = false;
+    // Soft deadline: in-flight work gets `cfg.drain` to finish clean;
+    // after that `hard_cancel` trips and cancelled work gets one more
+    // `cfg.drain` to flush its partial responses before we give up.
+    let mut drain_deadline: Option<Instant> = None;
+    let mut hard_deadline: Option<Instant> = None;
+    loop {
+        let mut busy = false;
+        let now = Instant::now();
+
+        if !draining && shared.stop.load(Ordering::SeqCst) {
+            draining = true;
+            drain_deadline = Some(now + shared.cfg.drain);
+        }
+
+        if !draining {
+            loop {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        busy = true;
+                        let _ = stream.set_nonblocking(true);
+                        let live = conns.values().filter(|c| c.shed.is_none() && !c.dead).count();
+                        let mut conn = Conn::new(stream);
+                        if live >= shared.cfg.max_conns {
+                            // Over the connection gate: give the peer
+                            // one line's worth of patience, then shed
+                            // with a structured `overloaded`.
+                            executor.note_overloaded();
+                            conn.shed = Some(now + SHED_READ_BUDGET);
+                        }
+                        conns.insert(next_id, conn);
+                        next_id += 1;
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(_) => break,
+                }
+            }
+            for (&id, conn) in conns.iter_mut() {
+                if conn.dead || conn.peer_closed {
+                    continue;
+                }
+                busy |= read_conn(conn, id, executor, shared);
+            }
+            // Shed connections whose line never came still get their
+            // rejection (in the default v2 shape) at the deadline.
+            for conn in conns.values_mut() {
+                if let Some(d) = conn.shed {
+                    if !conn.shed_replied && !conn.dead && now >= d {
+                        shed_reply(conn, shared, false);
+                        busy = true;
+                    }
+                }
+            }
+        }
+
+        while let Ok(done) = completions.try_recv() {
+            busy = true;
+            if let Some(conn) = conns.get_mut(&done.conn) {
+                conn.outstanding = conn.outstanding.saturating_sub(1);
+                conn.ready.insert(done.slot, done.lines);
+                conn.last_activity = Instant::now();
+            }
+            // A completion for a vanished connection is dropped: the
+            // peer is gone and pure responses are reproducible.
+        }
+
+        for (&id, conn) in conns.iter_mut() {
+            if conn.dead {
+                continue;
+            }
+            let caught = catch_unwind(AssertUnwindSafe(|| flush_conn(conn)));
+            match caught {
+                Ok(b) => busy |= b,
+                Err(_) => {
+                    let _ = id;
+                    executor.note_panic_contained();
+                    conn.dead = true;
+                }
+            }
+        }
+
+        conns.retain(|_, c| {
+            if c.dead {
+                return false;
+            }
+            if c.shed_replied && !c.has_output() {
+                return false;
+            }
+            if c.peer_closed && c.outstanding == 0 && !c.has_output() {
+                return false;
+            }
+            if !draining
+                && c.outstanding == 0
+                && !c.has_output()
+                && now.duration_since(c.last_activity) >= shared.cfg.idle_timeout
+            {
+                return false;
+            }
+            true
+        });
+
+        if draining {
+            let work_left = shared.sched.load() > 0
+                || conns.values().any(|c| c.outstanding > 0 || c.has_output());
+            if !work_left {
+                break;
+            }
+            if let Some(d) = drain_deadline {
+                if now >= d {
+                    shared.hard_cancel.store(true, Ordering::SeqCst);
+                    drain_deadline = None;
+                    hard_deadline = Some(now + shared.cfg.drain);
+                }
+            } else if let Some(h) = hard_deadline {
+                if now >= h {
+                    break;
+                }
+            }
+        }
+
+        if !busy {
+            std::thread::sleep(TICK);
+        }
+    }
+    // Dropping `conns` closes every socket; dropping the listener
+    // frees the port. The handle joins the executor lanes next.
 }
 
 /// Minimal blocking *raw-line* client, for tests and tools that need
@@ -464,5 +856,146 @@ impl PlannerClient {
         })?;
         anyhow::ensure!(!line.is_empty(), "server closed the connection");
         crate::util::json::parse(line.trim())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{SweepResult, SweepRow};
+    use crate::model::StrategyKind;
+
+    fn job(tag: u64) -> QueuedJob {
+        QueuedJob { conn: 0, slot: tag, request: JobRequest::Ping, legacy: false, stream: false }
+    }
+
+    #[test]
+    fn stride_scheduler_shares_dispatches_by_weight() {
+        let s = Scheduler::new(vec![("heavy".into(), 3), ("light".into(), 1)]);
+        for i in 0..40 {
+            s.enqueue("heavy", job(i));
+        }
+        for i in 0..40 {
+            s.enqueue("light", job(100 + i));
+        }
+        let (mut heavy, mut light) = (0, 0);
+        for _ in 0..24 {
+            let j = s.next().expect("queued work");
+            s.done();
+            if j.slot < 100 {
+                heavy += 1;
+            } else {
+                light += 1;
+            }
+        }
+        // Exact, not statistical: stride dispatch is deterministic.
+        assert_eq!((heavy, light), (18, 6), "3:1 weights over 24 dispatches");
+    }
+
+    #[test]
+    fn a_returning_idle_tenant_cannot_claim_the_past() {
+        let s = Scheduler::new(Vec::new());
+        for i in 0..10 {
+            s.enqueue("a", job(i));
+        }
+        for _ in 0..10 {
+            s.next().expect("queued work");
+            s.done();
+        }
+        // "b" arrives late with pass 0; the floor forces it to share
+        // from now on instead of monopolizing to "catch up".
+        for i in 0..4 {
+            s.enqueue("a", job(20 + i));
+            s.enqueue("b", job(100 + i));
+        }
+        let (mut a, mut b) = (0, 0);
+        for _ in 0..8 {
+            let j = s.next().expect("queued work");
+            s.done();
+            if j.slot >= 100 {
+                b += 1;
+            } else {
+                a += 1;
+            }
+        }
+        assert_eq!((a, b), (4, 4), "equal weights share equally after the idle gap");
+    }
+
+    #[test]
+    fn shutdown_unblocks_a_parked_lane() {
+        let s = Arc::new(Scheduler::new(Vec::new()));
+        let s2 = Arc::clone(&s);
+        let lane = std::thread::spawn(move || s2.next());
+        std::thread::sleep(Duration::from_millis(30));
+        s.shutdown();
+        assert!(lane.join().unwrap().is_none(), "shutdown must return None");
+    }
+
+    fn sweep_resp() -> JobResponse {
+        JobResponse::Sweep(SweepResult {
+            rows: vec![
+                SweepRow {
+                    n_procs: 1 << 16,
+                    mu: 60133.0,
+                    winner: StrategyKind::ExactPrediction,
+                    winner_waste: 0.11,
+                    winner_period: 9000.0,
+                },
+                SweepRow {
+                    n_procs: 1 << 19,
+                    mu: 7516.0,
+                    winner: StrategyKind::Young,
+                    winner_waste: 0.4,
+                    winner_period: 3000.0,
+                },
+            ],
+            via_hlo: false,
+        })
+    }
+
+    #[test]
+    fn streamed_sweeps_frame_every_row_then_finalize() {
+        let resp = sweep_resp();
+        let lines = response_lines(&resp, false, true);
+        assert_eq!(lines.len(), 3, "2 partials + 1 final");
+        for (i, line) in lines[..2].iter().enumerate() {
+            match wire::decode_stream_event(line).unwrap() {
+                wire::StreamEvent::Partial { job, seq, .. } => {
+                    assert_eq!(job, "sweep");
+                    assert_eq!(seq, i as u64);
+                }
+                other => panic!("expected a partial frame, got {other:?}"),
+            }
+        }
+        match wire::decode_stream_event(&lines[2]).unwrap() {
+            wire::StreamEvent::Final { seq, response } => {
+                assert_eq!(seq, Some(2));
+                assert_eq!(response, resp);
+            }
+            other => panic!("expected the final frame, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unstreamed_and_legacy_responses_stay_single_line() {
+        let resp = sweep_resp();
+        // No stream flag: byte-identical to the plain encoding.
+        assert_eq!(response_lines(&resp, false, false), vec![wire::encode_response(&resp, false)]);
+        // The v1 dialect never streams, even if the flag sneaks in.
+        assert_eq!(response_lines(&resp, true, true), vec![wire::encode_response(&resp, true)]);
+        // Pong has no row shape to stream: the flag is harmlessly
+        // ignored.
+        assert_eq!(
+            response_lines(&JobResponse::Pong, false, true),
+            vec![wire::encode_response(&JobResponse::Pong, false)]
+        );
+    }
+
+    #[test]
+    fn overloaded_message_format_is_stable() {
+        // The golden fixtures pin this exact phrasing.
+        let e = overloaded_error(&ServiceConfig::default(), "jobs in flight", 32);
+        assert_eq!(e.message, "service at capacity (32 jobs in flight); retry after 250 ms");
+        assert_eq!(e.retry_after_ms, Some(250));
     }
 }

@@ -9,8 +9,9 @@
 //! ckptfp best-period [--strategy NAME | --policy P] [--platform SPEC] [--reps K] [--candidates N] [--prune] [scenario flags]
 //! ckptfp verify      [--grid quick|full] [--policy P] [--platform SPEC] [--reps K] [--budget B] [--workers W] [--out FILE] [--json]
 //! ckptfp experiment  <fig4..fig11|tab1..tab3|policy-comparison|conformance|platform-scaling|all> [--reps K] [--best-period] [--out DIR]
-//! ckptfp serve       [--addr HOST:PORT] [--workers W] [--reps-default K] [--max-conns N] [--max-inflight N] [--deadline-ms MS] [--drain-ms MS]
+//! ckptfp serve       [--addr HOST:PORT] [--workers W] [--reps-default K] [--max-conns N] [--max-inflight N] [--queue-depth N] [--sched-workers N] [--tenants name=w,name=w] [--deadline-ms MS] [--drain-ms MS]
 //! ckptfp client      <plan|simulate|best-period|verify|ping|stats> --addr HOST:PORT [job flags]
+//! ckptfp loadgen     [--seed S] [--requests N] [--bench-reps K] [--bench-candidates N] [--addr HOST:PORT] [--out FILE]
 //! ckptfp trace       [--out FILE] [--horizon SECONDS] [--n-procs N]
 //! ckptfp config      <file.toml> — validate and print a scenario (+ optional [policy] / platform keys)
 //! ```
@@ -30,7 +31,7 @@ use ckptfp::api::{
 };
 use ckptfp::cli::Args;
 use ckptfp::config::{Predictor, Scenario};
-use ckptfp::coordinator::{serve, Batcher, BatcherConfig, ServiceConfig};
+use ckptfp::coordinator::{loadgen, serve, Batcher, BatcherConfig, ServiceConfig, TraceSpec};
 use ckptfp::dist::DistSpec;
 use ckptfp::experiments::{all_experiments, run_experiment, ExpOptions};
 use ckptfp::model::{Capping, Params, StrategyKind};
@@ -87,6 +88,7 @@ fn run() -> anyhow::Result<()> {
         Some("experiment") => cmd_experiment(&mut args),
         Some("serve") => cmd_serve(&mut args),
         Some("client") => cmd_client(&mut args),
+        Some("loadgen") => cmd_loadgen(&mut args),
         Some("trace") => cmd_trace(&mut args),
         Some("config") => cmd_config(&mut args),
         Some(other) => anyhow::bail!("unknown command '{other}' — see `ckptfp help`"),
@@ -112,8 +114,12 @@ commands:
   experiment   regenerate a paper figure/table (fig4..fig11, tab1..tab3,
                policy-comparison, conformance, platform-scaling, all)
   serve        TCP/JSONL job service (protocol v2; v1 planner dialect adapted)
-               [--max-conns N] [--max-inflight N] [--deadline-ms MS] [--drain-ms MS]
+               [--max-conns N] [--max-inflight N] [--queue-depth N]
+               [--sched-workers N] [--tenants name=w,name=w]
+               [--deadline-ms MS] [--drain-ms MS]
   client       run plan/simulate/best-period/verify jobs against a remote service
+  loadgen      replay a seeded synthetic multi-tenant trace against the
+               service (in-process unless --addr) and write BENCH_serve.json
   trace        dump a generated fault/prediction trace
   config       validate a TOML scenario file
 policies (--policy): a strategy name, adaptive[:gain], or risk[:kappa]
@@ -359,6 +365,26 @@ fn cmd_experiment(args: &mut Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Parse the `--tenants name=weight,name=weight` flag: per-tenant
+/// stride-scheduling weights; unlisted tenants get weight 1.
+fn parse_tenant_weights(raw: &str) -> anyhow::Result<Vec<(String, u64)>> {
+    let mut weights = Vec::new();
+    for part in raw.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        let (name, w) = part
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("--tenants entry '{part}' is not name=weight"))?;
+        anyhow::ensure!(
+            !name.is_empty() && name.len() <= 64,
+            "--tenants name '{name}' must be 1 to 64 bytes"
+        );
+        let w: u64 =
+            w.parse().map_err(|e| anyhow::anyhow!("--tenants weight for '{name}': {e}"))?;
+        anyhow::ensure!(w >= 1, "--tenants weight for '{name}' must be at least 1");
+        weights.push((name.to_string(), w));
+    }
+    Ok(weights)
+}
+
 fn cmd_serve(args: &mut Args) -> anyhow::Result<()> {
     let addr = args.get_str("addr", "127.0.0.1:7471");
     let max_batch: usize = args.get("max-batch", 64)?;
@@ -368,8 +394,11 @@ fn cmd_serve(args: &mut Args) -> anyhow::Result<()> {
     let svc_defaults = ServiceConfig::default();
     let max_conns: usize = args.get("max-conns", svc_defaults.max_conns)?;
     let max_inflight: usize = args.get("max-inflight", svc_defaults.max_inflight)?;
+    let queue_depth: usize = args.get("queue-depth", svc_defaults.queue_depth)?;
+    let sched_workers: usize = args.get("sched-workers", svc_defaults.sched_workers)?;
     let deadline_ms: u64 = args.get("deadline-ms", 0)?;
     let drain_ms: u64 = args.get("drain-ms", svc_defaults.drain.as_millis() as u64)?;
+    let tenant_weights = parse_tenant_weights(&args.get_str("tenants", ""))?;
     args.finish()?;
     let deadline = (deadline_ms > 0).then(|| std::time::Duration::from_millis(deadline_ms));
     let exec_cfg = ExecutorConfig { workers, reps_default, deadline, ..Default::default() };
@@ -388,12 +417,17 @@ fn cmd_serve(args: &mut Args) -> anyhow::Result<()> {
             Executor::new(exec_cfg)
         }
     };
+    let tenants_desc: Vec<String> =
+        tenant_weights.iter().map(|(t, w)| format!("{t}={w}")).collect();
     let handle = serve(
         executor,
         ServiceConfig {
             addr,
             max_conns,
             max_inflight,
+            queue_depth,
+            sched_workers,
+            tenant_weights,
             deadline,
             drain: std::time::Duration::from_millis(drain_ms),
             ..Default::default()
@@ -409,6 +443,9 @@ fn cmd_serve(args: &mut Args) -> anyhow::Result<()> {
             None => "off".into(),
         }
     );
+    if !tenants_desc.is_empty() {
+        println!("tenant weights (stride-fair): {}", tenants_desc.join(", "));
+    }
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
@@ -477,9 +514,122 @@ fn cmd_client(args: &mut Args) -> anyhow::Result<()> {
                     b.requests, b.batches, b.max_batch
                 );
             }
+            println!(
+                "plan cache: {} hits / {} misses ({} entries, {} evictions)",
+                s.cache_hits, s.cache_misses, s.cache_entries, s.cache_evictions
+            );
         }
         other => anyhow::bail!("unknown client verb '{other}'"),
     }
+    Ok(())
+}
+
+fn cmd_loadgen(args: &mut Args) -> anyhow::Result<()> {
+    use ckptfp::util::json::Json;
+    let defaults = TraceSpec::default();
+    let spec = TraceSpec {
+        seed: args.get("seed", defaults.seed)?,
+        requests: args.get("requests", defaults.requests)?,
+        repeat_ratio: args.get("repeat-ratio", defaults.repeat_ratio)?,
+        window: args.get("window", defaults.window)?,
+        bench_distinct: args.get("bench-distinct", defaults.bench_distinct)?,
+        bench_rounds: args.get("bench-rounds", defaults.bench_rounds)?,
+        bench_reps: args.get("bench-reps", defaults.bench_reps)?,
+        bench_candidates: args.get("bench-candidates", defaults.bench_candidates)?,
+        ..defaults
+    };
+    let out = args.get_str("out", "BENCH_serve.json");
+    let addr_flag = args.get_opt::<String>("addr")?;
+    args.finish()?;
+
+    // Default: spin the service up in-process (port 0, tenant weights
+    // matching the trace) so the harness is self-contained; --addr
+    // points it at an already-running service instead.
+    let (report, handle) = match addr_flag {
+        Some(addr) => (loadgen::run(&addr, &spec)?, None),
+        None => {
+            let executor = Executor::new(ExecutorConfig::default());
+            let handle = serve(
+                executor,
+                ServiceConfig {
+                    addr: "127.0.0.1:0".into(),
+                    tenant_weights: spec.tenants.clone(),
+                    ..Default::default()
+                },
+            )?;
+            let addr = handle.addr.to_string();
+            (loadgen::run(&addr, &spec)?, Some(handle))
+        }
+    };
+    if let Some(h) = handle {
+        h.stop();
+    }
+
+    println!(
+        "trace: {}/{} answered ({} errors, {} overloaded, {} mismatches) in {:.2}s ({:.0} req/s)",
+        report.answered,
+        report.requests,
+        report.errors,
+        report.overloaded,
+        report.mismatches,
+        report.elapsed_s,
+        report.trace_per_s,
+    );
+    for (tenant, n) in &report.per_tenant {
+        println!("  tenant {tenant}: {n} answered");
+    }
+    println!(
+        "latency p50 {:.2} ms p95 {:.2} ms p99 {:.2} ms",
+        report.p50_ms, report.p95_ms, report.p99_ms
+    );
+    println!(
+        "cache: cold {:.1} req/s, hot {:.1} req/s ({:.1}x, bit-identical: {}) | {} hits / {} misses",
+        report.cold_per_s,
+        report.hit_per_s,
+        report.hit_speedup,
+        report.bench_bit_identical,
+        report.cache_hits,
+        report.cache_misses,
+    );
+
+    let doc = Json::obj(vec![
+        ("schema", Json::Str("ckptfp-perf-v1".into())),
+        (
+            "workers_available",
+            Json::Num(ckptfp::coordinator::available_workers() as f64),
+        ),
+        (
+            "serve",
+            Json::obj(vec![
+                ("requests", Json::Num(report.requests as f64)),
+                ("answered", Json::Num(report.answered as f64)),
+                ("errors", Json::Num(report.errors as f64)),
+                ("mismatches", Json::Num(report.mismatches as f64)),
+                ("trace_per_s", Json::Num(report.trace_per_s)),
+                ("p50_ms", Json::Num(report.p50_ms)),
+                ("p95_ms", Json::Num(report.p95_ms)),
+                ("p99_ms", Json::Num(report.p99_ms)),
+                ("cold_per_s", Json::Num(report.cold_per_s)),
+                ("hit_per_s", Json::Num(report.hit_per_s)),
+                ("hit_speedup", Json::Num(report.hit_speedup)),
+                ("cache_hits", Json::Num(report.cache_hits as f64)),
+                ("cache_misses", Json::Num(report.cache_misses as f64)),
+            ]),
+        ),
+    ]);
+    let mut text = doc.to_string();
+    text.push('\n');
+    std::fs::write(&out, text).with_context(|| format!("writing {out}"))?;
+    eprintln!("perf recording written to {out}");
+
+    anyhow::ensure!(
+        report.answered == report.requests,
+        "exactly-once violated: {}/{} answered",
+        report.answered,
+        report.requests
+    );
+    anyhow::ensure!(report.mismatches == 0, "{} repeated requests answered with differing bytes", report.mismatches);
+    anyhow::ensure!(report.bench_bit_identical, "cache-hot responses diverged from cold bytes");
     Ok(())
 }
 

@@ -200,6 +200,10 @@ fn every_response_variant_round_trips() {
             client_retries: 7,
             batch_lanes_run: 1024,
             batch_lane_fallbacks: 2,
+            cache_hits: 6,
+            cache_misses: 4,
+            cache_evictions: 1,
+            cache_entries: 3,
             batcher: Some(BatcherSnapshot { requests: 3, batches: 1, max_batch: 3 }),
         }),
         JobResponse::Stats(ServiceStats::default()),

@@ -239,6 +239,55 @@ fn injected_worker_panic_is_contained_to_one_response() {
     handle.stop();
 }
 
+#[test]
+fn injected_panic_under_simultaneous_load_spares_the_neighbors() {
+    let _s = begin();
+    let (handle, addr) = start_service(
+        ExecutorConfig { workers: 2, reps_default: 4, ..Default::default() },
+        local_cfg(),
+    );
+    // Exactly one pool task panics; five concurrent clients race for
+    // it. Whoever draws the poisoned task gets a structured internal
+    // error — everyone else's job completes untouched.
+    chaos::install(ChaosPlan::new().at(Point::PoolTask, &[0], Action::Panic));
+
+    let n_clients = 5;
+    let outcomes: Vec<bool> = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for _ in 0..n_clients {
+            let addr = addr.clone();
+            handles.push(scope.spawn(move || {
+                let mut job = SimulateJob::new(small_scenario(), StrategyKind::Young);
+                job.reps = 2;
+                job.workers = Some(1);
+                let mut conn = RawConn::connect(&addr);
+                let resp =
+                    conn.roundtrip(&wire::encode_request(&JobRequest::Simulate(job)));
+                match wire::decode_response(&resp).unwrap() {
+                    JobResponse::Simulate(r) => {
+                        assert_eq!(r.reps, 2, "neighbor's job truncated");
+                        true
+                    }
+                    JobResponse::Error(e) => {
+                        assert_eq!(e.code, ErrorCode::Internal, "{e:?}");
+                        assert!(e.message.contains("panic"), "{}", e.message);
+                        false
+                    }
+                    other => panic!("unexpected response: {other:?}"),
+                }
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let ok = outcomes.iter().filter(|&&b| b).count();
+    assert_eq!(ok, n_clients - 1, "exactly one client absorbs the panic: {outcomes:?}");
+    chaos::reset();
+
+    let stats = stats_eventually(&addr);
+    assert_eq!(stats.panics_contained, 1, "stats: {stats:?}");
+    handle.stop();
+}
+
 // ---------------------------------------------------------------------------
 // Deadlines
 // ---------------------------------------------------------------------------

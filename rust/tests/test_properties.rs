@@ -377,3 +377,124 @@ fn prop_simulation_seed_determinism() {
         assert_eq!(a.n_segments, b.n_segments);
     });
 }
+
+// ---------------------------------------------------------------------------
+// Cache-key canonicalization (coordinator::canon)
+// ---------------------------------------------------------------------------
+
+fn random_dist(g: &mut ckptfp::testkit::Gen<'_>) -> DistSpec {
+    match g.u64(0, 2) {
+        0 => DistSpec::Exp,
+        1 => DistSpec::Uniform,
+        _ => DistSpec::Weibull { shape: g.f64(0.05, 4.0) },
+    }
+}
+
+fn random_policy(g: &mut ckptfp::testkit::Gen<'_>) -> PolicySpec {
+    match g.u64(0, 2) {
+        0 => PolicySpec::Strategy(*g.choose(&StrategyKind::ALL)),
+        1 => PolicySpec::AdaptivePeriod { gain: g.f64(0.01, 5.0) },
+        _ => PolicySpec::RiskThreshold { kappa: g.f64(0.01, 5.0) },
+    }
+}
+
+fn random_platform(g: &mut ckptfp::testkit::Gen<'_>) -> ckptfp::sim::PlatformSpec {
+    ckptfp::sim::PlatformSpec {
+        nodes: g.u64(2, 16),
+        commit: g.f64(0.0, 0.5),
+        restart: *g.choose(&[
+            ckptfp::sim::RestartScope::Full,
+            ckptfp::sim::RestartScope::Partial,
+        ]),
+        group: g.u64(1, 4),
+        spatial: g.f64(0.0, 0.9),
+        cascade: g.f64(0.0, 0.9),
+        delta: g.f64(1.0, 600.0),
+    }
+}
+
+#[test]
+fn prop_cache_keys_survive_display_round_trips() {
+    // The cache key of a spec must be invariant under Display ->
+    // FromStr: the wire and the CLI both speak the Display form, so a
+    // drifting round-trip would split one logical job across cache
+    // entries (never unsound, but silently useless).
+    use ckptfp::coordinator::canon;
+    check(Config { cases: 300, seed: 71 }, |g| {
+        let d = random_dist(g);
+        let d2: DistSpec = d.to_string().parse().expect("dist Display must parse");
+        assert_eq!(canon::dist_key(&d), canon::dist_key(&d2), "dist {d}");
+
+        let p = random_policy(g);
+        let p2: PolicySpec = p.to_string().parse().expect("policy Display must parse");
+        assert_eq!(canon::policy_key(&p), canon::policy_key(&p2), "policy {p}");
+
+        let pf = random_platform(g);
+        let pf2: ckptfp::sim::PlatformSpec =
+            pf.to_string().parse().expect("platform Display must parse");
+        assert_eq!(canon::platform_key(&pf), canon::platform_key(&pf2), "platform {pf}");
+    });
+}
+
+#[test]
+fn prop_cache_keys_survive_wire_round_trips() {
+    // A full plan request decoded from its own wire encoding must key
+    // identically — the canonical key sits *behind* the decoder, so
+    // this is exactly the service's cold-request / repeat-request pair.
+    use ckptfp::api::{wire, JobRequest, PlanJob};
+    use ckptfp::coordinator::canon;
+    check(Config { cases: 150, seed: 72 }, |g| {
+        let pred = Predictor::exact(g.f64(0.05, 0.99), g.f64(0.05, 0.99));
+        let mut s = Scenario::paper(1 << g.u64(14, 19), pred);
+        s.platform.c = g.f64(60.0, 1200.0);
+        s.work = g.log_f64(1.0e4, 1.0e7);
+        s.fault_dist = random_dist(g);
+        s.seed = g.u64(0, 1 << 40);
+        let req = JobRequest::Plan(PlanJob::new(s));
+        let line = wire::encode_request(&req);
+        let decoded = wire::decode_request(&line).expect("own encoding decodes");
+        assert_eq!(
+            canon::request_key(&req, 0, 0, 0),
+            canon::request_key(&decoded.request, 0, 0, 0),
+            "wire round-trip changed the cache key: {line}"
+        );
+    });
+}
+
+#[test]
+fn prop_unequal_keys_plan_observably_differently() {
+    // Perturbing a dimension the closed-form planner actually reads
+    // (checkpoint cost, platform size, predictor quality) must change
+    // both the canonical key AND the encoded plan bytes — i.e. keys
+    // don't collapse distinguishable jobs, and distinguishable jobs
+    // really are distinguishable on a probe scenario.
+    use ckptfp::api::{wire, Executor, JobRequest, JobResponse, PlanJob};
+    use ckptfp::coordinator::canon;
+    let exec = Executor::local();
+    let plan_bytes = |s: &Scenario| -> String {
+        let out = exec.plan(&PlanJob::new(s.clone())).expect("closed-form plan");
+        wire::encode_response(&JobResponse::Plan(out), false)
+    };
+    check(Config { cases: 40, seed: 73 }, |g| {
+        let pred = Predictor::exact(g.f64(0.3, 0.9), g.f64(0.3, 0.9));
+        let mut base = Scenario::paper(1 << g.u64(15, 18), pred);
+        base.platform.c = g.f64(120.0, 900.0);
+        base.work = 2.0e5;
+        let mut other = base.clone();
+        match g.u64(0, 2) {
+            0 => other.platform.c *= g.f64(1.5, 3.0),
+            1 => other.platform.n_procs *= 2,
+            _ => {
+                other.predictor.recall = (base.predictor.recall * 0.5).max(0.01);
+            }
+        }
+        let key_a = canon::request_key(&JobRequest::Plan(PlanJob::new(base.clone())), 0, 0, 0);
+        let key_b = canon::request_key(&JobRequest::Plan(PlanJob::new(other.clone())), 0, 0, 0);
+        assert_ne!(key_a, key_b, "perturbed scenario must key differently");
+        assert_ne!(
+            plan_bytes(&base),
+            plan_bytes(&other),
+            "different keys, byte-identical plans: cache keys are finer than needed"
+        );
+    });
+}

@@ -135,3 +135,163 @@ fn typed_client_rides_the_hlo_planner() {
     assert!(res.winner_waste > 0.0 && res.winner_waste < 1.0);
     handle.stop();
 }
+
+// ---------------------------------------------------------------------------
+// Planner-less concurrency sweep (no pjrt backend needed): admission
+// gates, deadlines and client isolation under simultaneous load, plus
+// the stop() regression. Panic isolation under load lives with the
+// injection gate in tests/test_chaos.rs (`--features chaos`).
+// ---------------------------------------------------------------------------
+
+use ckptfp::api::{wire, JobRequest, SimulateJob};
+use ckptfp::config::{Predictor, Scenario};
+use ckptfp::model::StrategyKind;
+
+fn sim_scenario() -> Scenario {
+    let mut s = Scenario::paper(1 << 16, Predictor::exact(0.85, 0.82));
+    s.fault_dist = ckptfp::dist::DistSpec::Exp;
+    s.work = 2.0e5;
+    s
+}
+
+#[test]
+fn a_hundred_start_stop_cycles_with_zero_connections_return_promptly() {
+    // Regression for the loopback-nudge era: stop() used to dial its
+    // own listener to wake the accept loop, which could hang a service
+    // bound to an address it cannot dial and leaked the nudge
+    // connection. The event loop polls its stop flag instead, so a
+    // zero-connection stop is immediate — 100 cycles stay well under
+    // any accept-timeout multiple.
+    let started = std::time::Instant::now();
+    for _ in 0..100 {
+        let handle = serve(
+            Executor::new(ExecutorConfig { workers: 1, ..Default::default() }),
+            ServiceConfig {
+                addr: "127.0.0.1:0".into(),
+                sched_workers: 2,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        handle.stop();
+    }
+    assert!(
+        started.elapsed() < Duration::from_secs(60),
+        "100 idle start/stop cycles took {:?}",
+        started.elapsed()
+    );
+}
+
+#[test]
+fn connections_past_the_gate_get_a_structured_overloaded_reply() {
+    let handle = serve(
+        Executor::new(ExecutorConfig { workers: 1, ..Default::default() }),
+        ServiceConfig { addr: "127.0.0.1:0".into(), max_conns: 1, ..Default::default() },
+    )
+    .unwrap();
+    let addr = handle.addr.to_string();
+    let ping = wire::encode_request(&JobRequest::Ping);
+
+    let mut first = PlannerClient::connect(&addr).unwrap();
+    assert_eq!(
+        first.call(&ping).unwrap().get("pong").and_then(|b| b.as_bool()),
+        Some(true)
+    );
+    let mut second = PlannerClient::connect(&addr).unwrap();
+    let v = second.call(&ping).unwrap();
+    assert_eq!(v.get("ok").and_then(|b| b.as_bool()), Some(false));
+    let code = v
+        .get("error")
+        .and_then(|e| e.get("code"))
+        .and_then(|c| c.as_str().map(String::from));
+    assert_eq!(code.as_deref(), Some("overloaded"), "{v:?}");
+    assert!(v.num_or("retry_after_ms", 0.0) > 0.0, "{v:?}");
+    handle.stop();
+}
+
+#[test]
+fn deadline_expiry_is_structured_under_simultaneous_load() {
+    let budget = Duration::from_millis(300);
+    let handle = serve(
+        Executor::new(ExecutorConfig {
+            workers: 2,
+            deadline: Some(budget),
+            ..Default::default()
+        }),
+        ServiceConfig { addr: "127.0.0.1:0".into(), ..Default::default() },
+    )
+    .unwrap();
+    let addr = handle.addr.to_string();
+
+    let mut job = SimulateJob::new(sim_scenario(), StrategyKind::Young);
+    job.reps = 1_000_000; // far past a 300 ms budget
+    job.workers = Some(2);
+    let line = wire::encode_request(&JobRequest::Simulate(job));
+
+    std::thread::scope(|scope| {
+        for _ in 0..4 {
+            let addr = addr.clone();
+            let line = line.clone();
+            scope.spawn(move || {
+                let v = PlannerClient::connect(&addr).unwrap().call(&line).unwrap();
+                assert_eq!(v.get("ok").and_then(|b| b.as_bool()), Some(false));
+                let code = v
+                    .get("error")
+                    .and_then(|e| e.get("code"))
+                    .and_then(|c| c.as_str().map(String::from));
+                assert_eq!(code.as_deref(), Some("deadline_exceeded"), "{v:?}");
+            });
+        }
+    });
+
+    // Deadline errors are per-request: the service stays healthy.
+    let pong = PlannerClient::connect(&addr)
+        .unwrap()
+        .call(&wire::encode_request(&JobRequest::Ping))
+        .unwrap();
+    assert_eq!(pong.get("pong").and_then(|b| b.as_bool()), Some(true));
+    handle.stop();
+}
+
+#[test]
+fn mixed_valid_and_hostile_clients_stay_isolated() {
+    let handle = serve(
+        Executor::new(ExecutorConfig { workers: 2, reps_default: 4, ..Default::default() }),
+        ServiceConfig { addr: "127.0.0.1:0".into(), ..Default::default() },
+    )
+    .unwrap();
+    let addr = handle.addr.to_string();
+
+    std::thread::scope(|scope| {
+        for i in 0..8 {
+            let addr = addr.clone();
+            scope.spawn(move || {
+                let mut client = PlannerClient::connect(&addr).unwrap();
+                if i % 2 == 0 {
+                    // Hostile neighbors: garbage, then an oversized
+                    // line, then proof the connection still works.
+                    let v = client.call("this is not json").unwrap();
+                    assert_eq!(v.get("ok").and_then(|b| b.as_bool()), Some(false));
+                    let big = format!("{{\"pad\": \"{}\"}}", "x".repeat(wire::MAX_LINE_BYTES));
+                    let v = client.call(&big).unwrap();
+                    assert_eq!(v.get("ok").and_then(|b| b.as_bool()), Some(false));
+                    let pong =
+                        client.call(&wire::encode_request(&JobRequest::Ping)).unwrap();
+                    assert_eq!(pong.get("pong").and_then(|b| b.as_bool()), Some(true));
+                } else {
+                    // Well-behaved v1 neighbors get real plans.
+                    let mu = 7500.0 * (1.0 + i as f64 * 0.1);
+                    let v = client
+                        .call(&format!(
+                            r#"{{"mu": {mu}, "recall": 0.85, "precision": 0.82}}"#
+                        ))
+                        .unwrap();
+                    assert_eq!(v.get("ok").and_then(|b| b.as_bool()), Some(true), "{v:?}");
+                    let waste = v.num_or("winner_waste", f64::NAN);
+                    assert!(waste > 0.0 && waste < 1.0, "waste {waste}");
+                }
+            });
+        }
+    });
+    handle.stop();
+}

@@ -73,6 +73,67 @@ fn wrong_typed_fields_are_structured_errors() {
     assert_eq!(err.code, ErrorCode::UnsupportedVersion);
 }
 
+#[test]
+fn hostile_service_envelopes_are_structured_errors() {
+    // The tenant must be a string...
+    let err = decode_err("{\"v\": 2, \"op\": \"ping\", \"tenant\": 7}");
+    assert_eq!(err.code, ErrorCode::BadRequest);
+    assert!(err.message.contains("tenant"), "{}", err.message);
+
+    // ...and a non-empty one of at most 64 bytes.
+    let err = decode_err("{\"v\": 2, \"op\": \"ping\", \"tenant\": \"\"}");
+    assert_eq!(err.code, ErrorCode::BadRequest);
+    assert!(err.message.contains("1 to 64"), "{}", err.message);
+    let long = format!("{{\"v\": 2, \"op\": \"ping\", \"tenant\": \"{}\"}}", "t".repeat(65));
+    let err = decode_err(&long);
+    assert_eq!(err.code, ErrorCode::BadRequest);
+    assert!(err.message.contains("1 to 64"), "{}", err.message);
+
+    // The streaming opt-in must be a boolean.
+    let err = decode_err("{\"v\": 2, \"op\": \"ping\", \"stream\": \"yes\"}");
+    assert_eq!(err.code, ErrorCode::BadRequest);
+    assert!(err.message.contains("stream"), "{}", err.message);
+
+    // An exactly-64-byte tenant is the boundary case that must pass.
+    let edge = format!("{{\"v\": 2, \"op\": \"ping\", \"tenant\": \"{}\"}}", "t".repeat(64));
+    let (d, meta) = wire::decode_request_meta(&edge).unwrap();
+    assert!(matches!(d.request, JobRequest::Ping));
+    assert_eq!(meta.tenant.as_deref().map(str::len), Some(64));
+}
+
+#[test]
+fn hostile_stream_frames_are_structured_errors() {
+    fn frame_err(line: &str) -> ckptfp::api::ApiError {
+        wire::decode_stream_event(line).expect_err("hostile frame must not decode")
+    }
+
+    // A frame marker that is neither "partial" nor "final".
+    let err = frame_err("{\"v\": 2, \"ok\": true, \"frame\": \"middle\", \"seq\": 0}");
+    assert_eq!(err.code, ErrorCode::BadRequest);
+    assert!(err.message.contains("partial"), "{}", err.message);
+    let err = frame_err("{\"v\": 2, \"ok\": true, \"frame\": 7}");
+    assert_eq!(err.code, ErrorCode::BadRequest);
+
+    // Partial frames missing each mandatory field in turn.
+    let err = frame_err("{\"v\": 2, \"ok\": true, \"frame\": \"partial\", \"seq\": 0, \"item\": {}}");
+    assert!(err.message.contains("job"), "{}", err.message);
+    let err =
+        frame_err("{\"v\": 2, \"ok\": true, \"frame\": \"partial\", \"job\": \"sweep\", \"item\": {}}");
+    assert!(err.message.contains("seq"), "{}", err.message);
+    let err =
+        frame_err("{\"v\": 2, \"ok\": true, \"frame\": \"partial\", \"job\": \"sweep\", \"seq\": 0}");
+    assert!(err.message.contains("item"), "{}", err.message);
+
+    // A final frame whose payload is not a response at all.
+    let err = frame_err("{\"frame\": \"final\", \"seq\": 1}");
+    assert_eq!(err.code, ErrorCode::BadRequest);
+    assert!(err.message.contains("ok"), "{}", err.message);
+
+    // Garbage bytes fail as JSON before frame dispatch.
+    let err = frame_err("{\"frame\": ");
+    assert_eq!(err.code, ErrorCode::InvalidJson);
+}
+
 // ---------------------------------------------------------------------------
 // Live-service corpus: the connection survives every bad line
 // ---------------------------------------------------------------------------
@@ -169,6 +230,48 @@ fn connection_survives_the_whole_hostile_corpus() {
     match wire::decode_response(&line).unwrap() {
         JobResponse::Stats(s) => assert!(s.errors >= 4, "stats: {s:?}"),
         other => panic!("expected stats, got {other:?}"),
+    }
+
+    drop(conn);
+    handle.stop();
+}
+
+#[test]
+fn hostile_envelopes_over_the_wire_keep_the_connection_alive() {
+    let (handle, addr) = start_service();
+    let mut conn = RawConn::connect(&addr);
+
+    // A bad tenant is a structured v2 error, not a dropped connection.
+    let line = conn.roundtrip_bytes(b"{\"v\": 2, \"op\": \"ping\", \"tenant\": []}");
+    match wire::decode_response(&line).unwrap() {
+        JobResponse::Error(e) => {
+            assert_eq!(e.code, ErrorCode::BadRequest);
+            assert!(e.message.contains("tenant"), "{}", e.message);
+        }
+        other => panic!("expected an error for the bad tenant, got {other:?}"),
+    }
+
+    // A well-formed tenant-tagged request on the same connection works.
+    let tagged = wire::encode_request_tagged(
+        &JobRequest::Ping,
+        &wire::RequestMeta { tenant: Some("acme".into()), stream: false },
+    );
+    let line = conn.roundtrip_bytes(tagged.as_bytes());
+    match wire::decode_response(&line).unwrap() {
+        JobResponse::Pong => {}
+        other => panic!("expected pong, got {other:?}"),
+    }
+
+    // Asking to stream a non-streamable job degrades to a single
+    // ordinary line — pinned here as the client-visible behavior.
+    let tagged = wire::encode_request_tagged(
+        &JobRequest::Ping,
+        &wire::RequestMeta { tenant: None, stream: true },
+    );
+    let line = conn.roundtrip_bytes(tagged.as_bytes());
+    match wire::decode_stream_event(&line).unwrap() {
+        wire::StreamEvent::Final { seq: None, response: JobResponse::Pong } => {}
+        other => panic!("expected an unframed pong, got {other:?}"),
     }
 
     drop(conn);

@@ -27,6 +27,8 @@ const REQUESTS_V2: &str = include_str!("fixtures/requests_v2.jsonl");
 const RESPONSES_V2: &str = include_str!("fixtures/responses_v2.jsonl");
 const RESPONSES_V1: &str = include_str!("fixtures/responses_v1.jsonl");
 const REQUESTS_V1: &str = include_str!("fixtures/requests_v1.jsonl");
+const REQUESTS_TAGGED_V2: &str = include_str!("fixtures/requests_tagged_v2.jsonl");
+const STREAM_V2: &str = include_str!("fixtures/stream_v2.jsonl");
 
 fn lines(s: &str) -> Vec<&str> {
     s.lines().filter(|l| !l.trim().is_empty()).collect()
@@ -159,6 +161,10 @@ fn golden_stats() -> ServiceStats {
         client_retries: 7,
         batch_lanes_run: 512,
         batch_lane_fallbacks: 4,
+        cache_hits: 6,
+        cache_misses: 4,
+        cache_evictions: 1,
+        cache_entries: 3,
         batcher: Some(BatcherSnapshot { requests: 3, batches: 1, max_batch: 3 }),
     }
 }
@@ -301,6 +307,92 @@ fn v2_response_fixtures_pin_both_directions() {
         let decoded = wire::decode_response(line)
             .unwrap_or_else(|e| panic!("response {i} failed to decode: {e}"));
         assert_eq!(&decoded, resp, "response {i}: decode drifted");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Service envelope + streaming frames (additive v2)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn tagged_request_fixtures_pin_the_service_envelope() {
+    let fixture = lines(REQUESTS_TAGGED_V2);
+    let typed: Vec<(JobRequest, wire::RequestMeta)> = vec![
+        (
+            JobRequest::Sweep(SweepJob {
+                base: golden_scenario(),
+                n_procs: vec![1 << 14, 1 << 16, 1 << 19],
+                capping: Capping::Uncapped,
+            }),
+            wire::RequestMeta { tenant: Some("acme".into()), stream: true },
+        ),
+        (
+            JobRequest::Ping,
+            wire::RequestMeta { tenant: Some("beta".into()), stream: false },
+        ),
+    ];
+    assert_eq!(fixture.len(), typed.len());
+    for (i, (line, (req, meta))) in fixture.iter().zip(&typed).enumerate() {
+        let encoded = wire::encode_request_tagged(req, meta);
+        assert_eq!(&encoded, line, "tagged request {i}: encoding drifted");
+        let (decoded, got_meta) = wire::decode_request_meta(line)
+            .unwrap_or_else(|e| panic!("tagged request {i} failed to decode: {e}"));
+        assert!(!decoded.legacy, "tagged request {i}: v2 lines are not legacy");
+        assert_eq!(&decoded.request, req, "tagged request {i}: request drifted");
+        assert_eq!(&got_meta, meta, "tagged request {i}: envelope drifted");
+    }
+}
+
+#[test]
+fn streaming_frame_fixtures_pin_both_directions() {
+    let fixture = lines(STREAM_V2);
+    assert_eq!(fixture.len(), 3);
+    // The streamed response is the golden sweep; its per-row items come
+    // from the same `stream_items` hook the service uses.
+    let resp = golden_responses()
+        .into_iter()
+        .find(|r| matches!(r, JobResponse::Sweep(_)))
+        .unwrap();
+    let (job, items) = wire::stream_items(&resp).expect("sweeps are streamable");
+    assert_eq!(job, "sweep");
+    assert_eq!(items.len(), 2);
+
+    // Partial frames: typed -> bytes and bytes -> typed, with each
+    // `item` byte-identical to the row embedded in the final payload.
+    for (seq, (line, item)) in fixture.iter().zip(&items).enumerate() {
+        let encoded = wire::encode_stream_partial(job, seq as u64, item.clone());
+        assert_eq!(&encoded, line, "partial frame {seq}: encoding drifted");
+        match wire::decode_stream_event(line).unwrap() {
+            wire::StreamEvent::Partial { job: j, seq: s, item: it } => {
+                assert_eq!(j, "sweep");
+                assert_eq!(s, seq as u64);
+                assert_eq!(&it, item, "partial frame {seq}: item drifted");
+            }
+            other => panic!("partial frame {seq} decoded to {other:?}"),
+        }
+    }
+
+    // Final frame: the complete standard payload plus frame/seq markers.
+    let final_line = fixture[2];
+    assert_eq!(
+        wire::encode_stream_final(&resp, items.len() as u64),
+        final_line,
+        "final frame: encoding drifted"
+    );
+    match wire::decode_stream_event(final_line).unwrap() {
+        wire::StreamEvent::Final { seq, response } => {
+            assert_eq!(seq, Some(2));
+            assert_eq!(response, resp, "final frame: payload drifted");
+        }
+        other => panic!("final frame decoded to {other:?}"),
+    }
+
+    // Plain (unframed) responses decode as `Final { seq: None, .. }` —
+    // the client can read streamed and unstreamed exchanges uniformly.
+    let plain = wire::encode_response(&resp, false);
+    match wire::decode_stream_event(&plain).unwrap() {
+        wire::StreamEvent::Final { seq: None, response } => assert_eq!(response, resp),
+        other => panic!("plain response decoded to {other:?}"),
     }
 }
 

@@ -200,6 +200,12 @@ STATS_PAYLOAD = {
     # through batch chunks, lanes that fell back on a bank underrun.
     "batch_lanes_run": 512,
     "batch_lane_fallbacks": 4,
+    # Additive plan-cache counters (v2 only): memoized Plan/BestPeriod/
+    # Sweep lookups, live entry count, LRU evictions.
+    "cache_hits": 6,
+    "cache_misses": 4,
+    "cache_evictions": 1,
+    "cache_entries": 3,
     "batcher": {"requests": 3, "batches": 1, "max_batch": 3},
 }
 
@@ -209,7 +215,8 @@ STATS_DEFAULT = {
     "lat_n": 0, "banks_built": 0, "bank_replays": 0, "bank_fallbacks": 0,
     "bank_bytes_resident": 0, "rejected_overloaded": 0, "deadline_exceeded": 0,
     "panics_contained": 0, "client_retries": 0, "batch_lanes_run": 0,
-    "batch_lane_fallbacks": 0,
+    "batch_lane_fallbacks": 0, "cache_hits": 0, "cache_misses": 0,
+    "cache_evictions": 0, "cache_entries": 0,
 }
 
 RESPONSES_V2 = [
@@ -249,6 +256,27 @@ REQUESTS_V1 = [
     '{"op": "stats"}',
 ]
 
+# Requests carrying the additive service envelope: `tenant` (queue and
+# billing identity, 1..=64 bytes) and `stream` (opt into partial-result
+# frames). The fields sort into place like any other key, so tagged
+# lines stay canonical.
+REQUESTS_TAGGED_V2 = [
+    {"v": 2, "op": "sweep", "scenario": scenario(), "n_procs": [16384, 65536, 524288],
+     "capped": False, "tenant": "acme", "stream": True},
+    {"v": 2, "op": "ping", "tenant": "beta"},
+]
+
+# A streamed sweep exchange: one partial frame per row — each `item`
+# byte-identical to the row inside the final payload — then the final
+# frame, which is the standard v2 response plus frame/seq markers.
+STREAM_V2 = [
+    {"v": 2, "ok": True, "frame": "partial", "job": "sweep", "seq": 0,
+     "item": SWEEP_PAYLOAD["rows"][0]},
+    {"v": 2, "ok": True, "frame": "partial", "job": "sweep", "seq": 1,
+     "item": SWEEP_PAYLOAD["rows"][1]},
+    {"v": 2, "ok": True, "frame": "final", "seq": 2, "job": "sweep", **SWEEP_PAYLOAD},
+]
+
 
 def main():
     os.makedirs(OUT, exist_ok=True)
@@ -257,6 +285,8 @@ def main():
         "responses_v2.jsonl": [jval(r) for r in RESPONSES_V2],
         "responses_v1.jsonl": [jval(r) for r in RESPONSES_V1],
         "requests_v1.jsonl": REQUESTS_V1,
+        "requests_tagged_v2.jsonl": [jval(r) for r in REQUESTS_TAGGED_V2],
+        "stream_v2.jsonl": [jval(r) for r in STREAM_V2],
     }
     for name, lines in files.items():
         path = os.path.join(OUT, name)
