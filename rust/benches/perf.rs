@@ -10,9 +10,11 @@
 //!   best_period          brute-force period search, 1 worker vs all
 //!   best_period_crn      replay-backed sweep vs live sweep at equal reps
 //!   lockstep_vs_scalar   lockstep batch engine vs scalar replay over one bank
+//!   wide_vs_lockstep     wide SoA kernel vs lockstep vs scalar over one bank
 //!   platform_step        multi-node platform source vs the classic engine
 //!   model                closed-form planner throughput (the non-AOT baseline)
 //!   waste_grid_batched   batched closed-form grid vs the per-row plan loop
+//!   waste_grid_accel     HLO-batcher waste grid vs the batched CPU pass
 //!
 //! Every run also emits `BENCH_perf.json` (one object per executed
 //! bench, schema documented in EXPERIMENTS.md §Perf) so the perf
@@ -25,7 +27,7 @@ use ckptfp::dist::DistSpec;
 use ckptfp::coordinator::{run_parallel_fold, Batcher, BatcherConfig};
 use ckptfp::model::{plan, Capping, Params, StrategyKind};
 use ckptfp::runtime::HloPlanner;
-use ckptfp::sim::{simulate_once, BatchEngine, BatchOptions, BatchRunner, SimSession};
+use ckptfp::sim::{simulate_once, BatchEngine, BatchOptions, BatchRunner, SimSession, WideKernel};
 use ckptfp::strategies::{best_period_with, spec_for, BestPeriodOptions};
 use ckptfp::util::json::Json;
 use ckptfp::util::stats::Summary;
@@ -474,6 +476,87 @@ fn bench_lockstep(rec: &mut Recorder) {
     rec.push("lockstep_vs_scalar", fields);
 }
 
+fn bench_wide(rec: &mut Recorder) {
+    println!("== wide SoA kernel vs lockstep vs scalar (one shared bank) ==");
+    // The tentpole comparison: the same banked replications advanced by
+    // the scalar replay session, the lockstep engine and the wide
+    // struct-of-arrays kernel at matching widths. Outcomes are
+    // bit-identical (pinned by tests/test_batch.rs), so the deltas are
+    // pure time-accounting layout: lockstep pays per-lane engine
+    // structs and a chunk driver; wide keeps every lane's clock,
+    // segment progress and accumulators in contiguous columns and
+    // sweeps them one event-phase at a time.
+    let mut s = Scenario::paper(1 << 19, predictor_yu(300.0));
+    s.fault_dist = DistSpec::weibull(0.7);
+    let spec = spec_for(StrategyKind::NoCkptI, &s, Capping::Uncapped);
+    let policy = ckptfp::sim::Policy::from_spec(&spec, s.platform.c);
+    let lead = spec.required_lead(s.platform.c);
+    let bank_reps = 256u64;
+    let bank = match ckptfp::trace::TraceBank::try_build(&s, lead, bank_reps).expect("bank build")
+    {
+        Some(b) => std::sync::Arc::new(b),
+        None => {
+            println!("  skipped: bank declined (arena cap)");
+            rec.push("wide_vs_lockstep", vec![("skipped", Json::Bool(true))]);
+            return;
+        }
+    };
+    let reps: Vec<u64> = (0..bank_reps).collect();
+    let mut fields: Vec<(&str, Json)> = Vec::new();
+
+    let mut rate_of = |runner: &mut BatchRunner| -> f64 {
+        runner.run_reps(&reps, |_, out| {
+            std::hint::black_box(out.n_segments);
+        }); // warmup
+        let t0 = Instant::now();
+        let mut passes = 0u64;
+        while t0.elapsed().as_secs_f64() < 1.0 {
+            runner.run_reps(&reps, |_, out| {
+                std::hint::black_box(out.n_segments);
+            });
+            passes += 1;
+        }
+        passes as f64 * bank_reps as f64 / t0.elapsed().as_secs_f64()
+    };
+
+    let mut scalar = BatchRunner::Scalar(
+        SimSession::replay(bank.clone(), &s, policy).expect("replay session"),
+    );
+    let scalar_rate = rate_of(&mut scalar);
+    println!("  scalar replay session        {scalar_rate:>8.0} reps/s");
+    fields.push(("scalar_reps_per_s", Json::Num(scalar_rate)));
+
+    let mut lockstep = BatchRunner::Lockstep(
+        BatchEngine::new(bank.clone(), &s, policy, 16).expect("batch engine"),
+    );
+    let lockstep_rate = rate_of(&mut lockstep);
+    println!(
+        "  lockstep lanes=16            {lockstep_rate:>8.0} reps/s  ({:.2}x vs scalar)",
+        lockstep_rate / scalar_rate
+    );
+    fields.push(("lockstep_reps_per_s", Json::Num(lockstep_rate)));
+
+    for (width, key) in
+        [(8usize, "wide_reps_per_s_w8"), (16, "wide_reps_per_s_w16"), (32, "wide_reps_per_s_w32")]
+    {
+        let mut runner = BatchRunner::Wide(
+            WideKernel::new(bank.clone(), &s, policy, width).expect("wide kernel"),
+        );
+        let r = rate_of(&mut runner);
+        println!(
+            "  wide width={width:<2}                {r:>8.0} reps/s  ({:.2}x vs scalar, {:.2}x vs lockstep)",
+            r / scalar_rate,
+            r / lockstep_rate
+        );
+        fields.push((key, Json::Num(r)));
+        if width == 16 {
+            fields.push(("speedup_vs_scalar", Json::Num(r / scalar_rate)));
+            fields.push(("speedup_vs_lockstep", Json::Num(r / lockstep_rate)));
+        }
+    }
+    rec.push("wide_vs_lockstep", fields);
+}
+
 fn bench_platform_step(rec: &mut Recorder) {
     println!("== platform layer (multi-node event merge overhead) ==");
     // The same NoCkptI workload as `sim`, stepped through the platform
@@ -548,6 +631,47 @@ fn bench_waste_grid_batched(rec: &mut Recorder) {
     );
 }
 
+fn bench_waste_grid_accel(rec: &mut Recorder) {
+    println!("== accelerated waste grid (HLO batcher) vs batched CPU pass ==");
+    // The Executor::waste_grid routing in isolation: the same 4096-row
+    // grid served by the pjrt-gated HLO batcher and by the vectorized
+    // CPU pass. The CPU pass stays the bit-equality reference (the HLO
+    // pipeline computes in f32); the delta is device throughput. On a
+    // build without PJRT artifacts the batcher fails to spawn and the
+    // bench records skipped, like `planner`/`batcher` above.
+    let batcher = match Batcher::spawn(HloPlanner::open_default, BatcherConfig::default()) {
+        Ok(b) => b,
+        Err(e) => {
+            println!("  skipped: {e}");
+            rec.push("waste_grid_accel", vec![("skipped", Json::Bool(true))]);
+            return;
+        }
+    };
+    let rows = params_batch(4096);
+    let t_cpu = time("waste_grid_batched x4096 (CPU)", 20, || {
+        std::hint::black_box(ckptfp::model::waste_grid_batched(&rows, Capping::Uncapped));
+    });
+    let t_hlo = time("batcher.waste_grid x4096 (HLO)", 20, || {
+        std::hint::black_box(batcher.waste_grid(rows.clone()).expect("hlo grid"));
+    });
+    let speedup = t_cpu / t_hlo;
+    println!(
+        "  accel speedup: {speedup:.2}x  ({:.0} rows/s via HLO)",
+        rows.len() as f64 / t_hlo
+    );
+    rec.push(
+        "waste_grid_accel",
+        vec![
+            ("cpu_s", Json::Num(t_cpu)),
+            ("hlo_s", Json::Num(t_hlo)),
+            ("rows_per_s_cpu", Json::Num(rows.len() as f64 / t_cpu)),
+            ("rows_per_s_hlo", Json::Num(rows.len() as f64 / t_hlo)),
+            ("speedup", Json::Num(speedup)),
+        ],
+    );
+    batcher.shutdown();
+}
+
 fn main() {
     let which: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with("--")).collect();
     let run = |name: &str| which.is_empty() || which.iter().any(|w| w == name);
@@ -580,6 +704,9 @@ fn main() {
     if run("lockstep_vs_scalar") {
         bench_lockstep(&mut rec);
     }
+    if run("wide_vs_lockstep") {
+        bench_wide(&mut rec);
+    }
     if run("platform_step") {
         bench_platform_step(&mut rec);
     }
@@ -588,6 +715,9 @@ fn main() {
     }
     if run("waste_grid_batched") {
         bench_waste_grid_batched(&mut rec);
+    }
+    if run("waste_grid_accel") {
+        bench_waste_grid_accel(&mut rec);
     }
     if which.is_empty() {
         rec.write("BENCH_perf.json");

@@ -442,6 +442,28 @@ impl Executor {
         Ok(SweepResult { rows, via_hlo })
     }
 
+    /// Evaluate the full (strategy × scenario) waste grid, riding the
+    /// HLO batcher when one is attached. The PJRT artifacts bake in
+    /// the uncapped closed forms, so only `Capping::Uncapped` grids
+    /// are eligible for the accelerator; capped grids (and every grid
+    /// on a batcher-less executor) take the vectorized CPU pass —
+    /// which also stays the bit-equality reference, because the HLO
+    /// pipeline computes in f32. Returns the grid plus whether the
+    /// accelerator served it.
+    pub fn waste_grid(
+        &self,
+        params: &[Params],
+        capping: model::Capping,
+    ) -> Result<(model::WasteGrid, bool), ApiError> {
+        if capping == model::Capping::Uncapped {
+            if let Some(b) = &self.batcher {
+                let grid = b.waste_grid(params.to_vec()).map_err(ApiError::from_internal)?;
+                return Ok((grid, true));
+            }
+        }
+        Ok((model::waste_grid_batched(params, capping), false))
+    }
+
     /// Run the conformance grid (the `verify` subsystem) on the worker
     /// pool. Deterministic for a fixed `(grid, reps, budget, workers)`
     /// tuple — a TCP-served `Verify` is bit-identical to the in-process
@@ -461,6 +483,7 @@ impl Executor {
         let finite = |x: f64| if x.is_finite() { x } else { 0.0 };
         let bank = crate::trace::bank::counters();
         let batch = crate::sim::batch::counters();
+        let wide = crate::sim::wide::counters();
         let cache = self.cache.snapshot();
         ServiceStats {
             requests: self.metrics.get("requests"),
@@ -484,6 +507,8 @@ impl Executor {
             client_retries: super::client::client_retries(),
             batch_lanes_run: batch.lanes_run,
             batch_lane_fallbacks: batch.lane_fallbacks,
+            wide_lanes_run: wide.lanes_run,
+            wide_evictions: wide.evictions,
             cache_hits: cache.hits,
             cache_misses: cache.misses,
             cache_evictions: cache.evictions,

@@ -310,6 +310,12 @@ pub struct ServiceStats {
     /// generation on a bank underrun.
     pub batch_lanes_run: u64,
     pub batch_lane_fallbacks: u64,
+    /// Wide SoA kernel counters (additive v2 fields; process-global,
+    /// see [`crate::sim::wide::counters`]): lanes swept through the
+    /// struct-of-arrays kernel, and lanes evicted to the scalar
+    /// fallback (bank underrun or inexpressible state).
+    pub wide_lanes_run: u64,
+    pub wide_evictions: u64,
     /// Plan-cache counters (additive v2 fields; per-executor, see
     /// [`crate::coordinator::PlanCache`]): lookups served from the
     /// memoized Plan/BestPeriod/Sweep cache, lookups that missed,

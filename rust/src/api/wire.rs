@@ -493,6 +493,8 @@ fn encode_response_framed(resp: &JobResponse, legacy: bool, final_seq: Option<u6
                     ("client_retries", Json::Num(s.client_retries as f64)),
                     ("batch_lanes_run", Json::Num(s.batch_lanes_run as f64)),
                     ("batch_lane_fallbacks", Json::Num(s.batch_lane_fallbacks as f64)),
+                    ("wide_lanes_run", Json::Num(s.wide_lanes_run as f64)),
+                    ("wide_evictions", Json::Num(s.wide_evictions as f64)),
                     ("cache_hits", Json::Num(s.cache_hits as f64)),
                     ("cache_misses", Json::Num(s.cache_misses as f64)),
                     ("cache_evictions", Json::Num(s.cache_evictions as f64)),
@@ -777,6 +779,8 @@ pub fn decode_response(line: &str) -> Result<JobResponse, ApiError> {
                 client_retries: u64_or(&v, "client_retries", 0),
                 batch_lanes_run: u64_or(&v, "batch_lanes_run", 0),
                 batch_lane_fallbacks: u64_or(&v, "batch_lane_fallbacks", 0),
+                wide_lanes_run: u64_or(&v, "wide_lanes_run", 0),
+                wide_evictions: u64_or(&v, "wide_evictions", 0),
                 cache_hits: u64_or(&v, "cache_hits", 0),
                 cache_misses: u64_or(&v, "cache_misses", 0),
                 cache_evictions: u64_or(&v, "cache_evictions", 0),

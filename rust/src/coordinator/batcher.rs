@@ -15,6 +15,7 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::model::batched::WasteGrid;
 use crate::model::Params;
 use crate::runtime::{HloPlanner, PlanOutput};
 
@@ -140,6 +141,26 @@ impl Batcher {
             .into_iter()
             .map(|r| r.recv().map_err(|_| anyhow::anyhow!("batcher dropped request"))?)
             .collect()
+    }
+
+    /// Evaluate the full (strategy × scenario) optimum grid through
+    /// the HLO path: one batched plan per row, repacked into the
+    /// [`WasteGrid`] row-major layout (`StrategyKind` index order —
+    /// the same layout [`crate::model::batched::waste_grid_batched`]
+    /// produces, so callers can swap backends without reshaping).
+    /// The HLO pipeline computes in f32, so the closed-form CPU pass
+    /// stays the bit-equality reference; this path trades precision
+    /// for device throughput exactly like [`Batcher::plan`].
+    pub fn waste_grid(&self, params: Vec<Params>) -> anyhow::Result<WasteGrid> {
+        let n = params.len();
+        let outputs = self.plan_many(params)?;
+        let mut period = Vec::with_capacity(n * 6);
+        let mut waste = Vec::with_capacity(n * 6);
+        for out in &outputs {
+            period.extend_from_slice(&out.period);
+            waste.extend_from_slice(&out.waste);
+        }
+        Ok(WasteGrid { n, period, waste })
     }
 
     pub fn stats(&self) -> BatcherStats {

@@ -8,17 +8,38 @@
 //! disagree with a recomputed one — so the only thing this cache
 //! manages is capacity. Eviction is plain least-recently-used.
 //!
+//! The store is hash-partitioned into [`SHARDS`] independently locked
+//! shards once the capacity is large enough ([`SHARD_MIN_CAPACITY`])
+//! for the split to make sense: concurrent connection threads then
+//! contend only when their keys land in the same shard. Small caches
+//! keep a single shard, which is byte-for-byte the original global
+//! LRU. Recency and eviction are per shard (the victim is the least
+//! recently used entry *in the key's shard*), but the counters are
+//! global atomics, so hits + misses + evictions + entries sum
+//! identically however the keys scatter.
+//!
 //! Shared across [`crate::api::Executor`] clones (one cache per
 //! service), panic-safe (a poisoned inner lock is taken over rather
 //! than propagated, like every other coordinator lock), and counted:
 //! hits, misses and evictions feed `ServiceStats` and the CLI.
 
 use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use super::metrics::lock_unpoisoned;
 use crate::api::JobResponse;
+
+/// Shard count for large caches (power of two, but selection is by
+/// modulo so nothing depends on that).
+const SHARDS: usize = 8;
+
+/// Below this capacity the cache stays single-sharded: splitting a
+/// tiny capacity across 8 locks would leave shards of a handful of
+/// entries each, where partitioned LRU visibly diverges from the
+/// global order and lock contention is a non-problem anyway.
+const SHARD_MIN_CAPACITY: usize = 64;
 
 /// Point-in-time cache counters, as reported on `stats`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -38,14 +59,21 @@ struct Entry {
 
 struct Inner {
     map: HashMap<String, Entry>,
-    /// Monotone logical clock for recency stamps.
+    /// Monotone logical clock for recency stamps (per shard).
     tick: u64,
+}
+
+/// One independently locked partition of the store.
+struct Shard {
+    inner: Mutex<Inner>,
+    /// This shard's slice of the total capacity bound.
+    capacity: usize,
 }
 
 /// The memoized response store. `capacity == 0` disables it: every
 /// lookup misses without counting, every insert is dropped.
 pub struct PlanCache {
-    inner: Mutex<Inner>,
+    shards: Vec<Shard>,
     capacity: usize,
     hits: AtomicU64,
     misses: AtomicU64,
@@ -54,8 +82,18 @@ pub struct PlanCache {
 
 impl PlanCache {
     pub fn new(capacity: usize) -> PlanCache {
+        let n = if capacity >= SHARD_MIN_CAPACITY { SHARDS } else { 1 };
+        // Distribute the bound exactly: base everywhere, the remainder
+        // spread one-per-shard, so shard capacities sum to `capacity`.
+        let (base, rem) = (capacity / n, capacity % n);
+        let shards = (0..n)
+            .map(|i| Shard {
+                inner: Mutex::new(Inner { map: HashMap::new(), tick: 0 }),
+                capacity: base + usize::from(i < rem),
+            })
+            .collect();
         PlanCache {
-            inner: Mutex::new(Inner { map: HashMap::new(), tick: 0 }),
+            shards,
             capacity,
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
@@ -67,6 +105,12 @@ impl PlanCache {
         self.capacity > 0
     }
 
+    fn shard(&self, key: &str) -> &Shard {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        key.hash(&mut h);
+        &self.shards[(h.finish() as usize) % self.shards.len()]
+    }
+
     /// Look one key up, refreshing its recency on a hit. Counts the
     /// hit or miss (a disabled cache counts nothing — it is absent,
     /// not cold).
@@ -74,7 +118,7 @@ impl PlanCache {
         if !self.enabled() {
             return None;
         }
-        let mut inner = lock_unpoisoned(&self.inner);
+        let mut inner = lock_unpoisoned(&self.shard(key).inner);
         inner.tick += 1;
         let tick = inner.tick;
         match inner.map.get_mut(key) {
@@ -91,17 +135,19 @@ impl PlanCache {
     }
 
     /// Insert (or refresh) one entry, evicting the least-recently-used
-    /// entry if the capacity bound would be exceeded.
+    /// entry in the key's shard if its capacity slice would be
+    /// exceeded.
     pub fn put(&self, key: String, resp: JobResponse) {
         if !self.enabled() {
             return;
         }
-        let mut inner = lock_unpoisoned(&self.inner);
+        let shard = self.shard(&key);
+        let mut inner = lock_unpoisoned(&shard.inner);
         inner.tick += 1;
         let tick = inner.tick;
-        if !inner.map.contains_key(&key) && inner.map.len() >= self.capacity {
+        if !inner.map.contains_key(&key) && inner.map.len() >= shard.capacity {
             // O(n) victim scan: evictions only happen on misses past
-            // capacity, and the map is small (hundreds of entries), so
+            // capacity, and each shard is small (dozens of entries), so
             // a scan beats the bookkeeping of an intrusive LRU list.
             if let Some(victim) =
                 inner.map.iter().min_by_key(|(_, e)| e.used).map(|(k, _)| k.clone())
@@ -114,7 +160,8 @@ impl PlanCache {
     }
 
     pub fn snapshot(&self) -> CacheSnapshot {
-        let entries = lock_unpoisoned(&self.inner).map.len() as u64;
+        let entries: u64 =
+            self.shards.iter().map(|s| lock_unpoisoned(&s.inner).map.len() as u64).sum();
         CacheSnapshot {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
@@ -176,5 +223,55 @@ mod tests {
         c.put("a".into(), resp("a"));
         assert!(c.get("a").is_none());
         assert_eq!(c.snapshot(), CacheSnapshot::default());
+    }
+
+    #[test]
+    fn small_capacities_stay_single_sharded() {
+        let c = PlanCache::new(SHARD_MIN_CAPACITY - 1);
+        assert_eq!(c.shards.len(), 1);
+        assert_eq!(c.shards[0].capacity, SHARD_MIN_CAPACITY - 1);
+    }
+
+    #[test]
+    fn shard_capacities_sum_to_the_configured_bound() {
+        for cap in [64usize, 65, 100, 512, 513] {
+            let c = PlanCache::new(cap);
+            assert_eq!(c.shards.len(), SHARDS, "capacity {cap}");
+            assert_eq!(c.shards.iter().map(|s| s.capacity).sum::<usize>(), cap);
+            // The remainder spreads evenly: no shard is more than one
+            // entry larger than another.
+            let caps: Vec<usize> = c.shards.iter().map(|s| s.capacity).collect();
+            let (lo, hi) = (caps.iter().min().unwrap(), caps.iter().max().unwrap());
+            assert!(hi - lo <= 1, "capacity {cap}: uneven split {caps:?}");
+        }
+    }
+
+    #[test]
+    fn sharded_cache_counts_and_bounds_like_the_global_one() {
+        let cap = 64;
+        let c = PlanCache::new(cap);
+        // Twice the capacity of distinct keys: every put misses first,
+        // and the resident total never exceeds the configured bound.
+        let keys: Vec<String> = (0..cap * 2).map(|i| format!("key-{i}")).collect();
+        for k in &keys {
+            assert!(c.get(k).is_none());
+            c.put(k.clone(), resp(k));
+        }
+        let s = c.snapshot();
+        assert_eq!(s.misses, (cap * 2) as u64);
+        assert!(s.entries <= cap as u64, "resident {} > capacity {cap}", s.entries);
+        // Per-shard conservation: inserts = resident + evicted, whatever
+        // the hash scatter did.
+        assert_eq!(s.entries + s.evictions, (cap * 2) as u64);
+        // Everything still resident hits and round-trips its payload.
+        let mut hits = 0;
+        for k in &keys {
+            if let Some(got) = c.get(k) {
+                assert_eq!(got, resp(k), "payload survived sharding for {k}");
+                hits += 1;
+            }
+        }
+        assert_eq!(hits, s.entries, "snapshot agrees with rescan");
+        assert_eq!(c.snapshot().hits, hits);
     }
 }

@@ -53,9 +53,19 @@ use crate::api::{wire, ApiError, ErrorCode, Executor, JobRequest, JobResponse};
 use crate::util::cancel::CancelToken;
 use crate::util::json::Json;
 
-/// Event-loop tick: how long the loop sleeps when no socket made
-/// progress. Bounds stop latency and completion-delivery latency.
+/// Event-loop tick: how long the loop sleeps after the *first* idle
+/// pass. Bounds stop latency and completion-delivery latency while
+/// traffic is flowing.
 const TICK: Duration = Duration::from_millis(1);
+
+/// Idle-backoff ceiling: consecutive idle passes double the sleep from
+/// [`TICK`] up to here, then hold. A long-idle service burns ~100
+/// wakeups/s instead of ~1000; the first readiness of any kind (accept,
+/// read, completion, flush) resets the sleep to [`TICK`], so the worst
+/// added latency for the request that *ends* an idle stretch is one
+/// ceiling tick. No wire-visible behavior changes — this only retunes
+/// when the loop polls.
+const TICK_IDLE_MAX: Duration = Duration::from_millis(10);
 
 /// Reads hard-close past this much buffered line data: beyond it there
 /// is no trustworthy message boundary to resync on. Lines between
@@ -692,6 +702,8 @@ fn event_loop(
     // `cfg.drain` to flush its partial responses before we give up.
     let mut drain_deadline: Option<Instant> = None;
     let mut hard_deadline: Option<Instant> = None;
+    // Adaptive idle backoff: the current sleep for a no-progress pass.
+    let mut idle_tick = TICK;
     loop {
         let mut busy = false;
         let now = Instant::now();
@@ -807,7 +819,10 @@ fn event_loop(
         }
 
         if !busy {
-            std::thread::sleep(TICK);
+            std::thread::sleep(idle_tick);
+            idle_tick = (idle_tick * 2).min(TICK_IDLE_MAX);
+        } else {
+            idle_tick = TICK;
         }
     }
     // Dropping `conns` closes every socket; dropping the listener

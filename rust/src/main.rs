@@ -518,6 +518,10 @@ fn cmd_client(args: &mut Args) -> anyhow::Result<()> {
                 "plan cache: {} hits / {} misses ({} entries, {} evictions)",
                 s.cache_hits, s.cache_misses, s.cache_entries, s.cache_evictions
             );
+            println!(
+                "sim lanes: lockstep {} ({} fallbacks) | wide {} ({} evictions)",
+                s.batch_lanes_run, s.batch_lane_fallbacks, s.wide_lanes_run, s.wide_evictions
+            );
         }
         other => anyhow::bail!("unknown client verb '{other}'"),
     }

@@ -47,27 +47,38 @@ pub const DEFAULT_LANES: usize = 8;
 
 /// Lane-count knob for the batch engine. `lanes = 0` selects the
 /// pinned scalar path (one [`SimSession`] per worker, exactly the
-/// pre-batch code shape); any other value runs lockstep chunks of that
-/// width over the trace bank.
+/// pre-batch code shape); any other value runs chunks of that width
+/// over the trace bank — through the wide SoA kernel
+/// ([`crate::sim::wide::WideKernel`]) when `wide` is set (the
+/// default), through per-lane lockstep engines otherwise.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct BatchOptions {
-    /// Replications advanced per lockstep chunk; `0` = scalar path.
+    /// Replications advanced per chunk; `0` = scalar path.
     pub lanes: usize,
+    /// Use the wide SoA kernel for eligible (bank-backed single-node
+    /// replay) surfaces; `false` keeps the per-lane lockstep engines.
+    /// Irrelevant when `lanes == 0`.
+    pub wide: bool,
 }
 
 impl Default for BatchOptions {
     fn default() -> Self {
-        BatchOptions { lanes: DEFAULT_LANES }
+        BatchOptions { lanes: DEFAULT_LANES, wide: true }
     }
 }
 
 impl BatchOptions {
-    /// The pinned scalar path: no lockstep chunks anywhere.
+    /// The pinned scalar path: no batch chunks anywhere.
     pub fn scalar() -> BatchOptions {
-        BatchOptions { lanes: 0 }
+        BatchOptions { lanes: 0, wide: false }
     }
 
-    /// Whether this configuration disables the lockstep engine.
+    /// Lockstep chunks without the wide SoA kernel (the PR 8 shape).
+    pub fn lockstep(lanes: usize) -> BatchOptions {
+        BatchOptions { lanes, wide: false }
+    }
+
+    /// Whether this configuration disables the batch engines.
     pub fn is_scalar(&self) -> bool {
         self.lanes == 0
     }
@@ -242,7 +253,9 @@ impl BatchEngine {
 /// order the replications were requested, so swapping one for the
 /// other cannot change a downstream accumulator by a bit.
 pub enum BatchRunner {
-    /// Lockstep chunks over a trace bank.
+    /// Wide SoA chunks over a trace bank (columnar lane state).
+    Wide(crate::sim::wide::WideKernel),
+    /// Lockstep chunks over a trace bank (per-lane scalar engines).
     Lockstep(BatchEngine),
     /// One scalar session — replay-backed or live, the caller decides.
     Scalar(SimSession),
@@ -262,6 +275,11 @@ impl BatchRunner {
             BatchRunner::Lockstep(engine) => {
                 for chunk in reps.chunks(engine.width()) {
                     engine.run_chunk(chunk, &mut sink);
+                }
+            }
+            BatchRunner::Wide(kernel) => {
+                for chunk in reps.chunks(kernel.width()) {
+                    kernel.run_chunk(chunk, &mut sink);
                 }
             }
         }
@@ -286,6 +304,18 @@ impl BatchRunner {
                     chunk.clear();
                     chunk.extend(lo..hi);
                     engine.run_chunk(&chunk, &mut sink);
+                    lo = hi;
+                }
+            }
+            BatchRunner::Wide(kernel) => {
+                let width = kernel.width() as u64;
+                let mut chunk = Vec::with_capacity(kernel.width());
+                let mut lo = rep_lo;
+                while lo < rep_hi {
+                    let hi = (lo + width).min(rep_hi);
+                    chunk.clear();
+                    chunk.extend(lo..hi);
+                    kernel.run_chunk(&chunk, &mut sink);
                     lo = hi;
                 }
             }
@@ -562,7 +592,10 @@ mod tests {
     fn options_default_and_scalar_knob() {
         assert_eq!(BatchOptions::default().lanes, DEFAULT_LANES);
         assert!(!BatchOptions::default().is_scalar());
+        assert!(BatchOptions::default().wide, "wide kernel is the default where eligible");
         assert!(BatchOptions::scalar().is_scalar());
+        assert!(!BatchOptions::scalar().wide);
+        assert_eq!(BatchOptions::lockstep(4), BatchOptions { lanes: 4, wide: false });
     }
 
     #[test]

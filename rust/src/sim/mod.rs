@@ -13,7 +13,9 @@
 //! checkpoints, correlated failures) behind the same engine.
 //! [`batch`] advances a block of replications in lockstep over a
 //! shared trace-bank arena, pinned bit-identical to the scalar replay
-//! path.
+//! path; [`wide`] goes further and keeps the whole chunk's engine
+//! state in struct-of-arrays columns, sweeping every lane one
+//! event-phase at a time under a lane mask (same bit-identity pin).
 
 pub mod batch;
 mod engine;
@@ -22,11 +24,13 @@ pub mod platform;
 pub mod policy;
 mod runner;
 mod session;
+pub mod wide;
 
 pub use batch::{
     fold_waste_grid, fold_waste_grid_retaining, run_replication_range_batched, BatchEngine,
     BatchOptions, BatchRunner,
 };
+pub use wide::WideKernel;
 pub use engine::Engine;
 pub use outcome::Outcome;
 pub use platform::{PlatformSource, PlatformSpec, RestartScope};

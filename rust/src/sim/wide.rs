@@ -1,0 +1,900 @@
+//! Wide SoA replay kernel: one struct-of-arrays engine advancing a
+//! whole chunk of replications together over the [`TraceBank`] arena.
+//!
+//! The lockstep engine ([`crate::sim::batch::BatchEngine`]) keeps
+//! `lanes` *scalar* engines side by side — the batch win there is
+//! locality and dispatch, not data layout. This module goes the rest
+//! of the way: all per-lane execution state (clock, persisted and
+//! volatile work, period accounting, arena cursors, the cached
+//! next-fault/next-prediction heads, pending proactive actions and the
+//! [`Outcome`] accumulators) lives in contiguous columns, and the
+//! inner loop sweeps every lane one *event-phase* at a time under a
+//! lane mask: completion/guard checks, prediction intake, proactive
+//! dispatch, the regular-checkpoint rule, slice planning, the fault
+//! cut, and finally one tight columnar pass that advances every
+//! surviving lane's clock and accumulators at once. Fault, prediction
+//! and trust events are read straight out of the shared bank columns
+//! by index — no per-lane source object, no virtual dispatch.
+//!
+//! ## Bit-identity contract
+//!
+//! Replications are independent by construction (every per-rep stream
+//! is re-derived from `(seed, rep)`), so only the *per-lane* f64
+//! operation sequence matters — and each phase handler here is a
+//! verbatim transcription of the scalar engine's corresponding step
+//! (`sim::engine`), with `self.field` become `self.field[lane]`. A
+//! sweep executes exactly one scalar loop iteration per running lane;
+//! interleaving across lanes is unobservable. The identity is pinned
+//! at every width in `tests/test_batch.rs`.
+//!
+//! ## Eviction rule
+//!
+//! A lane that hits a state the wide kernel does not express —
+//! un-materialized rep, bank underrun (fault or prediction span
+//! exhausted mid-run) — is *evicted*: its partial state is abandoned
+//! and the replication re-runs on the shared live fallback engine,
+//! exactly the scalar replay session's underrun rule. Evicting early
+//! is always safe: the scalar path discards the replayed outcome on
+//! any underrun and re-runs live anyway, so eviction timing affects
+//! counters and wall-clock only, never results.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::{Engine, Outcome, Policy, PolicyCtx, SimConfig};
+use crate::config::Scenario;
+use crate::rng::trust_seed;
+use crate::strategies::ProactiveMode;
+use crate::trace::{bank, Fault, Prediction, TraceBank, TraceGen};
+
+/// Numerical slack on work comparisons (seconds) — the same constant
+/// as the scalar engine; the two must agree for bit-identity.
+const EPS: f64 = 1e-6;
+
+// Crate-wide wide-kernel counters, surfaced on the service `stats` op
+// next to the lockstep counters (same pattern as `sim::batch`).
+static WIDE_LANES_RUN: AtomicU64 = AtomicU64::new(0);
+static WIDE_EVICTIONS: AtomicU64 = AtomicU64::new(0);
+
+/// Snapshot of the wide-kernel counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WideCounters {
+    /// Replications advanced through a wide chunk (served or evicted).
+    pub lanes_run: u64,
+    /// Lanes evicted to the live fallback engine (un-materialized rep
+    /// or bank underrun mid-run).
+    pub evictions: u64,
+}
+
+/// Read the crate-wide wide-kernel counters.
+pub fn counters() -> WideCounters {
+    WideCounters {
+        lanes_run: WIDE_LANES_RUN.load(Ordering::Relaxed),
+        evictions: WIDE_EVICTIONS.load(Ordering::Relaxed),
+    }
+}
+
+/// Per-lane lifecycle within one chunk.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Lane {
+    Running,
+    Done,
+    Evicted,
+}
+
+/// Control-flow token: the lane asked past the bank's horizon (or hit
+/// a state the kernel does not express) and must re-run live.
+struct Evict;
+
+type Step<T> = Result<T, Evict>;
+
+enum Seg {
+    Completed,
+    Faulted(Fault),
+}
+
+/// The wide SoA kernel: `width` lanes of columnar engine state over
+/// one shared bank arena.
+///
+/// Construction mirrors [`crate::sim::batch::BatchEngine::new`]'s
+/// validation — the bank must match the scenario's seed and the
+/// policy's required lead — and the per-lane eviction mirrors the
+/// scalar replay underrun rule, so every replication's outcome is
+/// bit-identical to the scalar replay path.
+pub struct WideKernel {
+    bank: Arc<TraceBank>,
+    scenario: Box<Scenario>,
+    /// Sanitized at construction (idempotent), exactly what
+    /// [`Engine::with_policy`] would apply — the kernel consults
+    /// `ckpt_rule`/`trust_with`/`window_action` directly.
+    policy: Policy,
+    cfg: SimConfig,
+    lead: f64,
+    seed: u64,
+    width: usize,
+    preds_never_fire: bool,
+
+    // --- SoA lane state: one slot per lane, contiguous per field ---
+    reps: Vec<u64>,
+    status: Vec<Lane>,
+    /// Current simulated time (s).
+    now: Vec<f64>,
+    /// Work persisted by checkpoints (survives faults).
+    saved: Vec<f64>,
+    /// Work since the last persisted state (lost on fault).
+    vol: Vec<f64>,
+    /// Regular-mode work accumulated toward the current period.
+    w_reg: Vec<f64>,
+    /// Arena cursors into the bank's fault column.
+    fi: Vec<usize>,
+    fhi: Vec<usize>,
+    /// Arena cursors into the bank's prediction/trust columns.
+    pi: Vec<usize>,
+    phi: Vec<usize>,
+    next_fault: Vec<Option<Fault>>,
+    next_pred: Vec<Option<Prediction>>,
+    /// Trust uniform of the most recently served prediction, consumed
+    /// at drain time (the `ReplaySource::pending_trust` discipline).
+    next_trust: Vec<Option<f64>>,
+    /// Trusted predictions awaiting their action point, sorted by t0.
+    pending: Vec<VecDeque<Prediction>>,
+    /// Fault ids neutralized by completed migrations.
+    neutralized: Vec<Vec<u64>>,
+    out: Vec<Outcome>,
+
+    // --- sweep scratch: the lane mask and per-phase columns ---
+    mask: Vec<bool>,
+    measured: Vec<f64>,
+    boundary: Vec<f64>,
+    ends: Vec<f64>,
+
+    /// Live fallback engine, built on first eviction, shared by all
+    /// lanes (evicted reps re-run one at a time, in chunk order).
+    fallback: Option<Box<Engine<TraceGen>>>,
+}
+
+impl WideKernel {
+    /// Build a wide kernel of `lanes.max(1)` lanes over `bank`.
+    /// Rejects bank/scenario seed mismatches and bank/policy lead
+    /// mismatches, exactly like [`crate::sim::batch::BatchEngine::new`].
+    pub fn new(
+        bank: Arc<TraceBank>,
+        scenario: &Scenario,
+        policy: Policy,
+        lanes: usize,
+    ) -> anyhow::Result<WideKernel> {
+        let cfg = SimConfig::from_scenario(scenario);
+        cfg.validate()?;
+        let policy = policy.sanitized(cfg.c);
+        let lead = policy.required_lead(cfg.c);
+        anyhow::ensure!(
+            bank.seed() == scenario.seed,
+            "trace bank was built for seed {} but the scenario uses seed {}",
+            bank.seed(),
+            scenario.seed
+        );
+        anyhow::ensure!(
+            bank.lead() == lead,
+            "trace bank was built with lead {} but the policy requires lead {}",
+            bank.lead(),
+            lead
+        );
+        let width = lanes.max(1);
+        Ok(WideKernel {
+            preds_never_fire: bank.preds_never_fire(),
+            seed: scenario.seed,
+            scenario: Box::new(scenario.clone()),
+            bank,
+            policy,
+            cfg,
+            lead,
+            width,
+            reps: Vec::with_capacity(width),
+            status: vec![Lane::Evicted; width],
+            now: vec![0.0; width],
+            saved: vec![0.0; width],
+            vol: vec![0.0; width],
+            w_reg: vec![0.0; width],
+            fi: vec![0; width],
+            fhi: vec![0; width],
+            pi: vec![0; width],
+            phi: vec![0; width],
+            next_fault: vec![None; width],
+            next_pred: vec![None; width],
+            next_trust: vec![None; width],
+            pending: vec![VecDeque::new(); width],
+            neutralized: vec![Vec::new(); width],
+            out: vec![Outcome::default(); width],
+            mask: vec![false; width],
+            measured: vec![0.0; width],
+            boundary: vec![0.0; width],
+            ends: vec![0.0; width],
+            fallback: None,
+        })
+    }
+
+    /// Chunk width (the `lanes` this kernel was built with).
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Advance one chunk of at most `width` replications and hand each
+    /// `(rep, outcome)` to `sink` in chunk order.
+    ///
+    /// Three phases over the lane block: point every lane at its
+    /// arena span, sweep all running lanes phase-by-phase until each
+    /// is done or evicted, then collect in chunk order with evicted
+    /// lanes re-run on the shared live fallback engine.
+    pub(crate) fn run_chunk<F: FnMut(u64, &Outcome)>(&mut self, reps: &[u64], sink: &mut F) {
+        debug_assert!(reps.len() <= self.width, "chunk wider than the kernel");
+        if reps.is_empty() {
+            return;
+        }
+        self.reps.clear();
+        self.reps.extend_from_slice(reps);
+        let n = reps.len();
+        // Phase 1: point every lane at its replication's arena span.
+        for (l, &rep) in reps.iter().enumerate() {
+            self.reset_lane(l, rep);
+        }
+        // Phase 2: sweep until every lane is done or evicted. Each
+        // sweep runs exactly one scalar loop iteration per lane.
+        let started = Instant::now();
+        while self.sweep(n) {}
+        let share = started.elapsed().as_secs_f64() / n as f64;
+        // Phase 3: collect in chunk order; evicted lanes re-run live.
+        for l in 0..n {
+            let rep = self.reps[l];
+            match self.status[l] {
+                Lane::Done => {
+                    self.out[l].sim_seconds = share;
+                    bank::note_replay_served();
+                    let out = std::mem::take(&mut self.out[l]);
+                    sink(rep, &out);
+                }
+                _ => {
+                    WIDE_EVICTIONS.fetch_add(1, Ordering::Relaxed);
+                    bank::note_fallback_taken();
+                    let started = Instant::now();
+                    let fallback = &mut self.fallback;
+                    let live = match fallback {
+                        Some(live) => live,
+                        None => {
+                            let cfg = SimConfig::from_scenario(&self.scenario);
+                            let source =
+                                TraceGen::new(&self.scenario, self.lead, self.seed, rep)
+                                    .expect("scenario validated at kernel build");
+                            fallback
+                                .insert(Box::new(Engine::with_policy(&cfg, self.policy, source, 0)))
+                        }
+                    };
+                    live.source_mut().reset(self.seed, rep);
+                    live.reset(trust_seed(self.seed, rep));
+                    let mut out = live.run_to_completion();
+                    out.sim_seconds = started.elapsed().as_secs_f64();
+                    sink(rep, &out);
+                }
+            }
+        }
+        WIDE_LANES_RUN.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    /// Zero lane `l`'s columns and point its cursors at `rep`'s arena
+    /// span. A missing span (or a chaos-forced underrun, consumed here
+    /// exactly like `ReplaySource::reset`) evicts immediately.
+    fn reset_lane(&mut self, l: usize, rep: u64) {
+        #[cfg(any(test, feature = "chaos"))]
+        let span = if crate::chaos::force_underrun() {
+            None
+        } else {
+            self.bank.span_bounds(rep)
+        };
+        #[cfg(not(any(test, feature = "chaos")))]
+        let span = self.bank.span_bounds(rep);
+        self.now[l] = 0.0;
+        self.saved[l] = 0.0;
+        self.vol[l] = 0.0;
+        self.w_reg[l] = 0.0;
+        self.next_fault[l] = None;
+        self.next_pred[l] = None;
+        self.next_trust[l] = None;
+        self.pending[l].clear();
+        self.neutralized[l].clear();
+        self.out[l] = Outcome::default();
+        match span {
+            Some((fault_lo, fault_hi, pred_lo, pred_hi)) => {
+                self.fi[l] = fault_lo;
+                self.fhi[l] = fault_hi;
+                self.pi[l] = pred_lo;
+                self.phi[l] = pred_hi;
+                self.status[l] = Lane::Running;
+            }
+            None => {
+                self.fi[l] = 0;
+                self.fhi[l] = 0;
+                self.pi[l] = 0;
+                self.phi[l] = 0;
+                self.status[l] = Lane::Evicted;
+            }
+        }
+    }
+
+    /// One masked pass over the lane block: every phase below is the
+    /// corresponding step of the scalar engine's main loop, applied to
+    /// each running lane in lane order. Returns whether any lane is
+    /// still running.
+    fn sweep(&mut self, n: usize) -> bool {
+        // Phase A: completion and makespan guard — columnar over the
+        // work/clock columns.
+        for l in 0..n {
+            let live = self.status[l] == Lane::Running;
+            self.mask[l] = live;
+            if !live {
+                continue;
+            }
+            if self.remaining(l) <= EPS {
+                self.out[l].completed = true;
+                self.finish(l);
+                self.mask[l] = false;
+            } else if self.now[l] > self.cfg.max_makespan {
+                self.out[l].completed = false;
+                self.finish(l);
+                self.mask[l] = false;
+            }
+        }
+        // Phase B: prediction intake (drain everything known by now).
+        for l in 0..n {
+            if self.mask[l] && self.drain_predictions(l).is_err() {
+                self.evict(l);
+            }
+        }
+        // Phase B2: proactive action due? (Scalar `continue` = drop
+        // the lane from the rest of this sweep.)
+        for l in 0..n {
+            if !self.mask[l] {
+                continue;
+            }
+            if let Some(p) = self.pending[l].front().copied() {
+                let start = (p.t0 - self.lead).max(0.0);
+                if start <= self.now[l] {
+                    self.pending[l].pop_front();
+                    match self.handle_proactive(l, p) {
+                        Err(Evict) => self.evict(l),
+                        Ok(()) => self.mask[l] = false,
+                    }
+                }
+            }
+        }
+        // Phase C: the regular-checkpoint rule, consulted columnar-ly
+        // into the scratch columns, then acted on per due lane.
+        for l in 0..n {
+            if !self.mask[l] {
+                continue;
+            }
+            let (m, b) = self.policy.ckpt_rule(&self.ctx(l));
+            self.measured[l] = m;
+            self.boundary[l] = b;
+        }
+        for l in 0..n {
+            if !self.mask[l] || self.measured[l] < self.boundary[l] - EPS {
+                continue;
+            }
+            if self.vol[l] > 0.0 {
+                match self.checkpoint(l, false) {
+                    Err(Evict) => {
+                        self.evict(l);
+                        continue;
+                    }
+                    Ok(Seg::Faulted(f)) => {
+                        if self.handle_fault(l, f).is_err() {
+                            self.evict(l);
+                            continue;
+                        }
+                    }
+                    Ok(Seg::Completed) => {}
+                }
+            } else {
+                self.w_reg[l] = 0.0; // state already persisted
+            }
+            self.mask[l] = false;
+        }
+        // Phase D: plan the next work slice, capped at the rule, the
+        // pending action point and the next prediction availability.
+        for l in 0..n {
+            if !self.mask[l] {
+                continue;
+            }
+            let mut end = self.now[l] + self.remaining(l);
+            end = end.min(self.now[l] + (self.boundary[l] - self.measured[l]).max(0.0));
+            if let Some(p) = self.pending[l].front() {
+                end = end.min((p.t0 - self.lead).max(self.now[l]));
+            }
+            if self.next_pred[l].is_none() {
+                if self.refill_pred(l).is_err() {
+                    self.evict(l);
+                    continue;
+                }
+            }
+            if let Some(pr) = &self.next_pred[l] {
+                if pr.avail > self.now[l] {
+                    end = end.min(pr.avail);
+                }
+            }
+            if end <= self.now[l] + 1e-9 {
+                // Defensive: only reachable through degenerate pending
+                // entries; drop the blocker and move on.
+                self.pending[l].pop_front();
+                self.mask[l] = false;
+                continue;
+            }
+            self.ends[l] = end;
+        }
+        // Phase D2: open the work segment and check the fault cut per
+        // lane (the `work_until` head, with faulted lanes resolved).
+        for l in 0..n {
+            if !self.mask[l] {
+                continue;
+            }
+            self.out[l].n_segments += 1;
+            match self.take_fault_before(l, self.ends[l]) {
+                Err(Evict) => self.evict(l),
+                Ok(Some(f)) => {
+                    let elapsed = (f.t - self.now[l]).max(0.0);
+                    self.vol[l] += elapsed;
+                    self.w_reg[l] += elapsed;
+                    self.now[l] = f.t;
+                    match self.handle_fault(l, f) {
+                        Err(Evict) => self.evict(l),
+                        Ok(()) => self.mask[l] = false,
+                    }
+                }
+                Ok(None) => {}
+            }
+        }
+        // Phase D3: the vectorized advance — every surviving lane
+        // moves its clock and accumulators in one tight columnar pass.
+        for l in 0..n {
+            if !self.mask[l] {
+                continue;
+            }
+            let elapsed = self.ends[l] - self.now[l];
+            self.vol[l] += elapsed;
+            self.w_reg[l] += elapsed;
+            self.now[l] = self.ends[l];
+        }
+        (0..n).any(|l| self.status[l] == Lane::Running)
+    }
+
+    #[inline]
+    fn remaining(&self, l: usize) -> f64 {
+        (self.cfg.work - (self.saved[l] + self.vol[l])).max(0.0)
+    }
+
+    #[inline]
+    fn ctx(&self, l: usize) -> PolicyCtx {
+        PolicyCtx {
+            now: self.now[l],
+            vol: self.vol[l],
+            w_reg: self.w_reg[l],
+            n_faults: self.out[l].n_faults,
+            c: self.cfg.c,
+        }
+    }
+
+    /// Seal lane `l`'s outcome (the scalar loop's exit bookkeeping).
+    fn finish(&mut self, l: usize) {
+        self.out[l].makespan = self.now[l];
+        self.out[l].work = (self.saved[l] + self.vol[l]).min(self.cfg.work);
+        self.status[l] = Lane::Done;
+    }
+
+    fn evict(&mut self, l: usize) {
+        self.status[l] = Lane::Evicted;
+        self.mask[l] = false;
+    }
+
+    /// Next fault that actually strikes lane `l` (skips migrated-away
+    /// ones). Exhausting the arena span means the run outlived the
+    /// horizon — live fault streams never end — so the lane evicts.
+    fn peek_fault(&mut self, l: usize) -> Step<Fault> {
+        loop {
+            if self.next_fault[l].is_none() {
+                if self.fi[l] < self.fhi[l] {
+                    self.next_fault[l] = Some(self.bank.fault_at(self.fi[l]));
+                    self.fi[l] += 1;
+                } else {
+                    return Err(Evict);
+                }
+            }
+            let f = self.next_fault[l].expect("refilled above");
+            if let Some(pos) = self.neutralized[l].iter().position(|&id| id == f.id) {
+                self.neutralized[l].swap_remove(pos);
+                self.out[l].n_faults_avoided += 1;
+                self.next_fault[l] = None;
+            } else {
+                return Ok(f);
+            }
+        }
+    }
+
+    /// Consume and return lane `l`'s next fault if it strikes strictly
+    /// before `end`.
+    fn take_fault_before(&mut self, l: usize, end: f64) -> Step<Option<Fault>> {
+        let f = self.peek_fault(l)?;
+        if f.t < end {
+            Ok(self.next_fault[l].take())
+        } else {
+            Ok(None)
+        }
+    }
+
+    /// Refill lane `l`'s prediction head from the arena. An exhausted
+    /// span replays the live `None` faithfully when the predictor can
+    /// never fire; otherwise it is an underrun and the lane evicts.
+    fn refill_pred(&mut self, l: usize) -> Step<()> {
+        if self.pi[l] < self.phi[l] {
+            self.next_pred[l] = Some(self.bank.pred_at(self.pi[l]));
+            self.next_trust[l] = Some(self.bank.trust_at(self.pi[l]));
+            self.pi[l] += 1;
+            Ok(())
+        } else if self.preds_never_fire {
+            Ok(())
+        } else {
+            Err(Evict)
+        }
+    }
+
+    /// Process all predictions lane `l` has become aware of by now.
+    fn drain_predictions(&mut self, l: usize) -> Step<()> {
+        loop {
+            if self.next_pred[l].is_none() {
+                self.refill_pred(l)?;
+            }
+            match &self.next_pred[l] {
+                Some(p) if p.avail <= self.now[l] => {
+                    let p = self.next_pred[l].take().expect("matched Some above");
+                    self.out[l].n_preds += 1;
+                    if p.is_true_positive() {
+                        self.out[l].n_true_preds += 1;
+                    }
+                    // The arena always carries the prediction's
+                    // pre-sampled trust uniform (the k-th uniform of
+                    // the engine's own per-rep trust stream).
+                    let u = self
+                        .next_trust[l]
+                        .take()
+                        .expect("arena-served prediction carries its trust uniform");
+                    let trusted = self.policy.trust_with(u);
+                    if trusted && p.t_end() > self.now[l] {
+                        self.out[l].n_trusted += 1;
+                        let pos = self.pending[l]
+                            .iter()
+                            .position(|q| q.t0 > p.t0)
+                            .unwrap_or(self.pending[l].len());
+                        self.pending[l].insert(pos, p);
+                    }
+                }
+                _ => return Ok(()),
+            }
+        }
+    }
+
+    /// Work until `end` (absolute time) on lane `l`.
+    fn work_until(&mut self, l: usize, end: f64, count_reg: bool) -> Step<Seg> {
+        debug_assert!(end >= self.now[l] - 1e-9);
+        self.out[l].n_segments += 1;
+        if let Some(f) = self.take_fault_before(l, end)? {
+            let elapsed = (f.t - self.now[l]).max(0.0);
+            self.vol[l] += elapsed;
+            if count_reg {
+                self.w_reg[l] += elapsed;
+            }
+            self.now[l] = f.t;
+            return Ok(Seg::Faulted(f));
+        }
+        let elapsed = end - self.now[l];
+        self.vol[l] += elapsed;
+        if count_reg {
+            self.w_reg[l] += elapsed;
+        }
+        self.now[l] = end;
+        Ok(Seg::Completed)
+    }
+
+    /// A non-working segment (checkpoint, downtime, recovery, migration).
+    fn passive(&mut self, l: usize, duration: f64) -> Step<Seg> {
+        self.out[l].n_segments += 1;
+        let end = self.now[l] + duration;
+        if let Some(f) = self.take_fault_before(l, end)? {
+            self.now[l] = f.t;
+            return Ok(Seg::Faulted(f));
+        }
+        self.now[l] = end;
+        Ok(Seg::Completed)
+    }
+
+    /// Take a checkpoint on lane `l`; on success the volatile work is
+    /// persisted. Regular checkpoints close the period.
+    fn checkpoint(&mut self, l: usize, proactive: bool) -> Step<Seg> {
+        match self.passive(l, self.cfg.c)? {
+            Seg::Faulted(f) => Ok(Seg::Faulted(f)),
+            Seg::Completed => {
+                self.saved[l] += self.vol[l];
+                self.vol[l] = 0.0;
+                if proactive {
+                    self.out[l].n_proactive_ckpts += 1;
+                } else {
+                    self.out[l].n_ckpts += 1;
+                    self.w_reg[l] = 0.0;
+                }
+                Ok(Seg::Completed)
+            }
+        }
+    }
+
+    /// Apply a fault on lane `l`: lose volatile work, run downtime +
+    /// recovery (themselves interruptible), restart the period.
+    fn handle_fault(&mut self, l: usize, mut fault: Fault) -> Step<()> {
+        loop {
+            self.out[l].n_faults += 1;
+            if !fault.predicted {
+                self.out[l].n_faults_unpredicted += 1;
+            }
+            self.out[l].lost_work += self.vol[l];
+            self.now[l] = fault.t;
+            self.vol[l] = 0.0;
+            self.w_reg[l] = 0.0;
+            match self.passive(l, self.cfg.d)? {
+                Seg::Faulted(f) => {
+                    fault = f;
+                    continue;
+                }
+                Seg::Completed => {}
+            }
+            match self.passive(l, self.cfg.r)? {
+                Seg::Faulted(f) => {
+                    fault = f;
+                    continue;
+                }
+                Seg::Completed => {}
+            }
+            break;
+        }
+        // Predictions whose window already closed are moot now.
+        let now = self.now[l];
+        self.pending[l].retain(|p| p.t_end() > now);
+        Ok(())
+    }
+
+    /// Execute the proactive response to a trusted prediction whose
+    /// action point has arrived on lane `l`.
+    fn handle_proactive(&mut self, l: usize, p: Prediction) -> Step<()> {
+        match self.policy.window_action() {
+            ProactiveMode::Ignore => Ok(()),
+            ProactiveMode::Migrate { m } => self.proactive_migrate(l, p, m),
+            ProactiveMode::CkptBefore
+            | ProactiveMode::SkipWindow
+            | ProactiveMode::CkptDuring { .. } => self.proactive_ckpt_flow(l, p),
+        }
+    }
+
+    fn proactive_ckpt_flow(&mut self, l: usize, p: Prediction) -> Step<()> {
+        // Pre-window: checkpoint completing right at t0 when there is
+        // room (Fig. 1a); otherwise extra work up to t0 (Fig. 1b).
+        let ckpt_start = p.t0 - self.cfg.c;
+        if self.now[l] <= ckpt_start {
+            if self.now[l] < ckpt_start {
+                let end = ckpt_start.min(self.now[l] + self.remaining(l));
+                match self.work_until(l, end, true)? {
+                    Seg::Faulted(f) => return self.handle_fault(l, f),
+                    Seg::Completed => {}
+                }
+                if self.remaining(l) <= EPS {
+                    return Ok(());
+                }
+            }
+            if self.vol[l] > 0.0 {
+                match self.checkpoint(l, true)? {
+                    Seg::Faulted(f) => return self.handle_fault(l, f),
+                    Seg::Completed => {}
+                }
+            } else {
+                // State already persisted; skip the redundant
+                // checkpoint and work through the slot instead.
+                let end = p.t0.min(self.now[l] + self.remaining(l));
+                match self.work_until(l, end, true)? {
+                    Seg::Faulted(f) => return self.handle_fault(l, f),
+                    Seg::Completed => {}
+                }
+                if self.remaining(l) <= EPS {
+                    return Ok(());
+                }
+            }
+        } else if self.now[l] < p.t0 {
+            let end = p.t0.min(self.now[l] + self.remaining(l));
+            match self.work_until(l, end, true)? {
+                Seg::Faulted(f) => return self.handle_fault(l, f),
+                Seg::Completed => {}
+            }
+            if self.remaining(l) <= EPS {
+                return Ok(());
+            }
+        }
+        if self.now[l] >= p.t_end() && p.window > 0.0 {
+            return Ok(()); // window passed entirely during an outage
+        }
+        // Window phase.
+        match self.policy.window_action() {
+            ProactiveMode::CkptBefore => {} // back to regular mode at once
+            ProactiveMode::SkipWindow => {
+                let end = p.t_end().min(self.now[l] + self.remaining(l));
+                if end > self.now[l] {
+                    if let Seg::Faulted(f) = self.work_until(l, end, false)? {
+                        self.handle_fault(l, f)?;
+                    }
+                }
+            }
+            ProactiveMode::CkptDuring { t_p } => {
+                let t_p = t_p.max(self.cfg.c + 1.0);
+                let t_end = p.t_end();
+                while self.now[l] < t_end - EPS {
+                    let slice_end = (self.now[l] + (t_p - self.cfg.c))
+                        .min(t_end)
+                        .min(self.now[l] + self.remaining(l));
+                    if slice_end > self.now[l] {
+                        match self.work_until(l, slice_end, false)? {
+                            Seg::Faulted(f) => return self.handle_fault(l, f),
+                            Seg::Completed => {}
+                        }
+                    }
+                    if self.remaining(l) <= EPS {
+                        return Ok(()); // job finished inside the window
+                    }
+                    if self.now[l] >= t_end - EPS {
+                        break; // window closes; trailing ckpt aligns with it
+                    }
+                    match self.checkpoint(l, true)? {
+                        Seg::Faulted(f) => return self.handle_fault(l, f),
+                        Seg::Completed => {}
+                    }
+                }
+            }
+            _ => unreachable!("ckpt flow is only entered for checkpoint window modes"),
+        }
+        Ok(())
+    }
+
+    fn proactive_migrate(&mut self, l: usize, p: Prediction, m: f64) -> Step<()> {
+        let start = p.t0 - m;
+        if self.now[l] > start {
+            return Ok(()); // cannot complete before the predicted date
+        }
+        if self.now[l] < start {
+            let end = start.min(self.now[l] + self.remaining(l));
+            match self.work_until(l, end, true)? {
+                Seg::Faulted(f) => return self.handle_fault(l, f),
+                Seg::Completed => {}
+            }
+            if self.remaining(l) <= EPS {
+                return Ok(());
+            }
+        }
+        // Live migration: state (volatile work) moves with the task.
+        match self.passive(l, m)? {
+            Seg::Faulted(f) => self.handle_fault(l, f),
+            Seg::Completed => {
+                self.out[l].n_migrations += 1;
+                if let Some(id) = p.fault_id {
+                    // The fault will strike the abandoned node, not us.
+                    // Checks the cached head only — polling the arena
+                    // here would desync the cursor from the scalar
+                    // engine's stream position.
+                    if self.next_fault[l].as_ref().map(|f| f.id) == Some(id) {
+                        self.next_fault[l] = None;
+                        self.out[l].n_faults_avoided += 1;
+                    } else {
+                        self.neutralized[l].push(id);
+                    }
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Predictor, Scenario};
+    use crate::model::{Capping, StrategyKind};
+    use crate::sim::runner::ReplicationAgg;
+    use crate::sim::SimSession;
+    use crate::strategies::spec_for;
+
+    fn scenario() -> Scenario {
+        let mut s = Scenario::paper(1 << 16, Predictor::exact(0.85, 0.82));
+        s.fault_dist = crate::dist::DistSpec::Exp;
+        s.work = 2.0e5;
+        s
+    }
+
+    fn assert_agg_bit_identical(a: &ReplicationAgg, b: &ReplicationAgg) {
+        assert_eq!(a.n_reps, b.n_reps);
+        assert_eq!(a.n_completed, b.n_completed);
+        assert_eq!(a.n_faults, b.n_faults);
+        assert_eq!(a.n_preds, b.n_preds);
+        assert_eq!(a.n_trusted, b.n_trusted);
+        assert_eq!(a.n_ckpts, b.n_ckpts);
+        assert_eq!(a.n_proactive_ckpts, b.n_proactive_ckpts);
+        assert_eq!(a.n_segments, b.n_segments);
+        assert_eq!(a.lost_work.to_bits(), b.lost_work.to_bits());
+        assert_eq!(a.waste.mean().to_bits(), b.waste.mean().to_bits());
+        assert_eq!(a.makespan.mean().to_bits(), b.makespan.mean().to_bits());
+    }
+
+    #[test]
+    fn wide_chunks_match_the_scalar_replay_loop() {
+        let s0 = scenario();
+        let s = crate::experiments::scenario_for(StrategyKind::ExactPrediction, &s0);
+        let spec = spec_for(StrategyKind::ExactPrediction, &s, Capping::Uncapped);
+        let policy = Policy::from_spec(&spec, s.platform.c);
+        let lead = policy.required_lead(s.platform.c);
+        let bank = Arc::new(TraceBank::try_build(&s, lead, 10).unwrap().expect("bank fits"));
+        let mut scalar = ReplicationAgg::default();
+        let mut session = SimSession::replay(bank.clone(), &s, policy).unwrap();
+        for rep in 0..10 {
+            scalar.push(&session.run(rep));
+        }
+        for lanes in [1usize, 3, 8] {
+            let mut agg = ReplicationAgg::default();
+            let mut kernel = WideKernel::new(bank.clone(), &s, policy, lanes).unwrap();
+            let reps: Vec<u64> = (0..10).collect();
+            for chunk in reps.chunks(kernel.width()) {
+                kernel.run_chunk(chunk, &mut |_, out| agg.push(out));
+            }
+            assert_agg_bit_identical(&agg, &scalar);
+        }
+    }
+
+    #[test]
+    fn evicted_lanes_fall_back_mid_chunk() {
+        // A bank holding only reps 0..3 evicts the back half of every
+        // chunk onto the live fallback — outcomes must still match the
+        // scalar replay session (which falls back the same way).
+        let s = scenario();
+        let spec = spec_for(StrategyKind::Young, &s, Capping::Uncapped);
+        let policy = Policy::from_spec(&spec, s.platform.c);
+        let lead = policy.required_lead(s.platform.c);
+        let bank = Arc::new(TraceBank::try_build(&s, lead, 3).unwrap().expect("bank fits"));
+        let before = counters();
+        let mut scalar = ReplicationAgg::default();
+        let mut session = SimSession::replay(bank.clone(), &s, policy).unwrap();
+        for rep in 0..8 {
+            scalar.push(&session.run(rep));
+        }
+        let mut agg = ReplicationAgg::default();
+        let mut kernel = WideKernel::new(bank, &s, policy, 4).unwrap();
+        let reps: Vec<u64> = (0..8).collect();
+        for chunk in reps.chunks(4) {
+            kernel.run_chunk(chunk, &mut |_, out| agg.push(out));
+        }
+        assert_agg_bit_identical(&agg, &scalar);
+        let after = counters();
+        assert!(after.lanes_run >= before.lanes_run + 8);
+        assert!(after.evictions >= before.evictions + 5, "reps 3..8 evicted");
+    }
+
+    #[test]
+    fn wide_kernel_rejects_mismatched_banks() {
+        let s = scenario();
+        let spec = spec_for(StrategyKind::Young, &s, Capping::Uncapped);
+        let policy = Policy::from_spec(&spec, s.platform.c);
+        let lead = policy.required_lead(s.platform.c);
+        let bank = Arc::new(TraceBank::try_build(&s, lead, 1).unwrap().unwrap());
+        let mut other = s.clone();
+        other.seed += 1;
+        assert!(WideKernel::new(bank, &other, policy, 4).is_err());
+    }
+}

@@ -19,7 +19,7 @@ use crate::config::Scenario;
 use crate::coordinator::available_workers;
 use crate::sim::{
     fold_waste_grid, fold_waste_grid_retaining, rep_blocks, BatchEngine, BatchOptions,
-    BatchRunner, Policy, SimSession,
+    BatchRunner, Policy, SimSession, WideKernel,
 };
 use crate::strategies::{resolve_policy, PolicySpec, StrategySpec};
 use crate::trace::TraceBank;
@@ -76,10 +76,12 @@ pub struct BestPeriodOptions {
     /// search transparently runs live) when its arena would exceed
     /// [`crate::trace::bank::MAX_RESIDENT_BYTES`].
     pub replay: bool,
-    /// Lockstep lane width for bank-backed sweeps: when a trace bank is
+    /// Batch lane width for bank-backed sweeps: when a trace bank is
     /// attached and `batch.lanes > 0`, each worker advances a chunk of
-    /// replications in lockstep over the arena
-    /// ([`crate::sim::BatchEngine`]) instead of one at a time. Pinned
+    /// replications together over the arena — through the wide SoA
+    /// kernel ([`crate::sim::WideKernel`]) when `batch.wide` is set
+    /// (the default), through per-lane lockstep engines
+    /// ([`crate::sim::BatchEngine`]) otherwise. Both pinned
     /// bit-identical to the scalar path; `BatchOptions::scalar()`
     /// selects that path explicitly. Ignored when no bank serves the
     /// sweep (live and platform searches are always scalar).
@@ -153,10 +155,14 @@ pub fn best_period_with(
     } else {
         None
     };
-    let lanes = opts.batch.lanes;
+    let batch = opts.batch;
     Ok(search_grid(&grid, reps, opts, bank.is_some(), |ci| match &bank {
-        Some(b) if lanes > 0 => BatchRunner::Lockstep(
-            BatchEngine::new(b.clone(), scenario, Policy::from_spec(&specs[ci], c), lanes)
+        Some(b) if batch.lanes > 0 && batch.wide => BatchRunner::Wide(
+            WideKernel::new(b.clone(), scenario, Policy::from_spec(&specs[ci], c), batch.lanes)
+                .expect("bank lead/seed derived from this scenario"),
+        ),
+        Some(b) if batch.lanes > 0 => BatchRunner::Lockstep(
+            BatchEngine::new(b.clone(), scenario, Policy::from_spec(&specs[ci], c), batch.lanes)
                 .expect("bank lead/seed derived from this scenario"),
         ),
         Some(b) => BatchRunner::Scalar(
@@ -284,10 +290,14 @@ fn search_policy_param(
     } else {
         None
     };
-    let lanes = opts.batch.lanes;
+    let batch = opts.batch;
     Ok(search_grid(&grid, reps, opts, bank.is_some(), |ci| match &bank {
-        Some(b) if lanes > 0 => BatchRunner::Lockstep(
-            BatchEngine::new(b.clone(), scenario, policies[ci], lanes)
+        Some(b) if batch.lanes > 0 && batch.wide => BatchRunner::Wide(
+            WideKernel::new(b.clone(), scenario, policies[ci], batch.lanes)
+                .expect("bank lead/seed derived from this scenario"),
+        ),
+        Some(b) if batch.lanes > 0 => BatchRunner::Lockstep(
+            BatchEngine::new(b.clone(), scenario, policies[ci], batch.lanes)
                 .expect("bank lead/seed derived from this scenario"),
         ),
         Some(b) => BatchRunner::Scalar(

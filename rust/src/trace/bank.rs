@@ -354,6 +354,41 @@ impl TraceBank {
         self.horizon
     }
 
+    /// Arena span of `rep` as `(fault_lo, fault_hi, pred_lo, pred_hi)`
+    /// element indices, for consumers that walk the columns directly
+    /// (the wide SoA kernel) instead of through a [`ReplaySource`].
+    /// `None` when the bank does not cover `rep`.
+    pub(crate) fn span_bounds(&self, rep: u64) -> Option<(usize, usize, usize, usize)> {
+        self.spans.get(rep as usize).map(|s| {
+            (s.fault_lo as usize, s.fault_hi as usize, s.pred_lo as usize, s.pred_hi as usize)
+        })
+    }
+
+    /// Read one fault out of the arena by element index.
+    #[inline]
+    pub(crate) fn fault_at(&self, i: usize) -> Fault {
+        self.faults[i]
+    }
+
+    /// Read one prediction out of the arena by element index.
+    #[inline]
+    pub(crate) fn pred_at(&self, i: usize) -> Prediction {
+        self.preds[i]
+    }
+
+    /// Read the pre-drawn trust uniform aligned with `preds[i]`.
+    #[inline]
+    pub(crate) fn trust_at(&self, i: usize) -> f64 {
+        self.trust[i]
+    }
+
+    /// Whether an exhausted prediction span faithfully replays the live
+    /// `None` (predictor can never fire) instead of meaning underrun.
+    #[inline]
+    pub(crate) fn preds_never_fire(&self) -> bool {
+        self.preds_never_fire
+    }
+
     /// Current arena footprint in bytes.
     pub fn resident_bytes(&self) -> u64 {
         (self.faults.capacity() * std::mem::size_of::<Fault>()

@@ -24,7 +24,7 @@ use super::oracle::{oracle_for, Domain};
 use crate::coordinator::available_workers;
 use crate::sim::{
     run_replication_range_batched, run_replication_range_with, BatchEngine, BatchOptions,
-    BatchRunner, ReplicationAgg, SimSession,
+    BatchRunner, ReplicationAgg, SimSession, WideKernel,
 };
 use crate::strategies::resolve_policy;
 use crate::trace::TraceBank;
@@ -167,8 +167,20 @@ pub fn judge_case(case: &ConformanceCase, opts: &VerifyOptions) -> anyhow::Resul
         // back for extension once the round's sessions are gone.
         let shared = bank.take().map(Arc::new);
         let chunk = match &shared {
-            // Bank-backed rounds advance in lockstep chunks by default;
-            // bit-identical to the scalar replay fold below.
+            // Bank-backed rounds advance in batch chunks by default —
+            // the wide SoA kernel unless the caller opted back to the
+            // per-lane lockstep engines; both bit-identical to the
+            // scalar replay fold below.
+            Some(b) if opts.batch.lanes > 0 && opts.batch.wide => {
+                run_replication_range_batched(done, target, opts.workers, || {
+                    Ok(BatchRunner::Wide(WideKernel::new(
+                        b.clone(),
+                        &rp.scenario,
+                        rp.policy,
+                        opts.batch.lanes,
+                    )?))
+                })?
+            }
             Some(b) if opts.batch.lanes > 0 => {
                 run_replication_range_batched(done, target, opts.workers, || {
                     Ok(BatchRunner::Lockstep(BatchEngine::new(

@@ -200,6 +200,8 @@ fn every_response_variant_round_trips() {
             client_retries: 7,
             batch_lanes_run: 1024,
             batch_lane_fallbacks: 2,
+            wide_lanes_run: 2048,
+            wide_evictions: 3,
             cache_hits: 6,
             cache_misses: 4,
             cache_evictions: 1,

@@ -1,15 +1,16 @@
-//! Lockstep batch-engine acceptance tests: the lane width of a
-//! bank-backed sweep must be unobservable in the results. Scalar
-//! replay, lanes=1 and lanes=8 produce bit-identical aggregates for
-//! every policy the repo ships, on Exponential and Weibull faults, and
-//! the contract survives mid-batch underrun fallbacks.
+//! Batch-engine acceptance tests: the lane width of a bank-backed
+//! sweep must be unobservable in the results. Scalar replay, lockstep
+//! lanes 1/8 and the wide SoA kernel at widths 1/8/16 produce
+//! bit-identical aggregates for every policy the repo ships, on
+//! Exponential and Weibull faults, and the contract survives
+//! mid-batch underrun fallbacks (lockstep) and lane evictions (wide).
 
 use std::sync::Arc;
 
 use ckptfp::config::{Predictor, Scenario};
 use ckptfp::dist::DistSpec;
 use ckptfp::model::{Capping, StrategyKind};
-use ckptfp::sim::{BatchEngine, BatchRunner, Policy, ReplicationAgg, SimSession};
+use ckptfp::sim::{BatchEngine, BatchRunner, Policy, ReplicationAgg, SimSession, WideKernel};
 use ckptfp::strategies::{resolve_policy, spec_for, PolicySpec};
 use ckptfp::trace::TraceBank;
 
@@ -48,7 +49,8 @@ fn assert_bit_identical(a: &ReplicationAgg, b: &ReplicationAgg, label: &str) {
     assert_eq!(a.makespan.mean().to_bits(), b.makespan.mean().to_bits(), "{label}: makespan");
 }
 
-/// Compare scalar replay vs lockstep at lanes 1 and 8 on one bank.
+/// Compare scalar replay vs lockstep (lanes 1, 8) vs the wide SoA
+/// kernel (widths 1, 8, 16) on one bank.
 fn assert_lane_invariant(s: &Scenario, policy: Policy, reps: u64, bank_reps: u64, label: &str) {
     let lead = policy.required_lead(s.platform.c);
     let bank =
@@ -65,6 +67,15 @@ fn assert_lane_invariant(s: &Scenario, policy: Policy, reps: u64, bank_reps: u64
             reps,
         );
         assert_bit_identical(&scalar, &lockstep, &format!("{label} lanes={lanes}"));
+    }
+    for width in [1usize, 8, 16] {
+        let wide = agg_of(
+            BatchRunner::Wide(
+                WideKernel::new(bank.clone(), s, policy, width).expect("wide kernel"),
+            ),
+            reps,
+        );
+        assert_bit_identical(&scalar, &wide, &format!("{label} wide={width}"));
     }
 }
 
@@ -134,40 +145,92 @@ fn mid_batch_underrun_falls_back_bit_identically() {
     assert!(after.lane_fallbacks >= before.lane_fallbacks + 7, "lane_fallbacks moved");
 }
 
-/// Default-lane `best_period_with` (lockstep) is bit-identical to the
-/// explicitly scalar-pinned search — the end-to-end wiring of the same
-/// contract the unit aggregates pin above.
+/// Forced mid-chunk eviction in the wide kernel: a bank that covers
+/// only 5 of 12 replications leaves uncovered lanes *inside* a
+/// width-8 chunk. Evicted lanes re-run on the scalar live fallback
+/// and the aggregate still matches the scalar path, while the
+/// process-global wide counters move accordingly.
+#[test]
+fn wide_mid_chunk_eviction_falls_back_bit_identically() {
+    let s = study(DistSpec::weibull(0.7), Predictor::exact(0.85, 0.82));
+    let spec = spec_for(StrategyKind::ExactPrediction, &s, Capping::Uncapped);
+    let policy = Policy::from_spec(&spec, s.platform.c);
+    let lead = policy.required_lead(s.platform.c);
+    let bank = Arc::new(TraceBank::try_build(&s, lead, 5).unwrap().expect("study bank fits"));
+
+    let before = ckptfp::sim::wide::counters();
+    let scalar =
+        agg_of(BatchRunner::Scalar(SimSession::replay(bank.clone(), &s, policy).unwrap()), 12);
+    let wide = agg_of(BatchRunner::Wide(WideKernel::new(bank, &s, policy, 8).unwrap()), 12);
+    assert_bit_identical(&scalar, &wide, "eviction width=8");
+    let after = ckptfp::sim::wide::counters();
+    // Counters are process-global and other tests run concurrently, so
+    // assert monotone movement: 12 lanes ran, 7 of them evicted.
+    assert!(after.lanes_run >= before.lanes_run + 12, "wide_lanes_run moved");
+    assert!(after.evictions >= before.evictions + 7, "wide_evictions moved");
+}
+
+/// Chaos-forced eviction: with the `chaos` feature on, every
+/// `BankReplay` span lookup is forced to report an underrun, so every
+/// wide lane evicts at reset — *mid-chunk*, not just past the bank's
+/// coverage — and the aggregate still matches the clean scalar
+/// reference. (Probability-1.0 injection keeps the test immune to
+/// concurrent tests consuming hits from the shared chaos plan; forced
+/// underruns are harmless to them by the same fallback contract.)
+#[cfg(feature = "chaos")]
+#[test]
+fn chaos_forced_wide_eviction_keeps_aggregates_unchanged() {
+    use ckptfp::chaos::{self, Action, ChaosPlan, Point};
+    let s = study(DistSpec::weibull(0.7), Predictor::exact(0.85, 0.82));
+    let spec = spec_for(StrategyKind::ExactPrediction, &s, Capping::Uncapped);
+    let policy = Policy::from_spec(&spec, s.platform.c);
+    let lead = policy.required_lead(s.platform.c);
+    let bank = Arc::new(TraceBank::try_build(&s, lead, 8).unwrap().expect("study bank fits"));
+
+    // Clean scalar reference first, before any plan is installed.
+    let scalar =
+        agg_of(BatchRunner::Scalar(SimSession::replay(bank.clone(), &s, policy).unwrap()), 8);
+
+    let before = ckptfp::sim::wide::counters();
+    chaos::install(ChaosPlan::new().with_prob(Point::BankReplay, 7, 1.0, Action::Underrun));
+    let wide = agg_of(BatchRunner::Wide(WideKernel::new(bank, &s, policy, 4).unwrap()), 8);
+    chaos::reset();
+
+    assert_bit_identical(&scalar, &wide, "chaos eviction width=4");
+    let after = ckptfp::sim::wide::counters();
+    assert!(after.lanes_run >= before.lanes_run + 8, "wide_lanes_run moved");
+    assert!(after.evictions >= before.evictions + 8, "every lane evicted");
+}
+
+/// Default-option `best_period_with` (the wide SoA kernel) is
+/// bit-identical to both the explicit lockstep search and the
+/// scalar-pinned one — the end-to-end wiring of the same contract the
+/// unit aggregates pin above.
 #[test]
 fn best_period_default_lanes_match_the_pinned_scalar_path() {
     use ckptfp::sim::BatchOptions;
     use ckptfp::strategies::{best_period_with, BestPeriodOptions};
     let s = study(DistSpec::weibull(0.7), Predictor::windowed(0.85, 0.82, 300.0));
     let base = spec_for(StrategyKind::NoCkptI, &s, Capping::Uncapped);
-    let lockstep = best_period_with(
-        &s,
-        &base,
-        8,
-        6,
-        &BestPeriodOptions { workers: 2, prune: false, replay: true, ..Default::default() },
-    )
-    .unwrap();
-    let scalar = best_period_with(
-        &s,
-        &base,
-        8,
-        6,
-        &BestPeriodOptions {
-            workers: 2,
-            prune: false,
-            replay: true,
-            batch: BatchOptions::scalar(),
-        },
-    )
-    .unwrap();
-    assert_eq!(lockstep.t_r.to_bits(), scalar.t_r.to_bits());
-    assert_eq!(lockstep.waste.to_bits(), scalar.waste.to_bits());
-    assert_eq!(lockstep.reps_used, scalar.reps_used);
-    for (a, b) in lockstep.sweep.iter().zip(&scalar.sweep) {
-        assert_eq!(a.1.to_bits(), b.1.to_bits());
+    let run = |batch: BatchOptions| {
+        best_period_with(
+            &s,
+            &base,
+            8,
+            6,
+            &BestPeriodOptions { workers: 2, prune: false, replay: true, batch },
+        )
+        .unwrap()
+    };
+    let wide = run(BatchOptions::default());
+    let lockstep = run(BatchOptions::lockstep(8));
+    let scalar = run(BatchOptions::scalar());
+    for (got, label) in [(&wide, "wide"), (&lockstep, "lockstep")] {
+        assert_eq!(got.t_r.to_bits(), scalar.t_r.to_bits(), "{label}: t_r");
+        assert_eq!(got.waste.to_bits(), scalar.waste.to_bits(), "{label}: waste");
+        assert_eq!(got.reps_used, scalar.reps_used, "{label}: reps_used");
+        for (a, b) in got.sweep.iter().zip(&scalar.sweep) {
+            assert_eq!(a.1.to_bits(), b.1.to_bits(), "{label}: sweep waste");
+        }
     }
 }

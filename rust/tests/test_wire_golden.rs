@@ -161,6 +161,8 @@ fn golden_stats() -> ServiceStats {
         client_retries: 7,
         batch_lanes_run: 512,
         batch_lane_fallbacks: 4,
+        wide_lanes_run: 4096,
+        wide_evictions: 9,
         cache_hits: 6,
         cache_misses: 4,
         cache_evictions: 1,

@@ -16,7 +16,11 @@ lower-better. The lockstep pair follows the same rule:
 higher-better and `abstraction_tax_pct` lower-better (it is a
 percentage, caught by the explicit hint below);
 `waste_grid_batched.*` reads `rows_per_s_*`/`speedup` higher-better
-and `scalar_s`/`batched_s` lower-better.
+and `scalar_s`/`batched_s` lower-better. The wide-kernel and
+accelerator pair ride the same suffixes: `wide_vs_lockstep.*` reads
+`*_reps_per_s`/`wide_reps_per_s_w*`/`speedup_vs_*` higher-better;
+`waste_grid_accel.*` reads `rows_per_s_*`/`speedup` higher-better and
+`cpu_s`/`hlo_s` lower-better.
 
 A missing, empty, or unparsable baseline (first run on a fresh branch,
 or the rolling artifact expired) is not an error: the script prints a

@@ -200,6 +200,10 @@ STATS_PAYLOAD = {
     # through batch chunks, lanes that fell back on a bank underrun.
     "batch_lanes_run": 512,
     "batch_lane_fallbacks": 4,
+    # Additive wide SoA kernel counters (v2 only): lanes swept through
+    # the struct-of-arrays kernel, lanes evicted to the scalar fallback.
+    "wide_lanes_run": 4096,
+    "wide_evictions": 9,
     # Additive plan-cache counters (v2 only): memoized Plan/BestPeriod/
     # Sweep lookups, live entry count, LRU evictions.
     "cache_hits": 6,
@@ -215,7 +219,8 @@ STATS_DEFAULT = {
     "lat_n": 0, "banks_built": 0, "bank_replays": 0, "bank_fallbacks": 0,
     "bank_bytes_resident": 0, "rejected_overloaded": 0, "deadline_exceeded": 0,
     "panics_contained": 0, "client_retries": 0, "batch_lanes_run": 0,
-    "batch_lane_fallbacks": 0, "cache_hits": 0, "cache_misses": 0,
+    "batch_lane_fallbacks": 0, "wide_lanes_run": 0, "wide_evictions": 0,
+    "cache_hits": 0, "cache_misses": 0,
     "cache_evictions": 0, "cache_entries": 0,
 }
 
